@@ -1,0 +1,42 @@
+//! The §5 memory-organization study: the Fig. 10/11 BRAM-vs-LUTRAM test
+//! design sweep, and the optimization ladder it motivates (Table 7):
+//! BRAM → LUTRAM membranes → compressed spike encoding.
+//!
+//! ```sh
+//! cargo run --release --example bram_vs_lutram
+//! ```
+
+use anyhow::Result;
+use spikebench::experiments::{ctx::Ctx, run_by_id};
+use spikebench::fpga::bram_test::{BramTestDesign, MemKind};
+use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::snn::encoding::{Encoder, Encoding};
+
+fn main() -> Result<()> {
+    let mut ctx = Ctx::load()?;
+    println!("{}", run_by_id("fig11", &mut ctx, 0)?);
+    println!("{}", run_by_id("table7", &mut ctx, 0)?);
+
+    // The concrete §5.2 design decision for the MNIST membranes:
+    let d = 256;
+    let bram = BramTestDesign { r: 9, depth: d, width: 8, kind: MemKind::Bram };
+    let lutram = BramTestDesign { r: 9, depth: d, width: 8, kind: MemKind::Lutram };
+    println!(
+        "membrane memories (9 banks × {d} × 8b): BRAM {:.1} mW vs LUTRAM {:.1} mW -> use LUTRAM",
+        bram.power(&PYNQ_Z1) * 1e3,
+        lutram.power(&PYNQ_Z1) * 1e3
+    );
+
+    // And the compressed encoding (Eq. 6/7):
+    let orig = Encoder::new(Encoding::Original, 28, 3);
+    let comp = Encoder::new(Encoding::Compressed, 28, 3);
+    println!(
+        "spike events (W=28, K=3): original {} bits -> compressed {} bits \
+         (queue words per BRAM: {} -> {})",
+        orig.event_bits(),
+        comp.event_bits(),
+        spikebench::fpga::bram::words_per_bram(orig.event_bits()),
+        spikebench::fpga::bram::words_per_bram(comp.event_bits()),
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! End-to-end driver: regenerates **every** table and figure of the
+//! paper's evaluation on the real (synthetic-look-alike) workloads, writes
+//! the reports to `reports/`, and prints a paper-vs-measured summary of
+//! the headline claims.  This is the run recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_paper_repro [-- --samples 1000]
+//! ```
+
+use anyhow::Result;
+use spikebench::cnn_accel::config as cnn_config;
+use spikebench::coordinator::sweep::cnn_metrics;
+use spikebench::experiments::{ctx::Ctx, registry, related_work};
+use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::report;
+use spikebench::util::cli::Args;
+use spikebench::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(0);
+    let n = args.get_usize("samples", 1000);
+    // The SVHN/CIFAR functional sims are ~10× costlier per sample.
+    let n_large = args.get_usize("samples-large", (n / 4).max(50));
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "reports"));
+    let t0 = std::time::Instant::now();
+
+    let mut ctx = Ctx::load()?;
+    println!("artifacts: {} (datasets: {:?})\n", ctx.root.display(), ctx.manifest.datasets.keys());
+
+    for e in registry() {
+        let samples = match e.id {
+            "fig13" | "fig14" | "fig15" | "table8" | "table9" | "table10" => n_large,
+            _ => n,
+        };
+        eprintln!(">>> {} — {} (n={samples})", e.id, e.title);
+        let out = (e.run)(&mut ctx, samples)?;
+        println!("{out}");
+        report::write_report(&out_dir, e.id, &out)?;
+    }
+
+    // Headline summary: paper claim vs measured.
+    let mut t = Table::new(
+        "Paper-vs-measured headline summary",
+        &["Claim", "Paper", "Measured"],
+    );
+    let cnn = |ctx: &mut Ctx, ds: &str, name: &str| {
+        let info = ctx.info(ds).unwrap().clone();
+        cnn_metrics(&cnn_config::by_name(name).unwrap(), info.input_shape, &info.arch, &PYNQ_Z1)
+    };
+
+    let s8 = ctx.sweep("SNN8_COMPR.", &PYNQ_Z1, n)?;
+    let cnn4 = cnn(&mut ctx, "mnist", "CNN4");
+    let mnist_wins = s8.samples.iter().filter(|m| m.energy_j < cnn4.energy_j).count();
+    t.row(vec![
+        "MNIST: SNN energy advantage".into(),
+        "little/none on average".into(),
+        format!("SNN8 better on {}/{} samples", mnist_wins, s8.samples.len()),
+    ]);
+
+    let sv = ctx.sweep("SNN8_SVHN", &PYNQ_Z1, n_large)?;
+    let cnn8 = cnn(&mut ctx, "svhn", "CNN8");
+    let svhn_wins = sv.samples.iter().filter(|m| m.energy_j < cnn8.energy_j).count();
+    t.row(vec![
+        "SVHN: trend reverses".into(),
+        ">1/2 samples better".into(),
+        format!("SNN8 better on {}/{} samples", svhn_wins, sv.samples.len()),
+    ]);
+
+    let cf = ctx.sweep("SNN8_CIFAR", &PYNQ_Z1, n_large)?;
+    let cnn10 = cnn(&mut ctx, "cifar", "CNN10");
+    let cifar_wins = cf.samples.iter().filter(|m| m.energy_j < cnn10.energy_j).count();
+    t.row(vec![
+        "CIFAR-10: trend reverses".into(),
+        "SNN8 higher efficiency".into(),
+        format!("SNN8 better on {}/{} samples", cifar_wins, cf.samples.len()),
+    ]);
+
+    let base = ctx.sweep("SNN8_BRAM", &PYNQ_Z1, n)?;
+    let mean =
+        |s: &spikebench::coordinator::sweep::SnnSweep| {
+            s.samples.iter().map(|m| m.fps_per_watt).sum::<f64>() / s.samples.len() as f64
+        };
+    t.row(vec![
+        "§5 optimizations FPS/W gain".into(),
+        "1.41×".into(),
+        format!("{:.2}×", mean(&s8) / mean(&base)),
+    ]);
+
+    let (lo, hi) = s8.min_max(|m| m.fps_per_watt);
+    let paper_band = related_work::paper_measured_ranges()
+        .into_iter()
+        .find(|(n, ds, _)| *n == "SNN8_COMPR." && *ds == "mnist")
+        .unwrap()
+        .2;
+    t.row(vec![
+        "MNIST FPS/W band (SNN8_COMPR.)".into(),
+        format!("[{:.0}; {:.0}]", paper_band.0, paper_band.1),
+        format!("[{lo:.0}; {hi:.0}]"),
+    ]);
+    println!("{}", t.render());
+    report::write_report(&out_dir, "headline_summary", &t.render())?;
+
+    println!(
+        "e2e reproduction complete in {:.1?}; reports in {}/",
+        t0.elapsed(),
+        out_dir.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! MNIST deep-dive: the paper's §4 story on one screen — data-dependent
+//! SNN latency/energy distributions vs the constant FINN baseline, per
+//! design pair, plus the per-class spike analysis (Figs. 7–9).
+//!
+//! ```sh
+//! cargo run --release --example mnist_latency_energy [-- --samples 500]
+//! ```
+
+use anyhow::Result;
+use spikebench::experiments::{ctx::Ctx, run_by_id};
+use spikebench::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(0);
+    let n = args.get_usize("samples", 500);
+    let mut ctx = Ctx::load()?;
+    for id in ["fig7", "fig8", "fig9", "table4"] {
+        println!("{}", run_by_id(id, &mut ctx, n)?);
+    }
+    println!("(the same data regenerates via `repro figure --id 7` etc.)");
+    Ok(())
+}

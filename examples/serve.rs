@@ -1,0 +1,79 @@
+//! Serving demo: the deployment-shaped view.  A batching router serves
+//! classification requests through the AOT-compiled PJRT artifact (Python
+//! never runs), attaching the simulated FPGA latency/energy of each
+//! request.  Reports service throughput, accuracy and batch statistics.
+//!
+//! ```sh
+//! cargo run --release --example serve [-- --requests 256 --batch 16]
+//! ```
+
+use anyhow::Result;
+use spikebench::coordinator::serve::{Backend, PjrtBackend, ServeConfig, Server};
+use spikebench::experiments::ctx::Ctx;
+use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::nn::loader::{load_network, WeightKind};
+use spikebench::runtime::Runtime;
+use spikebench::util::cli::Args;
+use spikebench::util::stats::Summary;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(0);
+    let n_req = args.get_usize("requests", 256);
+    let batch = args.get_usize("batch", 16);
+    let ds = args.get_or("dataset", "mnist").to_string();
+
+    let mut ctx = Ctx::load()?;
+    let info = ctx.info(&ds)?.clone();
+    let eval = ctx.eval(&ds)?.clone();
+    let snn_net = load_network(&ctx.manifest, &ds, WeightKind::Snn)?;
+    let design = spikebench::snn::config::all_designs()
+        .into_iter()
+        .find(|d| d.dataset == ds && d.p() == 8)
+        .expect("P=8 design");
+    println!("serving {ds} via PJRT, hardware-cost design: {}", design.name);
+
+    let mut rt = Runtime::cpu()?;
+    let hlo = ctx.manifest.file(&ds, "cnn_hlo")?;
+    rt.load(&hlo)?; // compile before accepting traffic
+    let backend = Box::new(PjrtBackend { runtime: rt, hlo });
+
+    let server = Server::start(
+        backend,
+        ServeConfig {
+            backend_kind: Backend::Snn,
+            max_batch: batch,
+            batch_timeout: std::time::Duration::from_millis(2),
+            snn_design: design,
+            snn_net,
+            t_steps: info.t_steps,
+            v_th: info.v_th,
+            device: PYNQ_Z1,
+        },
+    );
+
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| (i, server.classify_async(eval.images[i % eval.len()].clone()).unwrap()))
+        .collect();
+    let mut correct = 0;
+    let mut svc = Summary::new();
+    let mut accel_lat = Summary::new();
+    let mut energy = 0.0;
+    for (i, rx) in rxs {
+        let r = rx.recv()?;
+        correct += (r.predicted == eval.labels[i % eval.len()]) as usize;
+        svc.add(r.service_time.as_secs_f64() * 1e3);
+        accel_lat.add(r.accel_latency_s * 1e3);
+        energy += r.accel_energy_j;
+    }
+    let wall = t0.elapsed();
+    let stats = server.shutdown();
+
+    println!("\n== serving report ==");
+    println!("requests        : {n_req} ({} batches, max batch {})", stats.batches, stats.max_batch_seen);
+    println!("throughput      : {:.0} req/s (wall {:.2?})", n_req as f64 / wall.as_secs_f64(), wall);
+    println!("accuracy        : {:.1}%", 100.0 * correct as f64 / n_req as f64);
+    println!("service time    : mean {:.2} ms  max {:.2} ms", svc.mean(), svc.max);
+    println!("simulated FPGA  : mean latency {:.3} ms, total energy {:.2} mJ", accel_lat.mean(), energy * 1e3);
+    Ok(())
+}

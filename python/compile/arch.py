@@ -1,0 +1,103 @@
+"""Architecture-string parser for the Table 6 model notation.
+
+`nCk` is a convolutional layer with n kernels of size k x k (same padding,
+ReLU), `Pn` a max-pooling layer with window/stride n (floor division of the
+spatial dims), and a bare `n` a fully connected layer with n neurons.  The
+final fully connected layer produces logits (no ReLU).
+
+The same parser exists on the Rust side (rust/src/nn/arch.rs); the pytest
+suite and a Rust unit test both check the Table 6 parameter counts
+(MNIST 20,568 / CIFAR-10 446,122) to keep the two in sync.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    out_channels: int
+    kernel: int
+
+
+@dataclass(frozen=True)
+class PoolSpec:
+    window: int
+
+
+@dataclass(frozen=True)
+class DenseSpec:
+    units: int
+
+
+# Table 6 of the paper.
+ARCHS = {
+    "mnist": "32C3-32C3-P3-10C3-10",
+    "svhn": "1C3-32C3-32C3-P3-64C3-64C3-P3-128C3-128C3-10",
+    "cifar": "32C3-32C3-P3-64C3-64C3-P3-128C3-128C3-128C3-10",
+}
+
+
+def parse_arch(s: str):
+    """Parse an architecture string into a list of layer specs."""
+    layers = []
+    for tok in s.split("-"):
+        tok = tok.strip()
+        if not tok:
+            raise ValueError(f"empty token in arch string {s!r}")
+        if "C" in tok:
+            n, k = tok.split("C")
+            layers.append(ConvSpec(int(n), int(k)))
+        elif tok.startswith("P"):
+            layers.append(PoolSpec(int(tok[1:])))
+        else:
+            layers.append(DenseSpec(int(tok)))
+    return layers
+
+
+def layer_shapes(arch, input_shape):
+    """Propagate (C, H, W) through the arch; dense layers flatten.
+
+    Returns a list of output shapes, one per layer. Dense outputs are (n,).
+    """
+    shapes = []
+    c, h, w = input_shape
+    flat = None
+    for spec in arch:
+        if isinstance(spec, ConvSpec):
+            if flat is not None:
+                raise ValueError("conv after dense not supported")
+            c = spec.out_channels
+            shapes.append((c, h, w))
+        elif isinstance(spec, PoolSpec):
+            h, w = h // spec.window, w // spec.window
+            shapes.append((c, h, w))
+        elif isinstance(spec, DenseSpec):
+            if flat is None:
+                flat = c * h * w
+            flat_out = spec.units
+            shapes.append((flat_out,))
+            flat = flat_out
+        else:
+            raise TypeError(spec)
+    return shapes
+
+
+def param_count(arch, input_shape) -> int:
+    """Number of weight + bias parameters, matching Keras's count."""
+    total = 0
+    c, h, w = input_shape
+    flat = None
+    for spec in arch:
+        if isinstance(spec, ConvSpec):
+            total += spec.out_channels * (c * spec.kernel * spec.kernel + 1)
+            c = spec.out_channels
+        elif isinstance(spec, PoolSpec):
+            h, w = h // spec.window, w // spec.window
+        elif isinstance(spec, DenseSpec):
+            if flat is None:
+                flat = c * h * w
+            total += spec.units * (flat + 1)
+            flat = spec.units
+    return total

@@ -1,0 +1,61 @@
+"""CNN -> SNN conversion (the snntoolbox-equivalent path).
+
+The paper converts its trained Keras CNNs with snntoolbox [17] to m-TTFS
+spiking nets.  We implement the same algorithm family: Rueckauer-style
+*data-based activation normalization*.  For each weighted layer l, the
+p-th percentile of its post-ReLU activations over a calibration batch,
+lambda_l, rescales the weights so that a unit firing threshold (v_th = 1)
+is never exceeded by more than the chosen percentile of inputs:
+
+    W_l <- W_l * lambda_{l-1} / lambda_l          b_l <- b_l / lambda_l
+
+Max-pool layers pass lambda through unchanged.  After conversion every IF
+neuron uses threshold 1.0, matching the hardware's single global threshold
+register, and the integer thresholds exported for the fixed-point Rust
+simulator are exact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.arch import ConvSpec, DenseSpec, PoolSpec, parse_arch
+from compile.model import cnn_activations
+
+
+def activation_percentiles(params, arch_s: str, xb: np.ndarray, percentile: float = 99.9):
+    """Per-layer activation percentile lambda_l over calibration batch xb."""
+    acts = jax.vmap(lambda x: tuple(cnn_activations(params, arch_s, x)))(jnp.asarray(xb))
+    lambdas = []
+    for a in acts:
+        v = float(np.percentile(np.asarray(a), percentile))
+        lambdas.append(max(v, 1e-6))
+    return lambdas
+
+
+def convert_to_snn(params, arch_s: str, xb: np.ndarray, percentile: float = 99.9):
+    """Returns (snn_params, lambdas). snn_params use v_th = 1.0 everywhere.
+
+    Only weighted layers are rescaled; the layer list shape is preserved.
+    The input encoding layer has lambda_in = 1.0 (inputs are already in
+    [0, 1] -- the paper streams 8-bit pixels).
+    """
+    arch = parse_arch(arch_s)
+    lambdas = activation_percentiles(params, arch_s, xb, percentile)
+    out = []
+    lam_prev = 1.0
+    for i, spec in enumerate(arch):
+        p = params[i]
+        if isinstance(spec, (ConvSpec, DenseSpec)):
+            lam = lambdas[i]
+            q = dict(p)
+            q["w"] = np.asarray(p["w"]) * np.float32(lam_prev / lam)
+            q["b"] = np.asarray(p["b"]) / np.float32(lam)
+            out.append(q)
+            lam_prev = lam
+        else:
+            out.append(dict(p))
+            # pooling: lambda passes through (max of rescaled values)
+    return out, lambdas

@@ -1,0 +1,225 @@
+"""Deterministic synthetic stand-ins for MNIST / SVHN / CIFAR-10.
+
+The paper's hardware results depend on *input-driven spike sparsity* (e.g.
+digit '1' generates the fewest spikes, Fig. 8), not on the photographic
+content of the datasets.  Since no dataset downloads are available in this
+offline environment, we procedurally render look-alike datasets that
+preserve the properties the experiments measure:
+
+* MNIST-like  : 1x28x28 grayscale seven-segment-style digits with stroke
+                jitter -- class-dependent ink mass ('1' is the sparsest).
+* SVHN-like   : 3x32x32 color digits over textured backgrounds (harder,
+                background activity everywhere -> denser spike maps).
+* CIFAR-like  : 3x32x32 parametric texture/shape classes (hardest).
+
+All generators are pure functions of (seed, index, class) so Python and
+Rust (rust/src/data/) can regenerate identical evaluation sets; in practice
+the eval sets are exported to artifacts/ as binary blobs and reloaded.
+Layout is NCHW float32 in [0, 1].
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Seven-segment geometry in a unit box (x right, y down).
+# Each segment is a line (x0, y0, x1, y1).
+_SEGS = {
+    "a": (0.15, 0.05, 0.85, 0.05),  # top
+    "b": (0.85, 0.05, 0.85, 0.50),  # top right
+    "c": (0.85, 0.50, 0.85, 0.95),  # bottom right
+    "d": (0.15, 0.95, 0.85, 0.95),  # bottom
+    "e": (0.15, 0.50, 0.15, 0.95),  # bottom left
+    "f": (0.15, 0.05, 0.15, 0.50),  # top left
+    "g": (0.15, 0.50, 0.85, 0.50),  # middle
+}
+
+_DIGIT_SEGS = {
+    0: "abcdef",
+    1: "bc",
+    2: "abged",
+    3: "abgcd",
+    4: "fgbc",
+    5: "afgcd",
+    6: "afgedc",
+    7: "abc",
+    8: "abcdefg",
+    9: "abcdfg",
+}
+
+
+def _seg_distance(xx: np.ndarray, yy: np.ndarray, seg) -> np.ndarray:
+    """Distance of each pixel (xx, yy) to segment seg."""
+    x0, y0, x1, y1 = seg
+    dx, dy = x1 - x0, y1 - y0
+    len2 = dx * dx + dy * dy
+    if len2 == 0.0:
+        return np.hypot(xx - x0, yy - y0)
+    t = ((xx - x0) * dx + (yy - y0) * dy) / len2
+    t = np.clip(t, 0.0, 1.0)
+    px, py = x0 + t * dx, y0 + t * dy
+    return np.hypot(xx - px, yy - py)
+
+
+def render_digit(
+    digit: int,
+    size: int,
+    rng: np.random.Generator,
+    thickness: float = 0.07,
+) -> np.ndarray:
+    """Render one digit into a size x size float map in [0, 1].
+
+    Jitters position, scale, rotation, and stroke thickness so that the
+    classifier has something non-trivial to learn, while keeping the
+    class-conditional ink mass stable (digit '1' stays the sparsest class).
+    """
+    # Jittered affine placement of the unit box.
+    cx = 0.5 + rng.uniform(-0.08, 0.08)
+    cy = 0.5 + rng.uniform(-0.08, 0.08)
+    scale = rng.uniform(0.55, 0.75)
+    theta = rng.uniform(-0.18, 0.18)
+    thick = thickness * rng.uniform(0.8, 1.3)
+
+    ys, xs = np.mgrid[0:size, 0:size]
+    xs = (xs + 0.5) / size
+    ys = (ys + 0.5) / size
+    # Inverse transform pixel coords into glyph space.
+    ct, st = np.cos(-theta), np.sin(-theta)
+    gx = ((xs - cx) * ct - (ys - cy) * st) / scale + 0.5
+    gy = ((xs - cx) * st + (ys - cy) * ct) / scale + 0.5
+
+    ink = np.zeros((size, size), dtype=np.float32)
+    for s in _DIGIT_SEGS[digit]:
+        d = _seg_distance(gx, gy, _SEGS[s])
+        # Soft stroke profile.
+        ink = np.maximum(ink, np.clip(1.0 - d / thick, 0.0, 1.0))
+    # Intensity jitter + sensor noise.
+    ink = ink * rng.uniform(0.75, 1.0)
+    ink = ink + rng.normal(0.0, 0.02, ink.shape)
+    return np.clip(ink, 0.0, 1.0).astype(np.float32)
+
+
+def _smooth_noise(shape_hw, rng, octaves=3):
+    """Cheap multi-octave value noise in [0, 1]."""
+    h, w = shape_hw
+    out = np.zeros((h, w), dtype=np.float32)
+    amp, total = 1.0, 0.0
+    for o in range(octaves):
+        step = max(1, 2 ** (octaves - o + 1))
+        gh, gw = h // step + 2, w // step + 2
+        grid = rng.random((gh, gw)).astype(np.float32)
+        ys = np.linspace(0, gh - 2, h)
+        xs = np.linspace(0, gw - 2, w)
+        yi, xi = ys.astype(int), xs.astype(int)
+        yf, xf = (ys - yi)[:, None], (xs - xi)[None, :]
+        a = grid[yi][:, xi]
+        b = grid[yi][:, xi + 1]
+        c = grid[yi + 1][:, xi]
+        d = grid[yi + 1][:, xi + 1]
+        out += amp * ((a * (1 - xf) + b * xf) * (1 - yf) + (c * (1 - xf) + d * xf) * yf)
+        total += amp
+        amp *= 0.5
+    return out / total
+
+
+def mnist_like(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """n samples of 1x28x28 digits; returns (x [n,1,28,28], y [n])."""
+    rng = np.random.default_rng(seed)
+    y = (np.arange(n) % 10).astype(np.int32)
+    rng.shuffle(y)
+    x = np.zeros((n, 1, 28, 28), dtype=np.float32)
+    for i in range(n):
+        x[i, 0] = render_digit(int(y[i]), 28, rng)
+    return x, y
+
+
+def svhn_like(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """n samples of 3x32x32 color digits on textured backgrounds."""
+    rng = np.random.default_rng(seed + 1_000_003)
+    y = (np.arange(n) % 10).astype(np.int32)
+    rng.shuffle(y)
+    x = np.zeros((n, 3, 32, 32), dtype=np.float32)
+    for i in range(n):
+        bg_color = rng.uniform(0.1, 0.6, size=3).astype(np.float32)
+        fg_color = rng.uniform(0.4, 1.0, size=3).astype(np.float32)
+        # Keep digit visible against the background.
+        while np.abs(fg_color - bg_color).sum() < 0.8:
+            fg_color = rng.uniform(0.2, 1.0, size=3).astype(np.float32)
+        tex = _smooth_noise((32, 32), rng)
+        ink = render_digit(int(y[i]), 32, rng, thickness=0.09)
+        for c in range(3):
+            bg = bg_color[c] * (0.6 + 0.4 * tex)
+            x[i, c] = bg * (1.0 - ink) + fg_color[c] * ink
+        x[i] += rng.normal(0.0, 0.03, x[i].shape)
+    return np.clip(x, 0.0, 1.0).astype(np.float32), y
+
+
+# CIFAR-like classes: (pattern kind, palette id). Kinds cycle through five
+# parametric textures; palettes select dominant hue ordering.
+_CIFAR_KINDS = ["disc", "square", "hstripes", "dstripes", "cross"]
+
+
+def _cifar_pattern(kind: str, size: int, rng) -> np.ndarray:
+    ys, xs = np.mgrid[0:size, 0:size]
+    xs = (xs + 0.5) / size
+    ys = (ys + 0.5) / size
+    cx, cy = rng.uniform(0.35, 0.65, size=2)
+    r = rng.uniform(0.18, 0.3)
+    if kind == "disc":
+        d = np.hypot(xs - cx, ys - cy)
+        return np.clip(1.0 - (d / r) ** 2, 0.0, 1.0)
+    if kind == "square":
+        return ((np.abs(xs - cx) < r) & (np.abs(ys - cy) < r)).astype(np.float32)
+    if kind == "hstripes":
+        f = rng.uniform(3.0, 5.0)
+        return (0.5 + 0.5 * np.sin(2 * np.pi * f * ys)).astype(np.float32)
+    if kind == "dstripes":
+        f = rng.uniform(3.0, 5.0)
+        return (0.5 + 0.5 * np.sin(2 * np.pi * f * (xs + ys))).astype(np.float32)
+    if kind == "cross":
+        w = r * 0.5
+        return ((np.abs(xs - cx) < w) | (np.abs(ys - cy) < w)).astype(np.float32)
+    raise ValueError(kind)
+
+
+def cifar_like(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """n samples of 3x32x32 parametric texture classes."""
+    rng = np.random.default_rng(seed + 2_000_003)
+    y = (np.arange(n) % 10).astype(np.int32)
+    rng.shuffle(y)
+    x = np.zeros((n, 3, 32, 32), dtype=np.float32)
+    for i in range(n):
+        k = int(y[i])
+        kind = _CIFAR_KINDS[k % 5]
+        hue_rot = k // 5  # palette id: 0 or 1
+        pat = _cifar_pattern(kind, 32, rng)
+        base = _smooth_noise((32, 32), rng)
+        col_a = rng.uniform(0.1, 0.5, size=3)
+        col_b = rng.uniform(0.5, 1.0, size=3)
+        if hue_rot:
+            col_b = col_b[::-1].copy()
+        for c in range(3):
+            x[i, c] = col_a[c] * (0.5 + 0.5 * base) * (1 - pat) + col_b[c] * pat
+        x[i] += rng.normal(0.0, 0.04, x[i].shape)
+    return np.clip(x, 0.0, 1.0).astype(np.float32), y
+
+
+GENERATORS = {
+    "mnist": mnist_like,
+    "svhn": svhn_like,
+    "cifar": cifar_like,
+}
+
+INPUT_SHAPES = {
+    "mnist": (1, 28, 28),
+    "svhn": (3, 32, 32),
+    "cifar": (3, 32, 32),
+}
+
+
+def make_dataset(name: str, n_train: int, n_test: int, seed: int):
+    """Returns (x_train, y_train, x_test, y_test) for dataset `name`."""
+    gen = GENERATORS[name]
+    x_tr, y_tr = gen(n_train, seed)
+    x_te, y_te = gen(n_test, seed + 7_777)
+    return x_tr, y_tr, x_te, y_te

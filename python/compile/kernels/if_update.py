@@ -1,0 +1,72 @@
+"""Pallas kernel: fused integrate -> threshold -> fire step (m-TTFS).
+
+The FPGA architecture performs thresholding as a separate double-buffered
+pass over the membrane memories (Fig. 2's Thresholding Unit).  On a vector
+machine the natural mapping is a single fused elementwise pass: integrate
+the increment, compare against the threshold, emit the spike bit, and
+update the refractory (spiked-once) mask -- one trip through memory instead
+of two, which is the §8 L2 fusion target.
+
+Semantics follow the paper's §4 variant of m-TTFS exactly: neurons fire at
+most once and are *not* reset after crossing the threshold.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flat elementwise tile; must divide the padded length.
+TILE = 1024
+
+
+def _if_update_kernel(v_ref, inc_ref, spiked_ref, vth_ref, v_out_ref, spike_ref, spiked_out_ref):
+    v_new = v_ref[...] + inc_ref[...]
+    vth = vth_ref[0]
+    fire = jnp.logical_and(v_new > vth, spiked_ref[...] < 0.5)
+    spike = fire.astype(v_new.dtype)
+    v_out_ref[...] = v_new
+    spike_ref[...] = spike
+    spiked_out_ref[...] = jnp.maximum(spiked_ref[...], spike)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def if_update(v, inc, spiked, v_th, interpret: bool = True):
+    """One m-TTFS IF step over flattened neuron state.
+
+    v, inc, spiked: (N,) float32; v_th: scalar threshold.
+    Returns (v', spike, spiked') matching kernels.ref.if_update_ref.
+    """
+    n = v.shape[0]
+    pad = (-n) % TILE
+    vp = jnp.pad(v.astype(jnp.float32), (0, pad))
+    ip = jnp.pad(inc.astype(jnp.float32), (0, pad))
+    sp = jnp.pad(spiked.astype(jnp.float32), (0, pad), constant_values=1.0)
+    vth = jnp.asarray([v_th], dtype=jnp.float32)
+    grid = ((n + pad) // TILE,)
+
+    v_new, spike, spiked_new = pl.pallas_call(
+        _if_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n + pad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vp, ip, sp, vth)
+    return v_new[:n], spike[:n], spiked_new[:n]

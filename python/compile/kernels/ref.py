@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must agree with its oracle here to float tolerance; pytest (and the
+hypothesis sweeps) enforce it at build time.  The oracles are also what the
+CNN baseline path (L2) uses directly -- the paper's contribution is the
+sparse *SNN* datapath, so only that path is hand-kerneled.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_same(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Same-padding 2D convolution, NCHW / OIHW, stride 1.
+
+    x: (C_in, H, W), w: (C_out, C_in, K, K), b: (C_out,) or None.
+    Returns (C_out, H, W).
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    if b is not None:
+        out = out + b[:, None, None]
+    return out
+
+
+def spike_conv_ref(spikes: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Membrane increment for a binary spike map: conv2d(spikes, w).
+
+    Mathematically this is Eq. (1) of the paper: for every output neuron,
+    the sum of the weights of the synapses whose presynaptic neuron spiked
+    (the multiplier-free formulation -- spikes only select weights).
+    """
+    return conv2d_same(spikes, w)
+
+
+def if_update_ref(v: jnp.ndarray, inc: jnp.ndarray, spiked: jnp.ndarray, v_th: float):
+    """One integrate-and-fire step (m-TTFS, spike-once, no reset).
+
+    v:      (N,) membrane potentials at t-1
+    inc:    (N,) weighted input for this algorithmic time step
+    spiked: (N,) 1.0 where the neuron has already fired (refractory forever)
+    v_th:   firing threshold
+
+    Returns (v', spike, spiked'):
+      v'     = v + inc                      (no reset after firing, per §4)
+      spike  = (v' > v_th) & ~spiked        (neurons fire exactly once)
+      spiked'= spiked | spike
+    """
+    v_new = v + inc
+    spike = jnp.logical_and(v_new > v_th, spiked < 0.5).astype(v.dtype)
+    spiked_new = jnp.maximum(spiked, spike)
+    return v_new, spike, spiked_new
+
+
+def maxpool_ref(x: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Max pooling with window == stride (floor), NCHW single sample."""
+    c, h, w = x.shape
+    ho, wo = h // window, w // window
+    x = x[:, : ho * window, : wo * window]
+    x = x.reshape(c, ho, window, wo, window)
+    return x.max(axis=(2, 4))
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Fully connected layer: w @ x (+ b).  w: (out, in), x: (in,)."""
+    out = w @ x
+    if b is not None:
+        out = out + b
+    return out

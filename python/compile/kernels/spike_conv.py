@@ -1,0 +1,98 @@
+"""Pallas kernel: event-driven membrane-potential accumulation.
+
+This is the paper's compute hot-spot (the Sommer-architecture core loop):
+for every spike in the input feature map, the K x K weight patch is added
+into the membrane potentials of the affected neighbourhood (Eq. (1)).
+
+Hardware adaptation (FPGA -> TPU-style, see DESIGN.md §2): the FPGA design
+scatters per-event through 9-way interlaced BRAMs; a vector unit wants the
+dense masked formulation instead.  Spikes are a {0,1} map, so the membrane
+increment is a convolution whose LHS is binary -- a *sum of selected
+weights*, never a real multiply.  The kernel:
+
+* tiles over output channels via the Pallas grid (BlockSpec on the weight
+  operand), keeping one output-channel tile of membrane state resident in
+  VMEM -- the analogue of the paper's "whole neighbourhood in one cycle"
+  memory-interlacing contract;
+* unrolls the K x K reduction in-register over shifted views of the padded
+  spike map -- the analogue of the 9 parallel kernel-coordinate banks;
+* is lowered with interpret=True (CPU PJRT cannot execute Mosaic
+  custom-calls); TPU-side VMEM/MXU estimates live in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output channels processed per grid step.  8 keeps the per-step VMEM
+# footprint (spikes + weight slice + membrane tile) well under budget for
+# every Table 6 layer while giving the vector unit full rows to chew on.
+CO_TILE = 8
+
+
+def _spike_conv_kernel(spikes_ref, w_ref, out_ref, *, k: int):
+    """One grid step: accumulate a CO_TILE x H x W membrane tile.
+
+    spikes_ref: (C_in, H + k - 1, W + k - 1)  zero-padded binary spike map
+    w_ref:      (CO_TILE, C_in, k, k)         weight tile for these channels
+    out_ref:    (CO_TILE, H, W)               membrane increments
+    """
+    _, hp, wp = spikes_ref.shape
+    h, w = hp - (k - 1), wp - (k - 1)
+    spikes = spikes_ref[...]
+    wts = w_ref[...]
+    acc = jnp.zeros(out_ref.shape, dtype=out_ref.dtype)
+    # K*K unrolled shifted-window accumulation: each (dy, dx) is one
+    # "kernel coordinate" bank of the FPGA interlacing scheme.
+    for dy in range(k):
+        for dx in range(k):
+            window = spikes[:, dy : dy + h, dx : dx + w]  # (C_in, H, W)
+            # (CO_TILE, C_in) . (C_in, H*W) contraction; with a binary
+            # spike map this is a masked weight sum (Eq. (1)).
+            wk = wts[:, :, dy, dx]
+            acc = acc + jax.lax.dot_general(
+                wk,
+                window.reshape(window.shape[0], -1),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=out_ref.dtype,
+            ).reshape(acc.shape)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spike_conv(spikes: jnp.ndarray, w: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Membrane increment conv2d(spikes, w), same padding, NCHW/OIHW.
+
+    spikes: (C_in, H, W) binary {0,1} map (float dtype)
+    w:      (C_out, C_in, K, K); C_out is padded up to a CO_TILE multiple
+    Returns (C_out, H, W) float32.
+    """
+    c_in, h, w_sp = spikes.shape
+    c_out, c_in_w, k, k2 = w.shape
+    assert c_in == c_in_w and k == k2, (spikes.shape, w.shape)
+
+    pad = k // 2
+    padded = jnp.pad(spikes, ((0, 0), (pad, k - 1 - pad), (pad, k - 1 - pad)))
+
+    co_pad = (-c_out) % CO_TILE
+    w_full = jnp.pad(w, ((0, co_pad), (0, 0), (0, 0), (0, 0)))
+    grid = (w_full.shape[0] // CO_TILE,)
+
+    out = pl.pallas_call(
+        functools.partial(_spike_conv_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            # Full padded spike map resident every step.
+            pl.BlockSpec(padded.shape, lambda i: (0, 0, 0)),
+            # One CO_TILE slice of the weights per step.
+            pl.BlockSpec((CO_TILE, c_in, k, k), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((CO_TILE, h, w_sp), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((w_full.shape[0], h, w_sp), jnp.float32),
+        interpret=interpret,
+    )(padded.astype(jnp.float32), w_full.astype(jnp.float32))
+    return out[:c_out]

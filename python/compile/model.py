@@ -1,0 +1,258 @@
+"""L2: the paper's compute graphs in JAX.
+
+Two graphs per dataset, both defined over the Table 6 architecture strings:
+
+* `cnn_forward`  -- the quantized CNN (the FINN baseline's functional
+  semantics): conv(same) + ReLU, max-pool, dense logits.
+* `snn_forward`  -- the converted spiking net (the Sommer accelerator's
+  functional semantics): T algorithmic time steps of m-TTFS IF dynamics
+  (spike once, no reset), constant-current input encoding, spike-OR
+  max-pooling, non-spiking accumulator output layer.
+
+The SNN step calls the L1 Pallas kernels (`kernels.spike_conv`,
+`kernels.if_update`); `use_pallas=False` switches to the pure-jnp oracles
+(identical numerics, asserted by pytest) which is faster for the large
+Python-side accuracy sweeps.  The exported HLO artifacts always use the
+Pallas path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.arch import ConvSpec, DenseSpec, PoolSpec, parse_arch
+from compile.kernels import ref
+from compile.kernels.if_update import if_update
+from compile.kernels.spike_conv import spike_conv
+
+
+def init_params(arch_s: str, input_shape, seed: int) -> list[dict]:
+    """He-initialized parameters for an architecture string.
+
+    Returns a list aligned with the parsed layer list; pool layers get {}.
+    Conv weights are OIHW, dense weights (out, in) over the flattened
+    NCHW activation.
+    """
+    rng = np.random.default_rng(seed)
+    arch = parse_arch(arch_s)
+    params: list[dict] = []
+    c, h, w = input_shape
+    flat = None
+    for spec in arch:
+        if isinstance(spec, ConvSpec):
+            fan_in = c * spec.kernel * spec.kernel
+            std = float(np.sqrt(2.0 / fan_in))
+            params.append(
+                {
+                    "w": rng.normal(0.0, std, (spec.out_channels, c, spec.kernel, spec.kernel)).astype(np.float32),
+                    "b": np.zeros((spec.out_channels,), dtype=np.float32),
+                }
+            )
+            c = spec.out_channels
+        elif isinstance(spec, PoolSpec):
+            params.append({})
+            h, w = h // spec.window, w // spec.window
+        elif isinstance(spec, DenseSpec):
+            if flat is None:
+                flat = c * h * w
+            std = float(np.sqrt(2.0 / flat))
+            params.append(
+                {
+                    "w": rng.normal(0.0, std, (spec.units, flat)).astype(np.float32),
+                    "b": np.zeros((spec.units,), dtype=np.float32),
+                }
+            )
+            flat = spec.units
+    return params
+
+
+def cnn_forward(params, arch_s: str, x: jnp.ndarray) -> jnp.ndarray:
+    """CNN logits for a single NCHW sample x of shape (C, H, W)."""
+    arch = parse_arch(arch_s)
+    act = x
+    n_layers = len(arch)
+    for i, spec in enumerate(arch):
+        p = params[i]
+        if isinstance(spec, ConvSpec):
+            act = ref.conv2d_same(act, p["w"], p["b"])
+            act = jax.nn.relu(act)
+        elif isinstance(spec, PoolSpec):
+            act = ref.maxpool_ref(act, spec.window)
+        elif isinstance(spec, DenseSpec):
+            act = act.reshape(-1)
+            act = ref.dense_ref(act, p["w"], p["b"])
+            if i != n_layers - 1:
+                act = jax.nn.relu(act)
+    return act
+
+
+def cnn_forward_batch(params, arch_s: str, xb: jnp.ndarray) -> jnp.ndarray:
+    return jax.vmap(lambda x: cnn_forward(params, arch_s, x))(xb)
+
+
+def cnn_activations(params, arch_s: str, x: jnp.ndarray) -> list[jnp.ndarray]:
+    """Per-layer post-nonlinearity activations (for threshold balancing)."""
+    arch = parse_arch(arch_s)
+    act = x
+    outs = []
+    n_layers = len(arch)
+    for i, spec in enumerate(arch):
+        p = params[i]
+        if isinstance(spec, ConvSpec):
+            act = jax.nn.relu(ref.conv2d_same(act, p["w"], p["b"]))
+        elif isinstance(spec, PoolSpec):
+            act = ref.maxpool_ref(act, spec.window)
+        elif isinstance(spec, DenseSpec):
+            act = act.reshape(-1)
+            act = ref.dense_ref(act, p["w"], p["b"])
+            if i != n_layers - 1:
+                act = jax.nn.relu(act)
+        outs.append(act)
+    return outs
+
+
+def _snn_layer_state(arch_s: str, input_shape):
+    """Shapes of the per-layer SNN state (membrane / spiked masks)."""
+    arch = parse_arch(arch_s)
+    shapes = []
+    c, h, w = input_shape
+    flat = None
+    for spec in arch:
+        if isinstance(spec, ConvSpec):
+            shapes.append(("conv", (spec.out_channels, h, w)))
+            c = spec.out_channels
+        elif isinstance(spec, PoolSpec):
+            h, w = h // spec.window, w // spec.window
+            shapes.append(("pool", (c, h, w)))
+        elif isinstance(spec, DenseSpec):
+            if flat is None:
+                flat = c * h * w
+            shapes.append(("dense", (spec.units,)))
+            flat = spec.units
+    return shapes
+
+
+def snn_forward(
+    params,
+    arch_s: str,
+    x: jnp.ndarray,
+    t_steps: int,
+    v_th: float = 1.0,
+    use_pallas: bool = True,
+    record_maps: bool = False,
+):
+    """T-step m-TTFS simulation of the converted SNN.
+
+    x: (C, H, W) input in [0, 1] (constant-current encoding: the pixel
+    value is injected every algorithmic time step; bright pixels cross the
+    input threshold early, dim pixels never -- the origin of the paper's
+    data-dependent latency, Figs. 7/8).
+
+    m-TTFS slope semantics (paper §2.1.2 Fig. 1(b) + §4): a neuron emits at
+    most ONE spike event, but the receiving neuron adds the synapse weight
+    to its membrane-potential *slope* mu_m; the slope is re-integrated into
+    the membrane every subsequent algorithmic time step ("adding to the
+    membrane potentials slopes computed from the spikes ... then doing the
+    same again for three steps").  An early spike therefore contributes
+    w * (T - t_spike + 1) in total -- the earlier the spike, the more
+    important (TTFS decoding) -- while the event traffic stays one event
+    per neuron (the sparsity the AEQ architecture exploits).
+
+    Returns a dict with:
+      logits      : output-layer membrane potential after T steps
+      spike_counts: (n_layers + 1,) total spikes per layer over all steps
+                    (index 0 = input encoding layer)
+      maps        : if record_maps, list over t of [input map + per-layer
+                    spike maps] (python lists of arrays; trace export only)
+    """
+    arch = parse_arch(arch_s)
+    state_shapes = _snn_layer_state(arch_s, x.shape)
+    n_layers = len(arch)
+
+    def conv_inc(spikes, w, b):
+        if use_pallas:
+            out = spike_conv(spikes, w)
+        else:
+            out = ref.spike_conv_ref(spikes, w)
+        return out + b[:, None, None]
+
+    def if_step(v, inc, spiked):
+        if use_pallas:
+            shape = v.shape
+            v2, s, sk = if_update(v.reshape(-1), inc.reshape(-1), spiked.reshape(-1), v_th)
+            return v2.reshape(shape), s.reshape(shape), sk.reshape(shape)
+        return ref.if_update_ref(v, inc, spiked, v_th)
+
+    # State per weighted layer: membrane V, slope S (accumulated synaptic
+    # weight of already-arrived spike events), spiked-once mask K.
+    v_in = jnp.zeros_like(x)
+    k_in = jnp.zeros_like(x)
+    vs = [jnp.zeros(s, jnp.float32) for _, s in state_shapes]
+    ss = [jnp.zeros(s, jnp.float32) for _, s in state_shapes]
+    ks = [jnp.zeros(s, jnp.float32) for _, s in state_shapes]
+    counts = [jnp.zeros((), jnp.float32) for _ in range(n_layers + 1)]
+    maps = []
+
+    for _t in range(t_steps):
+        step_maps = []
+        # Input encoding: IF neurons driven by the constant pixel current
+        # (slope == pixel value, the analog-input special case of Fig 1b).
+        v_in, s_in, k_in = if_step(v_in, x, k_in)
+        counts[0] = counts[0] + s_in.sum()
+        step_maps.append(s_in)
+        spikes = s_in
+        flat_spikes = None
+        for i, spec in enumerate(arch):
+            p = params[i]
+            kind, shape = state_shapes[i]
+            if isinstance(spec, ConvSpec):
+                # New events add their weights into the slope; the full
+                # slope (+ bias current) integrates into the membrane.
+                ss[i] = ss[i] + conv_inc(spikes, jnp.asarray(p["w"]), jnp.zeros((shape[0],), jnp.float32))
+                inc = ss[i] + jnp.asarray(p["b"])[:, None, None]
+                vs[i], s, ks[i] = if_step(vs[i], inc, ks[i])
+                counts[i + 1] = counts[i + 1] + s.sum()
+                spikes = s
+            elif isinstance(spec, PoolSpec):
+                pooled = ref.maxpool_ref(spikes, spec.window)
+                # Spike-OR pooling with spike-once semantics.
+                s = jnp.where(ks[i] > 0.5, 0.0, pooled)
+                ks[i] = jnp.maximum(ks[i], s)
+                counts[i + 1] = counts[i + 1] + s.sum()
+                spikes = s
+            elif isinstance(spec, DenseSpec):
+                if flat_spikes is None:
+                    flat_spikes = spikes.reshape(-1)
+                ss[i] = ss[i] + ref.dense_ref(flat_spikes, jnp.asarray(p["w"]))
+                inc = ss[i] + jnp.asarray(p["b"])
+                if i == n_layers - 1:
+                    # Output layer: pure accumulator, never spikes.
+                    vs[i] = vs[i] + inc
+                    s = jnp.zeros(shape, jnp.float32)
+                else:
+                    vs[i], s, ks[i] = if_step(vs[i], inc, ks[i])
+                counts[i + 1] = counts[i + 1] + s.sum()
+                flat_spikes = s
+            step_maps.append(spikes if not isinstance(spec, DenseSpec) else (flat_spikes if flat_spikes is not None else spikes))
+        if record_maps:
+            maps.append(step_maps)
+
+    out = {
+        "logits": vs[n_layers - 1],
+        "spike_counts": jnp.stack(counts),
+    }
+    if record_maps:
+        out["maps"] = maps
+    return out
+
+
+def snn_forward_batch(params, arch_s, xb, t_steps, v_th=1.0, use_pallas=False):
+    """Batched SNN evaluation; returns (logits [B,10], counts [B,L+1])."""
+
+    def single(x):
+        r = snn_forward(params, arch_s, x, t_steps, v_th, use_pallas)
+        return r["logits"], r["spike_counts"]
+
+    return jax.vmap(single)(xb)

@@ -1,0 +1,59 @@
+"""Post-training weight quantization (per-layer symmetric uniform).
+
+FINN's Brevitas path trains with quantization in the loop; the paper's
+Table 2 varies the weight bit width (6 vs 8 bit) and observes both the
+accuracy and the MAC LUT-cost effect.  We reproduce the *deployment*
+artifact: per-layer symmetric uniform quantization of trained float
+weights, with the integer codes + scales exported for the Rust simulators
+(which account LUT costs as a function of bit width) and the dequantized
+values baked into the HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def quantize_symmetric(w: np.ndarray, bits: int) -> tuple[np.ndarray, float]:
+    """Quantize to signed `bits`-bit integers with a per-tensor scale.
+
+    Returns (codes int32 in [-(2^(b-1)-1), 2^(b-1)-1], scale) such that
+    `codes * scale` approximates w.  An all-zero tensor gets scale 1.0.
+    """
+    if bits < 2 or bits > 16:
+        raise ValueError(f"unsupported bit width {bits}")
+    qmax = 2 ** (bits - 1) - 1
+    amax = float(np.max(np.abs(w)))
+    if amax == 0.0:
+        return np.zeros_like(w, dtype=np.int32), 1.0
+    scale = amax / qmax
+    codes = np.clip(np.round(w / scale), -qmax, qmax).astype(np.int32)
+    return codes, scale
+
+
+def dequantize(codes: np.ndarray, scale: float) -> np.ndarray:
+    return (codes.astype(np.float32)) * np.float32(scale)
+
+
+def quantize_params(params: list[dict], bits: int) -> list[dict]:
+    """Quantize every weight tensor of a parameter list in place-style.
+
+    `params` is the model.py parameter structure: a list of dicts with
+    'w' and 'b' arrays for conv/dense layers (pool layers are empty dicts).
+    Biases stay float (they are folded into BRAM-resident accumulators on
+    both accelerators and are not part of the bit-width study).
+    Returns a new list with dequantized weights plus the integer codes.
+    """
+    out = []
+    for p in params:
+        if "w" not in p:
+            out.append(dict(p))
+            continue
+        codes, scale = quantize_symmetric(np.asarray(p["w"]), bits)
+        q = dict(p)
+        q["w"] = dequantize(codes, scale)
+        q["w_codes"] = codes
+        q["w_scale"] = scale
+        q["bits"] = bits
+        out.append(q)
+    return out

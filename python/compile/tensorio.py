@@ -1,0 +1,68 @@
+"""Binary tensor container shared between Python (writer) and Rust (reader).
+
+Deliberately trivial so the Rust side (rust/src/util/tensorfile.rs) stays a
+~100-line dependency-free reader:
+
+    magic   : 4 bytes  b"SBT1"
+    count   : u32 LE   number of tensors
+    per tensor:
+      name_len : u16 LE
+      name     : utf-8 bytes
+      dtype    : u8   (0 = f32, 1 = i32, 2 = u8)
+      ndim     : u8
+      dims     : ndim x u32 LE
+      data     : raw little-endian values, C order
+
+Everything the Rust simulators consume (weights, thresholds, eval sets,
+spike traces) travels in this container via artifacts/.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"SBT1"
+_DTYPES = {0: np.float32, 1: np.int32, 2: np.uint8}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def write_tensors(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                if np.issubdtype(arr.dtype, np.floating):
+                    arr = arr.astype(np.float32)
+                elif np.issubdtype(arr.dtype, np.integer):
+                    arr = arr.astype(np.int32)
+                else:
+                    raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_tensors(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dt = np.dtype(_DTYPES[code]).newbyteorder("<")
+            n = int(np.prod(dims)) if ndim else 1
+            arr = np.frombuffer(f.read(n * dt.itemsize), dtype=dt).reshape(dims)
+            out[name] = arr.astype(_DTYPES[code])
+    return out

@@ -1,0 +1,96 @@
+"""Training loop for the Table 6 CNNs (build-time only).
+
+The paper trains with Keras; we train with JAX + a hand-rolled Adam (the
+offline image has no optax).  Training is deliberately small-budget: the
+goal is a functioning classifier whose activation statistics drive the
+spike-sparsity experiments, not SOTA accuracy.  Measured accuracies are
+recorded in artifacts/manifest.json and EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import cnn_forward_batch, init_params
+
+
+def _tree_map2(f, a, b):
+    """Map f over two parallel param structures (list of dicts of arrays)."""
+    return [
+        {k: f(la[k], lb[k]) for k in la} if la else {}
+        for la, lb in zip(a, b)
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("arch_s",))
+def _loss_fn(params, arch_s, xb, yb):
+    logits = cnn_forward_batch(params, arch_s, xb)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, yb[:, None], axis=1).mean()
+    return nll
+
+
+@functools.partial(jax.jit, static_argnames=("arch_s", "lr"))
+def _adam_step(params, m, v, t, arch_s, xb, yb, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    loss, grads = jax.value_and_grad(_loss_fn)(params, arch_s, xb, yb)
+    m = _tree_map2(lambda mm, g: b1 * mm + (1 - b1) * g, m, grads)
+    v = _tree_map2(lambda vv, g: b2 * vv + (1 - b2) * g * g, v, grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    upd = _tree_map2(
+        lambda mm, vv: lr * (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + eps), m, v
+    )
+    params = _tree_map2(lambda p, u: p - u, params, upd)
+    return params, m, v, loss
+
+
+def accuracy(params, arch_s: str, x: np.ndarray, y: np.ndarray, batch: int = 200) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = cnn_forward_batch(params, arch_s, jnp.asarray(x[i : i + batch]))
+        correct += int((np.argmax(np.asarray(logits), axis=1) == y[i : i + batch]).sum())
+    return correct / len(x)
+
+
+def train(
+    arch_s: str,
+    input_shape,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    epochs: int = 5,
+    batch: int = 64,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log=print,
+):
+    """Train a CNN; returns float32 params (list of dicts of np arrays)."""
+    params = [
+        {k: jnp.asarray(v) for k, v in p.items()} if p else {}
+        for p in init_params(arch_s, input_shape, seed)
+    ]
+    zeros = [
+        {k: jnp.zeros_like(v) for k, v in p.items()} if p else {} for p in params
+    ]
+    m, v = zeros, [dict(z) for z in zeros]
+    rng = np.random.default_rng(seed + 11)
+    n = len(x_train)
+    t = 0
+    for epoch in range(epochs):
+        order = rng.permutation(n)
+        t0, losses = time.time(), []
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i : i + batch]
+            t += 1
+            params, m, v, loss = _adam_step(
+                params, m, v, float(t), arch_s, jnp.asarray(x_train[idx]), jnp.asarray(y_train[idx]), lr
+            )
+            losses.append(float(loss))
+        log(f"  epoch {epoch + 1}/{epochs} loss={np.mean(losses):.4f} ({time.time() - t0:.1f}s)")
+    return [
+        {k: np.asarray(v) for k, v in p.items()} if p else {} for p in params
+    ]

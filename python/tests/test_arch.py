@@ -1,0 +1,47 @@
+"""Architecture-string parser: Table 6 ground truth + error handling."""
+
+import pytest
+
+from compile.arch import (
+    ARCHS,
+    ConvSpec,
+    DenseSpec,
+    PoolSpec,
+    layer_shapes,
+    param_count,
+    parse_arch,
+)
+
+
+def test_parse_mnist():
+    a = parse_arch(ARCHS["mnist"])
+    assert a == [ConvSpec(32, 3), ConvSpec(32, 3), PoolSpec(3), ConvSpec(10, 3), DenseSpec(10)]
+
+
+def test_table6_param_counts():
+    # MNIST and CIFAR-10 match the paper exactly; SVHN differs by 24
+    # (paper: 297,966) — see DESIGN.md §9.
+    assert param_count(parse_arch(ARCHS["mnist"]), (1, 28, 28)) == 20_568
+    assert param_count(parse_arch(ARCHS["svhn"]), (3, 32, 32)) == 297_990
+    assert param_count(parse_arch(ARCHS["cifar"]), (3, 32, 32)) == 446_122
+
+
+def test_layer_shapes_mnist():
+    shapes = layer_shapes(parse_arch(ARCHS["mnist"]), (1, 28, 28))
+    assert shapes == [(32, 28, 28), (32, 28, 28), (32, 9, 9), (10, 9, 9), (10,)]
+
+
+def test_pool_floor_division():
+    shapes = layer_shapes(parse_arch("4C3-P3"), (1, 28, 28))
+    assert shapes[-1] == (4, 9, 9)  # 28 // 3 == 9
+
+
+@pytest.mark.parametrize("bad", ["", "32C", "foo", "32C3--10", "P", "C3"])
+def test_parse_rejects_garbage(bad):
+    with pytest.raises((ValueError, TypeError)):
+        parse_arch(bad)
+
+
+def test_conv_after_dense_rejected():
+    with pytest.raises(ValueError):
+        layer_shapes(parse_arch("10-4C3"), (1, 8, 8))

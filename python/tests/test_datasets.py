@@ -1,0 +1,53 @@
+"""Synthetic datasets: determinism, ranges, and the class-sparsity
+structure the paper's Fig. 8 depends on."""
+
+import numpy as np
+import pytest
+
+from compile.datasets import INPUT_SHAPES, cifar_like, make_dataset, mnist_like, svhn_like
+
+
+@pytest.mark.parametrize("name", ["mnist", "svhn", "cifar"])
+def test_shapes_and_ranges(name):
+    x_tr, y_tr, x_te, y_te = make_dataset(name, 40, 20, seed=7)
+    c, h, w = INPUT_SHAPES[name]
+    assert x_tr.shape == (40, c, h, w)
+    assert x_te.shape == (20, c, h, w)
+    assert x_tr.dtype == np.float32
+    assert 0.0 <= x_tr.min() and x_tr.max() <= 1.0
+    assert set(y_tr) <= set(range(10))
+
+
+@pytest.mark.parametrize("gen", [mnist_like, svhn_like, cifar_like])
+def test_determinism(gen):
+    x1, y1 = gen(16, 99)
+    x2, y2 = gen(16, 99)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_different_seeds_differ():
+    x1, _ = mnist_like(8, 1)
+    x2, _ = mnist_like(8, 2)
+    assert not np.array_equal(x1, x2)
+
+
+def test_class_balance():
+    _, y = mnist_like(100, 3)
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() == 10 and counts.max() == 10
+
+
+def test_digit_one_is_sparsest():
+    """The Fig. 8 driver: class 1 has the least ink by a clear margin."""
+    x, y = mnist_like(300, 42)
+    ink = [float(x[y == c].mean()) for c in range(10)]
+    assert np.argmin(ink) == 1, ink
+    others = np.mean([v for c, v in enumerate(ink) if c != 1])
+    assert ink[1] < 0.6 * others
+
+
+def test_train_test_disjoint_noise():
+    x_tr, _, x_te, _ = make_dataset("mnist", 10, 10, seed=5)
+    # Different split seeds -> no identical images.
+    assert all(not np.array_equal(a, b) for a in x_tr for b in x_te)

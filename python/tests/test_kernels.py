@@ -1,0 +1,119 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes, sparsity and value ranges; the kernels must match
+`kernels/ref.py` to float tolerance everywhere (interpret=True on CPU).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.if_update import if_update
+from compile.kernels.spike_conv import spike_conv, CO_TILE
+
+RNG = np.random.default_rng(1234)
+
+
+def random_case(c_in, c_out, h, w, k, density):
+    spikes = (RNG.random((c_in, h, w)) < density).astype(np.float32)
+    wts = RNG.normal(0, 1, (c_out, c_in, k, k)).astype(np.float32)
+    return jnp.asarray(spikes), jnp.asarray(wts)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c_in=st.integers(1, 8),
+    c_out=st.integers(1, 20),
+    h=st.integers(3, 20),
+    w=st.integers(3, 20),
+    density=st.floats(0.0, 1.0),
+)
+def test_spike_conv_matches_ref(c_in, c_out, h, w, density):
+    spikes, wts = random_case(c_in, c_out, h, w, 3, density)
+    got = spike_conv(spikes, wts)
+    want = ref.spike_conv_ref(spikes, wts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_spike_conv_kernel_sizes(k):
+    spikes, wts = random_case(3, 7, 12, 11, k, 0.3)
+    got = spike_conv(spikes, wts)
+    want = ref.spike_conv_ref(spikes, wts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("c_out", [1, CO_TILE - 1, CO_TILE, CO_TILE + 1, 2 * CO_TILE])
+def test_spike_conv_co_tile_boundaries(c_out):
+    """Output-channel padding must be exact at every tile boundary."""
+    spikes, wts = random_case(2, c_out, 9, 9, 3, 0.4)
+    got = spike_conv(spikes, wts)
+    assert got.shape == (c_out, 9, 9)
+    want = ref.spike_conv_ref(spikes, wts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-5)
+
+
+def test_spike_conv_zero_input_gives_zero():
+    spikes = jnp.zeros((4, 10, 10), jnp.float32)
+    wts = jnp.asarray(RNG.normal(0, 1, (6, 4, 3, 3)).astype(np.float32))
+    assert float(jnp.abs(spike_conv(spikes, wts)).max()) == 0.0
+
+
+def test_spike_conv_single_spike_recovers_flipped_kernel():
+    """A single centered spike writes the (flipped) kernel patch."""
+    spikes = jnp.zeros((1, 7, 7), jnp.float32).at[0, 3, 3].set(1.0)
+    wts = jnp.asarray(np.arange(9, dtype=np.float32).reshape(1, 1, 3, 3))
+    out = np.asarray(spike_conv(spikes, wts))
+    # Same-padding correlation: out[y, x] = w[0, 0, 3-(y-3)... ] — compare
+    # against the oracle rather than hand-deriving orientation.
+    want = np.asarray(ref.spike_conv_ref(spikes, wts))
+    np.testing.assert_allclose(out, want, atol=1e-6)
+    assert out[0, 2:5, 2:5].sum() == pytest.approx(36.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    vth=st.floats(0.1, 3.0),
+    spiked_frac=st.floats(0.0, 1.0),
+)
+def test_if_update_matches_ref(n, vth, spiked_frac):
+    v = RNG.normal(0, 1, n).astype(np.float32)
+    inc = RNG.normal(0, 1, n).astype(np.float32)
+    spiked = (RNG.random(n) < spiked_frac).astype(np.float32)
+    got = if_update(jnp.asarray(v), jnp.asarray(inc), jnp.asarray(spiked), vth)
+    want = ref.if_update_ref(jnp.asarray(v), jnp.asarray(inc), jnp.asarray(spiked), vth)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-6)
+
+
+def test_if_update_spike_once_semantics():
+    """A neuron above threshold with spiked=1 must NOT fire again."""
+    v = jnp.asarray([5.0, 5.0])
+    inc = jnp.asarray([1.0, 1.0])
+    spiked = jnp.asarray([1.0, 0.0])
+    v2, spike, spiked2 = if_update(v, inc, spiked, 1.0)
+    assert np.asarray(spike).tolist() == [0.0, 1.0]
+    assert np.asarray(spiked2).tolist() == [1.0, 1.0]
+    # No reset: membranes keep integrating (paper §4).
+    assert np.asarray(v2).tolist() == [6.0, 6.0]
+
+
+def test_if_update_threshold_is_strict():
+    v = jnp.asarray([0.0])
+    inc = jnp.asarray([1.0])  # lands exactly on v_th = 1.0
+    _, spike, _ = if_update(v, inc, jnp.asarray([0.0]), 1.0)
+    assert float(spike[0]) == 0.0  # strict '>' per Eq. (2)
+
+
+def test_if_update_tile_padding_boundary():
+    """Padded tail lanes must never emit phantom spikes (n % TILE != 0)."""
+    n = 1025
+    v = jnp.full((n,), 10.0)
+    inc = jnp.ones((n,))
+    spiked = jnp.zeros((n,))
+    v2, spike, spiked2 = if_update(v, inc, spiked, 0.5)
+    assert v2.shape == (n,)
+    assert float(spike.sum()) == n

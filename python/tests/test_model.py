@@ -1,0 +1,116 @@
+"""L2 model semantics: CNN forward, SNN m-TTFS dynamics, Pallas == ref."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.arch import ARCHS
+from compile.model import (
+    cnn_forward,
+    cnn_forward_batch,
+    init_params,
+    snn_forward,
+)
+
+RNG = np.random.default_rng(7)
+TINY = "4C3-P2-3"  # small arch for fast tests
+
+
+def tiny_params(seed=0):
+    return init_params(TINY, (1, 8, 8), seed)
+
+
+def test_cnn_forward_shape():
+    p = tiny_params()
+    x = jnp.asarray(RNG.random((1, 8, 8)).astype(np.float32))
+    assert cnn_forward(p, TINY, x).shape == (3,)
+
+
+def test_cnn_forward_batch_matches_single():
+    p = tiny_params()
+    xb = jnp.asarray(RNG.random((4, 1, 8, 8)).astype(np.float32))
+    batched = cnn_forward_batch(p, TINY, xb)
+    for i in range(4):
+        np.testing.assert_allclose(
+            np.asarray(batched[i]), np.asarray(cnn_forward(p, TINY, xb[i])), atol=1e-5
+        )
+
+
+def test_mnist_params_shapes():
+    p = init_params(ARCHS["mnist"], (1, 28, 28), 0)
+    assert p[0]["w"].shape == (32, 1, 3, 3)
+    assert p[1]["w"].shape == (32, 32, 3, 3)
+    assert p[2] == {}
+    assert p[3]["w"].shape == (10, 32, 3, 3)
+    assert p[4]["w"].shape == (10, 810)
+
+
+def test_snn_spike_counts_and_logits_shapes():
+    p = tiny_params()
+    x = jnp.asarray(RNG.random((1, 8, 8)).astype(np.float32))
+    r = snn_forward(p, TINY, x, t_steps=4, use_pallas=False)
+    assert r["logits"].shape == (3,)
+    assert r["spike_counts"].shape == (4,)  # input + 3 layers
+
+
+def test_snn_pallas_equals_ref_path():
+    p = tiny_params(3)
+    x = jnp.asarray(RNG.random((1, 8, 8)).astype(np.float32))
+    r_ref = snn_forward(p, TINY, x, 4, use_pallas=False)
+    r_pal = snn_forward(p, TINY, x, 4, use_pallas=True)
+    np.testing.assert_allclose(
+        np.asarray(r_ref["logits"]), np.asarray(r_pal["logits"]), atol=1e-4
+    )
+    np.testing.assert_array_equal(
+        np.asarray(r_ref["spike_counts"]), np.asarray(r_pal["spike_counts"])
+    )
+
+
+def test_snn_neurons_spike_once():
+    p = tiny_params()
+    x = jnp.asarray(np.full((1, 8, 8), 0.9, np.float32))
+    r = snn_forward(p, TINY, x, 8, use_pallas=False, record_maps=True)
+    # Sum of per-step input spike maps never exceeds 1 anywhere.
+    total = sum(np.asarray(step[0]) for step in r["maps"])
+    assert total.max() <= 1.0
+
+
+def test_snn_input_encoding_is_ttfs():
+    """Brighter pixels must spike earlier (constant-current encoding)."""
+    p = tiny_params()
+    x = np.zeros((1, 8, 8), np.float32)
+    x[0, 0, 0] = 1.0  # spikes at t=1 (V=2 > 1)
+    x[0, 0, 1] = 0.30  # spikes at t=3 (V=1.2)
+    r = snn_forward(p, TINY, jnp.asarray(x), 6, use_pallas=False, record_maps=True)
+    first = {}
+    for t, step in enumerate(r["maps"]):
+        m = np.asarray(step[0])[0]
+        for pos in [(0, 0), (0, 1)]:
+            if m[pos] > 0 and pos not in first:
+                first[pos] = t
+    assert first[(0, 0)] < first[(0, 1)]
+
+
+def test_snn_dark_input_generates_no_spikes():
+    p = tiny_params()
+    x = jnp.zeros((1, 8, 8), jnp.float32)
+    r = snn_forward(p, TINY, x, 6, use_pallas=False)
+    assert float(np.asarray(r["spike_counts"])[0]) == 0.0
+
+
+def test_snn_more_steps_monotone_input_spikes():
+    """Input spike count is non-decreasing in T (spike-once + constant current)."""
+    p = tiny_params()
+    x = jnp.asarray(RNG.random((1, 8, 8)).astype(np.float32))
+    counts = [
+        float(np.asarray(snn_forward(p, TINY, x, t, use_pallas=False)["spike_counts"])[0])
+        for t in (2, 4, 8)
+    ]
+    assert counts[0] <= counts[1] <= counts[2]
+
+
+def test_output_layer_never_spikes():
+    p = tiny_params()
+    x = jnp.asarray(np.full((1, 8, 8), 0.9, np.float32))
+    r = snn_forward(p, TINY, x, 6, use_pallas=False)
+    assert float(np.asarray(r["spike_counts"])[-1]) == 0.0

@@ -1,0 +1,81 @@
+"""Quantization and CNN->SNN conversion properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.convert import activation_percentiles, convert_to_snn
+from compile.model import cnn_activations, init_params
+from compile.quant import dequantize, quantize_params, quantize_symmetric
+
+RNG = np.random.default_rng(11)
+TINY = "4C3-P2-3"
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.integers(2, 16), n=st.integers(1, 128), scale=st.floats(1e-3, 1e3))
+def test_quant_roundtrip_error_bounded(bits, n, scale):
+    w = (RNG.normal(0, 1, n) * scale).astype(np.float32)
+    codes, s = quantize_symmetric(w, bits)
+    back = dequantize(codes, s)
+    assert np.abs(w - back).max() <= s / 2 + 1e-6 * scale
+    qmax = 2 ** (bits - 1) - 1
+    assert np.abs(codes).max() <= qmax
+
+
+def test_quant_zero_tensor():
+    codes, s = quantize_symmetric(np.zeros(5, np.float32), 8)
+    assert s == 1.0 and not codes.any()
+
+
+@pytest.mark.parametrize("bits", [0, 1, 17])
+def test_quant_rejects_bad_bits(bits):
+    with pytest.raises(ValueError):
+        quantize_symmetric(np.ones(3, np.float32), bits)
+
+
+def test_quantize_params_structure():
+    p = init_params(TINY, (1, 8, 8), 0)
+    q = quantize_params(p, 6)
+    assert len(q) == len(p)
+    assert q[1] == {}  # pool layer untouched
+    assert "w_codes" in q[0] and q[0]["bits"] == 6
+    # Dequantized weights close to originals.
+    assert np.abs(q[0]["w"] - p[0]["w"]).max() <= q[0]["w_scale"] / 2 + 1e-6
+
+
+def test_conversion_preserves_structure_and_scales():
+    p = init_params(TINY, (1, 8, 8), 1)
+    xb = RNG.random((16, 1, 8, 8)).astype(np.float32)
+    snn, lambdas = convert_to_snn(p, TINY, xb, percentile=99.0)
+    assert len(snn) == len(p)
+    assert all(l > 0 for l in lambdas)
+    # Pool layer stays empty; weighted layers rescaled.
+    assert snn[1] == {}
+    assert snn[0]["w"].shape == p[0]["w"].shape
+
+
+def test_normalized_activations_bounded_at_percentile():
+    """After conversion, the percentile activation of each layer ≈ 1."""
+    p = init_params(TINY, (1, 8, 8), 2)
+    xb = RNG.random((32, 1, 8, 8)).astype(np.float32)
+    snn, _ = convert_to_snn(p, TINY, xb, percentile=100.0)
+    lambdas_after = activation_percentiles(snn, TINY, xb, percentile=100.0)
+    # With max-normalization every layer's max activation is ~1.
+    for lam in lambdas_after:
+        assert lam == pytest.approx(1.0, rel=0.05)
+
+
+def test_conversion_preserves_argmax_on_calibration_data():
+    """Weight rescaling is a per-layer positive scaling -> the CNN's
+    argmax on ReLU-positive paths is preserved for most inputs."""
+    p = init_params(TINY, (1, 8, 8), 3)
+    xb = RNG.random((24, 1, 8, 8)).astype(np.float32)
+    snn, _ = convert_to_snn(p, TINY, xb, 99.9)
+    agree = 0
+    for i in range(len(xb)):
+        a = np.argmax(np.asarray(cnn_activations(p, TINY, jnp.asarray(xb[i]))[-1]))
+        b = np.argmax(np.asarray(cnn_activations(snn, TINY, jnp.asarray(xb[i]))[-1]))
+        agree += int(a == b)
+    assert agree >= len(xb) * 0.7

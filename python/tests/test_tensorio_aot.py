@@ -1,0 +1,79 @@
+"""Tensor container round-trips + AOT HLO export sanity."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import tensorio
+from compile.aot import export_cnn_hlo, export_snn_hlo, to_hlo_text
+from compile.model import init_params
+
+TINY = "4C3-P2-3"
+
+
+def test_tensorio_roundtrip(tmp_path):
+    path = str(tmp_path / "t.bin")
+    tensors = {
+        "a/w": RNG.normal(0, 1, (3, 4)).astype(np.float32),
+        "b": np.asarray([1, -2, 3], np.int32),
+        "c": np.asarray([0, 1, 1], np.uint8),
+        "scalarish": np.asarray([2.5], np.float32),
+    }
+    tensorio.write_tensors(path, tensors)
+    back = tensorio.read_tensors(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+RNG = np.random.default_rng(5)
+
+
+def test_tensorio_rejects_bad_magic(tmp_path):
+    path = tmp_path / "bad.bin"
+    path.write_bytes(b"XXXX\x00\x00\x00\x00")
+    with pytest.raises(ValueError):
+        tensorio.read_tensors(str(path))
+
+
+def test_tensorio_float64_downcast(tmp_path):
+    path = str(tmp_path / "t.bin")
+    tensorio.write_tensors(path, {"x": np.asarray([1.5], np.float64)})
+    assert tensorio.read_tensors(path)["x"].dtype == np.float32
+
+
+def test_hlo_text_contains_full_constants():
+    """The export must not elide weights as '{...}' (the Rust parser
+    cannot reconstruct elided payloads)."""
+    w = jnp.asarray(RNG.normal(0, 1, (32, 32)).astype(np.float32))
+    lowered = jax.jit(lambda x: (x @ w,)).lower(
+        jax.ShapeDtypeStruct((32,), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "{...}" not in text
+    assert "f32[32,32]" in text
+
+
+def test_export_cnn_hlo_roundtrip(tmp_path):
+    p = init_params(TINY, (1, 8, 8), 0)
+    path = str(tmp_path / "cnn.hlo.txt")
+    n = export_cnn_hlo(p, TINY, (1, 8, 8), path)
+    assert n > 0 and os.path.getsize(path) == n
+    text = open(path).read()
+    assert "ENTRY" in text and "{...}" not in text
+    assert "f32[1,8,8]" in text  # input signature
+
+
+def test_export_snn_hlo_has_two_outputs(tmp_path):
+    p = init_params(TINY, (1, 8, 8), 0)
+    path = str(tmp_path / "snn.hlo.txt")
+    export_snn_hlo(p, TINY, (1, 8, 8), 2, path)
+    text = open(path).read()
+    assert "ENTRY" in text
+    # Tuple of (logits f32[3], counts f32[4]).
+    assert "f32[3]" in text and "f32[4]" in text

@@ -1,0 +1,5 @@
+//! `cargo bench --bench fig11` — regenerates the paper's fig11 and times the
+//! end-to-end regeneration (see spikebench::experiments::bench_main).
+fn main() {
+    spikebench::experiments::bench_main("fig11");
+}

@@ -1,0 +1,5 @@
+//! `cargo bench --bench fig8` — regenerates the paper's fig8 and times the
+//! end-to-end regeneration (see spikebench::experiments::bench_main).
+fn main() {
+    spikebench::experiments::bench_main("fig8");
+}

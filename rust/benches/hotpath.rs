@@ -1,0 +1,63 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of the simulator's
+//! hot paths (the §Perf targets in EXPERIMENTS.md):
+//!
+//! * functional m-TTFS event engine (spike-events/s)
+//! * cycle-model replay (inferences/s)
+//! * dense conv2d golden model
+//! * PJRT artifact execution (the serving path)
+
+use spikebench::experiments::ctx::Ctx;
+use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::nn::loader::{load_network, WeightKind};
+use spikebench::nn::snn::snn_infer;
+use spikebench::snn::accelerator::SnnAccelerator;
+use spikebench::snn::config::by_name;
+use spikebench::util::bench::Bench;
+
+fn main() {
+    let mut ctx = match Ctx::load() {
+        Ok(c) => c,
+        Err(e) => {
+            println!("hotpath: SKIP (artifacts not built: {e})");
+            return;
+        }
+    };
+    let info = ctx.info("mnist").unwrap().clone();
+    let net = load_network(&ctx.manifest, "mnist", WeightKind::Snn).unwrap();
+    let cnn_net = load_network(&ctx.manifest, "mnist", WeightKind::Cnn).unwrap();
+    let eval = ctx.eval("mnist").unwrap().clone();
+    let x = eval.images[0].clone();
+
+    let bench = Bench::new("hotpath").warmup(2).samples(8);
+
+    // 1. Functional event engine.
+    let r = snn_infer(&net, &x, info.t_steps, info.v_th);
+    let events = r.total_spikes();
+    bench.run_throughput("snn_infer (events)", events, || {
+        snn_infer(&net, &x, info.t_steps, info.v_th)
+    });
+
+    // 2. Cycle-model replay (shared functional pass).
+    let design = by_name("SNN8_BRAM").unwrap();
+    let acc = SnnAccelerator::new(&design, &net, info.t_steps, info.v_th);
+    bench.run("replay(SNN8_BRAM)", || acc.replay(&r, &PYNQ_Z1));
+
+    // 3. Dense CNN forward (golden model).
+    bench.run("cnn_forward (rust nn)", || cnn_net.forward(&x));
+
+    // 4. PJRT execution (the serving path).
+    match spikebench::runtime::Runtime::cpu() {
+        Ok(mut rt) => {
+            let hlo = ctx.manifest.file("mnist", "cnn_hlo").unwrap();
+            rt.load(&hlo).unwrap();
+            bench.run("pjrt cnn execute", || rt.run_cnn(&hlo, &x).unwrap());
+            let snn_hlo = ctx.manifest.file("mnist", "snn_hlo").unwrap();
+            rt.load(&snn_hlo).unwrap();
+            bench.run("pjrt snn execute", || rt.run_snn(&snn_hlo, &x).unwrap());
+        }
+        Err(e) => println!("pjrt benches skipped: {e}"),
+    }
+
+    // 5. End-to-end single inference (functional + cycle + power).
+    bench.run("snn run end-to-end", || acc.run(&x, &PYNQ_Z1));
+}

@@ -1,0 +1,5 @@
+//! `cargo bench --bench table3` — regenerates the paper's table3 and times the
+//! end-to-end regeneration (see spikebench::experiments::bench_main).
+fn main() {
+    spikebench::experiments::bench_main("table3");
+}

@@ -1,0 +1,290 @@
+//! CNN design points — the paper's CNN₁…CNN₁₀ (Tables 2, 8, 9).
+//!
+//! The paper publishes each design's synthesized resources, bit width and
+//! (for MNIST) simulated latency, but not the FINN folding parameters
+//! (P_l, Q_l) that produced them.  The foldings below are **calibrated**:
+//! chosen so the dataflow model's latency reproduces Table 2 within < 1%
+//! (the MNIST designs) and so the SVHN/CIFAR pipelines land in the
+//! power/latency regime Figs. 13–15 show.  Published resources are carried
+//! verbatim; the analytic LUT estimator is only used for ablations.
+
+use crate::fpga::resources::ResourceUsage;
+use crate::nn::arch::LayerSpec;
+
+use super::dataflow::{CnnPipeline, Folding};
+
+/// A named FINN-generated CNN configuration.
+#[derive(Debug, Clone)]
+pub struct CnnDesign {
+    pub name: &'static str,
+    pub dataset: &'static str,
+    /// Weight bit width (Table 2's 6/8-bit variants).
+    pub bits: u32,
+    /// Folding per weighted layer, in network order.
+    pub foldings: Vec<Folding>,
+    /// Synthesized resources from the paper.
+    pub published: Option<ResourceUsage>,
+    /// Latency reported in Table 2 (cycles), where available.
+    pub latency_published: Option<u64>,
+}
+
+impl CnnDesign {
+    pub fn pipeline(&self, arch: &[LayerSpec], input: (usize, usize, usize)) -> CnnPipeline {
+        CnnPipeline::new(arch, input, &self.foldings)
+    }
+
+    pub fn resources(&self) -> ResourceUsage {
+        self.published.unwrap_or_else(|| self.estimate_resources())
+    }
+
+    /// Coarse analytic LUT/FF model for ablation points: MAC array cost
+    /// scales with Σ PE·SIMD and bit width, plus SWU/FIFO overhead.
+    /// (±2× accuracy — Vivado synthesis of FINN IP is far less regular
+    /// than the SNN datapath; published values are used wherever they
+    /// exist.)
+    pub fn estimate_resources(&self) -> ResourceUsage {
+        let mac_units: u64 = self.foldings.iter().map(|f| f.pe as u64 * f.simd as u64).sum();
+        let lut_per_mac = match self.bits {
+            0..=6 => 25,
+            7..=8 => 33,
+            _ => 60,
+        };
+        let luts = (mac_units * lut_per_mac + 2_500) as u32;
+        ResourceUsage {
+            luts,
+            regs: (luts as f64 * 1.3) as u32,
+            brams: 10.0 + mac_units as f64 / 60.0,
+            dsps: 0,
+        }
+    }
+}
+
+fn f(pe: u32, simd: u32) -> Folding {
+    Folding { pe, simd }
+}
+
+fn published(luts: u32, regs: u32, brams: f64) -> Option<ResourceUsage> {
+    Some(ResourceUsage { luts, regs, brams, dsps: 0 })
+}
+
+/// Table 2: the six MNIST configurations.
+/// Folding order: conv0, conv1, conv2, fc.
+pub fn mnist_designs() -> Vec<CnnDesign> {
+    vec![
+        CnnDesign {
+            name: "CNN1",
+            dataset: "mnist",
+            bits: 8,
+            foldings: vec![f(4, 2), f(17, 8), f(5, 9), f(2, 5)],
+            published: published(3_733, 1_687, 30.0),
+            latency_published: Some(53_304),
+        },
+        CnnDesign {
+            name: "CNN2",
+            dataset: "mnist",
+            bits: 8,
+            foldings: vec![f(8, 3), f(20, 7), f(5, 16), f(2, 9)],
+            published: published(8_854, 5_836, 32.0),
+            latency_published: Some(51_493),
+        },
+        CnnDesign {
+            name: "CNN3",
+            dataset: "mnist",
+            bits: 6,
+            foldings: vec![f(16, 9), f(30, 8), f(10, 36), f(10, 15)],
+            published: published(31_783, 23_857, 36.0),
+            latency_published: Some(30_264),
+        },
+        CnnDesign {
+            name: "CNN4",
+            dataset: "mnist",
+            bits: 6,
+            foldings: vec![f(16, 6), f(24, 8), f(10, 32), f(10, 10)],
+            published: published(20_368, 26_886, 14.5),
+            latency_published: Some(37_822),
+        },
+        CnnDesign {
+            name: "CNN5",
+            dataset: "mnist",
+            bits: 6,
+            foldings: vec![f(12, 6), f(13, 13), f(8, 32), f(6, 10)],
+            published: published(16_793, 17_810, 11.0),
+            latency_published: Some(42_852),
+        },
+        CnnDesign {
+            name: "CNN6",
+            dataset: "mnist",
+            bits: 8,
+            foldings: vec![f(14, 6), f(18, 9), f(9, 32), f(8, 10)],
+            published: published(19_928, 21_195, 11.0),
+            latency_published: Some(44_859),
+        },
+    ]
+}
+
+/// Tables 8 + Fig 13: SVHN configurations.
+/// Folding order: conv0..conv6, fc (8 weighted layers).
+///
+/// Calibration note (§5.2 of the paper): with ten pipeline stages the
+/// published LUT budgets (~33–40 k) are consumed by the per-layer SWU /
+/// FIFO / width-converter infrastructure, leaving only small MAC folds —
+/// "the more layers there are in a network, the fewer options remain for
+/// configuring and optimizing the throughput of bottleneck parts".  The
+/// result is the Fig. 15 behaviour: the deep CNNs become *slower* than
+/// the SNN designs of equal power.
+pub fn svhn_designs() -> Vec<CnnDesign> {
+    vec![
+        CnnDesign {
+            name: "CNN7",
+            dataset: "svhn",
+            bits: 6,
+            foldings: vec![
+                f(1, 1),
+                f(1, 1),
+                f(6, 3),
+                f(2, 2),
+                f(2, 4),
+                f(1, 2),
+                f(2, 2),
+                f(1, 1),
+            ],
+            published: published(32_765, 50_968, 50.0),
+            latency_published: None,
+        },
+        CnnDesign {
+            name: "CNN8",
+            dataset: "svhn",
+            bits: 6,
+            foldings: vec![
+                f(1, 1),
+                f(1, 1),
+                f(9, 3),
+                f(2, 3),
+                f(4, 3),
+                f(2, 1),
+                f(4, 1),
+                f(1, 1),
+            ],
+            published: published(39_927, 59_187, 47.5),
+            latency_published: None,
+        },
+    ]
+}
+
+/// Tables 9 + Fig 14: CIFAR-10 configurations.
+/// Folding order: conv0..conv6, fc (8 weighted layers).
+/// (Same calibration rationale as [`svhn_designs`].)
+pub fn cifar_designs() -> Vec<CnnDesign> {
+    vec![
+        CnnDesign {
+            name: "CNN9",
+            dataset: "cifar",
+            bits: 6,
+            foldings: vec![
+                f(2, 1),
+                f(6, 3),
+                f(2, 2),
+                f(2, 4),
+                f(1, 2),
+                f(2, 2),
+                f(2, 2),
+                f(1, 1),
+            ],
+            published: published(30_745, 42_436, 73.0),
+            latency_published: None,
+        },
+        CnnDesign {
+            name: "CNN10",
+            dataset: "cifar",
+            bits: 6,
+            foldings: vec![
+                f(3, 1),
+                f(9, 3),
+                f(2, 3),
+                f(4, 3),
+                f(2, 1),
+                f(4, 1),
+                f(4, 1),
+                f(1, 1),
+            ],
+            published: published(38_111, 64_962, 75.5),
+            latency_published: None,
+        },
+    ]
+}
+
+pub fn all_designs() -> Vec<CnnDesign> {
+    let mut v = mnist_designs();
+    v.extend(svhn_designs());
+    v.extend(cifar_designs());
+    v
+}
+
+pub fn by_name(name: &str) -> Option<CnnDesign> {
+    all_designs().into_iter().find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::arch::{parse_arch, ARCH_CIFAR, ARCH_MNIST, ARCH_SVHN};
+
+    /// The calibration contract: modelled latency reproduces Table 2
+    /// within 1% for every MNIST design.
+    #[test]
+    fn table2_latencies_within_one_percent() {
+        let arch = parse_arch(ARCH_MNIST).unwrap();
+        for d in mnist_designs() {
+            let got = d.pipeline(&arch, (1, 28, 28)).run().latency_cycles;
+            let want = d.latency_published.unwrap();
+            let err = (got as f64 - want as f64).abs() / want as f64;
+            assert!(err < 0.01, "{}: modelled {got} vs published {want} ({:.2}%)", d.name, err * 100.0);
+        }
+    }
+
+    /// MNIST pipelines are conv1-bottlenecked and poorly balanced — the
+    /// duty that explains the low CNN₄/CNN₅ power per LUT (fpga::device).
+    #[test]
+    fn mnist_pipelines_are_unbalanced() {
+        let arch = parse_arch(ARCH_MNIST).unwrap();
+        for d in mnist_designs() {
+            let r = d.pipeline(&arch, (1, 28, 28)).run();
+            assert!(r.duty < 0.4, "{}: duty {}", d.name, r.duty);
+        }
+    }
+
+    /// SVHN/CIFAR pipelines are better balanced than the MNIST ones
+    /// (higher duty -> the higher per-LUT power of Tables 8/9), yet their
+    /// bottleneck II is large (the Fig. 15 slowness).
+    #[test]
+    fn large_pipelines_are_balanced()  {
+        let svhn = parse_arch(ARCH_SVHN).unwrap();
+        for d in svhn_designs() {
+            let r = d.pipeline(&svhn, (3, 32, 32)).run();
+            assert!(r.duty > 0.4, "{}: duty {}", d.name, r.duty);
+            assert!(r.ii_cycles > 200_000, "{}: II {}", d.name, r.ii_cycles);
+        }
+        let cifar = parse_arch(ARCH_CIFAR).unwrap();
+        for d in cifar_designs() {
+            let r = d.pipeline(&cifar, (3, 32, 32)).run();
+            assert!(r.duty > 0.4, "{}: duty {}", d.name, r.duty);
+            assert!(r.ii_cycles > 200_000, "{}: II {}", d.name, r.ii_cycles);
+        }
+    }
+
+    #[test]
+    fn published_resources_present_for_all() {
+        for d in all_designs() {
+            assert!(d.published.is_some(), "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn estimator_order_of_magnitude() {
+        // The coarse estimator stays within 2.5x of synthesis for CNN4.
+        let d = by_name("CNN4").unwrap();
+        let est = d.estimate_resources().luts as f64;
+        let real = d.published.unwrap().luts as f64;
+        assert!(est / real < 2.5 && real / est < 2.5, "est {est} real {real}");
+    }
+}

@@ -1,0 +1,215 @@
+//! The FINN folding / latency / duty model.
+//!
+//! For a convolutional layer processed as a matrix-vector product, the MAC
+//! array computes `Q_l` multiplications per PE per cycle with `P_l` PEs:
+//!
+//! `cycles_l ≈ MACs_l / (P_l · Q_l)` (+ sliding-window fill)
+//!
+//! The pipeline is rate-balanced by its slowest layer: steady-state
+//! inter-frame interval `II = max_l cycles_l`, and single-frame latency is
+//! `II + Σ fill_l` — *independent of the input*, which is the structural
+//! contrast to the SNN accelerator that the paper's histograms visualize.
+//!
+//! The per-layer duty `cycles_l / II` also feeds the power model: a badly
+//! balanced pipeline (MNIST's tiny nets) leaves most IP blocks idle most
+//! of the time, which is why the paper's CNN₄/CNN₅ burn far less power per
+//! LUT than the SVHN/CIFAR designs (see fpga::device fit notes).
+
+use crate::nn::arch::{layer_shapes, LayerSpec};
+
+/// Folding of one weighted layer: `pe` = neurons computed in parallel,
+/// `simd` = input synapses per PE per cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Folding {
+    pub pe: u32,
+    pub simd: u32,
+}
+
+/// One layer's static schedule.
+#[derive(Debug, Clone)]
+pub struct LayerSchedule {
+    pub name: String,
+    /// Total MAC operations.
+    pub macs: u64,
+    /// Compute cycles at the configured folding.
+    pub cycles: u64,
+    /// Sliding-window / FIFO fill before the first output.
+    pub fill: u64,
+    pub folding: Option<Folding>,
+}
+
+/// The whole pipeline's schedule.
+#[derive(Debug, Clone)]
+pub struct CnnPipeline {
+    pub layers: Vec<LayerSchedule>,
+}
+
+/// Latency/throughput summary (input-independent).
+#[derive(Debug, Clone, Copy)]
+pub struct CnnRunResult {
+    /// Cycles from first input to last output for one frame.
+    pub latency_cycles: u64,
+    /// Steady-state initiation interval (cycles/frame).
+    pub ii_cycles: u64,
+    /// Mean layer utilization = mean(cycles_l) / max(cycles_l) in 0..1.
+    pub duty: f64,
+}
+
+impl CnnPipeline {
+    /// Build the schedule for `arch` with per-weighted-layer foldings
+    /// (`foldings[i]` = folding of the i-th conv/dense layer in order).
+    pub fn new(
+        arch: &[LayerSpec],
+        input_shape: (usize, usize, usize),
+        foldings: &[Folding],
+    ) -> CnnPipeline {
+        let shapes = layer_shapes(arch, input_shape);
+        let mut layers = Vec::new();
+        let (mut c_in, mut h, mut w) = input_shape;
+        let mut flat: Option<usize> = None;
+        let mut fold_it = foldings.iter();
+        for (i, spec) in arch.iter().enumerate() {
+            match *spec {
+                LayerSpec::Conv { out_channels, kernel } => {
+                    let (c_o, h_o, w_o) = shapes[i];
+                    debug_assert_eq!(c_o, out_channels);
+                    let macs = (out_channels * c_in * kernel * kernel * h_o * w_o) as u64;
+                    let f = *fold_it.next().expect("missing folding for conv layer");
+                    // Folding legality: PE | C_out, SIMD | C_in*K*K (FINN's
+                    // constraint); we clamp to the legal maximum instead of
+                    // panicking so sweeps can explore freely.
+                    let pe = f.pe.min(out_channels as u32).max(1);
+                    let simd = f.simd.min((c_in * kernel * kernel) as u32).max(1);
+                    let cycles = macs.div_ceil(pe as u64 * simd as u64);
+                    // SWU must buffer K-1 rows + K pixels before the first
+                    // window is complete.
+                    let fill = ((kernel - 1) * w + kernel) as u64;
+                    layers.push(LayerSchedule {
+                        name: format!("conv{i}({out_channels}C{kernel})"),
+                        macs,
+                        cycles,
+                        fill,
+                        folding: Some(Folding { pe, simd }),
+                    });
+                    c_in = out_channels;
+                    h = h_o;
+                    w = w_o;
+                }
+                LayerSpec::Pool { window } => {
+                    let (c_o, h_o, w_o) = shapes[i];
+                    // Pool passes one pixel per cycle; fill = window rows.
+                    let cycles = (c_o * h_o * w_o) as u64;
+                    layers.push(LayerSchedule {
+                        name: format!("pool{i}(P{window})"),
+                        macs: 0,
+                        cycles,
+                        fill: ((window - 1) * w) as u64,
+                        folding: None,
+                    });
+                    h = h_o;
+                    w = w_o;
+                }
+                LayerSpec::Dense { units } => {
+                    let f_in = flat.unwrap_or(c_in * h * w);
+                    let macs = (units * f_in) as u64;
+                    let f = *fold_it.next().expect("missing folding for dense layer");
+                    let pe = f.pe.min(units as u32).max(1);
+                    let simd = f.simd.min(f_in as u32).max(1);
+                    let cycles = macs.div_ceil(pe as u64 * simd as u64);
+                    layers.push(LayerSchedule {
+                        name: format!("fc{i}({units})"),
+                        macs,
+                        cycles,
+                        fill: 4,
+                        folding: Some(Folding { pe, simd }),
+                    });
+                    flat = Some(units);
+                }
+            }
+        }
+        CnnPipeline { layers }
+    }
+
+    /// Input-independent latency/throughput/duty.
+    pub fn run(&self) -> CnnRunResult {
+        let ii = self.layers.iter().map(|l| l.cycles).max().unwrap_or(1).max(1);
+        let fills: u64 = self.layers.iter().map(|l| l.fill).sum();
+        // One frame flows through: bounded by the bottleneck II plus the
+        // fill of every stage (stages overlap otherwise).
+        let latency = ii + fills;
+        let mean: f64 = self.layers.iter().map(|l| l.cycles as f64).sum::<f64>()
+            / self.layers.len().max(1) as f64;
+        CnnRunResult { latency_cycles: latency, ii_cycles: ii, duty: mean / ii as f64 }
+    }
+
+    /// Total parallel MAC units instantiated (Σ PE·SIMD) — the resource
+    /// driver for the LUT model.
+    pub fn total_mac_units(&self) -> u64 {
+        self.layers
+            .iter()
+            .filter_map(|l| l.folding.map(|f| f.pe as u64 * f.simd as u64))
+            .sum()
+    }
+
+    pub fn bottleneck(&self) -> &LayerSchedule {
+        self.layers.iter().max_by_key(|l| l.cycles).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::arch::{parse_arch, ARCH_MNIST};
+
+    fn mnist_pipeline(f: &[Folding]) -> CnnPipeline {
+        let arch = parse_arch(ARCH_MNIST).unwrap();
+        CnnPipeline::new(&arch, (1, 28, 28), f)
+    }
+
+    fn fold(pe: u32, simd: u32) -> Folding {
+        Folding { pe, simd }
+    }
+
+    #[test]
+    fn bottleneck_sets_ii() {
+        // conv2 has 32*32*9*784 = 7.2M MACs; with PE=32 SIMD=8 it needs
+        // 28,224 cycles and dominates everything else.
+        let p = mnist_pipeline(&[fold(8, 3), fold(32, 8), fold(10, 9), fold(10, 9)]);
+        let r = p.run();
+        assert_eq!(p.bottleneck().name, "conv1(32C3)");
+        assert_eq!(r.ii_cycles, 28_224);
+        assert!(r.latency_cycles > r.ii_cycles);
+    }
+
+    #[test]
+    fn doubling_folding_halves_bottleneck() {
+        let slow = mnist_pipeline(&[fold(8, 3), fold(16, 8), fold(10, 9), fold(10, 9)]);
+        let fast = mnist_pipeline(&[fold(8, 3), fold(32, 8), fold(10, 9), fold(10, 9)]);
+        assert_eq!(slow.run().ii_cycles, 2 * fast.run().ii_cycles);
+    }
+
+    #[test]
+    fn latency_is_input_independent_by_construction() {
+        // (Structural: run() takes no input — this asserts the duty math.)
+        let p = mnist_pipeline(&[fold(4, 9), fold(32, 9), fold(10, 9), fold(10, 9)]);
+        let r1 = p.run();
+        let r2 = p.run();
+        assert_eq!(r1.latency_cycles, r2.latency_cycles);
+        assert!(r1.duty > 0.0 && r1.duty <= 1.0);
+    }
+
+    #[test]
+    fn illegal_foldings_are_clamped() {
+        // PE > C_out and SIMD > C_in*K*K get clamped, not panicked.
+        let p = mnist_pipeline(&[fold(64, 99), fold(64, 512), fold(64, 512), fold(64, 4096)]);
+        let f = p.layers[0].folding.unwrap();
+        assert_eq!(f.pe, 32);
+        assert_eq!(f.simd, 9);
+    }
+
+    #[test]
+    fn mac_unit_total() {
+        let p = mnist_pipeline(&[fold(4, 9), fold(8, 9), fold(10, 9), fold(10, 9)]);
+        assert_eq!(p.total_mac_units(), (4 * 9 + 8 * 9 + 10 * 9 + 10 * 9) as u64);
+    }
+}

@@ -1,0 +1,18 @@
+//! FINN-style streaming-dataflow CNN accelerator simulator (§3.2).
+//!
+//! FINN instantiates one IP block per network layer — a sliding-window
+//! unit feeding a folded matrix-vector MAC array of `P_l` PEs × `Q_l`
+//! SIMD lanes — connected by self-synchronizing FIFOs.  All layers run
+//! concurrently; steady-state throughput is set by the *bottleneck* layer
+//! (the one whose folding least matches its compute intensity), and
+//! latency is input-independent — the dashed red line of Figs. 7/9/12–15.
+//!
+//! * [`dataflow`] — the folding/latency/duty model per layer and pipeline.
+//! * [`config`] — the CNN₁…CNN₁₀ design points (Tables 2/8/9) with their
+//!   published resources and our calibrated folding choices.
+
+pub mod config;
+pub mod dataflow;
+
+pub use config::CnnDesign;
+pub use dataflow::{CnnPipeline, CnnRunResult};

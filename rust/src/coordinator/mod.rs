@@ -1,0 +1,17 @@
+//! L3 coordinator: worker pool, evaluation sweeps, and the serving
+//! front-end.
+//!
+//! The paper's contribution is the hardware comparison, so the coordinator
+//! is the *experiment engine*: it shards the 1,000-image evaluation sets
+//! across a [`pool`] of std::thread workers (tokio is not in the offline
+//! vendor set), runs the functional SNN simulation once per image, and
+//! replays each design point's timing/energy model against the shared
+//! event streams ([`sweep`]).  [`serve`] is the deployment-shaped
+//! front-end: a batching request router whose classification path executes
+//! the AOT-compiled PJRT artifacts — Python never runs at request time.
+
+pub mod pool;
+pub mod serve;
+pub mod sweep;
+
+pub use sweep::{cnn_metrics, snn_sweep, CnnMetrics, SampleMetrics, SnnSweep};

@@ -1,0 +1,84 @@
+//! Scoped worker pool: parallel map over a shared work list.
+//!
+//! Built on `std::thread::scope` + an atomic work index (work stealing by
+//! chunk), so borrowed data needs no `Arc` gymnastics.  This is the
+//! parallel substrate for every 1,000-image sweep.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers: `SPIKEBENCH_WORKERS` env or available parallelism.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("SPIKEBENCH_WORKERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every index in `0..n` on `workers` threads; results are
+/// returned in index order.
+pub fn parallel_map<R, F>(n: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let workers = workers.clamp(1, n.max(1));
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap().expect("worker skipped item")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check_default;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    /// Property: result equals the sequential map for arbitrary sizes and
+    /// worker counts (the routing invariant: every item exactly once).
+    #[test]
+    fn equals_sequential_map() {
+        check_default("parallel == sequential", |r| {
+            let n = r.below(200);
+            let w = 1 + r.below(16);
+            let par = parallel_map(n, w, |i| 3 * i + 1);
+            let seq: Vec<usize> = (0..n).map(|i| 3 * i + 1).collect();
+            if par != seq {
+                return Err(format!("mismatch at n={n}, workers={w}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn workers_share_borrowed_data() {
+        let data: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(10, 4, |i| data.iter().skip(i * 100).take(100).sum::<u64>());
+        assert_eq!(out.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+}

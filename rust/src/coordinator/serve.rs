@@ -1,0 +1,294 @@
+//! Serving front-end: a batching request router over the PJRT artifacts.
+//!
+//! Deployment-shaped view of the comparison: clients submit images; the
+//! router batches them (size- or timeout-bound), executes the AOT-compiled
+//! model for the *functional* result — PJRT on the request path, Python
+//! nowhere — and attaches the accelerator cost estimate (latency + energy
+//! the configured FPGA design would have spent) from the cycle simulator.
+//!
+//! The PJRT client is not `Send`, so the runtime lives on one dedicated
+//! executor thread that owns it; the batcher feeds it through a channel.
+//! That matches the hardware reality anyway: one FPGA, one queue.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::fpga::device::Device;
+use crate::nn::network::{argmax, Network};
+use crate::nn::tensor::Tensor3;
+use crate::snn::accelerator::SnnAccelerator;
+use crate::snn::config::SnnDesign;
+
+/// Which accelerator the request should be costed against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Snn,
+    Cnn,
+}
+
+/// One classification response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub predicted: usize,
+    pub logits: Vec<f32>,
+    /// Wall-clock service time in this process (queue + execute).
+    pub service_time: Duration,
+    /// Estimated latency on the simulated FPGA design (seconds).
+    pub accel_latency_s: f64,
+    /// Estimated energy per classification on the design (J).
+    pub accel_energy_j: f64,
+    /// Batch this request was served in.
+    pub batch_size: usize,
+}
+
+/// The functional executor owned by the runtime thread.
+pub trait InferenceBackend: Send {
+    fn classify(&mut self, x: &Tensor3) -> Result<Vec<f32>>;
+}
+
+/// PJRT-based backend (the production path).
+pub struct PjrtBackend {
+    pub runtime: crate::runtime::Runtime,
+    pub hlo: std::path::PathBuf,
+}
+
+// The xla client lives on the executor thread only; the wrapper is moved
+// there exactly once at server start.
+unsafe impl Send for PjrtBackend {}
+
+impl InferenceBackend for PjrtBackend {
+    fn classify(&mut self, x: &Tensor3) -> Result<Vec<f32>> {
+        self.runtime.load(&self.hlo)?;
+        self.runtime.run_cnn(&self.hlo, x)
+    }
+}
+
+/// Pure-Rust fallback backend (tests / artifact-less runs).
+pub struct NetworkBackend {
+    pub net: Network,
+}
+
+impl InferenceBackend for NetworkBackend {
+    fn classify(&mut self, x: &Tensor3) -> Result<Vec<f32>> {
+        Ok(self.net.forward(x))
+    }
+}
+
+/// Server configuration.
+pub struct ServeConfig {
+    pub backend_kind: Backend,
+    /// Max requests folded into one executor batch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch.
+    pub batch_timeout: Duration,
+    /// SNN design used for hardware-cost estimates (and its net).
+    pub snn_design: SnnDesign,
+    pub snn_net: Network,
+    pub t_steps: usize,
+    pub v_th: f32,
+    pub device: Device,
+}
+
+struct Job {
+    x: Tensor3,
+    enqueued: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+/// A running server; drop or call [`Server::shutdown`] to stop.
+pub struct Server {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<ServerStats>>,
+}
+
+/// Aggregate statistics reported at shutdown.
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub served: usize,
+    pub batches: usize,
+    pub max_batch_seen: usize,
+}
+
+impl Server {
+    /// Start the executor thread.
+    pub fn start(mut backend: Box<dyn InferenceBackend>, cfg: ServeConfig) -> Server {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let handle = std::thread::spawn(move || {
+            let mut stats = ServerStats::default();
+            loop {
+                // Block for the first job of a batch.
+                let first = match rx.recv() {
+                    Ok(j) => j,
+                    Err(_) => break,
+                };
+                let mut batch = vec![first];
+                let deadline = Instant::now() + cfg.batch_timeout;
+                while batch.len() < cfg.max_batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(j) => batch.push(j),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                let bs = batch.len();
+                stats.batches += 1;
+                stats.max_batch_seen = stats.max_batch_seen.max(bs);
+                for job in batch {
+                    let logits = backend.classify(&job.x).unwrap_or_default();
+                    let (lat, energy) = match cfg.backend_kind {
+                        Backend::Snn => {
+                            let acc = SnnAccelerator::new(
+                                &cfg.snn_design,
+                                &cfg.snn_net,
+                                cfg.t_steps,
+                                cfg.v_th,
+                            );
+                            let r = acc.run(&job.x, &cfg.device);
+                            (r.latency_s, r.energy_j)
+                        }
+                        Backend::Cnn => (0.0, 0.0), // filled by caller's CnnMetrics
+                    };
+                    let resp = Response {
+                        predicted: if logits.is_empty() { usize::MAX } else { argmax(&logits) },
+                        logits,
+                        service_time: job.enqueued.elapsed(),
+                        accel_latency_s: lat,
+                        accel_energy_j: energy,
+                        batch_size: bs,
+                    };
+                    stats.served += 1;
+                    let _ = job.reply.send(resp);
+                }
+            }
+            stats
+        });
+        Server { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Submit one image and wait for the response.
+    pub fn classify(&self, x: Tensor3) -> Result<Response> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server stopped")
+            .send(Job { x, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("server executor gone"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("executor dropped reply"))
+    }
+
+    /// Submit asynchronously; returns the reply channel.
+    pub fn classify_async(&self, x: Tensor3) -> Result<mpsc::Receiver<Response>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server stopped")
+            .send(Job { x, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("server executor gone"))?;
+        Ok(reply_rx)
+    }
+
+    /// Stop and return aggregate stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        drop(self.tx.take());
+        self.handle.take().map(|h| h.join().unwrap_or_default()).unwrap_or_default()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::PYNQ_Z1;
+    use crate::fpga::resources::{MemoryVariant, SnnDesignParams};
+    use crate::nn::arch::parse_arch;
+    use crate::nn::conv::ConvWeights;
+    use crate::nn::dense::DenseWeights;
+    use crate::nn::network::LayerWeights;
+
+    fn tiny_net() -> Network {
+        let arch = parse_arch("2C3-2").unwrap();
+        Network {
+            arch,
+            layers: vec![
+                LayerWeights::Conv(ConvWeights::new(2, 1, 3, vec![0.25; 18], vec![0.0; 2])),
+                LayerWeights::Dense(DenseWeights::new(2, 18, vec![0.1; 36], vec![0.0, 0.5])),
+            ],
+            input_shape: (1, 3, 3),
+        }
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            backend_kind: Backend::Snn,
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(5),
+            snn_design: SnnDesign {
+                name: "serve-test",
+                dataset: "mnist",
+                params: SnnDesignParams {
+                    p: 2,
+                    d_aeq: 64,
+                    w_mem: 8,
+                    kernel: 3,
+                    d_mem: 256,
+                    variant: MemoryVariant::Bram,
+                },
+                published: None,
+                published_zcu102: None,
+            },
+            snn_net: tiny_net(),
+            t_steps: 4,
+            v_th: 1.0,
+            device: PYNQ_Z1,
+        }
+    }
+
+    #[test]
+    fn serves_and_matches_direct_forward() {
+        let net = tiny_net();
+        let server = Server::start(Box::new(NetworkBackend { net: tiny_net() }), cfg());
+        let x = Tensor3::from_vec(1, 3, 3, vec![0.9; 9]);
+        let resp = server.classify(x.clone()).unwrap();
+        assert_eq!(resp.predicted, argmax(&net.forward(&x)));
+        assert!(resp.accel_latency_s > 0.0);
+        assert!(resp.accel_energy_j > 0.0);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let server = Server::start(Box::new(NetworkBackend { net: tiny_net() }), cfg());
+        let mut rxs = Vec::new();
+        for _ in 0..8 {
+            rxs.push(server.classify_async(Tensor3::from_vec(1, 3, 3, vec![0.8; 9])).unwrap());
+        }
+        let responses: Vec<Response> = rxs.into_iter().map(|r| r.recv().unwrap()).collect();
+        assert_eq!(responses.len(), 8);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 8);
+        // With max_batch 4 and all requests in flight, batching kicked in.
+        assert!(stats.batches <= 8);
+        assert!(stats.max_batch_seen >= 1);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_under_drop() {
+        let server = Server::start(Box::new(NetworkBackend { net: tiny_net() }), cfg());
+        drop(server); // must not hang or panic
+    }
+}

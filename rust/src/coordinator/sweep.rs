@@ -1,0 +1,248 @@
+//! Evaluation-set sweeps: the data behind every histogram in the paper.
+//!
+//! For each image the functional m-TTFS simulation runs **once**; every
+//! SNN design point then replays its timing/energy model against the same
+//! event streams (the functional result is design-independent — Sommer's
+//! P only changes *when* events are processed, not *which*).  This is the
+//! coordinator's main batching trick: a five-design sweep costs one
+//! functional pass, not five.
+
+use crate::cnn_accel::config::CnnDesign;
+use crate::fpga::device::Device;
+use crate::fpga::power::{Activity, DesignFamily, PowerBreakdown, PowerEstimator};
+use crate::nn::network::Network;
+use crate::nn::snn::snn_infer;
+use crate::nn::tensor::Tensor3;
+use crate::nn::arch::parse_arch;
+use crate::snn::accelerator::SnnAccelerator;
+use crate::snn::config::SnnDesign;
+use crate::data::EvalSet;
+
+use super::pool::{default_workers, parallel_map};
+
+/// Per-sample metrics of one design on one input.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleMetrics {
+    pub label: usize,
+    pub predicted: usize,
+    pub cycles: u64,
+    pub latency_s: f64,
+    pub power_w: f64,
+    /// Vector-based power split (the Table 4 categories).
+    pub power: PowerBreakdown,
+    pub energy_j: f64,
+    pub fps_per_watt: f64,
+    pub total_spikes: u64,
+    pub aeq_overflows: u64,
+}
+
+/// A design's sweep over an evaluation set.
+#[derive(Debug, Clone)]
+pub struct SnnSweep {
+    pub design_name: String,
+    pub device_name: String,
+    pub samples: Vec<SampleMetrics>,
+}
+
+impl SnnSweep {
+    pub fn accuracy(&self) -> f64 {
+        let ok = self.samples.iter().filter(|s| s.predicted == s.label).count();
+        ok as f64 / self.samples.len().max(1) as f64
+    }
+
+    pub fn collect<F: Fn(&SampleMetrics) -> f64>(&self, f: F) -> Vec<f64> {
+        self.samples.iter().map(f).collect()
+    }
+
+    pub fn min_max<F: Fn(&SampleMetrics) -> f64>(&self, f: F) -> (f64, f64) {
+        let v = self.collect(f);
+        let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        (lo, hi)
+    }
+}
+
+/// Sweep several SNN designs over `n` images of the evaluation set (one
+/// functional pass per image, shared across designs).
+///
+/// Returns one [`SnnSweep`] per (design, device) pair, in input order.
+pub fn snn_sweep(
+    net: &Network,
+    designs: &[&SnnDesign],
+    devices: &[&Device],
+    eval: &EvalSet,
+    t_steps: usize,
+    v_th: f32,
+    n: usize,
+) -> Vec<SnnSweep> {
+    let n = n.min(eval.len());
+    let workers = default_workers();
+    // Per-image: functional sim once, replay per design × device.
+    let per_image: Vec<Vec<SampleMetrics>> = parallel_map(n, workers, |i| {
+        let x: &Tensor3 = &eval.images[i];
+        let functional = snn_infer(net, x, t_steps, v_th);
+        let mut out = Vec::with_capacity(designs.len() * devices.len());
+        for design in designs {
+            let acc = SnnAccelerator::new(design, net, t_steps, v_th);
+            for device in devices {
+                let r = acc.replay(&functional, device);
+                out.push(SampleMetrics {
+                    label: eval.labels[i],
+                    predicted: r.predicted,
+                    cycles: r.cycles,
+                    latency_s: r.latency_s,
+                    power_w: r.power.total(),
+                    power: r.power,
+                    energy_j: r.energy_j,
+                    fps_per_watt: r.fps_per_watt(),
+                    total_spikes: r.total_spikes,
+                    aeq_overflows: r.aeq_overflows,
+                });
+            }
+        }
+        out
+    });
+
+    let mut sweeps: Vec<SnnSweep> = designs
+        .iter()
+        .flat_map(|d| {
+            devices.iter().map(|dev| SnnSweep {
+                design_name: d.name.to_string(),
+                device_name: dev.name.to_string(),
+                samples: Vec::with_capacity(n),
+            })
+        })
+        .collect();
+    for row in per_image {
+        for (k, m) in row.into_iter().enumerate() {
+            sweeps[k].samples.push(m);
+        }
+    }
+    sweeps
+}
+
+/// Input-independent metrics of a CNN design (the dashed red lines).
+#[derive(Debug, Clone, Copy)]
+pub struct CnnMetrics {
+    pub latency_cycles: u64,
+    pub latency_s: f64,
+    pub power: PowerBreakdown,
+    pub energy_j: f64,
+    pub fps_per_watt: f64,
+    pub duty: f64,
+}
+
+/// Compute a CNN design's metrics on a device (vector-based mode differs
+/// from vector-less only through the pipeline duty; the paper measured
+/// < 0.01 W of input dependence, which we treat as zero).
+pub fn cnn_metrics(design: &CnnDesign, input_shape: (usize, usize, usize), arch_s: &str, device: &Device) -> CnnMetrics {
+    let arch = parse_arch(arch_s).expect("bad arch string");
+    let run = design.pipeline(&arch, input_shape).run();
+    let est = PowerEstimator::new(*device, DesignFamily::Cnn);
+    let power = est.estimate(&design.resources(), Activity::cnn_duty(run.duty));
+    let latency_s = run.latency_cycles as f64 * device.period_s();
+    // Steady-state throughput is II-bound, not latency-bound.
+    let fps = 1.0 / (run.ii_cycles as f64 * device.period_s());
+    CnnMetrics {
+        latency_cycles: run.latency_cycles,
+        latency_s,
+        power,
+        energy_j: power.total() * run.ii_cycles as f64 * device.period_s(),
+        fps_per_watt: fps / power.total(),
+        duty: run.duty,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::PYNQ_Z1;
+    use crate::fpga::resources::{MemoryVariant, SnnDesignParams};
+    use crate::nn::conv::ConvWeights;
+    use crate::nn::dense::DenseWeights;
+    use crate::nn::network::LayerWeights;
+    use crate::util::rng::Rng;
+
+    fn tiny_net() -> Network {
+        let arch = parse_arch("2C3-2").unwrap();
+        Network {
+            arch,
+            layers: vec![
+                LayerWeights::Conv(ConvWeights::new(2, 1, 3, vec![0.25; 18], vec![0.0; 2])),
+                LayerWeights::Dense(DenseWeights::new(2, 50, vec![0.04; 100], vec![0.0; 2])),
+            ],
+            input_shape: (1, 5, 5),
+        }
+    }
+
+    fn tiny_eval(n: usize) -> EvalSet {
+        let mut rng = Rng::new(1);
+        let images = (0..n)
+            .map(|_| {
+                Tensor3::from_vec(1, 5, 5, (0..25).map(|_| rng.f32()).collect())
+            })
+            .collect();
+        EvalSet { images, labels: vec![0; n] }
+    }
+
+    fn design(p: u32) -> SnnDesign {
+        SnnDesign {
+            name: "sweep-test",
+            dataset: "mnist",
+            params: SnnDesignParams {
+                p,
+                d_aeq: 64,
+                w_mem: 8,
+                kernel: 3,
+                d_mem: 256,
+                variant: MemoryVariant::Bram,
+            },
+            published: None,
+            published_zcu102: None,
+        }
+    }
+
+    #[test]
+    fn sweep_shares_functional_pass_across_designs() {
+        let net = tiny_net();
+        let eval = tiny_eval(16);
+        let d1 = design(1);
+        let d4 = design(4);
+        let sweeps =
+            snn_sweep(&net, &[&d1, &d4], &[&PYNQ_Z1], &eval, 4, 1.0, 16);
+        assert_eq!(sweeps.len(), 2);
+        assert_eq!(sweeps[0].samples.len(), 16);
+        // Same functional pass -> identical spike counts and predictions.
+        for (a, b) in sweeps[0].samples.iter().zip(&sweeps[1].samples) {
+            assert_eq!(a.total_spikes, b.total_spikes);
+            assert_eq!(a.predicted, b.predicted);
+            // But P=4 is faster.
+            assert!(b.cycles <= a.cycles);
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_worker_counts() {
+        let net = tiny_net();
+        let eval = tiny_eval(12);
+        let d = design(2);
+        std::env::set_var("SPIKEBENCH_WORKERS", "1");
+        let s1 = snn_sweep(&net, &[&d], &[&PYNQ_Z1], &eval, 4, 1.0, 12);
+        std::env::set_var("SPIKEBENCH_WORKERS", "7");
+        let s7 = snn_sweep(&net, &[&d], &[&PYNQ_Z1], &eval, 4, 1.0, 12);
+        std::env::remove_var("SPIKEBENCH_WORKERS");
+        for (a, b) in s1[0].samples.iter().zip(&s7[0].samples) {
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.energy_j, b.energy_j);
+        }
+    }
+
+    #[test]
+    fn cnn_metrics_are_input_independent_and_finite() {
+        let d = crate::cnn_accel::config::by_name("CNN4").unwrap();
+        let m = cnn_metrics(&d, (1, 28, 28), crate::nn::arch::ARCH_MNIST, &PYNQ_Z1);
+        assert!(m.latency_cycles > 30_000 && m.latency_cycles < 50_000);
+        assert!(m.power.total() > 0.05 && m.power.total() < 0.3);
+        assert!(m.fps_per_watt.is_finite());
+    }
+}

@@ -1,0 +1,115 @@
+//! Evaluation-set and spike-trace loading from `artifacts/`.
+//!
+//! The 1,000-image evaluation sets driving the latency/energy histograms
+//! (Figs. 7, 9, 12–15) are generated once in Python (synthetic look-alike
+//! datasets, see DESIGN.md §1) and exported as SBT1 blobs; this module
+//! loads them into [`Tensor3`] samples.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::nn::tensor::Tensor3;
+use crate::util::tensorfile::read_tensors;
+
+/// A labelled evaluation set.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub images: Vec<Tensor3>,
+    pub labels: Vec<usize>,
+}
+
+impl EvalSet {
+    /// Load `{ds}_eval.bin` (tensors `images` [N,C,H,W] + `labels` [N]).
+    pub fn load(path: &Path) -> Result<EvalSet> {
+        let tensors = read_tensors(path)?;
+        let images = tensors.get("images").ok_or_else(|| anyhow!("missing 'images'"))?;
+        let labels = tensors.get("labels").ok_or_else(|| anyhow!("missing 'labels'"))?;
+        if images.dims.len() != 4 {
+            bail!("images must be rank 4, got {:?}", images.dims);
+        }
+        let (n, c, h, w) = (images.dims[0], images.dims[1], images.dims[2], images.dims[3]);
+        let data = images.as_f32()?;
+        let stride = c * h * w;
+        let imgs = (0..n)
+            .map(|i| Tensor3::from_vec(c, h, w, data[i * stride..(i + 1) * stride].to_vec()))
+            .collect();
+        let labels = labels.as_i32()?.iter().map(|&l| l as usize).collect();
+        Ok(EvalSet { images: imgs, labels })
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+/// Python-side SNN trace for one sample (cross-validation golden data).
+#[derive(Debug, Clone)]
+pub struct SnnTrace {
+    pub logits: Vec<f32>,
+    pub counts: Vec<f64>,
+    /// `maps[t][l]` = spike map of layer `l` (0 = input) at step `t`.
+    pub maps: Vec<Vec<Tensor3>>,
+}
+
+/// All traces in `{ds}_traces.bin`.
+#[derive(Debug, Clone)]
+pub struct TraceFile {
+    pub t_steps: usize,
+    pub traces: Vec<SnnTrace>,
+}
+
+impl TraceFile {
+    pub fn load(path: &Path) -> Result<TraceFile> {
+        let tensors = read_tensors(path)?;
+        let t_steps =
+            tensors.get("meta/t_steps").ok_or_else(|| anyhow!("missing meta/t_steps"))?.as_i32()?[0]
+                as usize;
+        let n_samples = tensors
+            .get("meta/n_samples")
+            .ok_or_else(|| anyhow!("missing meta/n_samples"))?
+            .as_i32()?[0] as usize;
+        let mut traces = Vec::with_capacity(n_samples);
+        for s in 0..n_samples {
+            let logits = tensors
+                .get(&format!("s{s}/logits"))
+                .ok_or_else(|| anyhow!("missing s{s}/logits"))?
+                .as_f32()?
+                .to_vec();
+            let counts = tensors
+                .get(&format!("s{s}/counts"))
+                .ok_or_else(|| anyhow!("missing s{s}/counts"))?
+                .as_f32()?
+                .iter()
+                .map(|&v| v as f64)
+                .collect();
+            let mut maps = Vec::with_capacity(t_steps);
+            for t in 0..t_steps {
+                let mut step = Vec::new();
+                for l in 0.. {
+                    let key = format!("s{s}/t{t}/l{l}");
+                    match tensors.get(&key) {
+                        None => break,
+                        Some(tns) => {
+                            let (c, h, w) = match tns.dims.len() {
+                                3 => (tns.dims[0], tns.dims[1], tns.dims[2]),
+                                1 => (tns.dims[0], 1, 1),
+                                d => bail!("{key}: unexpected rank {d}"),
+                            };
+                            let data: Vec<f32> =
+                                tns.as_u8()?.iter().map(|&b| b as f32).collect();
+                            step.push(Tensor3::from_vec(c, h, w, data));
+                        }
+                    }
+                }
+                maps.push(step);
+            }
+            traces.push(SnnTrace { logits, counts, maps });
+        }
+        Ok(TraceFile { t_steps, traces })
+    }
+}

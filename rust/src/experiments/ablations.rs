@@ -1,0 +1,271 @@
+//! Ablation studies beyond the paper's published tables — the design-
+//! choice questions DESIGN.md calls out, answerable because the simulator
+//! exposes every knob the VHDL generics did:
+//!
+//! * `parallelization` — P = 1…16 sweep: latency/energy scaling and where
+//!   the threshold-scan floor caps the speedup (the paper tests P up to
+//!   16 but reports only selected points).
+//! * `aeq_depth` — queue sizing: observed per-bank high-water occupancy vs
+//!   the configured D for every design (how much margin the Table 3
+//!   depths actually have, and where overflow would set in).
+//! * `timesteps` — accuracy / latency / energy vs the number of
+//!   algorithmic time steps T (the paper fixes T=4; our conversion runs
+//!   at T=6 — this quantifies that trade).
+//! * `encoding` — compressed vs original event widths across feature-map
+//!   sizes, including the Eq. 7 fallback cases.
+
+use anyhow::Result;
+
+use crate::fpga::device::PYNQ_Z1;
+use crate::fpga::resources::{MemoryVariant, SnnDesignParams};
+use crate::nn::loader::{load_network, WeightKind};
+use crate::nn::snn::snn_infer;
+use crate::snn::accelerator::SnnAccelerator;
+use crate::snn::config::SnnDesign;
+use crate::snn::encoding::{Encoder, Encoding};
+use crate::util::table::{f, thousands, Table};
+
+use super::ctx::Ctx;
+
+/// P = 1…16 scaling sweep on MNIST.
+pub fn parallelization(ctx: &mut Ctx, n: usize) -> Result<String> {
+    let info = ctx.info("mnist")?.clone();
+    ctx.snn_net("mnist")?;
+    ctx.eval("mnist")?;
+    let net = ctx.snn_net("mnist")?.clone();
+    let eval = ctx.eval("mnist")?.clone();
+    let n = n.min(eval.len()).max(16);
+
+    let mut t = Table::new(
+        "Ablation — parallelization factor P (MNIST, PYNQ-Z1, BRAM variant)",
+        &["P", "mean cycles", "speedup vs P=1", "mean power [W]", "mean energy [mJ]", "mean FPS/W"],
+    );
+    let mut base_cycles = 0.0;
+    for p in [1u32, 2, 4, 8, 16] {
+        let design = SnnDesign {
+            name: "ablation",
+            dataset: "mnist",
+            params: SnnDesignParams {
+                p,
+                d_aeq: (6100 / p).max(256),
+                w_mem: 8,
+                kernel: 3,
+                d_mem: 256,
+                variant: MemoryVariant::Bram,
+            },
+            published: None,
+            published_zcu102: None,
+        };
+        let acc = SnnAccelerator::new(&design, &net, info.t_steps, info.v_th);
+        let results: Vec<_> = crate::coordinator::pool::parallel_map(
+            n,
+            crate::coordinator::pool::default_workers(),
+            |i| acc.run(&eval.images[i], &PYNQ_Z1),
+        );
+        let mean = |g: &dyn Fn(&crate::snn::accelerator::SnnRunResult) -> f64| {
+            results.iter().map(|r| g(r)).sum::<f64>() / results.len() as f64
+        };
+        let cycles = mean(&|r| r.cycles as f64);
+        if p == 1 {
+            base_cycles = cycles;
+        }
+        t.row(vec![
+            p.to_string(),
+            thousands(cycles as u64),
+            format!("{:.2}x", base_cycles / cycles),
+            f(mean(&|r| r.power.total()), 3),
+            f(mean(&|r| r.energy_j * 1e3), 4),
+            format!("{:.0}", mean(&|r| r.fps_per_watt())),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(
+        "\nSpeedup saturates below linear once the threshold-scan floor\n\
+         (neurons / (P*K^2) per step) dominates over event processing —\n\
+         the same reason the paper's best FPS/W sits at P=8, not P=16.\n",
+    );
+    Ok(out)
+}
+
+/// AEQ depth sizing: high-water occupancy vs configured D.
+pub fn aeq_depth(ctx: &mut Ctx, n: usize) -> Result<String> {
+    let mut t = Table::new(
+        "Ablation — AEQ depth sizing (per-bank high-water over real inputs)",
+        &["Design", "dataset", "configured D", "max high-water", "margin", "overflows"],
+    );
+    for name in ["SNN4_BRAM", "SNN8_BRAM", "SNN8_SVHN", "SNN8_CIFAR"] {
+        let design = crate::snn::config::by_name(name).unwrap();
+        let ds = design.dataset;
+        let info = ctx.info(ds)?.clone();
+        ctx.snn_net(ds)?;
+        ctx.eval(ds)?;
+        let net = ctx.snn_net(ds)?.clone();
+        let eval = ctx.eval(ds)?.clone();
+        let n = n.min(eval.len());
+        let acc = SnnAccelerator::new(&design, &net, info.t_steps, info.v_th);
+        let results: Vec<_> = crate::coordinator::pool::parallel_map(
+            n,
+            crate::coordinator::pool::default_workers(),
+            |i| acc.run(&eval.images[i], &PYNQ_Z1),
+        );
+        let hw = results.iter().map(|r| r.aeq_high_water).max().unwrap_or(0);
+        let overflows: u64 = results.iter().map(|r| r.aeq_overflows).sum();
+        let d = design.params.d_aeq;
+        t.row(vec![
+            name.into(),
+            ds.into(),
+            d.to_string(),
+            hw.to_string(),
+            format!("{:.1}x", d as f64 / hw.max(1) as f64),
+            overflows.to_string(),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str("\nAll Table 3/8/9 depths hold with margin on our workloads; the margin\nis what the compressed encoding converts into BRAM savings (§5.2).\n");
+    Ok(out)
+}
+
+/// Accuracy / latency / energy vs algorithmic time steps T.
+pub fn timesteps(ctx: &mut Ctx, n: usize) -> Result<String> {
+    let info = ctx.info("mnist")?.clone();
+    let net = load_network(&ctx.manifest, "mnist", WeightKind::Snn)?;
+    let eval = ctx.eval("mnist")?.clone();
+    let n = n.min(eval.len()).max(32);
+    let design = crate::snn::config::by_name("SNN8_COMPR.").unwrap();
+
+    let mut t = Table::new(
+        "Ablation — algorithmic time steps T (MNIST, SNN8_COMPR.)",
+        &["T", "accuracy", "mean spikes", "mean cycles", "mean energy [mJ]"],
+    );
+    for t_steps in [2usize, 4, 6, 8, 10] {
+        let acc_sim = SnnAccelerator::new(&design, &net, t_steps, info.v_th);
+        let results: Vec<_> = crate::coordinator::pool::parallel_map(
+            n,
+            crate::coordinator::pool::default_workers(),
+            |i| {
+                let r = acc_sim.run(&eval.images[i], &PYNQ_Z1);
+                (r.predicted == eval.labels[i], r.total_spikes, r.cycles, r.energy_j)
+            },
+        );
+        let acc = results.iter().filter(|r| r.0).count() as f64 / n as f64;
+        let spikes = results.iter().map(|r| r.1 as f64).sum::<f64>() / n as f64;
+        let cycles = results.iter().map(|r| r.2 as f64).sum::<f64>() / n as f64;
+        let energy = results.iter().map(|r| r.3 * 1e3).sum::<f64>() / n as f64;
+        t.row(vec![
+            t_steps.to_string(),
+            format!("{:.1}%", acc * 100.0),
+            format!("{spikes:.0}"),
+            thousands(cycles as u64),
+            f(energy, 4),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str("\nAccuracy saturates around T=6 for our conversion while latency and\nenergy keep growing ~linearly in T — the paper's T=4 choice is the\nsame trade taken one step earlier on its snntoolbox conversion.\n");
+    Ok(out)
+}
+
+/// Event-width comparison across feature-map sizes (Eq. 6/7).
+pub fn encoding(_ctx: &mut Ctx, _n: usize) -> Result<String> {
+    let mut t = Table::new(
+        "Ablation — spike-event widths, original vs compressed (K=3)",
+        &["map W", "windows", "orig bits", "compr bits", "queue words/BRAM orig", "compr", "note"],
+    );
+    for w in [9u32, 10, 12, 24, 28, 32, 48, 96] {
+        let orig = Encoder::new(Encoding::Original, w, 3);
+        let comp = Encoder::new(Encoding::Compressed, w, 3);
+        let note = if !comp.compression_feasible() {
+            "Eq. 7 fallback"
+        } else if crate::fpga::bram::words_per_bram(comp.event_bits())
+            > crate::fpga::bram::words_per_bram(orig.event_bits())
+        {
+            "capacity gain"
+        } else {
+            ""
+        };
+        t.row(vec![
+            w.to_string(),
+            orig.windows().to_string(),
+            orig.event_bits().to_string(),
+            comp.event_bits().to_string(),
+            crate::fpga::bram::words_per_bram(orig.event_bits()).to_string(),
+            crate::fpga::bram::words_per_bram(comp.event_bits()).to_string(),
+            note.into(),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str("\nCompression pays exactly when it crosses an Eq. 3 aspect-ratio\nthreshold (10->8 bits doubles queue capacity for the MNIST maps);\nW/K just below a power of two triggers the Eq. 7 fallback.\n");
+    Ok(out)
+}
+
+/// m-TTFS vs rate coding: the §2.1.2 / Table 1 design axis, quantified.
+/// Rate-coded IF neurons (Eq. 1 with reset) fire repeatedly, so the event
+/// traffic — the quantity the whole sparse architecture bills by —
+/// multiplies, which is exactly why the Sommer design (and this paper)
+/// use a TTFS-family code.
+pub fn encoding_mode(ctx: &mut Ctx, n: usize) -> Result<String> {
+    use crate::nn::snn::{snn_infer_mode, SnnMode};
+    let info = ctx.info("mnist")?.clone();
+    let net = load_network(&ctx.manifest, "mnist", WeightKind::Snn)?;
+    let eval = ctx.eval("mnist")?.clone();
+    let n = n.min(eval.len()).max(32);
+    let design = crate::snn::config::by_name("SNN8_COMPR.").unwrap();
+
+    let mut t = Table::new(
+        "Ablation — spike encoding: m-TTFS (slope) vs rate coding (MNIST, SNN8)",
+        &["mode", "T", "accuracy", "mean events", "mean cycles", "mean energy [mJ]"],
+    );
+    for (mode, label, t_steps) in [
+        (SnnMode::MTtfs, "m-TTFS", info.t_steps),
+        (SnnMode::Rate, "rate", info.t_steps),
+        (SnnMode::Rate, "rate", 2 * info.t_steps),
+    ] {
+        let acc_sim = SnnAccelerator::new(&design, &net, t_steps, info.v_th);
+        let results: Vec<_> = crate::coordinator::pool::parallel_map(
+            n,
+            crate::coordinator::pool::default_workers(),
+            |i| {
+                let functional = snn_infer_mode(&net, &eval.images[i], t_steps, info.v_th, mode);
+                let r = acc_sim.replay(&functional, &PYNQ_Z1);
+                (r.predicted == eval.labels[i], r.total_spikes, r.cycles, r.energy_j)
+            },
+        );
+        let acc = results.iter().filter(|r| r.0).count() as f64 / n as f64;
+        let events = results.iter().map(|r| r.1 as f64).sum::<f64>() / n as f64;
+        let cycles = results.iter().map(|r| r.2 as f64).sum::<f64>() / n as f64;
+        let energy = results.iter().map(|r| r.3 * 1e3).sum::<f64>() / n as f64;
+        t.row(vec![
+            label.into(),
+            t_steps.to_string(),
+            format!("{:.1}%", acc * 100.0),
+            format!("{events:.0}"),
+            thousands(cycles as u64),
+            f(energy, 4),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str("\nRate coding re-fires neurons every step, multiplying queue traffic\nand therefore latency + energy on the event-billed architecture —\nthe quantitative version of the paper's Table 1 encoding taxonomy.\n");
+    Ok(out)
+}
+
+/// Ablation registry (separate from the paper tables/figures).
+pub fn registry() -> Vec<(&'static str, &'static str, fn(&mut Ctx, usize) -> Result<String>)> {
+    vec![
+        ("parallelization", "P = 1..16 scaling sweep", parallelization),
+        ("aeq-depth", "AEQ depth vs observed occupancy", aeq_depth),
+        ("timesteps", "accuracy/latency/energy vs T", timesteps),
+        ("encoding", "event widths across map sizes", encoding),
+        ("encoding-mode", "m-TTFS vs rate coding", encoding_mode),
+    ]
+}
+
+pub fn run(id: &str, ctx: &mut Ctx, n: usize) -> Result<String> {
+    let reg = registry();
+    let (_, _, f) = reg
+        .iter()
+        .find(|(name, _, _)| name.eq_ignore_ascii_case(id))
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown ablation {id} (have: {:?})",
+            reg.iter().map(|(n, _, _)| *n).collect::<Vec<_>>()
+        ))?;
+    f(ctx, n)
+}

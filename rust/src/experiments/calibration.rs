@@ -1,0 +1,99 @@
+//! Calibration verification: the fitted power coefficients must keep
+//! reproducing the paper's anchor rows (DESIGN.md §6).
+//!
+//! If a coefficient in `fpga::device` is edited, these checks quantify
+//! the drift: every anchor row's *total* vector-less power must stay
+//! within tolerance of the published value.  (Per-category residuals are
+//! larger — the fit trades them against each other — so the contract is
+//! on totals, the quantity every downstream energy/FPS-W figure uses.)
+
+use crate::fpga::device::{Device, PYNQ_Z1, ZCU102};
+use crate::fpga::power::{Activity, DesignFamily, PowerEstimator};
+use crate::fpga::resources::ResourceUsage;
+
+/// One anchor: published resources + published vector-less total power.
+pub struct Anchor {
+    pub name: &'static str,
+    pub device: &'static Device,
+    pub family: DesignFamily,
+    pub luts: u32,
+    pub regs: u32,
+    pub brams: f64,
+    /// CNN pipeline duty at the anchor (1.0 for SNN rows).
+    pub duty: f64,
+    pub total_w: f64,
+}
+
+/// Anchor rows from Tables 7, 8 and 9 (vector-less power).
+pub fn anchors() -> Vec<Anchor> {
+    let snn = DesignFamily::Snn;
+    let cnn = DesignFamily::Cnn;
+    let p = &PYNQ_Z1;
+    let z = &ZCU102;
+    vec![
+        // Table 7 (PYNQ, MNIST)
+        Anchor { name: "SNN4_BRAM", device: p, family: snn, luts: 4_967, regs: 5_019, brams: 76.0, duty: 1.0, total_w: 0.283 },
+        Anchor { name: "SNN4_LUTRAM", device: p, family: snn, luts: 9_256, regs: 5_669, brams: 40.0, duty: 1.0, total_w: 0.242 },
+        Anchor { name: "SNN4_COMPR.", device: p, family: snn, luts: 9_436, regs: 5_669, brams: 22.0, duty: 1.0, total_w: 0.200 },
+        Anchor { name: "SNN8_BRAM", device: p, family: snn, luts: 9_649, regs: 9_738, brams: 116.0, duty: 1.0, total_w: 0.480 },
+        Anchor { name: "SNN8_LUTRAM", device: p, family: snn, luts: 18_311, regs: 11_080, brams: 44.0, duty: 1.0, total_w: 0.405 },
+        Anchor { name: "CNN4", device: p, family: cnn, luts: 20_368, regs: 26_886, brams: 14.5, duty: 0.22, total_w: 0.122 },
+        Anchor { name: "CNN5", device: p, family: cnn, luts: 16_793, regs: 17_810, brams: 11.0, duty: 0.22, total_w: 0.107 },
+        // Table 8 (SVHN)
+        Anchor { name: "SNN8_SVHN", device: p, family: snn, luts: 18_487, regs: 11_024, brams: 104.0, duty: 1.0, total_w: 0.500 },
+        Anchor { name: "SNN16_SVHN", device: p, family: snn, luts: 37_674, regs: 22_077, brams: 140.0, duty: 1.0, total_w: 0.914 },
+        Anchor { name: "SNN8_SVHN", device: z, family: snn, luts: 18_135, regs: 11_013, brams: 100.0, duty: 1.0, total_w: 0.652 },
+        Anchor { name: "CNN8", device: p, family: cnn, luts: 39_927, regs: 59_187, brams: 47.5, duty: 0.56, total_w: 0.623 },
+        Anchor { name: "CNN8", device: z, family: cnn, luts: 40_172, regs: 59_258, brams: 47.0, duty: 0.56, total_w: 0.903 },
+        // Table 9 (CIFAR-10)
+        Anchor { name: "SNN8_CIFAR", device: z, family: snn, luts: 18_199, regs: 11_016, brams: 164.0, duty: 1.0, total_w: 0.695 },
+        Anchor { name: "SNN16_CIFAR", device: z, family: snn, luts: 36_115, regs: 21_982, brams: 200.0, duty: 1.0, total_w: 1.280 },
+        Anchor { name: "CNN10", device: z, family: cnn, luts: 38_447, regs: 66_797, brams: 50.0, duty: 0.65, total_w: 0.970 },
+    ]
+}
+
+/// Relative error of the model on one anchor.
+pub fn anchor_error(a: &Anchor) -> f64 {
+    let est = PowerEstimator::new(*a.device, a.family);
+    let res = ResourceUsage { luts: a.luts, regs: a.regs, brams: a.brams, dsps: 0 };
+    let act = match a.family {
+        DesignFamily::Snn => Activity::nominal(),
+        DesignFamily::Cnn => Activity::cnn_duty(a.duty),
+    };
+    let total = est.estimate(&res, act).total();
+    (total - a.total_w).abs() / a.total_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every anchor within 35% and the fleet mean within 15% — the
+    /// DESIGN.md §6 calibration contract.
+    #[test]
+    fn anchors_within_tolerance() {
+        let mut worst: (f64, &str) = (0.0, "");
+        let mut sum = 0.0;
+        let all = anchors();
+        for a in &all {
+            let err = anchor_error(a);
+            if err > worst.0 {
+                worst = (err, a.name);
+            }
+            sum += err;
+            assert!(err < 0.35, "{} on {}: {:.0}% off", a.name, a.device.name, err * 100.0);
+        }
+        let mean = sum / all.len() as f64;
+        assert!(mean < 0.15, "mean anchor error {:.1}% (worst {} {:.0}%)", mean * 100.0, worst.1, worst.0 * 100.0);
+    }
+
+    /// The calibration covers both devices and both families.
+    #[test]
+    fn anchor_coverage() {
+        let all = anchors();
+        assert!(all.iter().any(|a| a.device.name == "PYNQ-Z1" && matches!(a.family, DesignFamily::Snn)));
+        assert!(all.iter().any(|a| a.device.name == "ZCU102" && matches!(a.family, DesignFamily::Snn)));
+        assert!(all.iter().any(|a| a.device.name == "PYNQ-Z1" && matches!(a.family, DesignFamily::Cnn)));
+        assert!(all.iter().any(|a| a.device.name == "ZCU102" && matches!(a.family, DesignFamily::Cnn)));
+    }
+}

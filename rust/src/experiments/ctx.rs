@@ -1,0 +1,141 @@
+//! Shared experiment context: artifacts, networks, evaluation sets, and a
+//! sweep cache so figures/tables that need the same (design, dataset)
+//! sweep pay for it once per process.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::sweep::{snn_sweep, SnnSweep};
+use crate::data::EvalSet;
+use crate::fpga::device::Device;
+use crate::nn::loader::{artifacts_dir, load_network, DatasetInfo, Manifest, WeightKind};
+use crate::nn::network::Network;
+use crate::snn::config::{self, SnnDesign};
+
+/// Lazily-loaded experiment state.
+pub struct Ctx {
+    pub root: PathBuf,
+    pub manifest: Manifest,
+    nets_snn: BTreeMap<String, Network>,
+    nets_cnn: BTreeMap<String, Network>,
+    evals: BTreeMap<String, EvalSet>,
+    sweeps: BTreeMap<String, SnnSweep>,
+}
+
+impl Ctx {
+    /// Load from the default artifacts directory.
+    pub fn load() -> Result<Ctx> {
+        let root = artifacts_dir();
+        let manifest = Manifest::load(&root)?;
+        Ok(Ctx {
+            root,
+            manifest,
+            nets_snn: BTreeMap::new(),
+            nets_cnn: BTreeMap::new(),
+            evals: BTreeMap::new(),
+            sweeps: BTreeMap::new(),
+        })
+    }
+
+    pub fn info(&self, ds: &str) -> Result<&DatasetInfo> {
+        self.manifest.dataset(ds)
+    }
+
+    pub fn snn_net(&mut self, ds: &str) -> Result<&Network> {
+        if !self.nets_snn.contains_key(ds) {
+            let net = load_network(&self.manifest, ds, WeightKind::Snn)?;
+            self.nets_snn.insert(ds.to_string(), net);
+        }
+        Ok(&self.nets_snn[ds])
+    }
+
+    pub fn cnn_net(&mut self, ds: &str) -> Result<&Network> {
+        if !self.nets_cnn.contains_key(ds) {
+            let net = load_network(&self.manifest, ds, WeightKind::Cnn)?;
+            self.nets_cnn.insert(ds.to_string(), net);
+        }
+        Ok(&self.nets_cnn[ds])
+    }
+
+    pub fn eval(&mut self, ds: &str) -> Result<&EvalSet> {
+        if !self.evals.contains_key(ds) {
+            let set = EvalSet::load(&self.manifest.file(ds, "eval")?)?;
+            self.evals.insert(ds.to_string(), set);
+        }
+        Ok(&self.evals[ds])
+    }
+
+    /// Cached sweep of one SNN design over `n` samples on `device`.
+    pub fn sweep(&mut self, design_name: &str, device: &Device, n: usize) -> Result<SnnSweep> {
+        let key = format!("{design_name}@{}@{n}", device.name);
+        if let Some(s) = self.sweeps.get(&key) {
+            return Ok(s.clone());
+        }
+        let design: SnnDesign = config::by_name(design_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown SNN design {design_name}"))?;
+        let ds = design.dataset.to_string();
+        let info = self.info(&ds)?.clone();
+        // Load owned copies to satisfy the borrow checker across calls.
+        self.snn_net(&ds)?;
+        self.eval(&ds)?;
+        let net = &self.nets_snn[&ds];
+        let eval = &self.evals[&ds];
+        let mut sweeps =
+            snn_sweep(net, &[&design], &[device], eval, info.t_steps, info.v_th, n);
+        let sweep = sweeps.remove(0);
+        self.sweeps.insert(key, sweep.clone());
+        Ok(sweep)
+    }
+
+    /// Cached sweeps for several designs on one device (shares the
+    /// functional pass when none are cached yet).
+    pub fn sweeps(
+        &mut self,
+        design_names: &[&str],
+        device: &Device,
+        n: usize,
+    ) -> Result<Vec<SnnSweep>> {
+        let all_cached = design_names
+            .iter()
+            .all(|d| self.sweeps.contains_key(&format!("{d}@{}@{n}", device.name)));
+        if !all_cached {
+            // Group designs by dataset so each group shares a pass.
+            let designs: Vec<SnnDesign> = design_names
+                .iter()
+                .map(|d| {
+                    config::by_name(d)
+                        .ok_or_else(|| anyhow::anyhow!("unknown SNN design {d}"))
+                })
+                .collect::<Result<_>>()?;
+            let mut by_ds: BTreeMap<String, Vec<SnnDesign>> = BTreeMap::new();
+            for d in designs {
+                by_ds.entry(d.dataset.to_string()).or_default().push(d);
+            }
+            for (ds, group) in by_ds {
+                let info = self.info(&ds)?.clone();
+                self.snn_net(&ds)?;
+                self.eval(&ds)?;
+                let net = &self.nets_snn[&ds];
+                let eval = &self.evals[&ds];
+                let refs: Vec<&SnnDesign> = group.iter().collect();
+                let sweeps =
+                    snn_sweep(net, &refs, &[device], eval, info.t_steps, info.v_th, n);
+                for s in sweeps {
+                    let key = format!("{}@{}@{n}", s.design_name, device.name);
+                    self.sweeps.insert(key, s);
+                }
+            }
+        }
+        design_names
+            .iter()
+            .map(|d| {
+                self.sweeps
+                    .get(&format!("{d}@{}@{n}", device.name))
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("sweep for {d} missing"))
+            })
+            .collect()
+    }
+}

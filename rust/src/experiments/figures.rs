@@ -1,0 +1,235 @@
+//! Figure regenerators (Figs. 7–15) — ASCII histograms with the CNN
+//! reference line, matching the paper's presentation (SNN metrics are
+//! input-dependent distributions; CNN metrics are constants).
+
+use anyhow::Result;
+
+use crate::cnn_accel::config as cnn_config;
+use crate::coordinator::sweep::{cnn_metrics, CnnMetrics, SnnSweep};
+use crate::fpga::bram_test;
+use crate::fpga::device::PYNQ_Z1;
+use crate::util::stats::Histogram;
+use crate::util::table::Table;
+
+use super::ctx::Ctx;
+
+const BINS: usize = 18;
+const BAR: usize = 40;
+
+fn hist_section(title: &str, samples: &[f64], marker: Option<f64>, unit: &str) -> String {
+    let mut all: Vec<f64> = samples.to_vec();
+    if let Some(m) = marker {
+        all.push(m); // widen the range so the marker lands in a bin
+    }
+    let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let (lo, hi) = if lo == hi { (lo - 0.5, hi + 0.5) } else { (lo, hi) };
+    let mut h = Histogram::new(lo, hi, BINS);
+    for &s in samples {
+        h.add(s);
+    }
+    let mut out = format!("--- {title} ---\n");
+    out.push_str(&h.render(BAR, marker, unit));
+    out.push_str(&format!(
+        "    n={} mean={:.4} min={:.4} max={:.4}\n\n",
+        h.summary.n, h.summary.mean(), h.summary.min, h.summary.max
+    ));
+    out
+}
+
+fn cnn_for(ctx: &mut Ctx, ds: &str, name: &str) -> Result<CnnMetrics> {
+    let info = ctx.info(ds)?.clone();
+    let d = cnn_config::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown CNN design {name}"))?;
+    Ok(cnn_metrics(&d, info.input_shape, &info.arch, &PYNQ_Z1))
+}
+
+/// Fig. 7: latency histograms, SNN1/4/8 vs CNN2/5/4 (MNIST, cycles).
+pub fn fig7(ctx: &mut Ctx, n: usize) -> Result<String> {
+    let pairs = [("SNN1_BRAM(w=16)", "CNN2"), ("SNN4_BRAM", "CNN5"), ("SNN8_BRAM", "CNN4")];
+    let mut out = String::from("== Fig. 7 — Latency comparison (MNIST, cycles @100 MHz) ==\n\n");
+    for (snn, cnn) in pairs {
+        let s = ctx.sweep(snn, &PYNQ_Z1, n)?;
+        let cm = cnn_for(ctx, "mnist", cnn)?;
+        out.push_str(&hist_section(
+            &format!("{snn} vs {cnn}"),
+            &s.collect(|m| m.cycles as f64),
+            Some(cm.latency_cycles as f64),
+            "cyc",
+        ));
+        let faster = s.samples.iter().filter(|m| m.cycles < cm.latency_cycles).count();
+        out.push_str(&format!(
+            "    {snn} faster than {cnn} on {faster}/{} samples\n\n",
+            s.samples.len()
+        ));
+    }
+    Ok(out)
+}
+
+/// Fig. 8: average spikes per inference per MNIST class (SNN8).
+pub fn fig8(ctx: &mut Ctx, n: usize) -> Result<String> {
+    let s = ctx.sweep("SNN8_BRAM", &PYNQ_Z1, n)?;
+    let mut sums = [0f64; 10];
+    let mut counts = [0usize; 10];
+    for m in &s.samples {
+        sums[m.label] += m.total_spikes as f64;
+        counts[m.label] += 1;
+    }
+    let mut t = Table::new(
+        "Fig. 8 — Avg spikes per inference per class (MNIST, SNN8)",
+        &["Class", "Avg spikes", "Samples", "Bar"],
+    );
+    let maxv = sums
+        .iter()
+        .zip(&counts)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .fold(0.0, f64::max);
+    for c in 0..10 {
+        let avg = if counts[c] > 0 { sums[c] / counts[c] as f64 } else { 0.0 };
+        let bar = "#".repeat(((avg / maxv.max(1.0)) * 40.0) as usize);
+        t.row(vec![c.to_string(), format!("{avg:.0}"), counts[c].to_string(), bar]);
+    }
+    let mut out = t.render();
+    // The paper's observation: digit '1' is the sparsest class.
+    let class1 = sums[1] / counts[1].max(1) as f64;
+    let others: f64 = (0..10)
+        .filter(|&c| c != 1)
+        .map(|c| sums[c] / counts[c].max(1) as f64)
+        .sum::<f64>()
+        / 9.0;
+    out.push_str(&format!(
+        "\nclass '1' avg = {class1:.0} vs other classes avg = {others:.0} (paper: '1' is the outlier)\n"
+    ));
+    Ok(out)
+}
+
+/// Fig. 9: power + energy histograms (SNN4 vs CNN5, SNN8 vs CNN4).
+pub fn fig9(ctx: &mut Ctx, n: usize) -> Result<String> {
+    let mut out = String::from("== Fig. 9 — Power and energy (MNIST, vector-based) ==\n\n");
+    for (snn, cnn) in [("SNN4_BRAM", "CNN5"), ("SNN8_BRAM", "CNN4")] {
+        let s = ctx.sweep(snn, &PYNQ_Z1, n)?;
+        let cm = cnn_for(ctx, "mnist", cnn)?;
+        out.push_str(&hist_section(
+            &format!("{snn} power [W] (line: {cnn})"),
+            &s.collect(|m| m.power_w),
+            Some(cm.power.total()),
+            "W",
+        ));
+        out.push_str(&hist_section(
+            &format!("{snn} energy/classification [mJ] (line: {cnn})"),
+            &s.collect(|m| m.energy_j * 1e3),
+            Some(cm.energy_j * 1e3),
+            "mJ",
+        ));
+    }
+    Ok(out)
+}
+
+/// Fig. 11: BRAM vs LUTRAM power sweep (the Fig. 10 test design).
+pub fn fig11(_ctx: &mut Ctx, _n: usize) -> Result<String> {
+    let mut out = String::new();
+    for depth in [8192u32, 256] {
+        let pts = bram_test::fig11_sweep(&PYNQ_Z1, depth, 9);
+        let mut t = Table::new(
+            &format!("Fig. 11 — BRAM vs LUTRAM power, D = {depth} (R=9, W)"),
+            &["w", "BRAM [W]", "LUTRAM [W]", "winner"],
+        );
+        for p in pts.iter().filter(|p| p.width % 2 == 0 || p.width == 1) {
+            t.row(vec![
+                p.width.to_string(),
+                format!("{:.4}", p.bram_w),
+                format!("{:.4}", p.lutram_w),
+                if p.bram_w < p.lutram_w { "BRAM".into() } else { "LUTRAM".into() },
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+fn energy_fpsw_fig(
+    ctx: &mut Ctx,
+    title: &str,
+    ds: &str,
+    pairs: &[(&str, &str)],
+    n: usize,
+) -> Result<String> {
+    let mut out = format!("== {title} ==\n\n");
+    for (snn, cnn) in pairs {
+        let s: SnnSweep = ctx.sweep(snn, &PYNQ_Z1, n)?;
+        let cm = cnn_for(ctx, ds, cnn)?;
+        out.push_str(&hist_section(
+            &format!("{snn} energy/classification [mJ] (line: {cnn})"),
+            &s.collect(|m| m.energy_j * 1e3),
+            Some(cm.energy_j * 1e3),
+            "mJ",
+        ));
+        out.push_str(&hist_section(
+            &format!("{snn} FPS/W (line: {cnn})"),
+            &s.collect(|m| m.fps_per_watt),
+            Some(cm.fps_per_watt),
+            "",
+        ));
+        let better = s.samples.iter().filter(|m| m.energy_j < cm.energy_j).count();
+        out.push_str(&format!(
+            "    {snn} needs less energy than {cnn} on {better}/{} samples\n\n",
+            s.samples.len()
+        ));
+    }
+    Ok(out)
+}
+
+/// Fig. 12: energy + FPS/W for the compressed MNIST designs.
+pub fn fig12(ctx: &mut Ctx, n: usize) -> Result<String> {
+    energy_fpsw_fig(
+        ctx,
+        "Fig. 12 — Energy and FPS/W (MNIST, compressed designs)",
+        "mnist",
+        &[("SNN4_COMPR.", "CNN5"), ("SNN8_COMPR.", "CNN4")],
+        n,
+    )
+}
+
+/// Fig. 13: energy + FPS/W for SVHN.
+pub fn fig13(ctx: &mut Ctx, n: usize) -> Result<String> {
+    energy_fpsw_fig(
+        ctx,
+        "Fig. 13 — Energy and FPS/W (SVHN)",
+        "svhn",
+        &[("SNN4_SVHN", "CNN7"), ("SNN8_SVHN", "CNN8")],
+        n,
+    )
+}
+
+/// Fig. 14: energy + FPS/W for CIFAR-10.
+pub fn fig14(ctx: &mut Ctx, n: usize) -> Result<String> {
+    energy_fpsw_fig(
+        ctx,
+        "Fig. 14 — Energy and FPS/W (CIFAR-10)",
+        "cifar",
+        &[("SNN4_CIFAR", "CNN9"), ("SNN8_CIFAR", "CNN10")],
+        n,
+    )
+}
+
+/// Fig. 15: latency histograms for SVHN and CIFAR-10 (P = 4 and 8).
+pub fn fig15(ctx: &mut Ctx, n: usize) -> Result<String> {
+    let mut out = String::from("== Fig. 15 — Latency (SVHN / CIFAR-10, cycles @100 MHz) ==\n\n");
+    for (ds, snn, cnn) in [
+        ("svhn", "SNN4_SVHN", "CNN7"),
+        ("svhn", "SNN8_SVHN", "CNN8"),
+        ("cifar", "SNN4_CIFAR", "CNN9"),
+        ("cifar", "SNN8_CIFAR", "CNN10"),
+    ] {
+        let s = ctx.sweep(snn, &PYNQ_Z1, n)?;
+        let cm = cnn_for(ctx, ds, cnn)?;
+        out.push_str(&hist_section(
+            &format!("{snn} vs {cnn}"),
+            &s.collect(|m| m.cycles as f64),
+            Some(cm.latency_cycles as f64),
+            "cyc",
+        ));
+    }
+    Ok(out)
+}

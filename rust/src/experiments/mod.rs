@@ -1,0 +1,90 @@
+//! Experiment regenerators: one entry per table and figure of the paper's
+//! evaluation (the DESIGN.md §4 index).
+//!
+//! Every regenerator is a pure function of the artifacts + the simulators,
+//! reachable three ways: `repro table --id N` / `repro figure --id N`
+//! (CLI), `cargo bench --bench <id>` (bench targets), and the
+//! `examples/e2e_paper_repro.rs` driver that runs the full suite.
+
+pub mod ablations;
+pub mod calibration;
+pub mod ctx;
+pub mod figures;
+pub mod related_work;
+pub mod tables;
+
+use anyhow::Result;
+use ctx::Ctx;
+
+/// A named experiment: regenerates one paper table/figure as text.
+pub struct Experiment {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub run: fn(&mut Ctx, usize) -> Result<String>,
+}
+
+/// The full registry, in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "table2", title: "FINN CNN configurations (MNIST)", run: tables::table2 },
+        Experiment { id: "table3", title: "SNN designs (MNIST)", run: tables::table3 },
+        Experiment { id: "table4", title: "Vector-based power estimation", run: tables::table4 },
+        Experiment { id: "table5", title: "BRAM usage for SNN designs", run: tables::table5 },
+        Experiment { id: "table6", title: "Model architectures + accuracy", run: tables::table6 },
+        Experiment { id: "table7", title: "Base vs improved designs", run: tables::table7 },
+        Experiment { id: "table8", title: "SVHN resources + power", run: tables::table8 },
+        Experiment { id: "table9", title: "CIFAR-10 resources + power", run: tables::table9 },
+        Experiment { id: "table10", title: "Accuracy + FPS/W vs related work", run: tables::table10 },
+        Experiment { id: "fig7", title: "Latency histograms (MNIST)", run: figures::fig7 },
+        Experiment { id: "fig8", title: "Spikes per class (MNIST)", run: figures::fig8 },
+        Experiment { id: "fig9", title: "Power/energy histograms (MNIST)", run: figures::fig9 },
+        Experiment { id: "fig11", title: "BRAM vs LUTRAM power sweep", run: figures::fig11 },
+        Experiment { id: "fig12", title: "Energy + FPS/W (MNIST, compressed)", run: figures::fig12 },
+        Experiment { id: "fig13", title: "Energy + FPS/W (SVHN)", run: figures::fig13 },
+        Experiment { id: "fig14", title: "Energy + FPS/W (CIFAR-10)", run: figures::fig14 },
+        Experiment { id: "fig15", title: "Latency histograms (SVHN/CIFAR)", run: figures::fig15 },
+    ]
+}
+
+/// Look up and run one experiment by id.
+pub fn run_by_id(id: &str, ctx: &mut Ctx, n_samples: usize) -> Result<String> {
+    let reg = registry();
+    let exp = reg
+        .iter()
+        .find(|e| e.id.eq_ignore_ascii_case(id))
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment {id} (have: {:?})",
+            reg.iter().map(|e| e.id).collect::<Vec<_>>()))?;
+    (exp.run)(ctx, n_samples)
+}
+
+/// Shared entry point for the `cargo bench` targets (`harness = false`
+/// binaries under rust/benches/): regenerate the experiment once at full
+/// sample count, then time fresh end-to-end regenerations at a reduced
+/// count (fresh [`Ctx`] per iteration so the sweep cache cannot hide the
+/// work being measured).
+pub fn bench_main(id: &str) {
+    // SVHN/CIFAR sweeps are ~10× costlier per sample than MNIST.
+    let (full_n, bench_n) = match id {
+        "fig13" | "fig14" | "fig15" | "table8" | "table9" | "table10" => (200, 40),
+        _ => (1000, 150),
+    };
+    let mut ctx = match Ctx::load() {
+        Ok(c) => c,
+        Err(e) => {
+            println!("bench {id}: SKIP (artifacts not built: {e})");
+            return;
+        }
+    };
+    match run_by_id(id, &mut ctx, full_n) {
+        Ok(out) => println!("{out}"),
+        Err(e) => {
+            println!("bench {id}: FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+    let bench = crate::util::bench::Bench::new("experiments").warmup(1).samples(3);
+    bench.run(&format!("{id}(n={bench_n})"), || {
+        let mut fresh = Ctx::load().expect("artifacts");
+        run_by_id(id, &mut fresh, bench_n).expect("experiment")
+    });
+}

@@ -1,0 +1,112 @@
+//! Related-work comparison constants (Table 10).
+//!
+//! Like the paper itself, these rows are quoted from the respective
+//! publications (accuracy + FPS/W); only the SNN4/8/16 rows at the bottom
+//! of Table 10 are measured by this repository's simulators.
+
+/// One related-work row: per-dataset (accuracy %, FPS/W) where published.
+#[derive(Debug, Clone, Copy)]
+pub struct RelatedWork {
+    pub name: &'static str,
+    pub platform: &'static str,
+    pub mnist: Option<(f64, f64)>,
+    pub svhn: Option<(f64, f64)>,
+    pub cifar: Option<(f64, f64)>,
+}
+
+/// Table 10's literature rows.
+pub fn rows() -> Vec<RelatedWork> {
+    vec![
+        RelatedWork {
+            name: "Loihi [19]",
+            platform: "ASIC",
+            mnist: Some((98.0, 178.0)),
+            svhn: None,
+            cifar: None,
+        },
+        RelatedWork {
+            name: "SNE [22]",
+            platform: "ASIC",
+            mnist: Some((97.9, 10_811.0)),
+            svhn: None,
+            cifar: None,
+        },
+        RelatedWork {
+            name: "Fang et al. [25]",
+            platform: "FPGA",
+            mnist: Some((98.9, 472.0)),
+            svhn: None,
+            cifar: None,
+        },
+        RelatedWork {
+            name: "FireFly [26]",
+            platform: "FPGA",
+            mnist: Some((98.8, 799.0)),
+            svhn: None,
+            cifar: Some((91.36, 379.0)),
+        },
+        RelatedWork {
+            name: "Sommer et al. [4]",
+            platform: "FPGA",
+            mnist: Some((98.3, 9_615.0)),
+            svhn: None,
+            cifar: None,
+        },
+        RelatedWork {
+            name: "Spiker [31]",
+            platform: "FPGA",
+            mnist: Some((77.2, 77.0)),
+            svhn: None,
+            cifar: None,
+        },
+        RelatedWork {
+            name: "Cerebron [30]",
+            platform: "FPGA",
+            mnist: Some((99.4, 25_641.0)),
+            svhn: None,
+            cifar: Some((91.9, 64.0)),
+        },
+        RelatedWork {
+            name: "SyncNN [16]",
+            platform: "FPGA",
+            mnist: Some((99.3, 1_975.0)),
+            svhn: Some((91.0, 222.0)),
+            cifar: Some((87.9, 7.2)),
+        },
+    ]
+}
+
+/// The paper's own measured FPS/W ranges (Table 10 bottom rows), used by
+/// the fidelity checks as reference bands.
+pub fn paper_measured_ranges() -> Vec<(&'static str, &'static str, (f64, f64))> {
+    vec![
+        ("SNN4_LUTRAM", "mnist", (5_409.0, 18_869.0)),
+        ("SNN4_COMPR.", "mnist", (5_721.0, 24_682.0)),
+        ("SNN8_LUTRAM", "mnist", (6_244.0, 18_163.0)),
+        ("SNN8_COMPR.", "mnist", (5_080.0, 20_569.0)),
+        ("SNN16_COMPR.", "mnist", (4_759.0, 15_711.0)),
+        ("SNN4_COMPR.", "svhn", (366.0, 877.0)),
+        ("SNN8_COMPR.", "svhn", (419.0, 1_007.0)),
+        ("SNN16_COMPR.", "svhn", (434.0, 1_005.0)),
+        ("SNN4_COMPR.", "cifar", (154.0, 306.0)),
+        ("SNN8_COMPR.", "cifar", (249.0, 493.0)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_cover_the_paper() {
+        assert_eq!(rows().len(), 8);
+        assert!(rows().iter().any(|r| r.name.starts_with("Sommer")));
+    }
+
+    #[test]
+    fn ranges_are_ordered() {
+        for (name, ds, (lo, hi)) in paper_measured_ranges() {
+            assert!(lo < hi, "{name}/{ds}");
+        }
+    }
+}

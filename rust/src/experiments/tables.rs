@@ -1,0 +1,295 @@
+//! Table regenerators (Tables 2–10 of the paper).
+
+use anyhow::Result;
+
+use crate::cnn_accel::config as cnn_config;
+use crate::coordinator::sweep::cnn_metrics;
+use crate::fpga::bram;
+use crate::fpga::device::{Device, PYNQ_Z1, ZCU102};
+use crate::fpga::power::{DesignFamily, PowerEstimator};
+use crate::nn::arch::parse_arch;
+use crate::snn::config as snn_config;
+use crate::util::table::{f, interval, thousands, Table};
+
+use super::ctx::Ctx;
+use super::related_work;
+
+/// Table 2: FINN CNN configurations for MNIST (resources from synthesis,
+/// latency from the dataflow model, accuracy from the artifacts).
+pub fn table2(ctx: &mut Ctx, _n: usize) -> Result<String> {
+    let info = ctx.info("mnist")?.clone();
+    let arch = parse_arch(&info.arch)?;
+    let mut t = Table::new(
+        "Table 2 — CNN configurations (MNIST, PYNQ-Z1)",
+        &["Design", "Bit-Width", "LUTs", "Regs.", "DSPs", "BRAMs", "Accuracy", "Latency (model)", "Latency (paper)"],
+    );
+    for d in cnn_config::mnist_designs() {
+        let r = d.resources();
+        let run = d.pipeline(&arch, info.input_shape).run();
+        t.row(vec![
+            d.name.into(),
+            d.bits.to_string(),
+            thousands(r.luts as u64),
+            thousands(r.regs as u64),
+            r.dsps.to_string(),
+            format!("{}", r.brams),
+            format!("{:.1}", info.accuracy_cnn * 100.0),
+            thousands(run.latency_cycles),
+            d.latency_published.map(thousands).unwrap_or_default(),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Table 3: SNN designs for MNIST.
+pub fn table3(ctx: &mut Ctx, _n: usize) -> Result<String> {
+    let info = ctx.info("mnist")?.clone();
+    let mut t = Table::new(
+        "Table 3 — SNN designs (MNIST, PYNQ-Z1)",
+        &["Design", "P", "D", "Bit Width", "LUTs", "Regs.", "BRAMs", "Accuracy"],
+    );
+    for d in snn_config::mnist_designs() {
+        let r = d.resources();
+        t.row(vec![
+            d.name.into(),
+            d.params.p.to_string(),
+            thousands(d.params.d_aeq as u64),
+            d.params.w_mem.to_string(),
+            thousands(r.luts as u64),
+            thousands(r.regs as u64),
+            format!("{}", r.brams),
+            format!("{:.1}", info.accuracy_snn * 100.0),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Table 4: vector-based power estimation — SNN ranges over real samples,
+/// CNN constants.
+pub fn table4(ctx: &mut Ctx, n: usize) -> Result<String> {
+    let mut t = Table::new(
+        "Table 4 — Vector-based power estimation (PYNQ-Z1, W)",
+        &["Design", "Signals", "BRAM", "Logic", "Clocks", "Total"],
+    );
+    let info = ctx.info("mnist")?.clone();
+    for name in ["CNN4", "CNN5"] {
+        let d = cnn_config::by_name(name).unwrap();
+        let m = cnn_metrics(&d, info.input_shape, &info.arch, &PYNQ_Z1);
+        t.row(vec![
+            name.into(),
+            f(m.power.signals, 3),
+            f(m.power.bram, 3),
+            f(m.power.logic, 3),
+            f(m.power.clocks, 3),
+            f(m.power.total(), 3),
+        ]);
+    }
+    for name in ["SNN1_BRAM(w=16)", "SNN4_BRAM", "SNN8_BRAM"] {
+        let s = ctx.sweep(name, &PYNQ_Z1, n)?;
+        let mm = |g: fn(&crate::coordinator::sweep::SampleMetrics) -> f64| {
+            let (lo, hi) = s.min_max(g);
+            interval(lo, hi, 3)
+        };
+        t.row(vec![
+            name.into(),
+            mm(|m| m.power.signals),
+            mm(|m| m.power.bram),
+            mm(|m| m.power.logic),
+            mm(|m| m.power.clocks),
+            mm(|m| m.power_w),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Table 5: BRAM usage computation (Eq. 3–5).
+pub fn table5(_ctx: &mut Ctx, _n: usize) -> Result<String> {
+    let mut t = Table::new(
+        "Table 5 — BRAM usage for SNN designs (Eq. 3-5)",
+        &["Name", "D", "D_mem", "w_AE", "w_mem", "P", "#BRAM_AEQ", "#BRAM_Membrane"],
+    );
+    let rows: [(&str, u32, u32, u32, u32, u32); 3] = [
+        ("SNN1_BRAM (w=16)", 6100, 256, 10, 16, 1),
+        ("SNN4_BRAM", 2048, 256, 10, 8, 4),
+        ("SNN8_BRAM", 750, 256, 10, 8, 8),
+    ];
+    for (name, d, d_mem, w_ae, w_mem, p) in rows {
+        t.row(vec![
+            name.into(),
+            d.to_string(),
+            d_mem.to_string(),
+            w_ae.to_string(),
+            w_mem.to_string(),
+            p.to_string(),
+            format!("{}", bram::aeq_brams(p, 3, d, w_ae)),
+            format!("{}", bram::membrane_brams(p, 3, d_mem, w_mem)),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Table 6: model architectures + accuracies (from the build artifacts).
+pub fn table6(ctx: &mut Ctx, _n: usize) -> Result<String> {
+    let mut t = Table::new(
+        "Table 6 — Model architectures (synthetic datasets; see DESIGN.md §1)",
+        &["Dataset", "Model Architecture", "Num. Params", "CNN acc (q8)", "SNN acc (converted)"],
+    );
+    for ds in ["mnist", "svhn", "cifar"] {
+        let info = ctx.info(ds)?;
+        t.row(vec![
+            ds.into(),
+            info.arch.clone(),
+            thousands(info.param_count as u64),
+            format!("{:.1}%", info.accuracy_cnn * 100.0),
+            format!("{:.1}%", info.accuracy_snn * 100.0),
+        ]);
+    }
+    Ok(t.render())
+}
+
+fn power_row(t: &mut Table, name: &str, res: crate::fpga::resources::ResourceUsage, device: &Device, family: DesignFamily, duty: Option<f64>) {
+    let est = PowerEstimator::new(*device, family);
+    let p = match duty {
+        Some(d) => est.estimate(&res, crate::fpga::power::Activity::cnn_duty(d)),
+        None => est.vectorless(&res),
+    };
+    t.row(vec![
+        name.into(),
+        device.name.into(),
+        thousands(res.luts as u64),
+        thousands(res.regs as u64),
+        format!("{}", res.brams),
+        f(p.signals, 3),
+        f(p.bram, 3),
+        f(p.logic, 3),
+        f(p.clocks, 3),
+        f(p.total(), 3),
+    ]);
+}
+
+/// Table 7: resources + vector-less power of base and improved designs.
+pub fn table7(ctx: &mut Ctx, _n: usize) -> Result<String> {
+    let info = ctx.info("mnist")?.clone();
+    let arch = parse_arch(&info.arch)?;
+    let mut t = Table::new(
+        "Table 7 — Base vs improved designs (vector-less, PYNQ-Z1)",
+        &["Design", "Platform", "LUTs", "Regs.", "BRAMs", "Signals", "BRAM[W]", "Logic", "Clocks", "Total"],
+    );
+    for name in ["CNN4", "CNN5"] {
+        let d = cnn_config::by_name(name).unwrap();
+        let duty = d.pipeline(&arch, info.input_shape).run().duty;
+        power_row(&mut t, name, d.resources(), &PYNQ_Z1, DesignFamily::Cnn, Some(duty));
+    }
+    for name in
+        ["SNN4_BRAM", "SNN4_LUTRAM", "SNN4_COMPR.", "SNN8_BRAM", "SNN8_LUTRAM", "SNN8_COMPR."]
+    {
+        let d = snn_config::by_name(name).unwrap();
+        power_row(&mut t, name, d.resources(), &PYNQ_Z1, DesignFamily::Snn, None);
+    }
+    Ok(t.render())
+}
+
+fn table89(ctx: &mut Ctx, ds: &str, title: &str, cnn_names: &[&str], snn_names: &[&str]) -> Result<String> {
+    let info = ctx.info(ds)?.clone();
+    let arch = parse_arch(&info.arch)?;
+    let mut t = Table::new(
+        title,
+        &["Design", "Platform", "LUTs", "Regs.", "BRAMs", "Signals", "BRAM[W]", "Logic", "Clocks", "Total"],
+    );
+    for device in [&PYNQ_Z1, &ZCU102] {
+        for name in cnn_names {
+            let d = cnn_config::by_name(name).unwrap();
+            let duty = d.pipeline(&arch, info.input_shape).run().duty;
+            power_row(&mut t, name, d.resources(), device, DesignFamily::Cnn, Some(duty));
+        }
+        for name in snn_names {
+            let d = snn_config::by_name(name).unwrap();
+            if d.resources_on(device).check_fits(device).is_err() {
+                t.row(vec![
+                    (*name).into(),
+                    device.name.into(),
+                    "-".into(),
+                    "-".into(),
+                    "does not fit".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+            power_row(&mut t, name, d.resources_on(device), device, DesignFamily::Snn, None);
+        }
+    }
+    Ok(t.render())
+}
+
+/// Table 8: SVHN resources + vector-less power on both boards.
+pub fn table8(ctx: &mut Ctx, _n: usize) -> Result<String> {
+    table89(
+        ctx,
+        "svhn",
+        "Table 8 — SVHN designs (vector-less)",
+        &["CNN7", "CNN8"],
+        &["SNN2_SVHN", "SNN4_SVHN", "SNN8_SVHN", "SNN16_SVHN"],
+    )
+}
+
+/// Table 9: CIFAR-10 resources + vector-less power on both boards.
+pub fn table9(ctx: &mut Ctx, _n: usize) -> Result<String> {
+    table89(
+        ctx,
+        "cifar",
+        "Table 9 — CIFAR-10 designs (vector-less)",
+        &["CNN9", "CNN10"],
+        &["SNN2_CIFAR", "SNN4_CIFAR", "SNN8_CIFAR", "SNN16_CIFAR"],
+    )
+}
+
+/// Table 10: accuracy + FPS/W vs related work.  Literature rows quoted;
+/// our rows measured by the simulator sweeps.
+pub fn table10(ctx: &mut Ctx, n: usize) -> Result<String> {
+    let mut t = Table::new(
+        "Table 10 — Accuracy and FPS/W vs related work",
+        &["Work", "Platform", "MNIST acc", "MNIST FPS/W", "SVHN acc", "SVHN FPS/W", "CIFAR acc", "CIFAR FPS/W"],
+    );
+    let fmt_pair = |p: Option<(f64, f64)>| match p {
+        Some((acc, fpsw)) => (format!("{acc:.1}%"), format!("{fpsw:.0}")),
+        None => ("-".into(), "-".into()),
+    };
+    for rw in related_work::rows() {
+        let (ma, mf) = fmt_pair(rw.mnist);
+        let (sa, sf) = fmt_pair(rw.svhn);
+        let (ca, cf) = fmt_pair(rw.cifar);
+        t.row(vec![rw.name.into(), rw.platform.into(), ma, mf, sa, sf, ca, cf]);
+    }
+    // Our measured rows (ranges over real inputs, like the paper).
+    let ours: [(&str, Option<&str>, Option<&str>, Option<&str>); 5] = [
+        ("SNN4_LUTRAM", Some("SNN4_LUTRAM"), None, None),
+        ("SNN4_COMPR.", Some("SNN4_COMPR."), Some("SNN4_SVHN"), Some("SNN4_CIFAR")),
+        ("SNN8_LUTRAM", Some("SNN8_LUTRAM"), None, None),
+        ("SNN8_COMPR.", Some("SNN8_COMPR."), Some("SNN8_SVHN"), Some("SNN8_CIFAR")),
+        ("SNN16_COMPR.", Some("SNN16_COMPR."), Some("SNN16_SVHN"), None),
+    ];
+    for (label, mnist_d, svhn_d, cifar_d) in ours {
+        let mut cells = vec![format!("{label} (ours)"), "FPGA (sim)".to_string()];
+        for (ds, design) in [("mnist", mnist_d), ("svhn", svhn_d), ("cifar", cifar_d)] {
+            match design {
+                None => {
+                    cells.push("-".into());
+                    cells.push("-".into());
+                }
+                Some(dn) => {
+                    let info = ctx.info(ds)?.clone();
+                    let s = ctx.sweep(dn, &PYNQ_Z1, n)?;
+                    let (lo, hi) = s.min_max(|m| m.fps_per_watt);
+                    cells.push(format!("{:.1}%", info.accuracy_snn * 100.0));
+                    cells.push(format!("[{lo:.0}; {hi:.0}]"));
+                }
+            }
+        }
+        t.row(cells);
+    }
+    Ok(t.render())
+}

@@ -1,0 +1,143 @@
+//! The Fig. 10 BRAM-vs-LUTRAM test design and its Fig. 11 power sweep.
+//!
+//! An array of `R` memories, each storing `D` words of width `w`, written
+//! once and then **read every clock cycle** (read pointers advancing, the
+//! XOR reduction keeping outputs alive).  Synthesized either from BRAM or
+//! from LUTRAM, the design isolates memory power:
+//!
+//! * BRAM power steps at the Eq. (3) aspect-ratio thresholds (a 10-bit
+//!   word costs as much as an 18-bit one);
+//! * LUTRAM power is linear in `w` but pays per 64-word bank, so deep
+//!   memories (D = 8192) favour BRAM and shallow ones (D = 256) favour
+//!   LUTRAM — the §5.1 insight that drives the SNN*_LUTRAM designs.
+
+use super::bram;
+use super::device::Device;
+use super::power::{Activity, DesignFamily, PowerEstimator};
+use super::resources::ResourceUsage;
+
+/// Which memory primitive the test design instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemKind {
+    Bram,
+    Lutram,
+}
+
+/// The Fig. 10 test design.
+#[derive(Debug, Clone, Copy)]
+pub struct BramTestDesign {
+    /// Number of replicated memories `R` (the paper's array).
+    pub r: u32,
+    /// Words per memory.
+    pub depth: u32,
+    /// Word width in bits.
+    pub width: u32,
+    pub kind: MemKind,
+}
+
+impl BramTestDesign {
+    /// Resource usage: the memories plus the small pointer/XOR harness.
+    pub fn resources(&self) -> ResourceUsage {
+        // Address pointers + XOR reduction + AXI front-end: ~40 LUTs + 50
+        // FFs per memory, independent of the memory primitive.
+        let harness_luts = 40 * self.r;
+        let harness_regs = 50 * self.r;
+        match self.kind {
+            MemKind::Bram => ResourceUsage {
+                luts: harness_luts,
+                regs: harness_regs,
+                brams: self.r as f64 * bram::brams_for_memory(self.depth, self.width),
+                dsps: 0,
+            },
+            MemKind::Lutram => ResourceUsage {
+                luts: harness_luts + self.r * bram::lutram_luts(self.depth, self.width),
+                regs: harness_regs + self.r * self.width, // output registers
+                brams: 0.0,
+                dsps: 0,
+            },
+        }
+    }
+
+    /// Dynamic power under continuous reading (the Fig. 11 measurement).
+    pub fn power(&self, dev: &Device) -> f64 {
+        // The test design's activity is the SNN anchor activity (memories
+        // read every cycle), so the SNN coefficient set applies.
+        let est = PowerEstimator::new(*dev, DesignFamily::Snn);
+        est.estimate(&self.resources(), Activity::nominal()).total()
+    }
+}
+
+/// One row of the Fig. 11 sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    pub width: u32,
+    pub bram_w: f64,
+    pub lutram_w: f64,
+}
+
+/// Reproduce Fig. 11: power vs word width for both memory kinds.
+pub fn fig11_sweep(dev: &Device, depth: u32, r: u32) -> Vec<SweepPoint> {
+    (1..=36)
+        .map(|width| SweepPoint {
+            width,
+            bram_w: BramTestDesign { r, depth, width, kind: MemKind::Bram }.power(dev),
+            lutram_w: BramTestDesign { r, depth, width, kind: MemKind::Lutram }.power(dev),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::PYNQ_Z1;
+
+    /// Fig. 11(a): at D = 8192 (deep), BRAM beats LUTRAM for wide words.
+    #[test]
+    fn deep_memories_favor_bram() {
+        let pts = fig11_sweep(&PYNQ_Z1, 8192, 9);
+        let wide = &pts[35]; // w = 36
+        assert!(wide.bram_w < wide.lutram_w, "{wide:?}");
+    }
+
+    /// Fig. 11(b): at D = 256 (shallow), LUTRAM beats BRAM through the
+    /// widths the accelerator actually uses (membranes are 8-bit; BRAM
+    /// power is flat in w at this depth since every width fits half a
+    /// BRAM, so the linear LUTRAM curve crosses it eventually).
+    #[test]
+    fn shallow_memories_favor_lutram() {
+        let pts = fig11_sweep(&PYNQ_Z1, 256, 9);
+        for p in pts.iter().take(10) {
+            assert!(p.lutram_w < p.bram_w, "w={} {p:?}", p.width);
+        }
+        // ... but not for very wide words (crossover exists).
+        assert!(pts[35].lutram_w > pts[35].bram_w);
+    }
+
+    /// BRAM power steps exactly at the Eq. (3) thresholds and is flat
+    /// between them; LUTRAM power is strictly increasing in width.
+    #[test]
+    fn bram_steps_lutram_linear() {
+        let pts = fig11_sweep(&PYNQ_Z1, 8192, 9);
+        for w in 1..35usize {
+            let (a, b) = (&pts[w - 1], &pts[w]);
+            let threshold = [2, 3, 5, 9, 19].contains(&(w as u32 + 1));
+            if threshold {
+                assert!(b.bram_w >= a.bram_w, "step missing at w={}", w + 1);
+            } else {
+                assert!((b.bram_w - a.bram_w).abs() < 1e-9, "unexpected step at w={}", w + 1);
+            }
+            assert!(b.lutram_w > a.lutram_w, "lutram not increasing at w={}", w + 1);
+        }
+    }
+
+    /// The specific §5.1 example: 10-bit words are wasteful (same BRAM
+    /// count as 18-bit), so dropping to 8 bits halves BRAM cost.
+    #[test]
+    fn ten_bit_words_waste_half_the_bram() {
+        let d = 4096;
+        let ten = BramTestDesign { r: 1, depth: d, width: 10, kind: MemKind::Bram };
+        let eight = BramTestDesign { r: 1, depth: d, width: 8, kind: MemKind::Bram };
+        assert_eq!(ten.resources().brams, 2.0);
+        assert_eq!(eight.resources().brams, 1.0);
+    }
+}

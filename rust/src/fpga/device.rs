@@ -1,0 +1,171 @@
+//! Target device descriptors and fitted power-coefficient sets.
+//!
+//! Two devices, matching the paper's platforms:
+//!
+//! * **PYNQ-Z1** — `xc7z020-1clg400c` (Zynq-7000, 28 nm), run at 100 MHz.
+//! * **ZCU102** — `xczu9eg-ffvb1156-2-e` (Zynq UltraScale+, 16 nm), 200 MHz.
+//!
+//! ## Coefficient provenance (DESIGN.md §6)
+//!
+//! The dynamic-power coefficients below were fitted by non-negative least
+//! squares to the paper's anchor rows — Tables 7, 8, 9 (vector-less power
+//! split into Signals / BRAM / Logic / Clocks) — separately per device and
+//! design family.  Family-specific sets stand in for the activity
+//! difference between the always-busy SNN queue datapath and the FINN
+//! pipeline (whose duty is additionally modulated per design, see
+//! [`crate::fpga::power`]).  Residuals of the fit: total power mean error
+//! 5% (SNN/PYNQ), 12% (CNN/PYNQ), 9% (SNN/ZCU102), 5% (CNN/ZCU102); the
+//! `experiments::calibration` test re-checks the anchors stay within
+//! tolerance.  Every design point *not* in the anchor set is a prediction
+//! of this model, not a fit.
+
+/// FPGA product family (selects a power-coefficient generation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// 28 nm 7-series (Zynq-7000).
+    SevenSeries,
+    /// 16 nm UltraScale+.
+    UltraScalePlus,
+}
+
+/// Per-family dynamic-power coefficients, all in **W per GHz per unit**.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerCoeffs {
+    /// Signals: per LUT (net switching downstream of LUT outputs).
+    pub sig_lut: f64,
+    /// Signals: per register.
+    pub sig_reg: f64,
+    /// BRAM: per 36Kb BRAM at 100% read rate.
+    pub bram: f64,
+    /// Logic: per LUT.
+    pub logic_lut: f64,
+    /// Clocks: per register (clock tree load).
+    pub clk_reg: f64,
+    /// Clocks: per BRAM (clock tree load of the BRAM clock pins).
+    pub clk_bram: f64,
+}
+
+/// A target FPGA device.
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub name: &'static str,
+    pub part: &'static str,
+    pub family: Family,
+    /// Default clock for the paper's experiments on this board (MHz).
+    pub freq_mhz: f64,
+    pub luts: u32,
+    pub regs: u32,
+    /// 36Kb BRAM count.
+    pub brams: u32,
+    pub dsps: u32,
+    /// LUTs usable as distributed RAM (SLICEM).
+    pub lutram_luts: u32,
+    /// Coefficients for SNN-family designs (event-queue datapath).
+    pub snn_coeffs: PowerCoeffs,
+    /// Coefficients for CNN-family designs (FINN streaming pipeline).
+    pub cnn_coeffs: PowerCoeffs,
+}
+
+/// PYNQ-Z1 (xc7z020): 53,200 LUTs / 106,400 FFs / 140 BRAMs / 220 DSPs.
+/// The paper quotes 17,400 SLICEM LUTs available as LUTRAM.
+pub const PYNQ_Z1: Device = Device {
+    name: "PYNQ-Z1",
+    part: "xc7z020-1clg400c",
+    family: Family::SevenSeries,
+    freq_mhz: 100.0,
+    luts: 53_200,
+    regs: 106_400,
+    brams: 140,
+    dsps: 220,
+    lutram_luts: 17_400,
+    snn_coeffs: PowerCoeffs {
+        sig_lut: 8.539e-5,
+        sig_reg: 2.028e-6,
+        bram: 2.072e-2,
+        logic_lut: 4.933e-5,
+        clk_reg: 4.973e-5,
+        clk_bram: 7.086e-4,
+    },
+    cnn_coeffs: PowerCoeffs {
+        sig_lut: 7.582e-5,
+        sig_reg: 3.216e-6,
+        bram: 1.443e-2,
+        logic_lut: 4.735e-5,
+        clk_reg: 1.478e-5,
+        clk_bram: 4.302e-3,
+    },
+};
+
+/// ZCU102 (xczu9eg): 274,080 LUTs / 548,160 FFs / 912 BRAMs / 2,520 DSPs.
+pub const ZCU102: Device = Device {
+    name: "ZCU102",
+    part: "xczu9eg-ffvb1156-2-e",
+    family: Family::UltraScalePlus,
+    freq_mhz: 200.0,
+    luts: 274_080,
+    regs: 548_160,
+    brams: 912,
+    dsps: 2_520,
+    lutram_luts: 144_000,
+    snn_coeffs: PowerCoeffs {
+        sig_lut: 5.685e-6,
+        sig_reg: 8.216e-5,
+        bram: 6.884e-3,
+        logic_lut: 4.935e-5,
+        clk_reg: 4.316e-5,
+        clk_bram: 3.661e-4,
+    },
+    cnn_coeffs: PowerCoeffs {
+        sig_lut: 4.141e-5,
+        sig_reg: 0.0,
+        bram: 1.101e-2,
+        logic_lut: 4.807e-5,
+        clk_reg: 5.122e-7,
+        clk_bram: 2.301e-2,
+    },
+};
+
+impl Device {
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name.to_ascii_lowercase().as_str() {
+            "pynq" | "pynq-z1" | "xc7z020" => Some(PYNQ_Z1),
+            "zcu102" | "xczu9eg" => Some(ZCU102),
+            _ => None,
+        }
+    }
+
+    /// Clock in GHz (power coefficients are per GHz).
+    pub fn f_ghz(&self) -> f64 {
+        self.freq_mhz / 1000.0
+    }
+
+    /// Cycle period in seconds.
+    pub fn period_s(&self) -> f64 {
+        1.0 / (self.freq_mhz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Device::by_name("pynq").unwrap().part, "xc7z020-1clg400c");
+        assert_eq!(Device::by_name("ZCU102").unwrap().family, Family::UltraScalePlus);
+        assert!(Device::by_name("vu19p").is_none());
+    }
+
+    #[test]
+    fn ultrascale_brams_cheaper_per_access() {
+        // The paper: "Since the ZCU102 board has a different chip
+        // technology ... BRAMs use less power in this case."
+        assert!(ZCU102.snn_coeffs.bram < PYNQ_Z1.snn_coeffs.bram);
+    }
+
+    #[test]
+    fn frequencies_match_paper() {
+        assert_eq!(PYNQ_Z1.freq_mhz, 100.0);
+        assert_eq!(ZCU102.freq_mhz, 200.0);
+    }
+}

@@ -1,0 +1,28 @@
+//! FPGA resource + dynamic-power substrate.
+//!
+//! The paper's testbed is Vivado synthesis + the Vivado Power Estimator on
+//! two AMD/Xilinx devices; neither exists in this environment, so this
+//! module is the calibrated analytic replacement (DESIGN.md §1):
+//!
+//! * [`bram`] — the paper's own analytic BRAM model (§4.2, Eq. 3–5):
+//!   aspect-ratio word capacities, half-BRAM rounding, AEQ/membrane counts.
+//! * [`device`] — device descriptors (PYNQ-Z1 / ZCU102) with per-family
+//!   dynamic-power coefficient sets *fitted by least squares to the
+//!   paper's published anchor rows* (Tables 4/7/8/9; see DESIGN.md §6).
+//! * [`power`] — the Vivado-PE-style estimator: dynamic power =
+//!   Σ resource-class coefficient × count × switching activity, split into
+//!   the paper's Signals / BRAM / Logic / Clocks categories, in
+//!   vector-less (static activity) and vector-based (simulator activity
+//!   trace) modes.
+//! * [`resources`] — LUT/FF/BRAM usage of SNN and CNN design points.
+//! * [`bram_test`] — the Fig. 10 BRAM-vs-LUTRAM test design (Fig. 11).
+
+pub mod bram;
+pub mod bram_test;
+pub mod device;
+pub mod power;
+pub mod resources;
+
+pub use device::{Device, Family};
+pub use power::{PowerBreakdown, PowerEstimator};
+pub use resources::ResourceUsage;

@@ -1,0 +1,194 @@
+//! Vivado-Power-Estimator-style dynamic power model.
+//!
+//! `P_category = f_GHz × Σ coefficient(category, resource) × count × activity`
+//!
+//! split into the paper's four reported categories (Tables 4, 7, 8, 9):
+//! Signals, BRAM, Logic, Clocks.  Two modes, mirroring the tool:
+//!
+//! * **vector-less** — static default activities (a per-design duty
+//!   estimate for CNNs; full queue activity for SNNs).  Used for
+//!   Tables 7/8/9.
+//! * **vector-based** — activity factors measured by the cycle simulators
+//!   while running actual samples (BRAM reads/cycle, datapath busy
+//!   fraction).  This is what makes SNN power *input-dependent*
+//!   (Fig. 9/12–14) while CNN power varies < 0.01 W.
+
+use super::device::{Device, PowerCoeffs};
+use super::resources::ResourceUsage;
+
+/// Which accelerator family a design belongs to (selects coefficients).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesignFamily {
+    Snn,
+    Cnn,
+}
+
+/// Switching-activity factors, all relative to the family nominal (1.0 =
+/// the activity level of the anchor designs the coefficients were fit at).
+#[derive(Debug, Clone, Copy)]
+pub struct Activity {
+    /// BRAM read-port activity (reads per cycle per BRAM, normalized).
+    pub bram_read: f64,
+    /// Datapath toggle (signals + logic), normalized.
+    pub toggle: f64,
+}
+
+impl Activity {
+    /// Vector-less default: the nominal activity of the family anchors.
+    pub fn nominal() -> Activity {
+        Activity { bram_read: 1.0, toggle: 1.0 }
+    }
+
+    /// CNN vector-less duty: the FINN pipeline is only as busy as its
+    /// least-idle layer; `duty` = mean(layer_cycles) / max(layer_cycles)
+    /// over the pipeline, normalized to the anchor duty of ~0.85.
+    pub fn cnn_duty(duty: f64) -> Activity {
+        let rel = (duty / 0.85).clamp(0.05, 1.5);
+        Activity { bram_read: rel, toggle: rel }
+    }
+}
+
+/// Dynamic power split by category (Watts).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PowerBreakdown {
+    pub signals: f64,
+    pub bram: f64,
+    pub logic: f64,
+    pub clocks: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.signals + self.bram + self.logic + self.clocks
+    }
+
+    pub fn scale(&self, k: f64) -> PowerBreakdown {
+        PowerBreakdown {
+            signals: self.signals * k,
+            bram: self.bram * k,
+            logic: self.logic * k,
+            clocks: self.clocks * k,
+        }
+    }
+}
+
+/// The estimator: device + family selects a coefficient set.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerEstimator {
+    pub device: Device,
+    pub family: DesignFamily,
+}
+
+impl PowerEstimator {
+    pub fn new(device: Device, family: DesignFamily) -> Self {
+        PowerEstimator { device, family }
+    }
+
+    fn coeffs(&self) -> &PowerCoeffs {
+        match self.family {
+            DesignFamily::Snn => &self.device.snn_coeffs,
+            DesignFamily::Cnn => &self.device.cnn_coeffs,
+        }
+    }
+
+    /// Estimate dynamic power for a design with given activity.
+    ///
+    /// LUTRAM memory LUTs are charged like ordinary LUTs in Signals/Logic
+    /// (that is where Vivado accounts distributed-RAM switching, and it is
+    /// how the fit anchors behave: the SNN*_LUTRAM rows' extra power shows
+    /// up in those two categories).
+    pub fn estimate(&self, res: &ResourceUsage, act: Activity) -> PowerBreakdown {
+        let c = self.coeffs();
+        let f = self.device.f_ghz();
+        let lut = res.luts as f64;
+        let reg = res.regs as f64;
+        let bram = res.brams;
+        PowerBreakdown {
+            signals: f * (c.sig_lut * lut + c.sig_reg * reg) * act.toggle,
+            bram: f * c.bram * bram * act.bram_read,
+            logic: f * c.logic_lut * lut * act.toggle,
+            clocks: f * (c.clk_reg * reg + c.clk_bram * bram),
+        }
+    }
+
+    /// Vector-less estimate (nominal activity).
+    pub fn vectorless(&self, res: &ResourceUsage) -> PowerBreakdown {
+        self.estimate(res, Activity::nominal())
+    }
+
+    /// Energy for a run of `cycles` at this device's clock (Joules).
+    pub fn energy(&self, power_w: f64, cycles: u64) -> f64 {
+        power_w * cycles as f64 * self.device.period_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::{PYNQ_Z1, ZCU102};
+
+    fn snn8_resources() -> ResourceUsage {
+        ResourceUsage { luts: 9_649, regs: 9_738, brams: 116.0, dsps: 0 }
+    }
+
+    fn cnn4_resources() -> ResourceUsage {
+        ResourceUsage { luts: 20_368, regs: 26_886, brams: 14.5, dsps: 0 }
+    }
+
+    /// Table 7 anchor: SNN8_BRAM vector-less ≈ 0.480 W total (±20%).
+    #[test]
+    fn snn8_bram_anchor() {
+        let est = PowerEstimator::new(PYNQ_Z1, DesignFamily::Snn);
+        let p = est.vectorless(&snn8_resources());
+        assert!((p.total() - 0.480).abs() / 0.480 < 0.20, "total {}", p.total());
+        // BRAM reads dominate (the §4.1 observation).
+        assert!(p.bram > p.signals && p.bram > p.logic && p.bram > p.clocks);
+    }
+
+    /// Table 7 anchor: CNN4 ≈ 0.122 W at the MNIST designs' pipeline duty
+    /// (~0.22 — the FINN MNIST configs are strongly bottlenecked by their
+    /// conv2 layer, leaving the rest of the pipeline mostly idle; ±25%).
+    #[test]
+    fn cnn4_anchor() {
+        let est = PowerEstimator::new(PYNQ_Z1, DesignFamily::Cnn);
+        let p = est.estimate(&cnn4_resources(), Activity::cnn_duty(0.22));
+        assert!((p.total() - 0.122).abs() / 0.122 < 0.25, "total {}", p.total());
+    }
+
+    /// The paper's headline MNIST observation: SNN8 ≈ 4× CNN4 power.
+    #[test]
+    fn snn8_vs_cnn4_factor_four() {
+        let snn = PowerEstimator::new(PYNQ_Z1, DesignFamily::Snn).vectorless(&snn8_resources());
+        let cnn = PowerEstimator::new(PYNQ_Z1, DesignFamily::Cnn)
+            .estimate(&cnn4_resources(), Activity::cnn_duty(0.22));
+        let factor = snn.total() / cnn.total();
+        assert!((3.0..5.5).contains(&factor), "factor {factor}");
+    }
+
+    #[test]
+    fn power_scales_with_frequency() {
+        let res = snn8_resources();
+        let p_pynq = PowerEstimator::new(PYNQ_Z1, DesignFamily::Snn).vectorless(&res);
+        let mut dev = PYNQ_Z1;
+        dev.freq_mhz = 200.0;
+        let p_2x = PowerEstimator::new(dev, DesignFamily::Snn).vectorless(&res);
+        assert!((p_2x.total() / p_pynq.total() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vector_based_activity_moves_bram_power() {
+        let est = PowerEstimator::new(PYNQ_Z1, DesignFamily::Snn);
+        let res = snn8_resources();
+        let lo = est.estimate(&res, Activity { bram_read: 0.6, toggle: 0.8 });
+        let hi = est.estimate(&res, Activity { bram_read: 1.0, toggle: 1.0 });
+        assert!(lo.bram < hi.bram);
+        assert_eq!(lo.clocks, hi.clocks); // clocks don't depend on data activity
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        let est = PowerEstimator::new(ZCU102, DesignFamily::Snn);
+        // 200 MHz -> 5 ns period; 1 W for 1e6 cycles = 5 mJ.
+        assert!((est.energy(1.0, 1_000_000) - 5e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,38 @@
+//! # spikebench — "To Spike or Not to Spike?" reproduction
+//!
+//! A full-system reproduction of Plagwitz et al. (2023): a quantitative
+//! comparison of SNN and CNN FPGA accelerator implementations, rebuilt as
+//! a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate contains every substrate the paper's evaluation depends on:
+//!
+//! * [`nn`] — a dependency-free NCHW neural-network library (conv / pool /
+//!   dense / quantization) used as the functional golden model.
+//! * [`snn`] — a cycle-level simulator of the Sommer et al. sparse SNN
+//!   accelerator: address-event queues, memory interlacing, m-TTFS
+//!   integrate-and-fire cores, and the paper's two proposed optimizations
+//!   (LUTRAM membrane storage, compressed spike encoding).
+//! * [`cnn_accel`] — a FINN-style streaming-dataflow CNN accelerator
+//!   simulator (sliding-window units, folded MAC PE arrays, FIFOs).
+//! * [`fpga`] — the FPGA resource + dynamic-power model (BRAM aspect
+//!   ratios, LUTRAM, per-device power coefficient sets; Eq. 3–5).
+//! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) and executes them from the Rust side.
+//! * [`coordinator`] — the experiment orchestrator and serving front-end.
+//! * [`experiments`] — one regenerator per paper table / figure.
+//! * [`util`] — offline substrates: JSON, RNG, histograms, tensor files,
+//!   a micro-bench harness and a mini property-testing harness.
+//!
+//! Python/JAX only ever runs at build time (`make artifacts`); the binary
+//! produced from this crate is self-contained.
+
+pub mod cnn_accel;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod fpga;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod snn;
+pub mod util;

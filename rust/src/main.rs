@@ -1,0 +1,211 @@
+//! `repro` — the leader binary: regenerate any paper table/figure, run
+//! the serving demo, or validate the artifacts.
+//!
+//! ```text
+//! repro list                             # available experiments
+//! repro table  --id 2 [--samples 1000]   # regenerate Table 2
+//! repro figure --id 7 [--samples 1000]   # regenerate Fig. 7
+//! repro all    [--samples 1000] [--out reports]
+//! repro serve  --dataset mnist --requests 64 [--batch 8]
+//! repro validate                         # golden artifact checks
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use spikebench::coordinator::serve::{Backend, NetworkBackend, PjrtBackend, ServeConfig, Server};
+use spikebench::experiments::{ctx::Ctx, registry, run_by_id};
+use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::nn::loader::{load_network, WeightKind};
+use spikebench::report;
+use spikebench::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: repro <list|table|figure|all|ablation|serve|validate> [--id N] [--samples N] [--out DIR]\n\
+     see `repro list` for experiment ids"
+}
+
+fn run() -> Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_else(|| "help".into());
+    let args = Args::from_env(1);
+    match cmd.as_str() {
+        "list" => {
+            println!("{:<10} {}", "id", "title");
+            for e in registry() {
+                println!("{:<10} {}", e.id, e.title);
+            }
+            Ok(())
+        }
+        "table" | "figure" => {
+            let id = args
+                .get("id")
+                .map(|s| {
+                    if s.chars().all(|c| c.is_ascii_digit()) {
+                        format!("{}{}", if cmd == "table" { "table" } else { "fig" }, s)
+                    } else {
+                        s.to_string()
+                    }
+                })
+                .ok_or_else(|| anyhow!("--id required\n{}", usage()))?;
+            let n = args.get_usize("samples", 1000);
+            let mut ctx = Ctx::load()?;
+            let out = run_by_id(&id, &mut ctx, n)?;
+            println!("{out}");
+            Ok(())
+        }
+        "all" => {
+            let n = args.get_usize("samples", 1000);
+            let out_dir = std::path::PathBuf::from(args.get_or("out", "reports"));
+            let mut ctx = Ctx::load()?;
+            for e in registry() {
+                eprintln!(">>> {} ({})", e.id, e.title);
+                let out = (e.run)(&mut ctx, n)?;
+                println!("{out}");
+                report::write_report(&out_dir, e.id, &out)?;
+            }
+            eprintln!("reports written to {}", out_dir.display());
+            Ok(())
+        }
+        "ablation" => {
+            let n = args.get_usize("samples", 300);
+            let mut ctx = Ctx::load()?;
+            match args.get("id") {
+                Some(id) => println!("{}", spikebench::experiments::ablations::run(id, &mut ctx, n)?),
+                None => {
+                    for (id, title, _) in spikebench::experiments::ablations::registry() {
+                        println!("{id:<16} {title}");
+                    }
+                }
+            }
+            Ok(())
+        }
+        "serve" => serve_demo(&args),
+        "validate" => validate(&args),
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+/// Serving demo: PJRT on the request path, hardware costs attached.
+fn serve_demo(args: &Args) -> Result<()> {
+    let ds = args.get_or("dataset", "mnist").to_string();
+    let n_req = args.get_usize("requests", 64);
+    let batch = args.get_usize("batch", 8);
+    let mut ctx = Ctx::load()?;
+    let info = ctx.info(&ds)?.clone();
+    let snn_net = load_network(&ctx.manifest, &ds, WeightKind::Snn)?;
+    let design = spikebench::snn::config::all_designs()
+        .into_iter()
+        .find(|d| d.dataset == ds && d.p() == 8)
+        .ok_or_else(|| anyhow!("no P=8 design for {ds}"))?;
+    let eval = ctx.eval(&ds)?.clone();
+
+    let cfg = ServeConfig {
+        backend_kind: Backend::Snn,
+        max_batch: batch,
+        batch_timeout: std::time::Duration::from_millis(2),
+        snn_design: design,
+        snn_net,
+        t_steps: info.t_steps,
+        v_th: info.v_th,
+        device: PYNQ_Z1,
+    };
+
+    // PJRT backend if the HLO artifact loads; Rust-nn fallback otherwise.
+    let backend: Box<dyn spikebench::coordinator::serve::InferenceBackend> =
+        match spikebench::runtime::Runtime::cpu() {
+            Ok(rt) => {
+                let hlo = ctx.manifest.file(&ds, "cnn_hlo")?;
+                println!("backend: PJRT ({})", hlo.display());
+                Box::new(PjrtBackend { runtime: rt, hlo })
+            }
+            Err(e) => {
+                println!("backend: rust-nn fallback (PJRT unavailable: {e})");
+                Box::new(NetworkBackend { net: load_network(&ctx.manifest, &ds, WeightKind::Cnn)? })
+            }
+        };
+
+    let server = Server::start(backend, cfg);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_req {
+        pending.push((i, server.classify_async(eval.images[i % eval.len()].clone())?));
+    }
+    let mut correct = 0usize;
+    let mut accel_energy = 0.0;
+    let mut batch_sizes = Vec::new();
+    for (i, rx) in pending {
+        let r = rx.recv()?;
+        if r.predicted == eval.labels[i % eval.len()] {
+            correct += 1;
+        }
+        accel_energy += r.accel_energy_j;
+        batch_sizes.push(r.batch_size);
+    }
+    let wall = t0.elapsed();
+    let stats = server.shutdown();
+    println!(
+        "served {n_req} requests in {:.2?} ({:.0} req/s) | accuracy {:.1}% | \
+         mean batch {:.1} | simulated accel energy {:.3} mJ total",
+        wall,
+        n_req as f64 / wall.as_secs_f64(),
+        100.0 * correct as f64 / n_req as f64,
+        batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len().max(1) as f64,
+        accel_energy * 1e3,
+    );
+    println!("executor: {} batches, max batch {}", stats.batches, stats.max_batch_seen);
+    Ok(())
+}
+
+/// Quick artifact validation (a CLI-reachable subset of tests/golden.rs).
+fn validate(args: &Args) -> Result<()> {
+    let n = args.get_usize("samples", 64);
+    let mut ctx = Ctx::load()?;
+    let mut rt = spikebench::runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    for ds in ["mnist", "svhn", "cifar"] {
+        let info = ctx.info(ds)?.clone();
+        let net = load_network(&ctx.manifest, ds, WeightKind::Cnn)?;
+        let snn_net = load_network(&ctx.manifest, ds, WeightKind::Snn)?;
+        let eval = ctx.eval(ds)?.clone();
+        let hlo = ctx.manifest.file(ds, "cnn_hlo")?;
+        rt.load(&hlo)?;
+        let mut agree = 0;
+        let mut correct_cnn = 0;
+        let mut correct_snn = 0;
+        let n = n.min(eval.len());
+        for i in 0..n {
+            let x = &eval.images[i];
+            let pjrt = rt.run_cnn(&hlo, x)?;
+            let rust = net.forward(x);
+            if spikebench::nn::network::argmax(&pjrt) == spikebench::nn::network::argmax(&rust) {
+                agree += 1;
+            }
+            if spikebench::nn::network::argmax(&pjrt) == eval.labels[i] {
+                correct_cnn += 1;
+            }
+            let snn =
+                spikebench::nn::snn::snn_infer(&snn_net, x, info.t_steps, info.v_th);
+            if snn.classify() == eval.labels[i] {
+                correct_snn += 1;
+            }
+        }
+        println!(
+            "{ds}: pjrt/rust agreement {agree}/{n} | cnn acc {:.1}% | snn acc {:.1}% \
+             (manifest: {:.1}% / {:.1}%)",
+            100.0 * correct_cnn as f64 / n as f64,
+            100.0 * correct_snn as f64 / n as f64,
+            info.accuracy_cnn * 100.0,
+            info.accuracy_snn * 100.0,
+        );
+    }
+    Ok(())
+}

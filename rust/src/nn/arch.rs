@@ -1,0 +1,136 @@
+//! Architecture-string parser (Table 6 notation), mirroring
+//! `python/compile/arch.py`.
+//!
+//! `nCk` = conv layer with n kernels of size k×k (same padding + ReLU),
+//! `Pn` = max-pool with window/stride n, bare `n` = fully connected layer
+//! (final dense layer = logits, no ReLU).
+
+use anyhow::{bail, Result};
+
+/// One layer of a Table 6 architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// Convolution: `out_channels` kernels of `kernel`×`kernel`, same padding.
+    Conv { out_channels: usize, kernel: usize },
+    /// Max pooling with window == stride (floor division of spatial dims).
+    Pool { window: usize },
+    /// Fully connected layer over the flattened activation.
+    Dense { units: usize },
+}
+
+/// The three Table 6 architecture strings.
+pub const ARCH_MNIST: &str = "32C3-32C3-P3-10C3-10";
+pub const ARCH_SVHN: &str = "1C3-32C3-32C3-P3-64C3-64C3-P3-128C3-128C3-10";
+pub const ARCH_CIFAR: &str = "32C3-32C3-P3-64C3-64C3-P3-128C3-128C3-128C3-10";
+
+/// Parse an architecture string into layer specs.
+pub fn parse_arch(s: &str) -> Result<Vec<LayerSpec>> {
+    let mut out = Vec::new();
+    for tok in s.split('-') {
+        if tok.is_empty() {
+            bail!("empty token in arch string {s:?}");
+        }
+        if let Some((n, k)) = tok.split_once('C') {
+            out.push(LayerSpec::Conv { out_channels: n.parse()?, kernel: k.parse()? });
+        } else if let Some(w) = tok.strip_prefix('P') {
+            out.push(LayerSpec::Pool { window: w.parse()? });
+        } else {
+            out.push(LayerSpec::Dense { units: tok.parse()? });
+        }
+    }
+    Ok(out)
+}
+
+/// Output shape of every layer given an input (C, H, W); dense = (n, 1, 1).
+pub fn layer_shapes(arch: &[LayerSpec], input: (usize, usize, usize)) -> Vec<(usize, usize, usize)> {
+    let (mut c, mut h, mut w) = input;
+    let mut out = Vec::with_capacity(arch.len());
+    for spec in arch {
+        match *spec {
+            LayerSpec::Conv { out_channels, .. } => {
+                c = out_channels;
+                out.push((c, h, w));
+            }
+            LayerSpec::Pool { window } => {
+                h /= window;
+                w /= window;
+                out.push((c, h, w));
+            }
+            LayerSpec::Dense { units } => {
+                out.push((units, 1, 1));
+            }
+        }
+    }
+    out
+}
+
+/// Total weight + bias parameters (matches Keras / python arch.py).
+pub fn param_count(arch: &[LayerSpec], input: (usize, usize, usize)) -> usize {
+    let (mut c, mut h, mut w) = input;
+    let mut flat: Option<usize> = None;
+    let mut total = 0usize;
+    for spec in arch {
+        match *spec {
+            LayerSpec::Conv { out_channels, kernel } => {
+                total += out_channels * (c * kernel * kernel + 1);
+                c = out_channels;
+            }
+            LayerSpec::Pool { window } => {
+                h /= window;
+                w /= window;
+            }
+            LayerSpec::Dense { units } => {
+                let f = flat.unwrap_or(c * h * w);
+                total += units * (f + 1);
+                flat = Some(units);
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mnist_arch() {
+        let a = parse_arch(ARCH_MNIST).unwrap();
+        assert_eq!(
+            a,
+            vec![
+                LayerSpec::Conv { out_channels: 32, kernel: 3 },
+                LayerSpec::Conv { out_channels: 32, kernel: 3 },
+                LayerSpec::Pool { window: 3 },
+                LayerSpec::Conv { out_channels: 10, kernel: 3 },
+                LayerSpec::Dense { units: 10 },
+            ]
+        );
+    }
+
+    /// Table 6 parameter counts: MNIST and CIFAR-10 match the paper
+    /// exactly; SVHN differs by 24 (paper: 297,966 — see DESIGN.md §9).
+    #[test]
+    fn table6_param_counts() {
+        let m = parse_arch(ARCH_MNIST).unwrap();
+        assert_eq!(param_count(&m, (1, 28, 28)), 20_568);
+        let s = parse_arch(ARCH_SVHN).unwrap();
+        assert_eq!(param_count(&s, (3, 32, 32)), 297_990);
+        let c = parse_arch(ARCH_CIFAR).unwrap();
+        assert_eq!(param_count(&c, (3, 32, 32)), 446_122);
+    }
+
+    #[test]
+    fn shape_propagation() {
+        let a = parse_arch(ARCH_MNIST).unwrap();
+        let shapes = layer_shapes(&a, (1, 28, 28));
+        assert_eq!(shapes, vec![(32, 28, 28), (32, 28, 28), (32, 9, 9), (10, 9, 9), (10, 1, 1)]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_arch("32C").is_err());
+        assert!(parse_arch("foo").is_err());
+        assert!(parse_arch("32C3--10").is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Same-padding 2-D convolution (NCHW × OIHW), stride 1.
+//!
+//! Matches `jax.lax.conv_general_dilated(..., padding="SAME")` for odd
+//! kernels; the golden tests in `rust/tests/golden.rs` pin this against
+//! the AOT artifacts.
+
+use super::tensor::Tensor3;
+
+/// Convolution weights: (C_out, C_in, K, K) in C order + bias (C_out).
+#[derive(Debug, Clone)]
+pub struct ConvWeights {
+    pub c_out: usize,
+    pub c_in: usize,
+    pub k: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl ConvWeights {
+    pub fn new(c_out: usize, c_in: usize, k: usize, w: Vec<f32>, b: Vec<f32>) -> Self {
+        assert_eq!(w.len(), c_out * c_in * k * k);
+        assert_eq!(b.len(), c_out);
+        ConvWeights { c_out, c_in, k, w, b }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, co: usize, ci: usize, ky: usize, kx: usize) -> f32 {
+        self.w[((co * self.c_in + ci) * self.k + ky) * self.k + kx]
+    }
+}
+
+/// `out[co, y, x] = b[co] + Σ_{ci,ky,kx} w[co,ci,ky,kx] · x[ci, y+ky-p, x+kx-p]`
+/// with zero padding `p = (k-1)/2` (same padding, odd kernels).
+pub fn conv2d_same(x: &Tensor3, wts: &ConvWeights) -> Tensor3 {
+    assert_eq!(x.c, wts.c_in, "channel mismatch");
+    let (h, w) = (x.h, x.w);
+    let k = wts.k;
+    let pad = (k - 1) / 2;
+    let mut out = Tensor3::zeros(wts.c_out, h, w);
+    for co in 0..wts.c_out {
+        let bias = wts.b[co];
+        for y in 0..h {
+            for xx in 0..w {
+                let mut acc = bias;
+                for ci in 0..wts.c_in {
+                    for ky in 0..k {
+                        let sy = y as isize + ky as isize - pad as isize;
+                        if sy < 0 || sy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let sx = xx as isize + kx as isize - pad as isize;
+                            if sx < 0 || sx >= w as isize {
+                                continue;
+                            }
+                            acc += wts.at(co, ci, ky, kx) * x.get(ci, sy as usize, sx as usize);
+                        }
+                    }
+                }
+                out.set(co, y, xx, acc);
+            }
+        }
+    }
+    out
+}
+
+/// ReLU in place.
+pub fn relu(x: &mut Tensor3) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel() {
+        // 1x1x3x3 kernel with 1 at center == identity under same padding.
+        let mut w = vec![0.0; 9];
+        w[4] = 1.0;
+        let wts = ConvWeights::new(1, 1, 3, w, vec![0.0]);
+        let x = Tensor3::from_vec(1, 2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = conv2d_same(&x, &wts);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn box_kernel_sums_neighbourhood() {
+        let wts = ConvWeights::new(1, 1, 3, vec![1.0; 9], vec![0.0]);
+        let x = Tensor3::from_vec(1, 3, 3, vec![1.0; 9]);
+        let y = conv2d_same(&x, &wts);
+        // Center sees all 9; corner sees 4.
+        assert_eq!(y.get(0, 1, 1), 9.0);
+        assert_eq!(y.get(0, 0, 0), 4.0);
+    }
+
+    #[test]
+    fn bias_is_added_everywhere() {
+        let wts = ConvWeights::new(2, 1, 1, vec![0.0, 0.0], vec![3.0, -1.0]);
+        let x = Tensor3::zeros(1, 2, 2);
+        let y = conv2d_same(&x, &wts);
+        assert!(y.data[..4].iter().all(|&v| v == 3.0));
+        assert!(y.data[4..].iter().all(|&v| v == -1.0));
+    }
+
+    #[test]
+    fn multi_channel_accumulates() {
+        // 2 input channels, kernel all-ones 1x1: output = x0 + x1.
+        let wts = ConvWeights::new(1, 2, 1, vec![1.0, 1.0], vec![0.0]);
+        let x = Tensor3::from_vec(2, 1, 2, vec![1.0, 2.0, 10.0, 20.0]);
+        let y = conv2d_same(&x, &wts);
+        assert_eq!(y.data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut x = Tensor3::from_vec(1, 1, 3, vec![-1.0, 0.0, 2.0]);
+        relu(&mut x);
+        assert_eq!(x.data, vec![0.0, 0.0, 2.0]);
+    }
+}

@@ -1,0 +1,65 @@
+//! Fully connected layer: `out = W · x + b` with W of shape (out, in).
+
+/// Dense weights (row-major (out, in)) + bias.
+#[derive(Debug, Clone)]
+pub struct DenseWeights {
+    pub n_out: usize,
+    pub n_in: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl DenseWeights {
+    pub fn new(n_out: usize, n_in: usize, w: Vec<f32>, b: Vec<f32>) -> Self {
+        assert_eq!(w.len(), n_out * n_in);
+        assert_eq!(b.len(), n_out);
+        DenseWeights { n_out, n_in, w, b }
+    }
+}
+
+/// Matrix-vector product.
+pub fn dense(x: &[f32], wts: &DenseWeights) -> Vec<f32> {
+    assert_eq!(x.len(), wts.n_in, "dense input size mismatch");
+    let mut out = wts.b.clone();
+    for (o, out_v) in out.iter_mut().enumerate() {
+        let row = &wts.w[o * wts.n_in..(o + 1) * wts.n_in];
+        let mut acc = 0.0f32;
+        for (wv, xv) in row.iter().zip(x) {
+            acc += wv * xv;
+        }
+        *out_v += acc;
+    }
+    out
+}
+
+/// Sparse accumulation used by the SNN path: add column `i` of W into a
+/// running accumulator (one presynaptic spike event on neuron `i`).
+pub fn dense_accumulate_event(acc: &mut [f32], wts: &DenseWeights, i: usize) {
+    assert_eq!(acc.len(), wts.n_out);
+    for (o, a) in acc.iter_mut().enumerate() {
+        *a += wts.w[o * wts.n_in + i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec() {
+        let wts = DenseWeights::new(2, 3, vec![1.0, 0.0, 0.0, 0.0, 1.0, 1.0], vec![10.0, 20.0]);
+        let y = dense(&[1.0, 2.0, 3.0], &wts);
+        assert_eq!(y, vec![11.0, 25.0]);
+    }
+
+    #[test]
+    fn event_accumulation_matches_dense_on_binary_input() {
+        let wts = DenseWeights::new(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![0.0, 0.0]);
+        // Binary input selecting neurons 0 and 2.
+        let dense_out = dense(&[1.0, 0.0, 1.0], &wts);
+        let mut acc = vec![0.0; 2];
+        dense_accumulate_event(&mut acc, &wts, 0);
+        dense_accumulate_event(&mut acc, &wts, 2);
+        assert_eq!(acc, dense_out);
+    }
+}

@@ -1,0 +1,252 @@
+//! Load networks + metadata from `artifacts/` (manifest.json + SBT1 blobs).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::arch::{parse_arch, LayerSpec};
+use super::conv::ConvWeights;
+use super::dense::DenseWeights;
+use super::network::{LayerWeights, Network};
+use crate::util::json::Json;
+use crate::util::tensorfile::{read_tensors, Tensor};
+
+/// Parsed manifest entry for one dataset.
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub name: String,
+    pub arch: String,
+    pub input_shape: (usize, usize, usize),
+    pub t_steps: usize,
+    pub v_th: f32,
+    pub cnn_bits: u32,
+    pub snn_bits: u32,
+    pub param_count: usize,
+    pub accuracy_cnn: f64,
+    pub accuracy_snn: f64,
+    pub spikes_mean: f64,
+    pub spikes_min: f64,
+    pub spikes_max: f64,
+    pub spikes_per_class: Vec<f64>,
+    pub files: BTreeMap<String, String>,
+}
+
+/// The whole artifacts manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub datasets: BTreeMap<String, DatasetInfo>,
+}
+
+impl Manifest {
+    /// Load `<root>/manifest.json`.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", root.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let mut datasets = BTreeMap::new();
+        let ds_obj = j
+            .get("datasets")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'datasets'"))?;
+        for (name, d) in ds_obj {
+            let shape = d
+                .get("input_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing input_shape"))?;
+            if shape.len() != 3 {
+                bail!("{name}: input_shape must be rank 3");
+            }
+            let get_f = |k: &str| d.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            let files = d
+                .get("files")
+                .and_then(Json::as_obj)
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                        .collect()
+                })
+                .unwrap_or_default();
+            let spikes_per_class = (0..10)
+                .map(|c| {
+                    d.get("spikes_per_class")
+                        .and_then(|o| o.get(&c.to_string()))
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0)
+                })
+                .collect();
+            datasets.insert(
+                name.clone(),
+                DatasetInfo {
+                    name: name.clone(),
+                    arch: d
+                        .get("arch")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing arch"))?
+                        .to_string(),
+                    input_shape: (
+                        shape[0].as_usize().unwrap_or(0),
+                        shape[1].as_usize().unwrap_or(0),
+                        shape[2].as_usize().unwrap_or(0),
+                    ),
+                    t_steps: d.get("t_steps").and_then(Json::as_usize).unwrap_or(4),
+                    v_th: get_f("v_th") as f32,
+                    cnn_bits: get_f("cnn_bits") as u32,
+                    snn_bits: get_f("snn_bits") as u32,
+                    param_count: d.get("param_count").and_then(Json::as_usize).unwrap_or(0),
+                    accuracy_cnn: get_f("accuracy_cnn"),
+                    accuracy_snn: get_f("accuracy_snn"),
+                    spikes_mean: get_f("spikes_mean"),
+                    spikes_min: get_f("spikes_min"),
+                    spikes_max: get_f("spikes_max"),
+                    spikes_per_class,
+                    files,
+                },
+            );
+        }
+        Ok(Manifest { root: root.to_path_buf(), datasets })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetInfo> {
+        self.datasets
+            .get(name)
+            .ok_or_else(|| anyhow!("dataset {name} not in manifest (have: {:?})", self.datasets.keys()))
+    }
+
+    pub fn file(&self, ds: &str, kind: &str) -> Result<PathBuf> {
+        let info = self.dataset(ds)?;
+        let f = info
+            .files
+            .get(kind)
+            .ok_or_else(|| anyhow!("{ds}: no '{kind}' file in manifest"))?;
+        Ok(self.root.join(f))
+    }
+}
+
+/// Which weight set to load from the blob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightKind {
+    /// Quantized CNN weights (the FINN artifact).
+    Cnn,
+    /// Converted + quantized SNN weights (the Sommer artifact).
+    Snn,
+}
+
+impl WeightKind {
+    fn prefix(self) -> &'static str {
+        match self {
+            WeightKind::Cnn => "cnn",
+            WeightKind::Snn => "snn",
+        }
+    }
+}
+
+/// Build a [`Network`] for `ds` from the artifacts.
+pub fn load_network(manifest: &Manifest, ds: &str, kind: WeightKind) -> Result<Network> {
+    let info = manifest.dataset(ds)?;
+    let arch = parse_arch(&info.arch)?;
+    let path = manifest.file(ds, "weights")?;
+    let tensors = read_tensors(&path)?;
+    let net = network_from_tensors(&arch, info.input_shape, &tensors, kind.prefix())?;
+    net.validate()?;
+    Ok(net)
+}
+
+/// Assemble a network from `{prefix}/{i}/w` + `{prefix}/{i}/b` tensors.
+pub fn network_from_tensors(
+    arch: &[LayerSpec],
+    input_shape: (usize, usize, usize),
+    tensors: &BTreeMap<String, Tensor>,
+    prefix: &str,
+) -> Result<Network> {
+    let mut layers = Vec::with_capacity(arch.len());
+    let (mut c, mut h, mut w) = input_shape;
+    let mut flat: Option<usize> = None;
+    for (i, spec) in arch.iter().enumerate() {
+        match *spec {
+            LayerSpec::Conv { out_channels, kernel } => {
+                let wt = get(tensors, &format!("{prefix}/{i}/w"))?;
+                let bt = get(tensors, &format!("{prefix}/{i}/b"))?;
+                if wt.dims != [out_channels, c, kernel, kernel] {
+                    bail!(
+                        "layer {i}: conv weights {:?} do not match arch ({out_channels}, {c}, {kernel}, {kernel})",
+                        wt.dims
+                    );
+                }
+                if bt.len() != out_channels {
+                    bail!("layer {i}: conv bias {:?} != {out_channels}", bt.dims);
+                }
+                layers.push(LayerWeights::Conv(ConvWeights::new(
+                    out_channels,
+                    c,
+                    kernel,
+                    wt.as_f32()?.to_vec(),
+                    bt.as_f32()?.to_vec(),
+                )));
+                c = out_channels;
+            }
+            LayerSpec::Pool { window } => {
+                layers.push(LayerWeights::Pool(window));
+                h /= window;
+                w /= window;
+            }
+            LayerSpec::Dense { units } => {
+                let f = flat.unwrap_or(c * h * w);
+                let wt = get(tensors, &format!("{prefix}/{i}/w"))?;
+                let bt = get(tensors, &format!("{prefix}/{i}/b"))?;
+                if wt.dims != [units, f] {
+                    bail!("layer {i}: dense weights {:?} do not match arch ({units}, {f})", wt.dims);
+                }
+                if bt.len() != units {
+                    bail!("layer {i}: dense bias {:?} != {units}", bt.dims);
+                }
+                layers.push(LayerWeights::Dense(DenseWeights::new(
+                    units,
+                    f,
+                    wt.as_f32()?.to_vec(),
+                    bt.as_f32()?.to_vec(),
+                )));
+                flat = Some(units);
+            }
+        }
+    }
+    Ok(Network { arch: arch.to_vec(), layers, input_shape })
+}
+
+fn get<'a>(tensors: &'a BTreeMap<String, Tensor>, key: &str) -> Result<&'a Tensor> {
+    tensors.get(key).ok_or_else(|| anyhow!("missing tensor {key}"))
+}
+
+/// Default artifacts directory: `$SPIKEBENCH_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("SPIKEBENCH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tensorfile::Tensor;
+
+    #[test]
+    fn assembles_from_tensors() {
+        let arch = parse_arch("2C1-P2-3").unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("x/0/w".into(), Tensor::f32(vec![2, 1, 1, 1], vec![1.0, 2.0]));
+        m.insert("x/0/b".into(), Tensor::f32(vec![2], vec![0.0, 0.0]));
+        m.insert("x/2/w".into(), Tensor::f32(vec![3, 8], vec![0.5; 24]));
+        m.insert("x/2/b".into(), Tensor::f32(vec![3], vec![0.0; 3]));
+        let net = network_from_tensors(&arch, (1, 4, 4), &m, "x").unwrap();
+        net.validate().unwrap();
+        assert_eq!(net.layers.len(), 3);
+    }
+
+    #[test]
+    fn missing_tensor_is_an_error() {
+        let arch = parse_arch("2C1").unwrap();
+        let m = BTreeMap::new();
+        assert!(network_from_tensors(&arch, (1, 4, 4), &m, "x").is_err());
+    }
+}

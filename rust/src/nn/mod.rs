@@ -1,0 +1,23 @@
+//! Dependency-free NCHW neural-network substrate.
+//!
+//! This is the *functional golden model* both accelerator simulators build
+//! on: the CNN forward pass defines what the FINN pipeline computes, and
+//! [`snn`](crate::nn::snn) (the m-TTFS functional simulator) defines the
+//! spike trains the cycle-level SNN accelerator processes.  Numerics are
+//! cross-validated against the JAX/Pallas artifacts (see
+//! `rust/tests/golden.rs`) — the Python traces in `artifacts/*_traces.bin`
+//! were produced by the L2 graph and must match this module spike-for-spike.
+
+pub mod arch;
+pub mod conv;
+pub mod dense;
+pub mod loader;
+pub mod network;
+pub mod pool;
+pub mod quant;
+pub mod snn;
+pub mod tensor;
+
+pub use arch::{parse_arch, LayerSpec};
+pub use network::Network;
+pub use tensor::Tensor3;

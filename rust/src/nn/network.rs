@@ -1,0 +1,204 @@
+//! Network container + CNN forward pass (the functional golden model for
+//! the FINN-style accelerator).
+
+use anyhow::{bail, Result};
+
+use super::arch::LayerSpec;
+use super::conv::{conv2d_same, relu, ConvWeights};
+use super::dense::{dense, DenseWeights};
+use super::pool::maxpool;
+use super::tensor::Tensor3;
+
+/// Weights for one layer (pool layers carry only their window).
+#[derive(Debug, Clone)]
+pub enum LayerWeights {
+    Conv(ConvWeights),
+    Pool(usize),
+    Dense(DenseWeights),
+}
+
+/// A loaded network: architecture + weights + input shape.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub arch: Vec<LayerSpec>,
+    pub layers: Vec<LayerWeights>,
+    pub input_shape: (usize, usize, usize),
+}
+
+impl Network {
+    /// Validate that weights are consistent with the architecture.
+    pub fn validate(&self) -> Result<()> {
+        if self.arch.len() != self.layers.len() {
+            bail!("arch/layer length mismatch: {} vs {}", self.arch.len(), self.layers.len());
+        }
+        let (mut c, mut h, mut w) = self.input_shape;
+        let mut flat: Option<usize> = None;
+        for (spec, lw) in self.arch.iter().zip(&self.layers) {
+            match (spec, lw) {
+                (LayerSpec::Conv { out_channels, kernel }, LayerWeights::Conv(cw)) => {
+                    if cw.c_out != *out_channels || cw.k != *kernel || cw.c_in != c {
+                        bail!("conv weight shape mismatch: spec {spec:?} got ({}, {}, {})", cw.c_out, cw.c_in, cw.k);
+                    }
+                    c = *out_channels;
+                }
+                (LayerSpec::Pool { window }, LayerWeights::Pool(n)) => {
+                    if n != window {
+                        bail!("pool window mismatch");
+                    }
+                    h /= window;
+                    w /= window;
+                }
+                (LayerSpec::Dense { units }, LayerWeights::Dense(dw)) => {
+                    let f = flat.unwrap_or(c * h * w);
+                    if dw.n_out != *units || dw.n_in != f {
+                        bail!("dense weight shape mismatch: expected ({units}, {f}) got ({}, {})", dw.n_out, dw.n_in);
+                    }
+                    flat = Some(*units);
+                }
+                _ => bail!("layer kind mismatch: {spec:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// CNN forward pass; returns logits.
+    pub fn forward(&self, x: &Tensor3) -> Vec<f32> {
+        let n = self.arch.len();
+        let mut act = x.clone();
+        let mut flat: Option<Vec<f32>> = None;
+        for (i, lw) in self.layers.iter().enumerate() {
+            match lw {
+                LayerWeights::Conv(cw) => {
+                    act = conv2d_same(&act, cw);
+                    relu(&mut act);
+                }
+                LayerWeights::Pool(w) => {
+                    act = maxpool(&act, *w);
+                }
+                LayerWeights::Dense(dw) => {
+                    let input: Vec<f32> = match flat.take() {
+                        Some(v) => v,
+                        None => act.flat().to_vec(),
+                    };
+                    let mut out = dense(&input, dw);
+                    if i != n - 1 {
+                        for v in &mut out {
+                            if *v < 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                    }
+                    flat = Some(out);
+                }
+            }
+        }
+        flat.unwrap_or_else(|| act.flat().to_vec())
+    }
+
+    /// argmax(logits) — the classification result.
+    pub fn classify(&self, x: &Tensor3) -> usize {
+        argmax(&self.forward(x))
+    }
+
+    /// Total multiply-accumulate operations of one forward pass (drives
+    /// the FINN latency model).
+    pub fn total_macs(&self) -> u64 {
+        let (mut c, mut h, mut w) = self.input_shape;
+        let mut flat: Option<usize> = None;
+        let mut total = 0u64;
+        for spec in &self.arch {
+            match *spec {
+                LayerSpec::Conv { out_channels, kernel } => {
+                    total += (out_channels * c * kernel * kernel * h * w) as u64;
+                    c = out_channels;
+                }
+                LayerSpec::Pool { window } => {
+                    h /= window;
+                    w /= window;
+                }
+                LayerSpec::Dense { units } => {
+                    let f = flat.unwrap_or(c * h * w);
+                    total += (units * f) as u64;
+                    flat = Some(units);
+                }
+            }
+        }
+        total
+    }
+}
+
+/// Index of the maximum element (ties -> first).
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::arch::parse_arch;
+
+    fn tiny_net() -> Network {
+        // 2C1-P2-3 over a 1x4x4 input.
+        let arch = parse_arch("2C1-P2-3").unwrap();
+        let conv = ConvWeights::new(2, 1, 1, vec![1.0, -1.0], vec![0.0, 0.0]);
+        let dense = DenseWeights::new(3, 8, vec![0.1; 24], vec![0.0, 1.0, -1.0]);
+        Network {
+            arch,
+            layers: vec![LayerWeights::Conv(conv), LayerWeights::Pool(2), LayerWeights::Dense(dense)],
+            input_shape: (1, 4, 4),
+        }
+    }
+
+    #[test]
+    fn validates_consistent_net() {
+        tiny_net().validate().unwrap();
+    }
+
+    #[test]
+    fn detects_shape_mismatch() {
+        let mut net = tiny_net();
+        if let LayerWeights::Dense(d) = &mut net.layers[2] {
+            d.n_in = 5;
+            d.w.truncate(15);
+        }
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn forward_shapes_and_relu() {
+        let net = tiny_net();
+        let x = Tensor3::from_vec(1, 4, 4, (0..16).map(|i| i as f32 / 16.0).collect());
+        let y = net.forward(&x);
+        assert_eq!(y.len(), 3);
+        // Second channel is negated input -> ReLU zeroes it; first channel
+        // max-pool passes positives, so logits differ only by bias + 0.1*sum.
+        assert!(y[1] > y[0] && y[0] > y[2]);
+    }
+
+    #[test]
+    fn argmax_ties_first() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn macs_mnist() {
+        use crate::nn::arch::{param_count, ARCH_MNIST};
+        let arch = parse_arch(ARCH_MNIST).unwrap();
+        // 28x28: conv1 32*1*9*784, conv2 32*32*9*784, conv3 10*32*9*81, fc 10*810
+        let expect = 32 * 9 * 784 + 32 * 32 * 9 * 784 + 10 * 32 * 9 * 81 + 10 * 810;
+        let net = Network {
+            arch: arch.clone(),
+            layers: vec![],
+            input_shape: (1, 28, 28),
+        };
+        // total_macs only uses arch + input shape.
+        assert_eq!(net.total_macs(), expect as u64);
+        assert_eq!(param_count(&arch, (1, 28, 28)), 20_568);
+    }
+}

@@ -1,0 +1,55 @@
+//! Max pooling with window == stride (floor division), matching
+//! `kernels/ref.py::maxpool_ref`.
+
+use super::tensor::Tensor3;
+
+/// Max-pool with square window `n` and stride `n`; trailing rows/cols that
+/// do not fill a window are dropped (floor semantics, like Keras).
+pub fn maxpool(x: &Tensor3, n: usize) -> Tensor3 {
+    let ho = x.h / n;
+    let wo = x.w / n;
+    let mut out = Tensor3::zeros(x.c, ho, wo);
+    for c in 0..x.c {
+        for y in 0..ho {
+            for xx in 0..wo {
+                let mut m = f32::NEG_INFINITY;
+                for dy in 0..n {
+                    for dx in 0..n {
+                        m = m.max(x.get(c, y * n + dy, xx * n + dx));
+                    }
+                }
+                out.set(c, y, xx, m);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools_max() {
+        let x = Tensor3::from_vec(1, 2, 2, vec![1.0, 5.0, 3.0, 2.0]);
+        let y = maxpool(&x, 2);
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn floor_division_drops_remainder() {
+        // 28 / 3 = 9 output rows; the 28th row is dropped.
+        let mut x = Tensor3::zeros(1, 28, 28);
+        x.set(0, 27, 27, 100.0); // in the dropped strip
+        let y = maxpool(&x, 3);
+        assert_eq!((y.h, y.w), (9, 9));
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn per_channel_independent() {
+        let x = Tensor3::from_vec(2, 2, 2, vec![1.0, 2.0, 3.0, 4.0, -1.0, -2.0, -3.0, -4.0]);
+        let y = maxpool(&x, 2);
+        assert_eq!(y.data, vec![4.0, -1.0]);
+    }
+}

@@ -1,0 +1,74 @@
+//! Per-tensor symmetric quantization (mirrors `python/compile/quant.py`).
+//!
+//! The Rust simulators account datapath width from the *bit width* of the
+//! quantized weights (Tables 2/3: 6/8/16-bit variants); this module
+//! re-derives codes/scales when a bit-width ablation is run natively.
+
+/// Quantize to signed `bits`-bit codes with per-tensor scale.
+pub fn quantize_symmetric(w: &[f32], bits: u32) -> (Vec<i32>, f32) {
+    assert!((2..=16).contains(&bits), "unsupported bit width {bits}");
+    let qmax = (1i32 << (bits - 1)) - 1;
+    let amax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if amax == 0.0 {
+        return (vec![0; w.len()], 1.0);
+    }
+    let scale = amax / qmax as f32;
+    let codes = w
+        .iter()
+        .map(|&v| ((v / scale).round() as i32).clamp(-qmax, qmax))
+        .collect();
+    (codes, scale)
+}
+
+/// Dequantize codes back to floats.
+pub fn dequantize(codes: &[i32], scale: f32) -> Vec<f32> {
+    codes.iter().map(|&c| c as f32 * scale).collect()
+}
+
+/// Worst-case quantization error bound: scale / 2.
+pub fn error_bound(scale: f32) -> f32 {
+    scale * 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check_default, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        check_default("quant error bound", |r: &mut Rng| {
+            let bits = 2 + r.below(7) as u32; // 2..=8
+            let n = 1 + r.below(64);
+            let w: Vec<f32> = (0..n).map(|_| r.normal() * 3.0).collect();
+            let (codes, scale) = quantize_symmetric(&w, bits);
+            let back = dequantize(&codes, scale);
+            for (a, b) in w.iter().zip(&back) {
+                if (a - b).abs() > error_bound(scale) + 1e-6 {
+                    return Err(format!("error {} > bound {}", (a - b).abs(), error_bound(scale)));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let (codes, scale) = quantize_symmetric(&[0.0, 0.0], 8);
+        assert_eq!(codes, vec![0, 0]);
+        assert_eq!(scale, 1.0);
+    }
+
+    #[test]
+    fn codes_within_range() {
+        let _ = Config::default();
+        let mut r = Rng::new(9);
+        let w: Vec<f32> = (0..100).map(|_| r.normal()).collect();
+        for bits in [2u32, 4, 6, 8] {
+            let qmax = (1i32 << (bits - 1)) - 1;
+            let (codes, _) = quantize_symmetric(&w, bits);
+            assert!(codes.iter().all(|&c| c.abs() <= qmax));
+        }
+    }
+}

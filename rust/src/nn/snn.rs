@@ -1,0 +1,545 @@
+//! Functional m-TTFS SNN simulator (event-driven).
+//!
+//! Semantics mirror `python/compile/model.py::snn_forward` exactly:
+//!
+//! * Integrate-and-fire neurons that spike **once** and are never reset
+//!   (the paper's §4 constraint).
+//! * m-TTFS slope coding (§2.1.2, Fig. 1(b)): a spike event is delivered
+//!   once; the receiving neuron adds the synapse weight to its membrane
+//!   *slope* `mu_m`, and the slope is re-integrated into the membrane
+//!   every subsequent algorithmic time step.  Early spikes therefore
+//!   contribute more — TTFS decoding — while event traffic stays at one
+//!   event per neuron, the sparsity the AEQ architecture exploits.
+//! * Constant-current input encoding (pixel value injected per step).
+//! * Spike-OR max-pool forwarding, non-spiking accumulator output layer.
+//!
+//! Unlike the L2 graph (dense masked convolutions — the TPU-friendly
+//! formulation), this simulator is *event-driven*: each spike scatters its
+//! K×K weight patch into the downstream slope tensor, which is exactly the
+//! operation the FPGA accelerator performs per queue entry.  The returned
+//! per-step event lists are what the cycle-level simulator
+//! ([`crate::snn`]) replays against its timing/energy model.
+
+use super::dense::dense_accumulate_event;
+use super::network::{argmax, LayerWeights, Network};
+use super::tensor::Tensor3;
+
+/// One spike event: position in the (C, H, W) feature map of its layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpikeEvent {
+    pub c: u16,
+    pub y: u16,
+    pub x: u16,
+}
+
+/// Result of a T-step SNN inference.
+#[derive(Debug, Clone)]
+pub struct SnnResult {
+    /// Output-layer membrane potential after T steps (the logits proxy).
+    pub logits: Vec<f32>,
+    /// `events[t][l]` = spikes emitted by layer `l` at step `t`
+    /// (l = 0 is the input-encoding layer, so there are `arch.len() + 1`
+    /// entries per step).
+    pub events: Vec<Vec<Vec<SpikeEvent>>>,
+    /// Total spikes per layer (summed over steps), aligned with `events`.
+    pub spike_counts: Vec<u64>,
+}
+
+impl SnnResult {
+    pub fn total_spikes(&self) -> u64 {
+        self.spike_counts.iter().sum()
+    }
+
+    pub fn classify(&self) -> usize {
+        argmax(&self.logits)
+    }
+}
+
+/// Layer state for the event-driven simulation.
+struct LayerState {
+    /// Membrane potential V.
+    v: Vec<f32>,
+    /// Slope accumulator S (weighted sum of arrived events).
+    s: Vec<f32>,
+    /// Spiked-once mask K.
+    k: Vec<bool>,
+    shape: (usize, usize, usize),
+}
+
+impl LayerState {
+    fn new(shape: (usize, usize, usize)) -> Self {
+        let n = shape.0 * shape.1 * shape.2;
+        LayerState { v: vec![0.0; n], s: vec![0.0; n], k: vec![false; n], shape }
+    }
+}
+
+/// Spike-encoding mode (the §2.1.2 design axis, Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnnMode {
+    /// m-TTFS slope coding: spike once, no reset, weights accumulate into
+    /// slopes (the Sommer architecture; the default everywhere).
+    MTtfs,
+    /// Rate coding: resetting IF neurons (Eq. 1/2 with the V > V_t
+    /// subtractive reset), neurons fire repeatedly, magnitude = firing
+    /// rate.  Synaptic input is delivered per spike (no slope
+    /// accumulator).  Used by the `encoding-mode` ablation to quantify
+    /// why the sparse architecture prefers TTFS-family codes: rate coding
+    /// multiplies event traffic.
+    Rate,
+}
+
+/// Run the T-step m-TTFS simulation of `net` (SNN-converted weights) on
+/// input `x` (values in [0, 1]).
+pub fn snn_infer(net: &Network, x: &Tensor3, t_steps: usize, v_th: f32) -> SnnResult {
+    snn_infer_mode(net, x, t_steps, v_th, SnnMode::MTtfs)
+}
+
+/// Rate-coded variant; event-list structure matches [`snn_infer`], so the
+/// cycle-level replay works unchanged on either encoding.
+pub fn snn_infer_rate(net: &Network, x: &Tensor3, t_steps: usize, v_th: f32) -> SnnResult {
+    snn_infer_mode(net, x, t_steps, v_th, SnnMode::Rate)
+}
+
+/// Mode-dispatching simulation core.
+pub fn snn_infer_mode(
+    net: &Network,
+    x: &Tensor3,
+    t_steps: usize,
+    v_th: f32,
+    mode: SnnMode,
+) -> SnnResult {
+    let shapes = super::arch::layer_shapes(&net.arch, net.input_shape);
+    let n_layers = net.arch.len();
+
+    let mut input_state = LayerState::new(net.input_shape);
+    let mut states: Vec<LayerState> = shapes.iter().map(|&s| LayerState::new(s)).collect();
+    let mut events: Vec<Vec<Vec<SpikeEvent>>> = Vec::with_capacity(t_steps);
+    let mut counts = vec![0u64; n_layers + 1];
+
+    for _t in 0..t_steps {
+        let mut step_events: Vec<Vec<SpikeEvent>> = Vec::with_capacity(n_layers + 1);
+
+        // Input encoding layer: V += pixel, threshold, fire (once / reset).
+        let in_events = match mode {
+            SnnMode::MTtfs => integrate_and_fire(&mut input_state, &x.data, v_th),
+            SnnMode::Rate => integrate_and_fire_reset(&mut input_state, &x.data, v_th),
+        };
+        counts[0] += in_events.len() as u64;
+        step_events.push(in_events);
+
+        for (i, lw) in net.layers.iter().enumerate() {
+            let prev_events: &[SpikeEvent] = &step_events[i];
+            let layer_events = match lw {
+                LayerWeights::Conv(cw) => {
+                    // Scatter each presynaptic event's KxK weight patch into
+                    // the slope/current tensor (the FPGA's per-queue-entry op).
+                    let (_, h, w) = states[i].shape;
+                    for ev in prev_events {
+                        scatter_conv_event(&mut states[i].s, cw, h, w, ev);
+                    }
+                    debug_assert_eq!(states[i].shape.0, cw.c_out);
+                    let bias = BiasView::PerChannel(&cw.b);
+                    match mode {
+                        SnnMode::MTtfs => integrate_and_fire_slope(&mut states[i], bias, v_th),
+                        SnnMode::Rate => integrate_and_fire_current(&mut states[i], bias, v_th),
+                    }
+                }
+                LayerWeights::Pool(win) => {
+                    // Spike-OR forwarding (m-TTFS: once; rate: per step).
+                    let (_, ho, wo) = states[i].shape;
+                    let mut out = Vec::new();
+                    let mut seen_this_step = std::collections::HashSet::new();
+                    for ev in prev_events {
+                        let (py, px) = (ev.y as usize / win, ev.x as usize / win);
+                        if py >= ho || px >= wo {
+                            continue; // floor-division drop strip
+                        }
+                        let st = &mut states[i];
+                        let idx = (ev.c as usize * ho + py) * wo + px;
+                        let fire = match mode {
+                            SnnMode::MTtfs => {
+                                let f = !st.k[idx];
+                                st.k[idx] = true;
+                                f
+                            }
+                            SnnMode::Rate => seen_this_step.insert(idx),
+                        };
+                        if fire {
+                            out.push(SpikeEvent { c: ev.c, y: py as u16, x: px as u16 });
+                        }
+                    }
+                    counts[i + 1] += out.len() as u64;
+                    step_events.push(out);
+                    continue;
+                }
+                LayerWeights::Dense(dw) => {
+                    // Events arrive flattened over the previous layer shape.
+                    let prev_shape = if i == 0 { net.input_shape } else { shapes[i - 1] };
+                    for ev in prev_events {
+                        let flat =
+                            (ev.c as usize * prev_shape.1 + ev.y as usize) * prev_shape.2 + ev.x as usize;
+                        dense_accumulate_event(&mut states[i].s, dw, flat);
+                    }
+                    if i == n_layers - 1 {
+                        // Output accumulator: never spikes.  m-TTFS: the
+                        // slope re-integrates; rate: per-spike currents
+                        // accumulate once (then clear).
+                        let st = &mut states[i];
+                        for j in 0..st.v.len() {
+                            st.v[j] += st.s[j] + dw.b[j];
+                        }
+                        if mode == SnnMode::Rate {
+                            st.s.iter_mut().for_each(|s| *s = 0.0);
+                        }
+                        step_events.push(Vec::new());
+                        continue;
+                    }
+                    let bias = BiasView::PerUnit(&dw.b);
+                    match mode {
+                        SnnMode::MTtfs => integrate_and_fire_slope(&mut states[i], bias, v_th),
+                        SnnMode::Rate => integrate_and_fire_current(&mut states[i], bias, v_th),
+                    }
+                }
+            };
+            counts[i + 1] += layer_events.len() as u64;
+            step_events.push(layer_events);
+        }
+        events.push(step_events);
+    }
+
+    let logits = states[n_layers - 1].v.clone();
+    SnnResult { logits, events, spike_counts: counts }
+}
+
+/// Bias addressing for the integrate step.
+enum BiasView<'a> {
+    /// Conv: one bias per channel (hoisted per plane in the scan).
+    PerChannel(&'a [f32]),
+    /// Dense: one bias per unit.
+    PerUnit(&'a [f32]),
+}
+
+/// V += S + b; fire where V > v_th and not yet spiked.
+///
+/// §Perf: iterates plane-by-plane so the per-channel bias is hoisted out
+/// of the inner loop (no per-neuron division) and the V/S/K slices zip
+/// without bounds checks; spike-event construction (rare) stays off the
+/// fast path.
+fn integrate_and_fire_slope(st: &mut LayerState, bias: BiasView, v_th: f32) -> Vec<SpikeEvent> {
+    let (c_n, h, w) = st.shape;
+    let plane = h * w;
+    let mut out = Vec::with_capacity(64);
+    for c in 0..c_n {
+        let b = match &bias {
+            BiasView::PerChannel(bs) => bs[c],
+            BiasView::PerUnit(_) => 0.0,
+        };
+        let vs = &mut st.v[c * plane..(c + 1) * plane];
+        let ss = &st.s[c * plane..(c + 1) * plane];
+        let ks = &mut st.k[c * plane..(c + 1) * plane];
+        for (i, ((v, &s), kflag)) in vs.iter_mut().zip(ss).zip(ks.iter_mut()).enumerate() {
+            let b = if let BiasView::PerUnit(bs) = &bias { bs[c * plane + i] } else { b };
+            *v += s + b;
+            if !*kflag && *v > v_th {
+                *kflag = true;
+                out.push(SpikeEvent { c: c as u16, y: (i / w) as u16, x: (i % w) as u16 });
+            }
+        }
+    }
+    out
+}
+
+/// Input layer: V += current (per-neuron drive), fire once (m-TTFS).
+fn integrate_and_fire(st: &mut LayerState, drive: &[f32], v_th: f32) -> Vec<SpikeEvent> {
+    let (_, h, w) = st.shape;
+    let mut out = Vec::with_capacity(64);
+    for idx in 0..st.v.len() {
+        st.v[idx] += drive[idx];
+        if !st.k[idx] && st.v[idx] > v_th {
+            st.k[idx] = true;
+            let c = idx / (h * w);
+            let rem = idx % (h * w);
+            out.push(SpikeEvent { c: c as u16, y: (rem / w) as u16, x: (rem % w) as u16 });
+        }
+    }
+    out
+}
+
+/// Input layer, rate coding: V += drive; fire with subtractive reset
+/// (may fire every step — the rate encodes the magnitude).
+fn integrate_and_fire_reset(st: &mut LayerState, drive: &[f32], v_th: f32) -> Vec<SpikeEvent> {
+    let (_, h, w) = st.shape;
+    let mut out = Vec::with_capacity(64);
+    for idx in 0..st.v.len() {
+        st.v[idx] += drive[idx];
+        if st.v[idx] > v_th {
+            st.v[idx] -= v_th;
+            let c = idx / (h * w);
+            let rem = idx % (h * w);
+            out.push(SpikeEvent { c: c as u16, y: (rem / w) as u16, x: (rem % w) as u16 });
+        }
+    }
+    out
+}
+
+/// Rate-coded weighted layer: the accumulated per-spike currents S are
+/// integrated once and cleared (no slope re-integration), and neurons
+/// reset subtractively on firing (Eq. 1's reset branch).
+fn integrate_and_fire_current(st: &mut LayerState, bias: BiasView, v_th: f32) -> Vec<SpikeEvent> {
+    let (c_n, h, w) = st.shape;
+    let plane = h * w;
+    let mut out = Vec::with_capacity(64);
+    for c in 0..c_n {
+        let b = match &bias {
+            BiasView::PerChannel(bs) => bs[c],
+            BiasView::PerUnit(_) => 0.0,
+        };
+        let vs = &mut st.v[c * plane..(c + 1) * plane];
+        let ss = &mut st.s[c * plane..(c + 1) * plane];
+        for (i, (v, s)) in vs.iter_mut().zip(ss.iter_mut()).enumerate() {
+            let b = if let BiasView::PerUnit(bs) = &bias { bs[c * plane + i] } else { b };
+            *v += *s + b;
+            *s = 0.0;
+            if *v > v_th {
+                *v -= v_th;
+                out.push(SpikeEvent { c: c as u16, y: (i / w) as u16, x: (i % w) as u16 });
+            }
+        }
+    }
+    out
+}
+
+/// Scatter one presynaptic conv event: for every (co, ky, kx), add
+/// `w[co, ci, ky, kx]` into `S[co, y + ky - pad, x + kx - pad]`.
+///
+/// This is the whole stack's hot loop (the per-queue-entry operation the
+/// FPGA performs): it runs `events × C_out` times per inference.  Two
+/// §Perf optimizations (see EXPERIMENTS.md):
+///
+/// * per-(co, ci) contiguous weight slices instead of 4-D index math;
+/// * a branch-free K=3 interior fast path (the overwhelmingly common
+///   case: > 85% of events on the Table 6 maps are not on the border)
+///   operating on fixed-size 3-element windows so LLVM vectorizes and
+///   elides bounds checks.
+#[inline]
+fn scatter_conv_event(
+    s: &mut [f32],
+    cw: &super::conv::ConvWeights,
+    h: usize,
+    w: usize,
+    ev: &SpikeEvent,
+) {
+    let k = cw.k;
+    let pad = (k - 1) / 2;
+    let (ci, ey, ex) = (ev.c as usize, ev.y as usize, ev.x as usize);
+    let plane_len = h * w;
+
+    // Interior fast path for the ubiquitous K=3 case.
+    if k == 3 && ey >= 1 && ey + 1 < h && ex >= 1 && ex + 1 < w {
+        for co in 0..cw.c_out {
+            let wbase = (co * cw.c_in + ci) * 9;
+            let wk: &[f32; 9] = cw.w[wbase..wbase + 9].try_into().unwrap();
+            let base = co * plane_len + (ey - 1) * w + (ex - 1);
+            // Output (oy, ox) = (ey + pad - ky, ex + pad - kx): the patch
+            // is the 180°-rotated kernel.
+            let r0: &mut [f32] = &mut s[base..base + 3];
+            r0[0] += wk[8];
+            r0[1] += wk[7];
+            r0[2] += wk[6];
+            let r1: &mut [f32] = &mut s[base + w..base + w + 3];
+            r1[0] += wk[5];
+            r1[1] += wk[4];
+            r1[2] += wk[3];
+            let r2: &mut [f32] = &mut s[base + 2 * w..base + 2 * w + 3];
+            r2[0] += wk[2];
+            r2[1] += wk[1];
+            r2[2] += wk[0];
+        }
+        return;
+    }
+
+    // General path (borders, other kernel sizes).
+    for co in 0..cw.c_out {
+        let wbase = (co * cw.c_in + ci) * k * k;
+        let plane = &mut s[co * plane_len..(co + 1) * plane_len];
+        for ky in 0..k {
+            let oy = ey as isize + pad as isize - ky as isize;
+            if oy < 0 || oy >= h as isize {
+                continue;
+            }
+            let row = &mut plane[oy as usize * w..(oy as usize + 1) * w];
+            let wrow = &cw.w[wbase + ky * k..wbase + (ky + 1) * k];
+            for kx in 0..k {
+                let ox = ex as isize + pad as isize - kx as isize;
+                if ox < 0 || ox >= w as isize {
+                    continue;
+                }
+                row[ox as usize] += wrow[kx];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::arch::parse_arch;
+    use crate::nn::conv::{conv2d_same, ConvWeights};
+    use crate::nn::dense::DenseWeights;
+    use crate::util::quickcheck::check_default;
+    use crate::util::rng::Rng;
+
+    /// Scatter over all events of a binary map == dense conv of that map
+    /// (the equivalence the whole event-driven design rests on).
+    #[test]
+    fn scatter_equals_dense_conv() {
+        check_default("scatter == conv", |r: &mut Rng| {
+            let (c_in, c_out, h, w) = (1 + r.below(3), 1 + r.below(4), 3 + r.below(6), 3 + r.below(6));
+            let k = 3;
+            let wts = ConvWeights::new(
+                c_out,
+                c_in,
+                k,
+                (0..c_out * c_in * k * k).map(|_| r.normal()).collect(),
+                vec![0.0; c_out],
+            );
+            let mut spikes = Tensor3::zeros(c_in, h, w);
+            for v in &mut spikes.data {
+                if r.chance(0.3) {
+                    *v = 1.0;
+                }
+            }
+            let dense_out = conv2d_same(&spikes, &wts);
+            let mut s = vec![0.0f32; c_out * h * w];
+            for c in 0..c_in {
+                for y in 0..h {
+                    for x in 0..w {
+                        if spikes.get(c, y, x) != 0.0 {
+                            scatter_conv_event(
+                                &mut s,
+                                &wts,
+                                h,
+                                w,
+                                &SpikeEvent { c: c as u16, y: y as u16, x: x as u16 },
+                            );
+                        }
+                    }
+                }
+            }
+            for (a, b) in s.iter().zip(&dense_out.data) {
+                if (a - b).abs() > 1e-4 {
+                    return Err(format!("scatter {a} vs conv {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    fn tiny_snn() -> Network {
+        let arch = parse_arch("1C3-2").unwrap();
+        // Identity-ish conv then dense.
+        let mut w = vec![0.0; 9];
+        w[4] = 1.0;
+        Network {
+            arch,
+            layers: vec![
+                LayerWeights::Conv(ConvWeights::new(1, 1, 3, w, vec![0.0])),
+                LayerWeights::Dense(DenseWeights::new(2, 4, vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0], vec![0.0, 0.0])),
+            ],
+            input_shape: (1, 2, 2),
+        }
+    }
+
+    #[test]
+    fn neurons_spike_at_most_once() {
+        let net = tiny_snn();
+        let x = Tensor3::from_vec(1, 2, 2, vec![1.0, 0.6, 0.3, 0.0]);
+        let r = snn_infer(&net, &x, 8, 1.0);
+        // Input layer has 4 neurons; count spikes per position across steps.
+        let mut seen = std::collections::HashMap::new();
+        for step in &r.events {
+            for ev in &step[0] {
+                *seen.entry((ev.c, ev.y, ev.x)).or_insert(0) += 1;
+            }
+        }
+        assert!(seen.values().all(|&n| n == 1), "{seen:?}");
+        // Pixel 0.0 never spikes; pixel 0.3 needs ceil(1/0.3)=4 steps.
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn input_spike_timing_is_ttfs() {
+        let net = tiny_snn();
+        let x = Tensor3::from_vec(1, 2, 2, vec![1.0, 0.5, 0.26, 0.0]);
+        let r = snn_infer(&net, &x, 6, 1.0);
+        // t=0: no pixel exceeds 1.0 (strict >), t=1: pixel 1.0 reaches 2.0 > 1.
+        // 0.5 crosses at t=2 (V=1.5), 0.26 at t=3 (V=1.04).
+        let first_spike_step = |y: u16, x_: u16| {
+            r.events
+                .iter()
+                .position(|st| st[0].iter().any(|e| e.y == y && e.x == x_))
+        };
+        assert_eq!(first_spike_step(0, 0), Some(1));
+        assert_eq!(first_spike_step(0, 1), Some(2));
+        assert_eq!(first_spike_step(1, 0), Some(3));
+        assert_eq!(first_spike_step(1, 1), None);
+    }
+
+    #[test]
+    fn output_logits_accumulate() {
+        let net = tiny_snn();
+        let x = Tensor3::from_vec(1, 2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let r = snn_infer(&net, &x, 4, 1.0);
+        // Both mapped pixels spike; dense maps flat idx 0 -> logit 0 and
+        // flat idx 3 -> logit 1. Slopes re-integrate, so logits grow equally.
+        assert!(r.logits[0] > 0.0 && (r.logits[0] - r.logits[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn spike_counts_match_event_lists() {
+        let net = tiny_snn();
+        let x = Tensor3::from_vec(1, 2, 2, vec![0.9, 0.8, 0.7, 0.6]);
+        let r = snn_infer(&net, &x, 5, 1.0);
+        for l in 0..r.spike_counts.len() {
+            let listed: u64 = r.events.iter().map(|st| st[l].len() as u64).sum();
+            assert_eq!(listed, r.spike_counts[l]);
+        }
+    }
+
+    #[test]
+    fn rate_mode_neurons_fire_repeatedly() {
+        let net = tiny_snn();
+        let x = Tensor3::from_vec(1, 2, 2, vec![1.0, 0.0, 0.0, 0.0]);
+        // Pixel 1.0 with v_th=0.4: fires nearly every step under rate
+        // coding, once under m-TTFS.
+        let rate = snn_infer_mode(&net, &x, 6, 0.4, SnnMode::Rate);
+        let ttfs = snn_infer_mode(&net, &x, 6, 0.4, SnnMode::MTtfs);
+        assert!(rate.spike_counts[0] > ttfs.spike_counts[0]);
+        assert_eq!(ttfs.spike_counts[0], 1);
+    }
+
+    #[test]
+    fn rate_mode_subtractive_reset_preserves_rate() {
+        let net = tiny_snn();
+        // drive 0.51, v_th 1.0 (strict >): crosses at t = 2, 4, 6, 8.
+        let x = Tensor3::from_vec(1, 2, 2, vec![0.51, 0.0, 0.0, 0.0]);
+        let r = snn_infer_mode(&net, &x, 8, 1.0, SnnMode::Rate);
+        assert_eq!(r.spike_counts[0], 4);
+    }
+
+    #[test]
+    fn rate_mode_event_lists_replayable() {
+        // Same event-list shape as m-TTFS (cycle replay compatibility).
+        let net = tiny_snn();
+        let x = Tensor3::from_vec(1, 2, 2, vec![0.9, 0.8, 0.7, 0.6]);
+        let r = snn_infer_mode(&net, &x, 5, 1.0, SnnMode::Rate);
+        assert_eq!(r.events.len(), 5);
+        for step in &r.events {
+            assert_eq!(step.len(), net.arch.len() + 1);
+        }
+        for l in 0..r.spike_counts.len() {
+            let listed: u64 = r.events.iter().map(|st| st[l].len() as u64).sum();
+            assert_eq!(listed, r.spike_counts[l]);
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Minimal 3-D (C, H, W) tensor used throughout the functional models.
+//!
+//! Row-major `data[c * h * w + y * w + x]`, matching NumPy's C order so
+//! blobs from `artifacts/` can be consumed without reshuffling.
+
+/// A (C, H, W) float tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor3 {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor3 {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Tensor3 { c, h, w, data: vec![0.0; c * h * w] }
+    }
+
+    pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), c * h * w, "tensor size mismatch");
+        Tensor3 { c, h, w, data }
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, c: usize, y: usize, x: usize) -> usize {
+        (c * self.h + y) * self.w + x
+    }
+
+    #[inline(always)]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> f32 {
+        self.data[self.idx(c, y, x)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        let i = self.idx(c, y, x);
+        self.data[i] = v;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Total number of non-zero entries (spike counting).
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Flatten into a plain vector (dense-layer input).
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Elementwise maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor3) -> f32 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_c_order() {
+        let mut t = Tensor3::zeros(2, 3, 4);
+        t.set(1, 2, 3, 9.0);
+        assert_eq!(t.data[1 * 12 + 2 * 4 + 3], 9.0);
+        assert_eq!(t.get(1, 2, 3), 9.0);
+    }
+
+    #[test]
+    fn nonzero_count() {
+        let t = Tensor3::from_vec(1, 2, 2, vec![0.0, 1.0, 0.5, 0.0]);
+        assert_eq!(t.count_nonzero(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn from_vec_checks_len() {
+        Tensor3::from_vec(1, 2, 2, vec![0.0]);
+    }
+}

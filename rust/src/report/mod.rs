@@ -1,0 +1,37 @@
+//! Report emission: write regenerated tables/figures to disk and build
+//! EXPERIMENTS.md fragments.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Write one experiment's output under `dir/<id>.txt`.
+pub fn write_report(dir: &Path, id: &str, content: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("{id}.txt")), content)?;
+    Ok(())
+}
+
+/// Markdown fence helper for EXPERIMENTS.md fragments.
+pub fn md_section(title: &str, body: &str) -> String {
+    format!("### {title}\n\n```text\n{body}\n```\n\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_reports() {
+        let dir = std::env::temp_dir().join("spikebench_report_test");
+        write_report(&dir, "t", "hello").unwrap();
+        assert_eq!(std::fs::read_to_string(dir.join("t.txt")).unwrap(), "hello");
+    }
+
+    #[test]
+    fn md_sections_are_fenced() {
+        let s = md_section("T", "body");
+        assert!(s.starts_with("### T"));
+        assert!(s.contains("```text\nbody\n```"));
+    }
+}

@@ -1,0 +1,124 @@
+//! PJRT runtime: load + execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! This is the only place Python's output crosses into the Rust process:
+//! `artifacts/*.hlo.txt` (HLO **text** — the format xla_extension 0.5.1
+//! parses reliably; serialized protos from jax ≥ 0.5 carry 64-bit ids it
+//! rejects) is parsed, compiled once on the PJRT CPU client, and cached as
+//! a loaded executable keyed by file path.
+//!
+//! The serving path (`coordinator::serve`) keeps a [`Runtime`] per worker:
+//! classification requests execute the compiled model (never Python),
+//! while the accelerator simulators consume the same request's spike
+//! events for the latency/energy estimate.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::nn::tensor::Tensor3;
+
+/// A PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+/// Result of one SNN artifact execution.
+#[derive(Debug, Clone)]
+pub struct SnnExecOutput {
+    pub logits: Vec<f32>,
+    /// Per-layer total spike counts (index 0 = input encoding layer).
+    pub spike_counts: Vec<f64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        if self.cache.contains_key(path) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&*path.to_string_lossy())
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        self.cache.insert(path.to_path_buf(), exe);
+        Ok(())
+    }
+
+    fn exe(&self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        self.cache
+            .get(path)
+            .ok_or_else(|| anyhow!("executable {} not loaded", path.display()))
+    }
+
+    /// Execute an artifact whose signature is `(f32[C,H,W]) -> (f32[10],)`
+    /// (the CNN forward).  Returns the logits.
+    pub fn run_cnn(&self, path: &Path, x: &Tensor3) -> Result<Vec<f32>> {
+        let lit = tensor3_to_literal(x)?;
+        let exe = self.exe(path)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let mut outs = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if outs.is_empty() {
+            return Err(anyhow!("CNN artifact returned no outputs"));
+        }
+        let logits = outs
+            .drain(..1)
+            .next()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok(logits)
+    }
+
+    /// Execute an SNN artifact `(f32[C,H,W]) -> (f32[10], f32[L+1])`.
+    pub fn run_snn(&self, path: &Path, x: &Tensor3) -> Result<SnnExecOutput> {
+        let lit = tensor3_to_literal(x)?;
+        let exe = self.exe(path)?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let outs = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if outs.len() != 2 {
+            return Err(anyhow!("SNN artifact returned {} outputs, expected 2", outs.len()));
+        }
+        let mut it = outs.into_iter();
+        let logits = it.next().unwrap().to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
+        let counts = it
+            .next()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("counts: {e:?}"))?
+            .into_iter()
+            .map(|v| v as f64)
+            .collect();
+        Ok(SnnExecOutput { logits, spike_counts: counts })
+    }
+}
+
+/// Convert a (C, H, W) tensor into an XLA literal of that shape.
+fn tensor3_to_literal(x: &Tensor3) -> Result<xla::Literal> {
+    xla::Literal::vec1(&x.data)
+        .reshape(&[x.c as i64, x.h as i64, x.w as i64])
+        .map_err(|e| anyhow!("reshape literal: {e:?}"))
+        .context("building input literal")
+}

@@ -1,0 +1,359 @@
+//! Full-design cycle/energy simulation of the SNN accelerator.
+//!
+//! The functional event streams come from [`crate::nn::snn::snn_infer`]
+//! (exactly the spikes the hardware would enqueue); this module replays
+//! them against the §3.1 architecture's timing contract:
+//!
+//! * layers execute one at a time, channel-segmented, for T repetitions
+//!   (§4's layer-by-layer, channel-by-channel, T-repetition order);
+//! * each of the P cores retires one spike event per cycle (pipelined),
+//!   updating the K² membrane-slope neighbourhood in that cycle via the
+//!   interlaced banks;
+//! * the double-buffered Thresholding Unit scans the layer's neurons
+//!   (parallel over P cores × K² banks) overlapped with event processing —
+//!   a segment costs `max(event_cycles, threshold_cycles)`;
+//! * every memory access is counted and fed to the vector-based power
+//!   estimator, which is what makes latency *and* power input-dependent
+//!   (Figs. 7/9) while the FINN baseline's are constant.
+
+use crate::fpga::device::Device;
+use crate::fpga::power::{Activity, DesignFamily, PowerBreakdown, PowerEstimator};
+use crate::fpga::resources::MemoryVariant;
+use crate::nn::arch::{layer_shapes, LayerSpec};
+use crate::nn::network::Network;
+use crate::nn::snn::{snn_infer, SnnResult, SpikeEvent};
+use crate::nn::tensor::Tensor3;
+
+use super::core::{
+    conv_event_traffic, conv_segment_cycles, threshold_scan_cycles, threshold_scan_traffic,
+    ActivityTrace, CoreCosts,
+};
+use super::config::SnnDesign;
+
+/// Calibration: memory accesses per core-cycle at which a design sits at
+/// the anchor (vector-less) activity level.  A fully-busy core performs
+/// ~28 accesses/cycle (K² membrane reads + K² writes + K² weight reads +
+/// queue traffic); normalizing per core makes the activity measure
+/// P-independent.  With this nominal, vector-based estimates for actual
+/// MNIST samples land 5–25% around the vector-less value, reproducing the
+/// Table 4 (vector-based) vs Table 7 (vector-less) relationship.
+pub const NOMINAL_ACCESSES_PER_CORE_CYCLE: f64 = 26.0;
+
+/// Calibration: busy fraction at the anchor activity level.
+pub const NOMINAL_TOGGLE: f64 = 0.80;
+
+/// Result of simulating one inference on one design.
+#[derive(Debug, Clone)]
+pub struct SnnRunResult {
+    /// Functional result (logits of the output accumulator).
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    /// Total latency in clock cycles.
+    pub cycles: u64,
+    /// Latency in seconds at the device clock.
+    pub latency_s: f64,
+    /// Vector-based dynamic power estimate.
+    pub power: PowerBreakdown,
+    /// Energy for this classification (J).
+    pub energy_j: f64,
+    /// Total spikes processed.
+    pub total_spikes: u64,
+    /// Peak per-bank AEQ occupancy observed.
+    pub aeq_high_water: u32,
+    /// Events that exceeded the configured AEQ depth D (0 for correctly
+    /// sized designs; > 0 means the design would stall on this input).
+    pub aeq_overflows: u64,
+    pub trace: ActivityTrace,
+}
+
+impl SnnRunResult {
+    pub fn fps(&self) -> f64 {
+        1.0 / self.latency_s
+    }
+
+    pub fn fps_per_watt(&self) -> f64 {
+        self.fps() / self.power.total()
+    }
+}
+
+/// The simulator: a design point + the SNN-converted network it runs.
+pub struct SnnAccelerator<'a> {
+    pub design: &'a SnnDesign,
+    pub net: &'a Network,
+    pub t_steps: usize,
+    pub v_th: f32,
+    pub costs: CoreCosts,
+}
+
+impl<'a> SnnAccelerator<'a> {
+    pub fn new(design: &'a SnnDesign, net: &'a Network, t_steps: usize, v_th: f32) -> Self {
+        SnnAccelerator { design, net, t_steps, v_th, costs: CoreCosts::default() }
+    }
+
+    /// Simulate one classification on `device`.
+    pub fn run(&self, x: &Tensor3, device: &Device) -> SnnRunResult {
+        let functional = snn_infer(self.net, x, self.t_steps, self.v_th);
+        self.replay(&functional, device)
+    }
+
+    /// Replay an existing functional result against the timing model
+    /// (lets callers share one functional pass across design points).
+    pub fn replay(&self, functional: &SnnResult, device: &Device) -> SnnRunResult {
+        let p = self.design.params.p as u64;
+        let k = self.design.params.kernel as u64;
+        let banks = k * k;
+        let shapes = layer_shapes(&self.net.arch, self.net.input_shape);
+
+        let mut trace = ActivityTrace::default();
+        let mut cycles = 0u64;
+        let mut aeq_high_water = 0u32;
+        let mut aeq_overflows = 0u64;
+
+        let input_neurons =
+            (self.net.input_shape.0 * self.net.input_shape.1 * self.net.input_shape.2) as u64;
+
+        for step in &functional.events {
+            // Input encoding layer: threshold scan over the pixels.
+            let in_scan = threshold_scan_cycles(input_neurons, p, banks);
+            cycles += in_scan + self.costs.segment_overhead;
+            trace.queue_accesses += step[0].len() as u64; // pushes of new events
+
+            for (i, spec) in self.net.arch.iter().enumerate() {
+                let events_in = &step[i];
+                let events_out = &step[i + 1];
+                let n_ev = events_in.len() as u64;
+                let (c_l, h_l, w_l) = shapes[i];
+                let neurons = (c_l * h_l * w_l) as u64;
+
+                let segment_cycles = match spec {
+                    LayerSpec::Conv { out_channels, .. } => {
+                        // One *kernel operation* (a K×K neighbourhood
+                        // update for one output channel) retires per core
+                        // per cycle — §3.1: "allow one kernel operation in
+                        // a convolutional layer to be processed at a
+                        // time".  An event feeding C_out channels costs
+                        // C_out kernel ops.
+                        let kernel_ops = n_ev * *out_channels as u64;
+                        let per_core = kernel_ops.div_ceil(p);
+                        let ev_cycles = conv_segment_cycles(per_core, &self.costs);
+                        conv_event_traffic(kernel_ops, k, &mut trace);
+                        let thr_cycles = threshold_scan_cycles(neurons, p, banks);
+                        threshold_scan_traffic(neurons, &mut trace);
+                        trace.busy_cycles += ev_cycles;
+                        self.track_aeq(events_in, i, &mut aeq_high_water, &mut aeq_overflows);
+                        ev_cycles.max(thr_cycles)
+                    }
+                    LayerSpec::Pool { .. } => {
+                        // Event forwarding: one event per cycle per core,
+                        // no membrane traffic.
+                        trace.events += n_ev;
+                        trace.queue_accesses += n_ev;
+                        let c = n_ev.div_ceil(p);
+                        trace.busy_cycles += c;
+                        c
+                    }
+                    LayerSpec::Dense { units } => {
+                        // Each event accumulates into `units` register
+                        // slopes; weights stream from the weight BRAMs.
+                        trace.events += n_ev;
+                        trace.queue_accesses += n_ev;
+                        trace.weight_reads += n_ev * *units as u64;
+                        let ev_cycles = n_ev.div_ceil(p) + self.costs.pipeline_depth;
+                        let thr_cycles = threshold_scan_cycles(*units as u64, p, 1);
+                        trace.busy_cycles += ev_cycles;
+                        ev_cycles.max(thr_cycles)
+                    }
+                };
+                // New events are pushed into the next layer's AEQ.
+                trace.queue_accesses += events_out.len() as u64;
+                cycles += segment_cycles + self.costs.segment_overhead;
+            }
+        }
+
+        trace.cycles = cycles;
+        let power = self.estimate_power(&trace, device);
+        let latency_s = cycles as f64 * device.period_s();
+        SnnRunResult {
+            logits: functional.logits.clone(),
+            predicted: crate::nn::network::argmax(&functional.logits),
+            cycles,
+            latency_s,
+            power,
+            energy_j: power.total() * latency_s,
+            total_spikes: functional.total_spikes(),
+            aeq_high_water,
+            aeq_overflows,
+            trace,
+        }
+    }
+
+    /// Vector-less power at the anchor activity (for Tables 7/8/9).
+    pub fn vectorless_power(&self, device: &Device) -> PowerBreakdown {
+        PowerEstimator::new(*device, DesignFamily::Snn)
+            .vectorless(&self.design.resources_on(device))
+    }
+
+    fn estimate_power(&self, trace: &ActivityTrace, device: &Device) -> PowerBreakdown {
+        let res = self.design.resources_on(device);
+        // Which traffic hits BRAM?  AEQ + weights always; membranes only
+        // in the BRAM variant (otherwise they are LUTRAM -> logic toggle).
+        let membrane_in_bram = matches!(self.design.params.variant, MemoryVariant::Bram);
+        let bram_accesses = trace.queue_accesses
+            + trace.weight_reads
+            + if membrane_in_bram { trace.mem_reads + trace.mem_writes } else { 0 };
+        let p = self.design.params.p as f64;
+        let raw_rate = if trace.cycles == 0 {
+            0.0
+        } else {
+            bram_accesses as f64 / trace.cycles as f64 / p
+        };
+        let act = Activity {
+            bram_read: (raw_rate / NOMINAL_ACCESSES_PER_CORE_CYCLE).clamp(0.2, 1.3),
+            toggle: (trace.toggle() / NOMINAL_TOGGLE).clamp(0.2, 1.3),
+        };
+        PowerEstimator::new(*device, DesignFamily::Snn).estimate(&res, act)
+    }
+
+    /// Per-bank AEQ occupancy accounting for a segment's input events.
+    fn track_aeq(
+        &self,
+        events: &[SpikeEvent],
+        _layer: usize,
+        high_water: &mut u32,
+        overflows: &mut u64,
+    ) {
+        let k = self.design.params.kernel;
+        let d = self.design.params.d_aeq;
+        let mut counts = vec![0u32; (k * k) as usize];
+        for ev in events {
+            let bank = ((ev.y as u32 % k) * k + (ev.x as u32 % k)) as usize;
+            counts[bank] += 1;
+        }
+        for &c in &counts {
+            if c > *high_water {
+                *high_water = c;
+            }
+            if c > d {
+                *overflows += (c - d) as u64;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::PYNQ_Z1;
+    use crate::fpga::resources::{MemoryVariant, SnnDesignParams};
+    use crate::nn::arch::parse_arch;
+    use crate::nn::conv::ConvWeights;
+    use crate::nn::dense::DenseWeights;
+    use crate::nn::network::{LayerWeights, Network};
+    use crate::snn::config::SnnDesign;
+
+    fn tiny_net() -> Network {
+        let arch = parse_arch("2C3-P2-4").unwrap();
+        Network {
+            arch,
+            layers: vec![
+                LayerWeights::Conv(ConvWeights::new(
+                    2,
+                    1,
+                    3,
+                    vec![0.3; 18],
+                    vec![0.0, 0.0],
+                )),
+                LayerWeights::Pool(2),
+                LayerWeights::Dense(DenseWeights::new(4, 32, vec![0.05; 128], vec![0.0; 4])),
+            ],
+            input_shape: (1, 8, 8),
+        }
+    }
+
+    fn design(p: u32) -> SnnDesign {
+        SnnDesign {
+            name: "test",
+            dataset: "mnist",
+            params: SnnDesignParams {
+                p,
+                d_aeq: 64,
+                w_mem: 8,
+                kernel: 3,
+                d_mem: 256,
+                variant: MemoryVariant::Bram,
+            },
+            published: None,
+            published_zcu102: None,
+        }
+    }
+
+    fn bright_input() -> Tensor3 {
+        Tensor3::from_vec(1, 8, 8, vec![0.9; 64])
+    }
+
+    fn dim_input() -> Tensor3 {
+        let mut v = vec![0.0; 64];
+        v[0] = 0.9;
+        v[1] = 0.5;
+        Tensor3::from_vec(1, 8, 8, v)
+    }
+
+    #[test]
+    fn latency_is_data_dependent() {
+        let d = design(2);
+        let net = tiny_net();
+        let acc = SnnAccelerator::new(&d, &net, 4, 1.0);
+        let busy = acc.run(&bright_input(), &PYNQ_Z1);
+        let quiet = acc.run(&dim_input(), &PYNQ_Z1);
+        assert!(busy.total_spikes > quiet.total_spikes);
+        assert!(busy.cycles > quiet.cycles, "busy {} quiet {}", busy.cycles, quiet.cycles);
+        assert!(busy.energy_j > quiet.energy_j);
+    }
+
+    #[test]
+    fn more_cores_fewer_cycles() {
+        let net = tiny_net();
+        let d1 = design(1);
+        let d4 = design(4);
+        let r1 = SnnAccelerator::new(&d1, &net, 4, 1.0).run(&bright_input(), &PYNQ_Z1);
+        let r4 = SnnAccelerator::new(&d4, &net, 4, 1.0).run(&bright_input(), &PYNQ_Z1);
+        assert!(r4.cycles < r1.cycles, "P=4 {} vs P=1 {}", r4.cycles, r1.cycles);
+        // Functional result is identical regardless of parallelism.
+        assert_eq!(r1.logits, r4.logits);
+    }
+
+    #[test]
+    fn aeq_overflow_detected_for_tiny_depth() {
+        let net = tiny_net();
+        let mut d = design(1);
+        d.params.d_aeq = 1;
+        let r = SnnAccelerator::new(&d, &net, 4, 1.0).run(&bright_input(), &PYNQ_Z1);
+        assert!(r.aeq_overflows > 0);
+        let d_ok = design(1);
+        let r_ok = SnnAccelerator::new(&d_ok, &net, 4, 1.0).run(&bright_input(), &PYNQ_Z1);
+        assert_eq!(r_ok.aeq_overflows, 0);
+        assert!(r_ok.aeq_high_water > 0);
+    }
+
+    #[test]
+    fn power_within_model_bounds() {
+        let net = tiny_net();
+        let d = design(2);
+        let acc = SnnAccelerator::new(&d, &net, 4, 1.0);
+        let r = acc.run(&bright_input(), &PYNQ_Z1);
+        let vl = acc.vectorless_power(&PYNQ_Z1);
+        // Vector-based stays within the clamp band around vector-less.
+        assert!(r.power.bram <= vl.bram * 1.6 + 1e-12);
+        assert!(r.power.bram >= vl.bram * 0.1 - 1e-12);
+        assert!(r.power.clocks == vl.clocks); // clocks are activity-independent
+    }
+
+    #[test]
+    fn fps_per_watt_consistent() {
+        let net = tiny_net();
+        let d = design(2);
+        let r = SnnAccelerator::new(&d, &net, 4, 1.0).run(&bright_input(), &PYNQ_Z1);
+        let expect = (1.0 / r.latency_s) / r.power.total();
+        assert!((r.fps_per_watt() - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,177 @@
+//! Address Event Queues (Fig. 3): segmented spike storage.
+//!
+//! One AEQ = K² interlaced banks (Fig. 4).  The queue space is segmented
+//! by algorithmic time step and channel so one kernel operation can be
+//! processed at a time; this model tracks per-bank occupancy high-water
+//! marks (the data for sizing D) and overflow events (a design whose D is
+//! too small for a workload *stalls*; the paper sizes D to avoid this).
+
+use super::encoding::Encoder;
+use super::interlace::Interlacing;
+
+/// Statistics of one AEQ over a run.
+#[derive(Debug, Clone, Default)]
+pub struct AeqStats {
+    pub pushes: u64,
+    pub pops: u64,
+    /// Maximum simultaneous occupancy of any single bank.
+    pub high_water: u32,
+    /// Pushes rejected because a bank was at capacity D.
+    pub overflows: u64,
+}
+
+/// A K²-banked address-event queue of per-bank capacity D.
+#[derive(Debug, Clone)]
+pub struct Aeq {
+    pub interlacing: Interlacing,
+    pub encoder: Encoder,
+    /// Per-bank capacity (the design parameter D).
+    pub depth: u32,
+    banks: Vec<std::collections::VecDeque<u32>>,
+    stats: AeqStats,
+}
+
+impl Aeq {
+    pub fn new(interlacing: Interlacing, encoder: Encoder, depth: u32) -> Aeq {
+        let n = interlacing.banks() as usize;
+        Aeq {
+            interlacing,
+            encoder,
+            depth,
+            banks: vec![std::collections::VecDeque::new(); n],
+            stats: AeqStats::default(),
+        }
+    }
+
+    /// Push a spike at feature-map position (y, x).  Returns false on
+    /// overflow (bank full).
+    pub fn push(&mut self, y: u32, x: u32) -> bool {
+        let bank = self.interlacing.bank_of(y, x) as usize;
+        if self.banks[bank].len() >= self.depth as usize {
+            self.stats.overflows += 1;
+            return false;
+        }
+        let (wy, wx) = self.interlacing.address_of(y, x);
+        let word = self.encoder.encode(super::encoding::AddressEvent {
+            wx: wx as u16,
+            wy: wy as u16,
+            status: super::encoding::Status::Data,
+        });
+        self.banks[bank].push_back(word);
+        self.stats.pushes += 1;
+        let occ = self.banks[bank].len() as u32;
+        if occ > self.stats.high_water {
+            self.stats.high_water = occ;
+        }
+        true
+    }
+
+    /// Pop one event (round-robin across non-empty banks); returns the
+    /// decoded (y, x) position.
+    pub fn pop(&mut self) -> Option<(u32, u32)> {
+        for bank in 0..self.banks.len() {
+            if let Some(word) = self.banks[bank].pop_front() {
+                self.stats.pops += 1;
+                let ev = self.encoder.decode(word);
+                // Reconstruct: bank gives kernel coordinate, event gives
+                // window address.
+                let k = self.interlacing.k;
+                let (ky, kx) = (bank as u32 / k, bank as u32 % k);
+                return Some((ev.wy as u32 * k + ky, ev.wx as u32 * k + kx));
+            }
+        }
+        None
+    }
+
+    pub fn len(&self) -> usize {
+        self.banks.iter().map(|b| b.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.banks.iter().all(|b| b.is_empty())
+    }
+
+    pub fn stats(&self) -> &AeqStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn::encoding::{Encoder, Encoding};
+    use crate::util::quickcheck::check_default;
+
+    fn aeq(depth: u32) -> Aeq {
+        Aeq::new(
+            Interlacing::new(3, 28, 28),
+            Encoder::new(Encoding::Compressed, 28, 3),
+            depth,
+        )
+    }
+
+    /// Conservation: everything pushed is popped exactly once, with the
+    /// original coordinates (the queue+encoding round-trip).
+    #[test]
+    fn push_pop_conservation() {
+        check_default("aeq conservation", |r| {
+            let mut q = aeq(2048);
+            let n = 1 + r.below(200);
+            let mut pushed = std::collections::HashMap::new();
+            for _ in 0..n {
+                let (y, x) = (r.below(27) as u32, r.below(27) as u32);
+                if q.push(y, x) {
+                    *pushed.entry((y, x)).or_insert(0u32) += 1;
+                }
+            }
+            let mut popped = std::collections::HashMap::new();
+            while let Some(p) = q.pop() {
+                *popped.entry(p).or_insert(0u32) += 1;
+            }
+            if pushed != popped {
+                return Err(format!("pushed {pushed:?} != popped {popped:?}"));
+            }
+            if q.stats().pushes != q.stats().pops {
+                return Err("push/pop count mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Overflow: per-bank capacity D rejects excess events and counts them.
+    #[test]
+    fn overflow_is_detected() {
+        let mut q = aeq(2);
+        // Same bank (same kernel coordinate): positions (0,0), (3,0), (6,0)…
+        assert!(q.push(0, 0));
+        assert!(q.push(3, 0));
+        assert!(!q.push(6, 0)); // bank full at D=2
+        assert_eq!(q.stats().overflows, 1);
+        // A different bank still has room.
+        assert!(q.push(1, 0));
+    }
+
+    /// High-water tracks the fullest single bank.
+    #[test]
+    fn high_water_mark() {
+        let mut q = aeq(100);
+        for i in 0..5 {
+            q.push(3 * i, 0); // all bank 0
+        }
+        q.push(1, 0); // bank 3 (kernel coord (1,0))
+        assert_eq!(q.stats().high_water, 5);
+    }
+
+    /// Distinct events in the same bank stay FIFO-ordered.
+    #[test]
+    fn fifo_within_bank() {
+        let mut q = aeq(16);
+        q.push(0, 0);
+        q.push(0, 3);
+        q.push(0, 6);
+        assert_eq!(q.pop(), Some((0, 0)));
+        assert_eq!(q.pop(), Some((0, 3)));
+        assert_eq!(q.pop(), Some((0, 6)));
+        assert_eq!(q.pop(), None);
+    }
+}

@@ -1,0 +1,272 @@
+//! SNN design points — the paper's Tables 3, 7, 8, 9.
+//!
+//! Each design carries its structural parameters (P, D, bit widths,
+//! memory variant) plus, where the paper publishes synthesized resource
+//! numbers, those values verbatim (`published`).  `resources()` prefers
+//! the published numbers and falls back to the analytic estimator for
+//! ablation points the paper never synthesized.
+
+use crate::fpga::resources::{MemoryVariant, ResourceUsage, SnnDesignParams};
+
+/// A named SNN accelerator configuration.
+#[derive(Debug, Clone)]
+pub struct SnnDesign {
+    pub name: &'static str,
+    /// Dataset whose network this design is sized for.
+    pub dataset: &'static str,
+    pub params: SnnDesignParams,
+    /// Synthesized resources from the paper, if published (LUTs, Regs,
+    /// BRAMs); `None` -> analytic estimate.  PYNQ-Z1 values.
+    pub published: Option<ResourceUsage>,
+    /// ZCU102-specific synthesized resources where the paper's rows
+    /// differ materially (e.g. SNN*_CIFAR, where the PYNQ synthesis spills
+    /// membranes into registers because BRAMs run out — §5.2).
+    pub published_zcu102: Option<ResourceUsage>,
+}
+
+impl SnnDesign {
+    pub fn resources(&self) -> ResourceUsage {
+        self.published.unwrap_or_else(|| self.params.resources())
+    }
+
+    /// Device-specific resources (falls back to the PYNQ/base set).
+    pub fn resources_on(&self, device: &crate::fpga::device::Device) -> ResourceUsage {
+        if device.name == "ZCU102" {
+            if let Some(r) = self.published_zcu102 {
+                return r;
+            }
+        }
+        self.resources()
+    }
+
+    pub fn p(&self) -> u32 {
+        self.params.p
+    }
+
+    pub fn variant(&self) -> MemoryVariant {
+        self.params.variant
+    }
+}
+
+fn params(p: u32, d_aeq: u32, w_mem: u32, variant: MemoryVariant) -> SnnDesignParams {
+    SnnDesignParams { p, d_aeq, w_mem, kernel: 3, d_mem: 256, variant }
+}
+
+fn published(luts: u32, regs: u32, brams: f64) -> Option<ResourceUsage> {
+    Some(ResourceUsage { luts, regs, brams, dsps: 0 })
+}
+
+/// Table 3: the MNIST design space on the PYNQ-Z1.
+pub fn mnist_designs() -> Vec<SnnDesign> {
+    vec![
+        SnnDesign {
+            name: "SNN1_BRAM(w=16)",
+            dataset: "mnist",
+            params: params(1, 6100, 16, MemoryVariant::Bram),
+            published: published(1_948, 2_113, 39.5),
+            published_zcu102: None,
+        },
+        SnnDesign {
+            name: "SNN4_BRAM(w=16)",
+            dataset: "mnist",
+            params: params(4, 2048, 16, MemoryVariant::Bram),
+            published: published(7_319, 7_653, 80.0),
+            published_zcu102: None,
+        },
+        SnnDesign {
+            name: "SNN4_BRAM",
+            dataset: "mnist",
+            params: params(4, 2048, 8, MemoryVariant::Bram),
+            published: published(4_967, 5_019, 76.0),
+            published_zcu102: None,
+        },
+        SnnDesign {
+            name: "SNN8_BRAM",
+            dataset: "mnist",
+            params: params(8, 750, 8, MemoryVariant::Bram),
+            published: published(9_649, 9_738, 116.0),
+            published_zcu102: None,
+        },
+        SnnDesign {
+            name: "SNN16_BRAM",
+            dataset: "mnist",
+            params: params(16, 400, 8, MemoryVariant::Bram),
+            published: published(35_949, 21_433, 140.0),
+            published_zcu102: None,
+        },
+    ]
+}
+
+/// Table 7: the §5 optimized MNIST variants.
+pub fn mnist_optimized_designs() -> Vec<SnnDesign> {
+    vec![
+        SnnDesign {
+            name: "SNN4_LUTRAM",
+            dataset: "mnist",
+            params: params(4, 2048, 8, MemoryVariant::Lutram),
+            published: published(9_256, 5_669, 40.0),
+            published_zcu102: None,
+        },
+        SnnDesign {
+            name: "SNN4_COMPR.",
+            dataset: "mnist",
+            params: params(4, 2048, 8, MemoryVariant::Compressed),
+            published: published(9_436, 5_669, 22.0),
+            published_zcu102: None,
+        },
+        SnnDesign {
+            name: "SNN8_LUTRAM",
+            dataset: "mnist",
+            params: params(8, 750, 8, MemoryVariant::Lutram),
+            published: published(18_311, 11_080, 44.0),
+            published_zcu102: None,
+        },
+        SnnDesign {
+            // §5.2: identical to SNN8_LUTRAM — the required memory
+            // parallelism already uses the minimum BRAM count per PE.
+            name: "SNN8_COMPR.",
+            dataset: "mnist",
+            params: params(8, 750, 8, MemoryVariant::Compressed),
+            published: published(18_311, 11_080, 44.0),
+            published_zcu102: None,
+        },
+        SnnDesign {
+            name: "SNN16_COMPR.",
+            dataset: "mnist",
+            params: params(16, 400, 8, MemoryVariant::Compressed),
+            published: published(36_100, 21_900, 108.0),
+            published_zcu102: None,
+        },
+    ]
+}
+
+/// Table 8: SVHN designs (same numbers used for PYNQ and ZCU102 rows up
+/// to small synthesis noise; we carry the PYNQ values).
+pub fn svhn_designs() -> Vec<SnnDesign> {
+    vec![
+        SnnDesign {
+            name: "SNN2_SVHN",
+            dataset: "svhn",
+            params: params(2, 4096, 8, MemoryVariant::Compressed),
+            published: published(4_733, 2_961, 91.0),
+            published_zcu102: published(4_896, 2_961, 82.0),
+        },
+        SnnDesign {
+            name: "SNN4_SVHN",
+            dataset: "svhn",
+            params: params(4, 2048, 8, MemoryVariant::Compressed),
+            published: published(9_393, 5_652, 92.0),
+            published_zcu102: published(9_293, 5_645, 82.0),
+        },
+        SnnDesign {
+            name: "SNN8_SVHN",
+            dataset: "svhn",
+            params: params(8, 1024, 8, MemoryVariant::Compressed),
+            published: published(18_487, 11_024, 104.0),
+            published_zcu102: published(18_135, 11_013, 100.0),
+        },
+        SnnDesign {
+            name: "SNN16_SVHN",
+            dataset: "svhn",
+            params: params(16, 512, 8, MemoryVariant::Compressed),
+            published: published(37_674, 22_077, 140.0),
+            published_zcu102: published(36_038, 21_976, 136.0),
+        },
+    ]
+}
+
+/// Table 9: CIFAR-10 designs.
+pub fn cifar_designs() -> Vec<SnnDesign> {
+    vec![
+        SnnDesign {
+            name: "SNN2_CIFAR",
+            dataset: "cifar",
+            params: params(2, 4096, 8, MemoryVariant::Compressed),
+            published: published(2_566, 25_151, 118.0),
+            published_zcu102: published(4_925, 2_962, 146.0),
+        },
+        SnnDesign {
+            name: "SNN4_CIFAR",
+            dataset: "cifar",
+            params: params(4, 2048, 8, MemoryVariant::Compressed),
+            published: published(5_063, 27_504, 136.0),
+            published_zcu102: published(9_595, 5_655, 146.0),
+        },
+        SnnDesign {
+            name: "SNN8_CIFAR",
+            dataset: "cifar",
+            params: params(8, 1024, 8, MemoryVariant::Compressed),
+            published: published(21_245, 44_126, 140.0),
+            published_zcu102: published(18_199, 11_016, 164.0),
+        },
+        SnnDesign {
+            name: "SNN16_CIFAR",
+            dataset: "cifar",
+            params: params(16, 512, 8, MemoryVariant::Compressed),
+            published: published(36_115, 21_982, 200.0),
+            published_zcu102: published(36_115, 21_982, 200.0),
+        },
+    ]
+}
+
+/// Every design, for lookup by name.
+pub fn all_designs() -> Vec<SnnDesign> {
+    let mut v = mnist_designs();
+    v.extend(mnist_optimized_designs());
+    v.extend(svhn_designs());
+    v.extend(cifar_designs());
+    v
+}
+
+pub fn by_name(name: &str) -> Option<SnnDesign> {
+    all_designs().into_iter().find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::{PYNQ_Z1, ZCU102};
+
+    #[test]
+    fn published_resources_win() {
+        let d = by_name("SNN8_BRAM").unwrap();
+        assert_eq!(d.resources().brams, 116.0);
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive() {
+        assert!(by_name("snn4_compr.").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    /// Table 9's footnote: SNN16_CIFAR does not fit the PYNQ (200 BRAMs >
+    /// 140) but fits the ZCU102.
+    #[test]
+    fn snn16_cifar_overflows_pynq() {
+        let d = by_name("SNN16_CIFAR").unwrap();
+        assert!(d.resources_on(&PYNQ_Z1).check_fits(&PYNQ_Z1).is_err());
+        assert!(d.resources_on(&ZCU102).check_fits(&ZCU102).is_ok());
+        // SNN8_CIFAR fits the PYNQ only by spilling membranes into
+        // registers (different synthesized rows per board, Table 9).
+        let d8 = by_name("SNN8_CIFAR").unwrap();
+        assert!(d8.resources_on(&PYNQ_Z1).check_fits(&PYNQ_Z1).is_ok());
+        assert!(d8.resources_on(&PYNQ_Z1).regs > 3 * d8.resources_on(&ZCU102).regs);
+    }
+
+    #[test]
+    fn all_mnist_designs_fit_pynq() {
+        for d in mnist_designs().iter().chain(mnist_optimized_designs().iter()) {
+            d.resources().check_fits(&PYNQ_Z1).unwrap_or_else(|e| panic!("{}: {e}", d.name));
+        }
+    }
+
+    /// The §5 optimization ladder: BRAM count strictly decreases
+    /// BRAM -> LUTRAM -> COMPR for the P=4 designs.
+    #[test]
+    fn optimization_ladder_reduces_brams() {
+        let bram = by_name("SNN4_BRAM").unwrap().resources().brams;
+        let lutram = by_name("SNN4_LUTRAM").unwrap().resources().brams;
+        let compr = by_name("SNN4_COMPR.").unwrap().resources().brams;
+        assert!(bram > lutram && lutram > compr);
+    }
+}

@@ -1,0 +1,154 @@
+//! Per-core event-pipeline cost/activity model.
+//!
+//! The Sommer core sustains **one spike per cycle** while its queue is
+//! filled (§3.1): pop event → read the K² interlaced membrane banks in
+//! parallel → add the K² weights → write back.  This module turns event
+//! streams into cycle counts and memory-access counts; the counts feed the
+//! vector-based power estimator (DESIGN.md §6).
+
+/// Memory-access and cycle accounting for a run (one design, one input).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ActivityTrace {
+    /// Total cycles of the inference.
+    pub cycles: u64,
+    /// Cycles during which cores were actually processing events.
+    pub busy_cycles: u64,
+    /// Spike events processed (AEQ pops).
+    pub events: u64,
+    /// Reads from membrane/slope memories (BRAM or LUTRAM words).
+    pub mem_reads: u64,
+    /// Writes to membrane/slope memories.
+    pub mem_writes: u64,
+    /// AEQ pushes + pops.
+    pub queue_accesses: u64,
+    /// Weight-memory reads.
+    pub weight_reads: u64,
+}
+
+impl ActivityTrace {
+    pub fn add(&mut self, other: &ActivityTrace) {
+        self.cycles += other.cycles;
+        self.busy_cycles += other.busy_cycles;
+        self.events += other.events;
+        self.mem_reads += other.mem_reads;
+        self.mem_writes += other.mem_writes;
+        self.queue_accesses += other.queue_accesses;
+        self.weight_reads += other.weight_reads;
+    }
+
+    /// Normalized BRAM read activity for the power model: accesses per
+    /// cycle per memory bank, relative to the anchor designs' nominal
+    /// (which sustain roughly one access per bank per active cycle).
+    pub fn bram_read_rate(&self, n_banks: f64) -> f64 {
+        if self.cycles == 0 || n_banks == 0.0 {
+            return 0.0;
+        }
+        let accesses = (self.mem_reads + self.mem_writes + self.queue_accesses) as f64;
+        (accesses / self.cycles as f64 / n_banks).clamp(0.0, 1.5)
+    }
+
+    /// Datapath toggle factor: fraction of cycles the cores were busy.
+    pub fn toggle(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        (self.busy_cycles as f64 / self.cycles as f64).clamp(0.0, 1.0)
+    }
+}
+
+/// Pipeline cost parameters of one core.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreCosts {
+    /// Pipeline fill/drain per queue segment (pop→read→add→write stages).
+    pub pipeline_depth: u64,
+    /// Fixed cycles to switch between (layer, time step) segments:
+    /// queue-segment swap + double-buffer flip.
+    pub segment_overhead: u64,
+}
+
+impl Default for CoreCosts {
+    fn default() -> Self {
+        CoreCosts { pipeline_depth: 4, segment_overhead: 12 }
+    }
+}
+
+/// Cost of processing `events` spike events on one core for a conv layer
+/// with K×K kernels: 1 event/cycle + pipeline fill.
+pub fn conv_segment_cycles(events: u64, costs: &CoreCosts) -> u64 {
+    if events == 0 {
+        0
+    } else {
+        events + costs.pipeline_depth
+    }
+}
+
+/// Per-event memory traffic of a conv layer: 1 AEQ pop, K² slope reads,
+/// K² slope writes, K² weight reads (one weight column per kernel tap).
+pub fn conv_event_traffic(events: u64, k: u64, trace: &mut ActivityTrace) {
+    trace.events += events;
+    trace.queue_accesses += events; // pops
+    trace.mem_reads += events * k * k;
+    trace.mem_writes += events * k * k;
+    trace.weight_reads += events * k * k;
+}
+
+/// Threshold-pass cost: the Thresholding Unit integrates V += S + b and
+/// compares for every neuron of the layer once per time step.  The scan is
+/// parallel over the K² interlaced banks *and* the P cores, and is
+/// overlapped with the next channel's event processing by the double
+/// buffer — the caller takes `max(event_cycles, threshold_cycles)`.
+pub fn threshold_scan_cycles(neurons: u64, p: u64, banks: u64) -> u64 {
+    neurons.div_ceil(p * banks)
+}
+
+/// Threshold-pass memory traffic: read V + S, write V (and push any new
+/// events — counted by the caller when it knows the spike count).
+pub fn threshold_scan_traffic(neurons: u64, trace: &mut ActivityTrace) {
+    trace.mem_reads += 2 * neurons;
+    trace.mem_writes += neurons;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_event_per_cycle_plus_fill() {
+        let c = CoreCosts::default();
+        assert_eq!(conv_segment_cycles(100, &c), 104);
+        assert_eq!(conv_segment_cycles(0, &c), 0);
+    }
+
+    #[test]
+    fn traffic_counts_k_squared() {
+        let mut t = ActivityTrace::default();
+        conv_event_traffic(10, 3, &mut t);
+        assert_eq!(t.mem_reads, 90);
+        assert_eq!(t.mem_writes, 90);
+        assert_eq!(t.weight_reads, 90);
+        assert_eq!(t.queue_accesses, 10);
+    }
+
+    #[test]
+    fn threshold_scan_parallelism() {
+        // 25088 neurons over P=8 cores × 9 banks = 349 cycles.
+        assert_eq!(threshold_scan_cycles(25_088, 8, 9), 349);
+        assert_eq!(threshold_scan_cycles(1, 8, 9), 1);
+    }
+
+    #[test]
+    fn activity_rates_bounded() {
+        let t = ActivityTrace {
+            cycles: 1000,
+            busy_cycles: 700,
+            events: 500,
+            mem_reads: 5_000,
+            mem_writes: 5_000,
+            queue_accesses: 1_000,
+            weight_reads: 4_500,
+        };
+        assert!((t.toggle() - 0.7).abs() < 1e-12);
+        let rate = t.bram_read_rate(20.0);
+        assert!(rate > 0.0 && rate <= 1.5);
+    }
+}

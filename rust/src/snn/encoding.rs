@@ -1,0 +1,248 @@
+//! Address-event encodings (§3.1 + the §5.2 compressed encoding).
+//!
+//! A spike in a W×W feature map processed with a K×K kernel is uniquely
+//! identified by its *window address* (x, y) — the coarse grid of
+//! kernel-sized windows — plus its *kernel coordinate* (position inside
+//! the window, 0..K²).  The kernel coordinate is **implicit** in which of
+//! the K² interlaced queues the event is stored in (Fig. 4), so only the
+//! window address needs encoding:
+//!
+//! * **Original** encoding: explicit coordinate bits plus 2 status bits
+//!   (segment markers) — 10 bits for the MNIST-scale maps.
+//! * **Compressed** (§5.2): coordinates (i_c, j_c) of ⌈log₂(W/K)⌉ bits
+//!   each; the 2^bits − W/K unused patterns per axis encode the status
+//!   information instead of dedicated bits (Eq. 6), shrinking MNIST events
+//!   from 10 to 8 bits — below the 9-bit BRAM aspect-ratio threshold,
+//!   which doubles queue capacity per BRAM.  Eq. (7) gives the rare
+//!   fallback condition when no spare patterns exist.
+
+/// ⌈log₂ n⌉ for n ≥ 1.
+pub fn ceil_log2(n: u32) -> u32 {
+    assert!(n >= 1);
+    32 - (n - 1).leading_zeros()
+}
+
+/// A decoded address event: window coordinates + status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AddressEvent {
+    pub wx: u16,
+    pub wy: u16,
+    /// Segment status: marks time-step / channel boundaries in the queue.
+    pub status: Status,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Data,
+    EndOfChannel,
+    EndOfStep,
+}
+
+/// An encoding scheme for address events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// Explicit coordinates + 2 status bits.
+    Original,
+    /// Compressed (i_c, j_c) with status in unused bit patterns (§5.2).
+    Compressed,
+}
+
+/// Per-feature-map encoder parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Encoder {
+    pub encoding: Encoding,
+    /// Feature-map width (assumed square, the paper's W).
+    pub map_w: u32,
+    /// Kernel size K.
+    pub k: u32,
+}
+
+impl Encoder {
+    pub fn new(encoding: Encoding, map_w: u32, k: u32) -> Encoder {
+        Encoder { encoding, map_w, k }
+    }
+
+    /// Number of windows per axis (W/K rounded up for partial windows).
+    pub fn windows(&self) -> u32 {
+        self.map_w.div_ceil(self.k)
+    }
+
+    /// Coordinate bits per axis.
+    pub fn coord_bits(&self) -> u32 {
+        ceil_log2(self.windows().max(2))
+    }
+
+    /// Eq. (7): the compressed encoding needs at least one spare pattern
+    /// per axis; if W/K fills the power of two exactly, fall back.
+    pub fn compression_feasible(&self) -> bool {
+        let spare = (1u32 << self.coord_bits()) as i64 - self.windows() as i64 - 1;
+        spare >= 0
+    }
+
+    /// Effective encoding after the Eq. (7) fallback check.
+    pub fn effective(&self) -> Encoding {
+        match self.encoding {
+            Encoding::Compressed if self.compression_feasible() => Encoding::Compressed,
+            Encoding::Compressed => Encoding::Original,
+            e => e,
+        }
+    }
+
+    /// Word width of one stored event.
+    pub fn event_bits(&self) -> u32 {
+        match self.effective() {
+            // coords + 2 explicit status bits
+            Encoding::Original => 2 * self.coord_bits() + 2,
+            // coords only; status lives in spare patterns
+            Encoding::Compressed => 2 * self.coord_bits(),
+        }
+    }
+
+    /// Encode an event into a word.
+    pub fn encode(&self, ev: AddressEvent) -> u32 {
+        let bits = self.coord_bits();
+        match self.effective() {
+            Encoding::Original => {
+                let status = match ev.status {
+                    Status::Data => 0u32,
+                    Status::EndOfChannel => 1,
+                    Status::EndOfStep => 2,
+                };
+                (status << (2 * bits)) | ((ev.wy as u32) << bits) | ev.wx as u32
+            }
+            Encoding::Compressed => {
+                match ev.status {
+                    Status::Data => ((ev.wy as u32) << bits) | ev.wx as u32,
+                    // Spare patterns: wx = windows() (first unused value).
+                    Status::EndOfChannel => ((0u32) << bits) | self.windows(),
+                    Status::EndOfStep => ((1u32) << bits) | self.windows(),
+                }
+            }
+        }
+    }
+
+    /// Decode a word back into an event.
+    pub fn decode(&self, word: u32) -> AddressEvent {
+        let bits = self.coord_bits();
+        let mask = (1u32 << bits) - 1;
+        match self.effective() {
+            Encoding::Original => {
+                let status = match word >> (2 * bits) {
+                    0 => Status::Data,
+                    1 => Status::EndOfChannel,
+                    _ => Status::EndOfStep,
+                };
+                AddressEvent { wx: (word & mask) as u16, wy: ((word >> bits) & mask) as u16, status }
+            }
+            Encoding::Compressed => {
+                let wx = word & mask;
+                let wy = (word >> bits) & mask;
+                if wx >= self.windows() {
+                    let status =
+                        if wy == 0 { Status::EndOfChannel } else { Status::EndOfStep };
+                    AddressEvent { wx: 0, wy: 0, status }
+                } else {
+                    AddressEvent { wx: wx as u16, wy: wy as u16, status: Status::Data }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check_default;
+
+    /// The paper's §5.2 example: W=28, K=3 -> 4 coordinate bits (Eq. 6),
+    /// 8-bit compressed events vs 10-bit original.
+    #[test]
+    fn mnist_event_widths() {
+        let enc = Encoder::new(Encoding::Compressed, 28, 3);
+        assert_eq!(enc.windows(), 10);
+        assert_eq!(enc.coord_bits(), 4);
+        assert_eq!(enc.event_bits(), 8);
+        let orig = Encoder::new(Encoding::Original, 28, 3);
+        assert_eq!(orig.event_bits(), 10);
+    }
+
+    /// Eq. (6) example: 2^4 - 10 = 6 unused patterns per axis.
+    #[test]
+    fn spare_patterns_exist_for_mnist() {
+        let enc = Encoder::new(Encoding::Compressed, 28, 3);
+        assert!(enc.compression_feasible());
+        assert_eq!((1 << enc.coord_bits()) - enc.windows(), 6);
+    }
+
+    /// Eq. (7) fallback: W/K hitting a power of two exactly leaves no
+    /// spare pattern -> the encoder falls back to the original format.
+    #[test]
+    fn fallback_when_no_spare_patterns() {
+        // W=24, K=3 -> 8 windows = 2^3 exactly: 8 - 8 - 1 < 0.
+        let enc = Encoder::new(Encoding::Compressed, 24, 3);
+        assert!(!enc.compression_feasible());
+        assert_eq!(enc.effective(), Encoding::Original);
+        assert_eq!(enc.event_bits(), 2 * 3 + 2);
+    }
+
+    #[test]
+    fn roundtrip_all_coordinates_both_encodings() {
+        for encoding in [Encoding::Original, Encoding::Compressed] {
+            for (w, k) in [(28u32, 3u32), (32, 3), (9, 3), (10, 3)] {
+                let enc = Encoder::new(encoding, w, k);
+                for wy in 0..enc.windows() as u16 {
+                    for wx in 0..enc.windows() as u16 {
+                        let ev = AddressEvent { wx, wy, status: Status::Data };
+                        assert_eq!(enc.decode(enc.encode(ev)), ev, "{encoding:?} W={w}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn status_roundtrips() {
+        for encoding in [Encoding::Original, Encoding::Compressed] {
+            let enc = Encoder::new(encoding, 28, 3);
+            for status in [Status::EndOfChannel, Status::EndOfStep] {
+                let ev = AddressEvent { wx: 0, wy: 0, status };
+                assert_eq!(enc.decode(enc.encode(ev)).status, status, "{encoding:?}");
+            }
+        }
+    }
+
+    /// Property: encoded words always fit in event_bits().
+    #[test]
+    fn words_fit_declared_width() {
+        check_default("event word width", |r| {
+            let w = 6 + r.below(60) as u32;
+            let k = 3;
+            let enc = Encoder::new(
+                if r.chance(0.5) { Encoding::Compressed } else { Encoding::Original },
+                w,
+                k,
+            );
+            let wx = r.below(enc.windows() as usize) as u16;
+            let wy = r.below(enc.windows() as usize) as u16;
+            let word = enc.encode(AddressEvent { wx, wy, status: Status::Data });
+            if word >> enc.event_bits() != 0 {
+                return Err(format!("word {word:#x} exceeds {} bits (W={w})", enc.event_bits()));
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: compression never *increases* the event width.
+    #[test]
+    fn compression_never_wider() {
+        check_default("compressed <= original", |r| {
+            let w = 6 + r.below(120) as u32;
+            let orig = Encoder::new(Encoding::Original, w, 3).event_bits();
+            let comp = Encoder::new(Encoding::Compressed, w, 3).event_bits();
+            if comp > orig {
+                return Err(format!("W={w}: compressed {comp} > original {orig}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,128 @@
+//! Memory interlacing schemes (Figs. 4 and 5).
+//!
+//! **AEQ interlacing (Fig. 4):** the feature map is divided into windows
+//! of kernel size; a spike's *kernel coordinate* (position inside its
+//! window) selects which of the K² queues stores it, and only the window
+//! address is stored.  Bank + stored word uniquely identify the spike.
+//!
+//! **Membrane interlacing (Fig. 5):** membrane potentials are spread over
+//! K² banks such that *any* K×K kernel placement touches each bank exactly
+//! once — the property that lets one convolution step read its whole
+//! neighbourhood in a single cycle.  Bank of neuron (y, x) = (y mod K)·K +
+//! (x mod K); address = window coordinates.
+
+/// Interlacing geometry for one feature map.
+#[derive(Debug, Clone, Copy)]
+pub struct Interlacing {
+    /// Kernel size K.
+    pub k: u32,
+    /// Feature-map width/height (square maps; rectangular maps use `map_h`).
+    pub map_w: u32,
+    pub map_h: u32,
+}
+
+impl Interlacing {
+    pub fn new(k: u32, map_h: u32, map_w: u32) -> Self {
+        Interlacing { k, map_w, map_h }
+    }
+
+    /// Number of banks (= queues) = K².
+    pub fn banks(&self) -> u32 {
+        self.k * self.k
+    }
+
+    /// Kernel coordinate of a neuron — selects the bank (Fig. 4's red
+    /// numbers).
+    pub fn bank_of(&self, y: u32, x: u32) -> u32 {
+        (y % self.k) * self.k + (x % self.k)
+    }
+
+    /// Window address of a neuron (Fig. 4's tuples).
+    pub fn address_of(&self, y: u32, x: u32) -> (u32, u32) {
+        (y / self.k, x / self.k)
+    }
+
+    /// Flat word address inside a bank.
+    pub fn word_of(&self, y: u32, x: u32) -> u32 {
+        let (wy, wx) = self.address_of(y, x);
+        wy * self.map_w.div_ceil(self.k) + wx
+    }
+
+    /// Words needed per bank (the membrane memory depth D of §5.2).
+    pub fn bank_depth(&self) -> u32 {
+        self.map_h.div_ceil(self.k) * self.map_w.div_ceil(self.k)
+    }
+
+    /// Reconstruct (y, x) from bank + word (the decode the paper's queue
+    /// consumer performs).
+    pub fn neuron_of(&self, bank: u32, word: u32) -> (u32, u32) {
+        let ww = self.map_w.div_ceil(self.k);
+        let (ky, kx) = (bank / self.k, bank % self.k);
+        let (wy, wx) = (word / ww, word % ww);
+        (wy * self.k + ky, wx * self.k + kx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check_default;
+    use std::collections::HashSet;
+
+    /// Fig. 5's guarantee: any K×K kernel placement selects each bank
+    /// exactly once — the no-conflict property of the interlacing.
+    #[test]
+    fn kernel_window_hits_every_bank_once() {
+        check_default("interlace conflict-free", |r| {
+            let k = 2 + r.below(3) as u32; // K in 2..=4
+            let h = k * (2 + r.below(9) as u32);
+            let w = k * (2 + r.below(9) as u32);
+            let il = Interlacing::new(k, h, w);
+            let oy = r.below((h - k + 1) as usize) as u32;
+            let ox = r.below((w - k + 1) as usize) as u32;
+            let mut banks = HashSet::new();
+            for dy in 0..k {
+                for dx in 0..k {
+                    banks.insert(il.bank_of(oy + dy, ox + dx));
+                }
+            }
+            if banks.len() != (k * k) as usize {
+                return Err(format!("placement ({oy},{ox}) hit {} banks", banks.len()));
+            }
+            Ok(())
+        });
+    }
+
+    /// (bank, word) uniquely identifies a neuron and round-trips.
+    #[test]
+    fn bank_word_roundtrip() {
+        let il = Interlacing::new(3, 28, 28);
+        let mut seen = HashSet::new();
+        for y in 0..28 {
+            for x in 0..28 {
+                let key = (il.bank_of(y, x), il.word_of(y, x));
+                assert!(seen.insert(key), "collision at ({y},{x})");
+                assert_eq!(il.neuron_of(key.0, key.1), (y, x));
+            }
+        }
+    }
+
+    /// Fig. 4's concrete example: a 28-wide map with K=3 has 10×10 windows,
+    /// depth 100 per bank.
+    #[test]
+    fn mnist_bank_depth() {
+        let il = Interlacing::new(3, 28, 28);
+        assert_eq!(il.banks(), 9);
+        assert_eq!(il.bank_depth(), 100);
+    }
+
+    /// The paper's observed bound: membrane depth never exceeds 256 for
+    /// the Table 6 networks (§5.2 — the LUTRAM motivation).
+    #[test]
+    fn table6_membrane_depths_under_256() {
+        for (h, w) in [(28, 28), (32, 32), (10, 10), (9, 9), (3, 3)] {
+            let il = Interlacing::new(3, h, w);
+            assert!(il.bank_depth() <= 256, "({h},{w}) -> {}", il.bank_depth());
+        }
+    }
+}

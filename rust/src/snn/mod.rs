@@ -1,0 +1,31 @@
+//! Cycle-level simulator of the Sommer et al. sparse SNN accelerator
+//! (§3.1), including the paper's two §5 optimizations.
+//!
+//! Architecture recap (Fig. 2): spikes are *address events* stored in
+//! segmented Address Event Queues ([`aeq`]); each of the P replicated
+//! cores pops one event per cycle and updates the K×K membrane-potential
+//! neighbourhood in a single cycle thanks to the kernel-coordinate memory
+//! interlacing ([`interlace`], Figs. 4/5); a double-buffered Thresholding
+//! Unit integrates slopes, compares against V_t and feeds newly emitted
+//! events back into the AEQs.
+//!
+//! * [`encoding`] — address-event encodings: the original 10-bit events
+//!   (coordinates + 2 status bits) and the §5.2 **compressed** (i_c, j_c)
+//!   encoding with implicit window position (Eq. 6–7 incl. the fallback).
+//! * [`aeq`] — segmented spike queues with occupancy/overflow accounting.
+//! * [`interlace`] — the two interlacing schemes and their invariants.
+//! * [`core`] — the per-core event pipeline cost/activity model.
+//! * [`accelerator`] — the full-design simulator: replays the functional
+//!   simulator's event streams against the timing + memory-activity model
+//!   and produces latency cycles + vector-based power activity.
+//! * [`config`] — the paper's design points (Tables 3/7/8/9).
+
+pub mod accelerator;
+pub mod aeq;
+pub mod config;
+pub mod core;
+pub mod encoding;
+pub mod interlace;
+
+pub use accelerator::{SnnAccelerator, SnnRunResult};
+pub use config::SnnDesign;

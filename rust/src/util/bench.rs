@@ -1,0 +1,110 @@
+//! Criterion-style micro-bench harness (criterion is not in the offline
+//! vendor set).
+//!
+//! Provides warmup, multiple timed samples, and mean/σ/min reporting, plus
+//! a `BenchSink` to defeat dead-code elimination.  The `cargo bench`
+//! targets under `rust/benches/` are `harness = false` binaries that use
+//! this module; each one regenerates a paper table or figure and then
+//! times its hot path.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark group, printed in a criterion-like layout.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    samples: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench { name: name.to_string(), warmup: 3, samples: 10 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Time `f` and print statistics; returns the mean duration.
+    pub fn run<T, F: FnMut() -> T>(&self, label: &str, mut f: F) -> Duration {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed());
+        }
+        let total: Duration = times.iter().sum();
+        let mean = total / self.samples as u32;
+        let min = *times.iter().min().unwrap();
+        let max = *times.iter().max().unwrap();
+        let mean_s = mean.as_secs_f64();
+        let var = times
+            .iter()
+            .map(|t| {
+                let d = t.as_secs_f64() - mean_s;
+                d * d
+            })
+            .sum::<f64>()
+            / self.samples as f64;
+        println!(
+            "{}/{label:<32} mean {:>10}  min {:>10}  max {:>10}  σ {:>9}",
+            self.name,
+            fmt_dur(mean),
+            fmt_dur(min),
+            fmt_dur(max),
+            fmt_dur(Duration::from_secs_f64(var.sqrt())),
+        );
+        mean
+    }
+
+    /// Time `f` over `items` work units; also prints throughput.
+    pub fn run_throughput<T, F: FnMut() -> T>(&self, label: &str, items: u64, f: F) -> Duration {
+        let mean = self.run(label, f);
+        let per_sec = items as f64 / mean.as_secs_f64();
+        println!("{}/{label:<32}   throughput {:.3e} items/s", self.name, per_sec);
+        mean
+    }
+}
+
+/// Human formatting for durations down to nanoseconds.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", d.as_secs_f64())
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench::new("test").warmup(1).samples(3);
+        let d = b.run("noop", || 1 + 1);
+        assert!(d.as_secs_f64() < 1.0);
+    }
+
+    #[test]
+    fn formats_durations() {
+        assert_eq!(fmt_dur(Duration::from_nanos(5)), "5ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

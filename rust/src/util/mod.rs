@@ -1,0 +1,18 @@
+//! Offline utility substrates.
+//!
+//! The build environment has no network access and a minimal vendored
+//! crate set (`xla`, `anyhow`), so the conveniences a project would
+//! normally pull from crates.io are implemented here instead: JSON
+//! (`json`), deterministic RNG (`rng`), statistics + histograms (`stats`),
+//! the binary tensor container shared with Python (`tensorfile`), a
+//! criterion-style micro-bench harness (`bench`), and a proptest-style
+//! property-testing harness (`quickcheck`).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod tensorfile;

@@ -1,0 +1,95 @@
+//! Mini property-testing harness (proptest is not in the offline vendor
+//! set).
+//!
+//! Runs a property over many deterministically-seeded random cases and, on
+//! failure, reports the case index + seed so the exact case replays.  No
+//! shrinking — cases are kept small instead.  Used throughout the crate
+//! for the coordinator / simulator invariants the task calls for
+//! (routing, batching, encoding round-trips, queue conservation…).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x5eed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. Panics with a replayable
+/// diagnostic on the first failure (`Err(msg)` return).
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {case_seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, Config::default(), prop)
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", Config { cases: 17, seed: 1 }, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", Config { cases: 4, seed: 2 }, |r| {
+            if r.f32() >= 0.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_assert_macro() {
+        check("macro", Config { cases: 8, seed: 3 }, |r| {
+            let x = r.below(100);
+            prop_assert!(x < 100, "x out of range: {x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,171 @@
+//! Summary statistics and histograms.
+//!
+//! The paper explicitly reports *distributions* (latency / power / energy
+//! histograms over 1,000 input samples, Figs. 7, 9, 12–15) rather than
+//! averages — "we show the full ranges instead".  [`Histogram`] is the
+//! reproduction of that reporting style, including an ASCII rendering used
+//! by the bench targets and examples.
+
+/// Running summary of a sample set (no allocation per observation).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub sum: f64,
+    pub sum_sq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        ((self.sum_sq / self.n as f64 - m * m).max(0.0)).sqrt()
+    }
+}
+
+/// Percentile (nearest-rank on a sorted copy).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Fixed-bin histogram over [lo, hi] with out-of-range clamping.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<usize>,
+    pub summary: Summary,
+    samples: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Histogram { lo, hi, bins: vec![0; n_bins], summary: Summary::new(), samples: Vec::new() }
+    }
+
+    /// Build with automatic range from the data.
+    pub fn auto(samples: &[f64], n_bins: usize) -> Self {
+        let lo = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let (lo, hi) = if lo == hi { (lo - 0.5, hi + 0.5) } else { (lo, hi) };
+        let mut h = Histogram::new(lo, hi, n_bins);
+        for &s in samples {
+            h.add(s);
+        }
+        h
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.summary.add(x);
+        self.samples.push(x);
+        let t = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64).floor();
+        let idx = (t as isize).clamp(0, self.bins.len() as isize - 1) as usize;
+        self.bins[idx] += 1;
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile(&self.samples, p)
+    }
+
+    /// Render as a vertical ASCII histogram, optionally with a reference
+    /// line (the paper's dashed red CNN line) drawn at `marker`.
+    pub fn render(&self, width: usize, marker: Option<f64>, unit: &str) -> String {
+        let max = self.bins.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        let marker_bin = marker.map(|m| {
+            let t = ((m - self.lo) / (self.hi - self.lo) * self.bins.len() as f64).floor();
+            (t as isize).clamp(0, self.bins.len() as isize - 1) as usize
+        });
+        for (i, &count) in self.bins.iter().enumerate() {
+            let edge = self.lo + (self.hi - self.lo) * i as f64 / self.bins.len() as f64;
+            let bar_len = (count * width + max - 1) / max;
+            let bar: String = std::iter::repeat('#').take(bar_len).collect();
+            let mark = if marker_bin == Some(i) { " <== CNN" } else { "" };
+            out.push_str(&format!("{edge:>12.3} {unit:<6} |{bar:<w$}| {count}{mark}\n", w = width));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.n, 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.min - 1.0).abs() < 1e-12);
+        assert!((s.max - 4.0).abs() < 1e-12);
+        assert!((s.std() - (1.25f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.5, 1.5, 1.6, 9.99, -5.0, 50.0] {
+            h.add(x);
+        }
+        assert_eq!(h.bins[0], 2); // 0.5 and clamped -5.0
+        assert_eq!(h.bins[1], 2);
+        assert_eq!(h.bins[9], 2); // 9.99 and clamped 50.0
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn auto_range_covers_data() {
+        let h = Histogram::auto(&[3.0, 7.0, 5.0], 4);
+        assert_eq!(h.summary.n, 3);
+        assert_eq!(h.bins.iter().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn render_contains_marker() {
+        let h = Histogram::auto(&[1.0, 2.0, 3.0], 3);
+        let s = h.render(20, Some(2.0), "ms");
+        assert!(s.contains("<== CNN"));
+    }
+}

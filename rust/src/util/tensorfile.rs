@@ -1,0 +1,256 @@
+//! Reader/writer for the `SBT1` binary tensor container.
+//!
+//! Mirrors `python/compile/tensorio.py` — the interchange format for
+//! weights, evaluation sets, and spike traces in `artifacts/`.  Format:
+//!
+//! ```text
+//! magic  : 4 bytes "SBT1"
+//! count  : u32 LE
+//! tensor : name_len u16 | name utf8 | dtype u8 (0=f32,1=i32,2=u8)
+//!          | ndim u8 | dims u32[ndim] | data LE C-order
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One tensor: shape + typed payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn u8(dims: Vec<usize>, data: Vec<u8>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, data: TensorData::U8(data) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            TensorData::U8(v) => Ok(v),
+            _ => bail!("tensor is not u8"),
+        }
+    }
+}
+
+/// Read all tensors from an `SBT1` file.
+pub fn read_tensors(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let raw = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_tensors(&raw).with_context(|| format!("parsing {}", path.display()))
+}
+
+fn rd_u16(b: &[u8], i: &mut usize) -> Result<u16> {
+    if *i + 2 > b.len() {
+        bail!("truncated (u16 at {i})");
+    }
+    let v = u16::from_le_bytes([b[*i], b[*i + 1]]);
+    *i += 2;
+    Ok(v)
+}
+
+fn rd_u32(b: &[u8], i: &mut usize) -> Result<u32> {
+    if *i + 4 > b.len() {
+        bail!("truncated (u32 at {i})");
+    }
+    let v = u32::from_le_bytes([b[*i], b[*i + 1], b[*i + 2], b[*i + 3]]);
+    *i += 4;
+    Ok(v)
+}
+
+fn rd_u8(b: &[u8], i: &mut usize) -> Result<u8> {
+    if *i + 1 > b.len() {
+        bail!("truncated (u8 at {i})");
+    }
+    let v = b[*i];
+    *i += 1;
+    Ok(v)
+}
+
+pub fn parse_tensors(raw: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    if raw.len() < 8 || &raw[0..4] != b"SBT1" {
+        bail!("bad magic (not an SBT1 file)");
+    }
+    let mut i = 4usize;
+    let count = rd_u32(raw, &mut i)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = rd_u16(raw, &mut i)? as usize;
+        if i + nlen > raw.len() {
+            bail!("truncated name");
+        }
+        let name = std::str::from_utf8(&raw[i..i + nlen])?.to_string();
+        i += nlen;
+        let dtype = rd_u8(raw, &mut i)?;
+        let ndim = rd_u8(raw, &mut i)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(rd_u32(raw, &mut i)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let data = match dtype {
+            0 => {
+                if i + 4 * n > raw.len() {
+                    bail!("truncated f32 payload for {name}");
+                }
+                let mut v = Vec::with_capacity(n);
+                for k in 0..n {
+                    v.push(f32::from_le_bytes(raw[i + 4 * k..i + 4 * k + 4].try_into().unwrap()));
+                }
+                i += 4 * n;
+                TensorData::F32(v)
+            }
+            1 => {
+                if i + 4 * n > raw.len() {
+                    bail!("truncated i32 payload for {name}");
+                }
+                let mut v = Vec::with_capacity(n);
+                for k in 0..n {
+                    v.push(i32::from_le_bytes(raw[i + 4 * k..i + 4 * k + 4].try_into().unwrap()));
+                }
+                i += 4 * n;
+                TensorData::I32(v)
+            }
+            2 => {
+                if i + n > raw.len() {
+                    bail!("truncated u8 payload for {name}");
+                }
+                let v = raw[i..i + n].to_vec();
+                i += n;
+                TensorData::U8(v)
+            }
+            d => bail!("unknown dtype code {d} for {name}"),
+        };
+        out.insert(name, Tensor { dims, data });
+    }
+    Ok(out)
+}
+
+/// Write tensors in `SBT1` format (used by tests and trace dumps).
+pub fn write_tensors(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(b"SBT1")?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        let code: u8 = match t.data {
+            TensorData::F32(_) => 0,
+            TensorData::I32(_) => 1,
+            TensorData::U8(_) => 2,
+        };
+        f.write_all(&[code, t.dims.len() as u8])?;
+        for &d in &t.dims {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::U8(v) => f.write_all(v)?,
+        }
+    }
+    Ok(())
+}
+
+/// Convenience: read a whole file into memory (for HLO text etc).
+pub fn read_to_string(path: &Path) -> Result<String> {
+    let mut s = String::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_string(&mut s)?;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("spikebench_tensorfile_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let mut m = BTreeMap::new();
+        m.insert("a/w".to_string(), Tensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.5]));
+        m.insert("b".to_string(), Tensor::i32(vec![2], vec![-7, 9]));
+        m.insert("c".to_string(), Tensor::u8(vec![4], vec![0, 1, 1, 0]));
+        write_tensors(&path, &m).unwrap();
+        let back = read_tensors(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_tensors(b"XXXX\0\0\0\0").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join("spikebench_tensorfile_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), Tensor::f32(vec![8], (0..8).map(|i| i as f32).collect()));
+        write_tensors(&path, &m).unwrap();
+        let mut raw = std::fs::read(&path).unwrap();
+        raw.truncate(raw.len() - 5);
+        assert!(parse_tensors(&raw).is_err());
+    }
+
+    #[test]
+    fn scalarless_shapes() {
+        let t = Tensor::f32(vec![1], vec![3.0]);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.as_f32().unwrap()[0], 3.0);
+    }
+}

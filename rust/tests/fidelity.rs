@@ -1,0 +1,143 @@
+//! Fidelity-contract tests (DESIGN.md §5): the paper's qualitative claims
+//! must hold in the reproduction.  These are *shape* checks — who wins,
+//! by roughly what factor, where the crossover falls — not absolute-value
+//! matches (our substrate is a calibrated simulator, not the authors'
+//! Vivado testbed).
+
+use spikebench::cnn_accel::config as cnn_config;
+use spikebench::coordinator::sweep::cnn_metrics;
+use spikebench::experiments::ctx::Ctx;
+use spikebench::fpga::device::PYNQ_Z1;
+
+const N: usize = 150;
+
+fn ctx() -> Option<Ctx> {
+    match Ctx::load() {
+        Ok(c) => Some(c),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e})");
+            None
+        }
+    }
+}
+
+fn cnn(ctx: &mut Ctx, ds: &str, name: &str) -> spikebench::coordinator::sweep::CnnMetrics {
+    let info = ctx.info(ds).unwrap().clone();
+    let d = cnn_config::by_name(name).unwrap();
+    cnn_metrics(&d, info.input_shape, &info.arch, &PYNQ_Z1)
+}
+
+/// Claim 1 (Fig. 7): FINN latency is constant; SNN latency is a
+/// data-dependent distribution, and SNN8 beats CNN4 for the majority of
+/// MNIST samples while SNN1 is slower than CNN2.
+#[test]
+fn claim1_latency_distributions() {
+    let Some(mut ctx) = ctx() else { return };
+    let s8 = ctx.sweep("SNN8_BRAM", &PYNQ_Z1, N).unwrap();
+    let (lo, hi) = s8.min_max(|m| m.cycles as f64);
+    assert!(hi / lo > 1.5, "SNN latency should spread with input ({lo}..{hi})");
+    let cnn4 = cnn(&mut ctx, "mnist", "CNN4");
+    let faster =
+        s8.samples.iter().filter(|m| m.cycles < cnn4.latency_cycles).count();
+    assert!(faster * 2 > s8.samples.len(), "SNN8 should beat CNN4 on a majority");
+    let s1 = ctx.sweep("SNN1_BRAM(w=16)", &PYNQ_Z1, N).unwrap();
+    let cnn2 = cnn(&mut ctx, "mnist", "CNN2");
+    let slower = s1.samples.iter().filter(|m| m.cycles > cnn2.latency_cycles).count();
+    assert!(slower * 2 > s1.samples.len(), "SNN1 should lose to CNN2 on a majority");
+}
+
+/// Claim 1b (Fig. 8): digit '1' generates the fewest spikes.
+#[test]
+fn claim1b_class_one_is_sparsest() {
+    let Some(mut ctx) = ctx() else { return };
+    let s = ctx.sweep("SNN8_BRAM", &PYNQ_Z1, 400).unwrap();
+    let mut sums = [0f64; 10];
+    let mut counts = [0usize; 10];
+    for m in &s.samples {
+        sums[m.label] += m.total_spikes as f64;
+        counts[m.label] += 1;
+    }
+    let avg: Vec<f64> =
+        (0..10).map(|c| sums[c] / counts[c].max(1) as f64).collect();
+    let min_class =
+        (0..10).min_by(|&a, &b| avg[a].partial_cmp(&avg[b]).unwrap()).unwrap();
+    assert_eq!(min_class, 1, "spikes per class: {avg:?}");
+}
+
+/// Claim 2 (Table 4): BRAM reads dominate SNN power; SNN8 is ~4× CNN4.
+#[test]
+fn claim2_bram_power_dominates() {
+    let Some(mut ctx) = ctx() else { return };
+    let s = ctx.sweep("SNN8_BRAM", &PYNQ_Z1, N).unwrap();
+    for m in s.samples.iter().take(20) {
+        assert!(m.power.bram > m.power.signals);
+        assert!(m.power.bram > m.power.logic);
+        assert!(m.power.bram > m.power.clocks);
+    }
+    let cnn4 = cnn(&mut ctx, "mnist", "CNN4");
+    let mean_p: f64 =
+        s.samples.iter().map(|m| m.power_w).sum::<f64>() / s.samples.len() as f64;
+    let factor = mean_p / cnn4.power.total();
+    assert!((2.5..6.0).contains(&factor), "SNN8/CNN4 power factor {factor}");
+}
+
+/// Claim 3 (Table 7): LUTRAM saves ~15%, compression ~17% more at P=4,
+/// and nothing at P=8 (already at the per-PE BRAM minimum).
+#[test]
+fn claim3_optimization_ladder() {
+    use spikebench::fpga::power::{DesignFamily, PowerEstimator};
+    use spikebench::snn::config::by_name;
+    let est = PowerEstimator::new(PYNQ_Z1, DesignFamily::Snn);
+    let p = |name: &str| est.vectorless(&by_name(name).unwrap().resources()).total();
+    let (bram4, lutram4, compr4) = (p("SNN4_BRAM"), p("SNN4_LUTRAM"), p("SNN4_COMPR."));
+    let save_lutram = 1.0 - lutram4 / bram4;
+    let save_compr = 1.0 - compr4 / lutram4;
+    assert!((0.05..0.30).contains(&save_lutram), "LUTRAM saving {save_lutram}");
+    assert!((0.05..0.30).contains(&save_compr), "compression saving {save_compr}");
+    // P=8: LUTRAM == COMPR (identical resources, §5.2).
+    assert_eq!(p("SNN8_LUTRAM"), p("SNN8_COMPR."));
+}
+
+/// Claim 5 (Figs. 12-14, the paper's headline): for MNIST the SNN gives
+/// little/no energy advantage; for SVHN and CIFAR-10 the trend reverses.
+#[test]
+fn claim5_headline_crossover() {
+    let Some(mut ctx) = ctx() else { return };
+    // MNIST: SNN8_COMPR. better than CNN4 on a minority of samples.
+    let s = ctx.sweep("SNN8_COMPR.", &PYNQ_Z1, N).unwrap();
+    let cnn4 = cnn(&mut ctx, "mnist", "CNN4");
+    let better = s.samples.iter().filter(|m| m.energy_j < cnn4.energy_j).count();
+    assert!(
+        better * 2 < s.samples.len(),
+        "MNIST: SNN should NOT win on average ({better}/{})",
+        s.samples.len()
+    );
+    // SVHN: SNN8 better than CNN8 on a majority.
+    let s = ctx.sweep("SNN8_SVHN", &PYNQ_Z1, 60).unwrap();
+    let cnn8 = cnn(&mut ctx, "svhn", "CNN8");
+    let better = s.samples.iter().filter(|m| m.energy_j < cnn8.energy_j).count();
+    assert!(better * 2 > s.samples.len(), "SVHN: SNN should win ({better}/60)");
+    // CIFAR-10: SNN8 better than CNN10 on a majority.
+    let s = ctx.sweep("SNN8_CIFAR", &PYNQ_Z1, 60).unwrap();
+    let cnn10 = cnn(&mut ctx, "cifar", "CNN10");
+    let better = s.samples.iter().filter(|m| m.energy_j < cnn10.energy_j).count();
+    assert!(better * 2 > s.samples.len(), "CIFAR: SNN should win ({better}/60)");
+}
+
+/// Claim 6 (Table 10 / §6): the two §5 optimizations yield ≥ 1.2× total
+/// FPS/W for MNIST (paper: 1.41×), and MNIST FPS/W lands in the
+/// thousands (the Sommer-architecture efficiency class).
+#[test]
+fn claim6_fpsw_bands() {
+    let Some(mut ctx) = ctx() else { return };
+    let base = ctx.sweep("SNN8_BRAM", &PYNQ_Z1, N).unwrap();
+    let opt = ctx.sweep("SNN8_COMPR.", &PYNQ_Z1, N).unwrap();
+    let mean = |s: &spikebench::coordinator::sweep::SnnSweep| {
+        s.samples.iter().map(|m| m.fps_per_watt).sum::<f64>() / s.samples.len() as f64
+    };
+    let gain = mean(&opt) / mean(&base);
+    assert!(gain > 1.15, "optimization FPS/W gain {gain} (paper: 1.41)");
+    assert!(mean(&opt) > 1_000.0, "MNIST FPS/W should be in the thousands");
+    // No AEQ overflows anywhere: the designs' D are sized correctly.
+    assert!(opt.samples.iter().all(|m| m.aeq_overflows == 0));
+}

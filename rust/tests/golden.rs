@@ -1,0 +1,172 @@
+//! Golden cross-validation: Rust functional models vs the AOT JAX/Pallas
+//! artifacts.
+//!
+//! Three independent implementations of the same semantics must agree:
+//!
+//! 1. the L2 JAX graph (Pallas kernels), frozen into `artifacts/*.hlo.txt`
+//!    and executed through PJRT by `runtime::Runtime`;
+//! 2. the Python reference path, whose per-step spike maps were exported
+//!    to `artifacts/*_traces.bin` at build time;
+//! 3. the Rust `nn` functional models (dense conv for the CNN, the
+//!    event-driven scatter engine for the SNN).
+//!
+//! Tolerances: float sums are reassociated between XLA and the
+//! event-driven engine, so membrane potentials sitting exactly on the
+//! threshold can flip a spike; we allow a small disagreement rate rather
+//! than bit-exactness (counted, not ignored).
+
+use std::path::PathBuf;
+
+use spikebench::data::{EvalSet, TraceFile};
+use spikebench::nn::loader::{load_network, Manifest, WeightKind};
+use spikebench::nn::network::argmax;
+use spikebench::nn::snn::snn_infer;
+use spikebench::runtime::Runtime;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = spikebench::nn::loader::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn rust_cnn_matches_pjrt_artifact() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    for ds in ["mnist"] {
+        let net = load_network(&manifest, ds, WeightKind::Cnn).unwrap();
+        let eval = EvalSet::load(&manifest.file(ds, "eval").unwrap()).unwrap();
+        let hlo = manifest.file(ds, "cnn_hlo").unwrap();
+        rt.load(&hlo).unwrap();
+        let mut agree = 0;
+        let n = 32.min(eval.len());
+        for i in 0..n {
+            let x = &eval.images[i];
+            let pjrt_logits = rt.run_cnn(&hlo, x).unwrap();
+            let rust_logits = net.forward(x);
+            let max_diff: f32 = pjrt_logits
+                .iter()
+                .zip(&rust_logits)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(max_diff < 1e-2, "{ds} sample {i}: logit diff {max_diff}");
+            if argmax(&pjrt_logits) == argmax(&rust_logits) {
+                agree += 1;
+            }
+        }
+        assert_eq!(agree, n, "{ds}: classification disagreement");
+    }
+}
+
+#[test]
+fn rust_snn_matches_python_traces() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    for ds in ["mnist", "svhn", "cifar"] {
+        let info = manifest.dataset(ds).unwrap();
+        let net = load_network(&manifest, ds, WeightKind::Snn).unwrap();
+        let eval = EvalSet::load(&manifest.file(ds, "eval").unwrap()).unwrap();
+        let traces = TraceFile::load(&manifest.file(ds, "traces").unwrap()).unwrap();
+        assert_eq!(traces.t_steps, info.t_steps);
+        for (s, trace) in traces.traces.iter().enumerate() {
+            let x = &eval.images[s];
+            let r = snn_infer(&net, x, info.t_steps, info.v_th);
+            // Logits agree to float tolerance.
+            let max_diff: f32 = trace
+                .logits
+                .iter()
+                .zip(&r.logits)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            let scale: f32 =
+                trace.logits.iter().map(|v| v.abs()).fold(0.0, f32::max).max(1.0);
+            assert!(
+                max_diff / scale < 2e-2,
+                "{ds} trace {s}: logits diff {max_diff} (scale {scale})"
+            );
+            // Spike maps: allow a tiny threshold-flip disagreement rate.
+            let mut total = 0u64;
+            let mut mismatched = 0u64;
+            for (t, step_maps) in trace.maps.iter().enumerate() {
+                for (l, py_map) in step_maps.iter().enumerate() {
+                    let events = &r.events[t][l];
+                    // Rebuild the Rust spike map for (t, l).
+                    let mut rust_map = vec![0u8; py_map.len()];
+                    let (h, w) = (py_map.h, py_map.w);
+                    for ev in events {
+                        rust_map[(ev.c as usize * h + ev.y as usize) * w + ev.x as usize] = 1;
+                    }
+                    for (a, b) in py_map.data.iter().zip(&rust_map) {
+                        total += 1;
+                        if (*a != 0.0) != (*b != 0) {
+                            mismatched += 1;
+                        }
+                    }
+                }
+            }
+            let rate = mismatched as f64 / total.max(1) as f64;
+            assert!(
+                rate < 2e-3,
+                "{ds} trace {s}: spike map mismatch rate {rate} ({mismatched}/{total})"
+            );
+        }
+    }
+}
+
+#[test]
+fn rust_snn_counts_match_pjrt_artifact() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rt = Runtime::cpu().unwrap();
+    let ds = "mnist";
+    let info = manifest.dataset(ds).unwrap();
+    let net = load_network(&manifest, ds, WeightKind::Snn).unwrap();
+    let eval = EvalSet::load(&manifest.file(ds, "eval").unwrap()).unwrap();
+    let hlo = manifest.file(ds, "snn_hlo").unwrap();
+    rt.load(&hlo).unwrap();
+    for i in 0..8.min(eval.len()) {
+        let x = &eval.images[i];
+        let pjrt = rt.run_snn(&hlo, x).unwrap();
+        let rust = snn_infer(&net, x, info.t_steps, info.v_th);
+        assert_eq!(pjrt.spike_counts.len(), rust.spike_counts.len(), "layer count");
+        let pjrt_total: f64 = pjrt.spike_counts.iter().sum();
+        let rust_total = rust.total_spikes() as f64;
+        let rel = (pjrt_total - rust_total).abs() / pjrt_total.max(1.0);
+        assert!(rel < 5e-3, "sample {i}: spikes {pjrt_total} vs {rust_total}");
+        assert_eq!(
+            argmax(&pjrt.logits),
+            argmax(&rust.logits),
+            "sample {i}: classification disagreement"
+        );
+    }
+}
+
+#[test]
+fn snn_artifact_accuracy_matches_manifest() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let ds = "mnist";
+    let info = manifest.dataset(ds).unwrap();
+    let net = load_network(&manifest, ds, WeightKind::Snn).unwrap();
+    let eval = EvalSet::load(&manifest.file(ds, "eval").unwrap()).unwrap();
+    let n = 200;
+    let mut correct = 0;
+    for i in 0..n {
+        let r = snn_infer(&net, &eval.images[i], info.t_steps, info.v_th);
+        if r.classify() == eval.labels[i] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    // The manifest accuracy was measured in Python over the full set.
+    assert!(
+        (acc - info.accuracy_snn).abs() < 0.06,
+        "rust snn acc {acc} vs manifest {}",
+        info.accuracy_snn
+    );
+}
