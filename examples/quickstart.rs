@@ -1,16 +1,18 @@
-//! Quickstart: load the AOT artifacts, classify a few images through the
-//! PJRT runtime, and attach the simulated FPGA cost of each inference.
+//! Quickstart: load the AOT artifacts, classify a few images — through
+//! the PJRT runtime when the `pjrt` feature is enabled and the client
+//! initializes, through the pure-Rust golden model otherwise — and attach
+//! the simulated FPGA cost of each inference.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
 use anyhow::Result;
+use spikebench::coordinator::serve::select_backend;
 use spikebench::experiments::ctx::Ctx;
 use spikebench::fpga::device::PYNQ_Z1;
 use spikebench::nn::loader::{load_network, WeightKind};
 use spikebench::nn::network::argmax;
-use spikebench::runtime::Runtime;
 use spikebench::snn::accelerator::SnnAccelerator;
 use spikebench::snn::config::by_name;
 
@@ -19,11 +21,12 @@ fn main() -> Result<()> {
     let info = ctx.info("mnist")?.clone();
     println!("dataset: mnist  arch: {}  T={}  v_th={}", info.arch, info.t_steps, info.v_th);
 
-    // Functional inference through the compiled JAX/Pallas artifact.
-    let mut rt = Runtime::cpu()?;
-    let hlo = ctx.manifest.file("mnist", "cnn_hlo")?;
-    rt.load(&hlo)?;
-    println!("PJRT platform: {}  artifact: {}", rt.platform(), hlo.display());
+    // Functional inference: PJRT artifact when available, rust-nn fallback
+    // otherwise (same selection policy as the serving front-end).
+    let hlo = ctx.manifest.file("mnist", "cnn_hlo").ok();
+    let fallback = load_network(&ctx.manifest, "mnist", WeightKind::Cnn)?;
+    let (mut backend, label) = select_backend(hlo, fallback);
+    println!("backend: {label}");
 
     // Hardware-cost simulation on the paper's best MNIST design.
     let design = by_name("SNN8_COMPR.").unwrap();
@@ -31,18 +34,26 @@ fn main() -> Result<()> {
     let acc = SnnAccelerator::new(&design, &snn_net, info.t_steps, info.v_th);
 
     let eval = ctx.eval("mnist")?.clone();
-    println!("\n{:<4} {:>5} {:>5}  {:>9} {:>9} {:>9} {:>10}", "img", "label", "pred", "spikes", "cycles", "µJ", "FPS/W");
+    println!(
+        "\n{:<4} {:>5} {:>5}  {:>9} {:>9} {:>9} {:>10}",
+        "img", "label", "pred", "spikes", "cycles", "µJ", "FPS/W"
+    );
     let mut correct = 0;
     for i in 0..10 {
         let x = &eval.images[i];
-        let logits = rt.run_cnn(&hlo, x)?;
+        let logits = backend.classify(x)?;
         let pred = argmax(&logits);
         let hw = acc.run(x, &PYNQ_Z1);
         correct += (pred == eval.labels[i]) as usize;
         println!(
             "{:<4} {:>5} {:>5}  {:>9} {:>9} {:>9.1} {:>10.0}",
-            i, eval.labels[i], pred, hw.total_spikes, hw.cycles,
-            hw.energy_j * 1e6, hw.fps_per_watt(),
+            i,
+            eval.labels[i],
+            pred,
+            hw.total_spikes,
+            hw.cycles,
+            hw.energy_j * 1e6,
+            hw.fps_per_watt(),
         );
     }
     println!("\n{correct}/10 correct — see `repro all` for the full paper reproduction");

@@ -1,18 +1,20 @@
 //! Serving demo: the deployment-shaped view.  A batching router serves
-//! classification requests through the AOT-compiled PJRT artifact (Python
-//! never runs), attaching the simulated FPGA latency/energy of each
-//! request.  Reports service throughput, accuracy and batch statistics.
+//! classification requests through the best available backend — the
+//! AOT-compiled PJRT artifact when the `pjrt` feature is on and the
+//! artifact loads, the pure-Rust golden model otherwise — attaching the
+//! simulated FPGA latency/energy of each request.  Batches flow through
+//! the backend as a single call and share one amortized cost estimate.
+//! Reports service throughput, accuracy and batch statistics.
 //!
 //! ```sh
 //! cargo run --release --example serve [-- --requests 256 --batch 16]
 //! ```
 
 use anyhow::Result;
-use spikebench::coordinator::serve::{Backend, PjrtBackend, ServeConfig, Server};
+use spikebench::coordinator::serve::{select_backend, Backend, ServeConfig, Server};
 use spikebench::experiments::ctx::Ctx;
 use spikebench::fpga::device::PYNQ_Z1;
 use spikebench::nn::loader::{load_network, WeightKind};
-use spikebench::runtime::Runtime;
 use spikebench::util::cli::Args;
 use spikebench::util::stats::Summary;
 
@@ -30,12 +32,11 @@ fn main() -> Result<()> {
         .into_iter()
         .find(|d| d.dataset == ds && d.p() == 8)
         .expect("P=8 design");
-    println!("serving {ds} via PJRT, hardware-cost design: {}", design.name);
 
-    let mut rt = Runtime::cpu()?;
-    let hlo = ctx.manifest.file(&ds, "cnn_hlo")?;
-    rt.load(&hlo)?; // compile before accepting traffic
-    let backend = Box::new(PjrtBackend { runtime: rt, hlo });
+    let hlo = ctx.manifest.file(&ds, "cnn_hlo").ok();
+    let fallback = load_network(&ctx.manifest, &ds, WeightKind::Cnn)?;
+    let (backend, label) = select_backend(hlo, fallback);
+    println!("serving {ds} via {label}, hardware-cost design: {}", design.name);
 
     let server = Server::start(
         backend,
@@ -70,10 +71,23 @@ fn main() -> Result<()> {
     let stats = server.shutdown();
 
     println!("\n== serving report ==");
-    println!("requests        : {n_req} ({} batches, max batch {})", stats.batches, stats.max_batch_seen);
+    println!(
+        "requests        : {n_req} ({} batches, max batch {}, mean batch {:.1})",
+        stats.batches,
+        stats.max_batch_seen,
+        n_req as f64 / stats.batches.max(1) as f64
+    );
+    println!(
+        "backend         : {} calls, {} cost estimates (amortized per batch)",
+        stats.backend_calls, stats.cost_estimates
+    );
     println!("throughput      : {:.0} req/s (wall {:.2?})", n_req as f64 / wall.as_secs_f64(), wall);
     println!("accuracy        : {:.1}%", 100.0 * correct as f64 / n_req as f64);
     println!("service time    : mean {:.2} ms  max {:.2} ms", svc.mean(), svc.max);
-    println!("simulated FPGA  : mean latency {:.3} ms, total energy {:.2} mJ", accel_lat.mean(), energy * 1e3);
+    println!(
+        "simulated FPGA  : mean latency {:.3} ms, total energy {:.2} mJ",
+        accel_lat.mean(),
+        energy * 1e3
+    );
     Ok(())
 }

@@ -16,7 +16,9 @@ use super::dataflow::{CnnPipeline, Folding};
 /// A named FINN-generated CNN configuration.
 #[derive(Debug, Clone)]
 pub struct CnnDesign {
+    /// Design name (CNN1..CNN10).
     pub name: &'static str,
+    /// Dataset whose network this design is folded for.
     pub dataset: &'static str,
     /// Weight bit width (Table 2's 6/8-bit variants).
     pub bits: u32,
@@ -29,10 +31,12 @@ pub struct CnnDesign {
 }
 
 impl CnnDesign {
+    /// Build the dataflow pipeline schedule for `arch`.
     pub fn pipeline(&self, arch: &[LayerSpec], input: (usize, usize, usize)) -> CnnPipeline {
         CnnPipeline::new(arch, input, &self.foldings)
     }
 
+    /// Published resources when available, analytic estimate otherwise.
     pub fn resources(&self) -> ResourceUsage {
         self.published.unwrap_or_else(|| self.estimate_resources())
     }
@@ -213,6 +217,7 @@ pub fn cifar_designs() -> Vec<CnnDesign> {
     ]
 }
 
+/// Every CNN design, for lookup by name.
 pub fn all_designs() -> Vec<CnnDesign> {
     let mut v = mnist_designs();
     v.extend(svhn_designs());
@@ -220,6 +225,7 @@ pub fn all_designs() -> Vec<CnnDesign> {
     v
 }
 
+/// Case-insensitive lookup of a CNN design.
 pub fn by_name(name: &str) -> Option<CnnDesign> {
     all_designs().into_iter().find(|d| d.name.eq_ignore_ascii_case(name))
 }

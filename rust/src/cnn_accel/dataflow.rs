@@ -21,13 +21,16 @@ use crate::nn::arch::{layer_shapes, LayerSpec};
 /// `simd` = input synapses per PE per cycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Folding {
+    /// Neurons (output channels / units) computed in parallel.
     pub pe: u32,
+    /// Input synapses per PE per cycle.
     pub simd: u32,
 }
 
 /// One layer's static schedule.
 #[derive(Debug, Clone)]
 pub struct LayerSchedule {
+    /// Layer label, e.g. `conv1(32C3)`.
     pub name: String,
     /// Total MAC operations.
     pub macs: u64,
@@ -35,12 +38,14 @@ pub struct LayerSchedule {
     pub cycles: u64,
     /// Sliding-window / FIFO fill before the first output.
     pub fill: u64,
+    /// Clamped folding actually applied (None for pool layers).
     pub folding: Option<Folding>,
 }
 
 /// The whole pipeline's schedule.
 #[derive(Debug, Clone)]
 pub struct CnnPipeline {
+    /// Per-layer schedules in network order.
     pub layers: Vec<LayerSchedule>,
 }
 
@@ -151,6 +156,7 @@ impl CnnPipeline {
             .sum()
     }
 
+    /// The slowest layer — the stage that sets the pipeline II.
     pub fn bottleneck(&self) -> &LayerSchedule {
         self.layers.iter().max_by_key(|l| l.cycles).unwrap()
     }

@@ -7,8 +7,10 @@
 //! vendor set), runs the functional SNN simulation once per image, and
 //! replays each design point's timing/energy model against the shared
 //! event streams ([`sweep`]).  [`serve`] is the deployment-shaped
-//! front-end: a batching request router whose classification path executes
-//! the AOT-compiled PJRT artifacts — Python never runs at request time.
+//! front-end: a batching request router that executes each batch through
+//! its backend in a single call — the AOT-compiled PJRT artifacts when the
+//! `pjrt` feature is on, the pure-Rust golden model otherwise; Python
+//! never runs at request time either way.
 
 pub mod pool;
 pub mod serve;

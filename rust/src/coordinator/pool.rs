@@ -19,6 +19,19 @@ pub fn default_workers() -> usize {
 
 /// Apply `f` to every index in `0..n` on `workers` threads; results are
 /// returned in index order.
+///
+/// `f` may borrow from the enclosing scope (the pool uses
+/// `std::thread::scope`), which is what lets the sweeps share networks and
+/// evaluation sets across workers without `Arc`.
+///
+/// ```
+/// use spikebench::coordinator::pool::parallel_map;
+///
+/// let data = vec![10u64, 20, 30, 40];
+/// // Borrow `data` from all four workers, no Arc required.
+/// let doubled = parallel_map(data.len(), 4, |i| data[i] * 2);
+/// assert_eq!(doubled, vec![20, 40, 60, 80]);
+/// ```
 pub fn parallel_map<R, F>(n: usize, workers: usize, f: F) -> Vec<R>
 where
     R: Send,

@@ -23,37 +23,52 @@ use super::pool::{default_workers, parallel_map};
 /// Per-sample metrics of one design on one input.
 #[derive(Debug, Clone, Copy)]
 pub struct SampleMetrics {
+    /// Ground-truth label of the input.
     pub label: usize,
+    /// Predicted class (argmax of the functional logits).
     pub predicted: usize,
+    /// Total latency in clock cycles.
     pub cycles: u64,
+    /// Latency in seconds at the device clock.
     pub latency_s: f64,
+    /// Total vector-based power (W).
     pub power_w: f64,
     /// Vector-based power split (the Table 4 categories).
     pub power: PowerBreakdown,
+    /// Energy for this classification (J).
     pub energy_j: f64,
+    /// Throughput efficiency (frames/s per Watt).
     pub fps_per_watt: f64,
+    /// Total spike events processed.
     pub total_spikes: u64,
+    /// Events exceeding the configured AEQ depth (0 = design holds).
     pub aeq_overflows: u64,
 }
 
 /// A design's sweep over an evaluation set.
 #[derive(Debug, Clone)]
 pub struct SnnSweep {
+    /// Name of the swept SNN design.
     pub design_name: String,
+    /// Name of the device the sweep was costed on.
     pub device_name: String,
+    /// Per-input metrics, in evaluation-set order.
     pub samples: Vec<SampleMetrics>,
 }
 
 impl SnnSweep {
+    /// Fraction of samples classified correctly.
     pub fn accuracy(&self) -> f64 {
         let ok = self.samples.iter().filter(|s| s.predicted == s.label).count();
         ok as f64 / self.samples.len().max(1) as f64
     }
 
+    /// Project one metric out of every sample.
     pub fn collect<F: Fn(&SampleMetrics) -> f64>(&self, f: F) -> Vec<f64> {
         self.samples.iter().map(f).collect()
     }
 
+    /// (min, max) of one projected metric — the paper's range notation.
     pub fn min_max<F: Fn(&SampleMetrics) -> f64>(&self, f: F) -> (f64, f64) {
         let v = self.collect(f);
         let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
@@ -124,11 +139,17 @@ pub fn snn_sweep(
 /// Input-independent metrics of a CNN design (the dashed red lines).
 #[derive(Debug, Clone, Copy)]
 pub struct CnnMetrics {
+    /// Single-frame latency in cycles (II + pipeline fills).
     pub latency_cycles: u64,
+    /// Latency in seconds at the device clock.
     pub latency_s: f64,
+    /// Duty-modulated power split.
     pub power: PowerBreakdown,
+    /// Energy per classification at steady state (J).
     pub energy_j: f64,
+    /// Throughput efficiency (frames/s per Watt), II-bound.
     pub fps_per_watt: f64,
+    /// Mean pipeline duty in 0..1 (feeds the power model).
     pub duty: f64,
 }
 

@@ -15,7 +15,9 @@ use crate::util::tensorfile::read_tensors;
 /// A labelled evaluation set.
 #[derive(Debug, Clone)]
 pub struct EvalSet {
+    /// Input images, (C, H, W) each.
     pub images: Vec<Tensor3>,
+    /// Ground-truth labels, aligned with `images`.
     pub labels: Vec<usize>,
 }
 
@@ -38,10 +40,12 @@ impl EvalSet {
         Ok(EvalSet { images: imgs, labels })
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.images.len()
     }
 
+    /// Whether the set has no samples.
     pub fn is_empty(&self) -> bool {
         self.images.is_empty()
     }
@@ -50,7 +54,9 @@ impl EvalSet {
 /// Python-side SNN trace for one sample (cross-validation golden data).
 #[derive(Debug, Clone)]
 pub struct SnnTrace {
+    /// Python-side output logits.
     pub logits: Vec<f32>,
+    /// Python-side per-layer spike counts.
     pub counts: Vec<f64>,
     /// `maps[t][l]` = spike map of layer `l` (0 = input) at step `t`.
     pub maps: Vec<Vec<Tensor3>>,
@@ -59,11 +65,14 @@ pub struct SnnTrace {
 /// All traces in `{ds}_traces.bin`.
 #[derive(Debug, Clone)]
 pub struct TraceFile {
+    /// Algorithmic time steps T the traces were recorded at.
     pub t_steps: usize,
+    /// One trace per exported sample.
     pub traces: Vec<SnnTrace>,
 }
 
 impl TraceFile {
+    /// Load `{ds}_traces.bin` (meta tensors + per-sample spike maps).
     pub fn load(path: &Path) -> Result<TraceFile> {
         let tensors = read_tensors(path)?;
         let t_steps =

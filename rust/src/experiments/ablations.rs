@@ -258,6 +258,7 @@ pub fn registry() -> Vec<(&'static str, &'static str, fn(&mut Ctx, usize) -> Res
     ]
 }
 
+/// Look up and run one ablation by id.
 pub fn run(id: &str, ctx: &mut Ctx, n: usize) -> Result<String> {
     let reg = registry();
     let (_, _, f) = reg

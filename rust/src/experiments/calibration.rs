@@ -13,14 +13,21 @@ use crate::fpga::resources::ResourceUsage;
 
 /// One anchor: published resources + published vector-less total power.
 pub struct Anchor {
+    /// Design name as published.
     pub name: &'static str,
+    /// Board the row was synthesized for.
     pub device: &'static Device,
+    /// Coefficient family (SNN or CNN).
     pub family: DesignFamily,
+    /// Published LUT count.
     pub luts: u32,
+    /// Published register count.
     pub regs: u32,
+    /// Published BRAM count (36Kb units, halves allowed).
     pub brams: f64,
     /// CNN pipeline duty at the anchor (1.0 for SNN rows).
     pub duty: f64,
+    /// Published vector-less total power (W).
     pub total_w: f64,
 }
 

@@ -16,7 +16,9 @@ use crate::snn::config::{self, SnnDesign};
 
 /// Lazily-loaded experiment state.
 pub struct Ctx {
+    /// Artifacts directory the context was loaded from.
     pub root: PathBuf,
+    /// Parsed `manifest.json`.
     pub manifest: Manifest,
     nets_snn: BTreeMap<String, Network>,
     nets_cnn: BTreeMap<String, Network>,
@@ -39,10 +41,12 @@ impl Ctx {
         })
     }
 
+    /// Manifest entry for one dataset.
     pub fn info(&self, ds: &str) -> Result<&DatasetInfo> {
         self.manifest.dataset(ds)
     }
 
+    /// SNN-converted network for `ds` (loaded once, then cached).
     pub fn snn_net(&mut self, ds: &str) -> Result<&Network> {
         if !self.nets_snn.contains_key(ds) {
             let net = load_network(&self.manifest, ds, WeightKind::Snn)?;
@@ -51,6 +55,7 @@ impl Ctx {
         Ok(&self.nets_snn[ds])
     }
 
+    /// Quantized CNN network for `ds` (loaded once, then cached).
     pub fn cnn_net(&mut self, ds: &str) -> Result<&Network> {
         if !self.nets_cnn.contains_key(ds) {
             let net = load_network(&self.manifest, ds, WeightKind::Cnn)?;
@@ -59,6 +64,7 @@ impl Ctx {
         Ok(&self.nets_cnn[ds])
     }
 
+    /// Evaluation set for `ds` (loaded once, then cached).
     pub fn eval(&mut self, ds: &str) -> Result<&EvalSet> {
         if !self.evals.contains_key(ds) {
             let set = EvalSet::load(&self.manifest.file(ds, "eval")?)?;

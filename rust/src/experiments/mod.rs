@@ -18,8 +18,11 @@ use ctx::Ctx;
 
 /// A named experiment: regenerates one paper table/figure as text.
 pub struct Experiment {
+    /// Stable identifier (`table2`, `fig7`, ...).
     pub id: &'static str,
+    /// Human-readable description.
     pub title: &'static str,
+    /// Regenerator: (context, sample count) -> rendered text.
     pub run: fn(&mut Ctx, usize) -> Result<String>,
 }
 

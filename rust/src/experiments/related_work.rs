@@ -7,10 +7,15 @@
 /// One related-work row: per-dataset (accuracy %, FPS/W) where published.
 #[derive(Debug, Clone, Copy)]
 pub struct RelatedWork {
+    /// Citation label as printed in Table 10.
     pub name: &'static str,
+    /// Hardware platform of the cited work.
     pub platform: &'static str,
+    /// MNIST (accuracy %, FPS/W), where published.
     pub mnist: Option<(f64, f64)>,
+    /// SVHN (accuracy %, FPS/W), where published.
     pub svhn: Option<(f64, f64)>,
+    /// CIFAR-10 (accuracy %, FPS/W), where published.
     pub cifar: Option<(f64, f64)>,
 }
 

@@ -19,7 +19,9 @@ use super::resources::ResourceUsage;
 /// Which memory primitive the test design instantiates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MemKind {
+    /// 36Kb block-RAM primitives.
     Bram,
+    /// Distributed RAM in SLICEM LUTs.
     Lutram,
 }
 
@@ -32,6 +34,7 @@ pub struct BramTestDesign {
     pub depth: u32,
     /// Word width in bits.
     pub width: u32,
+    /// Memory primitive the array is synthesized from.
     pub kind: MemKind,
 }
 
@@ -70,8 +73,11 @@ impl BramTestDesign {
 /// One row of the Fig. 11 sweep.
 #[derive(Debug, Clone, Copy)]
 pub struct SweepPoint {
+    /// Word width of the sweep point (bits).
     pub width: u32,
+    /// Total power with BRAM memories (W).
     pub bram_w: f64,
+    /// Total power with LUTRAM memories (W).
     pub lutram_w: f64,
 }
 

@@ -48,15 +48,21 @@ pub struct PowerCoeffs {
 /// A target FPGA device.
 #[derive(Debug, Clone, Copy)]
 pub struct Device {
+    /// Board name as used in the paper's tables.
     pub name: &'static str,
+    /// Xilinx part number.
     pub part: &'static str,
+    /// Product family (selects the coefficient generation).
     pub family: Family,
     /// Default clock for the paper's experiments on this board (MHz).
     pub freq_mhz: f64,
+    /// Available LUTs.
     pub luts: u32,
+    /// Available registers (FFs).
     pub regs: u32,
     /// 36Kb BRAM count.
     pub brams: u32,
+    /// Available DSP slices.
     pub dsps: u32,
     /// LUTs usable as distributed RAM (SLICEM).
     pub lutram_luts: u32,
@@ -126,6 +132,7 @@ pub const ZCU102: Device = Device {
 };
 
 impl Device {
+    /// Case-insensitive lookup by board or part name.
     pub fn by_name(name: &str) -> Option<Device> {
         match name.to_ascii_lowercase().as_str() {
             "pynq" | "pynq-z1" | "xc7z020" => Some(PYNQ_Z1),

@@ -19,7 +19,9 @@ use super::resources::ResourceUsage;
 /// Which accelerator family a design belongs to (selects coefficients).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DesignFamily {
+    /// Sparse event-queue SNN accelerator (always-busy datapath).
     Snn,
+    /// FINN streaming-dataflow CNN pipeline (duty-modulated).
     Cnn,
 }
 
@@ -51,17 +53,23 @@ impl Activity {
 /// Dynamic power split by category (Watts).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PowerBreakdown {
+    /// Net-switching power downstream of LUT outputs (W).
     pub signals: f64,
+    /// Block-RAM read/write power (W).
     pub bram: f64,
+    /// LUT-internal logic power (W).
     pub logic: f64,
+    /// Clock-tree power (activity-independent) (W).
     pub clocks: f64,
 }
 
 impl PowerBreakdown {
+    /// Sum of the four categories (the tables' Total column).
     pub fn total(&self) -> f64 {
         self.signals + self.bram + self.logic + self.clocks
     }
 
+    /// Scale every category by `k`.
     pub fn scale(&self, k: f64) -> PowerBreakdown {
         PowerBreakdown {
             signals: self.signals * k,
@@ -75,11 +83,14 @@ impl PowerBreakdown {
 /// The estimator: device + family selects a coefficient set.
 #[derive(Debug, Clone, Copy)]
 pub struct PowerEstimator {
+    /// Target device (frequency + coefficient sets).
     pub device: Device,
+    /// Which coefficient family to apply.
     pub family: DesignFamily,
 }
 
 impl PowerEstimator {
+    /// Estimator for `family` designs on `device`.
     pub fn new(device: Device, family: DesignFamily) -> Self {
         PowerEstimator { device, family }
     }

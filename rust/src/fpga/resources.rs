@@ -16,13 +16,18 @@ use anyhow::{bail, Result};
 /// (half-BRAM granularity, Eq. 4).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ResourceUsage {
+    /// LUTs used.
     pub luts: u32,
+    /// Registers (FFs) used.
     pub regs: u32,
+    /// 36Kb BRAMs used (halves allowed, Eq. 4).
     pub brams: f64,
+    /// DSP slices used.
     pub dsps: u32,
 }
 
 impl ResourceUsage {
+    /// Component-wise sum.
     pub fn add(&self, other: &ResourceUsage) -> ResourceUsage {
         ResourceUsage {
             luts: self.luts + other.luts,
@@ -79,8 +84,11 @@ pub enum MemoryVariant {
 ///                                                     P=8: 9,670 vs 9,649)
 ///   Regs ≈ SNN_REG_BASE + SNN_REG_PER_CORE · P      (P=4: 5,020 vs 5,019)
 pub const SNN_LUT_BASE: u32 = 550;
+/// Incremental LUTs per SNN core (fit on Table 3).
 pub const SNN_LUT_PER_CORE: u32 = 1_140;
+/// Fixed register overhead of the SNN control path.
 pub const SNN_REG_BASE: u32 = 580;
+/// Incremental registers per SNN core (fit on Table 3).
 pub const SNN_REG_PER_CORE: u32 = 1_110;
 /// 16-bit datapath multiplier (Table 3: SNN4 w16 7,319 LUTs vs w8 4,967).
 pub const SNN_W16_FACTOR: f64 = 1.47;
@@ -101,6 +109,7 @@ pub struct SnnDesignParams {
     pub kernel: u32,
     /// Membrane memory depth per interlaced bank.
     pub d_mem: u32,
+    /// Memory organization (BRAM / LUTRAM / compressed).
     pub variant: MemoryVariant,
 }
 

@@ -25,6 +25,15 @@
 //!
 //! Python/JAX only ever runs at build time (`make artifacts`); the binary
 //! produced from this crate is self-contained.
+//!
+//! ## Build modes
+//!
+//! The default build has **zero native dependencies**: [`runtime`] is a
+//! stub whose `Runtime::cpu()` errors, and every caller falls back to the
+//! pure-Rust golden model. Enabling the `pjrt` cargo feature compiles the
+//! real PJRT runtime path (and the `xla` dependency it needs).
+
+#![warn(missing_docs)]
 
 pub mod cnn_accel;
 pub mod coordinator;

@@ -12,7 +12,7 @@
 
 use anyhow::{anyhow, Result};
 
-use spikebench::coordinator::serve::{Backend, NetworkBackend, PjrtBackend, ServeConfig, Server};
+use spikebench::coordinator::serve::{select_backend, Backend, ServeConfig, Server};
 use spikebench::experiments::{ctx::Ctx, registry, run_by_id};
 use spikebench::fpga::device::PYNQ_Z1;
 use spikebench::nn::loader::{load_network, WeightKind};
@@ -94,7 +94,8 @@ fn run() -> Result<()> {
     }
 }
 
-/// Serving demo: PJRT on the request path, hardware costs attached.
+/// Serving demo: batched requests through the best available backend
+/// (PJRT when the feature + artifact allow it), hardware costs attached.
 fn serve_demo(args: &Args) -> Result<()> {
     let ds = args.get_or("dataset", "mnist").to_string();
     let n_req = args.get_usize("requests", 64);
@@ -119,19 +120,12 @@ fn serve_demo(args: &Args) -> Result<()> {
         device: PYNQ_Z1,
     };
 
-    // PJRT backend if the HLO artifact loads; Rust-nn fallback otherwise.
-    let backend: Box<dyn spikebench::coordinator::serve::InferenceBackend> =
-        match spikebench::runtime::Runtime::cpu() {
-            Ok(rt) => {
-                let hlo = ctx.manifest.file(&ds, "cnn_hlo")?;
-                println!("backend: PJRT ({})", hlo.display());
-                Box::new(PjrtBackend { runtime: rt, hlo })
-            }
-            Err(e) => {
-                println!("backend: rust-nn fallback (PJRT unavailable: {e})");
-                Box::new(NetworkBackend { net: load_network(&ctx.manifest, &ds, WeightKind::Cnn)? })
-            }
-        };
+    // PJRT backend if the feature is on and the HLO artifact loads;
+    // pure-Rust fallback otherwise (see serve::select_backend).
+    let hlo = ctx.manifest.file(&ds, "cnn_hlo").ok();
+    let fallback = load_network(&ctx.manifest, &ds, WeightKind::Cnn)?;
+    let (backend, label) = select_backend(hlo, fallback);
+    println!("backend: {label}");
 
     let server = Server::start(backend, cfg);
     let t0 = std::time::Instant::now();
@@ -161,46 +155,74 @@ fn serve_demo(args: &Args) -> Result<()> {
         batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len().max(1) as f64,
         accel_energy * 1e3,
     );
-    println!("executor: {} batches, max batch {}", stats.batches, stats.max_batch_seen);
+    println!(
+        "executor: {} batches, max batch {}, {} backend calls, {} cost estimates",
+        stats.batches, stats.max_batch_seen, stats.backend_calls, stats.cost_estimates
+    );
     Ok(())
 }
 
 /// Quick artifact validation (a CLI-reachable subset of tests/golden.rs).
+///
+/// With the `pjrt` feature and a working client this cross-checks the
+/// compiled artifacts against the Rust golden model; otherwise it still
+/// validates the Rust functional models against the manifest accuracies.
 fn validate(args: &Args) -> Result<()> {
     let n = args.get_usize("samples", 64);
     let mut ctx = Ctx::load()?;
-    let mut rt = spikebench::runtime::Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
+    let mut rt = match spikebench::runtime::Runtime::cpu() {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            Some(rt)
+        }
+        Err(e) => {
+            println!("PJRT unavailable ({e}); validating rust models only");
+            None
+        }
+    };
     for ds in ["mnist", "svhn", "cifar"] {
         let info = ctx.info(ds)?.clone();
         let net = load_network(&ctx.manifest, ds, WeightKind::Cnn)?;
         let snn_net = load_network(&ctx.manifest, ds, WeightKind::Snn)?;
         let eval = ctx.eval(ds)?.clone();
-        let hlo = ctx.manifest.file(ds, "cnn_hlo")?;
-        rt.load(&hlo)?;
-        let mut agree = 0;
-        let mut correct_cnn = 0;
-        let mut correct_snn = 0;
         let n = n.min(eval.len());
-        for i in 0..n {
-            let x = &eval.images[i];
-            let pjrt = rt.run_cnn(&hlo, x)?;
-            let rust = net.forward(x);
-            if spikebench::nn::network::argmax(&pjrt) == spikebench::nn::network::argmax(&rust) {
-                agree += 1;
-            }
-            if spikebench::nn::network::argmax(&pjrt) == eval.labels[i] {
-                correct_cnn += 1;
-            }
-            let snn =
-                spikebench::nn::snn::snn_infer(&snn_net, x, info.t_steps, info.v_th);
-            if snn.classify() == eval.labels[i] {
-                correct_snn += 1;
+
+        // Pure-Rust passes run on the worker pool (the PJRT client is not
+        // Sync, so the agreement check below stays on this thread).
+        let workers = spikebench::coordinator::pool::default_workers();
+        let rust_preds: Vec<(usize, usize)> =
+            spikebench::coordinator::pool::parallel_map(n, workers, |i| {
+                let x = &eval.images[i];
+                let cnn = spikebench::nn::network::argmax(&net.forward(x));
+                let snn = spikebench::nn::snn::snn_infer(&snn_net, x, info.t_steps, info.v_th)
+                    .classify();
+                (cnn, snn)
+            });
+        let correct_cnn =
+            rust_preds.iter().zip(&eval.labels).filter(|((c, _), &l)| *c == l).count();
+        let correct_snn =
+            rust_preds.iter().zip(&eval.labels).filter(|((_, s), &l)| *s == l).count();
+
+        let mut agreement = String::from("pjrt skipped");
+        if let Some(rt) = rt.as_mut() {
+            // A dataset with a missing/broken artifact must not abort the
+            // rust-only validation of the remaining datasets.
+            match ctx.manifest.file(ds, "cnn_hlo").and_then(|hlo| rt.load(&hlo).map(|()| hlo)) {
+                Ok(hlo) => {
+                    let mut agree = 0;
+                    for (i, (cnn_pred, _)) in rust_preds.iter().enumerate() {
+                        let pjrt = rt.run_cnn(&hlo, &eval.images[i])?;
+                        if spikebench::nn::network::argmax(&pjrt) == *cnn_pred {
+                            agree += 1;
+                        }
+                    }
+                    agreement = format!("pjrt/rust agreement {agree}/{n}");
+                }
+                Err(e) => agreement = format!("pjrt skipped ({e})"),
             }
         }
         println!(
-            "{ds}: pjrt/rust agreement {agree}/{n} | cnn acc {:.1}% | snn acc {:.1}% \
-             (manifest: {:.1}% / {:.1}%)",
+            "{ds}: {agreement} | cnn acc {:.1}% | snn acc {:.1}% (manifest: {:.1}% / {:.1}%)",
             100.0 * correct_cnn as f64 / n as f64,
             100.0 * correct_snn as f64 / n as f64,
             info.accuracy_cnn * 100.0,

@@ -20,7 +20,9 @@ pub enum LayerSpec {
 
 /// The three Table 6 architecture strings.
 pub const ARCH_MNIST: &str = "32C3-32C3-P3-10C3-10";
+/// Table 6 architecture for SVHN.
 pub const ARCH_SVHN: &str = "1C3-32C3-32C3-P3-64C3-64C3-P3-128C3-128C3-10";
+/// Table 6 architecture for CIFAR-10.
 pub const ARCH_CIFAR: &str = "32C3-32C3-P3-64C3-64C3-P3-128C3-128C3-128C3-10";
 
 /// Parse an architecture string into layer specs.

@@ -9,14 +9,20 @@ use super::tensor::Tensor3;
 /// Convolution weights: (C_out, C_in, K, K) in C order + bias (C_out).
 #[derive(Debug, Clone)]
 pub struct ConvWeights {
+    /// Output channels.
     pub c_out: usize,
+    /// Input channels.
     pub c_in: usize,
+    /// Kernel size K (square kernels).
     pub k: usize,
+    /// Weights, (C_out, C_in, K, K) in C order.
     pub w: Vec<f32>,
+    /// Per-output-channel bias.
     pub b: Vec<f32>,
 }
 
 impl ConvWeights {
+    /// Build weights, validating the buffer shapes.
     pub fn new(c_out: usize, c_in: usize, k: usize, w: Vec<f32>, b: Vec<f32>) -> Self {
         assert_eq!(w.len(), c_out * c_in * k * k);
         assert_eq!(b.len(), c_out);
@@ -24,6 +30,7 @@ impl ConvWeights {
     }
 
     #[inline(always)]
+    /// Weight at (co, ci, ky, kx).
     pub fn at(&self, co: usize, ci: usize, ky: usize, kx: usize) -> f32 {
         self.w[((co * self.c_in + ci) * self.k + ky) * self.k + kx]
     }

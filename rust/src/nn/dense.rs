@@ -3,13 +3,18 @@
 /// Dense weights (row-major (out, in)) + bias.
 #[derive(Debug, Clone)]
 pub struct DenseWeights {
+    /// Output units.
     pub n_out: usize,
+    /// Input size.
     pub n_in: usize,
+    /// Weights, row-major (out, in).
     pub w: Vec<f32>,
+    /// Per-unit bias.
     pub b: Vec<f32>,
 }
 
 impl DenseWeights {
+    /// Build weights, validating the buffer shapes.
     pub fn new(n_out: usize, n_in: usize, w: Vec<f32>, b: Vec<f32>) -> Self {
         assert_eq!(w.len(), n_out * n_in);
         assert_eq!(b.len(), n_out);

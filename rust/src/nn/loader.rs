@@ -15,27 +15,44 @@ use crate::util::tensorfile::{read_tensors, Tensor};
 /// Parsed manifest entry for one dataset.
 #[derive(Debug, Clone)]
 pub struct DatasetInfo {
+    /// Dataset name (manifest key).
     pub name: String,
+    /// Table 6 architecture string.
     pub arch: String,
+    /// Input (C, H, W).
     pub input_shape: (usize, usize, usize),
+    /// Algorithmic SNN time steps T.
     pub t_steps: usize,
+    /// Firing threshold of the converted SNN.
     pub v_th: f32,
+    /// CNN weight quantization bit width.
     pub cnn_bits: u32,
+    /// SNN weight quantization bit width.
     pub snn_bits: u32,
+    /// Total trainable parameters (Table 6).
     pub param_count: usize,
+    /// Python-measured quantized CNN accuracy.
     pub accuracy_cnn: f64,
+    /// Python-measured converted SNN accuracy.
     pub accuracy_snn: f64,
+    /// Mean spikes per inference over the eval set.
     pub spikes_mean: f64,
+    /// Minimum spikes per inference.
     pub spikes_min: f64,
+    /// Maximum spikes per inference.
     pub spikes_max: f64,
+    /// Mean spikes per inference per class (Fig. 8).
     pub spikes_per_class: Vec<f64>,
+    /// Artifact kind -> relative file path.
     pub files: BTreeMap<String, String>,
 }
 
 /// The whole artifacts manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory `manifest.json` was loaded from.
     pub root: PathBuf,
+    /// Per-dataset entries.
     pub datasets: BTreeMap<String, DatasetInfo>,
 }
 
@@ -108,12 +125,14 @@ impl Manifest {
         Ok(Manifest { root: root.to_path_buf(), datasets })
     }
 
+    /// Entry for one dataset, with a listing error when missing.
     pub fn dataset(&self, name: &str) -> Result<&DatasetInfo> {
         self.datasets
             .get(name)
             .ok_or_else(|| anyhow!("dataset {name} not in manifest (have: {:?})", self.datasets.keys()))
     }
 
+    /// Absolute path of an artifact file of `kind` for dataset `ds`.
     pub fn file(&self, ds: &str, kind: &str) -> Result<PathBuf> {
         let info = self.dataset(ds)?;
         let f = info

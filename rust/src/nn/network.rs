@@ -12,16 +12,22 @@ use super::tensor::Tensor3;
 /// Weights for one layer (pool layers carry only their window).
 #[derive(Debug, Clone)]
 pub enum LayerWeights {
+    /// Convolution weights + bias.
     Conv(ConvWeights),
+    /// Max-pool window size (no parameters).
     Pool(usize),
+    /// Dense weights + bias.
     Dense(DenseWeights),
 }
 
 /// A loaded network: architecture + weights + input shape.
 #[derive(Debug, Clone)]
 pub struct Network {
+    /// Parsed architecture specs, aligned with `layers`.
     pub arch: Vec<LayerSpec>,
+    /// Per-layer weights.
     pub layers: Vec<LayerWeights>,
+    /// Input (C, H, W).
     pub input_shape: (usize, usize, usize),
 }
 

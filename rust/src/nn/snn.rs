@@ -27,8 +27,11 @@ use super::tensor::Tensor3;
 /// One spike event: position in the (C, H, W) feature map of its layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SpikeEvent {
+    /// Channel of the spiking neuron.
     pub c: u16,
+    /// Row of the spiking neuron.
     pub y: u16,
+    /// Column of the spiking neuron.
     pub x: u16,
 }
 
@@ -46,10 +49,12 @@ pub struct SnnResult {
 }
 
 impl SnnResult {
+    /// Total spikes across all layers and steps.
     pub fn total_spikes(&self) -> u64 {
         self.spike_counts.iter().sum()
     }
 
+    /// argmax of the output-accumulator logits.
     pub fn classify(&self) -> usize {
         argmax(&self.logits)
     }

@@ -6,42 +6,53 @@
 /// A (C, H, W) float tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor3 {
+    /// Channels.
     pub c: usize,
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
+    /// Row-major storage, `c * h * w` long.
     pub data: Vec<f32>,
 }
 
 impl Tensor3 {
+    /// All-zero tensor of the given shape.
     pub fn zeros(c: usize, h: usize, w: usize) -> Self {
         Tensor3 { c, h, w, data: vec![0.0; c * h * w] }
     }
 
+    /// Wrap an existing buffer (length-checked).
     pub fn from_vec(c: usize, h: usize, w: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), c * h * w, "tensor size mismatch");
         Tensor3 { c, h, w, data }
     }
 
     #[inline(always)]
+    /// Flat index of (c, y, x).
     pub fn idx(&self, c: usize, y: usize, x: usize) -> usize {
         (c * self.h + y) * self.w + x
     }
 
     #[inline(always)]
+    /// Value at (c, y, x).
     pub fn get(&self, c: usize, y: usize, x: usize) -> f32 {
         self.data[self.idx(c, y, x)]
     }
 
     #[inline(always)]
+    /// Store `v` at (c, y, x).
     pub fn set(&mut self, c: usize, y: usize, x: usize, v: f32) {
         let i = self.idx(c, y, x);
         self.data[i] = v;
     }
 
+    /// Total number of elements.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -56,6 +67,7 @@ impl Tensor3 {
         &self.data
     }
 
+    /// Set every element to `v`.
     pub fn fill(&mut self, v: f32) {
         self.data.iter_mut().for_each(|x| *x = v);
     }

@@ -1,37 +1,54 @@
-//! PJRT runtime: load + execute the AOT-compiled JAX/Pallas artifacts.
+//! Execution runtime for the AOT-compiled JAX/Pallas artifacts — built in
+//! one of two modes selected by the `pjrt` cargo feature:
 //!
-//! This is the only place Python's output crosses into the Rust process:
-//! `artifacts/*.hlo.txt` (HLO **text** — the format xla_extension 0.5.1
-//! parses reliably; serialized protos from jax ≥ 0.5 carry 64-bit ids it
-//! rejects) is parsed, compiled once on the PJRT CPU client, and cached as
-//! a loaded executable keyed by file path.
+//! * **`--features pjrt`** — the real path: `artifacts/*.hlo.txt` (HLO
+//!   **text** — the format xla_extension 0.5.1 parses reliably; serialized
+//!   protos from jax ≥ 0.5 carry 64-bit ids it rejects) is parsed,
+//!   compiled once on the PJRT CPU client, and cached as a loaded
+//!   executable keyed by file path. This is the only place Python's
+//!   output crosses into the Rust process.
+//! * **default (no `pjrt`)** — a dependency-free build: [`Runtime`] keeps
+//!   the same API but [`Runtime::cpu`] returns an error. Every caller
+//!   (the `repro` binary, the serving layer, benches, tests) already
+//!   treats that error as "PJRT unavailable" and falls back to the
+//!   pure-Rust `nn` forward pass, so the default build runs end-to-end
+//!   with the golden-model backend instead of the compiled artifacts.
 //!
 //! The serving path (`coordinator::serve`) keeps a [`Runtime`] per worker:
 //! classification requests execute the compiled model (never Python),
 //! while the accelerator simulators consume the same request's spike
-//! events for the latency/energy estimate.
+//! events for the latency/energy estimate. See
+//! `coordinator::serve::select_backend` for the fallback logic.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
 
 use crate::nn::tensor::Tensor3;
-
-/// A PJRT CPU client + executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
-}
 
 /// Result of one SNN artifact execution.
 #[derive(Debug, Clone)]
 pub struct SnnExecOutput {
+    /// Output-layer logits.
     pub logits: Vec<f32>,
     /// Per-layer total spike counts (index 0 = input encoding layer).
     pub spike_counts: Vec<f64>,
 }
 
+/// A PJRT CPU client + executable cache (`pjrt` feature enabled).
+#[cfg(feature = "pjrt")]
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {
@@ -39,6 +56,7 @@ impl Runtime {
         Ok(Runtime { client, cache: HashMap::new() })
     }
 
+    /// Name of the PJRT platform backing this client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -116,9 +134,68 @@ impl Runtime {
 }
 
 /// Convert a (C, H, W) tensor into an XLA literal of that shape.
+#[cfg(feature = "pjrt")]
 fn tensor3_to_literal(x: &Tensor3) -> Result<xla::Literal> {
     xla::Literal::vec1(&x.data)
         .reshape(&[x.c as i64, x.h as i64, x.w as i64])
         .map_err(|e| anyhow!("reshape literal: {e:?}"))
         .context("building input literal")
+}
+
+/// Stub runtime for the default (no-`pjrt`) build: same API, but
+/// [`Runtime::cpu`] always fails so callers take their documented
+/// pure-Rust fallback path. No instance can ever be constructed, which is
+/// why the other methods are unreachable in practice.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    fn disabled_err<T>() -> Result<T> {
+        Err(anyhow::anyhow!(
+            "spikebench was built without the `pjrt` feature; the PJRT runtime is \
+             unavailable (rebuild with `cargo build --features pjrt`)"
+        ))
+    }
+
+    /// Create a CPU PJRT client — always fails in the default build.
+    pub fn cpu() -> Result<Runtime> {
+        Self::disabled_err()
+    }
+
+    /// Name of the PJRT platform backing this client.
+    pub fn platform(&self) -> String {
+        "unavailable (built without pjrt)".to_string()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&mut self, _path: &Path) -> Result<()> {
+        Self::disabled_err()
+    }
+
+    /// Execute a CNN artifact; unavailable in the default build.
+    pub fn run_cnn(&self, _path: &Path, _x: &Tensor3) -> Result<Vec<f32>> {
+        Self::disabled_err()
+    }
+
+    /// Execute an SNN artifact; unavailable in the default build.
+    pub fn run_snn(&self, _path: &Path, _x: &Tensor3) -> Result<SnnExecOutput> {
+        Self::disabled_err()
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    /// In the default build `cpu()` must fail with an actionable message;
+    /// with `pjrt` it may succeed or fail depending on the linked stub.
+    #[test]
+    fn default_build_reports_missing_feature() {
+        let err = Runtime::cpu().err().expect("stub runtime must fail");
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt"), "unhelpful error: {msg}");
+    }
 }

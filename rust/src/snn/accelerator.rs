@@ -47,6 +47,7 @@ pub const NOMINAL_TOGGLE: f64 = 0.80;
 pub struct SnnRunResult {
     /// Functional result (logits of the output accumulator).
     pub logits: Vec<f32>,
+    /// argmax of the logits.
     pub predicted: usize,
     /// Total latency in clock cycles.
     pub cycles: u64,
@@ -63,14 +64,17 @@ pub struct SnnRunResult {
     /// Events that exceeded the configured AEQ depth D (0 for correctly
     /// sized designs; > 0 means the design would stall on this input).
     pub aeq_overflows: u64,
+    /// Cycle/memory-access accounting behind the power estimate.
     pub trace: ActivityTrace,
 }
 
 impl SnnRunResult {
+    /// Classifications per second at this latency.
     pub fn fps(&self) -> f64 {
         1.0 / self.latency_s
     }
 
+    /// Throughput efficiency (the paper's FPS/W).
     pub fn fps_per_watt(&self) -> f64 {
         self.fps() / self.power.total()
     }
@@ -78,14 +82,20 @@ impl SnnRunResult {
 
 /// The simulator: a design point + the SNN-converted network it runs.
 pub struct SnnAccelerator<'a> {
+    /// Design point being simulated.
     pub design: &'a SnnDesign,
+    /// SNN-converted network the design runs.
     pub net: &'a Network,
+    /// Algorithmic time steps T.
     pub t_steps: usize,
+    /// Firing threshold.
     pub v_th: f32,
+    /// Pipeline cost parameters of the cores.
     pub costs: CoreCosts,
 }
 
 impl<'a> SnnAccelerator<'a> {
+    /// Simulator for `design` running `net` (default core costs).
     pub fn new(design: &'a SnnDesign, net: &'a Network, t_steps: usize, v_th: f32) -> Self {
         SnnAccelerator { design, net, t_steps, v_th, costs: CoreCosts::default() }
     }

@@ -12,7 +12,9 @@ use super::interlace::Interlacing;
 /// Statistics of one AEQ over a run.
 #[derive(Debug, Clone, Default)]
 pub struct AeqStats {
+    /// Events accepted into the queue.
     pub pushes: u64,
+    /// Events consumed from the queue.
     pub pops: u64,
     /// Maximum simultaneous occupancy of any single bank.
     pub high_water: u32,
@@ -23,7 +25,9 @@ pub struct AeqStats {
 /// A K²-banked address-event queue of per-bank capacity D.
 #[derive(Debug, Clone)]
 pub struct Aeq {
+    /// Bank-selection geometry (Fig. 4).
     pub interlacing: Interlacing,
+    /// Word encoding of stored events.
     pub encoder: Encoder,
     /// Per-bank capacity (the design parameter D).
     pub depth: u32,
@@ -32,6 +36,7 @@ pub struct Aeq {
 }
 
 impl Aeq {
+    /// Empty queue with K^2 banks of capacity `depth`.
     pub fn new(interlacing: Interlacing, encoder: Encoder, depth: u32) -> Aeq {
         let n = interlacing.banks() as usize;
         Aeq {
@@ -83,14 +88,17 @@ impl Aeq {
         None
     }
 
+    /// Total events currently queued across banks.
     pub fn len(&self) -> usize {
         self.banks.iter().map(|b| b.len()).sum()
     }
 
+    /// Whether every bank is empty.
     pub fn is_empty(&self) -> bool {
         self.banks.iter().all(|b| b.is_empty())
     }
 
+    /// Push/pop/occupancy statistics of the run so far.
     pub fn stats(&self) -> &AeqStats {
         &self.stats
     }

@@ -11,9 +11,11 @@ use crate::fpga::resources::{MemoryVariant, ResourceUsage, SnnDesignParams};
 /// A named SNN accelerator configuration.
 #[derive(Debug, Clone)]
 pub struct SnnDesign {
+    /// Design name as used in the paper's tables.
     pub name: &'static str,
     /// Dataset whose network this design is sized for.
     pub dataset: &'static str,
+    /// Structural parameters (P, D, widths, memory variant).
     pub params: SnnDesignParams,
     /// Synthesized resources from the paper, if published (LUTs, Regs,
     /// BRAMs); `None` -> analytic estimate.  PYNQ-Z1 values.
@@ -25,6 +27,7 @@ pub struct SnnDesign {
 }
 
 impl SnnDesign {
+    /// Published resources when available, analytic estimate otherwise.
     pub fn resources(&self) -> ResourceUsage {
         self.published.unwrap_or_else(|| self.params.resources())
     }
@@ -39,10 +42,12 @@ impl SnnDesign {
         self.resources()
     }
 
+    /// Parallelization factor P.
     pub fn p(&self) -> u32 {
         self.params.p
     }
 
+    /// Memory organization of this design.
     pub fn variant(&self) -> MemoryVariant {
         self.params.variant
     }
@@ -218,6 +223,7 @@ pub fn all_designs() -> Vec<SnnDesign> {
     v
 }
 
+/// Case-insensitive lookup of an SNN design.
 pub fn by_name(name: &str) -> Option<SnnDesign> {
     all_designs().into_iter().find(|d| d.name.eq_ignore_ascii_case(name))
 }

@@ -26,6 +26,7 @@ pub struct ActivityTrace {
 }
 
 impl ActivityTrace {
+    /// Accumulate another trace into this one.
     pub fn add(&mut self, other: &ActivityTrace) {
         self.cycles += other.cycles;
         self.busy_cycles += other.busy_cycles;

@@ -25,16 +25,22 @@ pub fn ceil_log2(n: u32) -> u32 {
 /// A decoded address event: window coordinates + status.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AddressEvent {
+    /// Window column.
     pub wx: u16,
+    /// Window row.
     pub wy: u16,
     /// Segment status: marks time-step / channel boundaries in the queue.
     pub status: Status,
 }
 
+/// Queue-segment status carried by an address event.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Status {
+    /// An ordinary spike event.
     Data,
+    /// Marks the end of one channel's segment.
     EndOfChannel,
+    /// Marks the end of one algorithmic time step.
     EndOfStep,
 }
 
@@ -50,6 +56,7 @@ pub enum Encoding {
 /// Per-feature-map encoder parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct Encoder {
+    /// Requested encoding (before the Eq. 7 fallback).
     pub encoding: Encoding,
     /// Feature-map width (assumed square, the paper's W).
     pub map_w: u32,
@@ -58,6 +65,7 @@ pub struct Encoder {
 }
 
 impl Encoder {
+    /// Encoder for a W-wide map processed with a KxK kernel.
     pub fn new(encoding: Encoding, map_w: u32, k: u32) -> Encoder {
         Encoder { encoding, map_w, k }
     }

@@ -18,10 +18,12 @@ pub struct Interlacing {
     pub k: u32,
     /// Feature-map width/height (square maps; rectangular maps use `map_h`).
     pub map_w: u32,
+    /// Feature-map height.
     pub map_h: u32,
 }
 
 impl Interlacing {
+    /// Geometry for an H x W map with a KxK kernel.
     pub fn new(k: u32, map_h: u32, map_w: u32) -> Self {
         Interlacing { k, map_w, map_h }
     }

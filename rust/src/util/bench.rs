@@ -18,15 +18,18 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Group with default warmup (3) and sample (10) counts.
     pub fn new(name: &str) -> Self {
         Bench { name: name.to_string(), warmup: 3, samples: 10 }
     }
 
+    /// Set the number of untimed warmup iterations.
     pub fn warmup(mut self, n: usize) -> Self {
         self.warmup = n;
         self
     }
 
+    /// Set the number of timed samples.
     pub fn samples(mut self, n: usize) -> Self {
         self.samples = n;
         self

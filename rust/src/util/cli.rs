@@ -42,26 +42,32 @@ impl Args {
         Args::parse(std::env::args().skip(1 + skip))
     }
 
+    /// Whether a bare `--name` flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name value` / `--name=value`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Option value parsed as `usize`, with a default.
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Option value parsed as `f64`, with a default.
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Positional (non-option) arguments in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -11,13 +11,29 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 /// A parsed JSON value.
+///
+/// ```
+/// use spikebench::util::json::Json;
+///
+/// let v = Json::parse(r#"{"t_steps": 4, "files": ["a.bin", "b.bin"]}"#).unwrap();
+/// assert_eq!(v.get("t_steps").unwrap().as_usize(), Some(4));
+/// assert_eq!(v.get("files").unwrap().at(1).unwrap().as_str(), Some("b.bin"));
+/// // Serialization round-trips through the pretty printer.
+/// assert_eq!(Json::parse(&v.pretty()).unwrap(), v);
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object; keys are sorted (BTreeMap) for stable serialization.
     Obj(BTreeMap<String, Json>),
 }
 
@@ -50,6 +66,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -57,10 +74,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// String slice, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -68,6 +87,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -75,6 +95,7 @@ impl Json {
         }
     }
 
+    /// Element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -82,6 +103,7 @@ impl Json {
         }
     }
 
+    /// Key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -169,7 +191,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset.
 #[derive(Debug, Clone)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset of the failure in the input.
     pub offset: usize,
 }
 

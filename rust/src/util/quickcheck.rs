@@ -12,7 +12,9 @@ use crate::util::rng::Rng;
 /// Configuration for a property run.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Number of random cases to run.
     pub cases: usize,
+    /// Base seed; each case derives its own replayable seed.
     pub seed: u64,
 }
 

@@ -9,18 +9,25 @@
 /// Running summary of a sample set (no allocation per observation).
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
+    /// Number of observations.
     pub n: usize,
+    /// Sum of observations.
     pub sum: f64,
+    /// Sum of squared observations.
     pub sum_sq: f64,
+    /// Smallest observation.
     pub min: f64,
+    /// Largest observation.
     pub max: f64,
 }
 
 impl Summary {
+    /// Empty summary.
     pub fn new() -> Self {
         Summary { n: 0, sum: 0.0, sum_sq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Record one observation.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
@@ -29,6 +36,7 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Arithmetic mean (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -37,6 +45,7 @@ impl Summary {
         }
     }
 
+    /// Population standard deviation (0 for < 2 observations).
     pub fn std(&self) -> f64 {
         if self.n < 2 {
             return 0.0;
@@ -58,14 +67,19 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// Fixed-bin histogram over [lo, hi] with out-of-range clamping.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Lower bound of the binned range.
     pub lo: f64,
+    /// Upper bound of the binned range.
     pub hi: f64,
+    /// Per-bin observation counts.
     pub bins: Vec<usize>,
+    /// Running summary of every added value.
     pub summary: Summary,
     samples: Vec<f64>,
 }
 
 impl Histogram {
+    /// Empty histogram over [lo, hi] with `n_bins` bins.
     pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
         assert!(hi > lo && n_bins > 0);
         Histogram { lo, hi, bins: vec![0; n_bins], summary: Summary::new(), samples: Vec::new() }
@@ -83,6 +97,7 @@ impl Histogram {
         h
     }
 
+    /// Add an observation (out-of-range values clamp to edge bins).
     pub fn add(&mut self, x: f64) {
         self.summary.add(x);
         self.samples.push(x);
@@ -91,10 +106,12 @@ impl Histogram {
         self.bins[idx] += 1;
     }
 
+    /// Every added value, in insertion order.
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
 
+    /// Nearest-rank percentile of the added values.
     pub fn percentile(&self, p: f64) -> f64 {
         percentile(&self.samples, p)
     }

@@ -7,12 +7,16 @@
 /// A simple column-aligned table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Table caption (rendered as `== title ==`).
     pub title: String,
+    /// Column headers.
     pub header: Vec<String>,
+    /// Data rows (each as wide as `header`).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with the given caption and columns.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Table {
             title: title.to_string(),
@@ -21,6 +25,7 @@ impl Table {
         }
     }
 
+    /// Append one row (arity-checked).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells);

@@ -19,41 +19,53 @@ use anyhow::{bail, Context, Result};
 /// One tensor: shape + typed payload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimensions, outermost first.
     pub dims: Vec<usize>,
+    /// Typed payload in C order.
     pub data: TensorData,
 }
 
+/// Typed tensor payload (dtype codes 0/1/2 of the container format).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
+    /// 32-bit floats (dtype 0).
     F32(Vec<f32>),
+    /// 32-bit signed integers (dtype 1).
     I32(Vec<i32>),
+    /// Raw bytes (dtype 2).
     U8(Vec<u8>),
 }
 
 impl Tensor {
+    /// Build an f32 tensor (length-checked).
     pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len());
         Tensor { dims, data: TensorData::F32(data) }
     }
 
+    /// Build an i32 tensor (length-checked).
     pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len());
         Tensor { dims, data: TensorData::I32(data) }
     }
 
+    /// Build a u8 tensor (length-checked).
     pub fn u8(dims: Vec<usize>, data: Vec<u8>) -> Self {
         assert_eq!(dims.iter().product::<usize>(), data.len());
         Tensor { dims, data: TensorData::U8(data) }
     }
 
+    /// Total number of elements.
     pub fn len(&self) -> usize {
         self.dims.iter().product()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Payload as f32, or a dtype error.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
@@ -61,6 +73,7 @@ impl Tensor {
         }
     }
 
+    /// Payload as i32, or a dtype error.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             TensorData::I32(v) => Ok(v),
@@ -68,6 +81,7 @@ impl Tensor {
         }
     }
 
+    /// Payload as u8, or a dtype error.
     pub fn as_u8(&self) -> Result<&[u8]> {
         match &self.data {
             TensorData::U8(v) => Ok(v),
@@ -109,6 +123,7 @@ fn rd_u8(b: &[u8], i: &mut usize) -> Result<u8> {
     Ok(v)
 }
 
+/// Parse an in-memory `SBT1` blob.
 pub fn parse_tensors(raw: &[u8]) -> Result<BTreeMap<String, Tensor>> {
     if raw.len() < 8 || &raw[0..4] != b"SBT1" {
         bail!("bad magic (not an SBT1 file)");

@@ -33,11 +33,21 @@ fn artifacts() -> Option<PathBuf> {
     }
 }
 
+fn runtime() -> Option<Runtime> {
+    match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: PJRT unavailable ({e})");
+            None
+        }
+    }
+}
+
 #[test]
 fn rust_cnn_matches_pjrt_artifact() {
     let Some(dir) = artifacts() else { return };
     let manifest = Manifest::load(&dir).unwrap();
-    let mut rt = Runtime::cpu().unwrap();
+    let Some(mut rt) = runtime() else { return };
     for ds in ["mnist"] {
         let net = load_network(&manifest, ds, WeightKind::Cnn).unwrap();
         let eval = EvalSet::load(&manifest.file(ds, "eval").unwrap()).unwrap();
@@ -122,7 +132,7 @@ fn rust_snn_matches_python_traces() {
 fn rust_snn_counts_match_pjrt_artifact() {
     let Some(dir) = artifacts() else { return };
     let manifest = Manifest::load(&dir).unwrap();
-    let mut rt = Runtime::cpu().unwrap();
+    let Some(mut rt) = runtime() else { return };
     let ds = "mnist";
     let info = manifest.dataset(ds).unwrap();
     let net = load_network(&manifest, ds, WeightKind::Snn).unwrap();
