@@ -1,15 +1,18 @@
 //! `cargo bench --bench hotpath` — micro-benchmarks of the simulator's
 //! hot paths (the §Perf targets in EXPERIMENTS.md):
 //!
-//! * functional m-TTFS event engine (spike-events/s)
-//! * cycle-model replay (inferences/s)
+//! * functional m-TTFS event engine (spike-events/s), fresh-allocation
+//!   vs reusable-scratch variants
+//! * cycle-model event walk (`trace`) and per-device costing (`cost`)
+//! * the multi-device sweep pattern: D × `replay` (one event walk per
+//!   device) vs `trace` once + D × `cost` — the tentpole speedup
 //! * dense conv2d golden model
 //! * PJRT artifact execution (the serving path)
 
 use spikebench::experiments::ctx::Ctx;
-use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::fpga::device::{PYNQ_Z1, ZCU102};
 use spikebench::nn::loader::{load_network, WeightKind};
-use spikebench::nn::snn::snn_infer;
+use spikebench::nn::snn::{snn_infer, snn_infer_scratch, SimScratch, SnnMode};
 use spikebench::snn::accelerator::SnnAccelerator;
 use spikebench::snn::config::by_name;
 use spikebench::util::bench::Bench;
@@ -30,17 +33,39 @@ fn main() {
 
     let bench = Bench::new("hotpath").warmup(2).samples(8);
 
-    // 1. Functional event engine.
+    // 1. Functional event engine: fresh allocations per call vs a
+    //    reusable SimScratch (the serve/sweep hot path).
     let r = snn_infer(&net, &x, info.t_steps, info.v_th);
     let events = r.total_spikes();
     bench.run_throughput("snn_infer (events)", events, || {
         snn_infer(&net, &x, info.t_steps, info.v_th)
     });
+    let mut scratch = SimScratch::for_net(&net);
+    bench.run_throughput("snn_infer_scratch (events)", events, || {
+        snn_infer_scratch(&net, &x, info.t_steps, info.v_th, SnnMode::MTtfs, &mut scratch);
+    });
 
-    // 2. Cycle-model replay (shared functional pass).
+    // 2. Cycle model, two-stage: the device-independent event walk and
+    //    the per-device costing step.
     let design = by_name("SNN8_BRAM").unwrap();
     let acc = SnnAccelerator::new(&design, &net, info.t_steps, info.v_th);
     bench.run("replay(SNN8_BRAM)", || acc.replay(&r, &PYNQ_Z1));
+    bench.run("trace(SNN8_BRAM)", || acc.trace(&r));
+    let ct = acc.trace(&r);
+    bench.run("cost(SNN8_BRAM, 1 device)", || acc.cost(&ct, &PYNQ_Z1));
+
+    // 2b. The sweep pattern over D simulated devices: replay per device
+    //     walks the event stream D times; trace-once + cost-per-device
+    //     walks it once.  (Two physical devices cycled to D=8 points.)
+    const D: usize = 8;
+    let devices: Vec<_> = [&PYNQ_Z1, &ZCU102].iter().cycle().take(D).cloned().collect();
+    bench.run("sweep 8 devices, replay each", || {
+        devices.iter().map(|dev| acc.replay(&r, dev).cycles).sum::<u64>()
+    });
+    bench.run("sweep 8 devices, trace+cost", || {
+        let ct = acc.trace(&r);
+        devices.iter().map(|dev| acc.cost(&ct, dev).cycles).sum::<u64>()
+    });
 
     // 3. Dense CNN forward (golden model).
     bench.run("cnn_forward (rust nn)", || cnn_net.forward(&x));

@@ -4,9 +4,10 @@
 //! The paper's contribution is the hardware comparison, so the coordinator
 //! is the *experiment engine*: it shards the 1,000-image evaluation sets
 //! across a [`pool`] of std::thread workers (tokio is not in the offline
-//! vendor set), runs the functional SNN simulation once per image, and
-//! replays each design point's timing/energy model against the shared
-//! event streams ([`sweep`]).  [`serve`] is the deployment-shaped
+//! vendor set), runs the functional SNN simulation once per image (into
+//! per-worker reusable scratch buffers), walks each design point's
+//! device-independent cost trace once, and prices it per device
+//! ([`sweep`]).  [`serve`] is the deployment-shaped
 //! front-end: a batching request router that executes each batch through
 //! its backend in a single call — the AOT-compiled PJRT artifacts when the
 //! `pjrt` feature is on, the pure-Rust golden model otherwise; Python
@@ -16,4 +17,6 @@ pub mod pool;
 pub mod serve;
 pub mod sweep;
 
-pub use sweep::{cnn_metrics, snn_sweep, CnnMetrics, SampleMetrics, SnnSweep};
+pub use sweep::{
+    cnn_metrics, snn_sweep, snn_sweep_counted, CnnMetrics, SampleMetrics, SnnSweep, SweepCounters,
+};

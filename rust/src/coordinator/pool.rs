@@ -37,18 +37,49 @@ where
     R: Send,
     F: Fn(usize) -> R + Sync,
 {
+    parallel_map_with(n, workers, || (), |_, i| f(i))
+}
+
+/// [`parallel_map`] with per-worker scratch state: each worker thread
+/// calls `init` once and threads the resulting value mutably through
+/// every item it processes.
+///
+/// This is how the sweeps reuse one [`crate::nn::snn::SimScratch`] per
+/// worker across a whole evaluation set — the buffers are allocated
+/// `workers` times per sweep instead of once per image.  The state never
+/// crosses threads, so it does not need to be `Send` or `Sync`.
+///
+/// ```
+/// use spikebench::coordinator::pool::parallel_map_with;
+///
+/// // Each worker counts its own items in a local (non-Sync) counter.
+/// let out = parallel_map_with(8, 3, || 0u32, |local, i| {
+///     *local += 1;
+///     i * 2
+/// });
+/// assert_eq!(out, (0..8).map(|i| i * 2).collect::<Vec<_>>());
+/// ```
+pub fn parallel_map_with<S, R, I, F>(n: usize, workers: usize, init: I, f: F) -> Vec<R>
+where
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> R + Sync,
+{
     let workers = workers.clamp(1, n.max(1));
     let next = AtomicUsize::new(0);
     let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|s| {
         for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&mut state, i);
+                    *results[i].lock().unwrap() = Some(r);
                 }
-                let r = f(i);
-                *results[i].lock().unwrap() = Some(r);
             });
         }
     });
@@ -86,6 +117,29 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Per-worker state: `init` runs once per worker, results stay in
+    /// index order, and every item is processed exactly once.
+    #[test]
+    fn map_with_state_reuses_per_worker() {
+        use std::sync::atomic::AtomicUsize;
+        let inits = AtomicUsize::new(0);
+        let out = parallel_map_with(
+            50,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                Vec::<usize>::new()
+            },
+            |seen, i| {
+                seen.push(i);
+                i + 1
+            },
+        );
+        assert_eq!(out, (0..50).map(|i| i + 1).collect::<Vec<_>>());
+        let n_inits = inits.load(Ordering::SeqCst);
+        assert!(n_inits >= 1 && n_inits <= 4, "init ran {n_inits} times");
     }
 
     #[test]

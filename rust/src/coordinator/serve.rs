@@ -29,14 +29,17 @@
 //!
 //! ## Batched cost estimation
 //!
-//! The cycle-model estimate (`SnnAccelerator::run` = functional m-TTFS
-//! pass + timing/energy replay) is the expensive part of a response —
-//! far costlier than a `Network::forward`. Batching amortizes it: the
-//! executor computes **one estimate per (design, batch)**, on the batch's
-//! first image, and attaches it to every response of that batch. The
-//! estimates live in a design-keyed cache (`CostCache`) so a future
-//! multi-design router pays one slot per design and the per-design
-//! estimate count is observable in [`ServerStats`].
+//! The cycle-model estimate (functional m-TTFS pass + device-independent
+//! event walk, [`SnnAccelerator::trace`]) is the expensive part of a
+//! response — far costlier than a `Network::forward`. Batching amortizes
+//! it: the executor computes **one trace per (design, batch)**, on the
+//! batch's first image, and attaches its per-device costing
+//! ([`SnnAccelerator::cost`], a few multiplications) to every response of
+//! that batch. The cache (`CostCache`) stores the device-independent
+//! [`crate::snn::accelerator::CostTrace`] — not per-device results — so a
+//! future multi-device router re-prices a cached trace per device for
+//! free, the functional pass reuses one [`SimScratch`] across batches,
+//! and the per-design trace count is observable in [`ServerStats`].
 //!
 //! The PJRT client is not `Send`, so the backend lives on one dedicated
 //! executor thread that owns it; the batcher feeds it through a channel.
@@ -50,8 +53,9 @@ use anyhow::Result;
 
 use crate::fpga::device::Device;
 use crate::nn::network::{argmax, Network};
+use crate::nn::snn::{snn_infer_scratch, SimScratch, SnnMode};
 use crate::nn::tensor::Tensor3;
-use crate::snn::accelerator::SnnAccelerator;
+use crate::snn::accelerator::{CostTrace, SnnAccelerator};
 use crate::snn::config::SnnDesign;
 
 use super::pool;
@@ -230,54 +234,74 @@ struct Job {
     reply: mpsc::Sender<Response>,
 }
 
-/// Design-keyed cache of per-batch hardware-cost estimates.
+/// Design-keyed cache of per-batch hardware-cost **traces**.
 ///
-/// One `SnnAccelerator::run` per (design, batch) — computed on the batch's
-/// first image — instead of one per request; the estimate is shared by
-/// every response of the batch. Slots are keyed by design + device name so
-/// a multi-design router pays one slot per design; each slot remembers its
-/// latest estimate and how many batches it has estimated (surfaced as
+/// One functional pass + event walk ([`SnnAccelerator::trace`]) per
+/// (design, batch) — computed on the batch's first image — instead of one
+/// per request. Slots store the device-independent
+/// [`CostTrace`], not per-device numbers: pricing a trace on the
+/// configured device ([`SnnAccelerator::cost`]) is a few multiplications,
+/// so cached slots are re-priced on every hit and a future multi-device
+/// router pays nothing extra per device. The functional pass runs in a
+/// reusable [`SimScratch`] (the executor thread owns the cache), so
+/// steady-state batches allocate nothing. Each slot remembers its latest
+/// trace and how many batches it has traced (surfaced as
 /// [`ServerStats::cost_estimates`]).
 #[derive(Default)]
 struct CostCache {
     entries: HashMap<String, CostEntry>,
+    scratch: Option<SimScratch>,
 }
 
 struct CostEntry {
-    latency_s: f64,
-    energy_j: f64,
+    trace: CostTrace,
     estimates: usize,
 }
 
 impl CostCache {
     /// Estimate the configured design's cost for a batch represented by
-    /// its first image.
+    /// its first image; returns (latency_s, energy_j) on `cfg.device`.
     ///
-    /// Multi-request batches always refresh the design's slot (one cycle
-    /// simulation per batch — the amortization). Single-request batches
-    /// reuse the slot when one exists, so a trickle of traffic after a
+    /// Multi-request batches always refresh the design's trace (one event
+    /// walk per batch — the amortization). Single-request batches re-price
+    /// the cached trace when one exists, so a trickle of traffic after a
     /// warm-up burst never pays the simulator again.
     fn estimate_batch(
         &mut self,
         cfg: &ServeConfig,
+        acc: &SnnAccelerator,
         representative: &Tensor3,
         batch_size: usize,
     ) -> (f64, f64) {
-        let key = format!("{}@{}", cfg.snn_design.name, cfg.device.name);
+        let key = cfg.snn_design.name.to_string();
         if batch_size == 1 {
             if let Some(entry) = self.entries.get(&key) {
-                return (entry.latency_s, entry.energy_j);
+                let r = acc.cost(&entry.trace, &cfg.device);
+                return (r.latency_s, r.energy_j);
             }
         }
-        let acc = SnnAccelerator::new(&cfg.snn_design, &cfg.snn_net, cfg.t_steps, cfg.v_th);
-        let r = acc.run(representative, &cfg.device);
-        let entry = self
-            .entries
-            .entry(key)
-            .or_insert(CostEntry { latency_s: 0.0, energy_j: 0.0, estimates: 0 });
-        entry.latency_s = r.latency_s;
-        entry.energy_j = r.energy_j;
-        entry.estimates += 1;
+        let scratch =
+            self.scratch.get_or_insert_with(|| SimScratch::for_net(&cfg.snn_net));
+        let functional = snn_infer_scratch(
+            &cfg.snn_net,
+            representative,
+            cfg.t_steps,
+            cfg.v_th,
+            SnnMode::MTtfs,
+            scratch,
+        );
+        let trace = acc.trace(functional);
+        let r = acc.cost(&trace, &cfg.device);
+        match self.entries.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                let e = o.get_mut();
+                e.trace = trace;
+                e.estimates += 1;
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(CostEntry { trace, estimates: 1 });
+            }
+        }
         (r.latency_s, r.energy_j)
     }
 
@@ -317,6 +341,10 @@ impl Server {
         let handle = std::thread::spawn(move || {
             let mut stats = ServerStats::default();
             let mut costs = CostCache::default();
+            // One simulator for the server's lifetime (its per-layer shape
+            // table is precomputed once, not per batch or cache hit).
+            let acc =
+                SnnAccelerator::new(&cfg.snn_design, &cfg.snn_net, cfg.t_steps, cfg.v_th);
             loop {
                 // Block for the first job of a batch.
                 let first = match rx.recv() {
@@ -357,7 +385,7 @@ impl Server {
 
                 // One cost estimate for the whole batch (design-keyed).
                 let (lat, energy) = match cfg.backend_kind {
-                    Backend::Snn => costs.estimate_batch(&cfg, &xs[0], bs),
+                    Backend::Snn => costs.estimate_batch(&cfg, &acc, &xs[0], bs),
                     Backend::Cnn => (0.0, 0.0), // filled by caller's CnnMetrics
                 };
                 stats.cost_estimates = costs.total_estimates();
@@ -573,6 +601,24 @@ mod tests {
             }
         }
         server.shutdown();
+    }
+
+    /// A trickle of single-request batches after warm-up re-prices the
+    /// cached device-independent trace instead of re-walking events: the
+    /// cost numbers stay identical and the estimate count stays at 1.
+    #[test]
+    fn trickle_after_warmup_reuses_cached_trace() {
+        let server = Server::start(Box::new(NetworkBackend { net: tiny_net() }), cfg());
+        let x = Tensor3::from_vec(1, 3, 3, vec![0.7; 9]);
+        let first = server.classify(x.clone()).unwrap();
+        let second = server.classify(x).unwrap();
+        assert!(first.accel_latency_s > 0.0);
+        assert_eq!(first.accel_latency_s, second.accel_latency_s);
+        assert_eq!(first.accel_energy_j, second.accel_energy_j);
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 2);
+        // One trace computed; the second single-request batch hit the cache.
+        assert_eq!(stats.cost_estimates, 1);
     }
 
     #[test]

@@ -1,24 +1,37 @@
 //! Evaluation-set sweeps: the data behind every histogram in the paper.
 //!
-//! For each image the functional m-TTFS simulation runs **once**; every
-//! SNN design point then replays its timing/energy model against the same
-//! event streams (the functional result is design-independent — Sommer's
-//! P only changes *when* events are processed, not *which*).  This is the
-//! coordinator's main batching trick: a five-design sweep costs one
-//! functional pass, not five.
+//! Two levels of sharing keep a sweep cheap:
+//!
+//! * **One functional pass per image.**  The m-TTFS simulation is
+//!   design-independent (Sommer's P only changes *when* events are
+//!   processed, not *which*), so every design point walks the same event
+//!   stream.  Each worker holds one [`SimScratch`], so repeated passes do
+//!   near-zero allocation.
+//! * **One event walk per (image, design).**  The cycle model's expensive
+//!   half ([`SnnAccelerator::trace`]) is device-independent; a sweep over
+//!   D devices computes one [`crate::snn::accelerator::CostTrace`] per
+//!   (image, design) and prices it D times with the cheap
+//!   [`SnnAccelerator::cost`] step.
+//!
+//! A five-design, two-device sweep therefore costs one functional pass
+//! and five event walks per image — not ten full replays.  The
+//! [`SweepCounters`] returned by [`snn_sweep_counted`] make the contract
+//! observable (and testable).
 
 use crate::cnn_accel::config::CnnDesign;
 use crate::fpga::device::Device;
 use crate::fpga::power::{Activity, DesignFamily, PowerBreakdown, PowerEstimator};
-use crate::nn::network::Network;
-use crate::nn::snn::snn_infer;
-use crate::nn::tensor::Tensor3;
 use crate::nn::arch::parse_arch;
+use crate::nn::network::Network;
+use crate::nn::snn::{snn_infer_scratch, SimScratch, SnnMode};
+use crate::nn::tensor::Tensor3;
 use crate::snn::accelerator::SnnAccelerator;
 use crate::snn::config::SnnDesign;
 use crate::data::EvalSet;
 
-use super::pool::{default_workers, parallel_map};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::pool::{default_workers, parallel_map_with};
 
 /// Per-sample metrics of one design on one input.
 #[derive(Debug, Clone, Copy)]
@@ -77,6 +90,22 @@ impl SnnSweep {
     }
 }
 
+/// How much work a sweep actually performed — the observability handle
+/// for the sharing contract (one functional pass per image, one event
+/// walk per (image, design), one cheap costing per (image, design,
+/// device)).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepCounters {
+    /// Functional m-TTFS simulations executed (= images swept).
+    pub functional_passes: u64,
+    /// Device-independent event walks (`SnnAccelerator::trace`) executed
+    /// (= images × designs, *not* × devices).
+    pub event_walks: u64,
+    /// Per-device costings (`SnnAccelerator::cost`) executed
+    /// (= images × designs × devices).
+    pub costings: u64,
+}
+
 /// Sweep several SNN designs over `n` images of the evaluation set (one
 /// functional pass per image, shared across designs).
 ///
@@ -90,33 +119,67 @@ pub fn snn_sweep(
     v_th: f32,
     n: usize,
 ) -> Vec<SnnSweep> {
+    snn_sweep_counted(net, designs, devices, eval, t_steps, v_th, n, default_workers()).0
+}
+
+/// [`snn_sweep`] with an explicit worker count and work counters.
+///
+/// Taking `workers` as a parameter (instead of mutating the
+/// `SPIKEBENCH_WORKERS` environment variable) keeps concurrent callers —
+/// notably parallel `cargo test` — from racing on process-global state.
+#[allow(clippy::too_many_arguments)]
+pub fn snn_sweep_counted(
+    net: &Network,
+    designs: &[&SnnDesign],
+    devices: &[&Device],
+    eval: &EvalSet,
+    t_steps: usize,
+    v_th: f32,
+    n: usize,
+    workers: usize,
+) -> (Vec<SnnSweep>, SweepCounters) {
     let n = n.min(eval.len());
-    let workers = default_workers();
-    // Per-image: functional sim once, replay per design × device.
-    let per_image: Vec<Vec<SampleMetrics>> = parallel_map(n, workers, |i| {
-        let x: &Tensor3 = &eval.images[i];
-        let functional = snn_infer(net, x, t_steps, v_th);
-        let mut out = Vec::with_capacity(designs.len() * devices.len());
-        for design in designs {
-            let acc = SnnAccelerator::new(design, net, t_steps, v_th);
-            for device in devices {
-                let r = acc.replay(&functional, device);
-                out.push(SampleMetrics {
-                    label: eval.labels[i],
-                    predicted: r.predicted,
-                    cycles: r.cycles,
-                    latency_s: r.latency_s,
-                    power_w: r.power.total(),
-                    power: r.power,
-                    energy_j: r.energy_j,
-                    fps_per_watt: r.fps_per_watt(),
-                    total_spikes: r.total_spikes,
-                    aeq_overflows: r.aeq_overflows,
-                });
+    let functional_passes = AtomicU64::new(0);
+    let event_walks = AtomicU64::new(0);
+    let costings = AtomicU64::new(0);
+    // One simulator per design, shared read-only across the workers.
+    let accs: Vec<SnnAccelerator> =
+        designs.iter().map(|d| SnnAccelerator::new(d, net, t_steps, v_th)).collect();
+
+    // Per-image: functional sim once (into the worker's scratch), one
+    // event walk per design, one cheap costing per (design, device).
+    let per_image: Vec<Vec<SampleMetrics>> = parallel_map_with(
+        n,
+        workers,
+        || SimScratch::for_net(net),
+        |scratch, i| {
+            let x: &Tensor3 = &eval.images[i];
+            let functional = snn_infer_scratch(net, x, t_steps, v_th, SnnMode::MTtfs, scratch);
+            functional_passes.fetch_add(1, Ordering::Relaxed);
+            let mut out = Vec::with_capacity(accs.len() * devices.len());
+            for acc in &accs {
+                let ct = acc.trace(functional);
+                event_walks.fetch_add(1, Ordering::Relaxed);
+                for device in devices {
+                    let r = acc.cost(&ct, device);
+                    costings.fetch_add(1, Ordering::Relaxed);
+                    out.push(SampleMetrics {
+                        label: eval.labels[i],
+                        predicted: r.predicted,
+                        cycles: r.cycles,
+                        latency_s: r.latency_s,
+                        power_w: r.power.total(),
+                        power: r.power,
+                        energy_j: r.energy_j,
+                        fps_per_watt: r.fps_per_watt(),
+                        total_spikes: r.total_spikes,
+                        aeq_overflows: r.aeq_overflows,
+                    });
+                }
             }
-        }
-        out
-    });
+            out
+        },
+    );
 
     let mut sweeps: Vec<SnnSweep> = designs
         .iter()
@@ -133,7 +196,12 @@ pub fn snn_sweep(
             sweeps[k].samples.push(m);
         }
     }
-    sweeps
+    let counters = SweepCounters {
+        functional_passes: functional_passes.into_inner(),
+        event_walks: event_walks.into_inner(),
+        costings: costings.into_inner(),
+    };
+    (sweeps, counters)
 }
 
 /// Input-independent metrics of a CNN design (the dashed red lines).
@@ -177,7 +245,7 @@ pub fn cnn_metrics(design: &CnnDesign, input_shape: (usize, usize, usize), arch_
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fpga::device::PYNQ_Z1;
+    use crate::fpga::device::{PYNQ_Z1, ZCU102};
     use crate::fpga::resources::{MemoryVariant, SnnDesignParams};
     use crate::nn::conv::ConvWeights;
     use crate::nn::dense::DenseWeights;
@@ -229,10 +297,14 @@ mod tests {
         let eval = tiny_eval(16);
         let d1 = design(1);
         let d4 = design(4);
-        let sweeps =
-            snn_sweep(&net, &[&d1, &d4], &[&PYNQ_Z1], &eval, 4, 1.0, 16);
+        let (sweeps, counters) =
+            snn_sweep_counted(&net, &[&d1, &d4], &[&PYNQ_Z1], &eval, 4, 1.0, 16, 4);
         assert_eq!(sweeps.len(), 2);
         assert_eq!(sweeps[0].samples.len(), 16);
+        // One functional pass per image — shared by both designs.
+        assert_eq!(counters.functional_passes, 16);
+        assert_eq!(counters.event_walks, 32); // images × designs
+        assert_eq!(counters.costings, 32); // … × 1 device
         // Same functional pass -> identical spike counts and predictions.
         for (a, b) in sweeps[0].samples.iter().zip(&sweeps[1].samples) {
             assert_eq!(a.total_spikes, b.total_spikes);
@@ -242,16 +314,52 @@ mod tests {
         }
     }
 
+    /// The tentpole contract: D devices cost one functional pass and one
+    /// event walk per (image, design) — only the cheap per-device costing
+    /// scales with D — and the cycle counts are identical across devices.
+    #[test]
+    fn sweep_walks_events_once_per_image_design_across_devices() {
+        let net = tiny_net();
+        let eval = tiny_eval(10);
+        let d1 = design(1);
+        let d4 = design(4);
+        let (sweeps, counters) = snn_sweep_counted(
+            &net,
+            &[&d1, &d4],
+            &[&PYNQ_Z1, &ZCU102],
+            &eval,
+            4,
+            1.0,
+            10,
+            3,
+        );
+        assert_eq!(sweeps.len(), 4); // designs × devices
+        assert_eq!(counters.functional_passes, 10);
+        assert_eq!(counters.event_walks, 20); // images × designs, NOT × devices
+        assert_eq!(counters.costings, 40); // images × designs × devices
+        // Per design: cycles identical across devices, latency scaled by
+        // the clock (PYNQ 100 MHz vs ZCU102 200 MHz).
+        for d in 0..2 {
+            let pynq = &sweeps[d * 2];
+            let zcu = &sweeps[d * 2 + 1];
+            assert_eq!(pynq.device_name, "PYNQ-Z1");
+            assert_eq!(zcu.device_name, "ZCU102");
+            for (a, b) in pynq.samples.iter().zip(&zcu.samples) {
+                assert_eq!(a.cycles, b.cycles);
+                assert!((a.latency_s / b.latency_s - 2.0).abs() < 1e-9);
+            }
+        }
+    }
+
     #[test]
     fn sweep_is_deterministic_across_worker_counts() {
         let net = tiny_net();
         let eval = tiny_eval(12);
         let d = design(2);
-        std::env::set_var("SPIKEBENCH_WORKERS", "1");
-        let s1 = snn_sweep(&net, &[&d], &[&PYNQ_Z1], &eval, 4, 1.0, 12);
-        std::env::set_var("SPIKEBENCH_WORKERS", "7");
-        let s7 = snn_sweep(&net, &[&d], &[&PYNQ_Z1], &eval, 4, 1.0, 12);
-        std::env::remove_var("SPIKEBENCH_WORKERS");
+        // Explicit worker counts — no process-global env mutation, so
+        // this cannot race with concurrently running tests.
+        let (s1, _) = snn_sweep_counted(&net, &[&d], &[&PYNQ_Z1], &eval, 4, 1.0, 12, 1);
+        let (s7, _) = snn_sweep_counted(&net, &[&d], &[&PYNQ_Z1], &eval, 4, 1.0, 12, 7);
         for (a, b) in s1[0].samples.iter().zip(&s7[0].samples) {
             assert_eq!(a.cycles, b.cycles);
             assert_eq!(a.energy_j, b.energy_j);

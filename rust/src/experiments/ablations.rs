@@ -19,7 +19,6 @@ use anyhow::Result;
 use crate::fpga::device::PYNQ_Z1;
 use crate::fpga::resources::{MemoryVariant, SnnDesignParams};
 use crate::nn::loader::{load_network, WeightKind};
-use crate::nn::snn::snn_infer;
 use crate::snn::accelerator::SnnAccelerator;
 use crate::snn::config::SnnDesign;
 use crate::snn::encoding::{Encoder, Encoding};
@@ -28,21 +27,22 @@ use crate::util::table::{f, thousands, Table};
 use super::ctx::Ctx;
 
 /// P = 1…16 scaling sweep on MNIST.
+///
+/// One functional pass + five event walks per image (the P designs share
+/// the pass; each design's walk is device-independent), not five full
+/// `run`s — the same two-stage sharing as [`crate::coordinator::sweep`].
 pub fn parallelization(ctx: &mut Ctx, n: usize) -> Result<String> {
     let info = ctx.info("mnist")?.clone();
     ctx.snn_net("mnist")?;
     ctx.eval("mnist")?;
     let net = ctx.snn_net("mnist")?.clone();
     let eval = ctx.eval("mnist")?.clone();
-    let n = n.min(eval.len()).max(16);
+    let n = n.max(16).min(eval.len());
 
-    let mut t = Table::new(
-        "Ablation — parallelization factor P (MNIST, PYNQ-Z1, BRAM variant)",
-        &["P", "mean cycles", "speedup vs P=1", "mean power [W]", "mean energy [mJ]", "mean FPS/W"],
-    );
-    let mut base_cycles = 0.0;
-    for p in [1u32, 2, 4, 8, 16] {
-        let design = SnnDesign {
+    let ps = [1u32, 2, 4, 8, 16];
+    let designs: Vec<SnnDesign> = ps
+        .iter()
+        .map(|&p| SnnDesign {
             name: "ablation",
             dataset: "mnist",
             params: SnnDesignParams {
@@ -55,27 +55,53 @@ pub fn parallelization(ctx: &mut Ctx, n: usize) -> Result<String> {
             },
             published: None,
             published_zcu102: None,
+        })
+        .collect();
+    let accs: Vec<SnnAccelerator> =
+        designs.iter().map(|d| SnnAccelerator::new(d, &net, info.t_steps, info.v_th)).collect();
+    // results[image][design] = (cycles, power, energy, fps/W)
+    let results: Vec<Vec<(f64, f64, f64, f64)>> = crate::coordinator::pool::parallel_map_with(
+        n,
+        crate::coordinator::pool::default_workers(),
+        || crate::nn::snn::SimScratch::for_net(&net),
+        |scratch, i| {
+            let functional = crate::nn::snn::snn_infer_scratch(
+                &net,
+                &eval.images[i],
+                info.t_steps,
+                info.v_th,
+                crate::nn::snn::SnnMode::MTtfs,
+                scratch,
+            );
+            accs.iter()
+                .map(|acc| {
+                    let r = acc.cost(&acc.trace(functional), &PYNQ_Z1);
+                    (r.cycles as f64, r.power.total(), r.energy_j, r.fps_per_watt())
+                })
+                .collect()
+        },
+    );
+
+    let mut t = Table::new(
+        "Ablation — parallelization factor P (MNIST, PYNQ-Z1, BRAM variant)",
+        &["P", "mean cycles", "speedup vs P=1", "mean power [W]", "mean energy [mJ]", "mean FPS/W"],
+    );
+    let mut base_cycles = 0.0;
+    for (di, p) in ps.iter().enumerate() {
+        let mean = |g: &dyn Fn(&(f64, f64, f64, f64)) -> f64| {
+            results.iter().map(|row| g(&row[di])).sum::<f64>() / results.len() as f64
         };
-        let acc = SnnAccelerator::new(&design, &net, info.t_steps, info.v_th);
-        let results: Vec<_> = crate::coordinator::pool::parallel_map(
-            n,
-            crate::coordinator::pool::default_workers(),
-            |i| acc.run(&eval.images[i], &PYNQ_Z1),
-        );
-        let mean = |g: &dyn Fn(&crate::snn::accelerator::SnnRunResult) -> f64| {
-            results.iter().map(|r| g(r)).sum::<f64>() / results.len() as f64
-        };
-        let cycles = mean(&|r| r.cycles as f64);
-        if p == 1 {
+        let cycles = mean(&|r| r.0);
+        if *p == 1 {
             base_cycles = cycles;
         }
         t.row(vec![
             p.to_string(),
             thousands(cycles as u64),
             format!("{:.2}x", base_cycles / cycles),
-            f(mean(&|r| r.power.total()), 3),
-            f(mean(&|r| r.energy_j * 1e3), 4),
-            format!("{:.0}", mean(&|r| r.fps_per_watt())),
+            f(mean(&|r| r.1), 3),
+            f(mean(&|r| r.2 * 1e3), 4),
+            format!("{:.0}", mean(&|r| r.3)),
         ]);
     }
     let mut out = t.render();
@@ -103,13 +129,25 @@ pub fn aeq_depth(ctx: &mut Ctx, n: usize) -> Result<String> {
         let eval = ctx.eval(ds)?.clone();
         let n = n.min(eval.len());
         let acc = SnnAccelerator::new(&design, &net, info.t_steps, info.v_th);
-        let results: Vec<_> = crate::coordinator::pool::parallel_map(
+        let results: Vec<(u32, u64)> = crate::coordinator::pool::parallel_map_with(
             n,
             crate::coordinator::pool::default_workers(),
-            |i| acc.run(&eval.images[i], &PYNQ_Z1),
+            || crate::nn::snn::SimScratch::for_net(&net),
+            |scratch, i| {
+                let functional = crate::nn::snn::snn_infer_scratch(
+                    &net,
+                    &eval.images[i],
+                    info.t_steps,
+                    info.v_th,
+                    crate::nn::snn::SnnMode::MTtfs,
+                    scratch,
+                );
+                let ct = acc.trace(functional);
+                (ct.aeq_high_water, ct.aeq_overflows)
+            },
         );
-        let hw = results.iter().map(|r| r.aeq_high_water).max().unwrap_or(0);
-        let overflows: u64 = results.iter().map(|r| r.aeq_overflows).sum();
+        let hw = results.iter().map(|r| r.0).max().unwrap_or(0);
+        let overflows: u64 = results.iter().map(|r| r.1).sum();
         let d = design.params.d_aeq;
         t.row(vec![
             name.into(),
@@ -130,7 +168,7 @@ pub fn timesteps(ctx: &mut Ctx, n: usize) -> Result<String> {
     let info = ctx.info("mnist")?.clone();
     let net = load_network(&ctx.manifest, "mnist", WeightKind::Snn)?;
     let eval = ctx.eval("mnist")?.clone();
-    let n = n.min(eval.len()).max(32);
+    let n = n.max(32).min(eval.len());
     let design = crate::snn::config::by_name("SNN8_COMPR.").unwrap();
 
     let mut t = Table::new(
@@ -139,11 +177,20 @@ pub fn timesteps(ctx: &mut Ctx, n: usize) -> Result<String> {
     );
     for t_steps in [2usize, 4, 6, 8, 10] {
         let acc_sim = SnnAccelerator::new(&design, &net, t_steps, info.v_th);
-        let results: Vec<_> = crate::coordinator::pool::parallel_map(
+        let results: Vec<_> = crate::coordinator::pool::parallel_map_with(
             n,
             crate::coordinator::pool::default_workers(),
-            |i| {
-                let r = acc_sim.run(&eval.images[i], &PYNQ_Z1);
+            || crate::nn::snn::SimScratch::for_net(&net),
+            |scratch, i| {
+                let functional = crate::nn::snn::snn_infer_scratch(
+                    &net,
+                    &eval.images[i],
+                    t_steps,
+                    info.v_th,
+                    crate::nn::snn::SnnMode::MTtfs,
+                    scratch,
+                );
+                let r = acc_sim.replay(functional, &PYNQ_Z1);
                 (r.predicted == eval.labels[i], r.total_spikes, r.cycles, r.energy_j)
             },
         );
@@ -203,11 +250,11 @@ pub fn encoding(_ctx: &mut Ctx, _n: usize) -> Result<String> {
 /// multiplies, which is exactly why the Sommer design (and this paper)
 /// use a TTFS-family code.
 pub fn encoding_mode(ctx: &mut Ctx, n: usize) -> Result<String> {
-    use crate::nn::snn::{snn_infer_mode, SnnMode};
+    use crate::nn::snn::SnnMode;
     let info = ctx.info("mnist")?.clone();
     let net = load_network(&ctx.manifest, "mnist", WeightKind::Snn)?;
     let eval = ctx.eval("mnist")?.clone();
-    let n = n.min(eval.len()).max(32);
+    let n = n.max(32).min(eval.len());
     let design = crate::snn::config::by_name("SNN8_COMPR.").unwrap();
 
     let mut t = Table::new(
@@ -220,12 +267,20 @@ pub fn encoding_mode(ctx: &mut Ctx, n: usize) -> Result<String> {
         (SnnMode::Rate, "rate", 2 * info.t_steps),
     ] {
         let acc_sim = SnnAccelerator::new(&design, &net, t_steps, info.v_th);
-        let results: Vec<_> = crate::coordinator::pool::parallel_map(
+        let results: Vec<_> = crate::coordinator::pool::parallel_map_with(
             n,
             crate::coordinator::pool::default_workers(),
-            |i| {
-                let functional = snn_infer_mode(&net, &eval.images[i], t_steps, info.v_th, mode);
-                let r = acc_sim.replay(&functional, &PYNQ_Z1);
+            || crate::nn::snn::SimScratch::for_net(&net),
+            |scratch, i| {
+                let functional = crate::nn::snn::snn_infer_scratch(
+                    &net,
+                    &eval.images[i],
+                    t_steps,
+                    info.v_th,
+                    mode,
+                    scratch,
+                );
+                let r = acc_sim.replay(functional, &PYNQ_Z1);
                 (r.predicted == eval.labels[i], r.total_spikes, r.cycles, r.energy_j)
             },
         );

@@ -187,17 +187,29 @@ fn validate(args: &Args) -> Result<()> {
         let eval = ctx.eval(ds)?.clone();
         let n = n.min(eval.len());
 
-        // Pure-Rust passes run on the worker pool (the PJRT client is not
-        // Sync, so the agreement check below stays on this thread).
+        // Pure-Rust passes run on the worker pool with one reusable
+        // simulation scratch per worker (the PJRT client is not Sync, so
+        // the agreement check below stays on this thread).
         let workers = spikebench::coordinator::pool::default_workers();
-        let rust_preds: Vec<(usize, usize)> =
-            spikebench::coordinator::pool::parallel_map(n, workers, |i| {
+        let rust_preds: Vec<(usize, usize)> = spikebench::coordinator::pool::parallel_map_with(
+            n,
+            workers,
+            || spikebench::nn::snn::SimScratch::for_net(&snn_net),
+            |scratch, i| {
                 let x = &eval.images[i];
                 let cnn = spikebench::nn::network::argmax(&net.forward(x));
-                let snn = spikebench::nn::snn::snn_infer(&snn_net, x, info.t_steps, info.v_th)
-                    .classify();
+                let snn = spikebench::nn::snn::snn_infer_scratch(
+                    &snn_net,
+                    x,
+                    info.t_steps,
+                    info.v_th,
+                    spikebench::nn::snn::SnnMode::MTtfs,
+                    scratch,
+                )
+                .classify();
                 (cnn, snn)
-            });
+            },
+        );
         let correct_cnn =
             rust_preds.iter().zip(&eval.labels).filter(|((c, _), &l)| *c == l).count();
         let correct_snn =

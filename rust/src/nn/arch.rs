@@ -45,25 +45,30 @@ pub fn parse_arch(s: &str) -> Result<Vec<LayerSpec>> {
 
 /// Output shape of every layer given an input (C, H, W); dense = (n, 1, 1).
 pub fn layer_shapes(arch: &[LayerSpec], input: (usize, usize, usize)) -> Vec<(usize, usize, usize)> {
+    layer_shape_iter(arch, input).collect()
+}
+
+/// Incremental, allocation-free form of [`layer_shapes`]: yields each
+/// layer's output shape in order.  The single source of truth for the
+/// shape derivation — collect it ([`layer_shapes`]) or zip it against
+/// existing buffers to validate them.
+pub fn layer_shape_iter(
+    arch: &[LayerSpec],
+    input: (usize, usize, usize),
+) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
     let (mut c, mut h, mut w) = input;
-    let mut out = Vec::with_capacity(arch.len());
-    for spec in arch {
-        match *spec {
-            LayerSpec::Conv { out_channels, .. } => {
-                c = out_channels;
-                out.push((c, h, w));
-            }
-            LayerSpec::Pool { window } => {
-                h /= window;
-                w /= window;
-                out.push((c, h, w));
-            }
-            LayerSpec::Dense { units } => {
-                out.push((units, 1, 1));
-            }
+    arch.iter().map(move |spec| match *spec {
+        LayerSpec::Conv { out_channels, .. } => {
+            c = out_channels;
+            (c, h, w)
         }
-    }
-    out
+        LayerSpec::Pool { window } => {
+            h /= window;
+            w /= window;
+            (c, h, w)
+        }
+        LayerSpec::Dense { units } => (units, 1, 1),
+    })
 }
 
 /// Total weight + bias parameters (matches Keras / python arch.py).

@@ -16,9 +16,20 @@
 //! Unlike the L2 graph (dense masked convolutions — the TPU-friendly
 //! formulation), this simulator is *event-driven*: each spike scatters its
 //! K×K weight patch into the downstream slope tensor, which is exactly the
-//! operation the FPGA accelerator performs per queue entry.  The returned
-//! per-step event lists are what the cycle-level simulator
-//! ([`crate::snn`]) replays against its timing/energy model.
+//! operation the FPGA accelerator performs per queue entry.  The emitted
+//! event stream is what the cycle-level simulator ([`crate::snn`]) walks
+//! once per design ([`crate::snn::accelerator::SnnAccelerator::trace`])
+//! before costing it per device.
+//!
+//! ## Allocation discipline (§Perf)
+//!
+//! Events live in one flat arena ([`EventStream`], CSR-style: a single
+//! `Vec<SpikeEvent>` plus per-(step, layer) segment offsets) instead of the
+//! former `Vec<Vec<Vec<SpikeEvent>>>` nest, and all membrane/slope/spike
+//! buffers live in a reusable [`SimScratch`].  A caller that holds a
+//! scratch across inferences ([`snn_infer_scratch`]) performs near-zero
+//! allocation per inference — the hot path behind `repro serve`,
+//! `snn_sweep`, and every figure regenerator.
 
 use super::dense::dense_accumulate_event;
 use super::network::{argmax, LayerWeights, Network};
@@ -35,16 +46,109 @@ pub struct SpikeEvent {
     pub x: u16,
 }
 
+/// Flat CSR-style spike-event arena.
+///
+/// All events of one inference live in a single `Vec<SpikeEvent>`; the
+/// segment of algorithmic step `t`, layer `l` is `events[offsets[t * L +
+/// l] .. offsets[t * L + l + 1]]` where `L` = [`EventStream::layers`]
+/// (layer 0 is the input-encoding layer).  Segments are appended in
+/// (step, layer) order, which is exactly the order the accelerator's
+/// queue walk consumes them, so the walk is a linear scan of one
+/// contiguous allocation instead of a pointer chase through nested
+/// `Vec`s.  Clearing keeps the capacity, so a reused stream (via
+/// [`SimScratch`]) stops allocating after the first inference.
+#[derive(Debug, Clone, Default)]
+pub struct EventStream {
+    events: Vec<SpikeEvent>,
+    /// Segment boundaries; `offsets[0] == 0`, one extra entry per sealed
+    /// segment. `offsets.len() - 1` is the number of sealed segments.
+    offsets: Vec<usize>,
+    layers: usize,
+}
+
+impl EventStream {
+    /// Clear the stream (keeping capacity) for a net with `layers`
+    /// per-step segments (= network layers + 1 for the input layer).
+    pub fn reset(&mut self, layers: usize) {
+        self.events.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+        self.layers = layers;
+    }
+
+    /// Append one event to the currently open segment.
+    pub fn push(&mut self, ev: SpikeEvent) {
+        self.events.push(ev);
+    }
+
+    /// Seal the currently open segment and open the next one.
+    pub fn end_segment(&mut self) {
+        self.offsets.push(self.events.len());
+    }
+
+    /// Per-step segments (input layer + one per network layer).
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Completed algorithmic time steps.
+    pub fn steps(&self) -> usize {
+        if self.layers == 0 {
+            0
+        } else {
+            (self.offsets.len() - 1) / self.layers
+        }
+    }
+
+    /// Events of the segment (step `t`, layer `l`).
+    pub fn slice(&self, t: usize, l: usize) -> &[SpikeEvent] {
+        let seg = t * self.layers + l;
+        &self.events[self.offsets[seg]..self.offsets[seg + 1]]
+    }
+
+    /// Number of events in the segment (step `t`, layer `l`).
+    pub fn segment_len(&self, t: usize, l: usize) -> usize {
+        self.slice(t, l).len()
+    }
+
+    /// Flat-arena index range of the most recently sealed segment.
+    pub fn last_segment_range(&self) -> std::ops::Range<usize> {
+        let n = self.offsets.len();
+        if n < 2 {
+            0..0
+        } else {
+            self.offsets[n - 2]..self.offsets[n - 1]
+        }
+    }
+
+    /// Event at flat-arena index `idx` (see
+    /// [`EventStream::last_segment_range`]).
+    pub fn event(&self, idx: usize) -> SpikeEvent {
+        self.events[idx]
+    }
+
+    /// Total events across every segment.
+    pub fn total(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The whole flat arena, in (step, layer) emission order.
+    pub fn all(&self) -> &[SpikeEvent] {
+        &self.events
+    }
+}
+
 /// Result of a T-step SNN inference.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct SnnResult {
     /// Output-layer membrane potential after T steps (the logits proxy).
     pub logits: Vec<f32>,
-    /// `events[t][l]` = spikes emitted by layer `l` at step `t`
-    /// (l = 0 is the input-encoding layer, so there are `arch.len() + 1`
-    /// entries per step).
-    pub events: Vec<Vec<Vec<SpikeEvent>>>,
-    /// Total spikes per layer (summed over steps), aligned with `events`.
+    /// Flat event arena: segment (t, l) = spikes emitted by layer `l` at
+    /// step `t` (l = 0 is the input-encoding layer, so there are
+    /// `arch.len() + 1` segments per step).
+    pub events: EventStream,
+    /// Total spikes per layer (summed over steps), aligned with the
+    /// event-stream layers.
     pub spike_counts: Vec<u64>,
 }
 
@@ -76,6 +180,67 @@ impl LayerState {
         let n = shape.0 * shape.1 * shape.2;
         LayerState { v: vec![0.0; n], s: vec![0.0; n], k: vec![false; n], shape }
     }
+
+    /// Zero in place (capacity-preserving reset between inferences).
+    fn zero(&mut self) {
+        self.v.fill(0.0);
+        self.s.fill(0.0);
+        self.k.fill(false);
+    }
+}
+
+/// Reusable simulation buffers: layer states + the output
+/// [`SnnResult`] (logits, event arena, spike counts).
+///
+/// Build one per worker/thread with [`SimScratch::for_net`] and pass it
+/// to [`snn_infer_scratch`]; every buffer is reset capacity-preserving,
+/// so repeated inferences allocate nothing once warm.  Feeding a network
+/// with different layer shapes rebuilds the state buffers transparently.
+pub struct SimScratch {
+    input_state: LayerState,
+    states: Vec<LayerState>,
+    /// Rate-mode pool dedup set (cleared, capacity kept).
+    seen: std::collections::HashSet<usize>,
+    result: SnnResult,
+}
+
+impl SimScratch {
+    /// Scratch sized for `net`'s layer shapes.
+    pub fn for_net(net: &Network) -> SimScratch {
+        let shapes = super::arch::layer_shapes(&net.arch, net.input_shape);
+        SimScratch {
+            input_state: LayerState::new(net.input_shape),
+            states: shapes.iter().map(|&s| LayerState::new(s)).collect(),
+            seen: std::collections::HashSet::new(),
+            result: SnnResult::default(),
+        }
+    }
+
+    /// Allocation-free check that the state buffers match `net`'s layer
+    /// shapes (the warm path must not rebuild — or even recompute — the
+    /// shape list per inference).
+    fn fits(&self, net: &Network) -> bool {
+        self.input_state.shape == net.input_shape
+            && self.states.len() == net.arch.len()
+            && self
+                .states
+                .iter()
+                .zip(super::arch::layer_shape_iter(&net.arch, net.input_shape))
+                .all(|(st, sh)| st.shape == sh)
+    }
+
+    /// Zero every state buffer; rebuild if `net`'s shapes changed.
+    fn reset_for(&mut self, net: &Network) {
+        if !self.fits(net) {
+            let result = std::mem::take(&mut self.result);
+            *self = SimScratch::for_net(net);
+            self.result = result; // keep the arena/logits capacity
+        }
+        self.input_state.zero();
+        for st in &mut self.states {
+            st.zero();
+        }
+    }
 }
 
 /// Spike-encoding mode (the §2.1.2 design axis, Table 1).
@@ -99,13 +264,15 @@ pub fn snn_infer(net: &Network, x: &Tensor3, t_steps: usize, v_th: f32) -> SnnRe
     snn_infer_mode(net, x, t_steps, v_th, SnnMode::MTtfs)
 }
 
-/// Rate-coded variant; event-list structure matches [`snn_infer`], so the
-/// cycle-level replay works unchanged on either encoding.
+/// Rate-coded variant; event-stream structure matches [`snn_infer`], so
+/// the cycle-level replay works unchanged on either encoding.
 pub fn snn_infer_rate(net: &Network, x: &Tensor3, t_steps: usize, v_th: f32) -> SnnResult {
     snn_infer_mode(net, x, t_steps, v_th, SnnMode::Rate)
 }
 
-/// Mode-dispatching simulation core.
+/// Mode-dispatching simulation returning an owned result (allocates a
+/// fresh [`SimScratch`]; hot paths should hold one and call
+/// [`snn_infer_scratch`] instead).
 pub fn snn_infer_mode(
     net: &Network,
     x: &Tensor3,
@@ -113,48 +280,76 @@ pub fn snn_infer_mode(
     v_th: f32,
     mode: SnnMode,
 ) -> SnnResult {
-    let shapes = super::arch::layer_shapes(&net.arch, net.input_shape);
-    let n_layers = net.arch.len();
+    let mut scratch = SimScratch::for_net(net);
+    snn_infer_scratch(net, x, t_steps, v_th, mode, &mut scratch);
+    scratch.result
+}
 
-    let mut input_state = LayerState::new(net.input_shape);
-    let mut states: Vec<LayerState> = shapes.iter().map(|&s| LayerState::new(s)).collect();
-    let mut events: Vec<Vec<Vec<SpikeEvent>>> = Vec::with_capacity(t_steps);
-    let mut counts = vec![0u64; n_layers + 1];
+/// Simulation core writing into reusable buffers.
+///
+/// The returned reference borrows `scratch`; copy out (or consume) what
+/// you need before the next call.  Repeated calls over same-shaped
+/// networks perform near-zero heap allocation.
+pub fn snn_infer_scratch<'a>(
+    net: &Network,
+    x: &Tensor3,
+    t_steps: usize,
+    v_th: f32,
+    mode: SnnMode,
+    scratch: &'a mut SimScratch,
+) -> &'a SnnResult {
+    scratch.reset_for(net);
+    let n_layers = net.arch.len();
+    let SimScratch { input_state, states, seen, result } = scratch;
+    let stream = &mut result.events;
+    let counts = &mut result.spike_counts;
+    stream.reset(n_layers + 1);
+    counts.clear();
+    counts.resize(n_layers + 1, 0);
 
     for _t in 0..t_steps {
-        let mut step_events: Vec<Vec<SpikeEvent>> = Vec::with_capacity(n_layers + 1);
-
         // Input encoding layer: V += pixel, threshold, fire (once / reset).
-        let in_events = match mode {
-            SnnMode::MTtfs => integrate_and_fire(&mut input_state, &x.data, v_th),
-            SnnMode::Rate => integrate_and_fire_reset(&mut input_state, &x.data, v_th),
+        let fired = match mode {
+            SnnMode::MTtfs => integrate_and_fire(input_state, &x.data, v_th, stream),
+            SnnMode::Rate => integrate_and_fire_reset(input_state, &x.data, v_th, stream),
         };
-        counts[0] += in_events.len() as u64;
-        step_events.push(in_events);
+        counts[0] += fired as u64;
+        stream.end_segment();
 
         for (i, lw) in net.layers.iter().enumerate() {
-            let prev_events: &[SpikeEvent] = &step_events[i];
-            let layer_events = match lw {
+            // Segment (t, i) — the events this layer consumes — is the
+            // most recently sealed one; read it by flat index so new
+            // events can be appended to the same arena.
+            let prev = stream.last_segment_range();
+            match lw {
                 LayerWeights::Conv(cw) => {
                     // Scatter each presynaptic event's KxK weight patch into
                     // the slope/current tensor (the FPGA's per-queue-entry op).
                     let (_, h, w) = states[i].shape;
-                    for ev in prev_events {
-                        scatter_conv_event(&mut states[i].s, cw, h, w, ev);
+                    for j in prev {
+                        let ev = stream.event(j);
+                        scatter_conv_event(&mut states[i].s, cw, h, w, &ev);
                     }
                     debug_assert_eq!(states[i].shape.0, cw.c_out);
                     let bias = BiasView::PerChannel(&cw.b);
-                    match mode {
-                        SnnMode::MTtfs => integrate_and_fire_slope(&mut states[i], bias, v_th),
-                        SnnMode::Rate => integrate_and_fire_current(&mut states[i], bias, v_th),
-                    }
+                    let fired = match mode {
+                        SnnMode::MTtfs => {
+                            integrate_and_fire_slope(&mut states[i], bias, v_th, stream)
+                        }
+                        SnnMode::Rate => {
+                            integrate_and_fire_current(&mut states[i], bias, v_th, stream)
+                        }
+                    };
+                    counts[i + 1] += fired as u64;
+                    stream.end_segment();
                 }
                 LayerWeights::Pool(win) => {
                     // Spike-OR forwarding (m-TTFS: once; rate: per step).
                     let (_, ho, wo) = states[i].shape;
-                    let mut out = Vec::new();
-                    let mut seen_this_step = std::collections::HashSet::new();
-                    for ev in prev_events {
+                    seen.clear();
+                    let mut fired = 0u64;
+                    for j in prev {
+                        let ev = stream.event(j);
                         let (py, px) = (ev.y as usize / win, ev.x as usize / win);
                         if py >= ho || px >= wo {
                             continue; // floor-division drop strip
@@ -167,22 +362,25 @@ pub fn snn_infer_mode(
                                 st.k[idx] = true;
                                 f
                             }
-                            SnnMode::Rate => seen_this_step.insert(idx),
+                            SnnMode::Rate => seen.insert(idx),
                         };
                         if fire {
-                            out.push(SpikeEvent { c: ev.c, y: py as u16, x: px as u16 });
+                            stream.push(SpikeEvent { c: ev.c, y: py as u16, x: px as u16 });
+                            fired += 1;
                         }
                     }
-                    counts[i + 1] += out.len() as u64;
-                    step_events.push(out);
-                    continue;
+                    counts[i + 1] += fired;
+                    stream.end_segment();
                 }
                 LayerWeights::Dense(dw) => {
                     // Events arrive flattened over the previous layer shape.
-                    let prev_shape = if i == 0 { net.input_shape } else { shapes[i - 1] };
-                    for ev in prev_events {
-                        let flat =
-                            (ev.c as usize * prev_shape.1 + ev.y as usize) * prev_shape.2 + ev.x as usize;
+                    let prev_shape =
+                        if i == 0 { net.input_shape } else { states[i - 1].shape };
+                    for j in prev {
+                        let ev = stream.event(j);
+                        let flat = (ev.c as usize * prev_shape.1 + ev.y as usize)
+                            * prev_shape.2
+                            + ev.x as usize;
                         dense_accumulate_event(&mut states[i].s, dw, flat);
                     }
                     if i == n_layers - 1 {
@@ -194,26 +392,30 @@ pub fn snn_infer_mode(
                             st.v[j] += st.s[j] + dw.b[j];
                         }
                         if mode == SnnMode::Rate {
-                            st.s.iter_mut().for_each(|s| *s = 0.0);
+                            st.s.fill(0.0);
                         }
-                        step_events.push(Vec::new());
+                        stream.end_segment(); // empty output segment
                         continue;
                     }
                     let bias = BiasView::PerUnit(&dw.b);
-                    match mode {
-                        SnnMode::MTtfs => integrate_and_fire_slope(&mut states[i], bias, v_th),
-                        SnnMode::Rate => integrate_and_fire_current(&mut states[i], bias, v_th),
-                    }
+                    let fired = match mode {
+                        SnnMode::MTtfs => {
+                            integrate_and_fire_slope(&mut states[i], bias, v_th, stream)
+                        }
+                        SnnMode::Rate => {
+                            integrate_and_fire_current(&mut states[i], bias, v_th, stream)
+                        }
+                    };
+                    counts[i + 1] += fired as u64;
+                    stream.end_segment();
                 }
-            };
-            counts[i + 1] += layer_events.len() as u64;
-            step_events.push(layer_events);
+            }
         }
-        events.push(step_events);
     }
 
-    let logits = states[n_layers - 1].v.clone();
-    SnnResult { logits, events, spike_counts: counts }
+    result.logits.clear();
+    result.logits.extend_from_slice(&states[n_layers - 1].v);
+    &*result
 }
 
 /// Bias addressing for the integrate step.
@@ -224,16 +426,22 @@ enum BiasView<'a> {
     PerUnit(&'a [f32]),
 }
 
-/// V += S + b; fire where V > v_th and not yet spiked.
+/// V += S + b; fire where V > v_th and not yet spiked.  Fired events are
+/// appended to `out`'s open segment; returns how many fired.
 ///
 /// §Perf: iterates plane-by-plane so the per-channel bias is hoisted out
 /// of the inner loop (no per-neuron division) and the V/S/K slices zip
 /// without bounds checks; spike-event construction (rare) stays off the
 /// fast path.
-fn integrate_and_fire_slope(st: &mut LayerState, bias: BiasView, v_th: f32) -> Vec<SpikeEvent> {
+fn integrate_and_fire_slope(
+    st: &mut LayerState,
+    bias: BiasView,
+    v_th: f32,
+    out: &mut EventStream,
+) -> usize {
     let (c_n, h, w) = st.shape;
     let plane = h * w;
-    let mut out = Vec::with_capacity(64);
+    let mut fired = 0;
     for c in 0..c_n {
         let b = match &bias {
             BiasView::PerChannel(bs) => bs[c],
@@ -248,16 +456,22 @@ fn integrate_and_fire_slope(st: &mut LayerState, bias: BiasView, v_th: f32) -> V
             if !*kflag && *v > v_th {
                 *kflag = true;
                 out.push(SpikeEvent { c: c as u16, y: (i / w) as u16, x: (i % w) as u16 });
+                fired += 1;
             }
         }
     }
-    out
+    fired
 }
 
 /// Input layer: V += current (per-neuron drive), fire once (m-TTFS).
-fn integrate_and_fire(st: &mut LayerState, drive: &[f32], v_th: f32) -> Vec<SpikeEvent> {
+fn integrate_and_fire(
+    st: &mut LayerState,
+    drive: &[f32],
+    v_th: f32,
+    out: &mut EventStream,
+) -> usize {
     let (_, h, w) = st.shape;
-    let mut out = Vec::with_capacity(64);
+    let mut fired = 0;
     for idx in 0..st.v.len() {
         st.v[idx] += drive[idx];
         if !st.k[idx] && st.v[idx] > v_th {
@@ -265,16 +479,22 @@ fn integrate_and_fire(st: &mut LayerState, drive: &[f32], v_th: f32) -> Vec<Spik
             let c = idx / (h * w);
             let rem = idx % (h * w);
             out.push(SpikeEvent { c: c as u16, y: (rem / w) as u16, x: (rem % w) as u16 });
+            fired += 1;
         }
     }
-    out
+    fired
 }
 
 /// Input layer, rate coding: V += drive; fire with subtractive reset
 /// (may fire every step — the rate encodes the magnitude).
-fn integrate_and_fire_reset(st: &mut LayerState, drive: &[f32], v_th: f32) -> Vec<SpikeEvent> {
+fn integrate_and_fire_reset(
+    st: &mut LayerState,
+    drive: &[f32],
+    v_th: f32,
+    out: &mut EventStream,
+) -> usize {
     let (_, h, w) = st.shape;
-    let mut out = Vec::with_capacity(64);
+    let mut fired = 0;
     for idx in 0..st.v.len() {
         st.v[idx] += drive[idx];
         if st.v[idx] > v_th {
@@ -282,18 +502,24 @@ fn integrate_and_fire_reset(st: &mut LayerState, drive: &[f32], v_th: f32) -> Ve
             let c = idx / (h * w);
             let rem = idx % (h * w);
             out.push(SpikeEvent { c: c as u16, y: (rem / w) as u16, x: (rem % w) as u16 });
+            fired += 1;
         }
     }
-    out
+    fired
 }
 
 /// Rate-coded weighted layer: the accumulated per-spike currents S are
 /// integrated once and cleared (no slope re-integration), and neurons
 /// reset subtractively on firing (Eq. 1's reset branch).
-fn integrate_and_fire_current(st: &mut LayerState, bias: BiasView, v_th: f32) -> Vec<SpikeEvent> {
+fn integrate_and_fire_current(
+    st: &mut LayerState,
+    bias: BiasView,
+    v_th: f32,
+    out: &mut EventStream,
+) -> usize {
     let (c_n, h, w) = st.shape;
     let plane = h * w;
-    let mut out = Vec::with_capacity(64);
+    let mut fired = 0;
     for c in 0..c_n {
         let b = match &bias {
             BiasView::PerChannel(bs) => bs[c],
@@ -308,10 +534,11 @@ fn integrate_and_fire_current(st: &mut LayerState, bias: BiasView, v_th: f32) ->
             if *v > v_th {
                 *v -= v_th;
                 out.push(SpikeEvent { c: c as u16, y: (i / w) as u16, x: (i % w) as u16 });
+                fired += 1;
             }
         }
     }
-    out
+    fired
 }
 
 /// Scatter one presynaptic conv event: for every (co, ky, kx), add
@@ -462,8 +689,8 @@ mod tests {
         let r = snn_infer(&net, &x, 8, 1.0);
         // Input layer has 4 neurons; count spikes per position across steps.
         let mut seen = std::collections::HashMap::new();
-        for step in &r.events {
-            for ev in &step[0] {
+        for t in 0..r.events.steps() {
+            for ev in r.events.slice(t, 0) {
                 *seen.entry((ev.c, ev.y, ev.x)).or_insert(0) += 1;
             }
         }
@@ -480,9 +707,8 @@ mod tests {
         // t=0: no pixel exceeds 1.0 (strict >), t=1: pixel 1.0 reaches 2.0 > 1.
         // 0.5 crosses at t=2 (V=1.5), 0.26 at t=3 (V=1.04).
         let first_spike_step = |y: u16, x_: u16| {
-            r.events
-                .iter()
-                .position(|st| st[0].iter().any(|e| e.y == y && e.x == x_))
+            (0..r.events.steps())
+                .position(|t| r.events.slice(t, 0).iter().any(|e| e.y == y && e.x == x_))
         };
         assert_eq!(first_spike_step(0, 0), Some(1));
         assert_eq!(first_spike_step(0, 1), Some(2));
@@ -501,14 +727,20 @@ mod tests {
     }
 
     #[test]
-    fn spike_counts_match_event_lists() {
+    fn spike_counts_match_event_stream() {
         let net = tiny_snn();
         let x = Tensor3::from_vec(1, 2, 2, vec![0.9, 0.8, 0.7, 0.6]);
         let r = snn_infer(&net, &x, 5, 1.0);
         for l in 0..r.spike_counts.len() {
-            let listed: u64 = r.events.iter().map(|st| st[l].len() as u64).sum();
+            let listed: u64 =
+                (0..r.events.steps()).map(|t| r.events.segment_len(t, l) as u64).sum();
             assert_eq!(listed, r.spike_counts[l]);
         }
+        // CSR invariant: segments tile the arena exactly.
+        let per_segment: usize = (0..r.events.steps())
+            .map(|t| (0..r.events.layers()).map(|l| r.events.segment_len(t, l)).sum::<usize>())
+            .sum();
+        assert_eq!(per_segment, r.events.total());
     }
 
     #[test]
@@ -533,18 +765,62 @@ mod tests {
     }
 
     #[test]
-    fn rate_mode_event_lists_replayable() {
-        // Same event-list shape as m-TTFS (cycle replay compatibility).
+    fn rate_mode_event_stream_replayable() {
+        // Same event-stream shape as m-TTFS (cycle replay compatibility).
         let net = tiny_snn();
         let x = Tensor3::from_vec(1, 2, 2, vec![0.9, 0.8, 0.7, 0.6]);
         let r = snn_infer_mode(&net, &x, 5, 1.0, SnnMode::Rate);
-        assert_eq!(r.events.len(), 5);
-        for step in &r.events {
-            assert_eq!(step.len(), net.arch.len() + 1);
-        }
+        assert_eq!(r.events.steps(), 5);
+        assert_eq!(r.events.layers(), net.arch.len() + 1);
         for l in 0..r.spike_counts.len() {
-            let listed: u64 = r.events.iter().map(|st| st[l].len() as u64).sum();
+            let listed: u64 =
+                (0..r.events.steps()).map(|t| r.events.segment_len(t, l) as u64).sum();
             assert_eq!(listed, r.spike_counts[l]);
         }
+    }
+
+    /// A reused scratch produces bit-identical results to a fresh one —
+    /// the contract that lets serve/sweep reuse buffers across images.
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        let net = tiny_snn();
+        let xs = [
+            Tensor3::from_vec(1, 2, 2, vec![0.9, 0.8, 0.7, 0.6]),
+            Tensor3::from_vec(1, 2, 2, vec![1.0, 0.0, 0.3, 0.0]),
+            Tensor3::from_vec(1, 2, 2, vec![0.1, 0.2, 0.3, 0.4]),
+        ];
+        let mut scratch = SimScratch::for_net(&net);
+        for x in &xs {
+            let fresh = snn_infer(&net, x, 6, 1.0);
+            let reused = snn_infer_scratch(&net, x, 6, 1.0, SnnMode::MTtfs, &mut scratch);
+            assert_eq!(fresh.logits, reused.logits);
+            assert_eq!(fresh.spike_counts, reused.spike_counts);
+            assert_eq!(fresh.events.all(), reused.events.all());
+            assert_eq!(fresh.events.steps(), reused.events.steps());
+        }
+    }
+
+    /// Scratch adapts when handed a differently-shaped network.
+    #[test]
+    fn scratch_rebuilds_for_new_net() {
+        let net_a = tiny_snn();
+        let arch = parse_arch("1C3-2").unwrap();
+        let mut w = vec![0.0; 9];
+        w[4] = 1.0;
+        let net_b = Network {
+            arch,
+            layers: vec![
+                LayerWeights::Conv(ConvWeights::new(1, 1, 3, w, vec![0.0])),
+                LayerWeights::Dense(DenseWeights::new(2, 9, vec![0.1; 18], vec![0.0, 0.0])),
+            ],
+            input_shape: (1, 3, 3),
+        };
+        let mut scratch = SimScratch::for_net(&net_a);
+        let xa = Tensor3::from_vec(1, 2, 2, vec![0.9; 4]);
+        let xb = Tensor3::from_vec(1, 3, 3, vec![0.9; 9]);
+        let ra = snn_infer_scratch(&net_a, &xa, 4, 1.0, SnnMode::MTtfs, &mut scratch).clone();
+        let rb = snn_infer_scratch(&net_b, &xb, 4, 1.0, SnnMode::MTtfs, &mut scratch).clone();
+        assert_eq!(ra.logits, snn_infer(&net_a, &xa, 4, 1.0).logits);
+        assert_eq!(rb.logits, snn_infer(&net_b, &xb, 4, 1.0).logits);
     }
 }

@@ -15,6 +15,25 @@
 //! * every memory access is counted and fed to the vector-based power
 //!   estimator, which is what makes latency *and* power input-dependent
 //!   (Figs. 7/9) while the FINN baseline's are constant.
+//!
+//! ## Two-stage costing
+//!
+//! The simulation is split so multi-device sweeps never repeat the
+//! expensive part:
+//!
+//! 1. [`SnnAccelerator::trace`] — the **device-independent** event walk.
+//!    Everything it computes (cycles, [`ActivityTrace`], AEQ high-water /
+//!    overflow counts, the functional outputs it carries along) depends
+//!    only on the (input, design) pair, never on the target device.  One
+//!    walk per (input, design), captured in a [`CostTrace`].
+//! 2. [`SnnAccelerator::cost`] — the **per-device** costing step: clock
+//!    period × cycles → latency, resource/activity → power, power ×
+//!    latency → energy.  A few multiplications per device.
+//!
+//! [`SnnAccelerator::replay`] (= `cost(trace(f), device)`) and
+//! [`SnnAccelerator::run`] are the single-shot conveniences; sweeps over
+//! D devices call `trace` once and `cost` D times, so the event walk is
+//! paid once instead of D times.
 
 use crate::fpga::device::Device;
 use crate::fpga::power::{Activity, DesignFamily, PowerBreakdown, PowerEstimator};
@@ -24,11 +43,12 @@ use crate::nn::network::Network;
 use crate::nn::snn::{snn_infer, SnnResult, SpikeEvent};
 use crate::nn::tensor::Tensor3;
 
+use super::config::SnnDesign;
 use super::core::{
     conv_event_traffic, conv_segment_cycles, threshold_scan_cycles, threshold_scan_traffic,
     ActivityTrace, CoreCosts,
 };
-use super::config::SnnDesign;
+use super::interlace::Interlacing;
 
 /// Calibration: memory accesses per core-cycle at which a design sits at
 /// the anchor (vector-less) activity level.  A fully-busy core performs
@@ -42,11 +62,47 @@ pub const NOMINAL_ACCESSES_PER_CORE_CYCLE: f64 = 26.0;
 /// Calibration: busy fraction at the anchor activity level.
 pub const NOMINAL_TOGGLE: f64 = 0.80;
 
+/// Device-independent outcome of one event walk: everything the cycle
+/// model knows about an (input, design) pair before a device is chosen.
+///
+/// Produced by [`SnnAccelerator::trace`]; priced per device by
+/// [`SnnAccelerator::cost`].  Carries the functional outputs (logits,
+/// prediction, spike total) alongside the accounting so costing needs no
+/// second look at the [`SnnResult`].
+#[derive(Debug, Clone)]
+pub struct CostTrace {
+    /// Cycle/memory-access accounting behind the power estimate; its
+    /// `cycles` field is the total latency in clock cycles
+    /// (device-independent: the clock *period*, not the cycle count, is
+    /// what differs per device — see [`CostTrace::cycles`]).
+    pub activity: ActivityTrace,
+    /// Peak per-bank AEQ occupancy observed.
+    pub aeq_high_water: u32,
+    /// Events that exceeded the configured AEQ depth D (0 for correctly
+    /// sized designs; > 0 means the design would stall on this input).
+    pub aeq_overflows: u64,
+    /// Functional logits (copied out of the walked [`SnnResult`] once;
+    /// shared with every per-device [`SnnRunResult`] without re-copying).
+    pub logits: std::sync::Arc<Vec<f32>>,
+    /// argmax of the logits.
+    pub predicted: usize,
+    /// Total spikes processed.
+    pub total_spikes: u64,
+}
+
+impl CostTrace {
+    /// Total latency in clock cycles (identical on every device).
+    pub fn cycles(&self) -> u64 {
+        self.activity.cycles
+    }
+}
+
 /// Result of simulating one inference on one design.
 #[derive(Debug, Clone)]
 pub struct SnnRunResult {
-    /// Functional result (logits of the output accumulator).
-    pub logits: Vec<f32>,
+    /// Functional result (logits of the output accumulator), shared with
+    /// the [`CostTrace`] it was priced from.
+    pub logits: std::sync::Arc<Vec<f32>>,
     /// argmax of the logits.
     pub predicted: usize,
     /// Total latency in clock cycles.
@@ -92,45 +148,66 @@ pub struct SnnAccelerator<'a> {
     pub v_th: f32,
     /// Pipeline cost parameters of the cores.
     pub costs: CoreCosts,
+    /// Per-layer output shapes of `net`, precomputed at construction so
+    /// the per-(image, design) event walk never recomputes them.
+    shapes: Vec<(usize, usize, usize)>,
 }
 
 impl<'a> SnnAccelerator<'a> {
     /// Simulator for `design` running `net` (default core costs).
     pub fn new(design: &'a SnnDesign, net: &'a Network, t_steps: usize, v_th: f32) -> Self {
-        SnnAccelerator { design, net, t_steps, v_th, costs: CoreCosts::default() }
+        let shapes = layer_shapes(&net.arch, net.input_shape);
+        SnnAccelerator { design, net, t_steps, v_th, costs: CoreCosts::default(), shapes }
     }
 
-    /// Simulate one classification on `device`.
+    /// Simulate one classification on `device` (functional pass + event
+    /// walk + per-device costing).
     pub fn run(&self, x: &Tensor3, device: &Device) -> SnnRunResult {
         let functional = snn_infer(self.net, x, self.t_steps, self.v_th);
         self.replay(&functional, device)
     }
 
-    /// Replay an existing functional result against the timing model
-    /// (lets callers share one functional pass across design points).
+    /// Replay an existing functional result against the timing model on
+    /// one device (lets callers share one functional pass across design
+    /// points).  Equivalent to `self.cost(&self.trace(functional),
+    /// device)`; multi-device callers should hold the [`CostTrace`] and
+    /// call [`SnnAccelerator::cost`] per device instead.
     pub fn replay(&self, functional: &SnnResult, device: &Device) -> SnnRunResult {
+        self.cost(&self.trace(functional), device)
+    }
+
+    /// The device-independent event walk: consume the functional event
+    /// stream once, producing cycle counts, memory-access accounting and
+    /// AEQ occupancy statistics.  This is the expensive half of the cycle
+    /// model; everything in the returned [`CostTrace`] is identical for
+    /// every target device.
+    pub fn trace(&self, functional: &SnnResult) -> CostTrace {
         let p = self.design.params.p as u64;
         let k = self.design.params.kernel as u64;
         let banks = k * k;
-        let shapes = layer_shapes(&self.net.arch, self.net.input_shape);
+        let shapes = &self.shapes;
 
         let mut trace = ActivityTrace::default();
         let mut cycles = 0u64;
         let mut aeq_high_water = 0u32;
         let mut aeq_overflows = 0u64;
+        let mut bank_counts = vec![0u32; (self.design.params.kernel.pow(2)) as usize];
 
-        let input_neurons =
-            (self.net.input_shape.0 * self.net.input_shape.1 * self.net.input_shape.2) as u64;
+        let input_shape = self.net.input_shape;
+        let input_neurons = (input_shape.0 * input_shape.1 * input_shape.2) as u64;
 
-        for step in &functional.events {
+        let events = &functional.events;
+        for t in 0..events.steps() {
             // Input encoding layer: threshold scan over the pixels.
             let in_scan = threshold_scan_cycles(input_neurons, p, banks);
             cycles += in_scan + self.costs.segment_overhead;
-            trace.queue_accesses += step[0].len() as u64; // pushes of new events
+            // The scan reads V + S and writes V for every pixel neuron —
+            // BRAM/LUTRAM activity the power model must see.
+            threshold_scan_traffic(input_neurons, &mut trace);
+            trace.queue_accesses += events.segment_len(t, 0) as u64; // pushes of new events
 
             for (i, spec) in self.net.arch.iter().enumerate() {
-                let events_in = &step[i];
-                let events_out = &step[i + 1];
+                let events_in = events.slice(t, i);
                 let n_ev = events_in.len() as u64;
                 let (c_l, h_l, w_l) = shapes[i];
                 let neurons = (c_l * h_l * w_l) as u64;
@@ -150,7 +227,16 @@ impl<'a> SnnAccelerator<'a> {
                         let thr_cycles = threshold_scan_cycles(neurons, p, banks);
                         threshold_scan_traffic(neurons, &mut trace);
                         trace.busy_cycles += ev_cycles;
-                        self.track_aeq(events_in, i, &mut aeq_high_water, &mut aeq_overflows);
+                        // Incoming events' coordinates live in the
+                        // *previous* layer's feature map.
+                        let in_shape = if i == 0 { input_shape } else { shapes[i - 1] };
+                        self.track_aeq(
+                            events_in,
+                            in_shape,
+                            &mut bank_counts,
+                            &mut aeq_high_water,
+                            &mut aeq_overflows,
+                        );
                         ev_cycles.max(thr_cycles)
                     }
                     LayerSpec::Pool { .. } => {
@@ -170,30 +256,48 @@ impl<'a> SnnAccelerator<'a> {
                         trace.weight_reads += n_ev * *units as u64;
                         let ev_cycles = n_ev.div_ceil(p) + self.costs.pipeline_depth;
                         let thr_cycles = threshold_scan_cycles(*units as u64, p, 1);
+                        // The dense threshold pass reads V + S and writes
+                        // V per unit, like every other scan.
+                        threshold_scan_traffic(*units as u64, &mut trace);
                         trace.busy_cycles += ev_cycles;
                         ev_cycles.max(thr_cycles)
                     }
                 };
                 // New events are pushed into the next layer's AEQ.
-                trace.queue_accesses += events_out.len() as u64;
+                trace.queue_accesses += events.segment_len(t, i + 1) as u64;
                 cycles += segment_cycles + self.costs.segment_overhead;
             }
         }
 
         trace.cycles = cycles;
-        let power = self.estimate_power(&trace, device);
-        let latency_s = cycles as f64 * device.period_s();
-        SnnRunResult {
-            logits: functional.logits.clone(),
+        CostTrace {
+            activity: trace,
+            aeq_high_water,
+            aeq_overflows,
+            logits: std::sync::Arc::new(functional.logits.clone()),
             predicted: crate::nn::network::argmax(&functional.logits),
-            cycles,
+            total_spikes: functional.total_spikes(),
+        }
+    }
+
+    /// Price a [`CostTrace`] on one device: latency from the clock,
+    /// vector-based power from the activity accounting, energy = power ×
+    /// latency.  Cheap enough to call once per device per trace.
+    pub fn cost(&self, trace: &CostTrace, device: &Device) -> SnnRunResult {
+        let power = self.estimate_power(&trace.activity, device);
+        let latency_s = trace.cycles() as f64 * device.period_s();
+        SnnRunResult {
+            // Arc clone: the logits allocation is shared across devices.
+            logits: trace.logits.clone(),
+            predicted: trace.predicted,
+            cycles: trace.cycles(),
             latency_s,
             power,
             energy_j: power.total() * latency_s,
-            total_spikes: functional.total_spikes(),
-            aeq_high_water,
-            aeq_overflows,
-            trace,
+            total_spikes: trace.total_spikes,
+            aeq_high_water: trace.aeq_high_water,
+            aeq_overflows: trace.aeq_overflows,
+            trace: trace.activity,
         }
     }
 
@@ -225,21 +329,32 @@ impl<'a> SnnAccelerator<'a> {
     }
 
     /// Per-bank AEQ occupancy accounting for a segment's input events.
+    ///
+    /// Bank selection goes through [`Interlacing::bank_of`] — the same
+    /// Fig. 4 geometry the [`crate::snn::aeq::Aeq`] model uses — so the
+    /// kernel-coordinate mapping has a single source of truth.
+    /// `map_shape` is the (C, H, W) feature map the events' coordinates
+    /// live in; note that bank selection depends only on the kernel
+    /// coordinate (y mod K, x mod K), never on the map extent, so the
+    /// shape is documentation + future-proofing (word addressing would
+    /// need it), not a behavioral input.  `bank_counts` is a reusable
+    /// K²-sized buffer.
     fn track_aeq(
         &self,
         events: &[SpikeEvent],
-        _layer: usize,
+        map_shape: (usize, usize, usize),
+        bank_counts: &mut [u32],
         high_water: &mut u32,
         overflows: &mut u64,
     ) {
         let k = self.design.params.kernel;
         let d = self.design.params.d_aeq;
-        let mut counts = vec![0u32; (k * k) as usize];
+        let il = Interlacing::new(k, map_shape.1 as u32, map_shape.2 as u32);
+        bank_counts.fill(0);
         for ev in events {
-            let bank = ((ev.y as u32 % k) * k + (ev.x as u32 % k)) as usize;
-            counts[bank] += 1;
+            bank_counts[il.bank_of(ev.y as u32, ev.x as u32) as usize] += 1;
         }
-        for &c in &counts {
+        for &c in bank_counts.iter() {
             if c > *high_water {
                 *high_water = c;
             }
@@ -253,13 +368,17 @@ impl<'a> SnnAccelerator<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fpga::device::PYNQ_Z1;
+    use crate::fpga::device::{PYNQ_Z1, ZCU102};
     use crate::fpga::resources::{MemoryVariant, SnnDesignParams};
     use crate::nn::arch::parse_arch;
     use crate::nn::conv::ConvWeights;
     use crate::nn::dense::DenseWeights;
     use crate::nn::network::{LayerWeights, Network};
+    use crate::snn::aeq::Aeq;
     use crate::snn::config::SnnDesign;
+    use crate::snn::encoding::{Encoder, Encoding};
+    use crate::util::quickcheck::check_default;
+    use crate::util::rng::Rng;
 
     fn tiny_net() -> Network {
         let arch = parse_arch("2C3-P2-4").unwrap();
@@ -365,5 +484,131 @@ mod tests {
         let r = SnnAccelerator::new(&d, &net, 4, 1.0).run(&bright_input(), &PYNQ_Z1);
         let expect = (1.0 / r.latency_s) / r.power.total();
         assert!((r.fps_per_watt() - expect).abs() < 1e-9);
+    }
+
+    /// The threshold-scan traffic the power model sees must cover every
+    /// scan the cycle model charges cycles for: input-layer scans and
+    /// dense-layer scans contribute membrane reads/writes, not just conv.
+    #[test]
+    fn trace_counts_all_threshold_scan_traffic() {
+        let net = tiny_net();
+        let d = design(2);
+        let acc = SnnAccelerator::new(&d, &net, 4, 1.0);
+        let f = snn_infer(&net, &dim_input(), 4, 1.0);
+        let ct = acc.trace(&f);
+        // Per step: input scan (64 neurons) + conv scan (2*8*8 = 128) +
+        // dense scan (4 units) → reads 2x, writes 1x each, plus conv
+        // event traffic (K² per kernel op).  The scans alone give a floor.
+        let t = f.events.steps() as u64;
+        let scan_neurons = 64 + 128 + 4;
+        assert!(
+            ct.activity.mem_reads >= 2 * scan_neurons * t,
+            "mem_reads {} < scan floor {}",
+            ct.activity.mem_reads,
+            2 * scan_neurons * t
+        );
+        assert!(ct.activity.mem_writes >= scan_neurons * t);
+    }
+
+    /// Tentpole contract: the trace is device-independent, and two-stage
+    /// costing reproduces the single-shot replay numbers exactly on both
+    /// paper devices, over randomized inputs.
+    #[test]
+    fn trace_then_cost_equals_replay_on_both_devices() {
+        check_default("trace+cost == replay", |r: &mut Rng| {
+            let net = tiny_net();
+            let d = design(1 + r.below(8) as u32);
+            let acc = SnnAccelerator::new(&d, &net, 4, 1.0);
+            let x = Tensor3::from_vec(1, 8, 8, (0..64).map(|_| r.f32()).collect());
+            let f = snn_infer(&net, &x, 4, 1.0);
+            let ct = acc.trace(&f);
+            for dev in [&PYNQ_Z1, &ZCU102] {
+                let two_stage = acc.cost(&ct, dev);
+                let one_shot = acc.replay(&f, dev);
+                if two_stage.cycles != one_shot.cycles
+                    || two_stage.latency_s != one_shot.latency_s
+                    || two_stage.energy_j != one_shot.energy_j
+                    || two_stage.power != one_shot.power
+                    || two_stage.logits != one_shot.logits
+                    || two_stage.predicted != one_shot.predicted
+                    || two_stage.aeq_high_water != one_shot.aeq_high_water
+                    || two_stage.aeq_overflows != one_shot.aeq_overflows
+                {
+                    return Err(format!("two-stage != replay on {}", dev.name));
+                }
+                // Device independence: cycles come straight from the trace.
+                if two_stage.cycles != ct.cycles() {
+                    return Err("cost() altered the cycle count".into());
+                }
+            }
+            // The same trace priced on both devices: identical cycles,
+            // latency scaled exactly by the clock ratio.
+            let a = acc.cost(&ct, &PYNQ_Z1);
+            let b = acc.cost(&ct, &ZCU102);
+            if a.cycles != b.cycles {
+                return Err("cycles differ across devices".into());
+            }
+            let ratio = a.latency_s / b.latency_s;
+            let clock_ratio = ZCU102.freq_mhz / PYNQ_Z1.freq_mhz;
+            if (ratio - clock_ratio).abs() > 1e-9 {
+                return Err(format!("latency ratio {ratio} != clock ratio {clock_ratio}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// `track_aeq` and the `Aeq` queue model must agree on the Fig. 4
+    /// geometry: same per-bank occupancy (high-water) and the same
+    /// overflow count for any depth, since both now route bank selection
+    /// through `Interlacing::bank_of`.
+    #[test]
+    fn track_aeq_matches_aeq_queue_model() {
+        check_default("track_aeq == Aeq", |r: &mut Rng| {
+            let net = tiny_net();
+            let d_large = design(2); // d_aeq = 64: no overflow expected
+            let acc = SnnAccelerator::new(&d_large, &net, 4, 1.0);
+            let (h, w) = (8u32, 8u32);
+            let n = 1 + r.below(80);
+            let events: Vec<SpikeEvent> = (0..n)
+                .map(|_| SpikeEvent {
+                    c: 0,
+                    y: r.below(h as usize) as u16,
+                    x: r.below(w as usize) as u16,
+                })
+                .collect();
+
+            for depth in [2u32, 64] {
+                let mut acc_d = acc.design.clone();
+                acc_d.params.d_aeq = depth;
+                let acc2 = SnnAccelerator::new(&acc_d, &net, 4, 1.0);
+                let mut counts = vec![0u32; 9];
+                let (mut hw, mut of) = (0u32, 0u64);
+                acc2.track_aeq(&events, (1, h as usize, w as usize), &mut counts, &mut hw, &mut of);
+
+                let mut q = Aeq::new(
+                    Interlacing::new(3, h, w),
+                    Encoder::new(Encoding::Compressed, w, 3),
+                    depth,
+                );
+                for ev in &events {
+                    q.push(ev.y as u32, ev.x as u32);
+                }
+                if q.stats().overflows != of {
+                    return Err(format!(
+                        "depth {depth}: Aeq overflows {} != track_aeq {of}",
+                        q.stats().overflows
+                    ));
+                }
+                // The queue caps occupancy at D (rejects beyond); the
+                // tracker reports the uncapped demand.
+                if q.stats().high_water != hw.min(depth) {
+                    return Err(format!(
+                        "depth {depth}: Aeq high-water {} != min(track {hw}, {depth})",
+                        q.stats().high_water
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -33,6 +33,10 @@ pub struct Aeq {
     pub depth: u32,
     banks: Vec<std::collections::VecDeque<u32>>,
     stats: AeqStats,
+    /// Round-robin arbitration cursor: the bank the next pop starts
+    /// scanning from (advances past each serviced bank so high-index
+    /// banks cannot starve).
+    cursor: usize,
 }
 
 impl Aeq {
@@ -45,6 +49,7 @@ impl Aeq {
             depth,
             banks: vec![std::collections::VecDeque::new(); n],
             stats: AeqStats::default(),
+            cursor: 0,
         }
     }
 
@@ -71,12 +76,18 @@ impl Aeq {
         true
     }
 
-    /// Pop one event (round-robin across non-empty banks); returns the
+    /// Pop one event, round-robin across non-empty banks: the scan starts
+    /// at the bank after the last one serviced, so a busy low-index bank
+    /// cannot starve high-index banks (the hardware's arbitration order —
+    /// starvation would reorder segments vs the FPGA).  Returns the
     /// decoded (y, x) position.
     pub fn pop(&mut self) -> Option<(u32, u32)> {
-        for bank in 0..self.banks.len() {
+        let n = self.banks.len();
+        for off in 0..n {
+            let bank = (self.cursor + off) % n;
             if let Some(word) = self.banks[bank].pop_front() {
                 self.stats.pops += 1;
+                self.cursor = (bank + 1) % n;
                 let ev = self.encoder.decode(word);
                 // Reconstruct: bank gives kernel coordinate, event gives
                 // window address.
@@ -168,6 +179,39 @@ mod tests {
         }
         q.push(1, 0); // bank 3 (kernel coord (1,0))
         assert_eq!(q.stats().high_water, 5);
+    }
+
+    /// Round-robin fairness: a busy bank 0 must not starve higher banks —
+    /// after servicing bank 0 the arbiter moves on, so the lone bank-4
+    /// event comes out second, not last (the hardware's segment order).
+    #[test]
+    fn pop_round_robins_across_banks() {
+        let mut q = aeq(16);
+        // Three events in bank 0 (kernel coord (0,0)): (0,0), (0,3), (0,6).
+        q.push(0, 0);
+        q.push(0, 3);
+        q.push(0, 6);
+        // One event in bank 4 (kernel coord (1,1)): (1,1).
+        q.push(1, 1);
+        assert_eq!(q.pop(), Some((0, 0)));
+        // A bank-0-first scan would return (0, 3) here — starvation.
+        assert_eq!(q.pop(), Some((1, 1)));
+        assert_eq!(q.pop(), Some((0, 3)));
+        assert_eq!(q.pop(), Some((0, 6)));
+        assert_eq!(q.pop(), None);
+    }
+
+    /// The cursor wraps: servicing the highest bank resumes at bank 0.
+    #[test]
+    fn pop_cursor_wraps_around() {
+        let mut q = aeq(16);
+        q.push(2, 2); // bank 8 (kernel coord (2,2))
+        q.push(0, 0); // bank 0
+        assert_eq!(q.pop(), Some((0, 0))); // cursor starts at 0
+        assert_eq!(q.pop(), Some((2, 2))); // scan continues upward
+        q.push(0, 3); // bank 0 again
+        assert_eq!(q.pop(), Some((0, 3))); // cursor wrapped past bank 8
+        assert_eq!(q.pop(), None);
     }
 
     /// Distinct events in the same bank stay FIFO-ordered.

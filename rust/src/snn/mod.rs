@@ -15,9 +15,13 @@
 //! * [`aeq`] — segmented spike queues with occupancy/overflow accounting.
 //! * [`interlace`] — the two interlacing schemes and their invariants.
 //! * [`core`] — the per-core event pipeline cost/activity model.
-//! * [`accelerator`] — the full-design simulator: replays the functional
-//!   simulator's event streams against the timing + memory-activity model
-//!   and produces latency cycles + vector-based power activity.
+//! * [`accelerator`] — the full-design simulator, split in two stages:
+//!   a device-independent event walk over the functional simulator's
+//!   streams ([`accelerator::SnnAccelerator::trace`] →
+//!   [`accelerator::CostTrace`]: cycles + memory-activity + AEQ
+//!   occupancy) and a cheap per-device costing step
+//!   ([`accelerator::SnnAccelerator::cost`]: latency, vector-based
+//!   power, energy).
 //! * [`config`] — the paper's design points (Tables 3/7/8/9).
 
 pub mod accelerator;
@@ -27,5 +31,5 @@ pub mod core;
 pub mod encoding;
 pub mod interlace;
 
-pub use accelerator::{SnnAccelerator, SnnRunResult};
+pub use accelerator::{CostTrace, SnnAccelerator, SnnRunResult};
 pub use config::SnnDesign;

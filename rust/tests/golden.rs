@@ -104,7 +104,7 @@ fn rust_snn_matches_python_traces() {
             let mut mismatched = 0u64;
             for (t, step_maps) in trace.maps.iter().enumerate() {
                 for (l, py_map) in step_maps.iter().enumerate() {
-                    let events = &r.events[t][l];
+                    let events = r.events.slice(t, l);
                     // Rebuild the Rust spike map for (t, l).
                     let mut rust_map = vec![0u8; py_map.len()];
                     let (h, w) = (py_map.h, py_map.w);
