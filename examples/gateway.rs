@@ -1,0 +1,82 @@
+//! Multi-design gateway demo: the paper's crossover as live traffic.
+//!
+//! Builds a gateway holding every published SNN and CNN design for the
+//! chosen datasets (synthetic seeded weights — no artifacts needed), then
+//! drives each loadgen scenario through it and prints where the router
+//! sent the traffic.  At a loose SLO, MNIST requests land on a FINN CNN
+//! design while CIFAR-10 requests land on an SNN design — the per-request
+//! version of the paper's "to spike or not to spike" answer.
+//!
+//! ```sh
+//! cargo run --release --example gateway [-- --requests 96 --shards 2]
+//! ```
+
+use anyhow::Result;
+use spikebench::coordinator::gateway::{Gateway, GatewayConfig, Slo};
+use spikebench::coordinator::loadgen::{self, LoadgenConfig, Scenario};
+use spikebench::fpga::device::Device;
+use spikebench::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(0);
+    let requests = args.get_usize("requests", 96);
+    let shards = args.get_usize("shards", 2).max(1);
+    let seed = args.get_usize("seed", 42) as u64;
+    let device = Device::by_name(args.get_or("device", "pynq")).expect("pynq|zcu102");
+
+    let (specs, pools) =
+        loadgen::synthetic_specs(&["mnist", "svhn", "cifar"], device, shards, seed)?;
+    let gateway = Gateway::start(specs, &GatewayConfig::default())?;
+
+    println!("== routing table ({}) ==", device.name);
+    for d in gateway.router().table() {
+        println!(
+            "  {:<16} {:<6} {:>10.3} ms {:>10.2} uJ  ({})",
+            d.name,
+            d.dataset,
+            d.latency_s * 1e3,
+            d.energy_j * 1e6,
+            if d.is_snn { "SNN" } else { "CNN" }
+        );
+    }
+    for (name, reason) in gateway.rejected() {
+        println!("  {name:<16} rejected: {reason}");
+    }
+
+    for scenario in Scenario::all() {
+        let cfg = LoadgenConfig {
+            scenario,
+            requests,
+            seed,
+            slo: Slo::latency(0.05),
+            ..Default::default()
+        };
+        println!("\n== scenario: {} ==", scenario.name());
+        let report = loadgen::run(&gateway, &cfg, &pools)?;
+        print!("{}", report.render());
+    }
+
+    let stats = gateway.shutdown();
+    println!("\n== gateway stats ==");
+    for d in &stats.designs {
+        if d.routed > 0 {
+            println!(
+                "  {:<16} routed {:>4} ({} SLO misses) | {} batches, {} backend calls, {:.3} mJ",
+                d.name,
+                d.routed,
+                d.slo_misses,
+                d.batches,
+                d.backend_calls,
+                d.routed_energy_j * 1e3
+            );
+        }
+    }
+    println!(
+        "total: {} served ({} failed), {} batches across {} shards",
+        stats.served,
+        stats.failed,
+        stats.batches,
+        stats.shards.len()
+    );
+    Ok(())
+}

@@ -11,7 +11,7 @@
 //! ```
 
 use anyhow::Result;
-use spikebench::coordinator::serve::{select_backend, Backend, ServeConfig, Server};
+use spikebench::coordinator::serve::{select_backend, ServeConfig, Server, SnnCostConfig};
 use spikebench::experiments::ctx::Ctx;
 use spikebench::fpga::device::PYNQ_Z1;
 use spikebench::nn::loader::{load_network, WeightKind};
@@ -41,14 +41,15 @@ fn main() -> Result<()> {
     let server = Server::start(
         backend,
         ServeConfig {
-            backend_kind: Backend::Snn,
             max_batch: batch,
             batch_timeout: std::time::Duration::from_millis(2),
-            snn_design: design,
-            snn_net,
-            t_steps: info.t_steps,
-            v_th: info.v_th,
-            device: PYNQ_Z1,
+            cost: Some(SnnCostConfig {
+                design,
+                net: snn_net,
+                t_steps: info.t_steps,
+                v_th: info.v_th,
+                device: PYNQ_Z1,
+            }),
         },
     );
 
@@ -62,7 +63,7 @@ fn main() -> Result<()> {
     let mut energy = 0.0;
     for (i, rx) in rxs {
         let r = rx.recv()?;
-        correct += (r.predicted == eval.labels[i % eval.len()]) as usize;
+        correct += (r.predicted == Some(eval.labels[i % eval.len()])) as usize;
         svc.add(r.service_time.as_secs_f64() * 1e3);
         accel_lat.add(r.accel_latency_s * 1e3);
         energy += r.accel_energy_j;

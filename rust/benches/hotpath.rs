@@ -1,6 +1,10 @@
 //! `cargo bench --bench hotpath` — micro-benchmarks of the simulator's
 //! hot paths (the §Perf targets in EXPERIMENTS.md):
 //!
+//! * gateway routing throughput: `Router::decide` over the full
+//!   MNIST + CIFAR design tables (decisions/s), and an end-to-end
+//!   gateway serving run on the synthetic substrate (requests/s) —
+//!   artifact-free, so these run everywhere
 //! * functional m-TTFS event engine (spike-events/s), fresh-allocation
 //!   vs reusable-scratch variants
 //! * cycle-model event walk (`trace`) and per-device costing (`cost`)
@@ -9,6 +13,8 @@
 //! * dense conv2d golden model
 //! * PJRT artifact execution (the serving path)
 
+use spikebench::coordinator::gateway::{Gateway, GatewayConfig, Router, Slo};
+use spikebench::coordinator::loadgen::{self, LoadgenConfig, Scenario};
 use spikebench::experiments::ctx::Ctx;
 use spikebench::fpga::device::{PYNQ_Z1, ZCU102};
 use spikebench::nn::loader::{load_network, WeightKind};
@@ -17,11 +23,47 @@ use spikebench::snn::accelerator::SnnAccelerator;
 use spikebench::snn::config::by_name;
 use spikebench::util::bench::Bench;
 
+/// Routing benches run on the synthetic substrate — no artifacts needed.
+fn bench_routing(bench: &Bench) {
+    let (specs, pools) =
+        loadgen::synthetic_specs(&["mnist", "cifar"], PYNQ_Z1, 1, 42).unwrap();
+    let router = Router::new(&specs);
+    let slo = Slo::latency(0.05);
+    const DECISIONS: u64 = 1_000;
+    bench.run_throughput("router decide (mnist, full table)", DECISIONS, || {
+        for _ in 0..DECISIONS {
+            router.decide("mnist", &slo).unwrap();
+        }
+    });
+    bench.run_throughput("router decide (cifar, full table)", DECISIONS, || {
+        for _ in 0..DECISIONS {
+            router.decide("cifar", &slo).unwrap();
+        }
+    });
+
+    // End-to-end: 32 requests through a sharded gateway per sample.
+    let gateway = Gateway::start(specs, &GatewayConfig::default()).unwrap();
+    let cfg = LoadgenConfig {
+        scenario: Scenario::Mixed,
+        requests: 32,
+        seed: 42,
+        slo,
+        gap: std::time::Duration::ZERO,
+    };
+    bench.run_throughput("gateway serve (mixed, 32 req)", 32, || {
+        loadgen::run(&gateway, &cfg, &pools).unwrap()
+    });
+    gateway.shutdown();
+}
+
 fn main() {
+    let bench0 = Bench::new("hotpath").warmup(1).samples(4);
+    bench_routing(&bench0);
+
     let mut ctx = match Ctx::load() {
         Ok(c) => c,
         Err(e) => {
-            println!("hotpath: SKIP (artifacts not built: {e})");
+            println!("hotpath: artifact benches SKIPPED (artifacts not built: {e})");
             return;
         }
     };

@@ -166,6 +166,7 @@ impl CnnPipeline {
 mod tests {
     use super::*;
     use crate::nn::arch::{parse_arch, ARCH_MNIST};
+    use crate::util::quickcheck::check_default;
 
     fn mnist_pipeline(f: &[Folding]) -> CnnPipeline {
         let arch = parse_arch(ARCH_MNIST).unwrap();
@@ -217,5 +218,102 @@ mod tests {
     fn mac_unit_total() {
         let p = mnist_pipeline(&[fold(4, 9), fold(8, 9), fold(10, 9), fold(10, 9)]);
         assert_eq!(p.total_mac_units(), (4 * 9 + 8 * 9 + 10 * 9 + 10 * 9) as u64);
+    }
+
+    fn random_foldings(r: &mut crate::util::rng::Rng, n: usize) -> Vec<Folding> {
+        (0..n)
+            .map(|_| fold(1 + r.below(40) as u32, 1 + r.below(40) as u32))
+            .collect()
+    }
+
+    /// Property: `bottleneck()` is the arg-max initiation-interval layer —
+    /// its cycle count equals the maximum over all layers and equals the
+    /// pipeline II, for arbitrary (clamped) foldings and input sizes.
+    #[test]
+    fn bottleneck_is_argmax_initiation_interval_layer() {
+        check_default("bottleneck == argmax II", |r| {
+            let arch = parse_arch(ARCH_MNIST).unwrap();
+            let side = 12 + r.below(24);
+            let p = CnnPipeline::new(&arch, (1, side, side), &random_foldings(r, 4));
+            let run = p.run();
+            let max_cycles = p.layers.iter().map(|l| l.cycles).max().unwrap();
+            if p.bottleneck().cycles != max_cycles {
+                return Err("bottleneck() is not the slowest layer".into());
+            }
+            if run.ii_cycles != max_cycles {
+                return Err(format!(
+                    "II {} != slowest layer {}",
+                    run.ii_cycles, max_cycles
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: latency is monotone in the input shape (a larger feature
+    /// map can never finish earlier at fixed foldings) and independent of
+    /// input *values* (the schedule takes no input at all — re-running is
+    /// bit-identical).
+    #[test]
+    fn latency_is_shape_monotone_and_value_independent() {
+        check_default("latency shape-monotone", |r| {
+            let arch = parse_arch(ARCH_MNIST).unwrap();
+            let foldings = random_foldings(r, 4);
+            let h = 12 + r.below(20);
+            let w = 12 + r.below(20);
+            let (dh, dw) = (r.below(8), r.below(8));
+            let small = CnnPipeline::new(&arch, (1, h, w), &foldings).run();
+            let large = CnnPipeline::new(&arch, (1, h + dh, w + dw), &foldings).run();
+            if large.latency_cycles < small.latency_cycles {
+                return Err(format!(
+                    "({h},{w})->{} but ({},{})->{}",
+                    small.latency_cycles,
+                    h + dh,
+                    w + dw,
+                    large.latency_cycles
+                ));
+            }
+            if large.ii_cycles < small.ii_cycles {
+                return Err("II shrank with a larger input".into());
+            }
+            // Value independence: the schedule is a pure function of the
+            // shape — two runs are identical.
+            let again = CnnPipeline::new(&arch, (1, h, w), &foldings).run();
+            if again.latency_cycles != small.latency_cycles || again.duty != small.duty {
+                return Err("re-run diverged: latency depends on something else".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Per-layer duty `cycles_l / II` lies in (0, 1] for every published
+    /// design × its dataset's architecture string, and so does the mean
+    /// duty that feeds the power model.
+    #[test]
+    fn per_layer_duty_in_unit_interval_for_all_designs() {
+        use crate::cnn_accel::config::all_designs;
+        use crate::nn::arch::{ARCH_CIFAR, ARCH_SVHN};
+        for d in all_designs() {
+            let (arch_s, shape) = match d.dataset {
+                "mnist" => (ARCH_MNIST, (1, 28, 28)),
+                "svhn" => (ARCH_SVHN, (3, 32, 32)),
+                "cifar" => (ARCH_CIFAR, (3, 32, 32)),
+                other => panic!("unknown dataset {other}"),
+            };
+            let arch = parse_arch(arch_s).unwrap();
+            let p = d.pipeline(&arch, shape);
+            let run = p.run();
+            assert!(run.duty > 0.0 && run.duty <= 1.0, "{}: duty {}", d.name, run.duty);
+            for l in &p.layers {
+                assert!(l.cycles > 0, "{}/{}: zero-cycle layer", d.name, l.name);
+                let duty = l.cycles as f64 / run.ii_cycles as f64;
+                assert!(
+                    duty > 0.0 && duty <= 1.0,
+                    "{}/{}: per-layer duty {duty}",
+                    d.name,
+                    l.name
+                );
+            }
+        }
     }
 }

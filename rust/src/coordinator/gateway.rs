@@ -1,0 +1,855 @@
+//! Energy-aware multi-design serving gateway: sharded executors + a
+//! per-request cost router.
+//!
+//! The paper's central result is that the SNN-vs-CNN efficiency winner
+//! *flips with workload complexity* (MNIST favors the FINN dataflow CNNs,
+//! SVHN/CIFAR-10 favor the sparse SNN designs), so a deployment that
+//! hard-wires one design leaves latency and energy on the table.  The
+//! [`Gateway`] makes the design choice a **per-request routing decision**:
+//!
+//! * it owns a fleet of executor shards — K [`Server`]s per design,
+//!   spanning any mix of [`SnnDesign`]s, [`CnnDesign`]s and [`Device`]s —
+//!   each shard being the existing batching executor from [`super::serve`];
+//! * a [`Router`] prices each candidate design through the existing
+//!   two-stage cost model — an SNN design by costing its cached
+//!   device-independent [`CostTrace`] ([`SnnAccelerator::cost`], a few
+//!   multiplications; re-priceable on any device via
+//!   [`Router::reprice_on`]), a CNN design from the input-independent
+//!   [`cnn_metrics`] schedule — so a routing decision is a scan of the
+//!   priced table;
+//! * the cheapest design (energy, then latency) meeting the request's
+//!   [`Slo`] wins; if none meets it, the router falls back to the fastest
+//!   design for the dataset and records an SLO miss;
+//! * dispatch goes to the **least-loaded shard** of the chosen design
+//!   (per-shard queue-depth tracking via in-flight counters; ties break to
+//!   the lowest shard index, so routing is deterministic under a
+//!   deterministic load pattern).
+//!
+//! Designs whose synthesized resources do not fit the target device are
+//! rejected at gateway construction (e.g. `SNN16_CIFAR` on the PYNQ-Z1 —
+//! the paper's Table 9 footnote) and reported via [`Gateway::rejected`].
+//!
+//! [`Gateway::shutdown`] returns [`GatewayStats`]: per-shard
+//! [`ServerStats`] plus per-design and whole-gateway aggregates that
+//! reconcile *exactly* with the shard numbers (tested in
+//! `tests/gateway.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::cnn_accel::config::CnnDesign;
+use crate::fpga::device::Device;
+use crate::nn::arch::parse_arch;
+use crate::nn::network::Network;
+use crate::nn::snn::snn_infer;
+use crate::nn::tensor::Tensor3;
+use crate::snn::accelerator::{CostTrace, SnnAccelerator};
+use crate::snn::config::SnnDesign;
+
+use super::serve::{
+    InferenceBackend, NetworkBackend, Response, ServeConfig, Server, ServerStats, SnnCostConfig,
+};
+use super::sweep::cnn_metrics;
+
+/// Per-request service-level objective.
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    /// Maximum acceptable simulated accelerator latency (seconds).
+    pub max_latency_s: f64,
+    /// Optional per-classification energy budget (Joules).
+    pub max_energy_j: Option<f64>,
+}
+
+impl Slo {
+    /// Latency-only SLO.
+    pub fn latency(max_latency_s: f64) -> Slo {
+        Slo { max_latency_s, max_energy_j: None }
+    }
+}
+
+/// One gateway request: an input, the dataset it belongs to, and its SLO.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Dataset the input belongs to (routing only considers designs whose
+    /// `dataset` matches).
+    pub dataset: String,
+    /// The image to classify.
+    pub x: Tensor3,
+    /// The request's service-level objective.
+    pub slo: Slo,
+}
+
+/// Which accelerator design an executor entry simulates, plus what the
+/// router needs to price it.
+pub enum DesignKind {
+    /// Sparse SNN accelerator design: priced by tracing a representative
+    /// input once ([`SnnAccelerator::trace`]) and costing the cached
+    /// [`CostTrace`] on the entry's device (re-priceable on any device
+    /// via [`Router::reprice_on`]).
+    Snn {
+        /// The design point.
+        design: SnnDesign,
+        /// Algorithmic time steps T of the cost simulation.
+        t_steps: usize,
+        /// Firing threshold of the cost simulation.
+        v_th: f32,
+        /// Representative input the warm-up trace is computed on.
+        representative: Tensor3,
+    },
+    /// FINN dataflow CNN design: priced by the input-independent
+    /// [`cnn_metrics`] schedule.
+    Cnn {
+        /// The design point.
+        design: CnnDesign,
+        /// Architecture string of the network the design is folded for.
+        arch: String,
+        /// Input shape (C, H, W) of that network.
+        input_shape: (usize, usize, usize),
+    },
+}
+
+/// One executor entry: a design, the device it runs on, how many shards to
+/// spawn, and the functional network those shards serve.
+pub struct ExecutorSpec {
+    /// Dataset this entry serves (routing key).
+    pub dataset: String,
+    /// Target device the design is priced for and simulated on.
+    pub device: Device,
+    /// Number of executor shards ([`Server`]s) to spawn.
+    pub shards: usize,
+    /// Functional network the shards execute (also backs the SNN cost
+    /// simulation for SNN designs).
+    pub net: Network,
+    /// The design and its pricing inputs.
+    pub design: DesignKind,
+}
+
+impl ExecutorSpec {
+    /// Design name (the routing table key).
+    pub fn name(&self) -> &str {
+        match &self.design {
+            DesignKind::Snn { design, .. } => design.name,
+            DesignKind::Cnn { design, .. } => design.name,
+        }
+    }
+}
+
+/// Gateway-wide executor configuration (applied to every shard).
+pub struct GatewayConfig {
+    /// Max requests folded into one shard batch.
+    pub max_batch: usize,
+    /// How long a shard's batcher waits to fill a batch.
+    pub batch_timeout: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig { max_batch: 8, batch_timeout: Duration::from_millis(2) }
+    }
+}
+
+/// Public snapshot of one routed design's price (for reports and tests).
+#[derive(Debug, Clone)]
+pub struct PricedDesign {
+    /// Design name.
+    pub name: String,
+    /// Dataset the design serves.
+    pub dataset: String,
+    /// Device the design is priced on.
+    pub device_name: String,
+    /// Whether the design is an SNN (false = CNN dataflow design).
+    pub is_snn: bool,
+    /// Simulated per-classification latency (seconds).
+    pub latency_s: f64,
+    /// Simulated per-classification energy (Joules).
+    pub energy_j: f64,
+}
+
+/// What an entry retains for device re-pricing ([`Router::reprice_on`]).
+enum Pricing {
+    /// SNN: the cached device-independent trace plus what is needed to
+    /// rebuild the accelerator that prices it.
+    Snn { design: SnnDesign, net: Network, t_steps: usize, v_th: f32, trace: CostTrace },
+    /// CNN: the schedule numbers live in `PricedDesign`; nothing to
+    /// re-price per device.
+    Cnn,
+}
+
+struct RoutedDesign {
+    priced: PricedDesign,
+    pricing: Pricing,
+}
+
+/// A routing decision: which design serves the request and at what priced
+/// cost, plus whether the SLO had to be missed.
+#[derive(Debug, Clone, Copy)]
+pub struct Decision {
+    /// Index into the router's design table (= the gateway's entry index).
+    pub design: usize,
+    /// Priced latency of the chosen design (seconds).
+    pub latency_s: f64,
+    /// Priced energy of the chosen design (Joules).
+    pub energy_j: f64,
+    /// True when no design met the SLO and the router fell back to the
+    /// fastest design for the dataset.
+    pub slo_miss: bool,
+}
+
+/// The pricing + selection half of the gateway, usable standalone (the
+/// golden routing tests drive it without spawning any executor).
+pub struct Router {
+    designs: Vec<RoutedDesign>,
+    /// (design name, reason) for specs rejected at construction.
+    rejected: Vec<(String, String)>,
+    /// Indices into the original spec list that were accepted, aligned
+    /// with `designs`.
+    accepted: Vec<usize>,
+}
+
+impl Router {
+    /// Price every spec and build the routing table.  Designs whose
+    /// resources do not fit their device are rejected (reported via
+    /// [`Router::rejected`]), mirroring the paper's fit footnotes.
+    pub fn new(specs: &[ExecutorSpec]) -> Router {
+        let mut designs = Vec::new();
+        let mut rejected = Vec::new();
+        let mut accepted = Vec::new();
+        for (i, spec) in specs.iter().enumerate() {
+            match Self::price_spec(spec) {
+                Ok(rd) => {
+                    designs.push(rd);
+                    accepted.push(i);
+                }
+                Err(reason) => rejected.push((spec.name().to_string(), reason)),
+            }
+        }
+        Router { designs, rejected, accepted }
+    }
+
+    fn price_spec(spec: &ExecutorSpec) -> std::result::Result<RoutedDesign, String> {
+        match &spec.design {
+            DesignKind::Snn { design, t_steps, v_th, representative } => {
+                design
+                    .resources_on(&spec.device)
+                    .check_fits(&spec.device)
+                    .map_err(|e| e.to_string())?;
+                let acc = SnnAccelerator::new(design, &spec.net, *t_steps, *v_th);
+                let functional = snn_infer(&spec.net, representative, *t_steps, *v_th);
+                let trace = acc.trace(&functional);
+                let r = acc.cost(&trace, &spec.device);
+                Ok(RoutedDesign {
+                    priced: PricedDesign {
+                        name: design.name.to_string(),
+                        dataset: spec.dataset.clone(),
+                        device_name: spec.device.name.to_string(),
+                        is_snn: true,
+                        latency_s: r.latency_s,
+                        energy_j: r.energy_j,
+                    },
+                    pricing: Pricing::Snn {
+                        design: design.clone(),
+                        net: spec.net.clone(),
+                        t_steps: *t_steps,
+                        v_th: *v_th,
+                        trace,
+                    },
+                })
+            }
+            DesignKind::Cnn { design, arch, input_shape } => {
+                design
+                    .resources()
+                    .check_fits(&spec.device)
+                    .map_err(|e| e.to_string())?;
+                parse_arch(arch).map_err(|e| e.to_string())?;
+                let m = cnn_metrics(design, *input_shape, arch, &spec.device);
+                Ok(RoutedDesign {
+                    priced: PricedDesign {
+                        name: design.name.to_string(),
+                        dataset: spec.dataset.clone(),
+                        device_name: spec.device.name.to_string(),
+                        is_snn: false,
+                        latency_s: m.latency_s,
+                        energy_j: m.energy_j,
+                    },
+                    pricing: Pricing::Cnn,
+                })
+            }
+        }
+    }
+
+    /// Price of design `idx` on its own device: (latency_s, energy_j).
+    ///
+    /// Computed once at construction — for an SNN entry by pricing its
+    /// cached device-independent trace, for a CNN entry from the static
+    /// schedule — and constant thereafter (same trace, same device ⇒ same
+    /// numbers), so a routing decision is a table scan, not a re-run of
+    /// the cost model.  [`Router::reprice_on`] performs the literal
+    /// two-stage `cost` step for an arbitrary device.
+    pub fn price(&self, idx: usize) -> (f64, f64) {
+        let p = &self.designs[idx].priced;
+        (p.latency_s, p.energy_j)
+    }
+
+    /// Re-price design `idx` on an arbitrary device via the two-stage
+    /// model: the cached [`CostTrace`] is costed on `device`
+    /// ([`SnnAccelerator::cost`], a few multiplications — no new event
+    /// walk).  Returns `None` for CNN entries, whose schedule numbers are
+    /// tied to the device they were folded for.  On the entry's own
+    /// device this reproduces [`Router::price`] exactly.
+    pub fn reprice_on(&self, idx: usize, device: &Device) -> Option<(f64, f64)> {
+        match &self.designs[idx].pricing {
+            Pricing::Snn { design, net, t_steps, v_th, trace } => {
+                let acc = SnnAccelerator::new(design, net, *t_steps, *v_th);
+                let r = acc.cost(trace, device);
+                Some((r.latency_s, r.energy_j))
+            }
+            Pricing::Cnn => None,
+        }
+    }
+
+    /// Pick the cheapest design (energy, ties broken by latency, then by
+    /// table order) serving `dataset` that meets `slo`.  When none meets
+    /// it, fall back to the fastest design for the dataset with
+    /// `slo_miss = true`.  Errors only when no design serves the dataset.
+    pub fn decide(&self, dataset: &str, slo: &Slo) -> Result<Decision> {
+        let mut best: Option<(usize, f64, f64)> = None; // (idx, energy, lat)
+        let mut fastest: Option<(usize, f64, f64)> = None; // (idx, lat, energy)
+        for (i, d) in self.designs.iter().enumerate() {
+            if d.priced.dataset != dataset {
+                continue;
+            }
+            let (lat, energy) = self.price(i);
+            if fastest.map_or(true, |(_, fl, _)| lat < fl) {
+                fastest = Some((i, lat, energy));
+            }
+            let meets = lat <= slo.max_latency_s
+                && slo.max_energy_j.map_or(true, |budget| energy <= budget);
+            if meets
+                && best
+                    .map_or(true, |(_, be, bl)| energy < be || (energy == be && lat < bl))
+            {
+                best = Some((i, energy, lat));
+            }
+        }
+        match (best, fastest) {
+            (Some((i, energy, lat)), _) => {
+                Ok(Decision { design: i, latency_s: lat, energy_j: energy, slo_miss: false })
+            }
+            (None, Some((i, lat, energy))) => {
+                Ok(Decision { design: i, latency_s: lat, energy_j: energy, slo_miss: true })
+            }
+            (None, None) => Err(anyhow!("no design serves dataset {dataset:?}")),
+        }
+    }
+
+    /// Least-loaded index (ties break to the lowest index).  Routing's
+    /// shard-selection rule, exposed for direct testing.
+    pub fn least_loaded(loads: &[usize]) -> usize {
+        let mut best = 0;
+        for (i, &l) in loads.iter().enumerate() {
+            if l < loads[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Priced snapshot of the routing table, in entry order.
+    pub fn table(&self) -> Vec<PricedDesign> {
+        self.designs.iter().map(|d| d.priced.clone()).collect()
+    }
+
+    /// Specs rejected at construction: (design name, reason).
+    pub fn rejected(&self) -> &[(String, String)] {
+        &self.rejected
+    }
+}
+
+struct Shard {
+    server: Server,
+    in_flight: Arc<AtomicUsize>,
+    dispatched: AtomicUsize,
+}
+
+struct Entry {
+    name: String,
+    dataset: String,
+    device_name: String,
+    shards: Vec<Shard>,
+    slo_misses: AtomicUsize,
+}
+
+/// A pending gateway response.  `recv` (or drop) releases the shard's
+/// queue-depth slot, so in-flight counters stay exact.
+pub struct Ticket {
+    rx: mpsc::Receiver<Response>,
+    /// Name of the design the request was routed to.
+    pub design: String,
+    /// Index of the chosen design in the router table.
+    pub design_index: usize,
+    /// Shard of that design the request was dispatched to.
+    pub shard: usize,
+    /// Whether the SLO was missed (fastest-design fallback taken).
+    pub slo_miss: bool,
+    /// Priced latency of the routing decision (seconds).
+    pub routed_latency_s: f64,
+    /// Priced energy of the routing decision (Joules).
+    pub routed_energy_j: f64,
+    in_flight: Arc<AtomicUsize>,
+    done: bool,
+}
+
+impl Ticket {
+    /// Wait for the shard's response.
+    pub fn recv(mut self) -> Result<GatewayResponse> {
+        let response =
+            self.rx.recv().map_err(|_| anyhow!("shard executor dropped the reply"))?;
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        self.done = true;
+        Ok(GatewayResponse {
+            design: std::mem::take(&mut self.design),
+            shard: self.shard,
+            slo_miss: self.slo_miss,
+            routed_latency_s: self.routed_latency_s,
+            routed_energy_j: self.routed_energy_j,
+            response,
+        })
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        if !self.done {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// One served gateway response: the shard's [`Response`] plus the routing
+/// decision that produced it.
+#[derive(Debug, Clone)]
+pub struct GatewayResponse {
+    /// Design the request was served by.
+    pub design: String,
+    /// Shard of that design.
+    pub shard: usize,
+    /// Whether the SLO was missed (fastest-design fallback).
+    pub slo_miss: bool,
+    /// Priced latency of the routing decision (seconds).
+    pub routed_latency_s: f64,
+    /// Priced energy of the routing decision (Joules).
+    pub routed_energy_j: f64,
+    /// The shard's response (functional result + amortized cost estimate).
+    pub response: Response,
+}
+
+/// Per-shard statistics at shutdown.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    /// Design the shard belonged to.
+    pub design: String,
+    /// Shard index within the design.
+    pub shard: usize,
+    /// Requests this shard was dispatched (== its server's `served` once
+    /// all tickets are drained).
+    pub dispatched: usize,
+    /// The shard server's own statistics.
+    pub stats: ServerStats,
+}
+
+/// Per-design aggregates (sums over the design's shards plus routing
+/// counters).
+#[derive(Debug, Clone)]
+pub struct DesignStats {
+    /// Design name.
+    pub name: String,
+    /// Dataset the design served.
+    pub dataset: String,
+    /// Device the design was priced on.
+    pub device_name: String,
+    /// Requests routed to this design.
+    pub routed: usize,
+    /// Requests that reached this design via SLO-miss fallback.
+    pub slo_misses: usize,
+    /// Responses sent by the design's shards.
+    pub served: usize,
+    /// Failed responses across the design's shards.
+    pub failed: usize,
+    /// Executor batches formed across the design's shards.
+    pub batches: usize,
+    /// Backend invocations across the design's shards.
+    pub backend_calls: usize,
+    /// Cycle-model cost estimates across the design's shards.
+    pub cost_estimates: usize,
+    /// Total routed energy: routed × the design's priced per-request
+    /// energy (deterministic — re-pricing a cached trace on a fixed
+    /// device always returns the same number).
+    pub routed_energy_j: f64,
+}
+
+/// Aggregated gateway statistics: shard-level, design-level, and totals.
+/// The totals are exact sums of the per-shard [`ServerStats`].
+#[derive(Debug, Clone, Default)]
+pub struct GatewayStats {
+    /// Every shard's statistics.
+    pub shards: Vec<ShardStats>,
+    /// Per-design aggregates, in routing-table order.
+    pub designs: Vec<DesignStats>,
+    /// Total responses sent.
+    pub served: usize,
+    /// Total failed responses.
+    pub failed: usize,
+    /// Total executor batches.
+    pub batches: usize,
+    /// Total backend invocations.
+    pub backend_calls: usize,
+    /// Total requests routed.
+    pub routed: usize,
+    /// Total SLO misses.
+    pub slo_misses: usize,
+    /// Total routed energy (J).
+    pub routed_energy_j: f64,
+}
+
+/// The gateway: a router plus the executor shard fleet it dispatches to.
+pub struct Gateway {
+    router: Router,
+    entries: Vec<Entry>,
+}
+
+impl Gateway {
+    /// Start with the default backend per shard: a [`NetworkBackend`] over
+    /// a clone of the spec's functional network.
+    pub fn start(specs: Vec<ExecutorSpec>, cfg: &GatewayConfig) -> Result<Gateway> {
+        Gateway::start_with(specs, cfg, |spec, _shard| {
+            Box::new(NetworkBackend { net: spec.net.clone() }) as Box<dyn InferenceBackend>
+        })
+    }
+
+    /// Start with a custom backend factory, called once per (spec, shard).
+    pub fn start_with(
+        specs: Vec<ExecutorSpec>,
+        cfg: &GatewayConfig,
+        mut make_backend: impl FnMut(&ExecutorSpec, usize) -> Box<dyn InferenceBackend>,
+    ) -> Result<Gateway> {
+        let router = Router::new(&specs);
+        if router.designs.is_empty() {
+            return Err(anyhow!(
+                "no design fits its device: {:?}",
+                router.rejected
+            ));
+        }
+        let mut entries = Vec::with_capacity(router.accepted.len());
+        for &spec_idx in &router.accepted {
+            let spec = &specs[spec_idx];
+            let shards = spec.shards.max(1);
+            let mut shard_vec = Vec::with_capacity(shards);
+            for shard in 0..shards {
+                let backend = make_backend(spec, shard);
+                let cost = match &spec.design {
+                    DesignKind::Snn { design, t_steps, v_th, .. } => Some(SnnCostConfig {
+                        design: design.clone(),
+                        net: spec.net.clone(),
+                        t_steps: *t_steps,
+                        v_th: *v_th,
+                        device: spec.device,
+                    }),
+                    DesignKind::Cnn { .. } => None,
+                };
+                let server = Server::start(
+                    backend,
+                    ServeConfig {
+                        max_batch: cfg.max_batch,
+                        batch_timeout: cfg.batch_timeout,
+                        cost,
+                    },
+                );
+                shard_vec.push(Shard {
+                    server,
+                    in_flight: Arc::new(AtomicUsize::new(0)),
+                    dispatched: AtomicUsize::new(0),
+                });
+            }
+            entries.push(Entry {
+                name: spec.name().to_string(),
+                dataset: spec.dataset.clone(),
+                device_name: spec.device.name.to_string(),
+                shards: shard_vec,
+                slo_misses: AtomicUsize::new(0),
+            });
+        }
+        Ok(Gateway { router, entries })
+    }
+
+    /// The routing half (priced table, rejections, direct decisions).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Specs rejected at construction (design did not fit its device).
+    pub fn rejected(&self) -> &[(String, String)] {
+        self.router.rejected()
+    }
+
+    /// Route a request and dispatch it to the least-loaded shard of the
+    /// chosen design.  Returns a [`Ticket`] for the pending response.
+    pub fn submit(&self, req: Request) -> Result<Ticket> {
+        let decision = self.router.decide(&req.dataset, &req.slo)?;
+        let entry = &self.entries[decision.design];
+        let loads: Vec<usize> =
+            entry.shards.iter().map(|s| s.in_flight.load(Ordering::SeqCst)).collect();
+        let shard_idx = Router::least_loaded(&loads);
+        let shard = &entry.shards[shard_idx];
+        shard.in_flight.fetch_add(1, Ordering::SeqCst);
+        shard.dispatched.fetch_add(1, Ordering::SeqCst);
+        let rx = match shard.server.classify_async(req.x) {
+            Ok(rx) => rx,
+            Err(e) => {
+                // Undo both counters: the request was never enqueued, so
+                // it must not appear in queue depth or routed totals.
+                shard.in_flight.fetch_sub(1, Ordering::SeqCst);
+                shard.dispatched.fetch_sub(1, Ordering::SeqCst);
+                return Err(e);
+            }
+        };
+        if decision.slo_miss {
+            entry.slo_misses.fetch_add(1, Ordering::SeqCst);
+        }
+        Ok(Ticket {
+            rx,
+            design: entry.name.clone(),
+            design_index: decision.design,
+            shard: shard_idx,
+            slo_miss: decision.slo_miss,
+            routed_latency_s: decision.latency_s,
+            routed_energy_j: decision.energy_j,
+            in_flight: shard.in_flight.clone(),
+            done: false,
+        })
+    }
+
+    /// Submit and wait for the response.
+    pub fn classify(&self, req: Request) -> Result<GatewayResponse> {
+        self.submit(req)?.recv()
+    }
+
+    /// Stop every shard and aggregate statistics.
+    pub fn shutdown(self) -> GatewayStats {
+        let Gateway { router, entries } = self;
+        let mut out = GatewayStats::default();
+        for (idx, entry) in entries.into_iter().enumerate() {
+            let (_, priced_energy) = router.price(idx);
+            let mut ds = DesignStats {
+                name: entry.name.clone(),
+                dataset: entry.dataset,
+                device_name: entry.device_name,
+                routed: 0,
+                slo_misses: entry.slo_misses.load(Ordering::SeqCst),
+                served: 0,
+                failed: 0,
+                batches: 0,
+                backend_calls: 0,
+                cost_estimates: 0,
+                routed_energy_j: 0.0,
+            };
+            for (shard_idx, shard) in entry.shards.into_iter().enumerate() {
+                let dispatched = shard.dispatched.load(Ordering::SeqCst);
+                let stats = shard.server.shutdown();
+                ds.routed += dispatched;
+                ds.served += stats.served;
+                ds.failed += stats.failed;
+                ds.batches += stats.batches;
+                ds.backend_calls += stats.backend_calls;
+                ds.cost_estimates += stats.cost_estimates;
+                out.shards.push(ShardStats {
+                    design: entry.name.clone(),
+                    shard: shard_idx,
+                    dispatched,
+                    stats,
+                });
+            }
+            ds.routed_energy_j = ds.routed as f64 * priced_energy;
+            out.served += ds.served;
+            out.failed += ds.failed;
+            out.batches += ds.batches;
+            out.backend_calls += ds.backend_calls;
+            out.routed += ds.routed;
+            out.slo_misses += ds.slo_misses;
+            out.routed_energy_j += ds.routed_energy_j;
+            out.designs.push(ds);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::PYNQ_Z1;
+    use crate::fpga::resources::{MemoryVariant, SnnDesignParams};
+    use crate::nn::conv::ConvWeights;
+    use crate::nn::dense::DenseWeights;
+    use crate::nn::network::LayerWeights;
+
+    fn tiny_net() -> Network {
+        let arch = parse_arch("2C3-2").unwrap();
+        Network {
+            arch,
+            layers: vec![
+                LayerWeights::Conv(ConvWeights::new(2, 1, 3, vec![0.25; 18], vec![0.0; 2])),
+                LayerWeights::Dense(DenseWeights::new(2, 18, vec![0.1; 36], vec![0.0, 0.5])),
+            ],
+            input_shape: (1, 3, 3),
+        }
+    }
+
+    fn snn_design(name: &'static str, p: u32) -> SnnDesign {
+        SnnDesign {
+            name,
+            dataset: "tiny",
+            params: SnnDesignParams {
+                p,
+                d_aeq: 64,
+                w_mem: 8,
+                kernel: 3,
+                d_mem: 256,
+                variant: MemoryVariant::Bram,
+            },
+            published: None,
+            published_zcu102: None,
+        }
+    }
+
+    fn spec(name: &'static str, p: u32, shards: usize) -> ExecutorSpec {
+        ExecutorSpec {
+            dataset: "tiny".to_string(),
+            device: PYNQ_Z1,
+            shards,
+            net: tiny_net(),
+            design: DesignKind::Snn {
+                design: snn_design(name, p),
+                t_steps: 4,
+                v_th: 1.0,
+                representative: Tensor3::from_vec(1, 3, 3, vec![0.9; 9]),
+            },
+        }
+    }
+
+    #[test]
+    fn router_prefers_cheapest_meeting_slo() {
+        // P=8 is faster and (same power family, shorter runtime) cheaper
+        // than P=1 on the same trace.
+        let router = Router::new(&[spec("tiny-p1", 1, 1), spec("tiny-p8", 8, 1)]);
+        let table = router.table();
+        assert_eq!(table.len(), 2);
+        assert!(table[1].latency_s < table[0].latency_s);
+        let d = router.decide("tiny", &Slo::latency(10.0)).unwrap();
+        assert!(!d.slo_miss);
+        let (_, e0) = router.price(0);
+        let (_, e1) = router.price(1);
+        assert_eq!(d.design, if e0 <= e1 { 0 } else { 1 });
+    }
+
+    #[test]
+    fn router_falls_back_to_fastest_on_slo_miss() {
+        let router = Router::new(&[spec("tiny-p1", 1, 1), spec("tiny-p8", 8, 1)]);
+        let d = router.decide("tiny", &Slo::latency(1e-12)).unwrap();
+        assert!(d.slo_miss);
+        assert_eq!(d.design, 1, "fallback must pick the fastest design");
+    }
+
+    #[test]
+    fn router_energy_budget_filters_designs() {
+        let router = Router::new(&[spec("tiny-p1", 1, 1), spec("tiny-p8", 8, 1)]);
+        let (_, e0) = router.price(0);
+        let (_, e1) = router.price(1);
+        let cheap = e0.min(e1);
+        // A budget below both energies: fallback (SLO miss semantics).
+        let d = router
+            .decide("tiny", &Slo { max_latency_s: 10.0, max_energy_j: Some(cheap * 0.5) })
+            .unwrap();
+        assert!(d.slo_miss);
+        // A budget admitting only the cheaper design.
+        let d = router
+            .decide("tiny", &Slo { max_latency_s: 10.0, max_energy_j: Some(cheap * 1.001) })
+            .unwrap();
+        assert!(!d.slo_miss);
+        assert_eq!(d.design, if e0 <= e1 { 0 } else { 1 });
+    }
+
+    #[test]
+    fn router_unknown_dataset_errors() {
+        let router = Router::new(&[spec("tiny-p1", 1, 1)]);
+        assert!(router.decide("nope", &Slo::latency(1.0)).is_err());
+    }
+
+    /// `reprice_on` on the entry's own device reproduces the table price
+    /// exactly; on a faster device the same trace re-prices to a
+    /// clock-scaled latency (the two-stage model's device step).
+    #[test]
+    fn reprice_on_reproduces_table_price_and_scales_with_clock() {
+        let router = Router::new(&[spec("tiny-p8", 8, 1)]);
+        let (lat, energy) = router.price(0);
+        let (rlat, renergy) = router.reprice_on(0, &PYNQ_Z1).unwrap();
+        assert_eq!(lat, rlat);
+        assert_eq!(energy, renergy);
+        let (zlat, _) = router.reprice_on(0, &crate::fpga::device::ZCU102).unwrap();
+        assert!((lat / zlat - 2.0).abs() < 1e-9, "latency must scale with the clock");
+    }
+
+    #[test]
+    fn least_loaded_breaks_ties_low() {
+        assert_eq!(Router::least_loaded(&[3, 0, 2]), 1);
+        assert_eq!(Router::least_loaded(&[1, 1, 1]), 0);
+        assert_eq!(Router::least_loaded(&[2, 1, 1]), 1);
+        assert_eq!(Router::least_loaded(&[0]), 0);
+    }
+
+    #[test]
+    fn unfit_design_is_rejected() {
+        let mut big = spec("tiny-huge", 4, 1);
+        if let DesignKind::Snn { design, .. } = &mut big.design {
+            // More BRAM than any board has.
+            design.published = Some(crate::fpga::resources::ResourceUsage {
+                luts: 1_000,
+                regs: 1_000,
+                brams: 100_000.0,
+                dsps: 0,
+            });
+        }
+        let router = Router::new(&[big, spec("tiny-p8", 8, 1)]);
+        assert_eq!(router.table().len(), 1);
+        assert_eq!(router.rejected().len(), 1);
+        assert_eq!(router.rejected()[0].0, "tiny-huge");
+    }
+
+    #[test]
+    fn gateway_serves_and_reconciles() {
+        let gw = Gateway::start(
+            vec![spec("tiny-p8", 8, 2)],
+            &GatewayConfig { max_batch: 2, batch_timeout: Duration::from_millis(2) },
+        )
+        .unwrap();
+        let req = || Request {
+            dataset: "tiny".to_string(),
+            x: Tensor3::from_vec(1, 3, 3, vec![0.8; 9]),
+            slo: Slo::latency(10.0),
+        };
+        for _ in 0..4 {
+            let r = gw.classify(req()).unwrap();
+            assert!(r.response.ok);
+            assert!(!r.slo_miss);
+            assert!(r.routed_latency_s > 0.0 && r.routed_energy_j > 0.0);
+        }
+        let stats = gw.shutdown();
+        assert_eq!(stats.served, 4);
+        assert_eq!(stats.routed, 4);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.slo_misses, 0);
+        let shard_served: usize = stats.shards.iter().map(|s| s.stats.served).sum();
+        assert_eq!(shard_served, stats.served);
+    }
+}

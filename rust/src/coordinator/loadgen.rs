@@ -1,0 +1,598 @@
+//! Deterministic load generator for the serving [`super::gateway`].
+//!
+//! Workloads are generated from a seed ([`crate::util::rng::Rng`]) so a
+//! scenario replays identically across runs and machines: the same
+//! arrival order, the same images, the same SLOs — and therefore the same
+//! routing decisions (the router's design choice depends only on the
+//! priced table, never on timing).  Four scenario presets:
+//!
+//! * [`Scenario::Steady`] — constant inter-arrival gap; the baseline.
+//! * [`Scenario::Bursty`] — bursts of back-to-back arrivals separated by
+//!   idle gaps; exercises batching and the per-shard queue depths.
+//! * [`Scenario::Ramp`] — the gap shrinks linearly to zero; exercises the
+//!   transition from single-request batches to full ones.
+//! * [`Scenario::Mixed`] — strict round-robin over every dataset pool
+//!   (MNIST + SVHN + CIFAR-10 interleaved); exercises per-request routing
+//!   across design families — the paper's crossover as live traffic.
+//!
+//! The module also provides the **synthetic model substrate** the `repro
+//! loadgen` subcommand and the serving benches run on: seeded random
+//! weights over the paper's Table 6 architectures, so the full gateway
+//! stack (pricing, routing, sharding, batching) runs without any
+//! artifacts directory.  Synthetic weights exercise the serving system,
+//! not model accuracy.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cnn_accel::config as cnn_config;
+use crate::fpga::device::Device;
+use crate::nn::arch::{parse_arch, LayerSpec, ARCH_CIFAR, ARCH_MNIST, ARCH_SVHN};
+use crate::nn::conv::ConvWeights;
+use crate::nn::dense::DenseWeights;
+use crate::nn::network::{LayerWeights, Network};
+use crate::nn::tensor::Tensor3;
+use crate::snn::config as snn_config;
+use crate::util::rng::Rng;
+use crate::util::stats::{percentile, Summary};
+
+use super::gateway::{DesignKind, ExecutorSpec, Gateway, Request, Slo, Ticket};
+
+/// Workload shape preset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// Constant inter-arrival gap.
+    Steady,
+    /// Bursts of back-to-back arrivals separated by idle gaps.
+    Bursty,
+    /// Inter-arrival gap ramps linearly down to zero.
+    Ramp,
+    /// Steady pacing, strict round-robin over every dataset pool.
+    Mixed,
+}
+
+impl Scenario {
+    /// Parse a scenario name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().as_str() {
+            "steady" => Some(Scenario::Steady),
+            "bursty" => Some(Scenario::Bursty),
+            "ramp" => Some(Scenario::Ramp),
+            "mixed" => Some(Scenario::Mixed),
+            _ => None,
+        }
+    }
+
+    /// Every preset, for `--help` text and sweeps.
+    pub fn all() -> [Scenario; 4] {
+        [Scenario::Steady, Scenario::Bursty, Scenario::Ramp, Scenario::Mixed]
+    }
+
+    /// Preset name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Bursty => "bursty",
+            Scenario::Ramp => "ramp",
+            Scenario::Mixed => "mixed",
+        }
+    }
+}
+
+/// A pool of inputs for one dataset.
+pub struct DatasetPool {
+    /// Dataset name (the gateway routing key).
+    pub name: String,
+    /// Images requests draw from.
+    pub images: Vec<Tensor3>,
+}
+
+/// Load-generator configuration.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Workload shape.
+    pub scenario: Scenario,
+    /// Number of requests to generate.
+    pub requests: usize,
+    /// Workload seed (image choice + any scenario randomness).
+    pub seed: u64,
+    /// SLO attached to every request.
+    pub slo: Slo,
+    /// Base inter-arrival gap (scenario presets scale around it).
+    pub gap: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            scenario: Scenario::Steady,
+            requests: 64,
+            seed: 42,
+            slo: Slo::latency(0.05),
+            gap: Duration::from_micros(200),
+        }
+    }
+}
+
+/// One generated arrival.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    /// Index into the pool list.
+    pub dataset: usize,
+    /// Index into that pool's images.
+    pub image: usize,
+    /// Delay before submitting this request.
+    pub delay: Duration,
+    /// The request's SLO.
+    pub slo: Slo,
+}
+
+/// A fully generated workload (replayable).
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Scenario the workload was generated for.
+    pub scenario: Scenario,
+    /// Arrivals in submission order.
+    pub arrivals: Vec<Arrival>,
+}
+
+/// Generate a deterministic workload over `pools` from `cfg.seed`.
+///
+/// Panics if `pools` is empty or any pool has no images.
+pub fn generate(cfg: &LoadgenConfig, pools: &[DatasetPool]) -> Workload {
+    assert!(!pools.is_empty(), "loadgen needs at least one dataset pool");
+    assert!(
+        pools.iter().all(|p| !p.images.is_empty()),
+        "every dataset pool needs at least one image"
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let base = cfg.gap;
+    let mut arrivals = Vec::with_capacity(cfg.requests);
+    for i in 0..cfg.requests {
+        let dataset = match cfg.scenario {
+            // Mixed interleaves strictly; the others draw a pool at
+            // random (seeded, so still deterministic).
+            Scenario::Mixed => i % pools.len(),
+            _ => rng.below(pools.len()),
+        };
+        let image = rng.below(pools[dataset].images.len());
+        let delay = match cfg.scenario {
+            Scenario::Steady | Scenario::Mixed => base,
+            Scenario::Bursty => {
+                // Bursts of 8 back-to-back, then one long gap.
+                if i % 8 == 0 {
+                    base * 8
+                } else {
+                    Duration::ZERO
+                }
+            }
+            Scenario::Ramp => {
+                // Gap ramps 2×base -> 0 over the run.
+                let remaining = (cfg.requests - i) as f64 / cfg.requests.max(1) as f64;
+                Duration::from_secs_f64(base.as_secs_f64() * 2.0 * remaining)
+            }
+        };
+        arrivals.push(Arrival { dataset, image, delay, slo: cfg.slo });
+    }
+    Workload { scenario: cfg.scenario, arrivals }
+}
+
+/// Report of one driven workload.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    /// Scenario that was driven.
+    pub scenario: Scenario,
+    /// (design name, slo_miss) per request, in submission order — the
+    /// routing trace the determinism tests compare.
+    pub decisions: Vec<(String, bool)>,
+    /// Responses received.
+    pub served: usize,
+    /// Failed responses.
+    pub failed: usize,
+    /// SLO misses (fastest-design fallbacks).
+    pub slo_misses: usize,
+    /// Wall-clock of the whole run.
+    pub wall: Duration,
+    /// Served requests per wall-clock second.
+    pub throughput_rps: f64,
+    /// Median in-process service time (ms).
+    pub p50_service_ms: f64,
+    /// 99th-percentile in-process service time (ms).
+    pub p99_service_ms: f64,
+    /// Mean simulated accelerator latency of routed designs (ms).
+    pub mean_routed_latency_ms: f64,
+    /// Total routed energy (J).
+    pub routed_energy_j: f64,
+}
+
+impl LoadgenReport {
+    /// Requests routed per design name, in first-seen order.
+    pub fn per_design(&self) -> Vec<(String, usize)> {
+        let mut out: Vec<(String, usize)> = Vec::new();
+        for (name, _) in &self.decisions {
+            match out.iter_mut().find(|(n, _)| n == name) {
+                Some((_, c)) => *c += 1,
+                None => out.push((name.clone(), 1)),
+            }
+        }
+        out
+    }
+
+    /// Human-readable summary (the `repro loadgen` output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "scenario {:<7} | {} served ({} failed, {} SLO misses) in {:.2?} ({:.0} req/s)\n",
+            self.scenario.name(),
+            self.served,
+            self.failed,
+            self.slo_misses,
+            self.wall,
+            self.throughput_rps,
+        ));
+        s.push_str(&format!(
+            "service time     : p50 {:.2} ms, p99 {:.2} ms\n",
+            self.p50_service_ms, self.p99_service_ms
+        ));
+        s.push_str(&format!(
+            "simulated accel  : mean routed latency {:.3} ms, total routed energy {:.3} mJ\n",
+            self.mean_routed_latency_ms,
+            self.routed_energy_j * 1e3
+        ));
+        for (name, count) in self.per_design() {
+            s.push_str(&format!("routed           : {name:<16} {count}\n"));
+        }
+        s
+    }
+}
+
+/// Drive a generated workload through the gateway and report.
+///
+/// Submission is paced by each arrival's delay; responses are drained in
+/// submission order after the last submit (so per-shard queue depths ramp
+/// up the way the scenario intends).  `pools` must be the slice the
+/// workload was generated from ([`generate`] validates them and draws
+/// every index in range); a mismatched slice panics on indexing.
+pub fn drive(
+    gateway: &Gateway,
+    workload: &Workload,
+    pools: &[DatasetPool],
+) -> Result<LoadgenReport> {
+    let t0 = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(workload.arrivals.len());
+    for a in &workload.arrivals {
+        if !a.delay.is_zero() {
+            std::thread::sleep(a.delay);
+        }
+        let pool = &pools[a.dataset];
+        tickets.push(gateway.submit(Request {
+            dataset: pool.name.clone(),
+            x: pool.images[a.image].clone(),
+            slo: a.slo,
+        })?);
+    }
+    let mut decisions = Vec::with_capacity(tickets.len());
+    let mut service = Vec::with_capacity(tickets.len());
+    let mut routed_latency = Summary::new();
+    let mut routed_energy = 0.0;
+    let (mut served, mut failed, mut slo_misses) = (0usize, 0usize, 0usize);
+    for t in tickets {
+        let r = t.recv()?;
+        decisions.push((r.design.clone(), r.slo_miss));
+        service.push(r.response.service_time.as_secs_f64() * 1e3);
+        routed_latency.add(r.routed_latency_s * 1e3);
+        routed_energy += r.routed_energy_j;
+        served += 1;
+        failed += (!r.response.ok) as usize;
+        slo_misses += r.slo_miss as usize;
+    }
+    let wall = t0.elapsed();
+    Ok(LoadgenReport {
+        scenario: workload.scenario,
+        decisions,
+        served,
+        failed,
+        slo_misses,
+        wall,
+        throughput_rps: served as f64 / wall.as_secs_f64().max(1e-9),
+        p50_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 50.0) },
+        p99_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 99.0) },
+        mean_routed_latency_ms: routed_latency.mean(),
+        routed_energy_j: routed_energy,
+    })
+}
+
+/// Generate and drive in one call.
+pub fn run(
+    gateway: &Gateway,
+    cfg: &LoadgenConfig,
+    pools: &[DatasetPool],
+) -> Result<LoadgenReport> {
+    drive(gateway, &generate(cfg, pools), pools)
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic substrate (artifact-free gateways for CLI, benches and tests).
+// ---------------------------------------------------------------------------
+
+/// Build a network over `arch_s` with seeded random weights.
+///
+/// Conv weights are drawn positive-leaning (|N(0,1)| × `scale`) so the
+/// m-TTFS simulation produces non-trivial spike activity; dense weights
+/// are centered.  Deterministic in (`arch_s`, `input_shape`, `seed`).
+pub fn synthetic_network(
+    arch_s: &str,
+    input_shape: (usize, usize, usize),
+    seed: u64,
+    scale: f32,
+) -> Network {
+    let arch = parse_arch(arch_s).expect("bad arch string");
+    let mut rng = Rng::new(seed);
+    let (mut c, mut h, mut w) = input_shape;
+    let mut flat: Option<usize> = None;
+    let mut layers = Vec::with_capacity(arch.len());
+    for spec in &arch {
+        match *spec {
+            LayerSpec::Conv { out_channels, kernel } => {
+                let n = out_channels * c * kernel * kernel;
+                let wts = (0..n).map(|_| rng.normal().abs() * scale).collect();
+                layers.push(LayerWeights::Conv(ConvWeights::new(
+                    out_channels,
+                    c,
+                    kernel,
+                    wts,
+                    vec![0.0; out_channels],
+                )));
+                c = out_channels;
+            }
+            LayerSpec::Pool { window } => {
+                layers.push(LayerWeights::Pool(window));
+                h /= window;
+                w /= window;
+            }
+            LayerSpec::Dense { units } => {
+                let f = flat.unwrap_or(c * h * w);
+                let wts = (0..units * f).map(|_| rng.normal() * scale * 0.25).collect();
+                layers.push(LayerWeights::Dense(DenseWeights::new(
+                    units,
+                    f,
+                    wts,
+                    vec![0.0; units],
+                )));
+                flat = Some(units);
+            }
+        }
+    }
+    Network { arch, layers, input_shape }
+}
+
+/// Build a network over `arch_s` with *constant* weights: every conv
+/// weight is `conv_w`, every dense weight is `dense_w`, all biases zero.
+///
+/// The fully deterministic sibling of [`synthetic_network`], used by the
+/// routing golden tests: positive `conv_w` under a bright input drives
+/// dense spiking (every neuron fires), while an all-zero input produces
+/// no spikes at all — which makes the SNN cycle model's output exactly
+/// computable by hand.
+pub fn constant_network(
+    arch_s: &str,
+    input_shape: (usize, usize, usize),
+    conv_w: f32,
+    dense_w: f32,
+) -> Network {
+    let arch = parse_arch(arch_s).expect("bad arch string");
+    let (mut c, mut h, mut w) = input_shape;
+    let mut flat: Option<usize> = None;
+    let mut layers = Vec::with_capacity(arch.len());
+    for spec in &arch {
+        match *spec {
+            LayerSpec::Conv { out_channels, kernel } => {
+                let n = out_channels * c * kernel * kernel;
+                layers.push(LayerWeights::Conv(ConvWeights::new(
+                    out_channels,
+                    c,
+                    kernel,
+                    vec![conv_w; n],
+                    vec![0.0; out_channels],
+                )));
+                c = out_channels;
+            }
+            LayerSpec::Pool { window } => {
+                layers.push(LayerWeights::Pool(window));
+                h /= window;
+                w /= window;
+            }
+            LayerSpec::Dense { units } => {
+                let f = flat.unwrap_or(c * h * w);
+                layers.push(LayerWeights::Dense(DenseWeights::new(
+                    units,
+                    f,
+                    vec![dense_w; units * f],
+                    vec![0.0; units],
+                )));
+                flat = Some(units);
+            }
+        }
+    }
+    Network { arch, layers, input_shape }
+}
+
+/// `n` seeded random images in [0, 1), shaped (C, H, W).
+pub fn synthetic_images(
+    input_shape: (usize, usize, usize),
+    n: usize,
+    seed: u64,
+) -> Vec<Tensor3> {
+    let (c, h, w) = input_shape;
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| Tensor3::from_vec(c, h, w, (0..c * h * w).map(|_| rng.f32()).collect()))
+        .collect()
+}
+
+/// Table 6 architecture string + input shape for a dataset name.
+pub fn dataset_arch(dataset: &str) -> Option<(&'static str, (usize, usize, usize))> {
+    match dataset {
+        "mnist" => Some((ARCH_MNIST, (1, 28, 28))),
+        "svhn" => Some((ARCH_SVHN, (3, 32, 32))),
+        "cifar" => Some((ARCH_CIFAR, (3, 32, 32))),
+        _ => None,
+    }
+}
+
+/// Build artifact-free executor specs + pools for `datasets` on `device`:
+/// every published SNN and CNN design of each dataset (unfit designs are
+/// rejected later by the gateway), `shards` shards each, synthetic
+/// weights seeded from `seed`.
+pub fn synthetic_specs(
+    datasets: &[&str],
+    device: Device,
+    shards: usize,
+    seed: u64,
+) -> Result<(Vec<ExecutorSpec>, Vec<DatasetPool>)> {
+    let mut specs = Vec::new();
+    let mut pools = Vec::new();
+    for (di, ds) in datasets.iter().enumerate() {
+        let (arch_s, input_shape) = dataset_arch(ds)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset {ds} (mnist|svhn|cifar)"))?;
+        let ds_seed = seed.wrapping_add(di as u64 * 1009);
+        let snn_net = synthetic_network(arch_s, input_shape, ds_seed, 0.2);
+        let cnn_net = synthetic_network(arch_s, input_shape, ds_seed ^ 0xC44, 0.2);
+        let images = synthetic_images(input_shape, 64, ds_seed ^ 0x1A6E5);
+        let representative = images[0].clone();
+        for design in snn_config::all_designs().into_iter().filter(|d| d.dataset == *ds) {
+            specs.push(ExecutorSpec {
+                dataset: ds.to_string(),
+                device,
+                shards,
+                net: snn_net.clone(),
+                design: DesignKind::Snn {
+                    design,
+                    t_steps: 8,
+                    v_th: 1.0,
+                    representative: representative.clone(),
+                },
+            });
+        }
+        for design in cnn_config::all_designs().into_iter().filter(|d| d.dataset == *ds) {
+            specs.push(ExecutorSpec {
+                dataset: ds.to_string(),
+                device,
+                shards,
+                net: cnn_net.clone(),
+                design: DesignKind::Cnn {
+                    design,
+                    arch: arch_s.to_string(),
+                    input_shape,
+                },
+            });
+        }
+        pools.push(DatasetPool { name: ds.to_string(), images });
+    }
+    Ok((specs, pools))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workloads_are_deterministic_per_seed() {
+        let pools = vec![
+            DatasetPool { name: "a".into(), images: synthetic_images((1, 3, 3), 8, 1) },
+            DatasetPool { name: "b".into(), images: synthetic_images((1, 3, 3), 8, 2) },
+        ];
+        for scenario in Scenario::all() {
+            let cfg = LoadgenConfig { scenario, requests: 40, ..Default::default() };
+            let w1 = generate(&cfg, &pools);
+            let w2 = generate(&cfg, &pools);
+            for (a, b) in w1.arrivals.iter().zip(&w2.arrivals) {
+                assert_eq!((a.dataset, a.image, a.delay), (b.dataset, b.image, b.delay));
+            }
+            let other = generate(
+                &LoadgenConfig { seed: cfg.seed + 1, ..cfg.clone() },
+                &pools,
+            );
+            assert!(
+                w1.arrivals
+                    .iter()
+                    .zip(&other.arrivals)
+                    .any(|(a, b)| (a.dataset, a.image) != (b.dataset, b.image)),
+                "different seeds must produce different workloads"
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_interleaves_datasets_round_robin() {
+        let pools = vec![
+            DatasetPool { name: "a".into(), images: synthetic_images((1, 3, 3), 4, 1) },
+            DatasetPool { name: "b".into(), images: synthetic_images((1, 3, 3), 4, 2) },
+            DatasetPool { name: "c".into(), images: synthetic_images((1, 3, 3), 4, 3) },
+        ];
+        let cfg = LoadgenConfig {
+            scenario: Scenario::Mixed,
+            requests: 9,
+            ..Default::default()
+        };
+        let w = generate(&cfg, &pools);
+        let ds: Vec<usize> = w.arrivals.iter().map(|a| a.dataset).collect();
+        assert_eq!(ds, vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn bursty_has_zero_gaps_inside_bursts() {
+        let pools =
+            vec![DatasetPool { name: "a".into(), images: synthetic_images((1, 3, 3), 4, 1) }];
+        let cfg = LoadgenConfig {
+            scenario: Scenario::Bursty,
+            requests: 16,
+            ..Default::default()
+        };
+        let w = generate(&cfg, &pools);
+        assert!(w.arrivals[1].delay.is_zero());
+        assert!(w.arrivals[8].delay > Duration::ZERO);
+    }
+
+    #[test]
+    fn ramp_gaps_shrink() {
+        let pools =
+            vec![DatasetPool { name: "a".into(), images: synthetic_images((1, 3, 3), 4, 1) }];
+        let cfg =
+            LoadgenConfig { scenario: Scenario::Ramp, requests: 20, ..Default::default() };
+        let w = generate(&cfg, &pools);
+        assert!(w.arrivals[0].delay > w.arrivals[10].delay);
+        assert!(w.arrivals[10].delay > w.arrivals[19].delay);
+    }
+
+    /// The golden tests' calibration contract: a constant-weight network
+    /// is valid and produces zero spikes on an all-zero input (the SNN
+    /// cycle model then reduces to its exactly-computable scan floor).
+    #[test]
+    fn constant_network_is_valid_and_spikeless_on_zero_input() {
+        let net = constant_network("4C3-P2-6", (1, 8, 8), 0.2, 0.02);
+        net.validate().unwrap();
+        let zero = Tensor3::from_vec(1, 8, 8, vec![0.0; 64]);
+        let r = crate::nn::snn::snn_infer(&net, &zero, 4, 1.0);
+        assert_eq!(r.total_spikes(), 0);
+    }
+
+    #[test]
+    fn synthetic_network_matches_arch_and_is_deterministic() {
+        let n1 = synthetic_network("4C3-P2-6", (1, 8, 8), 7, 0.2);
+        let n2 = synthetic_network("4C3-P2-6", (1, 8, 8), 7, 0.2);
+        n1.validate().unwrap();
+        assert_eq!(n1.arch.len(), 3);
+        let x = synthetic_images((1, 8, 8), 1, 3).remove(0);
+        assert_eq!(n1.forward(&x), n2.forward(&x));
+    }
+
+    #[test]
+    fn scenario_parse_round_trips() {
+        for s in Scenario::all() {
+            assert_eq!(Scenario::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scenario::parse("nope"), None);
+    }
+}

@@ -11,12 +11,19 @@
 //! front-end: a batching request router that executes each batch through
 //! its backend in a single call — the AOT-compiled PJRT artifacts when the
 //! `pjrt` feature is on, the pure-Rust golden model otherwise; Python
-//! never runs at request time either way.
+//! never runs at request time either way.  [`gateway`] stacks the
+//! multi-design serving layer on top: a fleet of executor shards spanning
+//! SNN and CNN designs (and devices) with a per-request cost router, and
+//! [`loadgen`] is the deterministic workload generator that drives it.
 
+pub mod gateway;
+pub mod loadgen;
 pub mod pool;
 pub mod serve;
 pub mod sweep;
 
+pub use gateway::{Gateway, GatewayConfig, GatewayStats, Request, Router, Slo};
+pub use loadgen::{LoadgenConfig, LoadgenReport, Scenario};
 pub use sweep::{
     cnn_metrics, snn_sweep, snn_sweep_counted, CnnMetrics, SampleMetrics, SnnSweep, SweepCounters,
 };

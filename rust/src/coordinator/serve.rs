@@ -60,22 +60,18 @@ use crate::snn::config::SnnDesign;
 
 use super::pool;
 
-/// Which accelerator the request should be costed against.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Backend {
-    /// Cost against the sparse SNN accelerator (input-dependent).
-    Snn,
-    /// Cost against the FINN CNN pipeline (constant; filled by the caller
-    /// from `CnnMetrics`).
-    Cnn,
-}
-
 /// One classification response.
 #[derive(Debug, Clone)]
 pub struct Response {
-    /// `argmax` of the logits (`usize::MAX` when the backend failed).
-    pub predicted: usize,
-    /// Raw output logits.
+    /// Whether the backend produced a result for this request.  A failed
+    /// request is reported here (and in [`Response::error`]) explicitly —
+    /// there is no sentinel value hiding in `predicted`.
+    pub ok: bool,
+    /// Backend error message when `ok` is false.
+    pub error: Option<String>,
+    /// `argmax` of the logits; `None` when the backend failed.
+    pub predicted: Option<usize>,
+    /// Raw output logits (empty when the backend failed).
     pub logits: Vec<f32>,
     /// Wall-clock service time in this process (queue + execute).
     pub service_time: Duration,
@@ -210,16 +206,23 @@ pub fn select_backend(
 
 /// Server configuration.
 pub struct ServeConfig {
-    /// Which accelerator family the hardware-cost estimate simulates.
-    pub backend_kind: Backend,
     /// Max requests folded into one executor batch.
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch.
     pub batch_timeout: Duration,
-    /// SNN design used for hardware-cost estimates (and its net).
-    pub snn_design: SnnDesign,
+    /// SNN cycle-model cost estimation, when the served design is an SNN.
+    /// `None` (CNN designs, or cost-less serving) attaches zero cost to
+    /// every response — the caller prices those from the input-independent
+    /// [`super::sweep::CnnMetrics`] instead.
+    pub cost: Option<SnnCostConfig>,
+}
+
+/// Everything the executor needs to run the SNN cycle-model cost estimate.
+pub struct SnnCostConfig {
+    /// SNN design used for hardware-cost estimates.
+    pub design: SnnDesign,
     /// SNN-converted network backing the cost simulation.
-    pub snn_net: Network,
+    pub net: Network,
     /// Algorithmic time steps T of the cost simulation.
     pub t_steps: usize,
     /// Firing threshold of the cost simulation.
@@ -268,22 +271,21 @@ impl CostCache {
     /// warm-up burst never pays the simulator again.
     fn estimate_batch(
         &mut self,
-        cfg: &ServeConfig,
+        cfg: &SnnCostConfig,
         acc: &SnnAccelerator,
         representative: &Tensor3,
         batch_size: usize,
     ) -> (f64, f64) {
-        let key = cfg.snn_design.name.to_string();
+        let key = cfg.design.name.to_string();
         if batch_size == 1 {
             if let Some(entry) = self.entries.get(&key) {
                 let r = acc.cost(&entry.trace, &cfg.device);
                 return (r.latency_s, r.energy_j);
             }
         }
-        let scratch =
-            self.scratch.get_or_insert_with(|| SimScratch::for_net(&cfg.snn_net));
+        let scratch = self.scratch.get_or_insert_with(|| SimScratch::for_net(&cfg.net));
         let functional = snn_infer_scratch(
-            &cfg.snn_net,
+            &cfg.net,
             representative,
             cfg.t_steps,
             cfg.v_th,
@@ -319,8 +321,11 @@ pub struct Server {
 /// Aggregate statistics reported at shutdown.
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
-    /// Requests served (responses sent).
+    /// Requests served (responses sent, successful or failed).
     pub served: usize,
+    /// Requests whose backend execution failed (their [`Response`] carries
+    /// `ok == false` and the error; they still count into `served`).
+    pub failed: usize,
     /// Executor batches formed.
     pub batches: usize,
     /// Largest batch observed.
@@ -328,9 +333,9 @@ pub struct ServerStats {
     /// Backend invocations — one `classify_batch` per batch, so this
     /// equals [`ServerStats::batches`] and makes batching observable.
     pub backend_calls: usize,
-    /// Cycle-model cost estimates computed: at most one per batch for the
-    /// SNN backend kind (single-request batches can hit the design-keyed
-    /// cache); 0 for CNN.
+    /// Cycle-model cost estimates computed: at most one per batch when an
+    /// [`SnnCostConfig`] is configured (single-request batches can hit the
+    /// design-keyed cache); 0 for cost-less / CNN serving.
     pub cost_estimates: usize,
 }
 
@@ -343,8 +348,10 @@ impl Server {
             let mut costs = CostCache::default();
             // One simulator for the server's lifetime (its per-layer shape
             // table is precomputed once, not per batch or cache hit).
-            let acc =
-                SnnAccelerator::new(&cfg.snn_design, &cfg.snn_net, cfg.t_steps, cfg.v_th);
+            let acc = cfg
+                .cost
+                .as_ref()
+                .map(|c| SnnAccelerator::new(&c.design, &c.net, c.t_steps, c.v_th));
             loop {
                 // Block for the first job of a batch.
                 let first = match rx.recv() {
@@ -372,32 +379,62 @@ impl Server {
                 let (xs, metas): (Vec<Tensor3>, Vec<(Instant, mpsc::Sender<Response>)>) =
                     batch.into_iter().map(|j| (j.x, (j.enqueued, j.reply))).unzip();
                 stats.backend_calls += 1;
-                let mut logits_batch = match backend.classify_batch(&xs) {
-                    Ok(l) => l,
-                    // One poisoned request must not fail its batch-mates:
-                    // retry per request and isolate the failure to it.
-                    Err(_) => {
-                        xs.iter().map(|x| backend.classify(x).unwrap_or_default()).collect()
+                let mut logits_batch: Vec<Result<Vec<f32>, String>> =
+                    match backend.classify_batch(&xs) {
+                        Ok(l) => l.into_iter().map(Ok).collect(),
+                        // One poisoned request must not fail its batch-mates:
+                        // retry per request and isolate each failure to its
+                        // own response (carrying the error, not a sentinel).
+                        Err(_) => xs
+                            .iter()
+                            .map(|x| backend.classify(x).map_err(|e| e.to_string()))
+                            .collect(),
+                    };
+                // Defensive: a misbehaving backend must not starve repliers
+                // (short batch) or smuggle a bogus class-0 prediction
+                // through an empty logits row — both are explicit failures.
+                logits_batch
+                    .resize(bs, Err("backend returned a short batch".to_string()));
+                for slot in &mut logits_batch {
+                    if matches!(slot, Ok(v) if v.is_empty()) {
+                        *slot = Err("backend returned empty logits".to_string());
                     }
-                };
-                // Defensive: a misbehaving backend must not starve repliers.
-                logits_batch.resize(bs, Vec::new());
+                }
 
                 // One cost estimate for the whole batch (design-keyed).
-                let (lat, energy) = match cfg.backend_kind {
-                    Backend::Snn => costs.estimate_batch(&cfg, &acc, &xs[0], bs),
-                    Backend::Cnn => (0.0, 0.0), // filled by caller's CnnMetrics
+                let (lat, energy) = match (&cfg.cost, &acc) {
+                    (Some(c), Some(acc)) => costs.estimate_batch(c, acc, &xs[0], bs),
+                    // CNN / cost-less serving: the caller attaches the
+                    // input-independent CnnMetrics numbers itself.
+                    _ => (0.0, 0.0),
                 };
                 stats.cost_estimates = costs.total_estimates();
 
-                for (logits, (enqueued, reply)) in logits_batch.into_iter().zip(metas) {
-                    let resp = Response {
-                        predicted: if logits.is_empty() { usize::MAX } else { argmax(&logits) },
-                        logits,
-                        service_time: enqueued.elapsed(),
-                        accel_latency_s: lat,
-                        accel_energy_j: energy,
-                        batch_size: bs,
+                for (outcome, (enqueued, reply)) in logits_batch.into_iter().zip(metas) {
+                    let resp = match outcome {
+                        Ok(logits) => Response {
+                            ok: true,
+                            error: None,
+                            predicted: Some(argmax(&logits)),
+                            logits,
+                            service_time: enqueued.elapsed(),
+                            accel_latency_s: lat,
+                            accel_energy_j: energy,
+                            batch_size: bs,
+                        },
+                        Err(e) => {
+                            stats.failed += 1;
+                            Response {
+                                ok: false,
+                                error: Some(e),
+                                predicted: None,
+                                logits: Vec::new(),
+                                service_time: enqueued.elapsed(),
+                                accel_latency_s: lat,
+                                accel_energy_j: energy,
+                                batch_size: bs,
+                            }
+                        }
                     };
                     stats.served += 1;
                     let _ = reply.send(resp);
@@ -472,27 +509,28 @@ mod tests {
 
     fn cfg() -> ServeConfig {
         ServeConfig {
-            backend_kind: Backend::Snn,
             max_batch: 4,
             batch_timeout: Duration::from_millis(5),
-            snn_design: SnnDesign {
-                name: "serve-test",
-                dataset: "mnist",
-                params: SnnDesignParams {
-                    p: 2,
-                    d_aeq: 64,
-                    w_mem: 8,
-                    kernel: 3,
-                    d_mem: 256,
-                    variant: MemoryVariant::Bram,
+            cost: Some(SnnCostConfig {
+                design: SnnDesign {
+                    name: "serve-test",
+                    dataset: "mnist",
+                    params: SnnDesignParams {
+                        p: 2,
+                        d_aeq: 64,
+                        w_mem: 8,
+                        kernel: 3,
+                        d_mem: 256,
+                        variant: MemoryVariant::Bram,
+                    },
+                    published: None,
+                    published_zcu102: None,
                 },
-                published: None,
-                published_zcu102: None,
-            },
-            snn_net: tiny_net(),
-            t_steps: 4,
-            v_th: 1.0,
-            device: PYNQ_Z1,
+                net: tiny_net(),
+                t_steps: 4,
+                v_th: 1.0,
+                device: PYNQ_Z1,
+            }),
         }
     }
 
@@ -518,7 +556,8 @@ mod tests {
         let server = Server::start(Box::new(NetworkBackend { net: tiny_net() }), cfg());
         let x = Tensor3::from_vec(1, 3, 3, vec![0.9; 9]);
         let resp = server.classify(x.clone()).unwrap();
-        assert_eq!(resp.predicted, argmax(&net.forward(&x)));
+        assert!(resp.ok);
+        assert_eq!(resp.predicted, Some(argmax(&net.forward(&x))));
         assert!(resp.accel_latency_s > 0.0);
         assert!(resp.accel_energy_j > 0.0);
         let stats = server.shutdown();
@@ -566,7 +605,7 @@ mod tests {
         for (x, rx) in inputs.iter().zip(rxs) {
             let resp = rx.recv().unwrap();
             let direct = net.forward(x);
-            assert_eq!(resp.predicted, argmax(&direct));
+            assert_eq!(resp.predicted, Some(argmax(&direct)));
             let max_diff: f32 = resp
                 .logits
                 .iter()
@@ -634,5 +673,99 @@ mod tests {
     fn shutdown_is_idempotent_under_drop() {
         let server = Server::start(Box::new(NetworkBackend { net: tiny_net() }), cfg());
         drop(server); // must not hang or panic
+    }
+
+    /// Backend that rejects "poisoned" inputs (first pixel < 0) — the
+    /// whole batch errors, the per-request retry errors only on the
+    /// poisoned one.
+    struct PoisonBackend {
+        inner: NetworkBackend,
+    }
+
+    impl InferenceBackend for PoisonBackend {
+        fn classify(&mut self, x: &Tensor3) -> Result<Vec<f32>> {
+            if x.data[0] < 0.0 {
+                return Err(anyhow::anyhow!("poisoned input"));
+            }
+            self.inner.classify(x)
+        }
+        fn classify_batch(&mut self, xs: &[Tensor3]) -> Result<Vec<Vec<f32>>> {
+            if xs.iter().any(|x| x.data[0] < 0.0) {
+                return Err(anyhow::anyhow!("batch contains a poisoned input"));
+            }
+            self.inner.classify_batch(xs)
+        }
+    }
+
+    /// Satellite contract: one poisoned input fails alone — its response
+    /// says so explicitly (`ok == false`, an error message, no predicted
+    /// class) — while its batch-mates classify normally.
+    #[test]
+    fn poisoned_input_fails_alone_with_batch_mates_unaffected() {
+        let net = tiny_net();
+        let mut c = cfg();
+        c.batch_timeout = Duration::from_millis(50); // fold all 4 into one batch
+        let backend = PoisonBackend { inner: NetworkBackend { net: tiny_net() } };
+        let server = Server::start(Box::new(backend), c);
+        let good = Tensor3::from_vec(1, 3, 3, vec![0.8; 9]);
+        let mut poisoned = good.clone();
+        poisoned.data[0] = -1.0;
+        let inputs = [good.clone(), poisoned, good.clone(), good];
+        let rxs: Vec<_> =
+            inputs.iter().map(|x| server.classify_async(x.clone()).unwrap()).collect();
+        let responses: Vec<Response> = rxs.into_iter().map(|r| r.recv().unwrap()).collect();
+
+        assert!(!responses[1].ok);
+        assert_eq!(responses[1].predicted, None);
+        assert!(responses[1].error.as_deref().unwrap().contains("poisoned"));
+        for i in [0, 2, 3] {
+            assert!(responses[i].ok, "batch-mate {i} was dragged down");
+            assert_eq!(responses[i].error, None);
+            assert_eq!(responses[i].predicted, Some(argmax(&net.forward(&inputs[i]))));
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 4);
+        assert_eq!(stats.failed, 1);
+    }
+
+    /// Backend that claims success but returns no logits.
+    struct EmptyBackend;
+
+    impl InferenceBackend for EmptyBackend {
+        fn classify(&mut self, _x: &Tensor3) -> Result<Vec<f32>> {
+            Ok(Vec::new())
+        }
+    }
+
+    /// An Ok-but-empty logits row is an explicit failure, not a silent
+    /// class-0 prediction (`argmax` of an empty slice is 0).
+    #[test]
+    fn empty_logits_are_reported_as_failure() {
+        let server = Server::start(Box::new(EmptyBackend), cfg());
+        let resp = server.classify(Tensor3::from_vec(1, 3, 3, vec![0.5; 9])).unwrap();
+        assert!(!resp.ok);
+        assert_eq!(resp.predicted, None);
+        assert!(resp.error.as_deref().unwrap().contains("empty logits"));
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.failed, 1);
+    }
+
+    /// A cost-less server (`cost: None`) still serves; responses carry
+    /// zero accelerator cost for the caller to fill from `CnnMetrics`.
+    #[test]
+    fn costless_serving_attaches_zero_cost() {
+        let c = ServeConfig {
+            max_batch: 2,
+            batch_timeout: Duration::from_millis(2),
+            cost: None,
+        };
+        let server = Server::start(Box::new(NetworkBackend { net: tiny_net() }), c);
+        let resp = server.classify(Tensor3::from_vec(1, 3, 3, vec![0.6; 9])).unwrap();
+        assert!(resp.ok);
+        assert_eq!(resp.accel_latency_s, 0.0);
+        assert_eq!(resp.accel_energy_j, 0.0);
+        let stats = server.shutdown();
+        assert_eq!(stats.cost_estimates, 0);
     }
 }

@@ -224,6 +224,13 @@ pub struct CnnMetrics {
 /// Compute a CNN design's metrics on a device (vector-based mode differs
 /// from vector-less only through the pipeline duty; the paper measured
 /// < 0.01 W of input dependence, which we treat as zero).
+///
+/// Because the result is input-independent, this is also the complete
+/// per-request price of a CNN design for the serving
+/// [`super::gateway::Router`] — the CNN counterpart of re-pricing a
+/// cached SNN [`crate::snn::accelerator::CostTrace`].  Panics on a
+/// malformed `arch_s`; callers that accept untrusted strings (the
+/// gateway) validate with [`parse_arch`] first.
 pub fn cnn_metrics(design: &CnnDesign, input_shape: (usize, usize, usize), arch_s: &str, device: &Device) -> CnnMetrics {
     let arch = parse_arch(arch_s).expect("bad arch string");
     let run = design.pipeline(&arch, input_shape).run();

@@ -7,12 +7,15 @@
 //! repro figure --id 7 [--samples 1000]   # regenerate Fig. 7
 //! repro all    [--samples 1000] [--out reports]
 //! repro serve  --dataset mnist --requests 64 [--batch 8]
+//! repro loadgen --scenario steady --requests 64 [--shards 2] [--seed 42]
 //! repro validate                         # golden artifact checks
 //! ```
 
 use anyhow::{anyhow, Result};
 
-use spikebench::coordinator::serve::{select_backend, Backend, ServeConfig, Server};
+use spikebench::coordinator::gateway::{Gateway, GatewayConfig, Slo};
+use spikebench::coordinator::loadgen::{self, LoadgenConfig, Scenario};
+use spikebench::coordinator::serve::{select_backend, ServeConfig, Server, SnnCostConfig};
 use spikebench::experiments::{ctx::Ctx, registry, run_by_id};
 use spikebench::fpga::device::PYNQ_Z1;
 use spikebench::nn::loader::{load_network, WeightKind};
@@ -27,8 +30,9 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: repro <list|table|figure|all|ablation|serve|validate> [--id N] [--samples N] [--out DIR]\n\
-     see `repro list` for experiment ids"
+    "usage: repro <list|table|figure|all|ablation|serve|loadgen|validate> [--id N] [--samples N] [--out DIR]\n\
+     see `repro list` for experiment ids; `repro loadgen` drives the\n\
+     multi-design gateway with a deterministic scenario (steady|bursty|ramp|mixed)"
 }
 
 fn run() -> Result<()> {
@@ -86,6 +90,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "serve" => serve_demo(&args),
+        "loadgen" => loadgen_demo(&args),
         "validate" => validate(&args),
         _ => {
             println!("{}", usage());
@@ -110,14 +115,15 @@ fn serve_demo(args: &Args) -> Result<()> {
     let eval = ctx.eval(&ds)?.clone();
 
     let cfg = ServeConfig {
-        backend_kind: Backend::Snn,
         max_batch: batch,
         batch_timeout: std::time::Duration::from_millis(2),
-        snn_design: design,
-        snn_net,
-        t_steps: info.t_steps,
-        v_th: info.v_th,
-        device: PYNQ_Z1,
+        cost: Some(SnnCostConfig {
+            design,
+            net: snn_net,
+            t_steps: info.t_steps,
+            v_th: info.v_th,
+            device: PYNQ_Z1,
+        }),
     };
 
     // PJRT backend if the feature is on and the HLO artifact loads;
@@ -138,7 +144,7 @@ fn serve_demo(args: &Args) -> Result<()> {
     let mut batch_sizes = Vec::new();
     for (i, rx) in pending {
         let r = rx.recv()?;
-        if r.predicted == eval.labels[i % eval.len()] {
+        if r.predicted == Some(eval.labels[i % eval.len()]) {
             correct += 1;
         }
         accel_energy += r.accel_energy_j;
@@ -158,6 +164,73 @@ fn serve_demo(args: &Args) -> Result<()> {
     println!(
         "executor: {} batches, max batch {}, {} backend calls, {} cost estimates",
         stats.batches, stats.max_batch_seen, stats.backend_calls, stats.cost_estimates
+    );
+    Ok(())
+}
+
+/// Multi-design gateway demo: every published SNN + CNN design of the
+/// requested datasets behind one router, driven by a deterministic
+/// scenario.  Runs on synthetic (seeded) weights and images, so it needs
+/// no artifacts directory — the whole serving stack (pricing, routing,
+/// sharding, batching) is exercised anywhere, including CI.
+fn loadgen_demo(args: &Args) -> Result<()> {
+    let scenario_s = args.get_or("scenario", "steady");
+    let scenario = Scenario::parse(scenario_s)
+        .ok_or_else(|| anyhow!("unknown scenario {scenario_s} (steady|bursty|ramp|mixed)"))?;
+    let requests = args.get_usize("requests", 64);
+    let shards = args.get_usize("shards", 2).max(1);
+    let seed = args.get_usize("seed", 42) as u64;
+    let slo_ms = args
+        .get("slo-ms")
+        .map(|s| s.parse::<f64>().map_err(|e| anyhow!("bad --slo-ms: {e}")))
+        .transpose()?
+        .unwrap_or(50.0);
+    let device = spikebench::fpga::device::Device::by_name(args.get_or("device", "pynq"))
+        .ok_or_else(|| anyhow!("unknown device (pynq|zcu102)"))?;
+    let datasets: Vec<&str> = match scenario {
+        Scenario::Mixed => vec!["mnist", "svhn", "cifar"],
+        _ => vec![args.get_or("dataset", "mnist")],
+    };
+
+    let (specs, pools) = loadgen::synthetic_specs(&datasets, device, shards, seed)?;
+    let n_specs = specs.len();
+    let gateway = Gateway::start(specs, &GatewayConfig::default())?;
+    for (name, reason) in gateway.rejected() {
+        eprintln!("design {name} rejected: {reason}");
+    }
+    println!(
+        "gateway: {} designs x {shards} shards on {} ({} rejected as unfit)",
+        n_specs - gateway.rejected().len(),
+        device.name,
+        gateway.rejected().len()
+    );
+    for d in gateway.router().table() {
+        println!(
+            "  {:<16} {:<6} {:>10.3} ms {:>10.2} uJ  ({})",
+            d.name,
+            d.dataset,
+            d.latency_s * 1e3,
+            d.energy_j * 1e6,
+            if d.is_snn { "SNN" } else { "CNN" }
+        );
+    }
+
+    let cfg = LoadgenConfig {
+        scenario,
+        requests,
+        seed,
+        slo: Slo::latency(slo_ms / 1e3),
+        ..Default::default()
+    };
+    let report = loadgen::run(&gateway, &cfg, &pools)?;
+    print!("{}", report.render());
+    let stats = gateway.shutdown();
+    println!(
+        "executors: {} batches, {} backend calls, {} cost estimates across {} shards",
+        stats.batches,
+        stats.backend_calls,
+        stats.designs.iter().map(|d| d.cost_estimates).sum::<usize>(),
+        stats.shards.len()
     );
     Ok(())
 }

@@ -1,0 +1,435 @@
+//! Integration tests of the multi-design serving gateway: routing
+//! determinism, SLO-miss fallback, least-loaded shard selection, stats
+//! reconciliation, the paper's MNIST-vs-CIFAR-10 routing crossover, and
+//! failure isolation.
+//!
+//! Everything runs on synthetic (seeded or constant) weights — no
+//! artifacts directory required — so the suite is deterministic across
+//! machines.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use spikebench::coordinator::gateway::{
+    DesignKind, ExecutorSpec, Gateway, GatewayConfig, Request, Router, Slo,
+};
+use spikebench::coordinator::loadgen::{
+    self, DatasetPool, LoadgenConfig, Scenario,
+};
+use spikebench::coordinator::serve::{InferenceBackend, NetworkBackend};
+use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::fpga::resources::{MemoryVariant, SnnDesignParams};
+use spikebench::nn::arch::{parse_arch, ARCH_CIFAR, ARCH_MNIST};
+use spikebench::nn::conv::ConvWeights;
+use spikebench::nn::dense::DenseWeights;
+use spikebench::nn::network::{LayerWeights, Network};
+use spikebench::nn::tensor::Tensor3;
+use spikebench::snn::config::SnnDesign;
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+fn tiny_net() -> Network {
+    let arch = parse_arch("2C3-2").unwrap();
+    Network {
+        arch,
+        layers: vec![
+            LayerWeights::Conv(ConvWeights::new(2, 1, 3, vec![0.25; 18], vec![0.0; 2])),
+            LayerWeights::Dense(DenseWeights::new(2, 18, vec![0.1; 36], vec![0.0, 0.5])),
+        ],
+        input_shape: (1, 3, 3),
+    }
+}
+
+fn tiny_design(name: &'static str, p: u32) -> SnnDesign {
+    SnnDesign {
+        name,
+        dataset: "tiny",
+        params: SnnDesignParams {
+            p,
+            d_aeq: 64,
+            w_mem: 8,
+            kernel: 3,
+            d_mem: 256,
+            variant: MemoryVariant::Bram,
+        },
+        published: None,
+        published_zcu102: None,
+    }
+}
+
+fn tiny_spec(name: &'static str, p: u32, shards: usize) -> ExecutorSpec {
+    ExecutorSpec {
+        dataset: "tiny".to_string(),
+        device: PYNQ_Z1,
+        shards,
+        net: tiny_net(),
+        design: DesignKind::Snn {
+            design: tiny_design(name, p),
+            t_steps: 4,
+            v_th: 1.0,
+            representative: Tensor3::from_vec(1, 3, 3, vec![0.9; 9]),
+        },
+    }
+}
+
+fn tiny_cfg() -> GatewayConfig {
+    GatewayConfig { max_batch: 4, batch_timeout: Duration::from_millis(2) }
+}
+
+/// Gateway over the full published design tables for MNIST + CIFAR-10 on
+/// the PYNQ-Z1.  MNIST is priced on a bright input (dense spiking -> SNN
+/// designs slow and expensive); CIFAR-10 on an all-zero input (no spikes
+/// -> SNN designs reduce to their threshold-scan floor, far cheaper than
+/// the deep CNN pipelines' >200k-cycle initiation intervals).
+fn paper_specs() -> Vec<ExecutorSpec> {
+    let mut specs = Vec::new();
+    let mnist_net = loadgen::constant_network(ARCH_MNIST, (1, 28, 28), 0.2, 0.02);
+    let bright = Tensor3::from_vec(1, 28, 28, vec![0.9; 784]);
+    let cifar_net = loadgen::constant_network(ARCH_CIFAR, (3, 32, 32), 0.2, 0.02);
+    let dark = Tensor3::from_vec(3, 32, 32, vec![0.0; 3 * 32 * 32]);
+    for design in spikebench::snn::config::all_designs() {
+        let (net, rep) = match design.dataset {
+            "mnist" => (mnist_net.clone(), bright.clone()),
+            "cifar" => (cifar_net.clone(), dark.clone()),
+            _ => continue,
+        };
+        specs.push(ExecutorSpec {
+            dataset: design.dataset.to_string(),
+            device: PYNQ_Z1,
+            shards: 1,
+            net,
+            design: DesignKind::Snn { design, t_steps: 8, v_th: 1.0, representative: rep },
+        });
+    }
+    for design in spikebench::cnn_accel::config::all_designs() {
+        let (net, arch, shape) = match design.dataset {
+            "mnist" => (mnist_net.clone(), ARCH_MNIST, (1, 28, 28)),
+            "cifar" => (cifar_net.clone(), ARCH_CIFAR, (3, 32, 32)),
+            _ => continue,
+        };
+        specs.push(ExecutorSpec {
+            dataset: design.dataset.to_string(),
+            device: PYNQ_Z1,
+            shards: 1,
+            net,
+            design: DesignKind::Cnn { design, arch: arch.to_string(), input_shape: shape },
+        });
+    }
+    specs
+}
+
+// ---------------------------------------------------------------------------
+// Routing determinism
+// ---------------------------------------------------------------------------
+
+/// The same seed produces the same workload, the same routing decisions
+/// and the same predictions, run to run.
+#[test]
+fn routing_is_deterministic_under_a_fixed_seed() {
+    let run_once = || {
+        let gw = Gateway::start(
+            vec![tiny_spec("tiny-p1", 1, 2), tiny_spec("tiny-p8", 8, 2)],
+            &tiny_cfg(),
+        )
+        .unwrap();
+        let pools = vec![DatasetPool {
+            name: "tiny".to_string(),
+            images: loadgen::synthetic_images((1, 3, 3), 16, 5),
+        }];
+        let cfg = LoadgenConfig {
+            scenario: Scenario::Bursty,
+            requests: 32,
+            seed: 7,
+            slo: Slo::latency(10.0),
+            gap: Duration::from_micros(50),
+        };
+        let report = loadgen::run(&gw, &cfg, &pools).unwrap();
+        let stats = gw.shutdown();
+        (report.decisions, stats.routed, stats.slo_misses)
+    };
+    let (d1, routed1, misses1) = run_once();
+    let (d2, routed2, misses2) = run_once();
+    assert_eq!(d1, d2, "routing decisions must replay identically");
+    assert_eq!(routed1, routed2);
+    assert_eq!(misses1, misses2);
+    assert_eq!(routed1, 32);
+}
+
+// ---------------------------------------------------------------------------
+// SLO-miss fallback
+// ---------------------------------------------------------------------------
+
+/// An unmeetable SLO falls back to the fastest design for the dataset and
+/// is reported as a miss end to end (ticket, response, stats).
+#[test]
+fn slo_miss_falls_back_to_the_fastest_design() {
+    let gw = Gateway::start(
+        vec![tiny_spec("tiny-p1", 1, 1), tiny_spec("tiny-p8", 8, 1)],
+        &tiny_cfg(),
+    )
+    .unwrap();
+    let table = gw.router().table();
+    let fastest = table
+        .iter()
+        .min_by(|a, b| a.latency_s.total_cmp(&b.latency_s))
+        .unwrap()
+        .name
+        .clone();
+    assert_eq!(fastest, "tiny-p8", "P=8 must out-run P=1 on the same trace");
+
+    let r = gw
+        .classify(Request {
+            dataset: "tiny".to_string(),
+            x: Tensor3::from_vec(1, 3, 3, vec![0.8; 9]),
+            slo: Slo::latency(1e-12),
+        })
+        .unwrap();
+    assert!(r.slo_miss);
+    assert_eq!(r.design, fastest);
+    let stats = gw.shutdown();
+    assert_eq!(stats.slo_misses, 1);
+    let p8 = stats.designs.iter().find(|d| d.name == "tiny-p8").unwrap();
+    assert_eq!(p8.routed, 1);
+    assert_eq!(p8.slo_misses, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Least-loaded shard selection
+// ---------------------------------------------------------------------------
+
+/// With responses held back, in-flight counts grow deterministically and
+/// dispatch must alternate across shards (least-loaded, ties to the
+/// lowest index); under skewed pre-load the unloaded shard wins.
+#[test]
+fn least_loaded_shard_selection_under_skewed_load() {
+    // Direct rule checks (the skewed cases).
+    assert_eq!(Router::least_loaded(&[5, 2, 4]), 1);
+    assert_eq!(Router::least_loaded(&[0, 0, 0]), 0);
+    assert_eq!(Router::least_loaded(&[1, 0, 0]), 1);
+
+    // Gateway-level: one design, 2 shards; hold every ticket so depth
+    // only grows. Dispatch must go 0,1,0,1,…
+    let gw = Gateway::start(vec![tiny_spec("tiny-p8", 8, 2)], &tiny_cfg()).unwrap();
+    let mut tickets = Vec::new();
+    for i in 0..6 {
+        let t = gw
+            .submit(Request {
+                dataset: "tiny".to_string(),
+                x: Tensor3::from_vec(1, 3, 3, vec![0.7; 9]),
+                slo: Slo::latency(10.0),
+            })
+            .unwrap();
+        assert_eq!(t.shard, i % 2, "request {i} must go to the least-loaded shard");
+        tickets.push(t);
+    }
+    for t in tickets.drain(..) {
+        t.recv().unwrap();
+    }
+    let stats = gw.shutdown();
+    // Alternation => exactly balanced dispatch.
+    assert_eq!(stats.shards.len(), 2);
+    assert_eq!(stats.shards[0].dispatched, 3);
+    assert_eq!(stats.shards[1].dispatched, 3);
+}
+
+// ---------------------------------------------------------------------------
+// Stats reconciliation
+// ---------------------------------------------------------------------------
+
+/// `GatewayStats` totals equal the sums of the per-shard `ServerStats`
+/// exactly, and per-design aggregates equal the sums over their shards.
+#[test]
+fn gateway_stats_equal_sum_of_shard_server_stats() {
+    let gw = Gateway::start(
+        vec![tiny_spec("tiny-p1", 1, 2), tiny_spec("tiny-p8", 8, 3)],
+        &tiny_cfg(),
+    )
+    .unwrap();
+    let pools = vec![DatasetPool {
+        name: "tiny".to_string(),
+        images: loadgen::synthetic_images((1, 3, 3), 8, 11),
+    }];
+    let cfg = LoadgenConfig {
+        scenario: Scenario::Ramp,
+        requests: 24,
+        seed: 3,
+        slo: Slo::latency(10.0),
+        gap: Duration::from_micros(50),
+    };
+    let report = loadgen::run(&gw, &cfg, &pools).unwrap();
+    assert_eq!(report.served, 24);
+    let stats = gw.shutdown();
+
+    // Totals == Σ shards, field by field.
+    assert_eq!(stats.served, stats.shards.iter().map(|s| s.stats.served).sum::<usize>());
+    assert_eq!(stats.failed, stats.shards.iter().map(|s| s.stats.failed).sum::<usize>());
+    assert_eq!(stats.batches, stats.shards.iter().map(|s| s.stats.batches).sum::<usize>());
+    assert_eq!(
+        stats.backend_calls,
+        stats.shards.iter().map(|s| s.stats.backend_calls).sum::<usize>()
+    );
+    assert_eq!(stats.routed, stats.shards.iter().map(|s| s.dispatched).sum::<usize>());
+    assert_eq!(stats.served, 24);
+    assert_eq!(stats.routed, 24);
+
+    // Per-design aggregates == Σ their shards.
+    for d in &stats.designs {
+        let shards: Vec<_> = stats.shards.iter().filter(|s| s.design == d.name).collect();
+        assert_eq!(d.served, shards.iter().map(|s| s.stats.served).sum::<usize>());
+        assert_eq!(d.batches, shards.iter().map(|s| s.stats.batches).sum::<usize>());
+        assert_eq!(
+            d.backend_calls,
+            shards.iter().map(|s| s.stats.backend_calls).sum::<usize>()
+        );
+        assert_eq!(d.routed, shards.iter().map(|s| s.dispatched).sum::<usize>());
+        // Every dispatched request was drained, so dispatch == served.
+        assert_eq!(d.routed, d.served);
+    }
+    // Routed energy aggregates: designs sum to the total.
+    let design_energy: f64 = stats.designs.iter().map(|d| d.routed_energy_j).sum();
+    assert!((stats.routed_energy_j - design_energy).abs() < 1e-12);
+}
+
+// ---------------------------------------------------------------------------
+// The paper's crossover, end to end
+// ---------------------------------------------------------------------------
+
+/// Acceptance: at a loose SLO the router sends MNIST to a CNN dataflow
+/// design and CIFAR-10 to an SNN design — the paper's workload-complexity
+/// crossover as an executable routing fact — and both are actually served.
+#[test]
+fn router_picks_cnn_for_mnist_and_snn_for_cifar_at_loose_slo() {
+    let gw = Gateway::start(
+        paper_specs(),
+        &GatewayConfig { max_batch: 2, batch_timeout: Duration::from_millis(1) },
+    )
+    .unwrap();
+
+    // SNN16_CIFAR needs 200 BRAMs and must have been rejected on the
+    // PYNQ-Z1 (Table 9's footnote).
+    assert!(gw.rejected().iter().any(|(n, _)| n == "SNN16_CIFAR"));
+
+    let slo = Slo::latency(0.05); // 50 ms: everything meets it
+    let mnist = gw
+        .classify(Request {
+            dataset: "mnist".to_string(),
+            x: Tensor3::from_vec(1, 28, 28, vec![0.9; 784]),
+            slo,
+        })
+        .unwrap();
+    assert!(!mnist.slo_miss);
+    assert!(mnist.response.ok);
+    assert!(
+        mnist.design.starts_with("CNN"),
+        "MNIST at a loose SLO must route to a CNN dataflow design, got {}",
+        mnist.design
+    );
+
+    let cifar = gw
+        .classify(Request {
+            dataset: "cifar".to_string(),
+            x: Tensor3::from_vec(3, 32, 32, vec![0.0; 3 * 32 * 32]),
+            slo,
+        })
+        .unwrap();
+    assert!(!cifar.slo_miss);
+    assert!(cifar.response.ok);
+    assert!(
+        cifar.design.starts_with("SNN"),
+        "CIFAR-10 at a loose SLO must route to an SNN design, got {}",
+        cifar.design
+    );
+
+    // The crossover's cause, visible in the priced table: the cheapest
+    // CNN beats every SNN on MNIST energy, and vice versa on CIFAR-10.
+    let table = gw.router().table();
+    let min_energy = |ds: &str, snn: bool| {
+        table
+            .iter()
+            .filter(|d| d.dataset == ds && d.is_snn == snn)
+            .map(|d| d.energy_j)
+            .fold(f64::INFINITY, f64::min)
+    };
+    assert!(min_energy("mnist", false) < min_energy("mnist", true));
+    assert!(min_energy("cifar", true) < min_energy("cifar", false));
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.served, 2);
+    assert_eq!(stats.failed, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Failure isolation
+// ---------------------------------------------------------------------------
+
+/// Backend that rejects inputs whose first pixel is negative; the batch
+/// call errors, the per-request retry isolates the poisoned one.
+struct FlakyBackend {
+    inner: NetworkBackend,
+}
+
+impl InferenceBackend for FlakyBackend {
+    fn classify(&mut self, x: &Tensor3) -> Result<Vec<f32>> {
+        if x.data[0] < 0.0 {
+            return Err(anyhow::anyhow!("poisoned input"));
+        }
+        self.inner.classify(x)
+    }
+    fn classify_batch(&mut self, xs: &[Tensor3]) -> Result<Vec<Vec<f32>>> {
+        if xs.iter().any(|x| x.data[0] < 0.0) {
+            return Err(anyhow::anyhow!("batch contains a poisoned input"));
+        }
+        self.inner.classify_batch(xs)
+    }
+}
+
+/// Acceptance: a failed request is reported as failed — explicit `ok` /
+/// `error`, `predicted == None`, no sentinel — and its batch-mates are
+/// served normally through the gateway.
+#[test]
+fn failed_request_is_reported_failed_without_failing_batch_mates() {
+    let gw = Gateway::start_with(
+        vec![tiny_spec("tiny-p8", 8, 1)],
+        &GatewayConfig { max_batch: 4, batch_timeout: Duration::from_millis(50) },
+        |_, _| {
+            Box::new(FlakyBackend { inner: NetworkBackend { net: tiny_net() } })
+                as Box<dyn InferenceBackend>
+        },
+    )
+    .unwrap();
+
+    let good = Tensor3::from_vec(1, 3, 3, vec![0.8; 9]);
+    let mut poisoned = good.clone();
+    poisoned.data[0] = -1.0;
+    let inputs = [good.clone(), poisoned, good.clone(), good];
+    let tickets: Vec<_> = inputs
+        .iter()
+        .map(|x| {
+            gw.submit(Request {
+                dataset: "tiny".to_string(),
+                x: x.clone(),
+                slo: Slo::latency(10.0),
+            })
+            .unwrap()
+        })
+        .collect();
+    let responses: Vec<_> = tickets.into_iter().map(|t| t.recv().unwrap()).collect();
+
+    assert!(!responses[1].response.ok);
+    assert_eq!(responses[1].response.predicted, None);
+    assert!(responses[1].response.error.as_deref().unwrap().contains("poisoned"));
+    let expected = tiny_net().forward(&inputs[0]);
+    let expected_class =
+        Some(spikebench::nn::network::argmax(&expected));
+    for i in [0, 2, 3] {
+        assert!(responses[i].response.ok, "batch-mate {i} was dragged down");
+        assert_eq!(responses[i].response.predicted, expected_class);
+    }
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.failed, 1);
+    assert_eq!(stats.shards.iter().map(|s| s.stats.failed).sum::<usize>(), 1);
+}
