@@ -56,14 +56,28 @@ fn bench_routing(bench: &Bench) {
     gateway.shutdown();
 }
 
+/// With `SPIKEBENCH_BENCH_JSON=path` set, write every recorded
+/// measurement as a wire-codec JSON artifact (the `BENCH_*.json`
+/// trajectory — diffable run to run).
+fn write_bench_json(results: Vec<spikebench::util::bench::BenchResult>) {
+    use spikebench::util::wire::ToJson;
+    if let Ok(path) = std::env::var("SPIKEBENCH_BENCH_JSON") {
+        spikebench::report::write_json(std::path::Path::new(&path), &results.to_json())
+            .expect("writing bench json");
+        println!("bench results written to {path}");
+    }
+}
+
 fn main() {
     let bench0 = Bench::new("hotpath").warmup(1).samples(4);
     bench_routing(&bench0);
+    let mut results = bench0.results();
 
     let mut ctx = match Ctx::load() {
         Ok(c) => c,
         Err(e) => {
             println!("hotpath: artifact benches SKIPPED (artifacts not built: {e})");
+            write_bench_json(results);
             return;
         }
     };
@@ -127,4 +141,7 @@ fn main() {
 
     // 5. End-to-end single inference (functional + cycle + power).
     bench.run("snn run end-to-end", || acc.run(&x, &PYNQ_Z1));
+
+    results.extend(bench.results());
+    write_bench_json(results);
 }

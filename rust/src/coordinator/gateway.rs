@@ -48,6 +48,8 @@ use crate::nn::snn::snn_infer;
 use crate::nn::tensor::Tensor3;
 use crate::snn::accelerator::{CostTrace, SnnAccelerator};
 use crate::snn::config::SnnDesign;
+use crate::util::json::Json;
+use crate::util::wire::{De, FromJson, Obj, ToJson, WireError};
 
 use super::serve::{
     InferenceBackend, NetworkBackend, Response, ServeConfig, Server, ServerStats, SnnCostConfig,
@@ -55,7 +57,7 @@ use super::serve::{
 use super::sweep::cnn_metrics;
 
 /// Per-request service-level objective.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Slo {
     /// Maximum acceptable simulated accelerator latency (seconds).
     pub max_latency_s: f64,
@@ -67,6 +69,25 @@ impl Slo {
     /// Latency-only SLO.
     pub fn latency(max_latency_s: f64) -> Slo {
         Slo { max_latency_s, max_energy_j: None }
+    }
+}
+
+impl ToJson for Slo {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("max_latency_s", &self.max_latency_s)
+            .field("max_energy_j", &self.max_energy_j)
+            .build()
+    }
+}
+
+impl FromJson for Slo {
+    fn from_json(v: &Json) -> Result<Slo, WireError> {
+        let d = De::root(v);
+        Ok(Slo {
+            max_latency_s: d.req("max_latency_s")?,
+            max_energy_j: d.opt_or("max_energy_j", None)?,
+        })
     }
 }
 
@@ -138,6 +159,7 @@ impl ExecutorSpec {
 }
 
 /// Gateway-wide executor configuration (applied to every shard).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GatewayConfig {
     /// Max requests folded into one shard batch.
     pub max_batch: usize,
@@ -151,8 +173,31 @@ impl Default for GatewayConfig {
     }
 }
 
+impl ToJson for GatewayConfig {
+    fn to_json(&self) -> Json {
+        // Nanoseconds as an integer: exact round-trip (unlike secs-f64).
+        Obj::new()
+            .field("max_batch", &self.max_batch)
+            .field("batch_timeout_ns", &(self.batch_timeout.as_nanos() as u64))
+            .build()
+    }
+}
+
+impl FromJson for GatewayConfig {
+    fn from_json(v: &Json) -> Result<GatewayConfig, WireError> {
+        let d = De::root(v);
+        let default = GatewayConfig::default();
+        Ok(GatewayConfig {
+            max_batch: d.opt_or("max_batch", default.max_batch)?,
+            batch_timeout: Duration::from_nanos(
+                d.opt_or("batch_timeout_ns", default.batch_timeout.as_nanos() as u64)?,
+            ),
+        })
+    }
+}
+
 /// Public snapshot of one routed design's price (for reports and tests).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PricedDesign {
     /// Design name.
     pub name: String,
@@ -166,6 +211,33 @@ pub struct PricedDesign {
     pub latency_s: f64,
     /// Simulated per-classification energy (Joules).
     pub energy_j: f64,
+}
+
+impl ToJson for PricedDesign {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("name", &self.name)
+            .field("dataset", &self.dataset)
+            .field("device", &self.device_name)
+            .field("is_snn", &self.is_snn)
+            .field("latency_s", &self.latency_s)
+            .field("energy_j", &self.energy_j)
+            .build()
+    }
+}
+
+impl FromJson for PricedDesign {
+    fn from_json(v: &Json) -> Result<PricedDesign, WireError> {
+        let d = De::root(v);
+        Ok(PricedDesign {
+            name: d.req("name")?,
+            dataset: d.req("dataset")?,
+            device_name: d.req("device")?,
+            is_snn: d.req("is_snn")?,
+            latency_s: d.req("latency_s")?,
+            energy_j: d.req("energy_j")?,
+        })
+    }
 }
 
 /// What an entry retains for device re-pricing ([`Router::reprice_on`]).
@@ -447,7 +519,7 @@ pub struct GatewayResponse {
 }
 
 /// Per-shard statistics at shutdown.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardStats {
     /// Design the shard belonged to.
     pub design: String,
@@ -460,9 +532,32 @@ pub struct ShardStats {
     pub stats: ServerStats,
 }
 
+impl ToJson for ShardStats {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("design", &self.design)
+            .field("shard", &self.shard)
+            .field("dispatched", &self.dispatched)
+            .field("stats", &self.stats)
+            .build()
+    }
+}
+
+impl FromJson for ShardStats {
+    fn from_json(v: &Json) -> Result<ShardStats, WireError> {
+        let d = De::root(v);
+        Ok(ShardStats {
+            design: d.req("design")?,
+            shard: d.req("shard")?,
+            dispatched: d.req("dispatched")?,
+            stats: d.req("stats")?,
+        })
+    }
+}
+
 /// Per-design aggregates (sums over the design's shards plus routing
 /// counters).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DesignStats {
     /// Design name.
     pub name: String,
@@ -490,9 +585,46 @@ pub struct DesignStats {
     pub routed_energy_j: f64,
 }
 
+impl ToJson for DesignStats {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("name", &self.name)
+            .field("dataset", &self.dataset)
+            .field("device", &self.device_name)
+            .field("routed", &self.routed)
+            .field("slo_misses", &self.slo_misses)
+            .field("served", &self.served)
+            .field("failed", &self.failed)
+            .field("batches", &self.batches)
+            .field("backend_calls", &self.backend_calls)
+            .field("cost_estimates", &self.cost_estimates)
+            .field("routed_energy_j", &self.routed_energy_j)
+            .build()
+    }
+}
+
+impl FromJson for DesignStats {
+    fn from_json(v: &Json) -> Result<DesignStats, WireError> {
+        let d = De::root(v);
+        Ok(DesignStats {
+            name: d.req("name")?,
+            dataset: d.req("dataset")?,
+            device_name: d.req("device")?,
+            routed: d.req("routed")?,
+            slo_misses: d.req("slo_misses")?,
+            served: d.req("served")?,
+            failed: d.req("failed")?,
+            batches: d.req("batches")?,
+            backend_calls: d.req("backend_calls")?,
+            cost_estimates: d.req("cost_estimates")?,
+            routed_energy_j: d.req("routed_energy_j")?,
+        })
+    }
+}
+
 /// Aggregated gateway statistics: shard-level, design-level, and totals.
 /// The totals are exact sums of the per-shard [`ServerStats`].
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct GatewayStats {
     /// Every shard's statistics.
     pub shards: Vec<ShardStats>,
@@ -512,6 +644,39 @@ pub struct GatewayStats {
     pub slo_misses: usize,
     /// Total routed energy (J).
     pub routed_energy_j: f64,
+}
+
+impl ToJson for GatewayStats {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("served", &self.served)
+            .field("failed", &self.failed)
+            .field("batches", &self.batches)
+            .field("backend_calls", &self.backend_calls)
+            .field("routed", &self.routed)
+            .field("slo_misses", &self.slo_misses)
+            .field("routed_energy_j", &self.routed_energy_j)
+            .field("designs", &self.designs)
+            .field("shards", &self.shards)
+            .build()
+    }
+}
+
+impl FromJson for GatewayStats {
+    fn from_json(v: &Json) -> Result<GatewayStats, WireError> {
+        let d = De::root(v);
+        Ok(GatewayStats {
+            served: d.req("served")?,
+            failed: d.req("failed")?,
+            batches: d.req("batches")?,
+            backend_calls: d.req("backend_calls")?,
+            routed: d.req("routed")?,
+            slo_misses: d.req("slo_misses")?,
+            routed_energy_j: d.req("routed_energy_j")?,
+            designs: d.req("designs")?,
+            shards: d.req("shards")?,
+        })
+    }
 }
 
 /// The gateway: a router plus the executor shard fleet it dispatches to.

@@ -21,6 +21,13 @@
 //! stack (pricing, routing, sharding, batching) runs without any
 //! artifacts directory.  Synthetic weights exercise the serving system,
 //! not model accuracy.
+//!
+//! Whole deployments are also **file-configurable**: a [`DeploymentSpec`]
+//! (executor fleet + gateway batching + scenario, JSON via the
+//! `util::wire` codec) resolves onto the same substrate with
+//! [`Gateway::from_spec`], and `repro loadgen --spec FILE` drives it —
+//! same seed ⇒ the same routing decisions as the equivalent in-code
+//! configuration (pinned by `tests/wire.rs`).
 
 use std::time::{Duration, Instant};
 
@@ -34,10 +41,14 @@ use crate::nn::dense::DenseWeights;
 use crate::nn::network::{LayerWeights, Network};
 use crate::nn::tensor::Tensor3;
 use crate::snn::config as snn_config;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile, Summary};
+use crate::util::wire::{De, FromJson, Obj, ToJson, WireError};
 
-use super::gateway::{DesignKind, ExecutorSpec, Gateway, Request, Slo, Ticket};
+use super::gateway::{
+    DesignKind, ExecutorSpec, Gateway, GatewayConfig, Request, Slo, Ticket,
+};
 
 /// Workload shape preset.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -80,6 +91,21 @@ impl Scenario {
     }
 }
 
+impl ToJson for Scenario {
+    fn to_json(&self) -> Json {
+        Json::Str(self.name().to_string())
+    }
+}
+
+impl FromJson for Scenario {
+    fn from_json(v: &Json) -> Result<Scenario, WireError> {
+        let s = String::from_json(v)?;
+        Scenario::parse(&s).ok_or_else(|| {
+            WireError::new("", format!("unknown scenario {s:?} (steady|bursty|ramp|mixed)"))
+        })
+    }
+}
+
 /// A pool of inputs for one dataset.
 pub struct DatasetPool {
     /// Dataset name (the gateway routing key).
@@ -89,7 +115,7 @@ pub struct DatasetPool {
 }
 
 /// Load-generator configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LoadgenConfig {
     /// Workload shape.
     pub scenario: Scenario,
@@ -112,6 +138,32 @@ impl Default for LoadgenConfig {
             slo: Slo::latency(0.05),
             gap: Duration::from_micros(200),
         }
+    }
+}
+
+impl ToJson for LoadgenConfig {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("scenario", &self.scenario)
+            .field("requests", &self.requests)
+            .field("seed", &self.seed)
+            .field("slo", &self.slo)
+            .field("gap_ns", &(self.gap.as_nanos() as u64))
+            .build()
+    }
+}
+
+impl FromJson for LoadgenConfig {
+    fn from_json(v: &Json) -> Result<LoadgenConfig, WireError> {
+        let d = De::root(v);
+        let def = LoadgenConfig::default();
+        Ok(LoadgenConfig {
+            scenario: d.opt_or("scenario", def.scenario)?,
+            requests: d.opt_or("requests", def.requests)?,
+            seed: d.opt_or("seed", def.seed)?,
+            slo: d.opt_or("slo", def.slo)?,
+            gap: Duration::from_nanos(d.opt_or("gap_ns", def.gap.as_nanos() as u64)?),
+        })
     }
 }
 
@@ -179,7 +231,7 @@ pub fn generate(cfg: &LoadgenConfig, pools: &[DatasetPool]) -> Workload {
 }
 
 /// Report of one driven workload.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LoadgenReport {
     /// Scenario that was driven.
     pub scenario: Scenario,
@@ -204,6 +256,57 @@ pub struct LoadgenReport {
     pub mean_routed_latency_ms: f64,
     /// Total routed energy (J).
     pub routed_energy_j: f64,
+}
+
+impl ToJson for LoadgenReport {
+    fn to_json(&self) -> Json {
+        let decisions = Json::Arr(
+            self.decisions
+                .iter()
+                .map(|(design, slo_miss)| {
+                    Obj::new().field("design", design).field("slo_miss", slo_miss).build()
+                })
+                .collect(),
+        );
+        Obj::new()
+            .field("scenario", &self.scenario)
+            .raw("decisions", decisions)
+            .field("served", &self.served)
+            .field("failed", &self.failed)
+            .field("slo_misses", &self.slo_misses)
+            .field("wall_ns", &(self.wall.as_nanos() as u64))
+            .field("throughput_rps", &self.throughput_rps)
+            .field("p50_service_ms", &self.p50_service_ms)
+            .field("p99_service_ms", &self.p99_service_ms)
+            .field("mean_routed_latency_ms", &self.mean_routed_latency_ms)
+            .field("routed_energy_j", &self.routed_energy_j)
+            .build()
+    }
+}
+
+impl FromJson for LoadgenReport {
+    fn from_json(v: &Json) -> Result<LoadgenReport, WireError> {
+        let d = De::root(v);
+        let decisions = d
+            .field("decisions")?
+            .items()?
+            .into_iter()
+            .map(|el| Ok((el.req("design")?, el.req("slo_miss")?)))
+            .collect::<Result<Vec<(String, bool)>, WireError>>()?;
+        Ok(LoadgenReport {
+            scenario: d.req("scenario")?,
+            decisions,
+            served: d.req("served")?,
+            failed: d.req("failed")?,
+            slo_misses: d.req("slo_misses")?,
+            wall: Duration::from_nanos(d.req("wall_ns")?),
+            throughput_rps: d.req("throughput_rps")?,
+            p50_service_ms: d.req("p50_service_ms")?,
+            p99_service_ms: d.req("p99_service_ms")?,
+            mean_routed_latency_ms: d.req("mean_routed_latency_ms")?,
+            routed_energy_j: d.req("routed_energy_j")?,
+        })
+    }
 }
 
 impl LoadgenReport {
@@ -441,6 +544,38 @@ pub fn dataset_arch(dataset: &str) -> Option<(&'static str, (usize, usize, usize
     }
 }
 
+/// The synthetic per-dataset serving substrate: Table 6 architecture,
+/// seeded random weights for both design families, and a seeded image
+/// pool. Seeding depends only on (`dataset`, its index in the dataset
+/// list, the base seed), so an in-code config and a [`DeploymentSpec`]
+/// file that list the same datasets in the same order produce
+/// bit-identical substrates — and therefore identical routing.
+struct DatasetSubstrate {
+    arch: &'static str,
+    input_shape: (usize, usize, usize),
+    snn_net: Network,
+    cnn_net: Network,
+    images: Vec<Tensor3>,
+}
+
+fn dataset_substrate(ds: &str, di: usize, seed: u64) -> Result<DatasetSubstrate> {
+    let (arch_s, input_shape) = dataset_arch(ds)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {ds} (mnist|svhn|cifar)"))?;
+    let ds_seed = seed.wrapping_add(di as u64 * 1009);
+    Ok(DatasetSubstrate {
+        arch: arch_s,
+        input_shape,
+        snn_net: synthetic_network(arch_s, input_shape, ds_seed, 0.2),
+        cnn_net: synthetic_network(arch_s, input_shape, ds_seed ^ 0xC44, 0.2),
+        images: synthetic_images(input_shape, 64, ds_seed ^ 0x1A6E5),
+    })
+}
+
+/// Algorithmic time steps of every synthetic SNN cost simulation.
+const SYNTH_T_STEPS: usize = 8;
+/// Firing threshold of every synthetic SNN cost simulation.
+const SYNTH_V_TH: f32 = 1.0;
+
 /// Build artifact-free executor specs + pools for `datasets` on `device`:
 /// every published SNN and CNN design of each dataset (unfit designs are
 /// rejected later by the gateway), `shards` shards each, synthetic
@@ -454,23 +589,18 @@ pub fn synthetic_specs(
     let mut specs = Vec::new();
     let mut pools = Vec::new();
     for (di, ds) in datasets.iter().enumerate() {
-        let (arch_s, input_shape) = dataset_arch(ds)
-            .ok_or_else(|| anyhow::anyhow!("unknown dataset {ds} (mnist|svhn|cifar)"))?;
-        let ds_seed = seed.wrapping_add(di as u64 * 1009);
-        let snn_net = synthetic_network(arch_s, input_shape, ds_seed, 0.2);
-        let cnn_net = synthetic_network(arch_s, input_shape, ds_seed ^ 0xC44, 0.2);
-        let images = synthetic_images(input_shape, 64, ds_seed ^ 0x1A6E5);
-        let representative = images[0].clone();
+        let sub = dataset_substrate(ds, di, seed)?;
+        let representative = sub.images[0].clone();
         for design in snn_config::all_designs().into_iter().filter(|d| d.dataset == *ds) {
             specs.push(ExecutorSpec {
                 dataset: ds.to_string(),
                 device,
                 shards,
-                net: snn_net.clone(),
+                net: sub.snn_net.clone(),
                 design: DesignKind::Snn {
                     design,
-                    t_steps: 8,
-                    v_th: 1.0,
+                    t_steps: SYNTH_T_STEPS,
+                    v_th: SYNTH_V_TH,
                     representative: representative.clone(),
                 },
             });
@@ -480,17 +610,238 @@ pub fn synthetic_specs(
                 dataset: ds.to_string(),
                 device,
                 shards,
-                net: cnn_net.clone(),
+                net: sub.cnn_net.clone(),
                 design: DesignKind::Cnn {
                     design,
-                    arch: arch_s.to_string(),
-                    input_shape,
+                    arch: sub.arch.to_string(),
+                    input_shape: sub.input_shape,
                 },
             });
         }
-        pools.push(DatasetPool { name: ds.to_string(), images });
+        pools.push(DatasetPool { name: ds.to_string(), images: sub.images });
     }
     Ok((specs, pools))
+}
+
+// ---------------------------------------------------------------------------
+// Deployment specs (file-driven gateway + scenario configuration).
+// ---------------------------------------------------------------------------
+
+/// One executor fleet entry of a [`DeploymentSpec`]: a published design
+/// by name, the device it runs on, and its shard count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecutorEntry {
+    /// Design name, resolved case-insensitively against the SNN tables
+    /// (`snn::config::by_name`) first, then the CNN tables
+    /// (`cnn_accel::config::by_name`) — e.g. `"SNN8_CIFAR"` or `"CNN4"`.
+    pub design: String,
+    /// Dataset the entry serves. Empty = use the design's own dataset;
+    /// when set, it must match it (a mismatch is a spec error, not a
+    /// silent re-pool).
+    pub dataset: String,
+    /// Device name (`"pynq"` / `"zcu102"`, as accepted by
+    /// [`Device::by_name`]).
+    pub device: String,
+    /// Executor shards to spawn (minimum 1).
+    pub shards: usize,
+}
+
+impl ToJson for ExecutorEntry {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("design", &self.design)
+            .field("dataset", &self.dataset)
+            .field("device", &self.device)
+            .field("shards", &self.shards)
+            .build()
+    }
+}
+
+impl FromJson for ExecutorEntry {
+    fn from_json(v: &Json) -> Result<ExecutorEntry, WireError> {
+        let d = De::root(v);
+        Ok(ExecutorEntry {
+            design: d.req("design")?,
+            dataset: d.opt_or("dataset", String::new())?,
+            device: d.opt_or("device", "pynq".to_string())?,
+            shards: d.opt_or("shards", 1)?,
+        })
+    }
+}
+
+/// A complete file-loadable deployment: gateway configuration, the
+/// executor fleet, and the load scenario to drive against it. This is
+/// the `repro loadgen --spec FILE` schema; checked-in examples live
+/// under `examples/specs/`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentSpec {
+    /// Base seed of the synthetic substrate (weights + image pools).
+    pub seed: u64,
+    /// Shard executor configuration.
+    pub gateway: GatewayConfig,
+    /// The executor fleet.
+    pub executors: Vec<ExecutorEntry>,
+    /// The workload to generate.
+    pub loadgen: LoadgenConfig,
+}
+
+impl ToJson for DeploymentSpec {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("seed", &self.seed)
+            .field("gateway", &self.gateway)
+            .field("executors", &self.executors)
+            .field("loadgen", &self.loadgen)
+            .build()
+    }
+}
+
+impl FromJson for DeploymentSpec {
+    fn from_json(v: &Json) -> Result<DeploymentSpec, WireError> {
+        let d = De::root(v);
+        Ok(DeploymentSpec {
+            seed: d.opt_or("seed", 42)?,
+            gateway: d.opt_or("gateway", GatewayConfig::default())?,
+            executors: d.req("executors")?,
+            loadgen: d.opt_or("loadgen", LoadgenConfig::default())?,
+        })
+    }
+}
+
+impl DeploymentSpec {
+    /// The in-code-equivalent spec: every published design of `datasets`
+    /// on one device, `shards` shards each — exactly what
+    /// [`synthetic_specs`] builds, as a serializable value. Useful for
+    /// emitting example spec files and for pinning that a spec file and
+    /// the in-code path route identically.
+    pub fn synthetic(
+        datasets: &[&str],
+        device: &str,
+        shards: usize,
+        seed: u64,
+        loadgen: LoadgenConfig,
+    ) -> DeploymentSpec {
+        let mut executors = Vec::new();
+        for ds in datasets {
+            for design in snn_config::all_designs().into_iter().filter(|d| d.dataset == *ds) {
+                executors.push(ExecutorEntry {
+                    design: design.name.to_string(),
+                    dataset: ds.to_string(),
+                    device: device.to_string(),
+                    shards,
+                });
+            }
+            for design in cnn_config::all_designs().into_iter().filter(|d| d.dataset == *ds) {
+                executors.push(ExecutorEntry {
+                    design: design.name.to_string(),
+                    dataset: ds.to_string(),
+                    device: device.to_string(),
+                    shards,
+                });
+            }
+        }
+        DeploymentSpec { seed, gateway: GatewayConfig::default(), executors, loadgen }
+    }
+}
+
+/// Resolve a [`DeploymentSpec`] into executor specs + dataset pools on
+/// the synthetic substrate.
+///
+/// Dataset substrates are seeded by first-seen dataset order, matching
+/// [`synthetic_specs`]'s enumeration — a spec listing the same designs in
+/// the same dataset order reproduces the in-code gateway bit for bit.
+pub fn resolve_spec(spec: &DeploymentSpec) -> Result<(Vec<ExecutorSpec>, Vec<DatasetPool>)> {
+    if spec.executors.is_empty() {
+        anyhow::bail!("deployment spec has no executors");
+    }
+    // Resolve every design name up front (and its dataset).
+    enum Resolved {
+        Snn(crate::snn::config::SnnDesign),
+        Cnn(crate::cnn_accel::config::CnnDesign),
+    }
+    let mut resolved = Vec::with_capacity(spec.executors.len());
+    let mut dataset_order: Vec<String> = Vec::new();
+    for e in &spec.executors {
+        let (r, design_ds) = if let Some(d) = snn_config::by_name(&e.design) {
+            let ds = d.dataset;
+            (Resolved::Snn(d), ds)
+        } else if let Some(d) = cnn_config::by_name(&e.design) {
+            let ds = d.dataset;
+            (Resolved::Cnn(d), ds)
+        } else {
+            anyhow::bail!("unknown design {:?} (no SNN or CNN table entry)", e.design);
+        };
+        if !e.dataset.is_empty() && e.dataset != design_ds {
+            anyhow::bail!(
+                "executor {:?}: dataset {:?} does not match the design's dataset {:?}",
+                e.design,
+                e.dataset,
+                design_ds
+            );
+        }
+        if !dataset_order.iter().any(|d| d == design_ds) {
+            dataset_order.push(design_ds.to_string());
+        }
+        resolved.push((r, design_ds.to_string()));
+    }
+    // One substrate per dataset, seeded by first-seen order.
+    let mut substrates = Vec::with_capacity(dataset_order.len());
+    for (di, ds) in dataset_order.iter().enumerate() {
+        substrates.push(dataset_substrate(ds, di, spec.seed)?);
+    }
+    let sub_of = |ds: &str| {
+        let i = dataset_order.iter().position(|d| d == ds).unwrap();
+        &substrates[i]
+    };
+
+    let mut specs = Vec::with_capacity(spec.executors.len());
+    for (e, (r, ds)) in spec.executors.iter().zip(resolved) {
+        let device = Device::by_name(&e.device)
+            .ok_or_else(|| anyhow::anyhow!("unknown device {:?} (pynq|zcu102)", e.device))?;
+        let sub = sub_of(&ds);
+        let design = match r {
+            Resolved::Snn(design) => DesignKind::Snn {
+                design,
+                t_steps: SYNTH_T_STEPS,
+                v_th: SYNTH_V_TH,
+                representative: sub.images[0].clone(),
+            },
+            Resolved::Cnn(design) => DesignKind::Cnn {
+                design,
+                arch: sub.arch.to_string(),
+                input_shape: sub.input_shape,
+            },
+        };
+        let net = match &design {
+            DesignKind::Snn { .. } => sub.snn_net.clone(),
+            DesignKind::Cnn { .. } => sub.cnn_net.clone(),
+        };
+        specs.push(ExecutorSpec {
+            dataset: ds,
+            device,
+            shards: e.shards.max(1),
+            net,
+            design,
+        });
+    }
+    let pools = dataset_order
+        .iter()
+        .zip(substrates)
+        .map(|(ds, sub)| DatasetPool { name: ds.clone(), images: sub.images })
+        .collect();
+    Ok((specs, pools))
+}
+
+impl Gateway {
+    /// Build and start a gateway (plus the dataset pools its scenario
+    /// draws from) directly from a parsed [`DeploymentSpec`] — the
+    /// file-driven front door to the serving stack. Equivalent to
+    /// [`resolve_spec`] + [`Gateway::start`].
+    pub fn from_spec(spec: &DeploymentSpec) -> Result<(Gateway, Vec<DatasetPool>)> {
+        let (specs, pools) = resolve_spec(spec)?;
+        let gateway = Gateway::start(specs, &spec.gateway)?;
+        Ok((gateway, pools))
+    }
 }
 
 #[cfg(test)]
@@ -594,5 +945,105 @@ mod tests {
             assert_eq!(Scenario::parse(s.name()), Some(s));
         }
         assert_eq!(Scenario::parse("nope"), None);
+    }
+
+    #[test]
+    fn deployment_spec_roundtrips_the_wire() {
+        let spec = DeploymentSpec::synthetic(
+            &["mnist", "cifar"],
+            "pynq",
+            2,
+            7,
+            LoadgenConfig { scenario: Scenario::Mixed, requests: 48, ..Default::default() },
+        );
+        let back: DeploymentSpec =
+            crate::util::wire::from_text(&crate::util::wire::to_text(&spec)).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn spec_defaults_fill_missing_fields() {
+        let spec: DeploymentSpec = crate::util::wire::from_text(
+            r#"{"executors": [{"design": "CNN4"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.seed, 42);
+        assert_eq!(spec.gateway, super::GatewayConfig::default());
+        assert_eq!(spec.loadgen, LoadgenConfig::default());
+        assert_eq!(spec.executors[0].device, "pynq");
+        assert_eq!(spec.executors[0].shards, 1);
+        assert_eq!(spec.executors[0].dataset, "");
+        // Empty dataset resolves to the design's own dataset.
+        let (specs, pools) = resolve_spec(&spec).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].dataset, "mnist");
+        assert_eq!(pools.len(), 1);
+        assert_eq!(pools[0].name, "mnist");
+        assert_eq!(pools[0].images.len(), 64);
+    }
+
+    #[test]
+    fn spec_resolution_rejects_bad_entries() {
+        let entry = |design: &str, dataset: &str, device: &str| ExecutorEntry {
+            design: design.to_string(),
+            dataset: dataset.to_string(),
+            device: device.to_string(),
+            shards: 1,
+        };
+        let mk = |e: ExecutorEntry| DeploymentSpec {
+            seed: 1,
+            gateway: super::GatewayConfig::default(),
+            executors: vec![e],
+            loadgen: LoadgenConfig::default(),
+        };
+        // Unknown design name.
+        let err = resolve_spec(&mk(entry("CNN99", "", "pynq"))).unwrap_err();
+        assert!(err.to_string().contains("CNN99"));
+        // Dataset mismatching the design's table entry.
+        let err = resolve_spec(&mk(entry("CNN4", "cifar", "pynq"))).unwrap_err();
+        assert!(err.to_string().contains("does not match"));
+        // Unknown device.
+        let err = resolve_spec(&mk(entry("CNN4", "mnist", "tpu"))).unwrap_err();
+        assert!(err.to_string().contains("tpu"));
+        // Empty fleet.
+        let empty = DeploymentSpec {
+            seed: 1,
+            gateway: super::GatewayConfig::default(),
+            executors: vec![],
+            loadgen: LoadgenConfig::default(),
+        };
+        assert!(resolve_spec(&empty).is_err());
+    }
+
+    /// The substrate contract: resolving a synthetic spec yields the same
+    /// executor fleet (names, datasets, shards, order) as the in-code
+    /// builder, over identical image pools.
+    #[test]
+    fn synthetic_spec_mirrors_in_code_specs() {
+        let spec = DeploymentSpec::synthetic(
+            &["mnist"],
+            "pynq",
+            2,
+            11,
+            LoadgenConfig::default(),
+        );
+        let (from_file, pools_file) = resolve_spec(&spec).unwrap();
+        let (in_code, pools_code) =
+            synthetic_specs(&["mnist"], crate::fpga::device::PYNQ_Z1, 2, 11).unwrap();
+        assert_eq!(from_file.len(), in_code.len());
+        for (a, b) in from_file.iter().zip(&in_code) {
+            assert_eq!(a.name(), b.name());
+            assert_eq!(a.dataset, b.dataset);
+            assert_eq!(a.shards, b.shards);
+            assert_eq!(a.device.name, b.device.name);
+        }
+        assert_eq!(pools_file.len(), pools_code.len());
+        for (a, b) in pools_file.iter().zip(&pools_code) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.images.len(), b.images.len());
+            for (x, y) in a.images.iter().zip(&b.images) {
+                assert_eq!(x.data, y.data, "image pools must be bit-identical");
+            }
+        }
     }
 }

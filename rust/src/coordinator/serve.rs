@@ -57,6 +57,8 @@ use crate::nn::snn::{snn_infer_scratch, SimScratch, SnnMode};
 use crate::nn::tensor::Tensor3;
 use crate::snn::accelerator::{CostTrace, SnnAccelerator};
 use crate::snn::config::SnnDesign;
+use crate::util::json::Json;
+use crate::util::wire::{De, FromJson, Obj, ToJson, WireError};
 
 use super::pool;
 
@@ -319,7 +321,7 @@ pub struct Server {
 }
 
 /// Aggregate statistics reported at shutdown.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ServerStats {
     /// Requests served (responses sent, successful or failed).
     pub served: usize,
@@ -337,6 +339,33 @@ pub struct ServerStats {
     /// [`SnnCostConfig`] is configured (single-request batches can hit the
     /// design-keyed cache); 0 for cost-less / CNN serving.
     pub cost_estimates: usize,
+}
+
+impl ToJson for ServerStats {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("served", &self.served)
+            .field("failed", &self.failed)
+            .field("batches", &self.batches)
+            .field("max_batch_seen", &self.max_batch_seen)
+            .field("backend_calls", &self.backend_calls)
+            .field("cost_estimates", &self.cost_estimates)
+            .build()
+    }
+}
+
+impl FromJson for ServerStats {
+    fn from_json(v: &Json) -> Result<ServerStats, WireError> {
+        let d = De::root(v);
+        Ok(ServerStats {
+            served: d.req("served")?,
+            failed: d.req("failed")?,
+            batches: d.req("batches")?,
+            max_batch_seen: d.req("max_batch_seen")?,
+            backend_calls: d.req("backend_calls")?,
+            cost_estimates: d.req("cost_estimates")?,
+        })
+    }
 }
 
 impl Server {

@@ -28,6 +28,8 @@ use crate::nn::tensor::Tensor3;
 use crate::snn::accelerator::SnnAccelerator;
 use crate::snn::config::SnnDesign;
 use crate::data::EvalSet;
+use crate::util::json::Json;
+use crate::util::wire::{De, FromJson, Obj, ToJson, WireError};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -104,6 +106,27 @@ pub struct SweepCounters {
     /// Per-device costings (`SnnAccelerator::cost`) executed
     /// (= images × designs × devices).
     pub costings: u64,
+}
+
+impl ToJson for SweepCounters {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("functional_passes", &self.functional_passes)
+            .field("event_walks", &self.event_walks)
+            .field("costings", &self.costings)
+            .build()
+    }
+}
+
+impl FromJson for SweepCounters {
+    fn from_json(v: &Json) -> Result<SweepCounters, WireError> {
+        let d = De::root(v);
+        Ok(SweepCounters {
+            functional_passes: d.req("functional_passes")?,
+            event_walks: d.req("event_walks")?,
+            costings: d.req("costings")?,
+        })
+    }
 }
 
 /// Sweep several SNN designs over `n` images of the evaluation set (one

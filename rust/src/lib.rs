@@ -20,8 +20,10 @@
 //!   artifacts (HLO text) and executes them from the Rust side.
 //! * [`coordinator`] — the experiment orchestrator and serving front-end.
 //! * [`experiments`] — one regenerator per paper table / figure.
-//! * [`util`] — offline substrates: JSON, RNG, histograms, tensor files,
-//!   a micro-bench harness and a mini property-testing harness.
+//! * [`util`] — offline substrates: JSON plus the typed wire codec and
+//!   streaming reader every boundary surface uses (`util::wire`), RNG,
+//!   histograms, tensor files, a micro-bench harness and a mini
+//!   property-testing harness.
 //!
 //! Python/JAX only ever runs at build time (`make artifacts`); the binary
 //! produced from this crate is self-contained.

@@ -3,24 +3,33 @@
 //!
 //! ```text
 //! repro list                             # available experiments
-//! repro table  --id 2 [--samples 1000]   # regenerate Table 2
-//! repro figure --id 7 [--samples 1000]   # regenerate Fig. 7
-//! repro all    [--samples 1000] [--out reports]
-//! repro serve  --dataset mnist --requests 64 [--batch 8]
+//! repro table  --id 2 [--samples 1000] [--json [--out FILE]]
+//! repro figure --id 7 [--samples 1000] [--json [--out FILE]]
+//! repro all    [--samples 1000] [--out reports] [--json [--json-out FILE]]
+//! repro serve  --dataset mnist --requests 64 [--batch 8] [--json [--out FILE]]
 //! repro loadgen --scenario steady --requests 64 [--shards 2] [--seed 42]
+//! repro loadgen --spec examples/specs/steady_pynq.json [--json --out out.json]
+//! repro checkjson --file out.json        # re-parse + reconcile totals
 //! repro validate                         # golden artifact checks
 //! ```
+//!
+//! Every subcommand validates its options: a typo'd `--option` errors
+//! with the closest valid spelling instead of being silently ignored.
+//! `--json` emits the stable wire-schema artifacts documented in
+//! README.md §Wire schema (built on `util::wire`).
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use spikebench::coordinator::gateway::{Gateway, GatewayConfig, Slo};
-use spikebench::coordinator::loadgen::{self, LoadgenConfig, Scenario};
+use spikebench::coordinator::gateway::{Gateway, Slo};
+use spikebench::coordinator::loadgen::{self, DeploymentSpec, LoadgenConfig, Scenario};
 use spikebench::coordinator::serve::{select_backend, ServeConfig, Server, SnnCostConfig};
 use spikebench::experiments::{ctx::Ctx, registry, run_by_id};
 use spikebench::fpga::device::PYNQ_Z1;
 use spikebench::nn::loader::{load_network, WeightKind};
 use spikebench::report;
 use spikebench::util::cli::Args;
+use spikebench::util::json::Json;
+use spikebench::util::wire::{self, JsonEvent, JsonReader, Obj};
 
 fn main() {
     if let Err(e) = run() {
@@ -30,9 +39,17 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: repro <list|table|figure|all|ablation|serve|loadgen|validate> [--id N] [--samples N] [--out DIR]\n\
+    "usage: repro <list|table|figure|all|ablation|serve|loadgen|checkjson|validate> [--id N] [--samples N] [--out DIR]\n\
      see `repro list` for experiment ids; `repro loadgen` drives the\n\
-     multi-design gateway with a deterministic scenario (steady|bursty|ramp|mixed)"
+     multi-design gateway with a deterministic scenario (steady|bursty|ramp|mixed)\n\
+     or a JSON deployment spec (--spec FILE); `--json [--out FILE]` emits\n\
+     machine-readable artifacts; `repro checkjson --file F` re-parses one"
+}
+
+/// Validate the subcommand's options, erroring with the typo'd name and
+/// the closest valid spelling.
+fn check_opts(cmd: &str, args: &Args, known: &[&str]) -> Result<()> {
+    args.finish(known).map_err(|e| anyhow!("{cmd}: {e}\n{}", usage()))
 }
 
 fn run() -> Result<()> {
@@ -40,6 +57,7 @@ fn run() -> Result<()> {
     let args = Args::from_env(1);
     match cmd.as_str() {
         "list" => {
+            check_opts("list", &args, &[])?;
             println!("{:<10} {}", "id", "title");
             for e in registry() {
                 println!("{:<10} {}", e.id, e.title);
@@ -47,6 +65,7 @@ fn run() -> Result<()> {
             Ok(())
         }
         "table" | "figure" => {
+            check_opts(&cmd, &args, &["id", "samples", "json", "out"])?;
             let id = args
                 .get("id")
                 .map(|s| {
@@ -60,23 +79,40 @@ fn run() -> Result<()> {
             let n = args.get_usize("samples", 1000);
             let mut ctx = Ctx::load()?;
             let out = run_by_id(&id, &mut ctx, n)?;
-            println!("{out}");
-            Ok(())
+            emit_text_or_json(&args, &out, || report::experiment_json(&id, n, &out))
         }
         "all" => {
+            check_opts("all", &args, &["samples", "out", "json", "json-out"])?;
             let n = args.get_usize("samples", 1000);
             let out_dir = std::path::PathBuf::from(args.get_or("out", "reports"));
+            let json_requested = args.flag("json") || args.get("json").is_some();
             let mut ctx = Ctx::load()?;
+            let mut artifacts = Vec::new();
             for e in registry() {
                 eprintln!(">>> {} ({})", e.id, e.title);
                 let out = (e.run)(&mut ctx, n)?;
                 println!("{out}");
                 report::write_report(&out_dir, e.id, &out)?;
+                if json_requested {
+                    artifacts.push(report::experiment_json(e.id, n, &out));
+                }
+            }
+            if json_requested {
+                let body = Obj::new()
+                    .field("kind", "experiment_suite")
+                    .field("samples", &n)
+                    .raw("experiments", Json::Arr(artifacts))
+                    .build();
+                let name = args.get("json-out").or_else(|| args.get("json")).unwrap_or("all.json");
+                let path = out_dir.join(name);
+                report::write_json(&path, &body)?;
+                eprintln!("json artifact written to {}", path.display());
             }
             eprintln!("reports written to {}", out_dir.display());
             Ok(())
         }
         "ablation" => {
+            check_opts("ablation", &args, &["id", "samples"])?;
             let n = args.get_usize("samples", 300);
             let mut ctx = Ctx::load()?;
             match args.get("id") {
@@ -91,7 +127,11 @@ fn run() -> Result<()> {
         }
         "serve" => serve_demo(&args),
         "loadgen" => loadgen_demo(&args),
-        "validate" => validate(&args),
+        "checkjson" => checkjson(&args),
+        "validate" => {
+            check_opts("validate", &args, &["samples"])?;
+            validate(&args)
+        }
         _ => {
             println!("{}", usage());
             Ok(())
@@ -99,9 +139,34 @@ fn run() -> Result<()> {
     }
 }
 
+/// Shared `--json [--out FILE]` emission: without `--json` print the
+/// text to stdout; with it, the human text always moves to stderr so
+/// stdout stays machine-readable, and the JSON artifact goes to stdout
+/// or to the out file. `--json FILE` (the flag given a value) is
+/// accepted as shorthand for `--json --out FILE` rather than being
+/// silently swallowed as an unused option value.
+fn emit_text_or_json(args: &Args, text: &str, body: impl FnOnce() -> Json) -> Result<()> {
+    let json_requested = args.flag("json") || args.get("json").is_some();
+    if !json_requested {
+        println!("{text}");
+        return Ok(());
+    }
+    eprintln!("{text}");
+    let body = body();
+    match args.get("out").or_else(|| args.get("json")) {
+        Some(path) => {
+            report::write_json(std::path::Path::new(path), &body)?;
+            eprintln!("json artifact written to {path}");
+        }
+        None => println!("{}", body.pretty()),
+    }
+    Ok(())
+}
+
 /// Serving demo: batched requests through the best available backend
 /// (PJRT when the feature + artifact allow it), hardware costs attached.
 fn serve_demo(args: &Args) -> Result<()> {
+    check_opts("serve", args, &["dataset", "requests", "batch", "json", "out"])?;
     let ds = args.get_or("dataset", "mnist").to_string();
     let n_req = args.get_usize("requests", 64);
     let batch = args.get_usize("batch", 8);
@@ -131,7 +196,7 @@ fn serve_demo(args: &Args) -> Result<()> {
     let hlo = ctx.manifest.file(&ds, "cnn_hlo").ok();
     let fallback = load_network(&ctx.manifest, &ds, WeightKind::Cnn)?;
     let (backend, label) = select_backend(hlo, fallback);
-    println!("backend: {label}");
+    eprintln!("backend: {label}");
 
     let server = Server::start(backend, cfg);
     let t0 = std::time::Instant::now();
@@ -152,85 +217,214 @@ fn serve_demo(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed();
     let stats = server.shutdown();
-    println!(
+    let accuracy = correct as f64 / n_req as f64;
+    let mean_batch = batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len().max(1) as f64;
+    let text = format!(
         "served {n_req} requests in {:.2?} ({:.0} req/s) | accuracy {:.1}% | \
-         mean batch {:.1} | simulated accel energy {:.3} mJ total",
+         mean batch {:.1} | simulated accel energy {:.3} mJ total\n\
+         executor: {} batches, max batch {}, {} backend calls, {} cost estimates",
         wall,
         n_req as f64 / wall.as_secs_f64(),
-        100.0 * correct as f64 / n_req as f64,
-        batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len().max(1) as f64,
+        100.0 * accuracy,
+        mean_batch,
         accel_energy * 1e3,
+        stats.batches,
+        stats.max_batch_seen,
+        stats.backend_calls,
+        stats.cost_estimates
     );
-    println!(
-        "executor: {} batches, max batch {}, {} backend calls, {} cost estimates",
-        stats.batches, stats.max_batch_seen, stats.backend_calls, stats.cost_estimates
-    );
-    Ok(())
+    emit_text_or_json(args, &text, || {
+        Obj::new()
+            .field("kind", "serve")
+            .field("dataset", &ds)
+            .field("backend", &label)
+            .field("requests", &n_req)
+            .field("accuracy", &accuracy)
+            .field("mean_batch", &mean_batch)
+            .field("wall_ns", &(wall.as_nanos() as u64))
+            .field("throughput_rps", &(n_req as f64 / wall.as_secs_f64()))
+            .field("accel_energy_j", &accel_energy)
+            .field("stats", &stats)
+            .build()
+    })
 }
 
 /// Multi-design gateway demo: every published SNN + CNN design of the
 /// requested datasets behind one router, driven by a deterministic
-/// scenario.  Runs on synthetic (seeded) weights and images, so it needs
-/// no artifacts directory — the whole serving stack (pricing, routing,
-/// sharding, batching) is exercised anywhere, including CI.
+/// scenario — configured either from CLI flags or from a JSON
+/// `DeploymentSpec` file (`--spec`). Runs on synthetic (seeded) weights
+/// and images, so it needs no artifacts directory — the whole serving
+/// stack (pricing, routing, sharding, batching) is exercised anywhere,
+/// including CI.
 fn loadgen_demo(args: &Args) -> Result<()> {
-    let scenario_s = args.get_or("scenario", "steady");
-    let scenario = Scenario::parse(scenario_s)
-        .ok_or_else(|| anyhow!("unknown scenario {scenario_s} (steady|bursty|ramp|mixed)"))?;
-    let requests = args.get_usize("requests", 64);
-    let shards = args.get_usize("shards", 2).max(1);
-    let seed = args.get_usize("seed", 42) as u64;
-    let slo_ms = args
-        .get("slo-ms")
-        .map(|s| s.parse::<f64>().map_err(|e| anyhow!("bad --slo-ms: {e}")))
-        .transpose()?
-        .unwrap_or(50.0);
-    let device = spikebench::fpga::device::Device::by_name(args.get_or("device", "pynq"))
-        .ok_or_else(|| anyhow!("unknown device (pynq|zcu102)"))?;
-    let datasets: Vec<&str> = match scenario {
-        Scenario::Mixed => vec!["mnist", "svhn", "cifar"],
-        _ => vec![args.get_or("dataset", "mnist")],
+    check_opts(
+        "loadgen",
+        args,
+        &[
+            "scenario", "requests", "shards", "seed", "slo-ms", "device", "dataset", "spec",
+            "json", "out",
+        ],
+    )?;
+    let spec = match args.get("spec") {
+        Some(path) => {
+            // The spec file is the single source of truth: a tuning
+            // option alongside --spec would be silently out-voted, so
+            // it is an error instead.
+            for o in ["scenario", "requests", "shards", "seed", "slo-ms", "device", "dataset"] {
+                if args.get(o).is_some() || args.flag(o) {
+                    bail!("--{o} cannot be combined with --spec (edit the spec file instead)");
+                }
+            }
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading spec {path}"))?;
+            wire::from_text::<DeploymentSpec>(&text)
+                .map_err(|e| anyhow!("{path}: {e}"))?
+        }
+        None => {
+            let scenario_s = args.get_or("scenario", "steady");
+            let scenario = Scenario::parse(scenario_s).ok_or_else(|| {
+                anyhow!("unknown scenario {scenario_s} (steady|bursty|ramp|mixed)")
+            })?;
+            let device = args.get_or("device", "pynq");
+            spikebench::fpga::device::Device::by_name(device)
+                .ok_or_else(|| anyhow!("unknown device (pynq|zcu102)"))?;
+            let seed = args.get_usize("seed", 42) as u64;
+            let slo_ms = args
+                .get("slo-ms")
+                .map(|s| s.parse::<f64>().map_err(|e| anyhow!("bad --slo-ms: {e}")))
+                .transpose()?
+                .unwrap_or(50.0);
+            let datasets: Vec<&str> = match scenario {
+                Scenario::Mixed => vec!["mnist", "svhn", "cifar"],
+                _ => vec![args.get_or("dataset", "mnist")],
+            };
+            DeploymentSpec::synthetic(
+                &datasets,
+                device,
+                args.get_usize("shards", 2).max(1),
+                seed,
+                LoadgenConfig {
+                    scenario,
+                    requests: args.get_usize("requests", 64),
+                    seed,
+                    slo: Slo::latency(slo_ms / 1e3),
+                    ..Default::default()
+                },
+            )
+        }
     };
 
-    let (specs, pools) = loadgen::synthetic_specs(&datasets, device, shards, seed)?;
-    let n_specs = specs.len();
-    let gateway = Gateway::start(specs, &GatewayConfig::default())?;
+    let (gateway, pools) = Gateway::from_spec(&spec)?;
+    let mut head = String::new();
     for (name, reason) in gateway.rejected() {
-        eprintln!("design {name} rejected: {reason}");
+        head.push_str(&format!("design {name} rejected: {reason}\n"));
     }
-    println!(
-        "gateway: {} designs x {shards} shards on {} ({} rejected as unfit)",
-        n_specs - gateway.rejected().len(),
-        device.name,
+    let live_shards: usize = spec
+        .executors
+        .iter()
+        .filter(|e| {
+            !gateway.rejected().iter().any(|(n, _)| n.eq_ignore_ascii_case(&e.design))
+        })
+        .map(|e| e.shards.max(1))
+        .sum();
+    head.push_str(&format!(
+        "gateway: {} designs across {} shards ({} rejected as unfit)\n",
+        spec.executors.len() - gateway.rejected().len(),
+        live_shards,
         gateway.rejected().len()
-    );
-    for d in gateway.router().table() {
-        println!(
-            "  {:<16} {:<6} {:>10.3} ms {:>10.2} uJ  ({})",
+    ));
+    let table = gateway.router().table();
+    for d in &table {
+        head.push_str(&format!(
+            "  {:<16} {:<6} {:>10.3} ms {:>10.2} uJ  ({} on {})\n",
             d.name,
             d.dataset,
             d.latency_s * 1e3,
             d.energy_j * 1e6,
-            if d.is_snn { "SNN" } else { "CNN" }
-        );
+            if d.is_snn { "SNN" } else { "CNN" },
+            d.device_name,
+        ));
     }
 
-    let cfg = LoadgenConfig {
-        scenario,
-        requests,
-        seed,
-        slo: Slo::latency(slo_ms / 1e3),
-        ..Default::default()
-    };
-    let report = loadgen::run(&gateway, &cfg, &pools)?;
-    print!("{}", report.render());
+    let report = loadgen::run(&gateway, &spec.loadgen, &pools)?;
     let stats = gateway.shutdown();
-    println!(
-        "executors: {} batches, {} backend calls, {} cost estimates across {} shards",
+    let text = format!(
+        "{head}{}executors: {} batches, {} backend calls, {} cost estimates across {} shards",
+        report.render(),
         stats.batches,
         stats.backend_calls,
         stats.designs.iter().map(|d| d.cost_estimates).sum::<usize>(),
         stats.shards.len()
+    );
+    emit_text_or_json(args, &text, || {
+        Obj::new()
+            .field("kind", "loadgen")
+            .field("spec", &spec)
+            .field("table", &table)
+            .field("report", &report)
+            .field("gateway", &stats)
+            .build()
+    })
+}
+
+/// Re-parse a `repro loadgen --json` artifact with the streaming
+/// `JsonReader` (no tree) and verify its totals reconcile:
+/// `gateway.routed` must equal the sum of the per-design `routed`
+/// counters. The CI release leg runs this against a spec-driven run.
+fn checkjson(args: &Args) -> Result<()> {
+    check_opts("checkjson", args, &["file"])?;
+    let path = args.get("file").ok_or_else(|| anyhow!("--file required\n{}", usage()))?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let mut r = JsonReader::new(&text);
+    let mut total: Option<f64> = None;
+    let mut per_design: Vec<f64> = Vec::new();
+    r.expect_object().map_err(|e| anyhow!("{path}: {e}"))?;
+    while let Some(key) = r.next_key()? {
+        if key != "gateway" {
+            r.skip_value()?;
+            continue;
+        }
+        r.expect_object()?;
+        while let Some(gk) = r.next_key()? {
+            match gk.as_str() {
+                "routed" => total = Some(r.num()?),
+                "designs" => {
+                    r.expect_array()?;
+                    loop {
+                        match r.next()? {
+                            Some(JsonEvent::ObjectStart) => {
+                                while let Some(dk) = r.next_key()? {
+                                    if dk == "routed" {
+                                        per_design.push(r.num()?);
+                                    } else {
+                                        r.skip_value()?;
+                                    }
+                                }
+                            }
+                            Some(JsonEvent::ArrayEnd) => break,
+                            _ => bail!("{path}: gateway.designs must hold objects"),
+                        }
+                    }
+                }
+                _ => r.skip_value()?,
+            }
+        }
+    }
+    r.end().map_err(|e| anyhow!("{path}: {e}"))?;
+    let total = total.ok_or_else(|| anyhow!("{path}: no gateway.routed field"))?;
+    let sum: f64 = per_design.iter().sum();
+    if per_design.is_empty() {
+        bail!("{path}: no per-design routed counters");
+    }
+    if total != sum {
+        bail!(
+            "{path}: totals do not reconcile: routed {total} != Σ per-design routed {sum}"
+        );
+    }
+    println!(
+        "{path}: ok — routed {total} == Σ routed over {} designs",
+        per_design.len()
     );
     Ok(())
 }

@@ -1,4 +1,11 @@
 //! Load networks + metadata from `artifacts/` (manifest.json + SBT1 blobs).
+//!
+//! The manifest is parsed with the streaming `util::wire::JsonReader` —
+//! events are consumed as they are lexed and unknown fields are skipped
+//! in place, so no intermediate [`crate::util::json::Json`] tree is ever
+//! built. Manifests carry per-class spike tables and file maps for every
+//! dataset; streaming keeps peak memory at one string buffer regardless
+//! of how many datasets (or future weight-array fields) the file grows.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -9,7 +16,7 @@ use super::arch::{parse_arch, LayerSpec};
 use super::conv::ConvWeights;
 use super::dense::DenseWeights;
 use super::network::{LayerWeights, Network};
-use crate::util::json::Json;
+use crate::util::wire::JsonReader;
 use crate::util::tensorfile::{read_tensors, Tensor};
 
 /// Parsed manifest entry for one dataset.
@@ -61,66 +68,32 @@ impl Manifest {
     pub fn load(root: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(root.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", root.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        Manifest::parse(root, &text)
+    }
+
+    /// Parse manifest text (streamed — no intermediate JSON tree).
+    pub fn parse(root: &Path, text: &str) -> Result<Manifest> {
+        let mut r = JsonReader::new(text);
         let mut datasets = BTreeMap::new();
-        let ds_obj = j
-            .get("datasets")
-            .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("manifest missing 'datasets'"))?;
-        for (name, d) in ds_obj {
-            let shape = d
-                .get("input_shape")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("{name}: missing input_shape"))?;
-            if shape.len() != 3 {
-                bail!("{name}: input_shape must be rank 3");
+        let mut saw_datasets = false;
+        r.expect_object().map_err(|e| anyhow!("manifest.json: {e}"))?;
+        while let Some(key) = r.next_key().map_err(|e| anyhow!("manifest.json: {e}"))? {
+            if key == "datasets" {
+                saw_datasets = true;
+                r.expect_object().map_err(|e| anyhow!("manifest.json: {e}"))?;
+                while let Some(name) =
+                    r.next_key().map_err(|e| anyhow!("manifest.json: {e}"))?
+                {
+                    let info = parse_dataset(&mut r, &name)?;
+                    datasets.insert(name, info);
+                }
+            } else {
+                r.skip_value().map_err(|e| anyhow!("manifest.json: {e}"))?;
             }
-            let get_f = |k: &str| d.get(k).and_then(Json::as_f64).unwrap_or(0.0);
-            let files = d
-                .get("files")
-                .and_then(Json::as_obj)
-                .map(|m| {
-                    m.iter()
-                        .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
-                        .collect()
-                })
-                .unwrap_or_default();
-            let spikes_per_class = (0..10)
-                .map(|c| {
-                    d.get("spikes_per_class")
-                        .and_then(|o| o.get(&c.to_string()))
-                        .and_then(Json::as_f64)
-                        .unwrap_or(0.0)
-                })
-                .collect();
-            datasets.insert(
-                name.clone(),
-                DatasetInfo {
-                    name: name.clone(),
-                    arch: d
-                        .get("arch")
-                        .and_then(Json::as_str)
-                        .ok_or_else(|| anyhow!("{name}: missing arch"))?
-                        .to_string(),
-                    input_shape: (
-                        shape[0].as_usize().unwrap_or(0),
-                        shape[1].as_usize().unwrap_or(0),
-                        shape[2].as_usize().unwrap_or(0),
-                    ),
-                    t_steps: d.get("t_steps").and_then(Json::as_usize).unwrap_or(4),
-                    v_th: get_f("v_th") as f32,
-                    cnn_bits: get_f("cnn_bits") as u32,
-                    snn_bits: get_f("snn_bits") as u32,
-                    param_count: d.get("param_count").and_then(Json::as_usize).unwrap_or(0),
-                    accuracy_cnn: get_f("accuracy_cnn"),
-                    accuracy_snn: get_f("accuracy_snn"),
-                    spikes_mean: get_f("spikes_mean"),
-                    spikes_min: get_f("spikes_min"),
-                    spikes_max: get_f("spikes_max"),
-                    spikes_per_class,
-                    files,
-                },
-            );
+        }
+        r.end().map_err(|e| anyhow!("manifest.json: {e}"))?;
+        if !saw_datasets {
+            bail!("manifest missing 'datasets'");
         }
         Ok(Manifest { root: root.to_path_buf(), datasets })
     }
@@ -141,6 +114,89 @@ impl Manifest {
             .ok_or_else(|| anyhow!("{ds}: no '{kind}' file in manifest"))?;
         Ok(self.root.join(f))
     }
+}
+
+/// Stream one dataset object off the reader (the reader is positioned at
+/// the dataset's value). Unknown fields — including large future
+/// weight-array fields — are skipped without being materialized.
+fn parse_dataset(r: &mut JsonReader, name: &str) -> Result<DatasetInfo> {
+    let ctx = |e: crate::util::json::JsonError| anyhow!("{name}: {e}");
+    r.expect_object().map_err(ctx)?;
+    let mut arch: Option<String> = None;
+    let mut input_shape: Option<(usize, usize, usize)> = None;
+    let mut t_steps = 4usize;
+    let mut v_th = 0.0f32;
+    let mut cnn_bits = 0u32;
+    let mut snn_bits = 0u32;
+    let mut param_count = 0usize;
+    let mut accuracy_cnn = 0.0;
+    let mut accuracy_snn = 0.0;
+    let mut spikes_mean = 0.0;
+    let mut spikes_min = 0.0;
+    let mut spikes_max = 0.0;
+    let mut spikes_per_class = vec![0.0; 10];
+    let mut files = BTreeMap::new();
+    while let Some(key) = r.next_key().map_err(ctx)? {
+        match key.as_str() {
+            "arch" => arch = Some(r.str_value().map_err(ctx)?),
+            "input_shape" => {
+                let dims = r.num_array().map_err(ctx)?;
+                if dims.len() != 3 {
+                    bail!("{name}: input_shape must be rank 3");
+                }
+                let d = |i: usize| {
+                    let v = dims[i];
+                    if v.fract() == 0.0 && v >= 0.0 { v as usize } else { 0 }
+                };
+                input_shape = Some((d(0), d(1), d(2)));
+            }
+            "t_steps" => t_steps = r.num().map_err(ctx)? as usize,
+            "v_th" => v_th = r.num().map_err(ctx)? as f32,
+            "cnn_bits" => cnn_bits = r.num().map_err(ctx)? as u32,
+            "snn_bits" => snn_bits = r.num().map_err(ctx)? as u32,
+            "param_count" => param_count = r.num().map_err(ctx)? as usize,
+            "accuracy_cnn" => accuracy_cnn = r.num().map_err(ctx)?,
+            "accuracy_snn" => accuracy_snn = r.num().map_err(ctx)?,
+            "spikes_mean" => spikes_mean = r.num().map_err(ctx)?,
+            "spikes_min" => spikes_min = r.num().map_err(ctx)?,
+            "spikes_max" => spikes_max = r.num().map_err(ctx)?,
+            "spikes_per_class" => {
+                r.expect_object().map_err(ctx)?;
+                while let Some(class) = r.next_key().map_err(ctx)? {
+                    let v = r.num().map_err(ctx)?;
+                    if let Ok(c) = class.parse::<usize>() {
+                        if c < spikes_per_class.len() {
+                            spikes_per_class[c] = v;
+                        }
+                    }
+                }
+            }
+            "files" => {
+                r.expect_object().map_err(ctx)?;
+                while let Some(kind) = r.next_key().map_err(ctx)? {
+                    files.insert(kind, r.str_value().map_err(ctx)?);
+                }
+            }
+            _ => r.skip_value().map_err(ctx)?,
+        }
+    }
+    Ok(DatasetInfo {
+        name: name.to_string(),
+        arch: arch.ok_or_else(|| anyhow!("{name}: missing arch"))?,
+        input_shape: input_shape.ok_or_else(|| anyhow!("{name}: missing input_shape"))?,
+        t_steps,
+        v_th,
+        cnn_bits,
+        snn_bits,
+        param_count,
+        accuracy_cnn,
+        accuracy_snn,
+        spikes_mean,
+        spikes_min,
+        spikes_max,
+        spikes_per_class,
+        files,
+    })
 }
 
 /// Which weight set to load from the blob.
@@ -267,5 +323,69 @@ mod tests {
         let arch = parse_arch("2C1").unwrap();
         let m = BTreeMap::new();
         assert!(network_from_tensors(&arch, (1, 4, 4), &m, "x").is_err());
+    }
+
+    #[test]
+    fn manifest_streams_without_a_tree() {
+        let text = r#"{
+            "version": 3,
+            "generator": {"tool": "compile.py", "nested": [1, [2, {"x": 3}]]},
+            "datasets": {
+                "mnist": {
+                    "arch": "16C3-P2-10",
+                    "input_shape": [1, 28, 28],
+                    "t_steps": 6,
+                    "v_th": 0.75,
+                    "cnn_bits": 8,
+                    "snn_bits": 8,
+                    "param_count": 12345,
+                    "accuracy_cnn": 0.98,
+                    "accuracy_snn": 0.97,
+                    "spikes_mean": 1000.5,
+                    "spikes_per_class": {"0": 1.5, "3": 2.5, "11": 9.0},
+                    "files": {"weights": "mnist/w.sbt", "cnn_hlo": "mnist/f.hlo"},
+                    "future_weight_array": [0.1, 0.2, 0.3]
+                }
+            }
+        }"#;
+        let m = Manifest::parse(std::path::Path::new("arts"), text).unwrap();
+        let d = m.dataset("mnist").unwrap();
+        assert_eq!(d.arch, "16C3-P2-10");
+        assert_eq!(d.input_shape, (1, 28, 28));
+        assert_eq!(d.t_steps, 6);
+        assert_eq!(d.v_th, 0.75);
+        assert_eq!(d.param_count, 12345);
+        assert_eq!(d.spikes_per_class[0], 1.5);
+        assert_eq!(d.spikes_per_class[3], 2.5);
+        assert_eq!(d.spikes_per_class[5], 0.0); // absent classes default
+        assert_eq!(d.files["weights"], "mnist/w.sbt");
+        assert_eq!(m.file("mnist", "cnn_hlo").unwrap(), std::path::Path::new("arts/mnist/f.hlo"));
+        // Defaults for wholly absent numeric fields.
+        assert_eq!(d.spikes_min, 0.0);
+    }
+
+    #[test]
+    fn manifest_parse_errors_are_located() {
+        // Missing datasets key.
+        assert!(Manifest::parse(std::path::Path::new("a"), r#"{"other": 1}"#)
+            .unwrap_err()
+            .to_string()
+            .contains("datasets"));
+        // Missing arch inside a dataset.
+        let err = Manifest::parse(
+            std::path::Path::new("a"),
+            r#"{"datasets": {"mnist": {"input_shape": [1, 2, 3]}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("mnist"), "{err}");
+        // Wrong-rank shape.
+        let err = Manifest::parse(
+            std::path::Path::new("a"),
+            r#"{"datasets": {"mnist": {"arch": "x", "input_shape": [1, 2]}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("rank 3"), "{err}");
+        // Truncated document.
+        assert!(Manifest::parse(std::path::Path::new("a"), r#"{"datasets": {"m""#).is_err());
     }
 }

@@ -1,15 +1,43 @@
-//! Report emission: write regenerated tables/figures to disk and build
-//! EXPERIMENTS.md fragments.
+//! Report emission: write regenerated tables/figures to disk (text and
+//! machine-readable JSON) and build EXPERIMENTS.md fragments.
 
 use std::path::Path;
 
 use anyhow::Result;
+
+use crate::util::json::Json;
 
 /// Write one experiment's output under `dir/<id>.txt`.
 pub fn write_report(dir: &Path, id: &str, content: &str) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     std::fs::write(dir.join(format!("{id}.txt")), content)?;
     Ok(())
+}
+
+/// Write a JSON artifact (pretty-printed, trailing newline) to `path`,
+/// creating parent directories. The artifact body is any value built
+/// through the `util::wire` codec.
+pub fn write_json(path: &Path, body: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, body.pretty() + "\n")?;
+    Ok(())
+}
+
+/// Wrap an experiment's rendered text in the stable JSON artifact shape
+/// used by `repro table|figure|all --json`:
+/// `{"kind": "experiment", "id", "samples", "text"}`.
+pub fn experiment_json(id: &str, samples: usize, text: &str) -> Json {
+    use crate::util::wire::Obj;
+    Obj::new()
+        .field("kind", "experiment")
+        .field("id", id)
+        .field("samples", &samples)
+        .field("text", text)
+        .build()
 }
 
 /// Markdown fence helper for EXPERIMENTS.md fragments.
@@ -33,5 +61,19 @@ mod tests {
         let s = md_section("T", "body");
         assert!(s.starts_with("### T"));
         assert!(s.contains("```text\nbody\n```"));
+    }
+
+    #[test]
+    fn writes_json_artifacts() {
+        let path = std::env::temp_dir().join("spikebench_report_json/t.json");
+        let body = experiment_json("table2", 100, "rows\n");
+        write_json(&path, &body).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        let back = Json::parse(text.trim_end()).unwrap();
+        assert_eq!(back.get("kind").unwrap().as_str(), Some("experiment"));
+        assert_eq!(back.get("id").unwrap().as_str(), Some("table2"));
+        assert_eq!(back.get("samples").unwrap().as_usize(), Some(100));
+        assert_eq!(back.get("text").unwrap().as_str(), Some("rows\n"));
     }
 }

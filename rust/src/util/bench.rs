@@ -1,26 +1,92 @@
 //! Criterion-style micro-bench harness (criterion is not in the offline
 //! vendor set).
 //!
-//! Provides warmup, multiple timed samples, and mean/σ/min reporting, plus
-//! a `BenchSink` to defeat dead-code elimination.  The `cargo bench`
-//! targets under `rust/benches/` are `harness = false` binaries that use
-//! this module; each one regenerates a paper table or figure and then
-//! times its hot path.
+//! Provides warmup, multiple timed samples, and mean/σ/min reporting.
+//! Every timed run is also recorded as a [`BenchResult`] — a typed,
+//! wire-serializable measurement ([`super::wire::ToJson`] /
+//! [`super::wire::FromJson`]) — so a bench binary can emit a machine-
+//! readable `BENCH_*.json` trajectory next to its human-readable table
+//! via [`Bench::results`]. The `cargo bench` targets under
+//! `rust/benches/` are `harness = false` binaries that use this module;
+//! each one regenerates a paper table or figure and then times its hot
+//! path.
 
+use std::cell::RefCell;
 use std::hint::black_box;
 use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::wire::{De, FromJson, Obj, ToJson, WireError};
+
+/// One recorded benchmark measurement (all durations in seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchResult {
+    /// Bench group the measurement belongs to ([`Bench::new`]'s name).
+    pub group: String,
+    /// Label of the timed closure.
+    pub label: String,
+    /// Number of timed samples taken.
+    pub samples: usize,
+    /// Mean sample duration (s).
+    pub mean_s: f64,
+    /// Fastest sample (s).
+    pub min_s: f64,
+    /// Slowest sample (s).
+    pub max_s: f64,
+    /// Standard deviation across samples (s).
+    pub sigma_s: f64,
+    /// Work items per second, when timed via [`Bench::run_throughput`].
+    pub throughput_items_per_s: Option<f64>,
+}
+
+impl ToJson for BenchResult {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("group", &self.group)
+            .field("label", &self.label)
+            .field("samples", &self.samples)
+            .field("mean_s", &self.mean_s)
+            .field("min_s", &self.min_s)
+            .field("max_s", &self.max_s)
+            .field("sigma_s", &self.sigma_s)
+            .field("throughput_items_per_s", &self.throughput_items_per_s)
+            .build()
+    }
+}
+
+impl FromJson for BenchResult {
+    fn from_json(v: &Json) -> Result<BenchResult, WireError> {
+        let d = De::root(v);
+        Ok(BenchResult {
+            group: d.req("group")?,
+            label: d.req("label")?,
+            samples: d.req("samples")?,
+            mean_s: d.req("mean_s")?,
+            min_s: d.req("min_s")?,
+            max_s: d.req("max_s")?,
+            sigma_s: d.req("sigma_s")?,
+            throughput_items_per_s: d.opt_or("throughput_items_per_s", None)?,
+        })
+    }
+}
 
 /// One benchmark group, printed in a criterion-like layout.
 pub struct Bench {
     name: String,
     warmup: usize,
     samples: usize,
+    results: RefCell<Vec<BenchResult>>,
 }
 
 impl Bench {
     /// Group with default warmup (3) and sample (10) counts.
     pub fn new(name: &str) -> Self {
-        Bench { name: name.to_string(), warmup: 3, samples: 10 }
+        Bench {
+            name: name.to_string(),
+            warmup: 3,
+            samples: 10,
+            results: RefCell::new(Vec::new()),
+        }
     }
 
     /// Set the number of untimed warmup iterations.
@@ -35,7 +101,8 @@ impl Bench {
         self
     }
 
-    /// Time `f` and print statistics; returns the mean duration.
+    /// Time `f` and print statistics; returns the mean duration. The
+    /// measurement is also recorded (see [`Bench::results`]).
     pub fn run<T, F: FnMut() -> T>(&self, label: &str, mut f: F) -> Duration {
         for _ in 0..self.warmup {
             black_box(f());
@@ -67,15 +134,41 @@ impl Bench {
             fmt_dur(max),
             fmt_dur(Duration::from_secs_f64(var.sqrt())),
         );
+        self.results.borrow_mut().push(BenchResult {
+            group: self.name.clone(),
+            label: label.to_string(),
+            samples: self.samples,
+            mean_s,
+            min_s: min.as_secs_f64(),
+            max_s: max.as_secs_f64(),
+            sigma_s: var.sqrt(),
+            throughput_items_per_s: None,
+        });
         mean
     }
 
     /// Time `f` over `items` work units; also prints throughput.
     pub fn run_throughput<T, F: FnMut() -> T>(&self, label: &str, items: u64, f: F) -> Duration {
         let mean = self.run(label, f);
-        let per_sec = items as f64 / mean.as_secs_f64();
+        // A mean that quantizes to zero (sub-tick closure) must not
+        // produce an infinite — and thus unserializable — throughput.
+        let per_sec = items as f64 / mean.as_secs_f64().max(1e-9);
         println!("{}/{label:<32}   throughput {:.3e} items/s", self.name, per_sec);
+        if let Some(last) = self.results.borrow_mut().last_mut() {
+            last.throughput_items_per_s = Some(per_sec);
+        }
         mean
+    }
+
+    /// Every measurement recorded so far, in run order.
+    pub fn results(&self) -> Vec<BenchResult> {
+        self.results.borrow().clone()
+    }
+
+    /// The recorded measurements as one JSON array (the `BENCH_*.json`
+    /// artifact body).
+    pub fn results_json(&self) -> Json {
+        self.results().to_json()
     }
 }
 
@@ -109,5 +202,37 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(5)), "5ns");
         assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
         assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+
+    #[test]
+    fn records_results_with_throughput() {
+        let b = Bench::new("grp").warmup(0).samples(2);
+        b.run("plain", || 1 + 1);
+        // Real work, so the mean cannot quantize to zero (which would
+        // make the throughput infinite and unserializable).
+        b.run_throughput("tp", 100, || (0..10_000u64).sum::<u64>());
+        let rs = b.results();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].label, "plain");
+        assert_eq!(rs[0].throughput_items_per_s, None);
+        assert_eq!(rs[1].group, "grp");
+        assert_eq!(rs[1].samples, 2);
+        assert!(rs[1].throughput_items_per_s.unwrap() > 0.0);
+        assert!(rs[1].min_s <= rs[1].mean_s && rs[1].mean_s <= rs[1].max_s);
+    }
+
+    #[test]
+    fn bench_results_roundtrip_the_wire() {
+        let b = Bench::new("grp").warmup(0).samples(2);
+        b.run_throughput("tp", 10, || (0..10_000u64).sum::<u64>());
+        for r in b.results() {
+            let back = BenchResult::from_json(&r.to_json()).unwrap();
+            assert_eq!(back, r);
+        }
+        // And through text.
+        let j = b.results_json();
+        let back: Vec<BenchResult> =
+            crate::util::wire::from_text(&j.pretty()).unwrap();
+        assert_eq!(back, b.results());
     }
 }

@@ -71,6 +71,58 @@ impl Args {
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
+
+    /// Validate that every `--option` the user passed is in `known`.
+    ///
+    /// Call once per subcommand after all accessors are wired, with that
+    /// subcommand's full option set. A typo'd option errors with its name
+    /// and the closest valid spelling instead of being silently ignored:
+    ///
+    /// ```
+    /// use spikebench::util::cli::Args;
+    /// let a = Args::parse(["--sedd".to_string(), "7".to_string()]);
+    /// let err = a.finish(&["seed", "requests"]).unwrap_err();
+    /// assert!(err.contains("--sedd"));
+    /// assert!(err.contains("--seed"));
+    /// ```
+    pub fn finish(&self, known: &[&str]) -> Result<(), String> {
+        for name in self.opts.keys().chain(self.flags.iter()) {
+            if !known.contains(&name.as_str()) {
+                let mut msg = format!("unknown option --{name}");
+                if let Some(best) = closest(name, known) {
+                    msg.push_str(&format!(" (did you mean --{best}?)"));
+                }
+                return Err(msg);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Closest known option by edit distance, when plausibly a typo.
+fn closest<'a>(name: &str, known: &'a [&str]) -> Option<&'a str> {
+    known
+        .iter()
+        .map(|k| (edit_distance(name, k), *k))
+        .min_by_key(|&(d, _)| d)
+        .filter(|&(d, _)| d <= 3)
+        .map(|(_, k)| k)
+}
+
+/// Levenshtein distance (small inputs only — option names).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut row = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            row.push(sub.min(prev[j + 1] + 1).min(row[j] + 1));
+        }
+        prev = row;
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -103,5 +155,36 @@ mod tests {
         assert_eq!(a.get_or("x", "d"), "d");
         assert_eq!(a.get_usize("n", 9), 9);
         assert_eq!(a.get_f64("f", 1.5), 1.5);
+    }
+
+    #[test]
+    fn finish_accepts_known_options() {
+        let a = args(&["--seed", "7", "--json", "--out=o.json"]);
+        a.finish(&["seed", "json", "out"]).unwrap();
+        a.finish(&[]).unwrap_err();
+    }
+
+    #[test]
+    fn finish_rejects_typos_with_a_suggestion() {
+        let a = args(&["--sedd", "7"]);
+        let err = a.finish(&["seed", "requests", "shards"]).unwrap_err();
+        assert!(err.contains("--sedd"), "{err}");
+        assert!(err.contains("--seed"), "{err}");
+        // Typo'd bare flags are caught too.
+        let a = args(&["--jsn"]);
+        let err = a.finish(&["json", "out"]).unwrap_err();
+        assert!(err.contains("--jsn") && err.contains("--json"), "{err}");
+        // A name nothing resembles gets no bogus suggestion.
+        let a = args(&["--zzzzzzzzzz"]);
+        let err = a.finish(&["seed"]).unwrap_err();
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("seed", "seed"), 0);
+        assert_eq!(edit_distance("sedd", "seed"), 1); // one substitution
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

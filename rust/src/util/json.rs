@@ -1,14 +1,23 @@
-//! Minimal JSON parser / writer.
+//! Minimal JSON tree parser / writer.
 //!
-//! The offline vendor set has no `serde` facade crate, so the manifest
-//! interchange with Python uses this ~300-line implementation instead.
-//! It supports the full JSON data model (objects, arrays, strings with
-//! escapes, numbers, booleans, null) which is everything
-//! `artifacts/manifest.json` needs; it is not intended as a
-//! general-purpose streaming parser.
+//! The offline vendor set has no `serde` facade crate, so all JSON
+//! interchange uses this implementation instead. It supports the full
+//! JSON data model (objects, arrays, strings with escapes, numbers,
+//! booleans, null). Tokenization lives in the crate-internal `Lexer`
+//! so the streaming pull-parser (`util::wire::JsonReader`) and this
+//! tree parser share one set of scanning rules; use the tree API for
+//! small documents and the streaming reader when the input is large or
+//! only a few fields matter.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Largest integer magnitude an `f64` stores exactly (2^53 − 1, the same
+/// bound as JavaScript's `Number.MAX_SAFE_INTEGER`). [`Json::as_usize`]
+/// rejects numbers beyond it — an integer that big may already have been
+/// rounded when the document was parsed, so treating it as exact would
+/// corrupt counts silently.
+pub const MAX_SAFE_INTEGER: f64 = 9_007_199_254_740_991.0;
 
 /// A parsed JSON value.
 ///
@@ -40,12 +49,12 @@ pub enum Json {
 impl Json {
     /// Parse a JSON document from text.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
-        p.skip_ws();
+        let mut p = Parser { lex: Lexer::new(s), depth: 0 };
+        p.lex.skip_ws();
         let v = p.value()?;
-        p.skip_ws();
-        if p.i != p.b.len() {
-            return Err(p.err("trailing characters"));
+        p.lex.skip_ws();
+        if !p.lex.at_eof() {
+            return Err(p.lex.err("trailing characters"));
         }
         Ok(v)
     }
@@ -74,9 +83,29 @@ impl Json {
         }
     }
 
-    /// Numeric value truncated to `usize`, if this is a number.
+    /// Exact non-negative integer value, if this is a number that holds
+    /// one.
+    ///
+    /// Returns `None` for fractions, negative numbers, and magnitudes
+    /// above [`MAX_SAFE_INTEGER`] — an `f64` that large can no longer
+    /// distinguish adjacent integers, so the original value may have been
+    /// rounded at parse time and must not be treated as an exact count.
+    ///
+    /// ```
+    /// use spikebench::util::json::Json;
+    /// assert_eq!(Json::Num(4.0).as_usize(), Some(4));
+    /// assert_eq!(Json::Num(4.5).as_usize(), None);           // lossy
+    /// assert_eq!(Json::Num(-1.0).as_usize(), None);          // negative
+    /// assert_eq!(Json::Num(9007199254740991.0).as_usize(), Some(9007199254740991));
+    /// assert_eq!(Json::Num(9007199254740992.0).as_usize(), None); // 2^53: ambiguous
+    /// ```
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n <= MAX_SAFE_INTEGER => {
+                Some(*n as usize)
+            }
+            _ => None,
+        }
     }
 
     /// String slice, if this is a string.
@@ -123,7 +152,16 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // Integers in the exactly-representable range print in
+                // integer form; every other finite value uses Rust's
+                // shortest round-trip float formatting, so no finite
+                // number is ever written in a form that parses back to a
+                // different f64. JSON has no Infinity/NaN — non-finite
+                // values are written as `null` (serde_json's behavior)
+                // so the document stays parseable.
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() <= MAX_SAFE_INTEGER {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -205,32 +243,47 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
-/// Maximum nesting depth: bounds the recursive-descent stack so
-/// adversarial inputs ("[[[[…") fail cleanly instead of overflowing.
-const MAX_DEPTH: usize = 128;
+/// Maximum nesting depth: bounds the recursive-descent stack (and the
+/// streaming reader's container stack) so adversarial inputs ("[[[[…")
+/// fail cleanly instead of overflowing.
+pub const MAX_DEPTH: usize = 128;
 
-struct Parser<'a> {
+/// Crate-internal tokenizer shared by [`Json::parse`] and the streaming
+/// `util::wire::JsonReader`: whitespace, literals, numbers, and strings
+/// with escapes. One set of scanning rules, two parsers on top.
+pub(crate) struct Lexer<'a> {
     b: &'a [u8],
     i: usize,
-    depth: usize,
 }
 
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
+impl<'a> Lexer<'a> {
+    pub(crate) fn new(s: &'a str) -> Lexer<'a> {
+        Lexer { b: s.as_bytes(), i: 0 }
+    }
+
+    pub(crate) fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), offset: self.i }
     }
 
-    fn skip_ws(&mut self) {
+    pub(crate) fn offset(&self) -> usize {
+        self.i
+    }
+
+    pub(crate) fn at_eof(&self) -> bool {
+        self.i >= self.b.len()
+    }
+
+    pub(crate) fn skip_ws(&mut self) {
         while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
             self.i += 1;
         }
     }
 
-    fn peek(&self) -> Option<u8> {
+    pub(crate) fn peek(&self) -> Option<u8> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+    pub(crate) fn expect(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -239,36 +292,17 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn value(&mut self) -> Result<Json, JsonError> {
-        self.depth += 1;
-        if self.depth > MAX_DEPTH {
-            return Err(self.err("nesting too deep"));
-        }
-        self.skip_ws();
-        let v = match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("unexpected character")),
-        };
-        self.depth -= 1;
-        v
-    }
-
-    fn lit(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+    /// Consume a keyword literal (`true` / `false` / `null`).
+    pub(crate) fn lit(&mut self, word: &str) -> Result<(), JsonError> {
         if self.b[self.i..].starts_with(word.as_bytes()) {
             self.i += word.len();
-            Ok(v)
+            Ok(())
         } else {
             Err(self.err(&format!("expected '{word}'")))
         }
     }
 
-    fn number(&mut self) -> Result<Json, JsonError> {
+    pub(crate) fn number(&mut self) -> Result<f64, JsonError> {
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
@@ -278,10 +312,10 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("utf8"))?;
-        s.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
+        s.parse::<f64>().map_err(|_| self.err("bad number"))
     }
 
-    fn string(&mut self) -> Result<String, JsonError> {
+    pub(crate) fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut s = String::new();
         loop {
@@ -331,56 +365,83 @@ impl<'a> Parser<'a> {
             }
         }
     }
+}
+
+struct Parser<'a> {
+    lex: Lexer<'a>,
+    depth: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn value(&mut self) -> Result<Json, JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.lex.err("nesting too deep"));
+        }
+        self.lex.skip_ws();
+        let v = match self.lex.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.lex.string()?)),
+            Some(b't') => self.lex.lit("true").map(|_| Json::Bool(true)),
+            Some(b'f') => self.lex.lit("false").map(|_| Json::Bool(false)),
+            Some(b'n') => self.lex.lit("null").map(|_| Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.lex.number().map(Json::Num),
+            _ => Err(self.lex.err("unexpected character")),
+        };
+        self.depth -= 1;
+        v
+    }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.lex.expect(b'[')?;
         let mut v = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.i += 1;
+        self.lex.skip_ws();
+        if self.lex.peek() == Some(b']') {
+            self.lex.expect(b']')?;
             return Ok(Json::Arr(v));
         }
         loop {
             v.push(self.value()?);
-            self.skip_ws();
-            match self.peek() {
+            self.lex.skip_ws();
+            match self.lex.peek() {
                 Some(b',') => {
-                    self.i += 1;
+                    self.lex.expect(b',')?;
                 }
                 Some(b']') => {
-                    self.i += 1;
+                    self.lex.expect(b']')?;
                     return Ok(Json::Arr(v));
                 }
-                _ => return Err(self.err("expected ',' or ']'")),
+                _ => return Err(self.lex.err("expected ',' or ']'")),
             }
         }
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.lex.expect(b'{')?;
         let mut m = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.i += 1;
+        self.lex.skip_ws();
+        if self.lex.peek() == Some(b'}') {
+            self.lex.expect(b'}')?;
             return Ok(Json::Obj(m));
         }
         loop {
-            self.skip_ws();
-            let k = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
+            self.lex.skip_ws();
+            let k = self.lex.string()?;
+            self.lex.skip_ws();
+            self.lex.expect(b':')?;
             let v = self.value()?;
             m.insert(k, v);
-            self.skip_ws();
-            match self.peek() {
+            self.lex.skip_ws();
+            match self.lex.peek() {
                 Some(b',') => {
-                    self.i += 1;
+                    self.lex.expect(b',')?;
                 }
                 Some(b'}') => {
-                    self.i += 1;
+                    self.lex.expect(b'}')?;
                     return Ok(Json::Obj(m));
                 }
-                _ => return Err(self.err("expected ',' or '}'")),
+                _ => return Err(self.lex.err("expected ',' or '}'")),
             }
         }
     }
@@ -435,5 +496,47 @@ mod tests {
     fn unicode_escapes() {
         let v = Json::parse(r#""éA""#).unwrap();
         assert_eq!(v.as_str(), Some("éA"));
+    }
+
+    #[test]
+    fn as_usize_rejects_lossy_integers() {
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(42.0).as_usize(), Some(42));
+        assert_eq!(Json::Num(4.5).as_usize(), None);
+        assert_eq!(Json::Num(-3.0).as_usize(), None);
+        assert_eq!(Json::Num(MAX_SAFE_INTEGER).as_usize(), Some(9_007_199_254_740_991));
+        // 2^53 cannot be told apart from 2^53 + 1 after f64 rounding.
+        assert_eq!(Json::Num(MAX_SAFE_INTEGER + 1.0).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Str("7".into()).as_usize(), None);
+    }
+
+    /// Numbers beyond the exact-integer range are written in float form
+    /// and parse back to the identical f64 (no silent corruption).
+    #[test]
+    fn huge_numbers_roundtrip_through_text() {
+        for n in [
+            MAX_SAFE_INTEGER,
+            MAX_SAFE_INTEGER + 1.0,
+            1.8014398509481984e16, // 2^54
+            1e300,
+            -9.007199254740994e15,
+        ] {
+            let v = Json::Num(n);
+            let back = Json::parse(&v.pretty()).unwrap();
+            assert_eq!(back, v, "lost precision writing {n}");
+        }
+        // In-range integers still print in integer form.
+        assert_eq!(Json::Num(1e15).pretty(), "1000000000000000");
+    }
+
+    /// JSON has no Infinity/NaN: a non-finite `Num` must not corrupt the
+    /// document — it degrades to `null`, which still parses.
+    #[test]
+    fn non_finite_numbers_are_written_as_null() {
+        assert_eq!(Json::Num(f64::INFINITY).pretty(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).pretty(), "null");
+        assert_eq!(Json::Num(f64::NAN).pretty(), "null");
+        assert_eq!(Json::parse(&Json::Num(f64::INFINITY).pretty()).unwrap(), Json::Null);
     }
 }

@@ -3,10 +3,11 @@
 //! The build environment has no network access and a minimal vendored
 //! crate set (`xla`, `anyhow`), so the conveniences a project would
 //! normally pull from crates.io are implemented here instead: JSON
-//! (`json`), deterministic RNG (`rng`), statistics + histograms (`stats`),
-//! the binary tensor container shared with Python (`tensorfile`), a
-//! criterion-style micro-bench harness (`bench`), and a proptest-style
-//! property-testing harness (`quickcheck`).
+//! (`json`), the typed wire codec + streaming reader every boundary
+//! surface uses (`wire`), deterministic RNG (`rng`), statistics +
+//! histograms (`stats`), the binary tensor container shared with Python
+//! (`tensorfile`), a criterion-style micro-bench harness (`bench`), and a
+//! proptest-style property-testing harness (`quickcheck`).
 
 pub mod bench;
 pub mod cli;
@@ -16,3 +17,4 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 pub mod tensorfile;
+pub mod wire;

@@ -1,0 +1,838 @@
+//! Typed wire codec: the one serialization API every boundary surface of
+//! the crate goes through.
+//!
+//! Two halves:
+//!
+//! * **Typed tree codec** — the [`ToJson`] / [`FromJson`] trait pair.
+//!   Implementations are manual (no derive machinery in the offline
+//!   vendor set) and decode through the [`De`] cursor, which threads a
+//!   JSON-pointer-style path into every error: a malformed deployment
+//!   spec fails with `wire error at /executors/3/shards: expected
+//!   non-negative integer`, not a bare "expected number". Every exported
+//!   stats type (`ServerStats`, `GatewayStats`, `LoadgenReport`,
+//!   `SweepCounters`, `BenchResult`, …) and config type
+//!   (`DeploymentSpec`, `LoadgenConfig`, `GatewayConfig`, `Slo`)
+//!   implements both directions, and the round trip
+//!   `FromJson(ToJson(x)) == x` is pinned by `tests/wire.rs`.
+//!
+//! * **Streaming pull-parser** — [`JsonReader`], an event-based reader
+//!   over the same `util::json` lexer that never builds an intermediate
+//!   [`Json`] tree. Callers pull [`JsonEvent`]s (or use the typed
+//!   helpers [`JsonReader::next_key`], [`JsonReader::num`], …) and
+//!   [`JsonReader::skip_value`] over anything they don't care about, so
+//!   a large document — the weight-manifest with its per-class spike
+//!   tables, or a multi-megabyte stats artifact — costs one string/num
+//!   buffer instead of a full tree. The shape follows the pull readers
+//!   in `smoljson` and `json-iterator-reader`.
+//!
+//! # Examples
+//!
+//! Decoding with typed errors:
+//!
+//! ```
+//! use spikebench::util::wire::{from_text, FromJson, De, WireError};
+//!
+//! struct Point { x: f64, y: f64 }
+//! impl FromJson for Point {
+//!     fn from_json(v: &spikebench::util::json::Json) -> Result<Point, WireError> {
+//!         let d = De::root(v);
+//!         Ok(Point { x: d.req("x")?, y: d.req("y")? })
+//!     }
+//! }
+//!
+//! let p: Point = from_text(r#"{"x": 1.5, "y": 2.0}"#).unwrap();
+//! assert_eq!((p.x, p.y), (1.5, 2.0));
+//! let err = from_text::<Point>(r#"{"x": 1.5, "y": "nope"}"#).unwrap_err();
+//! assert_eq!(err.path, "/y");
+//! ```
+//!
+//! Streaming a document without building a tree:
+//!
+//! ```
+//! use spikebench::util::wire::{JsonReader, JsonEvent};
+//!
+//! let mut r = JsonReader::new(r#"{"skip": [1, 2, 3], "take": 7}"#);
+//! r.expect_object().unwrap();
+//! let mut take = None;
+//! while let Some(key) = r.next_key().unwrap() {
+//!     match key.as_str() {
+//!         "take" => take = Some(r.num().unwrap()),
+//!         _ => r.skip_value().unwrap(),
+//!     }
+//! }
+//! assert_eq!(take, Some(7.0));
+//! assert!(r.end().is_ok()); // no trailing garbage
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::json::{Json, JsonError, Lexer, MAX_DEPTH, MAX_SAFE_INTEGER};
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// A typed decode error carrying a JSON-pointer-style path to the field
+/// that failed.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    /// JSON-pointer-style location (`/executors/3/shards`); empty for the
+    /// document root.
+    pub path: String,
+    /// What went wrong there.
+    pub msg: String,
+}
+
+impl WireError {
+    /// Error at an explicit path.
+    pub fn new(path: impl Into<String>, msg: impl Into<String>) -> WireError {
+        WireError { path: path.into(), msg: msg.into() }
+    }
+
+    /// Prepend a path segment (used when a nested `FromJson` error
+    /// bubbles up through a parent field).
+    pub fn prefixed(mut self, prefix: &str) -> WireError {
+        self.path = format!("{prefix}{}", self.path);
+        self
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let path = if self.path.is_empty() { "/" } else { &self.path };
+        write!(f, "wire error at {path}: {}", self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// The trait pair
+// ---------------------------------------------------------------------------
+
+/// Serialize a value into the [`Json`] tree model.
+pub trait ToJson {
+    /// Build the JSON representation.
+    fn to_json(&self) -> Json;
+}
+
+/// Decode a value from a [`Json`] tree with typed, path-carrying errors.
+pub trait FromJson: Sized {
+    /// Parse from a JSON value.
+    fn from_json(v: &Json) -> Result<Self, WireError>;
+}
+
+/// Serialize to pretty-printed JSON text.
+pub fn to_text<T: ToJson + ?Sized>(x: &T) -> String {
+    x.to_json().pretty()
+}
+
+/// Parse JSON text and decode it in one step.
+pub fn from_text<T: FromJson>(s: &str) -> Result<T, WireError> {
+    let j = Json::parse(s).map_err(|e| WireError::new("", e.to_string()))?;
+    T::from_json(&j)
+}
+
+// ---------------------------------------------------------------------------
+// Primitive impls
+// ---------------------------------------------------------------------------
+
+impl ToJson for f64 {
+    fn to_json(&self) -> Json {
+        Json::Num(*self)
+    }
+}
+
+impl FromJson for f64 {
+    fn from_json(v: &Json) -> Result<f64, WireError> {
+        v.as_f64().ok_or_else(|| WireError::new("", "expected number"))
+    }
+}
+
+impl ToJson for usize {
+    fn to_json(&self) -> Json {
+        debug_assert!((*self as f64) <= MAX_SAFE_INTEGER, "count exceeds exact f64 range");
+        Json::Num(*self as f64)
+    }
+}
+
+impl FromJson for usize {
+    fn from_json(v: &Json) -> Result<usize, WireError> {
+        v.as_usize()
+            .ok_or_else(|| WireError::new("", "expected non-negative integer (exact below 2^53)"))
+    }
+}
+
+impl ToJson for u64 {
+    fn to_json(&self) -> Json {
+        debug_assert!((*self as f64) <= MAX_SAFE_INTEGER, "count exceeds exact f64 range");
+        Json::Num(*self as f64)
+    }
+}
+
+impl FromJson for u64 {
+    fn from_json(v: &Json) -> Result<u64, WireError> {
+        usize::from_json(v).map(|n| n as u64)
+    }
+}
+
+impl ToJson for bool {
+    fn to_json(&self) -> Json {
+        Json::Bool(*self)
+    }
+}
+
+impl FromJson for bool {
+    fn from_json(v: &Json) -> Result<bool, WireError> {
+        v.as_bool().ok_or_else(|| WireError::new("", "expected boolean"))
+    }
+}
+
+impl ToJson for str {
+    fn to_json(&self) -> Json {
+        Json::Str(self.to_string())
+    }
+}
+
+impl ToJson for String {
+    fn to_json(&self) -> Json {
+        Json::Str(self.clone())
+    }
+}
+
+impl FromJson for String {
+    fn from_json(v: &Json) -> Result<String, WireError> {
+        v.as_str().map(str::to_string).ok_or_else(|| WireError::new("", "expected string"))
+    }
+}
+
+impl<T: ToJson> ToJson for Option<T> {
+    fn to_json(&self) -> Json {
+        match self {
+            Some(x) => x.to_json(),
+            None => Json::Null,
+        }
+    }
+}
+
+impl<T: FromJson> FromJson for Option<T> {
+    fn from_json(v: &Json) -> Result<Option<T>, WireError> {
+        match v {
+            Json::Null => Ok(None),
+            other => T::from_json(other).map(Some),
+        }
+    }
+}
+
+impl<T: ToJson> ToJson for Vec<T> {
+    fn to_json(&self) -> Json {
+        Json::Arr(self.iter().map(ToJson::to_json).collect())
+    }
+}
+
+impl<T: FromJson> FromJson for Vec<T> {
+    fn from_json(v: &Json) -> Result<Vec<T>, WireError> {
+        let items = v.as_arr().ok_or_else(|| WireError::new("", "expected array"))?;
+        items
+            .iter()
+            .enumerate()
+            .map(|(i, el)| T::from_json(el).map_err(|e| e.prefixed(&format!("/{i}"))))
+            .collect()
+    }
+}
+
+impl ToJson for Json {
+    fn to_json(&self) -> Json {
+        self.clone()
+    }
+}
+
+impl FromJson for Json {
+    fn from_json(v: &Json) -> Result<Json, WireError> {
+        Ok(v.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode helper
+// ---------------------------------------------------------------------------
+
+/// Fluent object builder for manual [`ToJson`] impls.
+///
+/// ```
+/// use spikebench::util::wire::Obj;
+/// use spikebench::util::json::Json;
+///
+/// let j = Obj::new().field("served", &3usize).field("name", "shard-0").build();
+/// assert_eq!(j.get("served").unwrap().as_usize(), Some(3));
+/// assert_eq!(j.get("name").unwrap().as_str(), Some("shard-0"));
+/// ```
+#[derive(Default)]
+pub struct Obj {
+    m: BTreeMap<String, Json>,
+}
+
+impl Obj {
+    /// Empty object.
+    pub fn new() -> Obj {
+        Obj::default()
+    }
+
+    /// Add a field serialized through [`ToJson`].
+    pub fn field<T: ToJson + ?Sized>(mut self, key: &str, v: &T) -> Obj {
+        self.m.insert(key.to_string(), v.to_json());
+        self
+    }
+
+    /// Add a raw, pre-built JSON value.
+    pub fn raw(mut self, key: &str, v: Json) -> Obj {
+        self.m.insert(key.to_string(), v);
+        self
+    }
+
+    /// Finish into a [`Json::Obj`].
+    pub fn build(self) -> Json {
+        Json::Obj(self.m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decode cursor
+// ---------------------------------------------------------------------------
+
+/// Decode cursor over a [`Json`] tree that tracks its JSON-pointer path,
+/// so every typed accessor reports *where* the document broke.
+pub struct De<'a> {
+    v: &'a Json,
+    path: String,
+}
+
+impl<'a> De<'a> {
+    /// Cursor at the document root.
+    pub fn root(v: &'a Json) -> De<'a> {
+        De { v, path: String::new() }
+    }
+
+    /// The value under the cursor.
+    pub fn value(&self) -> &'a Json {
+        self.v
+    }
+
+    /// An error located at this cursor.
+    pub fn err(&self, msg: impl Into<String>) -> WireError {
+        WireError::new(self.path.clone(), msg)
+    }
+
+    /// Descend into a required object field; missing fields (and
+    /// non-objects) are errors located at the child path.
+    pub fn field(&self, name: &str) -> Result<De<'a>, WireError> {
+        let child_path = format!("{}/{name}", self.path);
+        match self.v {
+            Json::Obj(m) => match m.get(name) {
+                Some(v) => Ok(De { v, path: child_path }),
+                None => Err(WireError::new(child_path, "missing field")),
+            },
+            _ => Err(self.err("expected object")),
+        }
+    }
+
+    /// Descend into an optional field; `None` when absent (a present
+    /// `null` is `Some`, letting `Option<T>` decode it).
+    pub fn opt(&self, name: &str) -> Option<De<'a>> {
+        match self.v {
+            Json::Obj(m) => m
+                .get(name)
+                .map(|v| De { v, path: format!("{}/{name}", self.path) }),
+            _ => None,
+        }
+    }
+
+    /// Decode the value under the cursor, prefixing nested error paths.
+    pub fn get<T: FromJson>(&self) -> Result<T, WireError> {
+        T::from_json(self.v).map_err(|e| e.prefixed(&self.path))
+    }
+
+    /// Decode a required field: `self.field(name)?.get()`.
+    pub fn req<T: FromJson>(&self, name: &str) -> Result<T, WireError> {
+        self.field(name)?.get()
+    }
+
+    /// Decode an optional field, falling back to `default` when absent.
+    /// A present-but-malformed field is still an error, and so is a
+    /// non-object value under the cursor — defaults never mask
+    /// corruption (a struct whose fields are all optional must not
+    /// decode `["garbage"]` to its defaults).
+    pub fn opt_or<T: FromJson>(&self, name: &str, default: T) -> Result<T, WireError> {
+        if !matches!(self.v, Json::Obj(_)) {
+            return Err(self.err("expected object"));
+        }
+        match self.opt(name) {
+            Some(d) => d.get(),
+            None => Ok(default),
+        }
+    }
+
+    /// Cursors over the elements of an array value.
+    pub fn items(&self) -> Result<Vec<De<'a>>, WireError> {
+        let arr = match self.v {
+            Json::Arr(v) => v,
+            _ => return Err(self.err("expected array")),
+        };
+        Ok(arr
+            .iter()
+            .enumerate()
+            .map(|(i, v)| De { v, path: format!("{}/{i}", self.path) })
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming pull-parser
+// ---------------------------------------------------------------------------
+
+/// One parse event from [`JsonReader`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonEvent {
+    /// `{` — an object begins.
+    ObjectStart,
+    /// `}` — the innermost object ends.
+    ObjectEnd,
+    /// `[` — an array begins.
+    ArrayStart,
+    /// `]` — the innermost array ends.
+    ArrayEnd,
+    /// An object key; the next event is its value (or the value's
+    /// container start).
+    Key(String),
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// A number.
+    Num(f64),
+    /// A string value.
+    Str(String),
+}
+
+/// Which position the reader is at inside a container frame.
+#[derive(Clone, Copy)]
+enum Frame {
+    /// Inside `{…}`: at a key position (start of object or after `,`).
+    ObjKeyOrEnd,
+    /// Inside `{…}`: a key was emitted, its value is next.
+    ObjValue,
+    /// Inside `{…}`: a value finished; `,` or `}` is next.
+    ObjCommaOrEnd,
+    /// Inside `[…]`: at the first element position (or `]`).
+    ArrValueOrEnd,
+    /// Inside `[…]`: an element finished; `,` or `]` is next.
+    ArrCommaOrEnd,
+}
+
+/// Streaming, event-based JSON pull-parser over the `util::json` lexer.
+///
+/// Unlike [`Json::parse`] it never builds a tree: the caller pulls one
+/// [`JsonEvent`] at a time (the iterator-reader pattern), and memory use
+/// is bounded by the container depth (≤ [`MAX_DEPTH`]) plus one
+/// string/number buffer — independent of document size. Trailing garbage
+/// after the root value is an error, surfaced by [`JsonReader::next`]
+/// (as `Some(Err)`) or [`JsonReader::end`].
+pub struct JsonReader<'a> {
+    lex: Lexer<'a>,
+    stack: Vec<Frame>,
+    root_done: bool,
+}
+
+impl<'a> JsonReader<'a> {
+    /// Reader over a JSON document.
+    pub fn new(s: &'a str) -> JsonReader<'a> {
+        JsonReader { lex: Lexer::new(s), stack: Vec::new(), root_done: false }
+    }
+
+    /// Current byte offset in the input (for error reporting).
+    pub fn offset(&self) -> usize {
+        self.lex.offset()
+    }
+
+    /// Pull the next event; `Ok(None)` at clean end of input.
+    pub fn next(&mut self) -> Result<Option<JsonEvent>, JsonError> {
+        self.lex.skip_ws();
+        match self.stack.last().copied() {
+            None => {
+                if self.root_done {
+                    if !self.lex.at_eof() {
+                        return Err(self.lex.err("trailing characters"));
+                    }
+                    return Ok(None);
+                }
+                if self.lex.at_eof() {
+                    return Err(self.lex.err("empty document"));
+                }
+                let ev = self.value_event()?;
+                if self.stack.is_empty() {
+                    self.root_done = true; // scalar root
+                }
+                Ok(Some(ev))
+            }
+            Some(Frame::ObjKeyOrEnd) => {
+                if self.lex.peek() == Some(b'}') {
+                    self.lex.expect(b'}')?;
+                    self.pop();
+                    return Ok(Some(JsonEvent::ObjectEnd));
+                }
+                self.key_event().map(Some)
+            }
+            Some(Frame::ObjValue) => {
+                *self.stack.last_mut().unwrap() = Frame::ObjCommaOrEnd;
+                self.value_event().map(Some)
+            }
+            Some(Frame::ObjCommaOrEnd) => match self.lex.peek() {
+                Some(b',') => {
+                    self.lex.expect(b',')?;
+                    self.lex.skip_ws();
+                    self.key_event().map(Some)
+                }
+                Some(b'}') => {
+                    self.lex.expect(b'}')?;
+                    self.pop();
+                    Ok(Some(JsonEvent::ObjectEnd))
+                }
+                _ => Err(self.lex.err("expected ',' or '}'")),
+            },
+            Some(Frame::ArrValueOrEnd) => {
+                if self.lex.peek() == Some(b']') {
+                    self.lex.expect(b']')?;
+                    self.pop();
+                    return Ok(Some(JsonEvent::ArrayEnd));
+                }
+                *self.stack.last_mut().unwrap() = Frame::ArrCommaOrEnd;
+                self.value_event().map(Some)
+            }
+            Some(Frame::ArrCommaOrEnd) => match self.lex.peek() {
+                Some(b',') => {
+                    self.lex.expect(b',')?;
+                    self.value_event().map(Some)
+                }
+                Some(b']') => {
+                    self.lex.expect(b']')?;
+                    self.pop();
+                    Ok(Some(JsonEvent::ArrayEnd))
+                }
+                _ => Err(self.lex.err("expected ',' or ']'")),
+            },
+        }
+    }
+
+    fn pop(&mut self) {
+        self.stack.pop();
+        if self.stack.is_empty() {
+            self.root_done = true;
+        }
+    }
+
+    fn key_event(&mut self) -> Result<JsonEvent, JsonError> {
+        let k = self.lex.string()?;
+        self.lex.skip_ws();
+        self.lex.expect(b':')?;
+        *self.stack.last_mut().unwrap() = Frame::ObjValue;
+        Ok(JsonEvent::Key(k))
+    }
+
+    fn value_event(&mut self) -> Result<JsonEvent, JsonError> {
+        self.lex.skip_ws();
+        match self.lex.peek() {
+            Some(b'{') => {
+                self.push(Frame::ObjKeyOrEnd)?;
+                self.lex.expect(b'{')?;
+                Ok(JsonEvent::ObjectStart)
+            }
+            Some(b'[') => {
+                self.push(Frame::ArrValueOrEnd)?;
+                self.lex.expect(b'[')?;
+                Ok(JsonEvent::ArrayStart)
+            }
+            Some(b'"') => {
+                self.scalar_guard()?;
+                Ok(JsonEvent::Str(self.lex.string()?))
+            }
+            Some(b't') => {
+                self.scalar_guard()?;
+                self.lex.lit("true").map(|_| JsonEvent::Bool(true))
+            }
+            Some(b'f') => {
+                self.scalar_guard()?;
+                self.lex.lit("false").map(|_| JsonEvent::Bool(false))
+            }
+            Some(b'n') => {
+                self.scalar_guard()?;
+                self.lex.lit("null").map(|_| JsonEvent::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                self.scalar_guard()?;
+                self.lex.number().map(JsonEvent::Num)
+            }
+            _ => Err(self.lex.err("unexpected character")),
+        }
+    }
+
+    fn push(&mut self, f: Frame) -> Result<(), JsonError> {
+        if self.stack.len() >= MAX_DEPTH {
+            return Err(self.lex.err("nesting too deep"));
+        }
+        self.stack.push(f);
+        Ok(())
+    }
+
+    /// Mirror the tree parser's depth accounting exactly: a scalar nested
+    /// under `MAX_DEPTH` containers is one value level too deep there, so
+    /// it must be here too (the adversarial tests pin the two parsers to
+    /// identical verdicts).
+    fn scalar_guard(&self) -> Result<(), JsonError> {
+        if self.stack.len() >= MAX_DEPTH {
+            return Err(self.lex.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
+    // -- typed conveniences over `next` ------------------------------------
+
+    /// Require the next event to be `ObjectStart`.
+    pub fn expect_object(&mut self) -> Result<(), JsonError> {
+        match self.next()? {
+            Some(JsonEvent::ObjectStart) => Ok(()),
+            _ => Err(self.lex.err("expected object")),
+        }
+    }
+
+    /// Require the next event to be `ArrayStart`.
+    pub fn expect_array(&mut self) -> Result<(), JsonError> {
+        match self.next()? {
+            Some(JsonEvent::ArrayStart) => Ok(()),
+            _ => Err(self.lex.err("expected array")),
+        }
+    }
+
+    /// Inside an object: the next key, or `None` at the object's end.
+    pub fn next_key(&mut self) -> Result<Option<String>, JsonError> {
+        match self.next()? {
+            Some(JsonEvent::Key(k)) => Ok(Some(k)),
+            Some(JsonEvent::ObjectEnd) => Ok(None),
+            _ => Err(self.lex.err("expected key or '}'")),
+        }
+    }
+
+    /// Require the next event to be a number value.
+    pub fn num(&mut self) -> Result<f64, JsonError> {
+        match self.next()? {
+            Some(JsonEvent::Num(n)) => Ok(n),
+            _ => Err(self.lex.err("expected number")),
+        }
+    }
+
+    /// Require the next event to be a string value.
+    pub fn str_value(&mut self) -> Result<String, JsonError> {
+        match self.next()? {
+            Some(JsonEvent::Str(s)) => Ok(s),
+            _ => Err(self.lex.err("expected string")),
+        }
+    }
+
+    /// Read a whole array of numbers (`[1, 2, 3]`).
+    pub fn num_array(&mut self) -> Result<Vec<f64>, JsonError> {
+        self.expect_array()?;
+        let mut out = Vec::new();
+        loop {
+            match self.next()? {
+                Some(JsonEvent::Num(n)) => out.push(n),
+                Some(JsonEvent::ArrayEnd) => return Ok(out),
+                _ => return Err(self.lex.err("expected number or ']'")),
+            }
+        }
+    }
+
+    /// Consume and discard one complete value (scalar or whole subtree).
+    /// Call at a value position — e.g. right after [`JsonReader::next_key`]
+    /// returned a key the caller doesn't care about.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        let mut depth = 0usize;
+        loop {
+            match self.next()? {
+                None => return Err(self.lex.err("unexpected end of input")),
+                Some(JsonEvent::ObjectStart | JsonEvent::ArrayStart) => depth += 1,
+                Some(JsonEvent::ObjectEnd | JsonEvent::ArrayEnd) => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                Some(JsonEvent::Key(_)) => {}
+                Some(_) if depth == 0 => return Ok(()), // bare scalar
+                Some(_) => {}
+            }
+        }
+    }
+
+    /// Assert clean end of input (root value complete, no trailing
+    /// garbage).
+    pub fn end(&mut self) -> Result<(), JsonError> {
+        match self.next()? {
+            None => Ok(()),
+            Some(_) => Err(self.lex.err("expected end of input")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reader_emits_the_event_stream() {
+        let mut r = JsonReader::new(r#"{"a": [1, true, null], "b": "x"}"#);
+        let mut evs = Vec::new();
+        while let Some(e) = r.next().unwrap() {
+            evs.push(e);
+        }
+        use JsonEvent::*;
+        assert_eq!(
+            evs,
+            vec![
+                ObjectStart,
+                Key("a".into()),
+                ArrayStart,
+                Num(1.0),
+                Bool(true),
+                Null,
+                ArrayEnd,
+                Key("b".into()),
+                Str("x".into()),
+                ObjectEnd,
+            ]
+        );
+        assert!(r.end().is_ok());
+    }
+
+    #[test]
+    fn reader_rejects_trailing_garbage() {
+        let mut r = JsonReader::new("{} x");
+        assert_eq!(r.next().unwrap(), Some(JsonEvent::ObjectStart));
+        assert_eq!(r.next().unwrap(), Some(JsonEvent::ObjectEnd));
+        assert!(r.next().is_err());
+    }
+
+    #[test]
+    fn reader_rejects_truncated_input() {
+        for src in ["{\"a\": ", "[1, 2", "\"unterminated", "{\"k\"", "[1,", "tru"] {
+            let mut r = JsonReader::new(src);
+            let mut out = Ok(Some(JsonEvent::Null));
+            while let Ok(Some(_)) = out {
+                out = r.next();
+            }
+            assert!(out.is_err(), "truncated input {src:?} must error");
+        }
+    }
+
+    #[test]
+    fn reader_depth_limit_matches_tree_parser() {
+        // Exactly MAX_DEPTH containers parse…
+        let ok = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+        let mut r = JsonReader::new(&ok);
+        while let Some(e) = r.next().unwrap() {
+            assert!(matches!(e, JsonEvent::ArrayStart | JsonEvent::ArrayEnd));
+        }
+        assert!(Json::parse(&ok).is_ok());
+        // …one more does not, mirroring Json::parse.
+        let deep = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+        let mut r = JsonReader::new(&deep);
+        let mut errored = false;
+        loop {
+            match r.next() {
+                Ok(Some(_)) => {}
+                Ok(None) => break,
+                Err(e) => {
+                    assert!(e.msg.contains("nesting"));
+                    errored = true;
+                    break;
+                }
+            }
+        }
+        assert!(errored);
+        assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn skip_value_skips_scalars_and_subtrees() {
+        let mut r = JsonReader::new(r#"{"a": {"deep": [1, {"x": 2}]}, "b": 3, "c": [4]}"#);
+        r.expect_object().unwrap();
+        let mut b = None;
+        while let Some(k) = r.next_key().unwrap() {
+            match k.as_str() {
+                "b" => b = Some(r.num().unwrap()),
+                _ => r.skip_value().unwrap(),
+            }
+        }
+        assert_eq!(b, Some(3.0));
+        r.end().unwrap();
+    }
+
+    #[test]
+    fn scalar_root_and_empty_containers() {
+        let mut r = JsonReader::new("  42 ");
+        assert_eq!(r.next().unwrap(), Some(JsonEvent::Num(42.0)));
+        r.end().unwrap();
+
+        let mut r = JsonReader::new("[]");
+        assert_eq!(r.next().unwrap(), Some(JsonEvent::ArrayStart));
+        assert_eq!(r.next().unwrap(), Some(JsonEvent::ArrayEnd));
+        r.end().unwrap();
+
+        let mut r = JsonReader::new("{}");
+        r.expect_object().unwrap();
+        assert_eq!(r.next_key().unwrap(), None);
+        r.end().unwrap();
+    }
+
+    #[test]
+    fn reader_decodes_escape_sequences() {
+        let mut r = JsonReader::new(r#"["a\nb", "é", "q\"w"]"#);
+        r.expect_array().unwrap();
+        assert_eq!(r.str_value().unwrap(), "a\nb");
+        assert_eq!(r.str_value().unwrap(), "é");
+        assert_eq!(r.str_value().unwrap(), "q\"w");
+    }
+
+    #[test]
+    fn de_paths_point_at_the_failure() {
+        let j = Json::parse(r#"{"outer": {"items": [1, "two", 3]}}"#).unwrap();
+        let d = De::root(&j);
+        let err = d.field("outer").unwrap().req::<Vec<f64>>("items").unwrap_err();
+        assert_eq!(err.path, "/outer/items/1");
+        let err = d.req::<f64>("missing").unwrap_err();
+        assert_eq!(err.path, "/missing");
+        assert!(err.msg.contains("missing"));
+    }
+
+    #[test]
+    fn primitive_roundtrips() {
+        assert_eq!(f64::from_json(&1.5f64.to_json()).unwrap(), 1.5);
+        assert_eq!(usize::from_json(&7usize.to_json()).unwrap(), 7);
+        assert_eq!(u64::from_json(&9u64.to_json()).unwrap(), 9);
+        assert!(bool::from_json(&true.to_json()).unwrap());
+        assert_eq!(String::from_json(&"s".to_json()).unwrap(), "s");
+        assert_eq!(Option::<f64>::from_json(&Json::Null).unwrap(), None);
+        assert_eq!(Option::<f64>::from_json(&Json::Num(2.0)).unwrap(), Some(2.0));
+        let v: Vec<usize> = FromJson::from_json(&vec![1usize, 2, 3].to_json()).unwrap();
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn opt_or_defaults_only_when_absent() {
+        let j = Json::parse(r#"{"present": 5, "broken": "x"}"#).unwrap();
+        let d = De::root(&j);
+        assert_eq!(d.opt_or("present", 0usize).unwrap(), 5);
+        assert_eq!(d.opt_or("absent", 9usize).unwrap(), 9);
+        // A malformed present field is an error, never the default.
+        assert!(d.opt_or("broken", 0usize).is_err());
+    }
+}

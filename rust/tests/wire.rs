@@ -1,0 +1,409 @@
+//! Wire-codec integration tests: round-trip property checks
+//! (`FromJson(ToJson(x)) == x`, in memory and through text) for every
+//! exported stats/config type, adversarial parser tests against both the
+//! tree parser and the streaming reader, live round-trips of stats
+//! produced by a real gateway run, and the spec-file acceptance check —
+//! a `DeploymentSpec` reproduces the in-code gateway's routing decisions
+//! under a fixed seed.
+
+use std::fmt::Debug;
+use std::time::Duration;
+
+use spikebench::coordinator::gateway::{
+    DesignStats, Gateway, GatewayConfig, GatewayStats, PricedDesign, ShardStats, Slo,
+};
+use spikebench::coordinator::serve::ServerStats;
+use spikebench::coordinator::loadgen::{
+    self, DeploymentSpec, ExecutorEntry, LoadgenConfig, LoadgenReport, Scenario,
+};
+use spikebench::coordinator::sweep::SweepCounters;
+use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::util::bench::BenchResult;
+use spikebench::util::json::{Json, MAX_DEPTH};
+use spikebench::util::wire::{from_text, to_text, FromJson, JsonEvent, JsonReader, ToJson};
+
+/// The round-trip property, checked in memory and through pretty text.
+fn roundtrip<T: ToJson + FromJson + PartialEq + Debug>(x: &T) {
+    let back = T::from_json(&x.to_json()).expect("in-memory round trip");
+    assert_eq!(&back, x, "FromJson(ToJson(x)) != x");
+    let back: T = from_text(&to_text(x)).expect("text round trip");
+    assert_eq!(&back, x, "from_text(to_text(x)) != x");
+}
+
+fn server_stats(k: usize) -> ServerStats {
+    ServerStats {
+        served: 10 + k,
+        failed: 1,
+        batches: 4 + k,
+        max_batch_seen: 3,
+        backend_calls: 4 + k,
+        cost_estimates: 2,
+    }
+}
+
+#[test]
+fn stats_types_roundtrip() {
+    roundtrip(&server_stats(0));
+    roundtrip(&ShardStats {
+        design: "CNN4".into(),
+        shard: 1,
+        dispatched: 11,
+        stats: server_stats(1),
+    });
+    roundtrip(&DesignStats {
+        name: "SNN8_BRAM".into(),
+        dataset: "mnist".into(),
+        device_name: "PYNQ-Z1".into(),
+        routed: 40,
+        slo_misses: 2,
+        served: 40,
+        failed: 0,
+        batches: 12,
+        backend_calls: 12,
+        cost_estimates: 9,
+        routed_energy_j: 1.25e-4,
+    });
+    roundtrip(&GatewayStats {
+        served: 64,
+        failed: 1,
+        batches: 20,
+        backend_calls: 20,
+        routed: 64,
+        slo_misses: 3,
+        routed_energy_j: 0.5,
+        designs: vec![DesignStats {
+            name: "d".into(),
+            dataset: "mnist".into(),
+            device_name: "ZCU102".into(),
+            routed: 64,
+            slo_misses: 3,
+            served: 64,
+            failed: 1,
+            batches: 20,
+            backend_calls: 20,
+            cost_estimates: 7,
+            routed_energy_j: 0.5,
+        }],
+        shards: vec![ShardStats {
+            design: "d".into(),
+            shard: 0,
+            dispatched: 64,
+            stats: server_stats(2),
+        }],
+    });
+    roundtrip(&PricedDesign {
+        name: "CNN3".into(),
+        dataset: "mnist".into(),
+        device_name: "PYNQ-Z1".into(),
+        is_snn: false,
+        latency_s: 3.0264e-4,
+        energy_j: 7.7e-6,
+    });
+    roundtrip(&SweepCounters { functional_passes: 16, event_walks: 32, costings: 64 });
+}
+
+#[test]
+fn config_types_roundtrip() {
+    roundtrip(&Slo::latency(0.05));
+    roundtrip(&Slo { max_latency_s: 0.001, max_energy_j: Some(2.5e-6) });
+    roundtrip(&GatewayConfig::default());
+    roundtrip(&GatewayConfig { max_batch: 3, batch_timeout: Duration::from_nanos(1_234_567) });
+    for s in Scenario::all() {
+        roundtrip(&s);
+    }
+    roundtrip(&LoadgenConfig::default());
+    roundtrip(&LoadgenConfig {
+        scenario: Scenario::Ramp,
+        requests: 96,
+        seed: 1234567890123,
+        slo: Slo { max_latency_s: 0.2, max_energy_j: Some(1e-5) },
+        gap: Duration::from_micros(137),
+    });
+    roundtrip(&ExecutorEntry {
+        design: "SNN8_CIFAR".into(),
+        dataset: "cifar".into(),
+        device: "zcu102".into(),
+        shards: 4,
+    });
+    roundtrip(&DeploymentSpec::synthetic(
+        &["mnist", "svhn", "cifar"],
+        "zcu102",
+        2,
+        99,
+        LoadgenConfig { scenario: Scenario::Mixed, ..Default::default() },
+    ));
+}
+
+#[test]
+fn report_types_roundtrip() {
+    roundtrip(&LoadgenReport {
+        scenario: Scenario::Bursty,
+        decisions: vec![("CNN4".into(), false), ("SNN8_BRAM".into(), true)],
+        served: 2,
+        failed: 0,
+        slo_misses: 1,
+        wall: Duration::from_nanos(123_456_789),
+        throughput_rps: 812.5,
+        p50_service_ms: 0.41,
+        p99_service_ms: 1.9,
+        mean_routed_latency_ms: 0.37,
+        routed_energy_j: 4.2e-6,
+    });
+    roundtrip(&BenchResult {
+        group: "hotpath".into(),
+        label: "route/steady".into(),
+        samples: 10,
+        mean_s: 1.5e-4,
+        min_s: 1.1e-4,
+        max_s: 2.0e-4,
+        sigma_s: 2.0e-5,
+        throughput_items_per_s: Some(6666.6),
+    });
+    roundtrip(&BenchResult {
+        group: "g".into(),
+        label: "l".into(),
+        samples: 3,
+        mean_s: 0.0,
+        min_s: 0.0,
+        max_s: 0.0,
+        sigma_s: 0.0,
+        throughput_items_per_s: None,
+    });
+}
+
+/// Stats produced by a *live* gateway run round-trip losslessly — the
+/// `--json` artifact path end to end, without the CLI.
+#[test]
+fn live_gateway_stats_roundtrip() {
+    let spec = DeploymentSpec {
+        seed: 5,
+        gateway: GatewayConfig { max_batch: 4, batch_timeout: Duration::from_millis(2) },
+        executors: vec![
+            ExecutorEntry {
+                design: "CNN4".into(),
+                dataset: String::new(),
+                device: "pynq".into(),
+                shards: 2,
+            },
+            ExecutorEntry {
+                design: "SNN8_BRAM".into(),
+                dataset: "mnist".into(),
+                device: "pynq".into(),
+                shards: 1,
+            },
+        ],
+        loadgen: LoadgenConfig {
+            scenario: Scenario::Steady,
+            requests: 12,
+            seed: 5,
+            slo: Slo::latency(0.05),
+            gap: Duration::from_micros(50),
+        },
+    };
+    let (gateway, pools) = Gateway::from_spec(&spec).unwrap();
+    let table = gateway.router().table();
+    for p in &table {
+        roundtrip(p);
+    }
+    let report = loadgen::run(&gateway, &spec.loadgen, &pools).unwrap();
+    let stats = gateway.shutdown();
+    assert_eq!(stats.routed, 12);
+    roundtrip(&report);
+    roundtrip(&stats);
+    // The reconciliation invariant the `repro checkjson` CI step pins,
+    // checked on the decoded copy.
+    let decoded: GatewayStats = from_text(&to_text(&stats)).unwrap();
+    let sum: usize = decoded.designs.iter().map(|d| d.routed).sum();
+    assert_eq!(decoded.routed, sum);
+}
+
+/// Acceptance: a spec file reproduces the in-code config's routing
+/// decisions exactly under a fixed seed.
+#[test]
+fn spec_reproduces_in_code_routing_decisions() {
+    let cfg = LoadgenConfig {
+        scenario: Scenario::Steady,
+        requests: 24,
+        seed: 9,
+        slo: Slo::latency(0.05),
+        gap: Duration::from_micros(50),
+    };
+    // In-code path: synthetic_specs + Gateway::start.
+    let (specs, pools) = loadgen::synthetic_specs(&["mnist"], PYNQ_Z1, 1, 9).unwrap();
+    let gw = Gateway::start(specs, &GatewayConfig::default()).unwrap();
+    let in_code = loadgen::run(&gw, &cfg, &pools).unwrap();
+    gw.shutdown();
+
+    // Spec path: the equivalent DeploymentSpec through the wire (text and
+    // back, like `repro loadgen --spec FILE`).
+    let spec = DeploymentSpec::synthetic(&["mnist"], "pynq", 1, 9, cfg);
+    let spec: DeploymentSpec = from_text(&to_text(&spec)).unwrap();
+    let (gw, pools) = Gateway::from_spec(&spec).unwrap();
+    let from_spec = loadgen::run(&gw, &spec.loadgen, &pools).unwrap();
+    gw.shutdown();
+
+    assert_eq!(
+        from_spec.decisions, in_code.decisions,
+        "spec-driven routing must match the in-code config"
+    );
+    assert_eq!(from_spec.slo_misses, in_code.slo_misses);
+    assert_eq!(from_spec.routed_energy_j, in_code.routed_energy_j);
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial parser tests (tree parser + streaming reader in lockstep)
+// ---------------------------------------------------------------------------
+
+/// Drain a reader to completion, returning whether it succeeded.
+fn reader_accepts(src: &str) -> bool {
+    let mut r = JsonReader::new(src);
+    loop {
+        match r.next() {
+            Ok(Some(_)) => {}
+            Ok(None) => return true,
+            Err(_) => return false,
+        }
+    }
+}
+
+#[test]
+fn both_parsers_handle_the_depth_limit_identically() {
+    let at_limit = "[".repeat(MAX_DEPTH) + &"]".repeat(MAX_DEPTH);
+    assert!(Json::parse(&at_limit).is_ok());
+    assert!(reader_accepts(&at_limit));
+    let beyond = "[".repeat(MAX_DEPTH + 1) + &"]".repeat(MAX_DEPTH + 1);
+    assert!(Json::parse(&beyond).is_err());
+    assert!(!reader_accepts(&beyond));
+    // Mixed nesting: a scalar under MAX_DEPTH - 1 objects is the last
+    // depth both accept; one more object pushes the scalar over the
+    // limit in both (the tree parser counts scalars as a value level,
+    // and the reader mirrors that accounting).
+    let mixed_ok = r#"{"a": "#.repeat(MAX_DEPTH - 1) + "1" + &"}".repeat(MAX_DEPTH - 1);
+    assert!(Json::parse(&mixed_ok).is_ok());
+    assert!(reader_accepts(&mixed_ok));
+    let mixed_deep = r#"{"a": "#.repeat(MAX_DEPTH) + "1" + &"}".repeat(MAX_DEPTH);
+    assert!(Json::parse(&mixed_deep).is_err());
+    assert!(!reader_accepts(&mixed_deep));
+}
+
+#[test]
+fn both_parsers_decode_escape_sequences() {
+    let src = r#""a\"b\\c\/d\n\t\r\b\féA""#;
+    let want = "a\"b\\c/d\n\t\r\u{8}\u{c}éA";
+    assert_eq!(Json::parse(src).unwrap().as_str(), Some(want));
+    let mut r = JsonReader::new(src);
+    assert_eq!(r.next().unwrap(), Some(JsonEvent::Str(want.to_string())));
+    r.end().unwrap();
+}
+
+#[test]
+fn both_parsers_reject_truncated_input() {
+    for src in [
+        "",
+        "{",
+        "[",
+        "{\"a\"",
+        "{\"a\":",
+        "{\"a\": 1,",
+        "[1, 2",
+        "\"open",
+        "\"esc\\",
+        "tru",
+        "-",
+        "{\"a\": \"\\u00",
+    ] {
+        assert!(Json::parse(src).is_err(), "tree parser accepted truncated {src:?}");
+        assert!(!reader_accepts(src), "reader accepted truncated {src:?}");
+    }
+}
+
+#[test]
+fn both_parsers_reject_trailing_garbage() {
+    for src in ["{} {}", "[] 1", "1 2", "null,", "{\"a\": 1} x", "\"s\" \"t\""] {
+        assert!(Json::parse(src).is_err(), "tree parser accepted {src:?}");
+        assert!(!reader_accepts(src), "reader accepted {src:?}");
+    }
+}
+
+#[test]
+fn both_parsers_agree_on_a_corpus() {
+    // Valid and invalid documents; the two parsers must agree on every
+    // verdict (the streaming reader is a re-implementation of the same
+    // grammar, not a looser one).
+    let corpus = [
+        r#"{"a": [1, 2.5, -3e-2], "b": {"c": null}, "d": [true, false]}"#,
+        r#"[[[[]]]]"#,
+        r#"{"": {"": ""}}"#,
+        r#"[1e999]"#, // overflows to inf, but grammatically valid
+        r#"{"dup": 1, "dup": 2}"#,
+        r#"[","]"#,
+        r#"[,]"#,
+        r#"{"a" 1}"#,
+        r#"{1: 2}"#,
+        r#"[1 2]"#,
+        r#"nul"#,
+        r#"+1"#,
+        r#"'single'"#,
+    ];
+    for src in corpus {
+        assert_eq!(
+            Json::parse(src).is_ok(),
+            reader_accepts(src),
+            "parsers disagree on {src:?}"
+        );
+    }
+}
+
+/// Typed decode errors point at the failing field with a JSON pointer.
+#[test]
+fn decode_errors_carry_json_pointer_paths() {
+    let err = from_text::<GatewayStats>(
+        r#"{"served": 1, "failed": 0, "batches": 1, "backend_calls": 1,
+            "routed": 1, "slo_misses": 0, "routed_energy_j": 0.1,
+            "designs": [], "shards": [{"design": "d", "shard": 0,
+            "dispatched": "oops", "stats": {}}]}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.path, "/shards/0/dispatched");
+    let err = from_text::<DeploymentSpec>(r#"{"executors": [{}]}"#).unwrap_err();
+    assert_eq!(err.path, "/executors/0/design");
+    let err = from_text::<LoadgenConfig>(r#"{"scenario": "warp"}"#).unwrap_err();
+    assert_eq!(err.path, "/scenario");
+    assert!(err.msg.contains("warp"));
+}
+
+/// A struct whose fields are all optional must not decode a non-object
+/// value to its defaults — a malformed spec section is an error, never a
+/// silent fall-back to default configuration.
+#[test]
+fn all_optional_structs_reject_non_objects() {
+    assert!(from_text::<LoadgenConfig>(r#"["steady", 128]"#).is_err());
+    assert!(from_text::<GatewayConfig>(r#""8""#).is_err());
+    let err = from_text::<DeploymentSpec>(
+        r#"{"executors": [{"design": "CNN4"}], "gateway": "8"}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.path, "/gateway");
+    let err = from_text::<DeploymentSpec>(
+        r#"{"executors": [{"design": "CNN4"}], "loadgen": ["steady", 128]}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.path, "/loadgen");
+}
+
+/// Lossy integers are rejected by the typed codec instead of silently
+/// truncating (satellite: manifest tensor counts / stats totals).
+#[test]
+fn lossy_integers_are_rejected_loudly() {
+    assert!(from_text::<usize>("9007199254740991").is_ok());
+    assert!(from_text::<usize>("9007199254740992").is_err()); // 2^53
+    assert!(from_text::<usize>("4.5").is_err());
+    assert!(from_text::<usize>("-2").is_err());
+    assert!(from_text::<u64>("1e300").is_err());
+    // And inside a struct, the error names the field.
+    let err =
+        from_text::<ServerStats>(r#"{"served": 1.5, "failed": 0, "batches": 0,
+            "max_batch_seen": 0, "backend_calls": 0, "cost_estimates": 0}"#)
+            .unwrap_err();
+    assert_eq!(err.path, "/served");
+}
