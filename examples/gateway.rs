@@ -7,12 +7,19 @@
 //! design while CIFAR-10 requests land on an SNN design — the per-request
 //! version of the paper's "to spike or not to spike" answer.
 //!
+//! The finale replays a deliberately overloaded bursty workload through
+//! the **discrete-event stack** (`SimGateway`): deadline rejections,
+//! queue-full backpressure, dynamic batches and autoscaler steps, all on
+//! a simulated clock — rerun it and every number repeats bit for bit.
+//!
 //! ```sh
 //! cargo run --release --example gateway [-- --requests 96 --shards 2]
 //! ```
 
+use std::time::Duration;
+
 use anyhow::Result;
-use spikebench::coordinator::gateway::{Gateway, GatewayConfig, Slo};
+use spikebench::coordinator::gateway::{Gateway, GatewayConfig, SimGateway, Slo};
 use spikebench::coordinator::loadgen::{self, LoadgenConfig, Scenario};
 use spikebench::fpga::device::Device;
 use spikebench::util::cli::Args;
@@ -78,5 +85,42 @@ fn main() -> Result<()> {
         stats.batches,
         stats.shards.len()
     );
+
+    // -----------------------------------------------------------------
+    // Deterministic overload: the same fleet on the simulated clock,
+    // hammered with bursts against a bounded queue and a 10 ms deadline.
+    // -----------------------------------------------------------------
+    println!("\n== simulated overload (discrete-event stack) ==");
+    let (specs, pools) =
+        loadgen::synthetic_specs(&["mnist", "svhn", "cifar"], device, 1, seed)?;
+    let cfg = GatewayConfig { queue_cap: 16, ..GatewayConfig::default() };
+    let mut sim = SimGateway::new(specs, &cfg)?;
+    let wl = loadgen::generate(
+        &LoadgenConfig {
+            scenario: Scenario::Bursty,
+            requests: requests.max(128),
+            seed,
+            slo: Slo::latency(0.05).with_deadline(0.01),
+            gap: Duration::from_micros(100),
+        },
+        &pools,
+    );
+    let report = loadgen::simulate(&mut sim, &wl, &pools)?;
+    print!("{}", report.render());
+    let stats = sim.shutdown();
+    println!(
+        "admission: {} offered == {} admitted + {} rejected | {} batches, {} backend calls",
+        stats.offered, stats.admitted, stats.rejected, stats.batches, stats.backend_calls
+    );
+    for ev in &stats.autoscale_events {
+        println!(
+            "autoscale: {} {}→{} shards at {:.3} ms (queue depth {})",
+            ev.design,
+            ev.from_shards,
+            ev.to_shards,
+            ev.t_s * 1e3,
+            ev.queue_depth
+        );
+    }
     Ok(())
 }

@@ -6,6 +6,11 @@
 //! the backend as a single call and share one amortized cost estimate.
 //! Reports service throughput, accuracy and batch statistics.
 //!
+//! This is the single-design, wall-clock executor.  For the multi-design
+//! router on top — and the deterministic admission/batching/autoscaling
+//! stack behind `repro loadgen` — see `examples/gateway.rs` and the
+//! request lifecycle in `ARCHITECTURE.md`.
+//!
 //! ```sh
 //! cargo run --release --example serve [-- --requests 256 --batch 16]
 //! ```

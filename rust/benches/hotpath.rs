@@ -5,6 +5,10 @@
 //!   MNIST + CIFAR design tables (decisions/s), and an end-to-end
 //!   gateway serving run on the synthetic substrate (requests/s) —
 //!   artifact-free, so these run everywhere
+//! * the discrete-event serving stack: one bursty offered load replayed
+//!   with dynamic batching vs per-request dispatch — `backend_calls`
+//!   must be strictly lower with batching (printed after the bench;
+//!   pinned in `tests/admission.rs`)
 //! * functional m-TTFS event engine (spike-events/s), fresh-allocation
 //!   vs reusable-scratch variants
 //! * cycle-model event walk (`trace`) and per-device costing (`cost`)
@@ -56,6 +60,51 @@ fn bench_routing(bench: &Bench) {
     gateway.shutdown();
 }
 
+/// The discrete-event stack under the same bursty offered load, with
+/// dynamic batching (max_batch 8) vs per-request dispatch (max_batch 1).
+/// Each sample rebuilds the stack and replays the workload (the sim
+/// consumes itself); the amortization summary prints once afterwards.
+fn bench_sim_serving(bench: &Bench) {
+    const REQUESTS: usize = 96;
+    let spec_for = |max_batch: usize| {
+        let mut spec = loadgen::DeploymentSpec::synthetic(
+            &["mnist"],
+            "pynq",
+            1,
+            42,
+            LoadgenConfig {
+                scenario: Scenario::Bursty,
+                requests: REQUESTS,
+                seed: 42,
+                slo: Slo::latency(0.05),
+                ..Default::default()
+            },
+        );
+        spec.gateway.max_batch = max_batch;
+        spec
+    };
+    for (label, max_batch) in [
+        ("sim loadgen (bursty, dynamic batching)", 8),
+        ("sim loadgen (bursty, per-request dispatch)", 1),
+    ] {
+        let spec = spec_for(max_batch);
+        bench.run_throughput(label, REQUESTS as u64, || {
+            loadgen::run_sim(&spec).unwrap()
+        });
+    }
+    let (_, batched) = loadgen::run_sim(&spec_for(8)).unwrap();
+    let (_, per_req) = loadgen::run_sim(&spec_for(1)).unwrap();
+    println!(
+        "sim batching amortization: {} backend calls (max_batch 8) vs {} (per-request) \
+         for {} offered requests",
+        batched.backend_calls, per_req.backend_calls, batched.offered
+    );
+    assert!(
+        batched.backend_calls < per_req.backend_calls,
+        "dynamic batching must make strictly fewer backend calls at the same offered load"
+    );
+}
+
 /// With `SPIKEBENCH_BENCH_JSON=path` set, write every recorded
 /// measurement as a wire-codec JSON artifact (the `BENCH_*.json`
 /// trajectory — diffable run to run).
@@ -71,6 +120,7 @@ fn write_bench_json(results: Vec<spikebench::util::bench::BenchResult>) {
 fn main() {
     let bench0 = Bench::new("hotpath").warmup(1).samples(4);
     bench_routing(&bench0);
+    bench_sim_serving(&bench0);
     let mut results = bench0.results();
 
     let mut ctx = match Ctx::load() {

@@ -33,7 +33,28 @@
 //! [`ServerStats`] plus per-design and whole-gateway aggregates that
 //! reconcile *exactly* with the shard numbers (tested in
 //! `tests/gateway.rs`).
+//!
+//! # Two serving stacks, one router
+//!
+//! The threaded [`Gateway`] above serves on the *wall clock* — real
+//! executor threads, real batch timeouts — which is right for demos and
+//! the PJRT path but makes its timing-dependent statistics
+//! machine-dependent.  The **discrete-event stack** ([`SimGateway`])
+//! serves the same specs on a *simulated clock*: requests arrive with
+//! timestamps and optional deadlines ([`Slo::deadline_s`]), pass a
+//! bounded admission queue with deadline-aware backpressure
+//! ([`RejectReason`], priced by the same two-stage cost model the router
+//! uses), form dynamic batches (close on max-size or max-wait, whichever
+//! first), and are dispatched to shard fleets that a queue-depth
+//! autoscaler grows and shrinks under the device fit check
+//! ([`AutoscaleConfig`], [`AutoscaleEvent`]).  Per-design
+//! [`QueueStats`] reconcile exactly (`offered == admitted + rejected`),
+//! and because only time is simulated — the functional backends still
+//! run — a fixed-seed workload produces **byte-identical**
+//! [`GatewayStats`] JSON run to run.  `repro loadgen` drives this stack;
+//! see `ARCHITECTURE.md` for the full request lifecycle.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -42,8 +63,9 @@ use anyhow::{anyhow, Result};
 
 use crate::cnn_accel::config::CnnDesign;
 use crate::fpga::device::Device;
+use crate::fpga::resources::ResourceUsage;
 use crate::nn::arch::parse_arch;
-use crate::nn::network::Network;
+use crate::nn::network::{argmax, Network};
 use crate::nn::snn::snn_infer;
 use crate::nn::tensor::Tensor3;
 use crate::snn::accelerator::{CostTrace, SnnAccelerator};
@@ -57,18 +79,44 @@ use super::serve::{
 use super::sweep::cnn_metrics;
 
 /// Per-request service-level objective.
+///
+/// `max_latency_s` / `max_energy_j` constrain the *routing choice* (which
+/// design may serve the request); `deadline_s` constrains the *request
+/// itself* in simulated time — arrival + `deadline_s` is the latest
+/// acceptable completion, and the admission controller of the
+/// discrete-event stack ([`SimGateway`]) rejects a request whose
+/// estimated queueing delay plus priced service latency already breaks
+/// it.  The threaded [`Gateway`] ignores `deadline_s` (it has no
+/// simulated clock).
+///
+/// ```
+/// use spikebench::coordinator::gateway::Slo;
+///
+/// let slo = Slo::latency(0.05).with_deadline(0.010);
+/// assert_eq!(slo.max_latency_s, 0.05);
+/// assert_eq!(slo.deadline_s, Some(0.010));
+/// assert_eq!(Slo::latency(0.05).deadline_s, None);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Slo {
     /// Maximum acceptable simulated accelerator latency (seconds).
     pub max_latency_s: f64,
     /// Optional per-classification energy budget (Joules).
     pub max_energy_j: Option<f64>,
+    /// Optional completion deadline, relative to arrival (simulated
+    /// seconds).  `None` = the request waits however long the queue takes.
+    pub deadline_s: Option<f64>,
 }
 
 impl Slo {
-    /// Latency-only SLO.
+    /// Latency-only SLO (no energy budget, no deadline).
     pub fn latency(max_latency_s: f64) -> Slo {
-        Slo { max_latency_s, max_energy_j: None }
+        Slo { max_latency_s, max_energy_j: None, deadline_s: None }
+    }
+
+    /// The same SLO with a completion deadline attached.
+    pub fn with_deadline(self, deadline_s: f64) -> Slo {
+        Slo { deadline_s: Some(deadline_s), ..self }
     }
 }
 
@@ -77,6 +125,7 @@ impl ToJson for Slo {
         Obj::new()
             .field("max_latency_s", &self.max_latency_s)
             .field("max_energy_j", &self.max_energy_j)
+            .field("deadline_s", &self.deadline_s)
             .build()
     }
 }
@@ -87,6 +136,7 @@ impl FromJson for Slo {
         Ok(Slo {
             max_latency_s: d.req("max_latency_s")?,
             max_energy_j: d.opt_or("max_energy_j", None)?,
+            deadline_s: d.opt_or("deadline_s", None)?,
         })
     }
 }
@@ -158,27 +208,127 @@ impl ExecutorSpec {
     }
 }
 
+/// Shard-autoscaler configuration of the discrete-event stack
+/// ([`SimGateway`]).  The autoscaler watches each design's admission-queue
+/// depth and grows/shrinks that design's shard fleet between
+/// `min_shards` and `max_shards` — but growth is additionally gated by
+/// the device fit check: a design may only add a shard while
+/// `(shards + 1) ×` its [`ResourceUsage`](crate::fpga::resources::ResourceUsage)
+/// still fits its [`Device`] (the same Table-9 check that rejects unfit
+/// designs at construction).
+///
+/// ```
+/// use spikebench::coordinator::gateway::AutoscaleConfig;
+///
+/// let auto = AutoscaleConfig::default();
+/// assert!(auto.enabled);
+/// assert!(auto.min_shards <= auto.max_shards);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoscaleConfig {
+    /// Master switch; disabled = shard counts stay at their spec values.
+    pub enabled: bool,
+    /// Never shrink a design below this many shards.
+    pub min_shards: usize,
+    /// Never grow a design beyond this many shards (the device fit check
+    /// may cap growth earlier).
+    pub max_shards: usize,
+    /// Scale up when the queue holds at least `up_depth × live shards`
+    /// requests.
+    pub up_depth: usize,
+    /// Scale down when the queue is empty and at least this many live
+    /// shards are idle.
+    pub down_idle: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig { enabled: true, min_shards: 1, max_shards: 8, up_depth: 4, down_idle: 2 }
+    }
+}
+
+impl ToJson for AutoscaleConfig {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("enabled", &self.enabled)
+            .field("min_shards", &self.min_shards)
+            .field("max_shards", &self.max_shards)
+            .field("up_depth", &self.up_depth)
+            .field("down_idle", &self.down_idle)
+            .build()
+    }
+}
+
+impl FromJson for AutoscaleConfig {
+    fn from_json(v: &Json) -> Result<AutoscaleConfig, WireError> {
+        let d = De::root(v);
+        let def = AutoscaleConfig::default();
+        Ok(AutoscaleConfig {
+            enabled: d.opt_or("enabled", def.enabled)?,
+            min_shards: d.opt_or("min_shards", def.min_shards)?,
+            max_shards: d.opt_or("max_shards", def.max_shards)?,
+            up_depth: d.opt_or("up_depth", def.up_depth)?,
+            down_idle: d.opt_or("down_idle", def.down_idle)?,
+        })
+    }
+}
+
 /// Gateway-wide executor configuration (applied to every shard).
-#[derive(Debug, Clone, PartialEq, Eq)]
+///
+/// `max_batch` + `batch_timeout` drive the threaded [`Gateway`]'s
+/// wall-clock batchers; `max_batch` + `batch_max_wait_s` + `queue_cap` +
+/// `autoscale` drive the discrete-event [`SimGateway`] (which has no use
+/// for a wall-clock timeout — its batch close is a simulated-time event).
+///
+/// ```
+/// use spikebench::coordinator::gateway::GatewayConfig;
+///
+/// let cfg = GatewayConfig { max_batch: 4, queue_cap: 16, ..GatewayConfig::default() };
+/// assert_eq!(cfg.max_batch, 4);
+/// assert!(cfg.batch_max_wait_s > 0.0);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
 pub struct GatewayConfig {
     /// Max requests folded into one shard batch.
     pub max_batch: usize,
-    /// How long a shard's batcher waits to fill a batch.
+    /// How long a threaded shard's batcher waits (wall clock) to fill a
+    /// batch.
     pub batch_timeout: Duration,
+    /// Bound of each design's admission queue ([`SimGateway`] only);
+    /// arrivals beyond it are rejected with
+    /// [`RejectReason::QueueFull`].
+    pub queue_cap: usize,
+    /// Max *simulated* time a batch stays open waiting to fill
+    /// ([`SimGateway`] only): a batch closes on max-size or max-wait,
+    /// whichever comes first.
+    pub batch_max_wait_s: f64,
+    /// Queue-depth-driven shard autoscaling ([`SimGateway`] only).
+    pub autoscale: AutoscaleConfig,
 }
 
 impl Default for GatewayConfig {
     fn default() -> Self {
-        GatewayConfig { max_batch: 8, batch_timeout: Duration::from_millis(2) }
+        GatewayConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(2),
+            queue_cap: 64,
+            batch_max_wait_s: 1e-3,
+            autoscale: AutoscaleConfig::default(),
+        }
     }
 }
 
 impl ToJson for GatewayConfig {
     fn to_json(&self) -> Json {
-        // Nanoseconds as an integer: exact round-trip (unlike secs-f64).
+        // The wall-clock timeout as integer nanoseconds: exact round-trip
+        // (unlike a Duration -> secs-f64 conversion).  batch_max_wait_s is
+        // natively f64 and the writer emits round-trip-exact numbers.
         Obj::new()
             .field("max_batch", &self.max_batch)
             .field("batch_timeout_ns", &(self.batch_timeout.as_nanos() as u64))
+            .field("queue_cap", &self.queue_cap)
+            .field("batch_max_wait_s", &self.batch_max_wait_s)
+            .field("autoscale", &self.autoscale)
             .build()
     }
 }
@@ -192,6 +342,9 @@ impl FromJson for GatewayConfig {
             batch_timeout: Duration::from_nanos(
                 d.opt_or("batch_timeout_ns", default.batch_timeout.as_nanos() as u64)?,
             ),
+            queue_cap: d.opt_or("queue_cap", default.queue_cap)?,
+            batch_max_wait_s: d.opt_or("batch_max_wait_s", default.batch_max_wait_s)?,
+            autoscale: d.opt_or("autoscale", default.autoscale)?,
         })
     }
 }
@@ -622,7 +775,156 @@ impl FromJson for DesignStats {
     }
 }
 
-/// Aggregated gateway statistics: shard-level, design-level, and totals.
+/// Why the admission controller turned a request away.
+///
+/// ```
+/// use spikebench::coordinator::gateway::RejectReason;
+///
+/// assert_eq!(RejectReason::QueueFull.as_str(), "queue_full");
+/// assert_eq!(RejectReason::DeadlineUnmeetable.as_str(), "deadline");
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The chosen design's admission queue was at `queue_cap`.
+    QueueFull,
+    /// The estimated queueing delay plus the design's priced service
+    /// latency already exceeded the request's deadline at arrival.
+    DeadlineUnmeetable,
+}
+
+impl RejectReason {
+    /// Stable wire/report name of the reason.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::DeadlineUnmeetable => "deadline",
+        }
+    }
+}
+
+/// Per-design admission-queue statistics of a [`SimGateway`] run.
+///
+/// The reconciliation invariant (pinned in `tests/admission.rs`):
+/// `offered == admitted + rejected_full + rejected_deadline`.
+///
+/// ```
+/// use spikebench::coordinator::gateway::QueueStats;
+///
+/// let q = QueueStats { offered: 10, admitted: 7, rejected_full: 2,
+///                      rejected_deadline: 1, ..QueueStats::default() };
+/// assert_eq!(q.offered, q.admitted + q.rejected());
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct QueueStats {
+    /// Design the queue belonged to.
+    pub design: String,
+    /// Requests the router sent to this design.
+    pub offered: usize,
+    /// Requests admitted into the queue (all of them were later served).
+    pub admitted: usize,
+    /// Rejections because the queue was at `queue_cap`.
+    pub rejected_full: usize,
+    /// Rejections because the deadline was already unmeetable at arrival.
+    pub rejected_deadline: usize,
+    /// Deepest queue depth observed (after admission).
+    pub max_depth: usize,
+    /// Summed simulated queue wait (arrival → dispatch) of admitted
+    /// requests, in seconds.
+    pub total_wait_s: f64,
+    /// Admitted requests that completed *after* their deadline (the
+    /// admission estimate is optimistic about batch-formation delay, so
+    /// a near-deadline request can still finish late).
+    pub deadline_misses: usize,
+}
+
+impl QueueStats {
+    /// Total rejections, either reason.
+    pub fn rejected(&self) -> usize {
+        self.rejected_full + self.rejected_deadline
+    }
+}
+
+impl ToJson for QueueStats {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("design", &self.design)
+            .field("offered", &self.offered)
+            .field("admitted", &self.admitted)
+            .field("rejected_full", &self.rejected_full)
+            .field("rejected_deadline", &self.rejected_deadline)
+            .field("max_depth", &self.max_depth)
+            .field("total_wait_s", &self.total_wait_s)
+            .field("deadline_misses", &self.deadline_misses)
+            .build()
+    }
+}
+
+impl FromJson for QueueStats {
+    fn from_json(v: &Json) -> Result<QueueStats, WireError> {
+        let d = De::root(v);
+        Ok(QueueStats {
+            design: d.req("design")?,
+            offered: d.req("offered")?,
+            admitted: d.req("admitted")?,
+            rejected_full: d.req("rejected_full")?,
+            rejected_deadline: d.req("rejected_deadline")?,
+            max_depth: d.req("max_depth")?,
+            total_wait_s: d.req("total_wait_s")?,
+            deadline_misses: d.req("deadline_misses")?,
+        })
+    }
+}
+
+/// One autoscaler step: a design's shard fleet grew or shrank by one.
+///
+/// ```
+/// use spikebench::coordinator::gateway::AutoscaleEvent;
+///
+/// let ev = AutoscaleEvent { t_s: 0.0016, design: "CNN4".into(),
+///                           from_shards: 1, to_shards: 2, queue_depth: 5 };
+/// assert!(ev.to_shards > ev.from_shards, "this event is a scale-up");
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleEvent {
+    /// Simulated time of the step (seconds since the run started).
+    pub t_s: f64,
+    /// Design whose fleet changed.
+    pub design: String,
+    /// Live shards before the step.
+    pub from_shards: usize,
+    /// Live shards after the step (`from ± 1`).
+    pub to_shards: usize,
+    /// Queue depth that triggered the step.
+    pub queue_depth: usize,
+}
+
+impl ToJson for AutoscaleEvent {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("t_s", &self.t_s)
+            .field("design", &self.design)
+            .field("from_shards", &self.from_shards)
+            .field("to_shards", &self.to_shards)
+            .field("queue_depth", &self.queue_depth)
+            .build()
+    }
+}
+
+impl FromJson for AutoscaleEvent {
+    fn from_json(v: &Json) -> Result<AutoscaleEvent, WireError> {
+        let d = De::root(v);
+        Ok(AutoscaleEvent {
+            t_s: d.req("t_s")?,
+            design: d.req("design")?,
+            from_shards: d.req("from_shards")?,
+            to_shards: d.req("to_shards")?,
+            queue_depth: d.req("queue_depth")?,
+        })
+    }
+}
+
+/// Aggregated gateway statistics: shard-level, design-level, admission
+/// queues, autoscaler steps, and totals.
 /// The totals are exact sums of the per-shard [`ServerStats`].
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct GatewayStats {
@@ -644,6 +946,21 @@ pub struct GatewayStats {
     pub slo_misses: usize,
     /// Total routed energy (J).
     pub routed_energy_j: f64,
+    /// Requests that reached admission (routed + rejected).  Equals
+    /// `routed` for the threaded [`Gateway`], which has no admission
+    /// control.
+    pub offered: usize,
+    /// Requests admitted into a queue (== `routed` — everything admitted
+    /// is eventually dispatched).
+    pub admitted: usize,
+    /// Requests rejected at admission (queue full or deadline
+    /// unmeetable); always 0 for the threaded [`Gateway`].
+    pub rejected: usize,
+    /// Per-design admission-queue statistics, aligned with `designs`.
+    pub queues: Vec<QueueStats>,
+    /// Autoscaler steps in simulated-time order (empty when autoscaling
+    /// is disabled or for the threaded [`Gateway`]).
+    pub autoscale_events: Vec<AutoscaleEvent>,
 }
 
 impl ToJson for GatewayStats {
@@ -656,8 +973,13 @@ impl ToJson for GatewayStats {
             .field("routed", &self.routed)
             .field("slo_misses", &self.slo_misses)
             .field("routed_energy_j", &self.routed_energy_j)
+            .field("offered", &self.offered)
+            .field("admitted", &self.admitted)
+            .field("rejected", &self.rejected)
             .field("designs", &self.designs)
             .field("shards", &self.shards)
+            .field("queues", &self.queues)
+            .field("autoscale_events", &self.autoscale_events)
             .build()
     }
 }
@@ -673,8 +995,15 @@ impl FromJson for GatewayStats {
             routed: d.req("routed")?,
             slo_misses: d.req("slo_misses")?,
             routed_energy_j: d.req("routed_energy_j")?,
+            // Admission-era fields decode with defaults so pre-admission
+            // artifacts stay loadable.
+            offered: d.opt_or("offered", 0)?,
+            admitted: d.opt_or("admitted", 0)?,
+            rejected: d.opt_or("rejected", 0)?,
             designs: d.req("designs")?,
             shards: d.req("shards")?,
+            queues: d.opt_or("queues", Vec::new())?,
+            autoscale_events: d.opt_or("autoscale_events", Vec::new())?,
         })
     }
 }
@@ -844,6 +1173,602 @@ impl Gateway {
             out.routed += ds.routed;
             out.slo_misses += ds.slo_misses;
             out.routed_energy_j += ds.routed_energy_j;
+            // The threaded gateway has no admission control: everything
+            // routed was offered and admitted, nothing rejected.
+            out.queues.push(QueueStats {
+                design: ds.name.clone(),
+                offered: ds.routed,
+                admitted: ds.routed,
+                ..QueueStats::default()
+            });
+            out.designs.push(ds);
+        }
+        out.offered = out.routed;
+        out.admitted = out.routed;
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Discrete-event, simulated-time serving stack
+// ---------------------------------------------------------------------------
+
+/// One request offered to the simulated-time stack ([`SimGateway`]): the
+/// threaded [`Request`]'s fields plus a simulated arrival timestamp.
+///
+/// ```
+/// use spikebench::coordinator::gateway::{SimRequest, Slo};
+/// use spikebench::nn::tensor::Tensor3;
+///
+/// let req = SimRequest {
+///     dataset: "mnist".to_string(),
+///     x: Tensor3::from_vec(1, 1, 1, vec![0.5]),
+///     slo: Slo::latency(0.05).with_deadline(0.010),
+///     arrival_s: 0.0032,
+/// };
+/// assert_eq!(req.slo.deadline_s, Some(0.010));
+/// ```
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    /// Dataset the input belongs to (the routing key).
+    pub dataset: String,
+    /// The image to classify.
+    pub x: Tensor3,
+    /// The request's SLO (routing constraints + optional deadline).
+    pub slo: Slo,
+    /// Simulated arrival time, seconds since the run started.  Requests
+    /// must be offered in non-decreasing arrival order.
+    pub arrival_s: f64,
+}
+
+/// What happened to one offered request, in submission order.
+///
+/// A rejected request has `admitted == false` and a [`RejectReason`]; an
+/// admitted one always completes (`service_s` = simulated arrival →
+/// completion, `ok`/`predicted` from the functional backend).
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Design the router chose (rejected requests still carry it — the
+    /// rejection happened at that design's queue).
+    pub design: String,
+    /// Whether admission accepted the request.
+    pub admitted: bool,
+    /// Why admission turned the request away (`None` when admitted).
+    pub reject: Option<RejectReason>,
+    /// True when no design met the SLO and routing fell back to the
+    /// fastest design for the dataset.
+    pub slo_miss: bool,
+    /// Whether the functional backend produced a result.
+    pub ok: bool,
+    /// Backend error message when `ok` is false.
+    pub error: Option<String>,
+    /// `argmax` of the logits; `None` when rejected or failed.
+    pub predicted: Option<usize>,
+    /// Size of the batch the request was served in (0 when rejected).
+    pub batch_size: usize,
+    /// Shard of the chosen design the batch ran on.
+    pub shard: usize,
+    /// Simulated arrival time (seconds).
+    pub arrival_s: f64,
+    /// Simulated arrival → completion time (seconds); 0 when rejected.
+    pub service_s: f64,
+    /// Served, but completed after the request's deadline.
+    pub deadline_miss: bool,
+    /// Priced per-classification latency of the routing decision (s).
+    pub routed_latency_s: f64,
+    /// Priced per-classification energy of the routing decision (J).
+    pub routed_energy_j: f64,
+}
+
+struct Queued {
+    arrival_s: f64,
+    /// Absolute deadline (`arrival + slo.deadline_s`); +∞ when none.
+    deadline_abs: f64,
+    x: Tensor3,
+    /// Index into the gateway's outcome list.
+    outcome: usize,
+}
+
+struct SimShard {
+    /// Simulated time until which the shard is executing a batch.
+    busy_until: f64,
+    stats: ServerStats,
+    /// Requests dispatched to this shard (mirrors the threaded
+    /// [`ShardStats::dispatched`]).
+    dispatched: usize,
+}
+
+struct SimEntry {
+    name: String,
+    dataset: String,
+    device_name: String,
+    device: Device,
+    /// Single-shard resource usage on `device` — the autoscaler's fit
+    /// gate multiplies it by the candidate shard count.
+    shard_resources: ResourceUsage,
+    /// Priced per-classification latency on the entry's device (the
+    /// two-stage cost model's number; a size-B batch occupies a shard for
+    /// `B × latency_s` simulated seconds).
+    latency_s: f64,
+    backend: Box<dyn InferenceBackend>,
+    queue: VecDeque<Queued>,
+    /// All shards ever created; only `shards[..live]` receive dispatches.
+    shards: Vec<SimShard>,
+    live: usize,
+    qstats: QueueStats,
+    slo_misses: usize,
+}
+
+/// The discrete-event, simulated-time serving stack: admission queues
+/// with deadline-aware backpressure, dynamic batch formation, and a
+/// queue-depth shard autoscaler — all on a simulated clock, so a
+/// fixed-seed workload produces **bit-identical** [`GatewayStats`] run
+/// to run (pinned in `tests/admission.rs`).
+///
+/// The request lifecycle (diagrammed in `ARCHITECTURE.md`):
+///
+/// 1. **Route** — [`Router::decide`] picks the cheapest design meeting
+///    the [`Slo`], priced by the two-stage cost model.
+/// 2. **Admit** — the design's bounded queue rejects when full
+///    ([`RejectReason::QueueFull`]) or when the estimated queueing delay
+///    plus the design's priced latency already breaks the request's
+///    deadline ([`RejectReason::DeadlineUnmeetable`]).  The estimate —
+///    earliest shard-free time plus queued work spread across live
+///    shards, every term a product of the priced per-classification
+///    latency — is optimistic about batch formation, so near-deadline
+///    admissions can still finish late (counted in
+///    [`QueueStats::deadline_misses`], never silently dropped).
+/// 3. **Batch** — a batch closes on max-size (`max_batch`) or max-wait
+///    (`batch_max_wait_s` after the oldest queued arrival), whichever
+///    comes first, then dispatches to the earliest-available shard; one
+///    [`InferenceBackend::classify_batch`] call serves the whole batch,
+///    so [`ServerStats::backend_calls`] amortizes across callers.
+/// 4. **Autoscale** — on every arrival the design's fleet grows when the
+///    queue holds ≥ `up_depth × live` requests (gated by the Table-9
+///    device fit check at `live + 1` shards) and shrinks when the queue
+///    is empty with ≥ `down_idle` idle shards.
+///
+/// Functional execution is real (the seeded [`NetworkBackend`] runs per
+/// batch); only *time* is simulated, which is what makes the stats
+/// deterministic.  Use the threaded [`Gateway`] for wall-clock serving.
+///
+/// ```no_run
+/// use spikebench::coordinator::gateway::{GatewayConfig, SimGateway, SimRequest, Slo};
+/// use spikebench::coordinator::loadgen;
+/// use spikebench::fpga::device::PYNQ_Z1;
+///
+/// let (specs, pools) = loadgen::synthetic_specs(&["mnist"], PYNQ_Z1, 1, 42).unwrap();
+/// let mut sim = SimGateway::new(specs, &GatewayConfig::default()).unwrap();
+/// sim.offer(SimRequest {
+///     dataset: "mnist".to_string(),
+///     x: pools[0].images[0].clone(),
+///     slo: Slo::latency(0.05).with_deadline(0.02),
+///     arrival_s: 0.0,
+/// }).unwrap();
+/// let outcomes = sim.finish();
+/// let stats = sim.shutdown();
+/// assert_eq!(stats.offered, outcomes.len());
+/// ```
+pub struct SimGateway {
+    router: Router,
+    cfg: GatewayConfig,
+    entries: Vec<SimEntry>,
+    outcomes: Vec<SimOutcome>,
+    events: Vec<AutoscaleEvent>,
+    last_arrival_s: f64,
+    finished: bool,
+}
+
+impl SimGateway {
+    /// Build the stack with the default backend per design: a
+    /// [`NetworkBackend`] over a clone of the spec's functional network.
+    pub fn new(specs: Vec<ExecutorSpec>, cfg: &GatewayConfig) -> Result<SimGateway> {
+        SimGateway::new_with(specs, cfg, |spec| {
+            Box::new(NetworkBackend { net: spec.net.clone() }) as Box<dyn InferenceBackend>
+        })
+    }
+
+    /// Build with a custom backend factory, called once per accepted
+    /// design (sim shards of one design share the functional backend —
+    /// batches execute sequentially on the simulated clock anyway).
+    ///
+    /// The whole fleet respects the device fit check, not just
+    /// autoscaler growth: a spec requesting more initial shards than
+    /// `k ×` the design's resources fit on its device is clamped down to
+    /// the largest feasible `k` (at least 1 — a design that cannot fit
+    /// even once was already rejected by the router).  Errors on a
+    /// malformed config (`batch_max_wait_s` must be a finite
+    /// non-negative number — a negative max-wait would close batches
+    /// before their members arrive).
+    pub fn new_with(
+        specs: Vec<ExecutorSpec>,
+        cfg: &GatewayConfig,
+        mut make_backend: impl FnMut(&ExecutorSpec) -> Box<dyn InferenceBackend>,
+    ) -> Result<SimGateway> {
+        // `!(x >= 0)` also catches NaN, which every time comparison in
+        // the event loop would silently mishandle.
+        if !(cfg.batch_max_wait_s >= 0.0) || !cfg.batch_max_wait_s.is_finite() {
+            return Err(anyhow!(
+                "batch_max_wait_s must be a finite non-negative number (got {})",
+                cfg.batch_max_wait_s
+            ));
+        }
+        if cfg.queue_cap == 0 {
+            return Err(anyhow!(
+                "queue_cap must be at least 1 (a zero-capacity queue would reject \
+                 every request as queue_full)"
+            ));
+        }
+        let router = Router::new(&specs);
+        if router.designs.is_empty() {
+            return Err(anyhow!("no design fits its device: {:?}", router.rejected));
+        }
+        let mut entries = Vec::with_capacity(router.accepted.len());
+        for (idx, &spec_idx) in router.accepted.iter().enumerate() {
+            let spec = &specs[spec_idx];
+            let (latency_s, _) = router.price(idx);
+            let shard_resources = match &spec.design {
+                DesignKind::Snn { design, .. } => design.resources_on(&spec.device),
+                DesignKind::Cnn { design, .. } => design.resources(),
+            };
+            // An implausible fleet is a config error, not a clamp target
+            // (the bound also keeps `scaled(k)` far from u32 overflow and
+            // the clamp loop below trivially short).
+            if spec.shards > 1024 {
+                return Err(anyhow!(
+                    "executor {:?}: shards = {} is not a plausible fleet (max 1024)",
+                    spec.name(),
+                    spec.shards
+                ));
+            }
+            // The initial fleet obeys the same fit gate as autoscaler
+            // growth: clamp the requested shard count to the largest k
+            // whose k × resources fit the device.
+            let mut shards = spec.shards.max(1);
+            while shards > 1
+                && shard_resources.scaled(shards).check_fits(&spec.device).is_err()
+            {
+                shards -= 1;
+            }
+            entries.push(SimEntry {
+                name: spec.name().to_string(),
+                dataset: spec.dataset.clone(),
+                device_name: spec.device.name.to_string(),
+                device: spec.device,
+                shard_resources,
+                latency_s,
+                backend: make_backend(spec),
+                queue: VecDeque::new(),
+                shards: (0..shards)
+                    .map(|_| SimShard {
+                        busy_until: 0.0,
+                        stats: ServerStats::default(),
+                        dispatched: 0,
+                    })
+                    .collect(),
+                live: shards,
+                qstats: QueueStats {
+                    design: spec.name().to_string(),
+                    ..QueueStats::default()
+                },
+                slo_misses: 0,
+            });
+        }
+        Ok(SimGateway {
+            router,
+            cfg: cfg.clone(),
+            entries,
+            outcomes: Vec::new(),
+            events: Vec::new(),
+            last_arrival_s: 0.0,
+            finished: false,
+        })
+    }
+
+    /// The routing half (priced table, unfit rejections, decisions).
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Specs rejected at construction (design did not fit its device) —
+    /// distinct from per-request admission rejections.
+    pub fn rejected_designs(&self) -> &[(String, String)] {
+        self.router.rejected()
+    }
+
+    /// Live shard count of design `idx` (router-table order) right now.
+    pub fn live_shards(&self, idx: usize) -> usize {
+        self.entries[idx].live
+    }
+
+    /// Offer one request at its simulated arrival time.  Routing,
+    /// admission, batching and autoscaling all happen here and during
+    /// [`SimGateway::finish`]; the outcome is recorded in submission
+    /// order.  Errors only when no design serves the dataset.
+    ///
+    /// Panics if called after [`SimGateway::finish`] or with an
+    /// `arrival_s` earlier than the previous offer (the simulated clock
+    /// cannot run backwards).
+    pub fn offer(&mut self, req: SimRequest) -> Result<()> {
+        assert!(!self.finished, "offer after finish");
+        assert!(
+            req.arrival_s >= self.last_arrival_s,
+            "arrivals must be offered in non-decreasing time order"
+        );
+        self.last_arrival_s = req.arrival_s;
+        let decision = self.router.decide(&req.dataset, &req.slo)?;
+        let t = req.arrival_s;
+        let max_batch = self.cfg.max_batch.max(1);
+        let max_wait = self.cfg.batch_max_wait_s;
+        if let Some(dl) = req.slo.deadline_s {
+            // `!(x > 0)` also catches NaN, which every deadline
+            // comparison would silently treat as "no deadline".
+            if !(dl > 0.0) || !dl.is_finite() {
+                return Err(anyhow!(
+                    "deadline_s must be a positive finite number (got {dl})"
+                ));
+            }
+        }
+        // Retire every dispatch scheduled before this arrival, so the
+        // admission estimate below sees the queue as it stands at `t`.
+        Self::advance(&mut self.entries[decision.design], max_batch, max_wait, t, &mut self.outcomes);
+        // Evaluate the autoscaler on the pre-admission queue state: a
+        // deep backlog grows the fleet before this request's deadline
+        // estimate is computed (the new shard can save the admission),
+        // and an empty queue with idle shards shrinks it.
+        self.autoscale(decision.design, t);
+        // A scale-up adds an idle shard at `t`: re-run dispatch so queued
+        // work that can start right now does so before the queue-full and
+        // deadline checks look at the backlog (a no-op otherwise).
+        Self::advance(&mut self.entries[decision.design], max_batch, max_wait, t, &mut self.outcomes);
+
+        let e = &mut self.entries[decision.design];
+        e.qstats.offered += 1;
+        let mut outcome = SimOutcome {
+            design: e.name.clone(),
+            admitted: false,
+            reject: None,
+            slo_miss: decision.slo_miss,
+            ok: false,
+            error: None,
+            predicted: None,
+            batch_size: 0,
+            shard: 0,
+            arrival_s: t,
+            service_s: 0.0,
+            deadline_miss: false,
+            routed_latency_s: decision.latency_s,
+            routed_energy_j: decision.energy_j,
+        };
+        if e.queue.len() >= self.cfg.queue_cap {
+            e.qstats.rejected_full += 1;
+            outcome.reject = Some(RejectReason::QueueFull);
+            self.outcomes.push(outcome);
+        } else if req.slo.deadline_s.map_or(false, |dl| {
+            // Completion estimate, priced by the two-stage cost model:
+            // the earliest any shard frees, plus the queued work ahead
+            // spread across the live shards, plus this request's own
+            // service.  An optimistic estimate, not a strict bound —
+            // batch formation can add delay (late completions are
+            // counted in `deadline_misses`) — but it never charges a
+            // request for backlog on shards it would not wait for.
+            let min_backlog = e.shards[..e.live]
+                .iter()
+                .map(|s| (s.busy_until - t).max(0.0))
+                .fold(f64::INFINITY, f64::min);
+            let queued = e.queue.len() as f64 * e.latency_s;
+            min_backlog + queued / e.live as f64 + e.latency_s > dl
+        }) {
+            e.qstats.rejected_deadline += 1;
+            outcome.reject = Some(RejectReason::DeadlineUnmeetable);
+            self.outcomes.push(outcome);
+        } else {
+            outcome.admitted = true;
+            e.qstats.admitted += 1;
+            if decision.slo_miss {
+                e.slo_misses += 1;
+            }
+            let deadline_abs = req.slo.deadline_s.map_or(f64::INFINITY, |dl| t + dl);
+            let outcome_idx = self.outcomes.len();
+            self.outcomes.push(outcome);
+            e.queue.push_back(Queued { arrival_s: t, deadline_abs, x: req.x, outcome: outcome_idx });
+            e.qstats.max_depth = e.qstats.max_depth.max(e.queue.len());
+        }
+        Ok(())
+    }
+
+    /// Fire every dispatch of one entry whose trigger time is ≤ `now`,
+    /// in simulated-time order.  A batch's close time is the earlier of
+    /// max-size (the arrival that filled it) and max-wait (the oldest
+    /// member's patience); the dispatch fires once a live shard is also
+    /// free, and later arrivals keep topping the batch up to `max_batch`
+    /// while it waits for a shard.
+    fn advance(
+        e: &mut SimEntry,
+        max_batch: usize,
+        max_wait: f64,
+        now: f64,
+        outcomes: &mut [SimOutcome],
+    ) {
+        loop {
+            if e.queue.is_empty() {
+                return;
+            }
+            // Earliest-available live shard, ties to the lowest index.
+            let (mut si, mut t_shard) = (0usize, f64::INFINITY);
+            for (i, s) in e.shards[..e.live].iter().enumerate() {
+                if s.busy_until < t_shard {
+                    t_shard = s.busy_until;
+                    si = i;
+                }
+            }
+            let t_wait = e.queue.front().unwrap().arrival_s + max_wait;
+            let close_at = match e.queue.get(max_batch - 1) {
+                Some(filler) => t_wait.min(filler.arrival_s),
+                None => t_wait,
+            };
+            let fire = t_shard.max(close_at);
+            if fire > now {
+                return;
+            }
+            let b = e.queue.len().min(max_batch);
+            // Move the tensors out of the queue (no per-request clone on
+            // the simulation hot path); keep the metadata alongside.
+            let mut xs = Vec::with_capacity(b);
+            let mut metas = Vec::with_capacity(b);
+            for q in e.queue.drain(..b) {
+                xs.push(q.x);
+                metas.push((q.arrival_s, q.deadline_abs, q.outcome));
+            }
+            // One backend call per batch, with the executor's shared
+            // per-request failure isolation (a poisoned input fails
+            // alone; short batches / empty logits are explicit errors).
+            let results = super::serve::run_batch(e.backend.as_mut(), &xs);
+            let done = fire + b as f64 * e.latency_s;
+            let shard = &mut e.shards[si];
+            shard.busy_until = done;
+            shard.dispatched += b;
+            shard.stats.batches += 1;
+            shard.stats.backend_calls += 1;
+            shard.stats.max_batch_seen = shard.stats.max_batch_seen.max(b);
+            shard.stats.served += b;
+            for ((arrival_s, deadline_abs, outcome_idx), res) in
+                metas.into_iter().zip(results)
+            {
+                e.qstats.total_wait_s += fire - arrival_s;
+                let o = &mut outcomes[outcome_idx];
+                o.batch_size = b;
+                o.shard = si;
+                o.service_s = done - arrival_s;
+                if done > deadline_abs {
+                    o.deadline_miss = true;
+                    e.qstats.deadline_misses += 1;
+                }
+                match res {
+                    Ok(logits) => {
+                        o.ok = true;
+                        o.predicted = Some(argmax(&logits));
+                    }
+                    Err(err) => {
+                        o.ok = false;
+                        o.error = Some(err);
+                        shard.stats.failed += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// One autoscaler evaluation for design `idx` at time `t` (run on
+    /// every arrival, so the cadence is deterministic).  At most one step
+    /// per evaluation; growth is gated by the device fit check.
+    fn autoscale(&mut self, idx: usize, t: f64) {
+        let auto = self.cfg.autoscale;
+        if !auto.enabled {
+            return;
+        }
+        let e = &mut self.entries[idx];
+        let depth = e.queue.len();
+        if depth >= auto.up_depth.max(1) * e.live && e.live < auto.max_shards {
+            if e.shard_resources.scaled(e.live + 1).check_fits(&e.device).is_err() {
+                return; // one more shard would not fit the device
+            }
+            if e.live == e.shards.len() {
+                e.shards.push(SimShard {
+                    busy_until: t,
+                    stats: ServerStats::default(),
+                    dispatched: 0,
+                });
+            } else {
+                e.shards[e.live].busy_until = t;
+            }
+            e.live += 1;
+            self.events.push(AutoscaleEvent {
+                t_s: t,
+                design: e.name.clone(),
+                from_shards: e.live - 1,
+                to_shards: e.live,
+                queue_depth: depth,
+            });
+        } else if depth == 0 && e.live > auto.min_shards.max(1) {
+            let idle = e.shards[..e.live].iter().filter(|s| s.busy_until <= t).count();
+            if idle >= auto.down_idle.max(1) && e.shards[e.live - 1].busy_until <= t {
+                e.live -= 1;
+                self.events.push(AutoscaleEvent {
+                    t_s: t,
+                    design: e.name.clone(),
+                    from_shards: e.live + 1,
+                    to_shards: e.live,
+                    queue_depth: depth,
+                });
+            }
+        }
+    }
+
+    /// Run simulated time forward past the last arrival until every
+    /// queue drains, then return the per-request outcomes in submission
+    /// order.  Idempotent; [`SimGateway::shutdown`] calls it if needed.
+    pub fn finish(&mut self) -> Vec<SimOutcome> {
+        self.finished = true;
+        let max_batch = self.cfg.max_batch.max(1);
+        let max_wait = self.cfg.batch_max_wait_s;
+        for e in &mut self.entries {
+            Self::advance(e, max_batch, max_wait, f64::INFINITY, &mut self.outcomes);
+        }
+        std::mem::take(&mut self.outcomes)
+    }
+
+    /// Drain (if not already finished) and aggregate statistics.  Every
+    /// number in the result is simulated-deterministic: a fixed-seed
+    /// workload serializes to byte-identical JSON run to run.
+    pub fn shutdown(mut self) -> GatewayStats {
+        if !self.finished {
+            self.finish();
+        }
+        let SimGateway { router, entries, events, .. } = self;
+        let mut out = GatewayStats { autoscale_events: events, ..GatewayStats::default() };
+        for (idx, e) in entries.into_iter().enumerate() {
+            let (_, priced_energy) = router.price(idx);
+            let mut ds = DesignStats {
+                name: e.name.clone(),
+                dataset: e.dataset,
+                device_name: e.device_name,
+                routed: 0,
+                slo_misses: e.slo_misses,
+                served: 0,
+                failed: 0,
+                batches: 0,
+                backend_calls: 0,
+                // Pricing re-costs the construction-time trace; no
+                // per-batch estimates are computed on the simulated path.
+                cost_estimates: 0,
+                routed_energy_j: 0.0,
+            };
+            for (shard_idx, shard) in e.shards.into_iter().enumerate() {
+                ds.routed += shard.dispatched;
+                ds.served += shard.stats.served;
+                ds.failed += shard.stats.failed;
+                ds.batches += shard.stats.batches;
+                ds.backend_calls += shard.stats.backend_calls;
+                out.shards.push(ShardStats {
+                    design: e.name.clone(),
+                    shard: shard_idx,
+                    dispatched: shard.dispatched,
+                    stats: shard.stats,
+                });
+            }
+            ds.routed_energy_j = ds.routed as f64 * priced_energy;
+            out.served += ds.served;
+            out.failed += ds.failed;
+            out.batches += ds.batches;
+            out.backend_calls += ds.backend_calls;
+            out.routed += ds.routed;
+            out.slo_misses += ds.slo_misses;
+            out.routed_energy_j += ds.routed_energy_j;
+            out.offered += e.qstats.offered;
+            out.admitted += e.qstats.admitted;
+            out.rejected += e.qstats.rejected();
+            out.queues.push(e.qstats);
             out.designs.push(ds);
         }
         out
@@ -934,12 +1859,12 @@ mod tests {
         let cheap = e0.min(e1);
         // A budget below both energies: fallback (SLO miss semantics).
         let d = router
-            .decide("tiny", &Slo { max_latency_s: 10.0, max_energy_j: Some(cheap * 0.5) })
+            .decide("tiny", &Slo { max_energy_j: Some(cheap * 0.5), ..Slo::latency(10.0) })
             .unwrap();
         assert!(d.slo_miss);
         // A budget admitting only the cheaper design.
         let d = router
-            .decide("tiny", &Slo { max_latency_s: 10.0, max_energy_j: Some(cheap * 1.001) })
+            .decide("tiny", &Slo { max_energy_j: Some(cheap * 1.001), ..Slo::latency(10.0) })
             .unwrap();
         assert!(!d.slo_miss);
         assert_eq!(d.design, if e0 <= e1 { 0 } else { 1 });
@@ -992,10 +1917,95 @@ mod tests {
     }
 
     #[test]
+    fn sim_gateway_serves_and_queue_counts_reconcile() {
+        let mut sim =
+            SimGateway::new(vec![spec("tiny-p8", 8, 1)], &GatewayConfig::default()).unwrap();
+        for i in 0..6 {
+            sim.offer(SimRequest {
+                dataset: "tiny".to_string(),
+                x: Tensor3::from_vec(1, 3, 3, vec![0.8; 9]),
+                slo: Slo::latency(10.0),
+                arrival_s: i as f64 * 1e-4,
+            })
+            .unwrap();
+        }
+        let outcomes = sim.finish();
+        assert_eq!(outcomes.len(), 6);
+        assert!(outcomes.iter().all(|o| o.admitted && o.ok && o.service_s > 0.0));
+        let stats = sim.shutdown();
+        assert_eq!((stats.offered, stats.admitted, stats.rejected), (6, 6, 0));
+        assert_eq!(stats.served, 6);
+        assert_eq!(stats.routed, 6);
+        let q = &stats.queues[0];
+        assert_eq!(q.offered, q.admitted + q.rejected());
+    }
+
+    /// The initial fleet obeys the same device fit gate as autoscaler
+    /// growth: a 60-BRAM design on the 140-BRAM PYNQ-Z1 clamps a
+    /// 5-shard request down to 2.
+    #[test]
+    fn sim_initial_fleet_is_clamped_to_device_fit() {
+        let mut big = spec("tiny-fat", 8, 5);
+        if let DesignKind::Snn { design, .. } = &mut big.design {
+            design.published = Some(crate::fpga::resources::ResourceUsage {
+                luts: 1_000,
+                regs: 1_000,
+                brams: 60.0,
+                dsps: 0,
+            });
+        }
+        let sim = SimGateway::new(vec![big], &GatewayConfig::default()).unwrap();
+        assert_eq!(sim.live_shards(0), 2);
+    }
+
+    #[test]
+    fn sim_rejects_malformed_config() {
+        for bad in [-0.5, f64::NAN, f64::INFINITY] {
+            let cfg = GatewayConfig { batch_max_wait_s: bad, ..GatewayConfig::default() };
+            assert!(
+                SimGateway::new(vec![spec("tiny-p8", 8, 1)], &cfg).is_err(),
+                "batch_max_wait_s = {bad} must be rejected"
+            );
+        }
+        let cfg = GatewayConfig { queue_cap: 0, ..GatewayConfig::default() };
+        assert!(
+            SimGateway::new(vec![spec("tiny-p8", 8, 1)], &cfg).is_err(),
+            "a zero-capacity queue must be a config error, not a 100% reject rate"
+        );
+    }
+
+    #[test]
+    fn sim_rejects_unmeetable_deadline_at_admission() {
+        let mut sim =
+            SimGateway::new(vec![spec("tiny-p8", 8, 1)], &GatewayConfig::default()).unwrap();
+        let (lat, _) = sim.router().price(0);
+        sim.offer(SimRequest {
+            dataset: "tiny".to_string(),
+            x: Tensor3::from_vec(1, 3, 3, vec![0.8; 9]),
+            // Tighter than the design's own priced service latency: no
+            // queue state can ever meet it.
+            slo: Slo::latency(10.0).with_deadline(lat * 0.5),
+            arrival_s: 0.0,
+        })
+        .unwrap();
+        let outcomes = sim.finish();
+        assert!(!outcomes[0].admitted);
+        assert_eq!(outcomes[0].reject, Some(RejectReason::DeadlineUnmeetable));
+        let stats = sim.shutdown();
+        assert_eq!(stats.served, 0, "a rejected request must not be served");
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.queues[0].rejected_deadline, 1);
+    }
+
+    #[test]
     fn gateway_serves_and_reconciles() {
         let gw = Gateway::start(
             vec![spec("tiny-p8", 8, 2)],
-            &GatewayConfig { max_batch: 2, batch_timeout: Duration::from_millis(2) },
+            &GatewayConfig {
+                max_batch: 2,
+                batch_timeout: Duration::from_millis(2),
+                ..GatewayConfig::default()
+            },
         )
         .unwrap();
         let req = || Request {

@@ -4,7 +4,13 @@
 //! scenario replays identically across runs and machines: the same
 //! arrival order, the same images, the same SLOs — and therefore the same
 //! routing decisions (the router's design choice depends only on the
-//! priced table, never on timing).  Four scenario presets:
+//! priced table, never on timing).  A workload can be driven two ways:
+//! [`drive`] submits it to the threaded [`Gateway`] on the wall clock,
+//! while [`simulate`] replays it through the discrete-event
+//! [`SimGateway`] on a simulated clock (arrival timestamps = cumulative
+//! delays), where admission control, dynamic batching and shard
+//! autoscaling all run deterministically — the `repro loadgen` default.
+//! Four scenario presets:
 //!
 //! * [`Scenario::Steady`] — constant inter-arrival gap; the baseline.
 //! * [`Scenario::Bursty`] — bursts of back-to-back arrivals separated by
@@ -47,7 +53,8 @@ use crate::util::stats::{percentile, Summary};
 use crate::util::wire::{De, FromJson, Obj, ToJson, WireError};
 
 use super::gateway::{
-    DesignKind, ExecutorSpec, Gateway, GatewayConfig, Request, Slo, Ticket,
+    DesignKind, ExecutorSpec, Gateway, GatewayConfig, GatewayStats, RejectReason, Request,
+    SimGateway, SimRequest, Slo, Ticket,
 };
 
 /// Workload shape preset.
@@ -231,31 +238,68 @@ pub fn generate(cfg: &LoadgenConfig, pools: &[DatasetPool]) -> Workload {
 }
 
 /// Report of one driven workload.
+///
+/// **Percentiles never hide rejections**: `p50_service_ms` /
+/// `p99_service_ms` are computed over *admitted* requests only, and the
+/// rejection counters (`rejected_full`, `rejected_deadline`,
+/// `rejection_rate`) are reported alongside — an overloaded run that
+/// sheds most of its traffic cannot masquerade as a fast healthy one
+/// (its percentiles come with a loud rejection rate).
 #[derive(Debug, Clone, PartialEq)]
 pub struct LoadgenReport {
     /// Scenario that was driven.
     pub scenario: Scenario,
-    /// (design name, slo_miss) per request, in submission order — the
-    /// routing trace the determinism tests compare.
+    /// (design name, slo_miss) per **admitted** request, in submission
+    /// order — the routing trace the determinism tests compare.
     pub decisions: Vec<(String, bool)>,
+    /// Requests offered to the gateway (admitted + rejected).
+    pub offered: usize,
+    /// Requests admitted past admission control (== `served`; every
+    /// admitted request completes).
+    pub admitted: usize,
+    /// Rejections because the chosen design's queue was full.
+    pub rejected_full: usize,
+    /// Rejections because the deadline was unmeetable at arrival.
+    pub rejected_deadline: usize,
+    /// `(rejected_full + rejected_deadline) / offered` (0 when nothing
+    /// was offered).
+    pub rejection_rate: f64,
+    /// Admitted requests that completed after their deadline.
+    pub deadline_misses: usize,
     /// Responses received.
     pub served: usize,
     /// Failed responses.
     pub failed: usize,
-    /// SLO misses (fastest-design fallbacks).
+    /// SLO misses (fastest-design fallbacks) among admitted requests.
     pub slo_misses: usize,
-    /// Wall-clock of the whole run.
+    /// Wall-clock of the whole run (machine-dependent; excluded from
+    /// determinism comparisons).
     pub wall: Duration,
-    /// Served requests per wall-clock second.
+    /// Served requests per wall-clock second (machine-dependent).
     pub throughput_rps: f64,
-    /// Median in-process service time (ms).
+    /// Simulated duration of the run — last completion time (seconds);
+    /// 0 for the wall-clock [`drive`] path.
+    pub sim_duration_s: f64,
+    /// Served requests per *simulated* second (deterministic); 0 for the
+    /// wall-clock path.
+    pub sim_throughput_rps: f64,
+    /// Median service time over admitted requests (ms): simulated
+    /// arrival→completion on the [`simulate`] path, in-process wall time
+    /// on the [`drive`] path.
     pub p50_service_ms: f64,
-    /// 99th-percentile in-process service time (ms).
+    /// 99th-percentile service time over admitted requests (ms).
     pub p99_service_ms: f64,
     /// Mean simulated accelerator latency of routed designs (ms).
     pub mean_routed_latency_ms: f64,
-    /// Total routed energy (J).
+    /// Total routed energy (J) over admitted requests.
     pub routed_energy_j: f64,
+}
+
+impl LoadgenReport {
+    /// Total rejections, either reason.
+    pub fn rejected(&self) -> usize {
+        self.rejected_full + self.rejected_deadline
+    }
 }
 
 impl ToJson for LoadgenReport {
@@ -271,11 +315,19 @@ impl ToJson for LoadgenReport {
         Obj::new()
             .field("scenario", &self.scenario)
             .raw("decisions", decisions)
+            .field("offered", &self.offered)
+            .field("admitted", &self.admitted)
+            .field("rejected_full", &self.rejected_full)
+            .field("rejected_deadline", &self.rejected_deadline)
+            .field("rejection_rate", &self.rejection_rate)
+            .field("deadline_misses", &self.deadline_misses)
             .field("served", &self.served)
             .field("failed", &self.failed)
             .field("slo_misses", &self.slo_misses)
             .field("wall_ns", &(self.wall.as_nanos() as u64))
             .field("throughput_rps", &self.throughput_rps)
+            .field("sim_duration_s", &self.sim_duration_s)
+            .field("sim_throughput_rps", &self.sim_throughput_rps)
             .field("p50_service_ms", &self.p50_service_ms)
             .field("p99_service_ms", &self.p99_service_ms)
             .field("mean_routed_latency_ms", &self.mean_routed_latency_ms)
@@ -293,14 +345,25 @@ impl FromJson for LoadgenReport {
             .into_iter()
             .map(|el| Ok((el.req("design")?, el.req("slo_miss")?)))
             .collect::<Result<Vec<(String, bool)>, WireError>>()?;
+        let served: usize = d.req("served")?;
         Ok(LoadgenReport {
             scenario: d.req("scenario")?,
             decisions,
-            served: d.req("served")?,
+            // Admission-era fields decode with defaults so pre-admission
+            // artifacts stay loadable (they had no rejections).
+            offered: d.opt_or("offered", served)?,
+            admitted: d.opt_or("admitted", served)?,
+            rejected_full: d.opt_or("rejected_full", 0)?,
+            rejected_deadline: d.opt_or("rejected_deadline", 0)?,
+            rejection_rate: d.opt_or("rejection_rate", 0.0)?,
+            deadline_misses: d.opt_or("deadline_misses", 0)?,
+            served,
             failed: d.req("failed")?,
             slo_misses: d.req("slo_misses")?,
             wall: Duration::from_nanos(d.req("wall_ns")?),
             throughput_rps: d.req("throughput_rps")?,
+            sim_duration_s: d.opt_or("sim_duration_s", 0.0)?,
+            sim_throughput_rps: d.opt_or("sim_throughput_rps", 0.0)?,
             p50_service_ms: d.req("p50_service_ms")?,
             p99_service_ms: d.req("p99_service_ms")?,
             mean_routed_latency_ms: d.req("mean_routed_latency_ms")?,
@@ -326,16 +389,34 @@ impl LoadgenReport {
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "scenario {:<7} | {} served ({} failed, {} SLO misses) in {:.2?} ({:.0} req/s)\n",
+            "scenario {:<7} | {} offered, {} served ({} failed, {} SLO misses) in {:.2?} ({:.0} req/s)\n",
             self.scenario.name(),
+            self.offered,
             self.served,
             self.failed,
             self.slo_misses,
             self.wall,
             self.throughput_rps,
         ));
+        if self.rejected() > 0 || self.deadline_misses > 0 {
+            s.push_str(&format!(
+                "admission        : {} rejected ({} queue-full, {} deadline) — {:.1}% rejection rate; {} served late\n",
+                self.rejected(),
+                self.rejected_full,
+                self.rejected_deadline,
+                100.0 * self.rejection_rate,
+                self.deadline_misses,
+            ));
+        }
+        if self.sim_duration_s > 0.0 {
+            s.push_str(&format!(
+                "simulated clock  : {:.3} ms, {:.0} req/s\n",
+                self.sim_duration_s * 1e3,
+                self.sim_throughput_rps,
+            ));
+        }
         s.push_str(&format!(
-            "service time     : p50 {:.2} ms, p99 {:.2} ms\n",
+            "service time     : p50 {:.2} ms, p99 {:.2} ms (over admitted requests)\n",
             self.p50_service_ms, self.p99_service_ms
         ));
         s.push_str(&format!(
@@ -394,11 +475,21 @@ pub fn drive(
     Ok(LoadgenReport {
         scenario: workload.scenario,
         decisions,
+        // The threaded gateway has no admission control: everything
+        // offered is admitted.
+        offered: served,
+        admitted: served,
+        rejected_full: 0,
+        rejected_deadline: 0,
+        rejection_rate: 0.0,
+        deadline_misses: 0,
         served,
         failed,
         slo_misses,
         wall,
         throughput_rps: served as f64 / wall.as_secs_f64().max(1e-9),
+        sim_duration_s: 0.0,
+        sim_throughput_rps: 0.0,
         p50_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 50.0) },
         p99_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 99.0) },
         mean_routed_latency_ms: routed_latency.mean(),
@@ -413,6 +504,99 @@ pub fn run(
     pools: &[DatasetPool],
 ) -> Result<LoadgenReport> {
     drive(gateway, &generate(cfg, pools), pools)
+}
+
+/// Drive a generated workload through the discrete-event stack
+/// ([`SimGateway`]) on the simulated clock and report.
+///
+/// Arrival timestamps are the cumulative sums of the workload's delays,
+/// so a fixed seed produces the same simulated arrivals — and therefore
+/// the same admission decisions, batches, autoscaler steps, service-time
+/// percentiles and [`GatewayStats`], bit for bit, on any machine.  Only
+/// `wall` / `throughput_rps` in the report are wall-clock (and excluded
+/// from determinism comparisons).
+pub fn simulate(
+    sim: &mut SimGateway,
+    workload: &Workload,
+    pools: &[DatasetPool],
+) -> Result<LoadgenReport> {
+    let t0 = Instant::now();
+    let mut t_s = 0.0f64;
+    for a in &workload.arrivals {
+        t_s += a.delay.as_secs_f64();
+        let pool = &pools[a.dataset];
+        sim.offer(SimRequest {
+            dataset: pool.name.clone(),
+            x: pool.images[a.image].clone(),
+            slo: a.slo,
+            arrival_s: t_s,
+        })?;
+    }
+    let outcomes = sim.finish();
+    let wall = t0.elapsed();
+
+    let mut decisions = Vec::new();
+    let mut service = Vec::new();
+    let mut routed_latency = Summary::new();
+    let mut routed_energy = 0.0;
+    let (mut served, mut failed, mut slo_misses) = (0usize, 0usize, 0usize);
+    let (mut rejected_full, mut rejected_deadline) = (0usize, 0usize);
+    let mut deadline_misses = 0usize;
+    let mut sim_end = 0.0f64;
+    for o in &outcomes {
+        if !o.admitted {
+            match o.reject {
+                Some(RejectReason::QueueFull) => rejected_full += 1,
+                Some(RejectReason::DeadlineUnmeetable) => rejected_deadline += 1,
+                None => {}
+            }
+            continue;
+        }
+        decisions.push((o.design.clone(), o.slo_miss));
+        service.push(o.service_s * 1e3);
+        routed_latency.add(o.routed_latency_s * 1e3);
+        routed_energy += o.routed_energy_j;
+        served += 1;
+        failed += (!o.ok) as usize;
+        slo_misses += o.slo_miss as usize;
+        deadline_misses += o.deadline_miss as usize;
+        sim_end = sim_end.max(o.arrival_s + o.service_s);
+    }
+    let offered = outcomes.len();
+    let rejected = rejected_full + rejected_deadline;
+    Ok(LoadgenReport {
+        scenario: workload.scenario,
+        decisions,
+        offered,
+        admitted: served,
+        rejected_full,
+        rejected_deadline,
+        rejection_rate: if offered == 0 { 0.0 } else { rejected as f64 / offered as f64 },
+        deadline_misses,
+        served,
+        failed,
+        slo_misses,
+        wall,
+        throughput_rps: served as f64 / wall.as_secs_f64().max(1e-9),
+        sim_duration_s: sim_end,
+        sim_throughput_rps: if sim_end > 0.0 { served as f64 / sim_end } else { 0.0 },
+        p50_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 50.0) },
+        p99_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 99.0) },
+        mean_routed_latency_ms: routed_latency.mean(),
+        routed_energy_j: routed_energy,
+    })
+}
+
+/// Resolve a [`DeploymentSpec`], build the discrete-event stack, generate
+/// the spec's workload, simulate it, and aggregate — the one-call form of
+/// the `repro loadgen` path.  Returns the report plus the deterministic
+/// [`GatewayStats`].
+pub fn run_sim(spec: &DeploymentSpec) -> Result<(LoadgenReport, GatewayStats)> {
+    let (specs, pools) = resolve_spec(spec)?;
+    let mut sim = SimGateway::new(specs, &spec.gateway)?;
+    let workload = generate(&spec.loadgen, &pools);
+    let report = simulate(&mut sim, &workload, &pools)?;
+    Ok((report, sim.shutdown()))
 }
 
 // ---------------------------------------------------------------------------
@@ -841,6 +1025,18 @@ impl Gateway {
         let (specs, pools) = resolve_spec(spec)?;
         let gateway = Gateway::start(specs, &spec.gateway)?;
         Ok((gateway, pools))
+    }
+}
+
+impl SimGateway {
+    /// Build the discrete-event stack (plus the dataset pools its
+    /// scenario draws from) from a parsed [`DeploymentSpec`] — the
+    /// file-driven front door to deterministic overload experiments.
+    /// Equivalent to [`resolve_spec`] + [`SimGateway::new`].
+    pub fn from_spec(spec: &DeploymentSpec) -> Result<(SimGateway, Vec<DatasetPool>)> {
+        let (specs, pools) = resolve_spec(spec)?;
+        let sim = SimGateway::new(specs, &spec.gateway)?;
+        Ok((sim, pools))
     }
 }
 

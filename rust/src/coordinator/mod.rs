@@ -1,20 +1,39 @@
 //! L3 coordinator: worker pool, evaluation sweeps, and the serving
-//! front-end.
+//! stack.
 //!
-//! The paper's contribution is the hardware comparison, so the coordinator
-//! is the *experiment engine*: it shards the 1,000-image evaluation sets
-//! across a [`pool`] of std::thread workers (tokio is not in the offline
-//! vendor set), runs the functional SNN simulation once per image (into
-//! per-worker reusable scratch buffers), walks each design point's
-//! device-independent cost trace once, and prices it per device
-//! ([`sweep`]).  [`serve`] is the deployment-shaped
-//! front-end: a batching request router that executes each batch through
-//! its backend in a single call — the AOT-compiled PJRT artifacts when the
-//! `pjrt` feature is on, the pure-Rust golden model otherwise; Python
-//! never runs at request time either way.  [`gateway`] stacks the
-//! multi-design serving layer on top: a fleet of executor shards spanning
-//! SNN and CNN designs (and devices) with a per-request cost router, and
-//! [`loadgen`] is the deterministic workload generator that drives it.
+//! The paper's contribution is the hardware comparison; the coordinator
+//! turns it into an *experiment engine* and a *serving system*:
+//!
+//! * [`pool`] — std::thread worker pool (tokio is not in the offline
+//!   vendor set) with per-worker scratch state; every 1,000-image sweep
+//!   and every served batch fans out across it.
+//! * [`sweep`] — the evaluation engine: one functional SNN pass per
+//!   image into reusable scratch buffers, one device-independent cost
+//!   trace per (image, design), priced per device; [`sweep::cnn_metrics`]
+//!   is the input-independent CNN dataflow schedule the router and
+//!   admission controller price CNN designs with.
+//! * [`serve`] — the single-design batching executor: requests flow
+//!   through an [`serve::InferenceBackend`] (PJRT artifact when the
+//!   `pjrt` feature is on, pure-Rust golden model otherwise) one batch
+//!   per backend call, with the amortized cycle-model cost estimate
+//!   attached.
+//! * [`gateway`] — the multi-design layer, in two stacks over one
+//!   [`gateway::Router`]: the threaded [`gateway::Gateway`] (wall-clock
+//!   executor shards, for demos and the PJRT path) and the
+//!   discrete-event [`gateway::SimGateway`] — deadline-aware admission
+//!   queues with backpressure, dynamic batch formation (max-size or
+//!   max-wait), and a queue-depth shard autoscaler under the device fit
+//!   check, all on a simulated clock so fixed-seed runs are
+//!   bit-deterministic.
+//! * [`loadgen`] — the seeded workload generator (steady / bursty /
+//!   ramp / mixed) plus the synthetic substrate and the
+//!   [`loadgen::DeploymentSpec`] file format that configure whole
+//!   deployments; [`loadgen::simulate`] replays a workload through the
+//!   discrete-event stack, [`loadgen::drive`] through the threaded one.
+//!
+//! The request lifecycle (arrival → admission → queue → batch → shard →
+//! stats) and how the two-stage cost model prices every step are
+//! diagrammed in the top-level `ARCHITECTURE.md`.
 
 pub mod gateway;
 pub mod loadgen;
@@ -22,7 +41,10 @@ pub mod pool;
 pub mod serve;
 pub mod sweep;
 
-pub use gateway::{Gateway, GatewayConfig, GatewayStats, Request, Router, Slo};
+pub use gateway::{
+    AutoscaleConfig, AutoscaleEvent, Gateway, GatewayConfig, GatewayStats, QueueStats,
+    RejectReason, Request, Router, SimGateway, SimOutcome, SimRequest, Slo,
+};
 pub use loadgen::{LoadgenConfig, LoadgenReport, Scenario};
 pub use sweep::{
     cnn_metrics, snn_sweep, snn_sweep_counted, CnnMetrics, SampleMetrics, SnnSweep, SweepCounters,

@@ -44,6 +44,14 @@
 //! The PJRT client is not `Send`, so the backend lives on one dedicated
 //! executor thread that owns it; the batcher feeds it through a channel.
 //! That matches the hardware reality anyway: one FPGA, one queue.
+//!
+//! This module is the *wall-clock* executor.  The multi-design layer on
+//! top ([`super::gateway`]) reuses [`InferenceBackend`] /
+//! [`NetworkBackend`] in a second, discrete-event stack
+//! ([`super::gateway::SimGateway`]) whose batching and queueing run on a
+//! simulated clock — same functional execution and the same
+//! one-`classify_batch`-per-batch amortization contract
+//! ([`ServerStats::backend_calls`]), but deterministic timing.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -239,6 +247,34 @@ struct Job {
     reply: mpsc::Sender<Response>,
 }
 
+/// Run one batch through a backend with per-request failure isolation:
+/// one [`InferenceBackend::classify_batch`] call; if the whole batch
+/// errors, retry per request so a poisoned input fails alone; a short
+/// batch or an Ok-but-empty logits row becomes an explicit per-request
+/// error (never a silent class-0 prediction).  Shared by the threaded
+/// executor and the simulated stack ([`super::gateway::SimGateway`]),
+/// so the isolation semantics cannot diverge.
+pub(crate) fn run_batch(
+    backend: &mut dyn InferenceBackend,
+    xs: &[Tensor3],
+) -> Vec<std::result::Result<Vec<f32>, String>> {
+    let mut results: Vec<std::result::Result<Vec<f32>, String>> =
+        match backend.classify_batch(xs) {
+            Ok(l) => l.into_iter().map(Ok).collect(),
+            Err(_) => xs
+                .iter()
+                .map(|x| backend.classify(x).map_err(|e| e.to_string()))
+                .collect(),
+        };
+    results.resize(xs.len(), Err("backend returned a short batch".to_string()));
+    for slot in &mut results {
+        if matches!(slot, Ok(v) if v.is_empty()) {
+            *slot = Err("backend returned empty logits".to_string());
+        }
+    }
+    results
+}
+
 /// Design-keyed cache of per-batch hardware-cost **traces**.
 ///
 /// One functional pass + event walk ([`SnnAccelerator::trace`]) per
@@ -404,31 +440,13 @@ impl Server {
                 stats.batches += 1;
                 stats.max_batch_seen = stats.max_batch_seen.max(bs);
 
-                // One backend call for the whole batch.
+                // One backend call for the whole batch; `run_batch`
+                // isolates per-request failures (poisoned input, short
+                // batch, empty logits) so batch-mates are unaffected.
                 let (xs, metas): (Vec<Tensor3>, Vec<(Instant, mpsc::Sender<Response>)>) =
                     batch.into_iter().map(|j| (j.x, (j.enqueued, j.reply))).unzip();
                 stats.backend_calls += 1;
-                let mut logits_batch: Vec<Result<Vec<f32>, String>> =
-                    match backend.classify_batch(&xs) {
-                        Ok(l) => l.into_iter().map(Ok).collect(),
-                        // One poisoned request must not fail its batch-mates:
-                        // retry per request and isolate each failure to its
-                        // own response (carrying the error, not a sentinel).
-                        Err(_) => xs
-                            .iter()
-                            .map(|x| backend.classify(x).map_err(|e| e.to_string()))
-                            .collect(),
-                    };
-                // Defensive: a misbehaving backend must not starve repliers
-                // (short batch) or smuggle a bogus class-0 prediction
-                // through an empty logits row — both are explicit failures.
-                logits_batch
-                    .resize(bs, Err("backend returned a short batch".to_string()));
-                for slot in &mut logits_batch {
-                    if matches!(slot, Ok(v) if v.is_empty()) {
-                        *slot = Err("backend returned empty logits".to_string());
-                    }
-                }
+                let logits_batch = run_batch(backend.as_mut(), &xs);
 
                 // One cost estimate for the whole batch (design-keyed).
                 let (lat, energy) = match (&cfg.cost, &acc) {

@@ -17,6 +17,13 @@
 //! and five event walks per image — not ten full replays.  The
 //! [`SweepCounters`] returned by [`snn_sweep_counted`] make the contract
 //! observable (and testable).
+//!
+//! The same two-stage split is what makes per-request *admission
+//! pricing* cheap in the serving stack: the gateway router and the
+//! discrete-event admission controller
+//! ([`super::gateway::SimGateway`]) price SNN designs by re-costing a
+//! cached trace and CNN designs via [`cnn_metrics`] — no event walk on
+//! any request path.
 
 use crate::cnn_accel::config::CnnDesign;
 use crate::fpga::device::Device;

@@ -37,6 +37,18 @@ impl ResourceUsage {
         }
     }
 
+    /// Usage of `k` independent instances of this design (the shard
+    /// autoscaler's fit gate: `k` executor shards on one device use `k ×`
+    /// the single-instance resources).
+    pub fn scaled(&self, k: usize) -> ResourceUsage {
+        ResourceUsage {
+            luts: self.luts * k as u32,
+            regs: self.regs * k as u32,
+            brams: self.brams * k as f64,
+            dsps: self.dsps * k as u32,
+        }
+    }
+
     /// Check the design fits the device; error names the blocking resource.
     pub fn check_fits(&self, dev: &Device) -> Result<()> {
         if self.luts > dev.luts {
@@ -222,6 +234,17 @@ mod tests {
         assert!(too_big.check_fits(&PYNQ_Z1).is_err());
         let too_many_brams = ResourceUsage { brams: 150.0, ..r };
         assert!(too_many_brams.check_fits(&PYNQ_Z1).is_err());
+    }
+
+    /// The autoscaler's fit gate: k shards use k × the single-instance
+    /// resources, and the device bound caps k.
+    #[test]
+    fn scaled_multiplies_components_and_caps_shard_count() {
+        let r = ResourceUsage { luts: 10_000, regs: 20_000, brams: 60.0, dsps: 4 };
+        let r2 = r.scaled(2);
+        assert_eq!((r2.luts, r2.regs, r2.brams, r2.dsps), (20_000, 40_000, 120.0, 8));
+        assert!(r.scaled(2).check_fits(&PYNQ_Z1).is_ok()); // 120 <= 140 BRAMs
+        assert!(r.scaled(3).check_fits(&PYNQ_Z1).is_err()); // 180 > 140 BRAMs
     }
 
     #[test]

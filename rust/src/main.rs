@@ -8,7 +8,8 @@
 //! repro all    [--samples 1000] [--out reports] [--json [--json-out FILE]]
 //! repro serve  --dataset mnist --requests 64 [--batch 8] [--json [--out FILE]]
 //! repro loadgen --scenario steady --requests 64 [--shards 2] [--seed 42]
-//! repro loadgen --spec examples/specs/steady_pynq.json [--json --out out.json]
+//!              [--deadline-ms 5] [--queue-cap 16] [--wall]
+//! repro loadgen --spec examples/specs/overload_burst.json [--json --out out.json]
 //! repro checkjson --file out.json        # re-parse + reconcile totals
 //! repro validate                         # golden artifact checks
 //! ```
@@ -20,7 +21,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use spikebench::coordinator::gateway::{Gateway, Slo};
+use spikebench::coordinator::gateway::{Gateway, SimGateway, Slo};
 use spikebench::coordinator::loadgen::{self, DeploymentSpec, LoadgenConfig, Scenario};
 use spikebench::coordinator::serve::{select_backend, ServeConfig, Server, SnnCostConfig};
 use spikebench::experiments::{ctx::Ctx, registry, run_by_id};
@@ -40,10 +41,13 @@ fn main() {
 
 fn usage() -> &'static str {
     "usage: repro <list|table|figure|all|ablation|serve|loadgen|checkjson|validate> [--id N] [--samples N] [--out DIR]\n\
-     see `repro list` for experiment ids; `repro loadgen` drives the\n\
-     multi-design gateway with a deterministic scenario (steady|bursty|ramp|mixed)\n\
-     or a JSON deployment spec (--spec FILE); `--json [--out FILE]` emits\n\
-     machine-readable artifacts; `repro checkjson --file F` re-parses one"
+     see `repro list` for experiment ids; `repro loadgen` replays a\n\
+     deterministic scenario (steady|bursty|ramp|mixed) or a JSON deployment\n\
+     spec (--spec FILE) through the discrete-event serving stack — admission\n\
+     queues, deadlines (--deadline-ms), dynamic batching, shard autoscaling —\n\
+     on a simulated clock (--wall uses the threaded gateway instead);\n\
+     `--json [--out FILE]` emits machine-readable artifacts;\n\
+     `repro checkjson --file F` re-parses one and reconciles its totals"
 }
 
 /// Validate the subcommand's options, erroring with the typo'd name and
@@ -254,23 +258,42 @@ fn serve_demo(args: &Args) -> Result<()> {
 /// scenario — configured either from CLI flags or from a JSON
 /// `DeploymentSpec` file (`--spec`). Runs on synthetic (seeded) weights
 /// and images, so it needs no artifacts directory — the whole serving
-/// stack (pricing, routing, sharding, batching) is exercised anywhere,
-/// including CI.
+/// stack (pricing, routing, admission, batching, autoscaling) is
+/// exercised anywhere, including CI.
+///
+/// By default the workload replays through the discrete-event
+/// `SimGateway` on a simulated clock: admission queues, deadline
+/// rejections, dynamic batch formation and shard autoscaling all run
+/// deterministically, and the emitted `GatewayStats` JSON is
+/// byte-identical run to run under a fixed seed. `--wall` switches to
+/// the threaded wall-clock gateway (no admission control).
 fn loadgen_demo(args: &Args) -> Result<()> {
-    check_opts(
-        "loadgen",
-        args,
-        &[
-            "scenario", "requests", "shards", "seed", "slo-ms", "device", "dataset", "spec",
-            "json", "out",
-        ],
-    )?;
+    // One list for both the option validation and the --spec conflict
+    // check, so a future tuning flag cannot be accepted alongside --spec
+    // and silently out-voted by the file.
+    const TUNING_OPTS: &[&str] = &[
+        "scenario", "requests", "shards", "seed", "slo-ms", "deadline-ms", "queue-cap",
+        "device", "dataset",
+    ];
+    let known: Vec<&str> =
+        TUNING_OPTS.iter().copied().chain(["spec", "wall", "json", "out"]).collect();
+    check_opts("loadgen", args, &known)?;
+    if args.flag("wall") {
+        // The threaded gateway has no admission control: silently
+        // ignoring these would report 0 rejections for a deadline that
+        // was never evaluated.
+        for o in ["deadline-ms", "queue-cap"] {
+            if args.get(o).is_some() {
+                bail!("--{o} requires the discrete-event stack (drop --wall)");
+            }
+        }
+    }
     let spec = match args.get("spec") {
         Some(path) => {
             // The spec file is the single source of truth: a tuning
             // option alongside --spec would be silently out-voted, so
             // it is an error instead.
-            for o in ["scenario", "requests", "shards", "seed", "slo-ms", "device", "dataset"] {
+            for &o in TUNING_OPTS {
                 if args.get(o).is_some() || args.flag(o) {
                     bail!("--{o} cannot be combined with --spec (edit the spec file instead)");
                 }
@@ -289,16 +312,21 @@ fn loadgen_demo(args: &Args) -> Result<()> {
             spikebench::fpga::device::Device::by_name(device)
                 .ok_or_else(|| anyhow!("unknown device (pynq|zcu102)"))?;
             let seed = args.get_usize("seed", 42) as u64;
-            let slo_ms = args
-                .get("slo-ms")
-                .map(|s| s.parse::<f64>().map_err(|e| anyhow!("bad --slo-ms: {e}")))
-                .transpose()?
-                .unwrap_or(50.0);
+            let parse_ms = |opt: &str| -> Result<Option<f64>> {
+                args.get(opt)
+                    .map(|s| s.parse::<f64>().map_err(|e| anyhow!("bad --{opt}: {e}")))
+                    .transpose()
+            };
+            let slo_ms = parse_ms("slo-ms")?.unwrap_or(50.0);
+            let mut slo = Slo::latency(slo_ms / 1e3);
+            if let Some(dl_ms) = parse_ms("deadline-ms")? {
+                slo = slo.with_deadline(dl_ms / 1e3);
+            }
             let datasets: Vec<&str> = match scenario {
                 Scenario::Mixed => vec!["mnist", "svhn", "cifar"],
                 _ => vec![args.get_or("dataset", "mnist")],
             };
-            DeploymentSpec::synthetic(
+            let mut spec = DeploymentSpec::synthetic(
                 &datasets,
                 device,
                 args.get_usize("shards", 2).max(1),
@@ -307,48 +335,75 @@ fn loadgen_demo(args: &Args) -> Result<()> {
                     scenario,
                     requests: args.get_usize("requests", 64),
                     seed,
-                    slo: Slo::latency(slo_ms / 1e3),
+                    slo,
                     ..Default::default()
                 },
-            )
+            );
+            if args.get("queue-cap").is_some() {
+                spec.gateway.queue_cap = args.get_usize("queue-cap", spec.gateway.queue_cap);
+            }
+            spec
         }
     };
 
-    let (gateway, pools) = Gateway::from_spec(&spec)?;
-    let mut head = String::new();
-    for (name, reason) in gateway.rejected() {
-        head.push_str(&format!("design {name} rejected: {reason}\n"));
-    }
-    let live_shards: usize = spec
-        .executors
-        .iter()
-        .filter(|e| {
-            !gateway.rejected().iter().any(|(n, _)| n.eq_ignore_ascii_case(&e.design))
-        })
-        .map(|e| e.shards.max(1))
-        .sum();
-    head.push_str(&format!(
-        "gateway: {} designs across {} shards ({} rejected as unfit)\n",
-        spec.executors.len() - gateway.rejected().len(),
-        live_shards,
-        gateway.rejected().len()
-    ));
-    let table = gateway.router().table();
-    for d in &table {
-        head.push_str(&format!(
-            "  {:<16} {:<6} {:>10.3} ms {:>10.2} uJ  ({} on {})\n",
-            d.name,
-            d.dataset,
-            d.latency_s * 1e3,
-            d.energy_j * 1e6,
-            if d.is_snn { "SNN" } else { "CNN" },
-            d.device_name,
-        ));
+    if args.flag("wall") && spec.loadgen.slo.deadline_s.is_some() {
+        // Same trap through the file: a spec-carried deadline would be
+        // silently ignored by the threaded gateway.
+        bail!(
+            "this spec sets a completion deadline (loadgen.slo.deadline_s), which the \
+             threaded gateway never evaluates — drop --wall or remove the deadline \
+             (queue/autoscale knobs are likewise simulation-only)"
+        );
     }
 
-    let report = loadgen::run(&gateway, &spec.loadgen, &pools)?;
-    let stats = gateway.shutdown();
-    let text = format!(
+    let mut head = String::new();
+    let render_head = |head: &mut String,
+                       rejected: &[(String, String)],
+                       table: &[spikebench::coordinator::gateway::PricedDesign]| {
+        for (name, reason) in rejected {
+            head.push_str(&format!("design {name} rejected: {reason}\n"));
+        }
+        let live_shards: usize = spec
+            .executors
+            .iter()
+            .filter(|e| !rejected.iter().any(|(n, _)| n.eq_ignore_ascii_case(&e.design)))
+            .map(|e| e.shards.max(1))
+            .sum();
+        head.push_str(&format!(
+            "gateway: {} designs across {} shards ({} rejected as unfit)\n",
+            spec.executors.len() - rejected.len(),
+            live_shards,
+            rejected.len()
+        ));
+        for d in table {
+            head.push_str(&format!(
+                "  {:<16} {:<6} {:>10.3} ms {:>10.2} uJ  ({} on {})\n",
+                d.name,
+                d.dataset,
+                d.latency_s * 1e3,
+                d.energy_j * 1e6,
+                if d.is_snn { "SNN" } else { "CNN" },
+                d.device_name,
+            ));
+        }
+    };
+
+    let (table, report, stats) = if args.flag("wall") {
+        let (gateway, pools) = Gateway::from_spec(&spec)?;
+        let table = gateway.router().table();
+        render_head(&mut head, gateway.rejected(), &table);
+        let report = loadgen::run(&gateway, &spec.loadgen, &pools)?;
+        (table, report, gateway.shutdown())
+    } else {
+        let (mut sim, pools) = SimGateway::from_spec(&spec)?;
+        let table = sim.router().table();
+        render_head(&mut head, sim.rejected_designs(), &table);
+        let workload = loadgen::generate(&spec.loadgen, &pools);
+        let report = loadgen::simulate(&mut sim, &workload, &pools)?;
+        (table, report, sim.shutdown())
+    };
+
+    let mut text = format!(
         "{head}{}executors: {} batches, {} backend calls, {} cost estimates across {} shards",
         report.render(),
         stats.batches,
@@ -356,6 +411,25 @@ fn loadgen_demo(args: &Args) -> Result<()> {
         stats.designs.iter().map(|d| d.cost_estimates).sum::<usize>(),
         stats.shards.len()
     );
+    if !stats.autoscale_events.is_empty() {
+        text.push_str(&format!("\nautoscaler: {} steps (", stats.autoscale_events.len()));
+        for (i, ev) in stats.autoscale_events.iter().take(6).enumerate() {
+            if i > 0 {
+                text.push_str(", ");
+            }
+            text.push_str(&format!(
+                "{} {}→{} @{:.2}ms",
+                ev.design,
+                ev.from_shards,
+                ev.to_shards,
+                ev.t_s * 1e3
+            ));
+        }
+        if stats.autoscale_events.len() > 6 {
+            text.push_str(", …");
+        }
+        text.push(')');
+    }
     emit_text_or_json(args, &text, || {
         Obj::new()
             .field("kind", "loadgen")
@@ -370,7 +444,10 @@ fn loadgen_demo(args: &Args) -> Result<()> {
 /// Re-parse a `repro loadgen --json` artifact with the streaming
 /// `JsonReader` (no tree) and verify its totals reconcile:
 /// `gateway.routed` must equal the sum of the per-design `routed`
-/// counters. The CI release leg runs this against a spec-driven run.
+/// counters, and — for admission-era artifacts — `gateway.offered` must
+/// equal `admitted + rejected` as well as the sum of the per-queue
+/// `offered` counters. The CI release leg runs this against both the
+/// steady spec and the overload spec.
 fn checkjson(args: &Args) -> Result<()> {
     check_opts("checkjson", args, &["file"])?;
     let path = args.get("file").ok_or_else(|| anyhow!("--file required\n{}", usage()))?;
@@ -378,7 +455,9 @@ fn checkjson(args: &Args) -> Result<()> {
         std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let mut r = JsonReader::new(&text);
     let mut total: Option<f64> = None;
+    let (mut offered, mut admitted, mut rejected) = (None, None, None);
     let mut per_design: Vec<f64> = Vec::new();
+    let mut queue_offered: Vec<f64> = Vec::new();
     r.expect_object().map_err(|e| anyhow!("{path}: {e}"))?;
     while let Some(key) = r.next_key()? {
         if key != "gateway" {
@@ -389,23 +468,16 @@ fn checkjson(args: &Args) -> Result<()> {
         while let Some(gk) = r.next_key()? {
             match gk.as_str() {
                 "routed" => total = Some(r.num()?),
+                "offered" => offered = Some(r.num()?),
+                "admitted" => admitted = Some(r.num()?),
+                "rejected" => rejected = Some(r.num()?),
                 "designs" => {
-                    r.expect_array()?;
-                    loop {
-                        match r.next()? {
-                            Some(JsonEvent::ObjectStart) => {
-                                while let Some(dk) = r.next_key()? {
-                                    if dk == "routed" {
-                                        per_design.push(r.num()?);
-                                    } else {
-                                        r.skip_value()?;
-                                    }
-                                }
-                            }
-                            Some(JsonEvent::ArrayEnd) => break,
-                            _ => bail!("{path}: gateway.designs must hold objects"),
-                        }
-                    }
+                    collect_array_field(&mut r, "routed", &mut per_design)
+                        .map_err(|e| anyhow!("{path}: gateway.designs: {e}"))?;
+                }
+                "queues" => {
+                    collect_array_field(&mut r, "offered", &mut queue_offered)
+                        .map_err(|e| anyhow!("{path}: gateway.queues: {e}"))?;
                 }
                 _ => r.skip_value()?,
             }
@@ -422,10 +494,57 @@ fn checkjson(args: &Args) -> Result<()> {
             "{path}: totals do not reconcile: routed {total} != Σ per-design routed {sum}"
         );
     }
+    let mut admission_note = String::new();
+    if let (Some(off), Some(adm), Some(rej)) = (offered, admitted, rejected) {
+        if adm + rej != off {
+            bail!(
+                "{path}: admission totals do not reconcile: \
+                 admitted {adm} + rejected {rej} != offered {off}"
+            );
+        }
+        if !queue_offered.is_empty() {
+            let qsum: f64 = queue_offered.iter().sum();
+            if qsum != off {
+                bail!(
+                    "{path}: queue totals do not reconcile: \
+                     Σ per-queue offered {qsum} != offered {off}"
+                );
+            }
+        }
+        admission_note =
+            format!(", admitted {adm} + rejected {rej} == offered {off}");
+    }
     println!(
-        "{path}: ok — routed {total} == Σ routed over {} designs",
+        "{path}: ok — routed {total} == Σ routed over {} designs{admission_note}",
         per_design.len()
     );
+    Ok(())
+}
+
+/// Stream an array of objects, collecting the numeric field `field` from
+/// each element (used by `checkjson` for `designs[].routed` and
+/// `queues[].offered`).
+fn collect_array_field(
+    r: &mut JsonReader<'_>,
+    field: &str,
+    out: &mut Vec<f64>,
+) -> Result<()> {
+    r.expect_array()?;
+    loop {
+        match r.next()? {
+            Some(JsonEvent::ObjectStart) => {
+                while let Some(k) = r.next_key()? {
+                    if k == field {
+                        out.push(r.num()?);
+                    } else {
+                        r.skip_value()?;
+                    }
+                }
+            }
+            Some(JsonEvent::ArrayEnd) => break,
+            _ => bail!("expected an array of objects"),
+        }
+    }
     Ok(())
 }
 

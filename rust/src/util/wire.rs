@@ -9,11 +9,12 @@
 //!   JSON-pointer-style path into every error: a malformed deployment
 //!   spec fails with `wire error at /executors/3/shards: expected
 //!   non-negative integer`, not a bare "expected number". Every exported
-//!   stats type (`ServerStats`, `GatewayStats`, `LoadgenReport`,
-//!   `SweepCounters`, `BenchResult`, …) and config type
-//!   (`DeploymentSpec`, `LoadgenConfig`, `GatewayConfig`, `Slo`)
-//!   implements both directions, and the round trip
-//!   `FromJson(ToJson(x)) == x` is pinned by `tests/wire.rs`.
+//!   stats type (`ServerStats`, `GatewayStats`, `QueueStats`,
+//!   `AutoscaleEvent`, `LoadgenReport`, `SweepCounters`, `BenchResult`,
+//!   …) and config type (`DeploymentSpec`, `LoadgenConfig`,
+//!   `GatewayConfig`, `AutoscaleConfig`, `Slo`) implements both
+//!   directions, and the round trip `FromJson(ToJson(x)) == x` is pinned
+//!   by `tests/wire.rs`.
 //!
 //! * **Streaming pull-parser** — [`JsonReader`], an event-based reader
 //!   over the same `util::json` lexer that never builds an intermediate

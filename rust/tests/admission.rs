@@ -1,0 +1,355 @@
+//! Integration tests of the discrete-event serving stack: deadline-aware
+//! admission control, queue-full backpressure, dynamic batch formation
+//! (max-size vs max-wait close), the shard autoscaler's device-fit gate,
+//! backend-call amortization, and bit-deterministic `GatewayStats` under
+//! a fixed seed.
+//!
+//! Everything runs on synthetic (seeded or constant) weights on the
+//! simulated clock — no artifacts, no timing dependence — so every
+//! assertion here is exact.
+
+use std::time::Duration;
+
+use spikebench::coordinator::gateway::{
+    DesignKind, ExecutorSpec, GatewayConfig, RejectReason, SimGateway, SimRequest, Slo,
+};
+use spikebench::coordinator::loadgen::{
+    self, DeploymentSpec, ExecutorEntry, LoadgenConfig, Scenario,
+};
+use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::fpga::resources::{MemoryVariant, ResourceUsage, SnnDesignParams};
+use spikebench::nn::arch::parse_arch;
+use spikebench::nn::conv::ConvWeights;
+use spikebench::nn::dense::DenseWeights;
+use spikebench::nn::network::{LayerWeights, Network};
+use spikebench::nn::tensor::Tensor3;
+use spikebench::snn::config::SnnDesign;
+use spikebench::util::wire::to_text;
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+fn tiny_net() -> Network {
+    let arch = parse_arch("2C3-2").unwrap();
+    Network {
+        arch,
+        layers: vec![
+            LayerWeights::Conv(ConvWeights::new(2, 1, 3, vec![0.25; 18], vec![0.0; 2])),
+            LayerWeights::Dense(DenseWeights::new(2, 18, vec![0.1; 36], vec![0.0, 0.5])),
+        ],
+        input_shape: (1, 3, 3),
+    }
+}
+
+fn tiny_design(name: &'static str, published: Option<ResourceUsage>) -> SnnDesign {
+    SnnDesign {
+        name,
+        dataset: "tiny",
+        params: SnnDesignParams {
+            p: 8,
+            d_aeq: 64,
+            w_mem: 8,
+            kernel: 3,
+            d_mem: 256,
+            variant: MemoryVariant::Bram,
+        },
+        published,
+        published_zcu102: None,
+    }
+}
+
+fn tiny_spec(published: Option<ResourceUsage>, shards: usize) -> ExecutorSpec {
+    ExecutorSpec {
+        dataset: "tiny".to_string(),
+        device: PYNQ_Z1,
+        shards,
+        net: tiny_net(),
+        design: DesignKind::Snn {
+            design: tiny_design("tiny-p8", published),
+            t_steps: 4,
+            v_th: 1.0,
+            representative: Tensor3::from_vec(1, 3, 3, vec![0.9; 9]),
+        },
+    }
+}
+
+fn image() -> Tensor3 {
+    Tensor3::from_vec(1, 3, 3, vec![0.8; 9])
+}
+
+fn offer_at(sim: &mut SimGateway, t: f64, slo: Slo) {
+    sim.offer(SimRequest { dataset: "tiny".to_string(), x: image(), slo, arrival_s: t })
+        .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Deadline-aware admission
+// ---------------------------------------------------------------------------
+
+/// A request whose queueing delay already breaks its deadline at arrival
+/// is rejected, never served: with one shard and a backlog of
+/// simultaneous arrivals, the first few fit under the deadline and the
+/// rest are shed — and `served` counts exactly the admitted ones.
+#[test]
+fn deadline_expired_requests_are_rejected_not_served() {
+    let cfg = GatewayConfig {
+        max_batch: 1, // serialize: backlog grows by one latency per request
+        queue_cap: 1000,
+        ..GatewayConfig::default()
+    };
+    let mut sim = SimGateway::new(vec![tiny_spec(None, 1)], &cfg).unwrap();
+    let (lat, _) = sim.router().price(0);
+    // Room for about three service slots before the estimate breaks it.
+    let slo = Slo::latency(10.0).with_deadline(3.5 * lat);
+    for _ in 0..10 {
+        offer_at(&mut sim, 0.0, slo);
+    }
+    let outcomes = sim.finish();
+    let admitted: Vec<_> = outcomes.iter().filter(|o| o.admitted).collect();
+    let rejected: Vec<_> = outcomes.iter().filter(|o| !o.admitted).collect();
+    assert!(!admitted.is_empty(), "an idle gateway must admit the first request");
+    assert!(!rejected.is_empty(), "a deep backlog must shed deadline-doomed requests");
+    assert!(rejected
+        .iter()
+        .all(|o| o.reject == Some(RejectReason::DeadlineUnmeetable)));
+    // Rejected requests are never served: no batch, no service time.
+    assert!(rejected.iter().all(|o| o.batch_size == 0 && o.service_s == 0.0 && !o.ok));
+    let stats = sim.shutdown();
+    assert_eq!(stats.served, admitted.len());
+    assert_eq!(stats.rejected, rejected.len());
+    assert_eq!(stats.queues[0].rejected_deadline, rejected.len());
+}
+
+/// Queue-full backpressure: with a tiny queue bound and a shard pinned
+/// busy, overflow arrivals are rejected with `QueueFull`, and the counts
+/// reconcile exactly: `offered == admitted + rejected` at both the
+/// per-queue and whole-gateway level.
+#[test]
+fn queue_full_backpressure_counts_reconcile() {
+    let cfg = GatewayConfig {
+        max_batch: 4,
+        queue_cap: 4,
+        batch_max_wait_s: 1e-3,
+        ..GatewayConfig::default()
+    };
+    let mut sim = SimGateway::new(vec![tiny_spec(None, 1)], &cfg).unwrap();
+    let slo = Slo::latency(10.0); // no deadline: only the cap rejects
+    for _ in 0..32 {
+        offer_at(&mut sim, 0.0, slo);
+    }
+    let outcomes = sim.finish();
+    let stats = sim.shutdown();
+    assert_eq!(stats.offered, 32);
+    assert_eq!(stats.offered, stats.admitted + stats.rejected);
+    assert!(stats.rejected > 0, "a 4-deep queue cannot absorb 32 simultaneous arrivals");
+    for q in &stats.queues {
+        assert_eq!(q.offered, q.admitted + q.rejected_full + q.rejected_deadline);
+        assert_eq!(q.rejected_deadline, 0);
+        assert!(q.max_depth <= cfg.queue_cap);
+    }
+    // Every admitted request was served; every rejection carries QueueFull.
+    assert_eq!(stats.served, stats.admitted);
+    assert!(outcomes
+        .iter()
+        .filter(|o| !o.admitted)
+        .all(|o| o.reject == Some(RejectReason::QueueFull)));
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic batch formation
+// ---------------------------------------------------------------------------
+
+/// A partial batch closes on max-wait: two requests arriving together
+/// under a large `max_batch` wait exactly `batch_max_wait_s`, then serve
+/// as one batch of 2 (completion = wait + 2 × latency).
+#[test]
+fn batch_closes_on_max_wait() {
+    let wait = 2e-3;
+    let cfg = GatewayConfig {
+        max_batch: 8,
+        queue_cap: 64,
+        batch_max_wait_s: wait,
+        ..GatewayConfig::default()
+    };
+    let mut sim = SimGateway::new(vec![tiny_spec(None, 1)], &cfg).unwrap();
+    let (lat, _) = sim.router().price(0);
+    offer_at(&mut sim, 0.0, Slo::latency(10.0));
+    offer_at(&mut sim, 0.0, Slo::latency(10.0));
+    let outcomes = sim.finish();
+    assert_eq!(outcomes.len(), 2);
+    for o in &outcomes {
+        assert_eq!(o.batch_size, 2, "both requests must share one batch");
+        assert!(
+            (o.service_s - (wait + 2.0 * lat)).abs() < 1e-12,
+            "completion must be max-wait + batch service, got {} vs {}",
+            o.service_s,
+            wait + 2.0 * lat
+        );
+    }
+    let stats = sim.shutdown();
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.backend_calls, 1);
+}
+
+/// A full batch closes on max-size with zero extra waiting: when
+/// `max_batch` requests are already queued, dispatch fires at the
+/// arrival that filled the batch, not at the max-wait timer.
+#[test]
+fn batch_closes_on_max_size() {
+    let wait = 2e-3;
+    let cfg = GatewayConfig {
+        max_batch: 2,
+        queue_cap: 64,
+        batch_max_wait_s: wait,
+        ..GatewayConfig::default()
+    };
+    let mut sim = SimGateway::new(vec![tiny_spec(None, 1)], &cfg).unwrap();
+    let (lat, _) = sim.router().price(0);
+    offer_at(&mut sim, 0.0, Slo::latency(10.0));
+    offer_at(&mut sim, 0.0, Slo::latency(10.0));
+    let outcomes = sim.finish();
+    for o in &outcomes {
+        assert_eq!(o.batch_size, 2);
+        assert!(
+            (o.service_s - 2.0 * lat).abs() < 1e-12,
+            "a size-closed batch must not wait: got {} vs {}",
+            o.service_s,
+            2.0 * lat
+        );
+    }
+    sim.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Autoscaler under the device fit gate
+// ---------------------------------------------------------------------------
+
+/// The autoscaler grows an overloaded design's fleet but never past the
+/// device fit check: a design using 60 BRAMs on the PYNQ-Z1 (140 BRAMs)
+/// caps at 2 shards no matter how deep the queue gets, and once the
+/// flood drains the fleet shrinks back.
+#[test]
+fn autoscaler_scales_up_under_load_but_never_exceeds_device_fit() {
+    let published =
+        Some(ResourceUsage { luts: 1_000, regs: 1_000, brams: 60.0, dsps: 0 });
+    let mut cfg = GatewayConfig {
+        max_batch: 1,
+        queue_cap: 1000,
+        ..GatewayConfig::default()
+    };
+    cfg.autoscale.up_depth = 1;
+    cfg.autoscale.max_shards = 8; // fit, not this bound, must cap growth
+    let mut sim = SimGateway::new(vec![tiny_spec(published, 1)], &cfg).unwrap();
+    for _ in 0..64 {
+        offer_at(&mut sim, 0.0, Slo::latency(10.0));
+    }
+    assert_eq!(sim.live_shards(0), 2, "fit allows exactly 2 × 60 BRAMs on 140");
+
+    // Long after the flood drains, sparse arrivals find an empty queue
+    // with both shards idle: the fleet shrinks back to one.
+    offer_at(&mut sim, 10.0, Slo::latency(10.0));
+    assert_eq!(sim.live_shards(0), 1, "idle fleet must shrink back to min_shards");
+    let outcomes = sim.finish();
+    assert!(outcomes.iter().all(|o| o.admitted && o.ok));
+    let stats = sim.shutdown();
+    let up: Vec<_> =
+        stats.autoscale_events.iter().filter(|e| e.to_shards > e.from_shards).collect();
+    let down: Vec<_> =
+        stats.autoscale_events.iter().filter(|e| e.to_shards < e.from_shards).collect();
+    assert_eq!(up.len(), 1, "exactly one scale-up (1→2); the fit gate blocks 2→3");
+    assert_eq!((up[0].from_shards, up[0].to_shards), (1, 2));
+    assert_eq!(down.len(), 1, "one scale-down once the queue drains");
+    assert!(stats.autoscale_events.iter().all(|e| e.to_shards <= 2));
+    assert!(stats.shards.len() <= 2);
+}
+
+// ---------------------------------------------------------------------------
+// Amortization + determinism (the acceptance criteria)
+// ---------------------------------------------------------------------------
+
+fn overload_spec(max_batch: usize) -> DeploymentSpec {
+    DeploymentSpec {
+        seed: 42,
+        gateway: GatewayConfig {
+            max_batch,
+            queue_cap: 32,
+            batch_max_wait_s: 1e-3,
+            ..GatewayConfig::default()
+        },
+        executors: vec![
+            ExecutorEntry {
+                design: "CNN4".into(),
+                dataset: String::new(),
+                device: "pynq".into(),
+                shards: 1,
+            },
+            ExecutorEntry {
+                design: "SNN8_BRAM".into(),
+                dataset: "mnist".into(),
+                device: "pynq".into(),
+                shards: 1,
+            },
+        ],
+        loadgen: LoadgenConfig {
+            scenario: Scenario::Bursty,
+            requests: 64,
+            seed: 42,
+            slo: Slo::latency(0.05).with_deadline(0.03),
+            gap: Duration::from_micros(200),
+        },
+    }
+}
+
+/// Acceptance: dynamic batching makes strictly fewer backend calls than
+/// per-request dispatch at the same offered load (the amortization the
+/// hotpath bench reports).
+#[test]
+fn dynamic_batching_amortizes_backend_calls() {
+    let (rep_batched, batched) = loadgen::run_sim(&overload_spec(8)).unwrap();
+    let (rep_per_req, per_req) = loadgen::run_sim(&overload_spec(1)).unwrap();
+    assert_eq!(rep_batched.offered, rep_per_req.offered, "same offered load");
+    assert!(
+        batched.backend_calls < per_req.backend_calls,
+        "batched {} must be strictly below per-request {}",
+        batched.backend_calls,
+        per_req.backend_calls
+    );
+    assert_eq!(batched.backend_calls, batched.batches);
+}
+
+/// Acceptance: a fixed-seed bursty run with queues, batching and
+/// autoscaling enabled emits byte-identical `GatewayStats` JSON across
+/// two runs — and the admitted-request routing trace replays too.
+#[test]
+fn same_seed_runs_emit_byte_identical_gateway_stats_json() {
+    let spec = overload_spec(8);
+    let (rep1, stats1) = loadgen::run_sim(&spec).unwrap();
+    let (rep2, stats2) = loadgen::run_sim(&spec).unwrap();
+    assert_eq!(rep1.decisions, rep2.decisions);
+    assert_eq!(rep1.p50_service_ms, rep2.p50_service_ms);
+    assert_eq!(rep1.p99_service_ms, rep2.p99_service_ms);
+    assert_eq!(rep1.rejection_rate, rep2.rejection_rate);
+    let json1 = to_text(&stats1);
+    let json2 = to_text(&stats2);
+    assert_eq!(json1.as_bytes(), json2.as_bytes(), "GatewayStats JSON must be bit-stable");
+}
+
+/// The whole-stack invariants on a mixed overload run: queue counts
+/// reconcile everywhere, served == admitted, and the simulated clock
+/// moved.
+#[test]
+fn overload_run_reconciles_end_to_end() {
+    let (report, stats) = loadgen::run_sim(&overload_spec(8)).unwrap();
+    assert_eq!(report.offered, 64);
+    assert_eq!(report.admitted + report.rejected(), report.offered);
+    assert_eq!(report.served, report.admitted);
+    assert_eq!(stats.offered, stats.admitted + stats.rejected);
+    assert_eq!(stats.admitted, stats.routed);
+    assert_eq!(stats.served, stats.admitted);
+    let q_offered: usize = stats.queues.iter().map(|q| q.offered).sum();
+    assert_eq!(q_offered, stats.offered);
+    assert!(report.sim_duration_s > 0.0);
+    assert!(report.sim_throughput_rps > 0.0);
+    assert_eq!(report.decisions.len(), report.admitted);
+}

@@ -75,7 +75,11 @@ fn tiny_spec(name: &'static str, p: u32, shards: usize) -> ExecutorSpec {
 }
 
 fn tiny_cfg() -> GatewayConfig {
-    GatewayConfig { max_batch: 4, batch_timeout: Duration::from_millis(2) }
+    GatewayConfig {
+        max_batch: 4,
+        batch_timeout: Duration::from_millis(2),
+        ..GatewayConfig::default()
+    }
 }
 
 /// Gateway over the full published design tables for MNIST + CIFAR-10 on
@@ -303,7 +307,11 @@ fn gateway_stats_equal_sum_of_shard_server_stats() {
 fn router_picks_cnn_for_mnist_and_snn_for_cifar_at_loose_slo() {
     let gw = Gateway::start(
         paper_specs(),
-        &GatewayConfig { max_batch: 2, batch_timeout: Duration::from_millis(1) },
+        &GatewayConfig {
+            max_batch: 2,
+            batch_timeout: Duration::from_millis(1),
+            ..GatewayConfig::default()
+        },
     )
     .unwrap();
 
@@ -392,7 +400,11 @@ impl InferenceBackend for FlakyBackend {
 fn failed_request_is_reported_failed_without_failing_batch_mates() {
     let gw = Gateway::start_with(
         vec![tiny_spec("tiny-p8", 8, 1)],
-        &GatewayConfig { max_batch: 4, batch_timeout: Duration::from_millis(50) },
+        &GatewayConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(50),
+            ..GatewayConfig::default()
+        },
         |_, _| {
             Box::new(FlakyBackend { inner: NetworkBackend { net: tiny_net() } })
                 as Box<dyn InferenceBackend>

@@ -10,7 +10,8 @@ use std::fmt::Debug;
 use std::time::Duration;
 
 use spikebench::coordinator::gateway::{
-    DesignStats, Gateway, GatewayConfig, GatewayStats, PricedDesign, ShardStats, Slo,
+    AutoscaleConfig, AutoscaleEvent, DesignStats, Gateway, GatewayConfig, GatewayStats,
+    PricedDesign, QueueStats, ShardStats, Slo,
 };
 use spikebench::coordinator::serve::ServerStats;
 use spikebench::coordinator::loadgen::{
@@ -63,6 +64,23 @@ fn stats_types_roundtrip() {
         cost_estimates: 9,
         routed_energy_j: 1.25e-4,
     });
+    roundtrip(&QueueStats {
+        design: "CNN4".into(),
+        offered: 80,
+        admitted: 64,
+        rejected_full: 12,
+        rejected_deadline: 4,
+        max_depth: 16,
+        total_wait_s: 0.0375,
+        deadline_misses: 2,
+    });
+    roundtrip(&AutoscaleEvent {
+        t_s: 0.0016,
+        design: "SNN8_BRAM".into(),
+        from_shards: 1,
+        to_shards: 2,
+        queue_depth: 5,
+    });
     roundtrip(&GatewayStats {
         served: 64,
         failed: 1,
@@ -71,6 +89,9 @@ fn stats_types_roundtrip() {
         routed: 64,
         slo_misses: 3,
         routed_energy_j: 0.5,
+        offered: 80,
+        admitted: 64,
+        rejected: 16,
         designs: vec![DesignStats {
             name: "d".into(),
             dataset: "mnist".into(),
@@ -90,6 +111,23 @@ fn stats_types_roundtrip() {
             dispatched: 64,
             stats: server_stats(2),
         }],
+        queues: vec![QueueStats {
+            design: "d".into(),
+            offered: 80,
+            admitted: 64,
+            rejected_full: 12,
+            rejected_deadline: 4,
+            max_depth: 16,
+            total_wait_s: 0.0375,
+            deadline_misses: 2,
+        }],
+        autoscale_events: vec![AutoscaleEvent {
+            t_s: 0.002,
+            design: "d".into(),
+            from_shards: 2,
+            to_shards: 1,
+            queue_depth: 0,
+        }],
     });
     roundtrip(&PricedDesign {
         name: "CNN3".into(),
@@ -105,9 +143,28 @@ fn stats_types_roundtrip() {
 #[test]
 fn config_types_roundtrip() {
     roundtrip(&Slo::latency(0.05));
-    roundtrip(&Slo { max_latency_s: 0.001, max_energy_j: Some(2.5e-6) });
+    roundtrip(&Slo {
+        max_latency_s: 0.001,
+        max_energy_j: Some(2.5e-6),
+        deadline_s: Some(0.004),
+    });
+    roundtrip(&Slo::latency(0.01).with_deadline(0.002));
+    roundtrip(&AutoscaleConfig::default());
+    roundtrip(&AutoscaleConfig {
+        enabled: false,
+        min_shards: 2,
+        max_shards: 5,
+        up_depth: 3,
+        down_idle: 1,
+    });
     roundtrip(&GatewayConfig::default());
-    roundtrip(&GatewayConfig { max_batch: 3, batch_timeout: Duration::from_nanos(1_234_567) });
+    roundtrip(&GatewayConfig {
+        max_batch: 3,
+        batch_timeout: Duration::from_nanos(1_234_567),
+        queue_cap: 9,
+        batch_max_wait_s: 2.5e-4,
+        autoscale: AutoscaleConfig { max_shards: 3, ..AutoscaleConfig::default() },
+    });
     for s in Scenario::all() {
         roundtrip(&s);
     }
@@ -116,7 +173,7 @@ fn config_types_roundtrip() {
         scenario: Scenario::Ramp,
         requests: 96,
         seed: 1234567890123,
-        slo: Slo { max_latency_s: 0.2, max_energy_j: Some(1e-5) },
+        slo: Slo { max_latency_s: 0.2, max_energy_j: Some(1e-5), deadline_s: Some(0.01) },
         gap: Duration::from_micros(137),
     });
     roundtrip(&ExecutorEntry {
@@ -139,11 +196,19 @@ fn report_types_roundtrip() {
     roundtrip(&LoadgenReport {
         scenario: Scenario::Bursty,
         decisions: vec![("CNN4".into(), false), ("SNN8_BRAM".into(), true)],
+        offered: 5,
+        admitted: 2,
+        rejected_full: 2,
+        rejected_deadline: 1,
+        rejection_rate: 0.6,
+        deadline_misses: 1,
         served: 2,
         failed: 0,
         slo_misses: 1,
         wall: Duration::from_nanos(123_456_789),
         throughput_rps: 812.5,
+        sim_duration_s: 0.0125,
+        sim_throughput_rps: 160.0,
         p50_service_ms: 0.41,
         p99_service_ms: 1.9,
         mean_routed_latency_ms: 0.37,
@@ -177,7 +242,11 @@ fn report_types_roundtrip() {
 fn live_gateway_stats_roundtrip() {
     let spec = DeploymentSpec {
         seed: 5,
-        gateway: GatewayConfig { max_batch: 4, batch_timeout: Duration::from_millis(2) },
+        gateway: GatewayConfig {
+            max_batch: 4,
+            batch_timeout: Duration::from_millis(2),
+            ..GatewayConfig::default()
+        },
         executors: vec![
             ExecutorEntry {
                 design: "CNN4".into(),
@@ -215,6 +284,38 @@ fn live_gateway_stats_roundtrip() {
     let decoded: GatewayStats = from_text(&to_text(&stats)).unwrap();
     let sum: usize = decoded.designs.iter().map(|d| d.routed).sum();
     assert_eq!(decoded.routed, sum);
+}
+
+/// Stats produced by a live *simulated* run — including queue counters
+/// and any autoscale events — round-trip losslessly, and the admission
+/// invariant holds on the decoded copy.
+#[test]
+fn live_sim_stats_roundtrip() {
+    let spec = DeploymentSpec {
+        seed: 7,
+        gateway: GatewayConfig { max_batch: 4, queue_cap: 8, ..GatewayConfig::default() },
+        executors: vec![ExecutorEntry {
+            design: "CNN4".into(),
+            dataset: String::new(),
+            device: "pynq".into(),
+            shards: 1,
+        }],
+        loadgen: LoadgenConfig {
+            scenario: Scenario::Bursty,
+            requests: 32,
+            seed: 7,
+            slo: Slo::latency(0.05).with_deadline(0.02),
+            gap: Duration::from_micros(100),
+        },
+    };
+    let (report, stats) = loadgen::run_sim(&spec).unwrap();
+    roundtrip(&report);
+    roundtrip(&stats);
+    let decoded: GatewayStats = from_text(&to_text(&stats)).unwrap();
+    assert_eq!(decoded.offered, decoded.admitted + decoded.rejected);
+    assert_eq!(decoded.offered, 32);
+    assert_eq!(report.offered, 32);
+    assert_eq!(report.admitted + report.rejected(), report.offered);
 }
 
 /// Acceptance: a spec file reproduces the in-code config's routing
