@@ -51,6 +51,7 @@ fn main() -> Result<()> {
     }
 
     for scenario in Scenario::all() {
+        println!("\n== scenario: {} ==", scenario.name());
         let cfg = LoadgenConfig {
             scenario,
             requests,
@@ -58,7 +59,6 @@ fn main() -> Result<()> {
             slo: Slo::latency(0.05),
             ..Default::default()
         };
-        println!("\n== scenario: {} ==", scenario.name());
         let report = loadgen::run(&gateway, &cfg, &pools)?;
         print!("{}", report.render());
     }
@@ -102,6 +102,7 @@ fn main() -> Result<()> {
             seed,
             slo: Slo::latency(0.05).with_deadline(0.01),
             gap: Duration::from_micros(100),
+            ..Default::default()
         },
         &pools,
     );

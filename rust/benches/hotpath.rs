@@ -53,6 +53,7 @@ fn bench_routing(bench: &Bench) {
         seed: 42,
         slo,
         gap: std::time::Duration::ZERO,
+        ..Default::default()
     };
     bench.run_throughput("gateway serve (mixed, 32 req)", 32, || {
         loadgen::run(&gateway, &cfg, &pools).unwrap()

@@ -78,6 +78,115 @@ use super::serve::{
 };
 use super::sweep::cnn_metrics;
 
+/// Named multi-tenant service class of a request.
+///
+/// The class drives two things in the discrete-event stack
+/// ([`SimGateway`]): the **default completion deadline** applied at
+/// admission when the request's [`Slo`] carries none
+/// ([`SloClass::default_deadline_s`]), and the **weighted-fair dequeue
+/// share** ([`SloClass::weight`]) — batch slots are granted by smallest
+/// virtual finish time, so a best-effort flood cannot starve a steady
+/// interactive tenant (pinned in `tests/conservation.rs`).
+///
+/// ```
+/// use spikebench::coordinator::gateway::SloClass;
+///
+/// assert_eq!(SloClass::parse("interactive"), Some(SloClass::Interactive));
+/// assert!(SloClass::Interactive.weight() > SloClass::BestEffort.weight());
+/// assert_eq!(SloClass::BestEffort.default_deadline_s(), None);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloClass {
+    /// Latency-sensitive tenant: tight default deadline, largest
+    /// dequeue share.
+    Interactive,
+    /// Throughput tenant: loose default deadline, medium share.
+    Batch,
+    /// Scavenger tenant: no default deadline, smallest share.  The
+    /// default class — [`Slo::latency`] keeps its pre-class semantics.
+    BestEffort,
+}
+
+impl SloClass {
+    /// Every class, in stats order (the order of
+    /// [`GatewayStats::classes`]).
+    pub fn all() -> [SloClass; 3] {
+        [SloClass::Interactive, SloClass::Batch, SloClass::BestEffort]
+    }
+
+    /// Index into class-ordered arrays ([`SloClass::all`] order).
+    pub fn index(&self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Batch => 1,
+            SloClass::BestEffort => 2,
+        }
+    }
+
+    /// Weighted-fair dequeue share: batch slots are granted roughly
+    /// `weight / Σ weights` to each backlogged class.  The weights are
+    /// exact binary fractions so the virtual-time accumulation below
+    /// stays bit-deterministic.
+    pub fn weight(&self) -> f64 {
+        match self {
+            SloClass::Interactive => 8.0,
+            SloClass::Batch => 4.0,
+            SloClass::BestEffort => 1.0,
+        }
+    }
+
+    /// Default completion deadline applied at admission when the
+    /// request's [`Slo`] carries none.
+    pub fn default_deadline_s(&self) -> Option<f64> {
+        match self {
+            SloClass::Interactive => Some(0.010),
+            SloClass::Batch => Some(0.100),
+            SloClass::BestEffort => None,
+        }
+    }
+
+    /// Stable wire/report name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+            SloClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// Parse a class name (case-insensitive; `best_effort` is accepted
+    /// as a spelling of `best-effort`).
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Some(SloClass::Interactive),
+            "batch" => Some(SloClass::Batch),
+            "best-effort" | "best_effort" | "besteffort" => Some(SloClass::BestEffort),
+            _ => None,
+        }
+    }
+}
+
+impl Default for SloClass {
+    fn default() -> Self {
+        SloClass::BestEffort
+    }
+}
+
+impl ToJson for SloClass {
+    fn to_json(&self) -> Json {
+        Json::Str(self.as_str().to_string())
+    }
+}
+
+impl FromJson for SloClass {
+    fn from_json(v: &Json) -> Result<SloClass, WireError> {
+        let s = String::from_json(v)?;
+        SloClass::parse(&s).ok_or_else(|| {
+            WireError::new("", format!("unknown SLO class {s:?} (interactive|batch|best-effort)"))
+        })
+    }
+}
+
 /// Per-request service-level objective.
 ///
 /// `max_latency_s` / `max_energy_j` constrain the *routing choice* (which
@@ -86,16 +195,21 @@ use super::sweep::cnn_metrics;
 /// acceptable completion, and the admission controller of the
 /// discrete-event stack ([`SimGateway`]) rejects a request whose
 /// estimated queueing delay plus priced service latency already breaks
-/// it.  The threaded [`Gateway`] ignores `deadline_s` (it has no
-/// simulated clock).
+/// it.  `class` names the tenant's [`SloClass`]: when `deadline_s` is
+/// `None` the class default applies at admission, and the class weight
+/// drives the weighted-fair dequeue.  The threaded [`Gateway`] ignores
+/// `deadline_s` and `class` (it has no simulated clock and no admission
+/// queue).
 ///
 /// ```
-/// use spikebench::coordinator::gateway::Slo;
+/// use spikebench::coordinator::gateway::{Slo, SloClass};
 ///
 /// let slo = Slo::latency(0.05).with_deadline(0.010);
 /// assert_eq!(slo.max_latency_s, 0.05);
 /// assert_eq!(slo.deadline_s, Some(0.010));
-/// assert_eq!(Slo::latency(0.05).deadline_s, None);
+/// assert_eq!(slo.class, SloClass::BestEffort);
+/// assert_eq!(Slo::latency(0.05).for_class(SloClass::Interactive).class,
+///            SloClass::Interactive);
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Slo {
@@ -104,19 +218,39 @@ pub struct Slo {
     /// Optional per-classification energy budget (Joules).
     pub max_energy_j: Option<f64>,
     /// Optional completion deadline, relative to arrival (simulated
-    /// seconds).  `None` = the request waits however long the queue takes.
+    /// seconds).  `None` = the class default
+    /// ([`SloClass::default_deadline_s`]) applies at admission.
     pub deadline_s: Option<f64>,
+    /// The request's service class (deadline default + dequeue weight).
+    pub class: SloClass,
 }
 
 impl Slo {
-    /// Latency-only SLO (no energy budget, no deadline).
+    /// Latency-only SLO (no energy budget, no deadline, best-effort
+    /// class — i.e. no default deadline either).
     pub fn latency(max_latency_s: f64) -> Slo {
-        Slo { max_latency_s, max_energy_j: None, deadline_s: None }
+        Slo {
+            max_latency_s,
+            max_energy_j: None,
+            deadline_s: None,
+            class: SloClass::BestEffort,
+        }
     }
 
     /// The same SLO with a completion deadline attached.
     pub fn with_deadline(self, deadline_s: f64) -> Slo {
         Slo { deadline_s: Some(deadline_s), ..self }
+    }
+
+    /// The same SLO under a different service class.
+    pub fn for_class(self, class: SloClass) -> Slo {
+        Slo { class, ..self }
+    }
+
+    /// The deadline admission evaluates: the explicit one, else the
+    /// class default.
+    pub fn effective_deadline_s(&self) -> Option<f64> {
+        self.deadline_s.or_else(|| self.class.default_deadline_s())
     }
 }
 
@@ -126,6 +260,7 @@ impl ToJson for Slo {
             .field("max_latency_s", &self.max_latency_s)
             .field("max_energy_j", &self.max_energy_j)
             .field("deadline_s", &self.deadline_s)
+            .field("class", &self.class)
             .build()
     }
 }
@@ -137,6 +272,9 @@ impl FromJson for Slo {
             max_latency_s: d.req("max_latency_s")?,
             max_energy_j: d.opt_or("max_energy_j", None)?,
             deadline_s: d.opt_or("deadline_s", None)?,
+            // Pre-class artifacts carried no class field; best-effort
+            // reproduces their semantics exactly (no default deadline).
+            class: d.opt_or("class", SloClass::BestEffort)?,
         })
     }
 }
@@ -782,6 +920,7 @@ impl FromJson for DesignStats {
 ///
 /// assert_eq!(RejectReason::QueueFull.as_str(), "queue_full");
 /// assert_eq!(RejectReason::DeadlineUnmeetable.as_str(), "deadline");
+/// assert_eq!(RejectReason::ShardLost.as_str(), "shard_lost");
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RejectReason {
@@ -790,6 +929,12 @@ pub enum RejectReason {
     /// The estimated queueing delay plus the design's priced service
     /// latency already exceeded the request's deadline at arrival.
     DeadlineUnmeetable,
+    /// The request was admitted, but the shard holding it died (fault
+    /// injection) and it could not be re-queued — either the queue was
+    /// at `queue_cap` at the moment of loss, or the design's whole fleet
+    /// was dead at the end of the run.  Unlike the other two reasons this
+    /// one is issued *after* admission.
+    ShardLost,
 }
 
 impl RejectReason {
@@ -798,21 +943,28 @@ impl RejectReason {
         match self {
             RejectReason::QueueFull => "queue_full",
             RejectReason::DeadlineUnmeetable => "deadline",
+            RejectReason::ShardLost => "shard_lost",
         }
     }
 }
 
 /// Per-design admission-queue statistics of a [`SimGateway`] run.
 ///
-/// The reconciliation invariant (pinned in `tests/admission.rs`):
-/// `offered == admitted + rejected_full + rejected_deadline`.
+/// Two reconciliation invariants are pinned by the test suite
+/// (`tests/admission.rs`, `tests/conservation.rs`):
+///
+/// * at admission: `offered == admitted + rejected_full +
+///   rejected_deadline` (a `shard_lost` rejection happens *after*
+///   admission and never subtracts from `admitted`);
+/// * at the end of a run: `admitted == completed + rejected_shard_lost`
+///   where `completed` is the design's [`DesignStats::served`].
 ///
 /// ```
 /// use spikebench::coordinator::gateway::QueueStats;
 ///
 /// let q = QueueStats { offered: 10, admitted: 7, rejected_full: 2,
 ///                      rejected_deadline: 1, ..QueueStats::default() };
-/// assert_eq!(q.offered, q.admitted + q.rejected());
+/// assert_eq!(q.offered, q.admitted + q.rejected_full + q.rejected_deadline);
 /// ```
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct QueueStats {
@@ -820,12 +972,20 @@ pub struct QueueStats {
     pub design: String,
     /// Requests the router sent to this design.
     pub offered: usize,
-    /// Requests admitted into the queue (all of them were later served).
+    /// Requests admitted into the queue.  Without fault injection all of
+    /// them complete; with it, `rejected_shard_lost` of them are lost.
     pub admitted: usize,
     /// Rejections because the queue was at `queue_cap`.
     pub rejected_full: usize,
     /// Rejections because the deadline was already unmeetable at arrival.
     pub rejected_deadline: usize,
+    /// Admitted requests dropped because the shard holding them died and
+    /// they could not be re-queued ([`RejectReason::ShardLost`]).
+    pub rejected_shard_lost: usize,
+    /// Admitted requests that were pulled back from a dying shard and
+    /// re-queued (each completes exactly once later, or is eventually
+    /// counted in `rejected_shard_lost` — never both).
+    pub requeued: usize,
     /// Deepest queue depth observed (after admission).
     pub max_depth: usize,
     /// Summed simulated queue wait (arrival → dispatch) of admitted
@@ -838,9 +998,9 @@ pub struct QueueStats {
 }
 
 impl QueueStats {
-    /// Total rejections, either reason.
+    /// Total rejections, any reason (admission-time and post-admission).
     pub fn rejected(&self) -> usize {
-        self.rejected_full + self.rejected_deadline
+        self.rejected_full + self.rejected_deadline + self.rejected_shard_lost
     }
 }
 
@@ -852,6 +1012,8 @@ impl ToJson for QueueStats {
             .field("admitted", &self.admitted)
             .field("rejected_full", &self.rejected_full)
             .field("rejected_deadline", &self.rejected_deadline)
+            .field("rejected_shard_lost", &self.rejected_shard_lost)
+            .field("requeued", &self.requeued)
             .field("max_depth", &self.max_depth)
             .field("total_wait_s", &self.total_wait_s)
             .field("deadline_misses", &self.deadline_misses)
@@ -868,9 +1030,375 @@ impl FromJson for QueueStats {
             admitted: d.req("admitted")?,
             rejected_full: d.req("rejected_full")?,
             rejected_deadline: d.req("rejected_deadline")?,
+            // Chaos-era fields decode with defaults so pre-chaos
+            // artifacts stay loadable.
+            rejected_shard_lost: d.opt_or("rejected_shard_lost", 0)?,
+            requeued: d.opt_or("requeued", 0)?,
             max_depth: d.req("max_depth")?,
             total_wait_s: d.req("total_wait_s")?,
             deadline_misses: d.req("deadline_misses")?,
+        })
+    }
+}
+
+/// Per-[`SloClass`] tenant accounting of a [`SimGateway`] run.
+///
+/// The conservation invariant pinned in `tests/conservation.rs`:
+/// `offered == served + failed + rejected()` — exactly, per class, with
+/// or without fault injection.  Here `served` counts completions whose
+/// backend answered OK and `failed` completions whose backend errored
+/// (unlike the gateway-level totals, where `served` includes failures).
+///
+/// ```
+/// use spikebench::coordinator::gateway::{ClassStats, SloClass};
+///
+/// let c = ClassStats { class: SloClass::Batch, offered: 5, admitted: 4,
+///                      served: 3, failed: 1, rejected_deadline: 1,
+///                      ..ClassStats::default() };
+/// assert_eq!(c.offered, c.served + c.failed + c.rejected());
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassStats {
+    /// The tenant class these counters describe.
+    pub class: SloClass,
+    /// Requests of this class that reached admission.
+    pub offered: usize,
+    /// Requests admitted into a queue.
+    pub admitted: usize,
+    /// Completions whose backend answered OK.
+    pub served: usize,
+    /// Completions whose backend errored.
+    pub failed: usize,
+    /// Admission rejections: queue at `queue_cap`.
+    pub rejected_full: usize,
+    /// Admission rejections: deadline (explicit or class default)
+    /// unmeetable at arrival.
+    pub rejected_deadline: usize,
+    /// Post-admission losses to fault injection.
+    pub rejected_shard_lost: usize,
+    /// Requests pulled back from a dying shard and re-queued.
+    pub requeued: usize,
+    /// Completions that landed after their effective deadline.
+    pub deadline_misses: usize,
+}
+
+impl ClassStats {
+    /// A zeroed record for `class`.
+    pub fn for_class(class: SloClass) -> ClassStats {
+        ClassStats { class, ..ClassStats::default() }
+    }
+
+    /// Total rejections, any reason.
+    pub fn rejected(&self) -> usize {
+        self.rejected_full + self.rejected_deadline + self.rejected_shard_lost
+    }
+
+    /// Add another record's counters into this one (same class).
+    pub fn absorb(&mut self, other: &ClassStats) {
+        debug_assert_eq!(self.class, other.class);
+        self.offered += other.offered;
+        self.admitted += other.admitted;
+        self.served += other.served;
+        self.failed += other.failed;
+        self.rejected_full += other.rejected_full;
+        self.rejected_deadline += other.rejected_deadline;
+        self.rejected_shard_lost += other.rejected_shard_lost;
+        self.requeued += other.requeued;
+        self.deadline_misses += other.deadline_misses;
+    }
+}
+
+impl ToJson for ClassStats {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("class", &self.class)
+            .field("offered", &self.offered)
+            .field("admitted", &self.admitted)
+            .field("served", &self.served)
+            .field("failed", &self.failed)
+            .field("rejected_full", &self.rejected_full)
+            .field("rejected_deadline", &self.rejected_deadline)
+            .field("rejected_shard_lost", &self.rejected_shard_lost)
+            .field("requeued", &self.requeued)
+            .field("deadline_misses", &self.deadline_misses)
+            .build()
+    }
+}
+
+impl FromJson for ClassStats {
+    fn from_json(v: &Json) -> Result<ClassStats, WireError> {
+        let d = De::root(v);
+        Ok(ClassStats {
+            class: d.req("class")?,
+            offered: d.req("offered")?,
+            admitted: d.req("admitted")?,
+            served: d.req("served")?,
+            failed: d.req("failed")?,
+            rejected_full: d.req("rejected_full")?,
+            rejected_deadline: d.req("rejected_deadline")?,
+            rejected_shard_lost: d.req("rejected_shard_lost")?,
+            requeued: d.req("requeued")?,
+            deadline_misses: d.req("deadline_misses")?,
+        })
+    }
+}
+
+/// What a [`FaultEvent`] does to its target.
+///
+/// ```
+/// use spikebench::coordinator::gateway::FaultAction;
+///
+/// assert_eq!(FaultAction::parse("kill"), Some(FaultAction::Kill));
+/// assert_eq!(FaultAction::Recover.as_str(), "recover");
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Take the target shard(s) down.  In-flight batch members are
+    /// re-queued when the admission queue has room, otherwise rejected
+    /// with [`RejectReason::ShardLost`].
+    Kill,
+    /// Bring a previously-killed shard back (no-op on a live shard).
+    Recover,
+}
+
+impl FaultAction {
+    /// Stable wire name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultAction::Kill => "kill",
+            FaultAction::Recover => "recover",
+        }
+    }
+
+    /// Parse a wire name (case-insensitive).
+    pub fn parse(s: &str) -> Option<FaultAction> {
+        match s.to_ascii_lowercase().as_str() {
+            "kill" => Some(FaultAction::Kill),
+            "recover" => Some(FaultAction::Recover),
+            _ => None,
+        }
+    }
+}
+
+impl ToJson for FaultAction {
+    fn to_json(&self) -> Json {
+        Json::Str(self.as_str().to_string())
+    }
+}
+
+impl FromJson for FaultAction {
+    fn from_json(v: &Json) -> Result<FaultAction, WireError> {
+        let s = String::from_json(v)?;
+        FaultAction::parse(&s)
+            .ok_or_else(|| WireError::new("", format!("unknown fault action {s:?} (kill|recover)")))
+    }
+}
+
+/// One scheduled fault: at simulated time `t_s`, `action` hits either one
+/// shard of one design (`design` + `shard`) or *every* shard on a device
+/// (`device` — e.g. `"pynq"` takes down all designs deployed there).
+/// Exactly one of `design` / `device` must be non-empty.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Simulated time the fault fires (seconds since run start).
+    pub t_s: f64,
+    /// Target design name (mutually exclusive with `device`).
+    pub design: String,
+    /// Shard index within `design` (ignored for device-wide events).
+    pub shard: usize,
+    /// Target device name (mutually exclusive with `design`).
+    pub device: String,
+    /// Kill or recover.
+    pub action: FaultAction,
+}
+
+impl Default for FaultEvent {
+    fn default() -> Self {
+        FaultEvent {
+            t_s: 0.0,
+            design: String::new(),
+            shard: 0,
+            device: String::new(),
+            action: FaultAction::Kill,
+        }
+    }
+}
+
+impl FaultEvent {
+    /// A kill of one shard of one design.
+    pub fn kill(t_s: f64, design: &str, shard: usize) -> FaultEvent {
+        FaultEvent { t_s, design: design.to_string(), shard, ..FaultEvent::default() }
+    }
+
+    /// A recovery of one shard of one design.
+    pub fn recover(t_s: f64, design: &str, shard: usize) -> FaultEvent {
+        FaultEvent {
+            t_s,
+            design: design.to_string(),
+            shard,
+            action: FaultAction::Recover,
+            ..FaultEvent::default()
+        }
+    }
+
+    /// A device-wide kill (every shard of every design on `device`).
+    pub fn kill_device(t_s: f64, device: &str) -> FaultEvent {
+        FaultEvent { t_s, device: device.to_string(), ..FaultEvent::default() }
+    }
+
+    /// A device-wide recovery.
+    pub fn recover_device(t_s: f64, device: &str) -> FaultEvent {
+        FaultEvent {
+            t_s,
+            device: device.to_string(),
+            action: FaultAction::Recover,
+            ..FaultEvent::default()
+        }
+    }
+}
+
+impl ToJson for FaultEvent {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("t_s", &self.t_s)
+            .field("design", &self.design)
+            .field("shard", &self.shard)
+            .field("device", &self.device)
+            .field("action", &self.action)
+            .build()
+    }
+}
+
+impl FromJson for FaultEvent {
+    fn from_json(v: &Json) -> Result<FaultEvent, WireError> {
+        let d = De::root(v);
+        Ok(FaultEvent {
+            t_s: d.req("t_s")?,
+            design: d.opt_or("design", String::new())?,
+            shard: d.opt_or("shard", 0)?,
+            device: d.opt_or("device", String::new())?,
+            action: d.req("action")?,
+        })
+    }
+}
+
+/// A replayable chaos schedule for one [`SimGateway`] run: shard and
+/// device failures (and optional recoveries) at fixed simulated times.
+/// The plan is data, not randomness — [`FaultPlan::seeded`] derives one
+/// deterministically from a seed, so a chaos run is exactly as
+/// reproducible as a fault-free one.
+///
+/// ```
+/// use spikebench::coordinator::gateway::{FaultEvent, FaultPlan};
+///
+/// let plan = FaultPlan {
+///     events: vec![FaultEvent::kill(0.002, "CNN4", 0),
+///                  FaultEvent::recover(0.004, "CNN4", 0)],
+/// };
+/// assert_eq!(plan.events.len(), 2);
+/// assert!(!plan.is_empty());
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Scheduled faults; applied in `t_s` order (ties keep list order).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// True when the plan schedules nothing (the default).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Derive a deterministic plan from a seed: `kills` shard kills at
+    /// uniform times in `[0, horizon_s)`, each targeting a random design
+    /// from `designs` and a random shard index below `max_shard`, and —
+    /// when `recover` is set — a matching recovery half a horizon later.
+    pub fn seeded(
+        seed: u64,
+        designs: &[&str],
+        max_shard: usize,
+        kills: usize,
+        horizon_s: f64,
+        recover: bool,
+    ) -> FaultPlan {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xFA17_F1A9);
+        let mut events = Vec::new();
+        for _ in 0..kills {
+            if designs.is_empty() {
+                break;
+            }
+            let design = designs[rng.below(designs.len())];
+            let shard = rng.below(max_shard.max(1));
+            let t = rng.f64() * horizon_s;
+            events.push(FaultEvent::kill(t, design, shard));
+            if recover {
+                events.push(FaultEvent::recover(t + 0.5 * horizon_s, design, shard));
+            }
+        }
+        // t_s order is the execution order; sort_by is stable so equal
+        // times keep their generation order.
+        events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).expect("fault times are finite"));
+        FaultPlan { events }
+    }
+}
+
+impl ToJson for FaultPlan {
+    fn to_json(&self) -> Json {
+        Obj::new().field("events", &self.events).build()
+    }
+}
+
+impl FromJson for FaultPlan {
+    fn from_json(v: &Json) -> Result<FaultPlan, WireError> {
+        let d = De::root(v);
+        Ok(FaultPlan { events: d.opt_or("events", Vec::new())? })
+    }
+}
+
+/// One *applied* fault, as recorded in [`GatewayStats::faults`]: the
+/// event it came from (resolved to a concrete design + shard) plus what
+/// it cost.  A device-wide [`FaultEvent`] expands to one record per
+/// affected shard.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultRecord {
+    /// Simulated time the fault was applied.
+    pub t_s: f64,
+    /// Design whose shard was hit.
+    pub design: String,
+    /// Shard index within the design.
+    pub shard: usize,
+    /// `"kill"` or `"recover"`.
+    pub action: String,
+    /// In-flight requests rejected with [`RejectReason::ShardLost`].
+    pub lost: usize,
+    /// In-flight requests pulled back into the admission queue.
+    pub requeued: usize,
+}
+
+impl ToJson for FaultRecord {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("t_s", &self.t_s)
+            .field("design", &self.design)
+            .field("shard", &self.shard)
+            .field("action", &self.action)
+            .field("lost", &self.lost)
+            .field("requeued", &self.requeued)
+            .build()
+    }
+}
+
+impl FromJson for FaultRecord {
+    fn from_json(v: &Json) -> Result<FaultRecord, WireError> {
+        let d = De::root(v);
+        Ok(FaultRecord {
+            t_s: d.req("t_s")?,
+            design: d.req("design")?,
+            shard: d.req("shard")?,
+            action: d.req("action")?,
+            lost: d.req("lost")?,
+            requeued: d.req("requeued")?,
         })
     }
 }
@@ -958,9 +1486,15 @@ pub struct GatewayStats {
     pub rejected: usize,
     /// Per-design admission-queue statistics, aligned with `designs`.
     pub queues: Vec<QueueStats>,
+    /// Per-SLO-class tenant accounting in [`SloClass::all`] order (empty
+    /// for the threaded [`Gateway`], which does not track classes).
+    pub classes: Vec<ClassStats>,
     /// Autoscaler steps in simulated-time order (empty when autoscaling
     /// is disabled or for the threaded [`Gateway`]).
     pub autoscale_events: Vec<AutoscaleEvent>,
+    /// Applied fault-injection events in simulated-time order (empty
+    /// without a [`FaultPlan`]).
+    pub faults: Vec<FaultRecord>,
 }
 
 impl ToJson for GatewayStats {
@@ -979,7 +1513,9 @@ impl ToJson for GatewayStats {
             .field("designs", &self.designs)
             .field("shards", &self.shards)
             .field("queues", &self.queues)
+            .field("classes", &self.classes)
             .field("autoscale_events", &self.autoscale_events)
+            .field("faults", &self.faults)
             .build()
     }
 }
@@ -1003,7 +1539,9 @@ impl FromJson for GatewayStats {
             designs: d.req("designs")?,
             shards: d.req("shards")?,
             queues: d.opt_or("queues", Vec::new())?,
+            classes: d.opt_or("classes", Vec::new())?,
             autoscale_events: d.opt_or("autoscale_events", Vec::new())?,
+            faults: d.opt_or("faults", Vec::new())?,
         })
     }
 }
@@ -1224,17 +1762,26 @@ pub struct SimRequest {
 /// What happened to one offered request, in submission order.
 ///
 /// A rejected request has `admitted == false` and a [`RejectReason`]; an
-/// admitted one always completes (`service_s` = simulated arrival →
-/// completion, `ok`/`predicted` from the functional backend).
+/// admitted one completes (`service_s` = simulated arrival → completion,
+/// `ok`/`predicted` from the functional backend) unless fault injection
+/// lost it, in which case `admitted` is revoked back to `false` and
+/// `reject` is [`RejectReason::ShardLost`] — every outcome is therefore
+/// either a rejection or a completion, never both, never neither.
 #[derive(Debug, Clone)]
 pub struct SimOutcome {
     /// Design the router chose (rejected requests still carry it — the
     /// rejection happened at that design's queue).
     pub design: String,
-    /// Whether admission accepted the request.
+    /// The request's [`SloClass`].
+    pub class: SloClass,
+    /// Whether admission accepted the request *and* it was not lost to a
+    /// fault afterwards.
     pub admitted: bool,
-    /// Why admission turned the request away (`None` when admitted).
+    /// Why the request was turned away (`None` when it completed).
     pub reject: Option<RejectReason>,
+    /// How many times the request was pulled back from a dying shard and
+    /// re-queued before completing (or being lost).
+    pub requeues: usize,
     /// True when no design met the SLO and routing fell back to the
     /// fastest design for the dataset.
     pub slo_miss: bool,
@@ -1262,20 +1809,51 @@ pub struct SimOutcome {
 
 struct Queued {
     arrival_s: f64,
-    /// Absolute deadline (`arrival + slo.deadline_s`); +∞ when none.
+    /// Absolute deadline (`arrival + effective deadline`); +∞ when none.
     deadline_abs: f64,
+    class: SloClass,
     x: Tensor3,
     /// Index into the gateway's outcome list.
     outcome: usize,
 }
 
+/// A dispatched batch that has not completed yet on the simulated clock.
+/// Execution (the real backend call) is deferred to completion time so a
+/// fault between dispatch and completion can still lose or re-queue the
+/// members; the backend is stateless, so deferral changes no results.
+struct InFlight {
+    /// Dispatch time (queue wait is measured against this).
+    fire_s: f64,
+    /// Completion time (`fire_s + batch × latency`).
+    done_s: f64,
+    members: Vec<Queued>,
+}
+
 struct SimShard {
     /// Simulated time until which the shard is executing a batch.
     busy_until: f64,
+    /// False after a [`FaultAction::Kill`] until a recovery (fault plan
+    /// or autoscaler) revives the slot.
+    alive: bool,
+    /// The batch currently executing, if any.
+    in_flight: Option<InFlight>,
     stats: ServerStats,
-    /// Requests dispatched to this shard (mirrors the threaded
-    /// [`ShardStats::dispatched`]).
+    /// Requests completed on this shard (mirrors the threaded
+    /// [`ShardStats::dispatched`]; counted at completion, so a batch lost
+    /// to a fault never inflates it).
     dispatched: usize,
+}
+
+impl SimShard {
+    fn idle() -> SimShard {
+        SimShard {
+            busy_until: 0.0,
+            alive: true,
+            in_flight: None,
+            stats: ServerStats::default(),
+            dispatched: 0,
+        }
+    }
 }
 
 struct SimEntry {
@@ -1291,12 +1869,96 @@ struct SimEntry {
     /// `B × latency_s` simulated seconds).
     latency_s: f64,
     backend: Box<dyn InferenceBackend>,
-    queue: VecDeque<Queued>,
-    /// All shards ever created; only `shards[..live]` receive dispatches.
+    /// One admission queue per [`SloClass`], in [`SloClass::all`] order;
+    /// `queue_cap` bounds their combined length.  Each queue is
+    /// arrival-ordered; the weighted-fair scheduler picks across them.
+    queues: [VecDeque<Queued>; 3],
+    /// Weighted-fair virtual finish time per class: a dequeue from class
+    /// `c` advances `vtime[c]` by `1 / weight(c)`, and batch slots go to
+    /// the backlogged class with the smallest prospective finish tag.
+    /// The weights are exact binary fractions, so the accumulation is
+    /// bit-deterministic.
+    vtime: [f64; 3],
+    /// Virtual time of the most recent grant; a class going from idle to
+    /// backlogged catches its `vtime` up to this, so idling never banks
+    /// credit.
+    vnow: f64,
+    /// All shards ever created; dispatches go to `alive` ones only.
     shards: Vec<SimShard>,
+    /// Count of `alive` shards (kept in sync with the flags).
     live: usize,
     qstats: QueueStats,
+    /// Per-class accounting for this design, summed across designs into
+    /// [`GatewayStats::classes`] at shutdown.
+    cstats: [ClassStats; 3],
     slo_misses: usize,
+}
+
+impl SimEntry {
+    /// Combined backlog across the class queues.
+    fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Arrival time of the oldest queued request, any class.
+    fn oldest_arrival(&self) -> Option<f64> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front().map(|h| h.arrival_s))
+            .fold(None, |acc, a| Some(acc.map_or(a, |b: f64| b.min(a))))
+    }
+
+    /// Arrival time of the `k`-th oldest queued request (0-based) across
+    /// the class queues, via a three-way merge walk — each class queue is
+    /// already arrival-ordered.  Ties resolve to the lowest class index.
+    fn kth_arrival(&self, k: usize) -> Option<f64> {
+        let mut cursor = [0usize; 3];
+        let mut last = None;
+        for _ in 0..=k {
+            let mut best: Option<(f64, usize)> = None;
+            for c in 0..3 {
+                if let Some(q) = self.queues[c].get(cursor[c]) {
+                    if best.map_or(true, |(a, _)| q.arrival_s < a) {
+                        best = Some((q.arrival_s, c));
+                    }
+                }
+            }
+            let (a, c) = best?;
+            cursor[c] += 1;
+            last = Some(a);
+        }
+        last
+    }
+
+    /// Admit one request: arrival-ordered push into its class queue,
+    /// catching the class's virtual time up if it was idle.
+    fn enqueue(&mut self, q: Queued) {
+        let c = q.class.index();
+        if self.queues[c].is_empty() {
+            self.vtime[c] = self.vtime[c].max(self.vnow);
+        }
+        self.queues[c].push_back(q);
+    }
+
+    /// Grant one batch slot by weighted-fair queueing: the backlogged
+    /// class with the smallest prospective virtual finish time wins (ties
+    /// to the lowest class index, i.e. interactive first).
+    fn wfq_pop(&mut self) -> Option<Queued> {
+        let mut best: Option<(f64, usize)> = None;
+        for (c, class) in SloClass::all().iter().enumerate() {
+            if self.queues[c].is_empty() {
+                continue;
+            }
+            let finish = self.vtime[c] + 1.0 / class.weight();
+            if best.map_or(true, |(f, _)| finish < f) {
+                best = Some((finish, c));
+            }
+        }
+        let (finish, c) = best?;
+        self.vtime[c] = finish;
+        self.vnow = finish;
+        self.queues[c].pop_front()
+    }
 }
 
 /// The discrete-event, simulated-time serving stack: admission queues
@@ -1322,15 +1984,27 @@ struct SimEntry {
 ///    (`batch_max_wait_s` after the oldest queued arrival), whichever
 ///    comes first, then dispatches to the earliest-available shard; one
 ///    [`InferenceBackend::classify_batch`] call serves the whole batch,
-///    so [`ServerStats::backend_calls`] amortizes across callers.
+///    so [`ServerStats::backend_calls`] amortizes across callers.  Batch
+///    slots are granted across the per-class queues by weighted-fair
+///    queueing ([`SloClass::weight`]), so a best-effort flood cannot
+///    starve an interactive tenant.
 /// 4. **Autoscale** — on every arrival the design's fleet grows when the
 ///    queue holds ≥ `up_depth × live` requests (gated by the Table-9
 ///    device fit check at `live + 1` shards) and shrinks when the queue
-///    is empty with ≥ `down_idle` idle shards.
+///    is empty with ≥ `down_idle` idle shards.  Growth revives
+///    fault-killed slots first, which is what makes the autoscaler the
+///    recovery path under chaos.
+/// 5. **Chaos** (optional) — a [`FaultPlan`] installed via
+///    [`SimGateway::set_fault_plan`] kills and revives shards at
+///    scheduled simulated times.  In-flight work on a killed shard is
+///    re-queued while the admission queue has room and rejected with
+///    [`RejectReason::ShardLost`] otherwise; every application is logged
+///    in [`GatewayStats::faults`].
 ///
 /// Functional execution is real (the seeded [`NetworkBackend`] runs per
 /// batch); only *time* is simulated, which is what makes the stats
-/// deterministic.  Use the threaded [`Gateway`] for wall-clock serving.
+/// deterministic — including under a fault plan, which is data, not
+/// randomness.  Use the threaded [`Gateway`] for wall-clock serving.
 ///
 /// ```no_run
 /// use spikebench::coordinator::gateway::{GatewayConfig, SimGateway, SimRequest, Slo};
@@ -1355,6 +2029,10 @@ pub struct SimGateway {
     entries: Vec<SimEntry>,
     outcomes: Vec<SimOutcome>,
     events: Vec<AutoscaleEvent>,
+    fault_plan: FaultPlan,
+    /// Next unapplied event in `fault_plan` (events are time-sorted).
+    fault_cursor: usize,
+    fault_log: Vec<FaultRecord>,
     last_arrival_s: f64,
     finished: bool,
 }
@@ -1438,19 +2116,16 @@ impl SimGateway {
                 shard_resources,
                 latency_s,
                 backend: make_backend(spec),
-                queue: VecDeque::new(),
-                shards: (0..shards)
-                    .map(|_| SimShard {
-                        busy_until: 0.0,
-                        stats: ServerStats::default(),
-                        dispatched: 0,
-                    })
-                    .collect(),
+                queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                vtime: [0.0; 3],
+                vnow: 0.0,
+                shards: (0..shards).map(|_| SimShard::idle()).collect(),
                 live: shards,
                 qstats: QueueStats {
                     design: spec.name().to_string(),
                     ..QueueStats::default()
                 },
+                cstats: SloClass::all().map(ClassStats::for_class),
                 slo_misses: 0,
             });
         }
@@ -1460,9 +2135,69 @@ impl SimGateway {
             entries,
             outcomes: Vec::new(),
             events: Vec::new(),
+            fault_plan: FaultPlan::default(),
+            fault_cursor: 0,
+            fault_log: Vec::new(),
             last_arrival_s: 0.0,
             finished: false,
         })
+    }
+
+    /// Install a chaos schedule.  Must happen before the first offer
+    /// (the plan is part of the run's definition, not a live control
+    /// channel); events are validated — finite non-negative times, an
+    /// action, and exactly one of a known design or a known device as
+    /// the target — then sorted by time (stable, so equal times keep
+    /// their list order).
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) -> Result<()> {
+        if self.finished || !self.outcomes.is_empty() {
+            return Err(anyhow!("fault plan must be installed before the first offer"));
+        }
+        let mut events = plan.events;
+        for ev in &mut events {
+            if !ev.t_s.is_finite() || ev.t_s < 0.0 {
+                return Err(anyhow!(
+                    "fault t_s = {} is not a finite non-negative time",
+                    ev.t_s
+                ));
+            }
+            match (ev.design.is_empty(), ev.device.is_empty()) {
+                (false, false) => {
+                    return Err(anyhow!(
+                        "fault at t_s = {} targets both design {:?} and device {:?}; pick one",
+                        ev.t_s,
+                        ev.design,
+                        ev.device
+                    ));
+                }
+                (true, true) => {
+                    return Err(anyhow!(
+                        "fault at t_s = {} targets neither a design nor a device",
+                        ev.t_s
+                    ));
+                }
+                (false, true) => {
+                    if !self.entries.iter().any(|e| e.name == ev.design) {
+                        return Err(anyhow!("fault targets unknown design {:?}", ev.design));
+                    }
+                }
+                (true, false) => {
+                    // Spec files name devices the way executor entries
+                    // do ("pynq", "zcu102", part numbers…); canonicalize
+                    // to the fleet's `Device::name` before matching.
+                    if let Some(d) = Device::by_name(&ev.device) {
+                        ev.device = d.name.to_string();
+                    }
+                    if !self.entries.iter().any(|e| e.device_name == ev.device) {
+                        return Err(anyhow!("fault targets unknown device {:?}", ev.device));
+                    }
+                }
+            }
+        }
+        events.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).expect("times validated finite"));
+        self.fault_plan = FaultPlan { events };
+        self.fault_cursor = 0;
+        Ok(())
     }
 
     /// The routing half (priced table, unfit rejections, decisions).
@@ -1496,6 +2231,9 @@ impl SimGateway {
             "arrivals must be offered in non-decreasing time order"
         );
         self.last_arrival_s = req.arrival_s;
+        // Scheduled faults due by this arrival fire first, each at its
+        // own simulated time, so admission sees the post-fault fleet.
+        self.apply_faults(req.arrival_s);
         let decision = self.router.decide(&req.dataset, &req.slo)?;
         let t = req.arrival_s;
         let max_batch = self.cfg.max_batch.max(1);
@@ -1509,6 +2247,10 @@ impl SimGateway {
                 ));
             }
         }
+        let class = req.slo.class;
+        // The class default applies only when the request carries no
+        // explicit deadline; best-effort's default is "none".
+        let deadline = req.slo.effective_deadline_s();
         // Retire every dispatch scheduled before this arrival, so the
         // admission estimate below sees the queue as it stands at `t`.
         Self::advance(&mut self.entries[decision.design], max_batch, max_wait, t, &mut self.outcomes);
@@ -1524,10 +2266,13 @@ impl SimGateway {
 
         let e = &mut self.entries[decision.design];
         e.qstats.offered += 1;
+        e.cstats[class.index()].offered += 1;
         let mut outcome = SimOutcome {
             design: e.name.clone(),
+            class,
             admitted: false,
             reject: None,
+            requeues: 0,
             slo_miss: decision.slo_miss,
             ok: false,
             error: None,
@@ -1540,49 +2285,64 @@ impl SimGateway {
             routed_latency_s: decision.latency_s,
             routed_energy_j: decision.energy_j,
         };
-        if e.queue.len() >= self.cfg.queue_cap {
+        let queued = e.queued();
+        if queued >= self.cfg.queue_cap {
             e.qstats.rejected_full += 1;
+            e.cstats[class.index()].rejected_full += 1;
             outcome.reject = Some(RejectReason::QueueFull);
             self.outcomes.push(outcome);
-        } else if req.slo.deadline_s.map_or(false, |dl| {
+        } else if deadline.map_or(false, |dl| {
             // Completion estimate, priced by the two-stage cost model:
             // the earliest any shard frees, plus the queued work ahead
             // spread across the live shards, plus this request's own
             // service.  An optimistic estimate, not a strict bound —
             // batch formation can add delay (late completions are
             // counted in `deadline_misses`) — but it never charges a
-            // request for backlog on shards it would not wait for.
-            let min_backlog = e.shards[..e.live]
+            // request for backlog on shards it would not wait for.  A
+            // dead fleet (every shard fault-killed) can serve nothing
+            // until recovery, so any deadline is unmeetable right now.
+            if e.live == 0 {
+                return true;
+            }
+            let min_backlog = e
+                .shards
                 .iter()
+                .filter(|s| s.alive)
                 .map(|s| (s.busy_until - t).max(0.0))
                 .fold(f64::INFINITY, f64::min);
-            let queued = e.queue.len() as f64 * e.latency_s;
-            min_backlog + queued / e.live as f64 + e.latency_s > dl
+            let queued_work = queued as f64 * e.latency_s;
+            min_backlog + queued_work / e.live as f64 + e.latency_s > dl
         }) {
             e.qstats.rejected_deadline += 1;
+            e.cstats[class.index()].rejected_deadline += 1;
             outcome.reject = Some(RejectReason::DeadlineUnmeetable);
             self.outcomes.push(outcome);
         } else {
             outcome.admitted = true;
             e.qstats.admitted += 1;
+            e.cstats[class.index()].admitted += 1;
             if decision.slo_miss {
                 e.slo_misses += 1;
             }
-            let deadline_abs = req.slo.deadline_s.map_or(f64::INFINITY, |dl| t + dl);
+            let deadline_abs = deadline.map_or(f64::INFINITY, |dl| t + dl);
             let outcome_idx = self.outcomes.len();
             self.outcomes.push(outcome);
-            e.queue.push_back(Queued { arrival_s: t, deadline_abs, x: req.x, outcome: outcome_idx });
-            e.qstats.max_depth = e.qstats.max_depth.max(e.queue.len());
+            e.enqueue(Queued { arrival_s: t, deadline_abs, class, x: req.x, outcome: outcome_idx });
+            e.qstats.max_depth = e.qstats.max_depth.max(e.queued());
         }
         Ok(())
     }
 
-    /// Fire every dispatch of one entry whose trigger time is ≤ `now`,
-    /// in simulated-time order.  A batch's close time is the earlier of
-    /// max-size (the arrival that filled it) and max-wait (the oldest
-    /// member's patience); the dispatch fires once a live shard is also
-    /// free, and later arrivals keep topping the batch up to `max_batch`
-    /// while it waits for a shard.
+    /// Run one entry's event loop up to `now`, in simulated-time order:
+    /// retire every in-flight batch whose completion is due, and fire
+    /// every dispatch whose trigger time is reached.  A batch's close
+    /// time is the earlier of max-size (the arrival that filled it,
+    /// k-th oldest across the class queues) and max-wait (the oldest
+    /// queued member's patience); the dispatch fires once an alive shard
+    /// is also free, and later arrivals keep topping the batch up to
+    /// `max_batch` while it waits for a shard.  Ties between a retire
+    /// and a dispatch resolve retire-first, which guarantees the chosen
+    /// dispatch shard is never still holding a batch.
     fn advance(
         e: &mut SimEntry,
         max_batch: usize,
@@ -1591,69 +2351,238 @@ impl SimGateway {
         outcomes: &mut [SimOutcome],
     ) {
         loop {
-            if e.queue.is_empty() {
-                return;
-            }
-            // Earliest-available live shard, ties to the lowest index.
-            let (mut si, mut t_shard) = (0usize, f64::INFINITY);
-            for (i, s) in e.shards[..e.live].iter().enumerate() {
-                if s.busy_until < t_shard {
-                    t_shard = s.busy_until;
-                    si = i;
+            // Earliest due completion, ties to the lowest shard index.
+            let mut retire: Option<(f64, usize)> = None;
+            for (i, s) in e.shards.iter().enumerate() {
+                if let Some(fl) = &s.in_flight {
+                    if retire.map_or(true, |(d, _)| fl.done_s < d) {
+                        retire = Some((fl.done_s, i));
+                    }
                 }
             }
-            let t_wait = e.queue.front().unwrap().arrival_s + max_wait;
-            let close_at = match e.queue.get(max_batch - 1) {
-                Some(filler) => t_wait.min(filler.arrival_s),
-                None => t_wait,
-            };
-            let fire = t_shard.max(close_at);
-            if fire > now {
-                return;
-            }
-            let b = e.queue.len().min(max_batch);
-            // Move the tensors out of the queue (no per-request clone on
-            // the simulation hot path); keep the metadata alongside.
-            let mut xs = Vec::with_capacity(b);
-            let mut metas = Vec::with_capacity(b);
-            for q in e.queue.drain(..b) {
-                xs.push(q.x);
-                metas.push((q.arrival_s, q.deadline_abs, q.outcome));
-            }
-            // One backend call per batch, with the executor's shared
-            // per-request failure isolation (a poisoned input fails
-            // alone; short batches / empty logits are explicit errors).
-            let results = super::serve::run_batch(e.backend.as_mut(), &xs);
-            let done = fire + b as f64 * e.latency_s;
-            let shard = &mut e.shards[si];
-            shard.busy_until = done;
-            shard.dispatched += b;
-            shard.stats.batches += 1;
-            shard.stats.backend_calls += 1;
-            shard.stats.max_batch_seen = shard.stats.max_batch_seen.max(b);
-            shard.stats.served += b;
-            for ((arrival_s, deadline_abs, outcome_idx), res) in
-                metas.into_iter().zip(results)
-            {
-                e.qstats.total_wait_s += fire - arrival_s;
-                let o = &mut outcomes[outcome_idx];
-                o.batch_size = b;
-                o.shard = si;
-                o.service_s = done - arrival_s;
-                if done > deadline_abs {
-                    o.deadline_miss = true;
-                    e.qstats.deadline_misses += 1;
+            // Next dispatch, if there is queued work and an alive shard
+            // to take it (earliest-available, ties to the lowest index).
+            let mut fire: Option<(f64, usize)> = None;
+            if e.live > 0 {
+                if let Some(oldest) = e.oldest_arrival() {
+                    let (mut si, mut t_shard) = (0usize, f64::INFINITY);
+                    for (i, s) in e.shards.iter().enumerate() {
+                        if s.alive && s.busy_until < t_shard {
+                            t_shard = s.busy_until;
+                            si = i;
+                        }
+                    }
+                    let t_wait = oldest + max_wait;
+                    let close_at = match e.kth_arrival(max_batch - 1) {
+                        Some(filler) => t_wait.min(filler),
+                        None => t_wait,
+                    };
+                    fire = Some((t_shard.max(close_at), si));
                 }
-                match res {
-                    Ok(logits) => {
-                        o.ok = true;
-                        o.predicted = Some(argmax(&logits));
+            }
+            match (retire, fire) {
+                (Some((d, i)), f) if f.map_or(true, |(t, _)| d <= t) => {
+                    if d > now {
+                        return;
                     }
-                    Err(err) => {
-                        o.ok = false;
-                        o.error = Some(err);
-                        shard.stats.failed += 1;
+                    Self::retire(e, i, outcomes);
+                }
+                (_, Some((t, si))) => {
+                    if t > now {
+                        return;
                     }
+                    Self::dispatch(e, si, t, max_batch);
+                }
+                (None, None) => return,
+            }
+        }
+    }
+
+    /// Close a batch at `fire` on shard `si`: weighted-fair selection of
+    /// up to `max_batch` members across the class queues, then mark the
+    /// shard busy until the batch's completion time.  Execution is
+    /// deferred to [`SimGateway::retire`].
+    fn dispatch(e: &mut SimEntry, si: usize, fire: f64, max_batch: usize) {
+        debug_assert!(e.shards[si].alive && e.shards[si].in_flight.is_none());
+        let b = e.queued().min(max_batch);
+        let mut members = Vec::with_capacity(b);
+        for _ in 0..b {
+            members.push(e.wfq_pop().expect("dispatch sized to the backlog"));
+        }
+        let done = fire + b as f64 * e.latency_s;
+        let shard = &mut e.shards[si];
+        shard.busy_until = done;
+        shard.in_flight = Some(InFlight { fire_s: fire, done_s: done, members });
+    }
+
+    /// Complete the in-flight batch on shard `si`: run the backend (one
+    /// call per batch, with the executor's shared per-request failure
+    /// isolation) and write the members' outcomes.  All completion-side
+    /// counters — `dispatched`, batches, backend calls, served, waits —
+    /// are charged here, so a batch lost to a fault between dispatch and
+    /// completion charges nothing.
+    fn retire(e: &mut SimEntry, si: usize, outcomes: &mut [SimOutcome]) {
+        let fl = e.shards[si].in_flight.take().expect("retire without an in-flight batch");
+        let b = fl.members.len();
+        // Move the tensors out of the batch (no per-request clone on the
+        // simulation hot path); keep the metadata alongside.
+        let mut xs = Vec::with_capacity(b);
+        let mut metas = Vec::with_capacity(b);
+        for q in fl.members {
+            xs.push(q.x);
+            metas.push((q.arrival_s, q.deadline_abs, q.outcome, q.class));
+        }
+        let results = super::serve::run_batch(e.backend.as_mut(), &xs);
+        let shard = &mut e.shards[si];
+        shard.dispatched += b;
+        shard.stats.batches += 1;
+        shard.stats.backend_calls += 1;
+        shard.stats.max_batch_seen = shard.stats.max_batch_seen.max(b);
+        shard.stats.served += b;
+        for ((arrival_s, deadline_abs, outcome_idx, class), res) in
+            metas.into_iter().zip(results)
+        {
+            e.qstats.total_wait_s += fl.fire_s - arrival_s;
+            let o = &mut outcomes[outcome_idx];
+            o.batch_size = b;
+            o.shard = si;
+            o.service_s = fl.done_s - arrival_s;
+            if fl.done_s > deadline_abs {
+                o.deadline_miss = true;
+                e.qstats.deadline_misses += 1;
+                e.cstats[class.index()].deadline_misses += 1;
+            }
+            match res {
+                Ok(logits) => {
+                    o.ok = true;
+                    o.predicted = Some(argmax(&logits));
+                    e.cstats[class.index()].served += 1;
+                }
+                Err(err) => {
+                    o.ok = false;
+                    o.error = Some(err);
+                    shard.stats.failed += 1;
+                    e.cstats[class.index()].failed += 1;
+                }
+            }
+        }
+    }
+
+    /// Kill shard `si` of entry `e`: the shard stops taking dispatches
+    /// and its in-flight batch (if any) is torn up — the oldest members
+    /// go back to the front of their class queues while the combined
+    /// backlog stays under `queue_cap`, the rest are rejected with
+    /// [`RejectReason::ShardLost`].  Returns `(lost, requeued)`.
+    fn kill_shard(
+        e: &mut SimEntry,
+        si: usize,
+        queue_cap: usize,
+        outcomes: &mut [SimOutcome],
+    ) -> (usize, usize) {
+        if !e.shards[si].alive {
+            return (0, 0);
+        }
+        e.shards[si].alive = false;
+        e.live -= 1;
+        let fl = match e.shards[si].in_flight.take() {
+            Some(fl) => fl,
+            None => return (0, 0),
+        };
+        let backlog = e.queued();
+        let keep = fl.members.len().min(queue_cap.saturating_sub(backlog));
+        let mut members = fl.members;
+        let (mut lost, mut requeued) = (0usize, 0usize);
+        for q in members.drain(keep..) {
+            let o = &mut outcomes[q.outcome];
+            o.admitted = false;
+            o.reject = Some(RejectReason::ShardLost);
+            o.shard = si;
+            e.qstats.rejected_shard_lost += 1;
+            e.cstats[q.class.index()].rejected_shard_lost += 1;
+            lost += 1;
+        }
+        // The kept members were dequeued from their class queues' fronts
+        // (so each is older than everything still queued in its class);
+        // pushing them back front-first in reverse order restores every
+        // class queue's arrival order exactly.
+        for q in members.into_iter().rev() {
+            outcomes[q.outcome].requeues += 1;
+            e.qstats.requeued += 1;
+            e.cstats[q.class.index()].requeued += 1;
+            e.queues[q.class.index()].push_front(q);
+            requeued += 1;
+        }
+        (lost, requeued)
+    }
+
+    /// Revive a killed shard at time `t` (no-op on a live or
+    /// never-created slot).  The slot keeps its lifetime stats.
+    fn revive_shard(e: &mut SimEntry, si: usize, t: f64) {
+        if let Some(s) = e.shards.get_mut(si) {
+            if !s.alive {
+                s.alive = true;
+                s.busy_until = t;
+                e.live += 1;
+            }
+        }
+    }
+
+    /// Apply every scheduled fault due by `now`, in time order.  Each
+    /// affected entry is first advanced to the fault's own time, so the
+    /// fault sees exactly the in-flight state of that instant; a
+    /// device-wide event expands to one application per shard of every
+    /// entry on that device.  Applications append to the fault log.
+    fn apply_faults(&mut self, now: f64) {
+        let max_batch = self.cfg.max_batch.max(1);
+        let max_wait = self.cfg.batch_max_wait_s;
+        while self.fault_cursor < self.fault_plan.events.len()
+            && self.fault_plan.events[self.fault_cursor].t_s <= now
+        {
+            let ev = self.fault_plan.events[self.fault_cursor].clone();
+            self.fault_cursor += 1;
+            for idx in 0..self.entries.len() {
+                let hit = if ev.device.is_empty() {
+                    self.entries[idx].name == ev.design
+                } else {
+                    self.entries[idx].device_name == ev.device
+                };
+                if !hit {
+                    continue;
+                }
+                Self::advance(
+                    &mut self.entries[idx],
+                    max_batch,
+                    max_wait,
+                    ev.t_s,
+                    &mut self.outcomes,
+                );
+                let shard_count = self.entries[idx].shards.len();
+                let targets: Vec<usize> = if ev.device.is_empty() {
+                    if ev.shard < shard_count { vec![ev.shard] } else { Vec::new() }
+                } else {
+                    (0..shard_count).collect()
+                };
+                for si in targets {
+                    let (lost, requeued) = match ev.action {
+                        FaultAction::Kill => Self::kill_shard(
+                            &mut self.entries[idx],
+                            si,
+                            self.cfg.queue_cap,
+                            &mut self.outcomes,
+                        ),
+                        FaultAction::Recover => {
+                            Self::revive_shard(&mut self.entries[idx], si, ev.t_s);
+                            (0, 0)
+                        }
+                    };
+                    self.fault_log.push(FaultRecord {
+                        t_s: ev.t_s,
+                        design: self.entries[idx].name.clone(),
+                        shard: si,
+                        action: ev.action.as_str().to_string(),
+                        lost,
+                        requeued,
+                    });
                 }
             }
         }
@@ -1668,19 +2597,21 @@ impl SimGateway {
             return;
         }
         let e = &mut self.entries[idx];
-        let depth = e.queue.len();
-        if depth >= auto.up_depth.max(1) * e.live && e.live < auto.max_shards {
+        let depth = e.queued();
+        if depth > 0 && depth >= auto.up_depth.max(1) * e.live && e.live < auto.max_shards {
             if e.shard_resources.scaled(e.live + 1).check_fits(&e.device).is_err() {
                 return; // one more shard would not fit the device
             }
-            if e.live == e.shards.len() {
-                e.shards.push(SimShard {
-                    busy_until: t,
-                    stats: ServerStats::default(),
-                    dispatched: 0,
-                });
-            } else {
-                e.shards[e.live].busy_until = t;
+            // Revive the lowest-index killed slot if there is one (this
+            // is the recovery path after fault injection — with a dead
+            // fleet, `depth >= up_depth × 0` holds on the first backlogged
+            // arrival); otherwise grow the fleet.
+            match e.shards.iter().position(|s| !s.alive) {
+                Some(si) => {
+                    e.shards[si].alive = true;
+                    e.shards[si].busy_until = t;
+                }
+                None => e.shards.push(SimShard { busy_until: t, ..SimShard::idle() }),
             }
             e.live += 1;
             self.events.push(AutoscaleEvent {
@@ -1691,29 +2622,56 @@ impl SimGateway {
                 queue_depth: depth,
             });
         } else if depth == 0 && e.live > auto.min_shards.max(1) {
-            let idle = e.shards[..e.live].iter().filter(|s| s.busy_until <= t).count();
-            if idle >= auto.down_idle.max(1) && e.shards[e.live - 1].busy_until <= t {
-                e.live -= 1;
-                self.events.push(AutoscaleEvent {
-                    t_s: t,
-                    design: e.name.clone(),
-                    from_shards: e.live + 1,
-                    to_shards: e.live,
-                    queue_depth: depth,
-                });
+            let idle =
+                e.shards.iter().filter(|s| s.alive && s.busy_until <= t).count();
+            // The victim is the highest-index alive shard — and only if
+            // it is itself idle (never tear up an in-flight batch for a
+            // scale-down; that is the fault plan's job).
+            let victim = e.shards.iter().rposition(|s| s.alive);
+            if let Some(vi) = victim {
+                if idle >= auto.down_idle.max(1)
+                    && e.shards[vi].busy_until <= t
+                    && e.shards[vi].in_flight.is_none()
+                {
+                    e.shards[vi].alive = false;
+                    e.live -= 1;
+                    self.events.push(AutoscaleEvent {
+                        t_s: t,
+                        design: e.name.clone(),
+                        from_shards: e.live + 1,
+                        to_shards: e.live,
+                        queue_depth: depth,
+                    });
+                }
             }
         }
     }
 
-    /// Run simulated time forward past the last arrival until every
-    /// queue drains, then return the per-request outcomes in submission
-    /// order.  Idempotent; [`SimGateway::shutdown`] calls it if needed.
+    /// Run simulated time forward past the last arrival — firing any
+    /// still-scheduled faults at their own times — until every queue
+    /// drains, then return the per-request outcomes in submission order.
+    /// A design whose whole fleet ends the run dead (killed with no
+    /// remaining recovery) strands its queue: those stragglers are
+    /// rejected with [`RejectReason::ShardLost`].  Idempotent;
+    /// [`SimGateway::shutdown`] calls it if needed.
     pub fn finish(&mut self) -> Vec<SimOutcome> {
         self.finished = true;
+        self.apply_faults(f64::INFINITY);
         let max_batch = self.cfg.max_batch.max(1);
         let max_wait = self.cfg.batch_max_wait_s;
         for e in &mut self.entries {
             Self::advance(e, max_batch, max_wait, f64::INFINITY, &mut self.outcomes);
+            if e.live == 0 {
+                for c in 0..3 {
+                    while let Some(q) = e.queues[c].pop_front() {
+                        let o = &mut self.outcomes[q.outcome];
+                        o.admitted = false;
+                        o.reject = Some(RejectReason::ShardLost);
+                        e.qstats.rejected_shard_lost += 1;
+                        e.cstats[c].rejected_shard_lost += 1;
+                    }
+                }
+            }
         }
         std::mem::take(&mut self.outcomes)
     }
@@ -1725,8 +2683,13 @@ impl SimGateway {
         if !self.finished {
             self.finish();
         }
-        let SimGateway { router, entries, events, .. } = self;
-        let mut out = GatewayStats { autoscale_events: events, ..GatewayStats::default() };
+        let SimGateway { router, entries, events, fault_log, .. } = self;
+        let mut out = GatewayStats {
+            autoscale_events: events,
+            faults: fault_log,
+            classes: SloClass::all().map(ClassStats::for_class).into_iter().collect(),
+            ..GatewayStats::default()
+        };
         for (idx, e) in entries.into_iter().enumerate() {
             let (_, priced_energy) = router.price(idx);
             let mut ds = DesignStats {
@@ -1768,6 +2731,9 @@ impl SimGateway {
             out.offered += e.qstats.offered;
             out.admitted += e.qstats.admitted;
             out.rejected += e.qstats.rejected();
+            for (c, cs) in e.cstats.into_iter().enumerate() {
+                out.classes[c].absorb(&cs);
+            }
             out.queues.push(e.qstats);
             out.designs.push(ds);
         }
@@ -2026,5 +2992,76 @@ mod tests {
         assert_eq!(stats.slo_misses, 0);
         let shard_served: usize = stats.shards.iter().map(|s| s.stats.served).sum();
         assert_eq!(shard_served, stats.served);
+    }
+
+    #[test]
+    fn fault_plan_is_validated_before_the_first_offer() {
+        let mut sim =
+            SimGateway::new(vec![spec("tiny-p8", 8, 1)], &GatewayConfig::default()).unwrap();
+        let plan = |ev: FaultEvent| FaultPlan { events: vec![ev] };
+        // Neither a design nor a device target.
+        assert!(sim.set_fault_plan(plan(FaultEvent { t_s: 0.1, ..FaultEvent::default() })).is_err());
+        // Both targets at once.
+        assert!(sim
+            .set_fault_plan(plan(FaultEvent {
+                t_s: 0.1,
+                design: "tiny-p8".to_string(),
+                device: "pynq".to_string(),
+                ..FaultEvent::default()
+            }))
+            .is_err());
+        // Unknown design / device; non-finite time.
+        assert!(sim.set_fault_plan(plan(FaultEvent::kill(0.1, "nope", 0))).is_err());
+        assert!(sim.set_fault_plan(plan(FaultEvent::kill_device(0.1, "nope"))).is_err());
+        assert!(sim.set_fault_plan(plan(FaultEvent::kill(f64::NAN, "tiny-p8", 0))).is_err());
+        // A well-formed plan installs; re-installing after traffic fails.
+        assert!(sim.set_fault_plan(plan(FaultEvent::kill(0.1, "tiny-p8", 0))).is_ok());
+        sim.offer(SimRequest {
+            dataset: "tiny".to_string(),
+            x: Tensor3::from_vec(1, 3, 3, vec![0.8; 9]),
+            slo: Slo::latency(10.0),
+            arrival_s: 0.0,
+        })
+        .unwrap();
+        assert!(sim.set_fault_plan(FaultPlan::default()).is_err());
+    }
+
+    /// A kill with no recovery and no autoscaler: every offered request
+    /// either completes or is rejected as shard-lost — never silently
+    /// dropped, never double-counted.
+    #[test]
+    fn sim_shard_loss_conserves_every_request() {
+        let cfg = GatewayConfig {
+            autoscale: AutoscaleConfig { enabled: false, ..AutoscaleConfig::default() },
+            ..GatewayConfig::default()
+        };
+        let mut sim = SimGateway::new(vec![spec("tiny-p8", 8, 1)], &cfg).unwrap();
+        sim.set_fault_plan(FaultPlan { events: vec![FaultEvent::kill(2e-4, "tiny-p8", 0)] })
+            .unwrap();
+        for i in 0..6 {
+            sim.offer(SimRequest {
+                dataset: "tiny".to_string(),
+                x: Tensor3::from_vec(1, 3, 3, vec![0.8; 9]),
+                slo: Slo::latency(10.0),
+                arrival_s: i as f64 * 1e-4,
+            })
+            .unwrap();
+        }
+        let outcomes = sim.finish();
+        assert_eq!(outcomes.len(), 6);
+        for o in &outcomes {
+            assert_eq!(o.admitted, o.reject.is_none(), "completed XOR rejected");
+        }
+        let stats = sim.shutdown();
+        assert_eq!(stats.offered, 6);
+        assert_eq!(stats.offered, stats.served + stats.rejected);
+        let q = &stats.queues[0];
+        assert_eq!(q.admitted, stats.served + q.rejected_shard_lost);
+        assert!(q.rejected_shard_lost > 0, "the dead fleet must strand work");
+        assert_eq!(stats.routed, stats.served, "lost batches must not count as routed");
+        assert_eq!(stats.faults.len(), 1);
+        assert_eq!(stats.faults[0].action, "kill");
+        let by_class: usize = stats.classes.iter().map(|c| c.offered).sum();
+        assert_eq!(by_class, stats.offered);
     }
 }

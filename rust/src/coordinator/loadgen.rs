@@ -10,7 +10,7 @@
 //! [`SimGateway`] on a simulated clock (arrival timestamps = cumulative
 //! delays), where admission control, dynamic batching and shard
 //! autoscaling all run deterministically — the `repro loadgen` default.
-//! Four scenario presets:
+//! Six scenario presets plus replayable traces:
 //!
 //! * [`Scenario::Steady`] — constant inter-arrival gap; the baseline.
 //! * [`Scenario::Bursty`] — bursts of back-to-back arrivals separated by
@@ -20,6 +20,18 @@
 //! * [`Scenario::Mixed`] — strict round-robin over every dataset pool
 //!   (MNIST + SVHN + CIFAR-10 interleaved); exercises per-request routing
 //!   across design families — the paper's crossover as live traffic.
+//! * [`Scenario::Diurnal`] — the gap follows one seeded sine "day"
+//!   (peak/trough ≈ 19×); exercises the autoscaler through a slow swing.
+//! * [`Scenario::FlashCrowd`] — steady jittered pacing with a 16× arrival
+//!   spike over the middle sixth of the run; exercises admission control
+//!   and weighted-fair dequeue under a sudden crowd.
+//! * [`Scenario::Trace`] — replays an explicit [`ArrivalTrace`] (absolute
+//!   timestamps, per-event dataset / SLO class / deadline), round-tripped
+//!   through `util::wire` so a recorded workload re-runs bit for bit.
+//!
+//! Any non-trace preset can also carry a [`ClassMix`] that assigns each
+//! arrival an SLO class ([`super::gateway::SloClass`]) by seeded weighted
+//! draw — the multi-tenant knob of the chaos/starvation experiments.
 //!
 //! The module also provides the **synthetic model substrate** the `repro
 //! loadgen` subcommand and the serving benches run on: seeded random
@@ -53,12 +65,12 @@ use crate::util::stats::{percentile, Summary};
 use crate::util::wire::{De, FromJson, Obj, ToJson, WireError};
 
 use super::gateway::{
-    DesignKind, ExecutorSpec, Gateway, GatewayConfig, GatewayStats, RejectReason, Request,
-    SimGateway, SimRequest, Slo, Ticket,
+    DesignKind, ExecutorSpec, FaultPlan, Gateway, GatewayConfig, GatewayStats, RejectReason,
+    Request, SimGateway, SimRequest, Slo, SloClass, Ticket,
 };
 
-/// Workload shape preset.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Workload shape: a seeded preset, or an explicit replayable trace.
+#[derive(Debug, Clone, PartialEq)]
 pub enum Scenario {
     /// Constant inter-arrival gap.
     Steady,
@@ -68,47 +80,274 @@ pub enum Scenario {
     Ramp,
     /// Steady pacing, strict round-robin over every dataset pool.
     Mixed,
+    /// One seeded sine "day" of load: the gap swells and shrinks
+    /// smoothly (×1.9 at the trough of demand, ×0.1 at the peak) with
+    /// ±25% per-arrival jitter.
+    Diurnal,
+    /// Steady jittered pacing, except the middle sixth of the run
+    /// arrives 16× faster — a sudden crowd on an otherwise calm day.
+    FlashCrowd,
+    /// Replay an explicit [`ArrivalTrace`] instead of generating one.
+    Trace(ArrivalTrace),
 }
 
 impl Scenario {
-    /// Parse a scenario name (case-insensitive).
+    /// Parse a preset name (case-insensitive). Traces are not nameable —
+    /// they carry their events, so they only arrive via the wire form.
     pub fn parse(s: &str) -> Option<Scenario> {
         match s.to_ascii_lowercase().as_str() {
             "steady" => Some(Scenario::Steady),
             "bursty" => Some(Scenario::Bursty),
             "ramp" => Some(Scenario::Ramp),
             "mixed" => Some(Scenario::Mixed),
+            "diurnal" => Some(Scenario::Diurnal),
+            "flash-crowd" | "flash_crowd" | "flashcrowd" => Some(Scenario::FlashCrowd),
             _ => None,
         }
     }
 
-    /// Every preset, for `--help` text and sweeps.
-    pub fn all() -> [Scenario; 4] {
-        [Scenario::Steady, Scenario::Bursty, Scenario::Ramp, Scenario::Mixed]
+    /// Every seeded preset, for `--help` text and sweeps ([`Trace`]
+    /// excluded — it has no generator to sweep).
+    ///
+    /// [`Trace`]: Scenario::Trace
+    pub fn all() -> [Scenario; 6] {
+        [
+            Scenario::Steady,
+            Scenario::Bursty,
+            Scenario::Ramp,
+            Scenario::Mixed,
+            Scenario::Diurnal,
+            Scenario::FlashCrowd,
+        ]
     }
 
-    /// Preset name.
+    /// Scenario name.
     pub fn name(&self) -> &'static str {
         match self {
             Scenario::Steady => "steady",
             Scenario::Bursty => "bursty",
             Scenario::Ramp => "ramp",
             Scenario::Mixed => "mixed",
+            Scenario::Diurnal => "diurnal",
+            Scenario::FlashCrowd => "flash-crowd",
+            Scenario::Trace(_) => "trace",
         }
     }
 }
 
 impl ToJson for Scenario {
     fn to_json(&self) -> Json {
-        Json::Str(self.name().to_string())
+        match self {
+            // Traces serialize as an object so the events travel with
+            // the name; presets stay plain strings (back-compatible).
+            Scenario::Trace(t) => Obj::new().field("trace", t).build(),
+            _ => Json::Str(self.name().to_string()),
+        }
     }
 }
 
 impl FromJson for Scenario {
     fn from_json(v: &Json) -> Result<Scenario, WireError> {
-        let s = String::from_json(v)?;
-        Scenario::parse(&s).ok_or_else(|| {
-            WireError::new("", format!("unknown scenario {s:?} (steady|bursty|ramp|mixed)"))
+        if let Json::Str(s) = v {
+            if s.eq_ignore_ascii_case("trace") {
+                return Err(WireError::new(
+                    "",
+                    "scenario \"trace\" needs its events: \
+                     use {\"trace\": {\"name\": \"...\", \"events\": [...]}}",
+                ));
+            }
+            return Scenario::parse(s).ok_or_else(|| {
+                WireError::new(
+                    "",
+                    format!(
+                        "unknown scenario {s:?} \
+                         (steady|bursty|ramp|mixed|diurnal|flash-crowd)"
+                    ),
+                )
+            });
+        }
+        let d = De::root(v);
+        Ok(Scenario::Trace(d.req("trace")?))
+    }
+}
+
+/// One arrival of an [`ArrivalTrace`]: an absolute simulated timestamp
+/// plus the request shape at that instant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Absolute arrival time (simulated seconds, non-decreasing across
+    /// the trace).
+    pub t_s: f64,
+    /// Dataset pool to draw from. Empty = the deployment's first pool.
+    pub dataset: String,
+    /// Service class of the request.
+    pub class: SloClass,
+    /// Explicit completion deadline (seconds after arrival); `None`
+    /// falls back to the class default at admission.
+    pub deadline_s: Option<f64>,
+}
+
+impl ToJson for TraceEvent {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("t_s", &self.t_s)
+            .field("dataset", &self.dataset)
+            .field("class", &self.class)
+            .field("deadline_s", &self.deadline_s)
+            .build()
+    }
+}
+
+impl FromJson for TraceEvent {
+    fn from_json(v: &Json) -> Result<TraceEvent, WireError> {
+        let d = De::root(v);
+        Ok(TraceEvent {
+            t_s: d.req("t_s")?,
+            dataset: d.opt_or("dataset", String::new())?,
+            class: d.opt_or("class", SloClass::BestEffort)?,
+            deadline_s: d.opt_or("deadline_s", None)?,
+        })
+    }
+}
+
+/// A replayable arrival trace: the fully explicit alternative to the
+/// seeded presets.  Replaying the same trace file produces bit-identical
+/// workloads on any machine — no RNG is consulted on the trace path
+/// (image choice cycles the pool deterministically).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalTrace {
+    /// Label carried into reports and logs.
+    pub name: String,
+    /// Arrivals in time order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl ArrivalTrace {
+    /// Check the trace is replayable: finite non-negative timestamps,
+    /// non-decreasing order, positive finite explicit deadlines.
+    pub fn validate(&self) -> Result<()> {
+        let mut prev = 0.0f64;
+        for (i, ev) in self.events.iter().enumerate() {
+            if !ev.t_s.is_finite() || ev.t_s < 0.0 {
+                anyhow::bail!(
+                    "trace {:?}: event {i} has non-finite or negative time {}",
+                    self.name,
+                    ev.t_s
+                );
+            }
+            if ev.t_s < prev {
+                anyhow::bail!(
+                    "trace {:?}: event {i} time {} goes backwards (previous {prev})",
+                    self.name,
+                    ev.t_s
+                );
+            }
+            if let Some(dl) = ev.deadline_s {
+                if !(dl > 0.0) || !dl.is_finite() {
+                    anyhow::bail!(
+                        "trace {:?}: event {i} deadline {dl} must be positive and finite",
+                        self.name
+                    );
+                }
+            }
+            prev = ev.t_s;
+        }
+        Ok(())
+    }
+
+    /// Record a generated workload as a replayable trace (the
+    /// `repro loadgen --emit-trace` path): timestamps are the cumulative
+    /// delays, datasets resolve to pool names, SLOs keep their class and
+    /// explicit deadline.
+    pub fn from_workload(workload: &Workload, pools: &[DatasetPool]) -> ArrivalTrace {
+        let mut t_s = 0.0f64;
+        let events = workload
+            .arrivals
+            .iter()
+            .map(|a| {
+                t_s += a.delay.as_secs_f64();
+                TraceEvent {
+                    t_s,
+                    dataset: pools[a.dataset].name.clone(),
+                    class: a.slo.class,
+                    deadline_s: a.slo.deadline_s,
+                }
+            })
+            .collect();
+        ArrivalTrace { name: workload.scenario.name().to_string(), events }
+    }
+}
+
+impl ToJson for ArrivalTrace {
+    fn to_json(&self) -> Json {
+        Obj::new().field("name", &self.name).field("events", &self.events).build()
+    }
+}
+
+impl FromJson for ArrivalTrace {
+    fn from_json(v: &Json) -> Result<ArrivalTrace, WireError> {
+        let d = De::root(v);
+        Ok(ArrivalTrace {
+            name: d.opt_or("name", "trace".to_string())?,
+            events: d.opt_or("events", Vec::new())?,
+        })
+    }
+}
+
+/// Relative SLO-class weights for seeded per-arrival class assignment.
+///
+/// All-zero (the default) means *inactive*: every arrival keeps the
+/// configured [`LoadgenConfig::slo`] untouched and the generator draws
+/// nothing extra from the RNG — so pre-mix seeds replay bit-identically.
+/// Any positive weight activates one extra seeded draw per arrival.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassMix {
+    /// Relative weight of [`SloClass::Interactive`].
+    pub interactive: f64,
+    /// Relative weight of [`SloClass::Batch`].
+    pub batch: f64,
+    /// Relative weight of [`SloClass::BestEffort`].
+    pub best_effort: f64,
+}
+
+impl ClassMix {
+    /// Whether any weight is positive (the mix participates in
+    /// generation at all).
+    pub fn is_active(&self) -> bool {
+        self.interactive > 0.0 || self.batch > 0.0 || self.best_effort > 0.0
+    }
+
+    /// One weighted class draw.
+    fn draw(&self, rng: &mut Rng) -> SloClass {
+        let total = self.interactive + self.batch + self.best_effort;
+        let x = rng.f64() * total;
+        if x < self.interactive {
+            SloClass::Interactive
+        } else if x < self.interactive + self.batch {
+            SloClass::Batch
+        } else {
+            SloClass::BestEffort
+        }
+    }
+}
+
+impl ToJson for ClassMix {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("interactive", &self.interactive)
+            .field("batch", &self.batch)
+            .field("best_effort", &self.best_effort)
+            .build()
+    }
+}
+
+impl FromJson for ClassMix {
+    fn from_json(v: &Json) -> Result<ClassMix, WireError> {
+        let d = De::root(v);
+        Ok(ClassMix {
+            interactive: d.opt_or("interactive", 0.0)?,
+            batch: d.opt_or("batch", 0.0)?,
+            best_effort: d.opt_or("best_effort", 0.0)?,
         })
     }
 }
@@ -130,10 +369,13 @@ pub struct LoadgenConfig {
     pub requests: usize,
     /// Workload seed (image choice + any scenario randomness).
     pub seed: u64,
-    /// SLO attached to every request.
+    /// SLO attached to every request (the class-mix and trace paths
+    /// override its class and, for traces, its deadline per arrival).
     pub slo: Slo,
     /// Base inter-arrival gap (scenario presets scale around it).
     pub gap: Duration,
+    /// Per-arrival SLO-class assignment weights (inactive by default).
+    pub class_mix: ClassMix,
 }
 
 impl Default for LoadgenConfig {
@@ -144,6 +386,7 @@ impl Default for LoadgenConfig {
             seed: 42,
             slo: Slo::latency(0.05),
             gap: Duration::from_micros(200),
+            class_mix: ClassMix::default(),
         }
     }
 }
@@ -156,6 +399,7 @@ impl ToJson for LoadgenConfig {
             .field("seed", &self.seed)
             .field("slo", &self.slo)
             .field("gap_ns", &(self.gap.as_nanos() as u64))
+            .field("class_mix", &self.class_mix)
             .build()
     }
 }
@@ -170,6 +414,7 @@ impl FromJson for LoadgenConfig {
             seed: d.opt_or("seed", def.seed)?,
             slo: d.opt_or("slo", def.slo)?,
             gap: Duration::from_nanos(d.opt_or("gap_ns", def.gap.as_nanos() as u64)?),
+            class_mix: d.opt_or("class_mix", ClassMix::default())?,
         })
     }
 }
@@ -196,27 +441,34 @@ pub struct Workload {
     pub arrivals: Vec<Arrival>,
 }
 
-/// Generate a deterministic workload over `pools` from `cfg.seed`.
+/// Generate a deterministic workload over `pools` from `cfg.seed`
+/// (presets) or by replaying `cfg.scenario`'s trace verbatim.
 ///
-/// Panics if `pools` is empty or any pool has no images.
+/// Panics if `pools` is empty, any pool has no images, or a trace is
+/// invalid / names a dataset with no pool ([`resolve_spec`] validates
+/// spec-borne traces up front and errors instead).
 pub fn generate(cfg: &LoadgenConfig, pools: &[DatasetPool]) -> Workload {
     assert!(!pools.is_empty(), "loadgen needs at least one dataset pool");
     assert!(
         pools.iter().all(|p| !p.images.is_empty()),
         "every dataset pool needs at least one image"
     );
+    if let Scenario::Trace(trace) = &cfg.scenario {
+        return generate_trace(cfg, trace, pools);
+    }
     let mut rng = Rng::new(cfg.seed);
     let base = cfg.gap;
-    let mut arrivals = Vec::with_capacity(cfg.requests);
-    for i in 0..cfg.requests {
-        let dataset = match cfg.scenario {
+    let n = cfg.requests;
+    let mut arrivals = Vec::with_capacity(n);
+    for i in 0..n {
+        let dataset = match &cfg.scenario {
             // Mixed interleaves strictly; the others draw a pool at
             // random (seeded, so still deterministic).
             Scenario::Mixed => i % pools.len(),
             _ => rng.below(pools.len()),
         };
         let image = rng.below(pools[dataset].images.len());
-        let delay = match cfg.scenario {
+        let delay = match &cfg.scenario {
             Scenario::Steady | Scenario::Mixed => base,
             Scenario::Bursty => {
                 // Bursts of 8 back-to-back, then one long gap.
@@ -228,13 +480,73 @@ pub fn generate(cfg: &LoadgenConfig, pools: &[DatasetPool]) -> Workload {
             }
             Scenario::Ramp => {
                 // Gap ramps 2×base -> 0 over the run.
-                let remaining = (cfg.requests - i) as f64 / cfg.requests.max(1) as f64;
+                let remaining = (n - i) as f64 / n.max(1) as f64;
                 Duration::from_secs_f64(base.as_secs_f64() * 2.0 * remaining)
             }
+            Scenario::Diurnal => {
+                // One sine day over the run: gap swings ×[0.1, 1.9]
+                // around base, with ±25% per-arrival jitter.
+                let phase = i as f64 / n.max(1) as f64;
+                let wave = 1.0 + 0.9 * (2.0 * std::f64::consts::PI * phase).sin();
+                let jitter = 0.75 + 0.5 * rng.f64();
+                Duration::from_secs_f64(base.as_secs_f64() * wave * jitter)
+            }
+            Scenario::FlashCrowd => {
+                // Jittered steady pacing; the crowd window (middle
+                // ~sixth of the run) arrives 16× faster.
+                let jitter = 0.75 + 0.5 * rng.f64();
+                let phase = i as f64 / n.max(1) as f64;
+                let gap_s = base.as_secs_f64() * jitter;
+                let crowded = (0.45..0.60).contains(&phase);
+                Duration::from_secs_f64(if crowded { gap_s / 16.0 } else { gap_s })
+            }
+            Scenario::Trace(_) => unreachable!("trace workloads replay above"),
         };
-        arrivals.push(Arrival { dataset, image, delay, slo: cfg.slo });
+        // The class draw comes last so inactive mixes (the default)
+        // leave every pre-mix seed's stream untouched.
+        let slo = if cfg.class_mix.is_active() {
+            cfg.slo.for_class(cfg.class_mix.draw(&mut rng))
+        } else {
+            cfg.slo
+        };
+        arrivals.push(Arrival { dataset, image, delay, slo });
     }
-    Workload { scenario: cfg.scenario, arrivals }
+    Workload { scenario: cfg.scenario.clone(), arrivals }
+}
+
+/// Replay a validated trace as a workload: absolute times become
+/// inter-arrival delays, dataset names resolve to pool indices, and
+/// image choice cycles each pool (no RNG on this path).
+fn generate_trace(cfg: &LoadgenConfig, trace: &ArrivalTrace, pools: &[DatasetPool]) -> Workload {
+    if let Err(e) = trace.validate() {
+        panic!("{e}");
+    }
+    let mut prev = 0.0f64;
+    let mut arrivals = Vec::with_capacity(trace.events.len());
+    for (i, ev) in trace.events.iter().enumerate() {
+        let dataset = if ev.dataset.is_empty() {
+            0
+        } else {
+            pools.iter().position(|p| p.name == ev.dataset).unwrap_or_else(|| {
+                panic!(
+                    "trace {:?}: event {i} names dataset {:?} with no pool",
+                    trace.name, ev.dataset
+                )
+            })
+        };
+        let mut slo = cfg.slo.for_class(ev.class);
+        if ev.deadline_s.is_some() {
+            slo.deadline_s = ev.deadline_s;
+        }
+        arrivals.push(Arrival {
+            dataset,
+            image: i % pools[dataset].images.len(),
+            delay: Duration::from_secs_f64(ev.t_s - prev),
+            slo,
+        });
+        prev = ev.t_s;
+    }
+    Workload { scenario: cfg.scenario.clone(), arrivals }
 }
 
 /// Report of one driven workload.
@@ -261,11 +573,17 @@ pub struct LoadgenReport {
     pub rejected_full: usize,
     /// Rejections because the deadline was unmeetable at arrival.
     pub rejected_deadline: usize,
-    /// `(rejected_full + rejected_deadline) / offered` (0 when nothing
-    /// was offered).
+    /// Post-admission rejections because the request was lost with a
+    /// killed shard (chaos runs only; see
+    /// [`super::gateway::RejectReason::ShardLost`]).
+    pub rejected_shard_lost: usize,
+    /// `rejected() / offered` (0 when nothing was offered).
     pub rejection_rate: f64,
     /// Admitted requests that completed after their deadline.
     pub deadline_misses: usize,
+    /// Times a request went back to the queue because its shard was
+    /// killed mid-flight (chaos runs only).
+    pub requeued: usize,
     /// Responses received.
     pub served: usize,
     /// Failed responses.
@@ -293,12 +611,74 @@ pub struct LoadgenReport {
     pub mean_routed_latency_ms: f64,
     /// Total routed energy (J) over admitted requests.
     pub routed_energy_j: f64,
+    /// Per-SLO-class breakdown (one entry per class, in
+    /// [`SloClass::all`] order; empty on the wall-clock [`drive`] path,
+    /// which has no per-class accounting).
+    pub classes: Vec<ClassReport>,
 }
 
 impl LoadgenReport {
-    /// Total rejections, either reason.
+    /// Total rejections, any reason.  Agrees with the gateway's
+    /// [`super::gateway::QueueStats::rejected`] totals on the simulated
+    /// path, chaos or not — pinned by `tests/conservation.rs`.
     pub fn rejected(&self) -> usize {
-        self.rejected_full + self.rejected_deadline
+        self.rejected_full + self.rejected_deadline + self.rejected_shard_lost
+    }
+}
+
+/// Per-SLO-class slice of a [`LoadgenReport`] (simulated path).
+///
+/// Conservation holds per class exactly:
+/// `offered == served + failed + rejected`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassReport {
+    /// The service class.
+    pub class: SloClass,
+    /// Requests of this class offered to the gateway.
+    pub offered: usize,
+    /// Completions that returned OK.
+    pub served: usize,
+    /// Completions that returned an error.
+    pub failed: usize,
+    /// Rejections, any reason (admission or shard loss).
+    pub rejected: usize,
+    /// Completions past their effective deadline.
+    pub deadline_misses: usize,
+    /// Median arrival→completion time (ms) over this class's
+    /// completions.
+    pub p50_service_ms: f64,
+    /// 99th-percentile arrival→completion time (ms).
+    pub p99_service_ms: f64,
+}
+
+impl ToJson for ClassReport {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("class", &self.class)
+            .field("offered", &self.offered)
+            .field("served", &self.served)
+            .field("failed", &self.failed)
+            .field("rejected", &self.rejected)
+            .field("deadline_misses", &self.deadline_misses)
+            .field("p50_service_ms", &self.p50_service_ms)
+            .field("p99_service_ms", &self.p99_service_ms)
+            .build()
+    }
+}
+
+impl FromJson for ClassReport {
+    fn from_json(v: &Json) -> Result<ClassReport, WireError> {
+        let d = De::root(v);
+        Ok(ClassReport {
+            class: d.req("class")?,
+            offered: d.req("offered")?,
+            served: d.req("served")?,
+            failed: d.req("failed")?,
+            rejected: d.req("rejected")?,
+            deadline_misses: d.req("deadline_misses")?,
+            p50_service_ms: d.req("p50_service_ms")?,
+            p99_service_ms: d.req("p99_service_ms")?,
+        })
     }
 }
 
@@ -319,8 +699,10 @@ impl ToJson for LoadgenReport {
             .field("admitted", &self.admitted)
             .field("rejected_full", &self.rejected_full)
             .field("rejected_deadline", &self.rejected_deadline)
+            .field("rejected_shard_lost", &self.rejected_shard_lost)
             .field("rejection_rate", &self.rejection_rate)
             .field("deadline_misses", &self.deadline_misses)
+            .field("requeued", &self.requeued)
             .field("served", &self.served)
             .field("failed", &self.failed)
             .field("slo_misses", &self.slo_misses)
@@ -332,6 +714,7 @@ impl ToJson for LoadgenReport {
             .field("p99_service_ms", &self.p99_service_ms)
             .field("mean_routed_latency_ms", &self.mean_routed_latency_ms)
             .field("routed_energy_j", &self.routed_energy_j)
+            .field("classes", &self.classes)
             .build()
     }
 }
@@ -355,8 +738,10 @@ impl FromJson for LoadgenReport {
             admitted: d.opt_or("admitted", served)?,
             rejected_full: d.opt_or("rejected_full", 0)?,
             rejected_deadline: d.opt_or("rejected_deadline", 0)?,
+            rejected_shard_lost: d.opt_or("rejected_shard_lost", 0)?,
             rejection_rate: d.opt_or("rejection_rate", 0.0)?,
             deadline_misses: d.opt_or("deadline_misses", 0)?,
+            requeued: d.opt_or("requeued", 0)?,
             served,
             failed: d.req("failed")?,
             slo_misses: d.req("slo_misses")?,
@@ -368,6 +753,7 @@ impl FromJson for LoadgenReport {
             p99_service_ms: d.req("p99_service_ms")?,
             mean_routed_latency_ms: d.req("mean_routed_latency_ms")?,
             routed_energy_j: d.req("routed_energy_j")?,
+            classes: d.opt_or("classes", Vec::new())?,
         })
     }
 }
@@ -400,12 +786,34 @@ impl LoadgenReport {
         ));
         if self.rejected() > 0 || self.deadline_misses > 0 {
             s.push_str(&format!(
-                "admission        : {} rejected ({} queue-full, {} deadline) — {:.1}% rejection rate; {} served late\n",
+                "admission        : {} rejected ({} queue-full, {} deadline, {} shard-lost) — {:.1}% rejection rate; {} served late\n",
                 self.rejected(),
                 self.rejected_full,
                 self.rejected_deadline,
+                self.rejected_shard_lost,
                 100.0 * self.rejection_rate,
                 self.deadline_misses,
+            ));
+        }
+        if self.requeued > 0 {
+            s.push_str(&format!(
+                "chaos            : {} requeues off killed shards\n",
+                self.requeued,
+            ));
+        }
+        for c in &self.classes {
+            if c.offered == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                "class            : {:<11} {} offered, {} completed ({} failed), {} rejected, {} late; p99 {:.2} ms\n",
+                c.class.as_str(),
+                c.offered,
+                c.served + c.failed,
+                c.failed,
+                c.rejected,
+                c.deadline_misses,
+                c.p99_service_ms,
             ));
         }
         if self.sim_duration_s > 0.0 {
@@ -473,7 +881,7 @@ pub fn drive(
     }
     let wall = t0.elapsed();
     Ok(LoadgenReport {
-        scenario: workload.scenario,
+        scenario: workload.scenario.clone(),
         decisions,
         // The threaded gateway has no admission control: everything
         // offered is admitted.
@@ -481,8 +889,10 @@ pub fn drive(
         admitted: served,
         rejected_full: 0,
         rejected_deadline: 0,
+        rejected_shard_lost: 0,
         rejection_rate: 0.0,
         deadline_misses: 0,
+        requeued: 0,
         served,
         failed,
         slo_misses,
@@ -494,6 +904,8 @@ pub fn drive(
         p99_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 99.0) },
         mean_routed_latency_ms: routed_latency.mean(),
         routed_energy_j: routed_energy,
+        // The threaded path keeps no per-class accounting.
+        classes: Vec::new(),
     })
 }
 
@@ -541,38 +953,79 @@ pub fn simulate(
     let mut routed_energy = 0.0;
     let (mut served, mut failed, mut slo_misses) = (0usize, 0usize, 0usize);
     let (mut rejected_full, mut rejected_deadline) = (0usize, 0usize);
+    let (mut rejected_shard_lost, mut requeued) = (0usize, 0usize);
     let mut deadline_misses = 0usize;
     let mut sim_end = 0.0f64;
+    // Per-class buckets, indexed by SloClass::index().
+    let mut by_class: [(ClassReport, Vec<f64>); 3] = SloClass::all().map(|class| {
+        (
+            ClassReport {
+                class,
+                offered: 0,
+                served: 0,
+                failed: 0,
+                rejected: 0,
+                deadline_misses: 0,
+                p50_service_ms: 0.0,
+                p99_service_ms: 0.0,
+            },
+            Vec::new(),
+        )
+    });
     for o in &outcomes {
+        let (c, c_service) = &mut by_class[o.class.index()];
+        c.offered += 1;
+        requeued += o.requeues;
         if !o.admitted {
             match o.reject {
                 Some(RejectReason::QueueFull) => rejected_full += 1,
                 Some(RejectReason::DeadlineUnmeetable) => rejected_deadline += 1,
+                Some(RejectReason::ShardLost) => rejected_shard_lost += 1,
                 None => {}
             }
+            c.rejected += o.reject.is_some() as usize;
             continue;
         }
         decisions.push((o.design.clone(), o.slo_miss));
         service.push(o.service_s * 1e3);
+        c_service.push(o.service_s * 1e3);
         routed_latency.add(o.routed_latency_s * 1e3);
         routed_energy += o.routed_energy_j;
         served += 1;
         failed += (!o.ok) as usize;
+        if o.ok {
+            c.served += 1;
+        } else {
+            c.failed += 1;
+        }
         slo_misses += o.slo_miss as usize;
         deadline_misses += o.deadline_miss as usize;
+        c.deadline_misses += o.deadline_miss as usize;
         sim_end = sim_end.max(o.arrival_s + o.service_s);
     }
+    let classes = by_class
+        .into_iter()
+        .map(|(mut c, c_service)| {
+            if !c_service.is_empty() {
+                c.p50_service_ms = percentile(&c_service, 50.0);
+                c.p99_service_ms = percentile(&c_service, 99.0);
+            }
+            c
+        })
+        .collect();
     let offered = outcomes.len();
-    let rejected = rejected_full + rejected_deadline;
+    let rejected = rejected_full + rejected_deadline + rejected_shard_lost;
     Ok(LoadgenReport {
-        scenario: workload.scenario,
+        scenario: workload.scenario.clone(),
         decisions,
         offered,
         admitted: served,
         rejected_full,
         rejected_deadline,
+        rejected_shard_lost,
         rejection_rate: if offered == 0 { 0.0 } else { rejected as f64 / offered as f64 },
         deadline_misses,
+        requeued,
         served,
         failed,
         slo_misses,
@@ -584,16 +1037,16 @@ pub fn simulate(
         p99_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 99.0) },
         mean_routed_latency_ms: routed_latency.mean(),
         routed_energy_j: routed_energy,
+        classes,
     })
 }
 
-/// Resolve a [`DeploymentSpec`], build the discrete-event stack, generate
-/// the spec's workload, simulate it, and aggregate — the one-call form of
-/// the `repro loadgen` path.  Returns the report plus the deterministic
-/// [`GatewayStats`].
+/// Resolve a [`DeploymentSpec`], build the discrete-event stack (with the
+/// spec's fault plan installed), generate the spec's workload, simulate
+/// it, and aggregate — the one-call form of the `repro loadgen` path.
+/// Returns the report plus the deterministic [`GatewayStats`].
 pub fn run_sim(spec: &DeploymentSpec) -> Result<(LoadgenReport, GatewayStats)> {
-    let (specs, pools) = resolve_spec(spec)?;
-    let mut sim = SimGateway::new(specs, &spec.gateway)?;
+    let (mut sim, pools) = SimGateway::from_spec(spec)?;
     let workload = generate(&spec.loadgen, &pools);
     let report = simulate(&mut sim, &workload, &pools)?;
     Ok((report, sim.shutdown()))
@@ -867,6 +1320,9 @@ pub struct DeploymentSpec {
     pub executors: Vec<ExecutorEntry>,
     /// The workload to generate.
     pub loadgen: LoadgenConfig,
+    /// Scheduled shard/device failures to inject into the simulated run
+    /// (empty = no chaos; ignored by the wall-clock path).
+    pub faults: FaultPlan,
 }
 
 impl ToJson for DeploymentSpec {
@@ -876,6 +1332,7 @@ impl ToJson for DeploymentSpec {
             .field("gateway", &self.gateway)
             .field("executors", &self.executors)
             .field("loadgen", &self.loadgen)
+            .field("faults", &self.faults)
             .build()
     }
 }
@@ -888,6 +1345,7 @@ impl FromJson for DeploymentSpec {
             gateway: d.opt_or("gateway", GatewayConfig::default())?,
             executors: d.req("executors")?,
             loadgen: d.opt_or("loadgen", LoadgenConfig::default())?,
+            faults: d.opt_or("faults", FaultPlan::default())?,
         })
     }
 }
@@ -924,7 +1382,13 @@ impl DeploymentSpec {
                 });
             }
         }
-        DeploymentSpec { seed, gateway: GatewayConfig::default(), executors, loadgen }
+        DeploymentSpec {
+            seed,
+            gateway: GatewayConfig::default(),
+            executors,
+            loadgen,
+            faults: FaultPlan::default(),
+        }
     }
 }
 
@@ -967,6 +1431,21 @@ pub fn resolve_spec(spec: &DeploymentSpec) -> Result<(Vec<ExecutorSpec>, Vec<Dat
             dataset_order.push(design_ds.to_string());
         }
         resolved.push((r, design_ds.to_string()));
+    }
+    // A spec-borne trace must be replayable against this fleet: valid
+    // timestamps, and every named dataset served by some executor
+    // (generate() would panic; a spec error reads better).
+    if let Scenario::Trace(trace) = &spec.loadgen.scenario {
+        trace.validate()?;
+        for (i, ev) in trace.events.iter().enumerate() {
+            if !ev.dataset.is_empty() && !dataset_order.iter().any(|d| d == &ev.dataset) {
+                anyhow::bail!(
+                    "trace {:?}: event {i} names dataset {:?}, which no executor serves",
+                    trace.name,
+                    ev.dataset
+                );
+            }
+        }
     }
     // One substrate per dataset, seeded by first-seen order.
     let mut substrates = Vec::with_capacity(dataset_order.len());
@@ -1031,11 +1510,13 @@ impl Gateway {
 impl SimGateway {
     /// Build the discrete-event stack (plus the dataset pools its
     /// scenario draws from) from a parsed [`DeploymentSpec`] — the
-    /// file-driven front door to deterministic overload experiments.
-    /// Equivalent to [`resolve_spec`] + [`SimGateway::new`].
+    /// file-driven front door to deterministic overload and chaos
+    /// experiments.  Equivalent to [`resolve_spec`] +
+    /// [`SimGateway::new`] + [`SimGateway::set_fault_plan`].
     pub fn from_spec(spec: &DeploymentSpec) -> Result<(SimGateway, Vec<DatasetPool>)> {
         let (specs, pools) = resolve_spec(spec)?;
-        let sim = SimGateway::new(specs, &spec.gateway)?;
+        let mut sim = SimGateway::new(specs, &spec.gateway)?;
+        sim.set_fault_plan(spec.faults.clone())?;
         Ok((sim, pools))
     }
 }
@@ -1140,18 +1621,147 @@ mod tests {
         for s in Scenario::all() {
             assert_eq!(Scenario::parse(s.name()), Some(s));
         }
+        assert_eq!(Scenario::parse("flash_crowd"), Some(Scenario::FlashCrowd));
+        // Traces carry their events; the bare name is not parseable.
+        assert_eq!(Scenario::parse("trace"), None);
         assert_eq!(Scenario::parse("nope"), None);
     }
 
     #[test]
+    fn diurnal_swings_and_flash_crowd_spikes() {
+        let pools =
+            vec![DatasetPool { name: "a".into(), images: synthetic_images((1, 3, 3), 4, 1) }];
+        let base = LoadgenConfig::default().gap.as_secs_f64();
+        let d = generate(
+            &LoadgenConfig { scenario: Scenario::Diurnal, requests: 40, ..Default::default() },
+            &pools,
+        );
+        let gaps: Vec<f64> = d.arrivals.iter().map(|a| a.delay.as_secs_f64()).collect();
+        // Peak demand (phase 0.75, minimal gap) vs trough (phase 0.25):
+        // the jitter band (±25%) cannot bridge the 19× wave ratio.
+        assert!(gaps[10] > gaps[30], "trough gap {} <= peak gap {}", gaps[10], gaps[30]);
+        assert!(gaps.iter().all(|g| *g > 0.0 && *g < base * 2.5));
+        let f = generate(
+            &LoadgenConfig {
+                scenario: Scenario::FlashCrowd,
+                requests: 40,
+                ..Default::default()
+            },
+            &pools,
+        );
+        let fg: Vec<f64> = f.arrivals.iter().map(|a| a.delay.as_secs_f64()).collect();
+        // Inside the crowd window (phase 0.45..0.60) arrivals land ≥8×
+        // denser than the calm stretch even at jitter extremes.
+        assert!(fg[20] * 8.0 < fg[2], "crowd gap {} vs calm gap {}", fg[20], fg[2]);
+    }
+
+    #[test]
+    fn class_mix_assigns_every_class_and_inactive_mix_is_untouched() {
+        let pools =
+            vec![DatasetPool { name: "a".into(), images: synthetic_images((1, 3, 3), 8, 1) }];
+        let plain = generate(&LoadgenConfig { requests: 64, ..Default::default() }, &pools);
+        // The default (all-zero) mix never reclasses a request.
+        assert!(plain.arrivals.iter().all(|a| a.slo.class == SloClass::BestEffort));
+        let cfg = LoadgenConfig {
+            requests: 64,
+            class_mix: ClassMix { interactive: 1.0, batch: 1.0, best_effort: 1.0 },
+            ..Default::default()
+        };
+        let mixed = generate(&cfg, &pools);
+        for class in SloClass::all() {
+            assert!(
+                mixed.arrivals.iter().any(|a| a.slo.class == class),
+                "class {} never drawn from an even mix over 64 arrivals",
+                class.as_str()
+            );
+        }
+        // The class draw is seeded like everything else.
+        let again = generate(&cfg, &pools);
+        let classes = |w: &Workload| -> Vec<SloClass> {
+            w.arrivals.iter().map(|a| a.slo.class).collect()
+        };
+        assert_eq!(classes(&mixed), classes(&again));
+    }
+
+    #[test]
+    fn trace_scenarios_replay_verbatim_and_roundtrip_the_wire() {
+        let pools = vec![
+            DatasetPool { name: "a".into(), images: synthetic_images((1, 3, 3), 2, 1) },
+            DatasetPool { name: "b".into(), images: synthetic_images((1, 3, 3), 2, 2) },
+        ];
+        let trace = ArrivalTrace {
+            name: "hand".into(),
+            events: vec![
+                TraceEvent {
+                    t_s: 0.0,
+                    dataset: "b".into(),
+                    class: SloClass::Interactive,
+                    deadline_s: Some(0.25),
+                },
+                TraceEvent {
+                    t_s: 1e-3,
+                    dataset: String::new(),
+                    class: SloClass::Batch,
+                    deadline_s: None,
+                },
+                TraceEvent {
+                    t_s: 1e-3,
+                    dataset: "a".into(),
+                    class: SloClass::BestEffort,
+                    deadline_s: None,
+                },
+                TraceEvent {
+                    t_s: 5e-3,
+                    dataset: "b".into(),
+                    class: SloClass::Interactive,
+                    deadline_s: None,
+                },
+            ],
+        };
+        let scenario = Scenario::Trace(trace);
+        let back: Scenario =
+            crate::util::wire::from_text(&crate::util::wire::to_text(&scenario)).unwrap();
+        assert_eq!(back, scenario);
+        let cfg = LoadgenConfig { scenario, ..Default::default() };
+        let w = generate(&cfg, &pools);
+        assert_eq!(w.arrivals.len(), 4);
+        let ds: Vec<usize> = w.arrivals.iter().map(|a| a.dataset).collect();
+        // Named pools resolve by name; the empty name means pool 0.
+        assert_eq!(ds, vec![1, 0, 0, 1]);
+        let delays: Vec<f64> = w.arrivals.iter().map(|a| a.delay.as_secs_f64()).collect();
+        assert!((delays[0]).abs() < 1e-12);
+        assert!((delays[1] - 1e-3).abs() < 1e-12);
+        assert!((delays[2]).abs() < 1e-12, "equal timestamps arrive back to back");
+        assert!((delays[3] - 4e-3).abs() < 1e-12);
+        assert_eq!(w.arrivals[0].slo.class, SloClass::Interactive);
+        assert_eq!(w.arrivals[0].slo.deadline_s, Some(0.25));
+        assert_eq!(w.arrivals[1].slo.class, SloClass::Batch);
+        assert_eq!(w.arrivals[1].slo.deadline_s, cfg.slo.deadline_s);
+        // Recording the replayed workload reproduces the trace shape.
+        let rec = ArrivalTrace::from_workload(&w, &pools);
+        assert_eq!(rec.events.len(), 4);
+        assert_eq!(rec.events[0].dataset, "b");
+        assert_eq!(rec.events[0].class, SloClass::Interactive);
+        assert_eq!(rec.events[0].deadline_s, Some(0.25));
+        assert!((rec.events[3].t_s - 5e-3).abs() < 1e-12);
+    }
+
+    #[test]
     fn deployment_spec_roundtrips_the_wire() {
-        let spec = DeploymentSpec::synthetic(
+        let mut spec = DeploymentSpec::synthetic(
             &["mnist", "cifar"],
             "pynq",
             2,
             7,
-            LoadgenConfig { scenario: Scenario::Mixed, requests: 48, ..Default::default() },
+            LoadgenConfig {
+                scenario: Scenario::FlashCrowd,
+                requests: 48,
+                class_mix: ClassMix { interactive: 3.0, batch: 1.0, best_effort: 4.0 },
+                ..Default::default()
+            },
         );
+        spec.faults = FaultPlan::seeded(7, &["CNN4"], 2, 2, 0.01, true);
+        assert!(!spec.faults.is_empty());
         let back: DeploymentSpec =
             crate::util::wire::from_text(&crate::util::wire::to_text(&spec)).unwrap();
         assert_eq!(back, spec);
@@ -1166,6 +1776,7 @@ mod tests {
         assert_eq!(spec.seed, 42);
         assert_eq!(spec.gateway, super::GatewayConfig::default());
         assert_eq!(spec.loadgen, LoadgenConfig::default());
+        assert!(spec.faults.is_empty());
         assert_eq!(spec.executors[0].device, "pynq");
         assert_eq!(spec.executors[0].shards, 1);
         assert_eq!(spec.executors[0].dataset, "");
@@ -1191,6 +1802,7 @@ mod tests {
             gateway: super::GatewayConfig::default(),
             executors: vec![e],
             loadgen: LoadgenConfig::default(),
+            faults: FaultPlan::default(),
         };
         // Unknown design name.
         let err = resolve_spec(&mk(entry("CNN99", "", "pynq"))).unwrap_err();
@@ -1207,8 +1819,43 @@ mod tests {
             gateway: super::GatewayConfig::default(),
             executors: vec![],
             loadgen: LoadgenConfig::default(),
+            faults: FaultPlan::default(),
         };
         assert!(resolve_spec(&empty).is_err());
+        // Trace naming a dataset no executor serves.
+        let mut with_trace = mk(entry("CNN4", "", "pynq"));
+        with_trace.loadgen.scenario = Scenario::Trace(ArrivalTrace {
+            name: "t".into(),
+            events: vec![TraceEvent {
+                t_s: 0.0,
+                dataset: "cifar".into(),
+                class: SloClass::Batch,
+                deadline_s: None,
+            }],
+        });
+        let err = resolve_spec(&with_trace).unwrap_err();
+        assert!(err.to_string().contains("no executor serves"));
+        // Trace with time running backwards.
+        let mut backwards = mk(entry("CNN4", "", "pynq"));
+        backwards.loadgen.scenario = Scenario::Trace(ArrivalTrace {
+            name: "t".into(),
+            events: vec![
+                TraceEvent {
+                    t_s: 2e-3,
+                    dataset: String::new(),
+                    class: SloClass::Interactive,
+                    deadline_s: None,
+                },
+                TraceEvent {
+                    t_s: 1e-3,
+                    dataset: String::new(),
+                    class: SloClass::Interactive,
+                    deadline_s: None,
+                },
+            ],
+        });
+        let err = resolve_spec(&backwards).unwrap_err();
+        assert!(err.to_string().contains("goes backwards"));
     }
 
     /// The substrate contract: resolving a synthetic spec yields the same

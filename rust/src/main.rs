@@ -8,7 +8,8 @@
 //! repro all    [--samples 1000] [--out reports] [--json [--json-out FILE]]
 //! repro serve  --dataset mnist --requests 64 [--batch 8] [--json [--out FILE]]
 //! repro loadgen --scenario steady --requests 64 [--shards 2] [--seed 42]
-//!              [--deadline-ms 5] [--queue-cap 16] [--wall]
+//!              [--deadline-ms 5] [--queue-cap 16] [--class-mix 3,1,4]
+//!              [--trace FILE] [--faults FILE] [--emit-trace FILE] [--wall]
 //! repro loadgen --spec examples/specs/overload_burst.json [--json --out out.json]
 //! repro checkjson --file out.json        # re-parse + reconcile totals
 //! repro validate                         # golden artifact checks
@@ -21,8 +22,10 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use spikebench::coordinator::gateway::{Gateway, SimGateway, Slo};
-use spikebench::coordinator::loadgen::{self, DeploymentSpec, LoadgenConfig, Scenario};
+use spikebench::coordinator::gateway::{FaultPlan, Gateway, SimGateway, Slo};
+use spikebench::coordinator::loadgen::{
+    self, ArrivalTrace, ClassMix, DeploymentSpec, LoadgenConfig, Scenario,
+};
 use spikebench::coordinator::serve::{select_backend, ServeConfig, Server, SnnCostConfig};
 use spikebench::experiments::{ctx::Ctx, registry, run_by_id};
 use spikebench::fpga::device::PYNQ_Z1;
@@ -42,11 +45,14 @@ fn main() {
 fn usage() -> &'static str {
     "usage: repro <list|table|figure|all|ablation|serve|loadgen|checkjson|validate> [--id N] [--samples N] [--out DIR]\n\
      see `repro list` for experiment ids; `repro loadgen` replays a\n\
-     deterministic scenario (steady|bursty|ramp|mixed) or a JSON deployment\n\
-     spec (--spec FILE) through the discrete-event serving stack — admission\n\
-     queues, deadlines (--deadline-ms), dynamic batching, shard autoscaling —\n\
+     deterministic scenario (steady|bursty|ramp|mixed|diurnal|flash-crowd),\n\
+     a recorded arrival trace (--trace FILE), or a JSON deployment spec\n\
+     (--spec FILE) through the discrete-event serving stack — admission\n\
+     queues, deadlines (--deadline-ms), SLO classes (--class-mix I,B,E),\n\
+     dynamic batching, shard autoscaling, seeded chaos (--faults FILE) —\n\
      on a simulated clock (--wall uses the threaded gateway instead);\n\
-     `--json [--out FILE]` emits machine-readable artifacts;\n\
+     `--emit-trace FILE` records the generated workload as a replayable\n\
+     trace; `--json [--out FILE]` emits machine-readable artifacts;\n\
      `repro checkjson --file F` re-parses one and reconciles its totals"
 }
 
@@ -273,16 +279,19 @@ fn loadgen_demo(args: &Args) -> Result<()> {
     // and silently out-voted by the file.
     const TUNING_OPTS: &[&str] = &[
         "scenario", "requests", "shards", "seed", "slo-ms", "deadline-ms", "queue-cap",
-        "device", "dataset",
+        "device", "dataset", "class-mix", "trace", "faults",
     ];
-    let known: Vec<&str> =
-        TUNING_OPTS.iter().copied().chain(["spec", "wall", "json", "out"]).collect();
+    let known: Vec<&str> = TUNING_OPTS
+        .iter()
+        .copied()
+        .chain(["spec", "wall", "json", "out", "emit-trace"])
+        .collect();
     check_opts("loadgen", args, &known)?;
     if args.flag("wall") {
-        // The threaded gateway has no admission control: silently
-        // ignoring these would report 0 rejections for a deadline that
-        // was never evaluated.
-        for o in ["deadline-ms", "queue-cap"] {
+        // The threaded gateway has no admission control and no fault
+        // injection: silently ignoring these would report 0 rejections
+        // for a deadline (or a fault plan) that was never evaluated.
+        for o in ["deadline-ms", "queue-cap", "class-mix", "trace", "faults"] {
             if args.get(o).is_some() {
                 bail!("--{o} requires the discrete-event stack (drop --wall)");
             }
@@ -304,10 +313,28 @@ fn loadgen_demo(args: &Args) -> Result<()> {
                 .map_err(|e| anyhow!("{path}: {e}"))?
         }
         None => {
-            let scenario_s = args.get_or("scenario", "steady");
-            let scenario = Scenario::parse(scenario_s).ok_or_else(|| {
-                anyhow!("unknown scenario {scenario_s} (steady|bursty|ramp|mixed)")
-            })?;
+            let scenario = match args.get("trace") {
+                Some(path) => {
+                    if args.get("scenario").is_some() {
+                        bail!("--trace replays a recorded workload; drop --scenario");
+                    }
+                    let text = std::fs::read_to_string(path)
+                        .with_context(|| format!("reading trace {path}"))?;
+                    let trace: ArrivalTrace =
+                        wire::from_text(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+                    Scenario::Trace(trace)
+                }
+                None => {
+                    let scenario_s = args.get_or("scenario", "steady");
+                    Scenario::parse(scenario_s).ok_or_else(|| {
+                        anyhow!(
+                            "unknown scenario {scenario_s} \
+                             (steady|bursty|ramp|mixed|diurnal|flash-crowd; \
+                             --trace FILE replays a recorded trace)"
+                        )
+                    })?
+                }
+            };
             let device = args.get_or("device", "pynq");
             spikebench::fpga::device::Device::by_name(device)
                 .ok_or_else(|| anyhow!("unknown device (pynq|zcu102)"))?;
@@ -322,8 +349,35 @@ fn loadgen_demo(args: &Args) -> Result<()> {
             if let Some(dl_ms) = parse_ms("deadline-ms")? {
                 slo = slo.with_deadline(dl_ms / 1e3);
             }
-            let datasets: Vec<&str> = match scenario {
-                Scenario::Mixed => vec!["mnist", "svhn", "cifar"],
+            let class_mix = match args.get("class-mix") {
+                Some(s) => {
+                    let weights = s
+                        .split(',')
+                        .map(|p| {
+                            p.trim()
+                                .parse::<f64>()
+                                .map_err(|e| anyhow!("bad --class-mix {s:?}: {e}"))
+                        })
+                        .collect::<Result<Vec<f64>>>()?;
+                    if weights.len() != 3 || weights.iter().any(|w| !w.is_finite() || *w < 0.0)
+                    {
+                        bail!(
+                            "--class-mix wants three non-negative weights: \
+                             interactive,batch,best-effort"
+                        );
+                    }
+                    ClassMix {
+                        interactive: weights[0],
+                        batch: weights[1],
+                        best_effort: weights[2],
+                    }
+                }
+                None => ClassMix::default(),
+            };
+            // Traces can interleave datasets like Mixed does, so they
+            // get the full fleet too.
+            let datasets: Vec<&str> = match &scenario {
+                Scenario::Mixed | Scenario::Trace(_) => vec!["mnist", "svhn", "cifar"],
                 _ => vec![args.get_or("dataset", "mnist")],
             };
             let mut spec = DeploymentSpec::synthetic(
@@ -336,24 +390,46 @@ fn loadgen_demo(args: &Args) -> Result<()> {
                     requests: args.get_usize("requests", 64),
                     seed,
                     slo,
+                    class_mix,
                     ..Default::default()
                 },
             );
             if args.get("queue-cap").is_some() {
                 spec.gateway.queue_cap = args.get_usize("queue-cap", spec.gateway.queue_cap);
             }
+            if let Some(path) = args.get("faults") {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading fault plan {path}"))?;
+                spec.faults =
+                    wire::from_text::<FaultPlan>(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+            }
             spec
         }
     };
 
-    if args.flag("wall") && spec.loadgen.slo.deadline_s.is_some() {
-        // Same trap through the file: a spec-carried deadline would be
-        // silently ignored by the threaded gateway.
-        bail!(
-            "this spec sets a completion deadline (loadgen.slo.deadline_s), which the \
-             threaded gateway never evaluates — drop --wall or remove the deadline \
-             (queue/autoscale knobs are likewise simulation-only)"
-        );
+    if args.flag("wall") {
+        // Same traps through the file: deadlines, fault plans and trace
+        // SLO classes would all be silently ignored by the threaded
+        // gateway.
+        if spec.loadgen.slo.deadline_s.is_some() {
+            bail!(
+                "this spec sets a completion deadline (loadgen.slo.deadline_s), which the \
+                 threaded gateway never evaluates — drop --wall or remove the deadline \
+                 (queue/autoscale knobs are likewise simulation-only)"
+            );
+        }
+        if !spec.faults.is_empty() {
+            bail!(
+                "this spec schedules faults, which only the discrete-event stack \
+                 injects — drop --wall or remove the fault plan"
+            );
+        }
+        if matches!(spec.loadgen.scenario, Scenario::Trace(_)) {
+            bail!(
+                "trace scenarios carry per-event deadlines and SLO classes that only \
+                 the discrete-event stack honors — drop --wall"
+            );
+        }
     }
 
     let mut head = String::new();
@@ -392,13 +468,16 @@ fn loadgen_demo(args: &Args) -> Result<()> {
         let (gateway, pools) = Gateway::from_spec(&spec)?;
         let table = gateway.router().table();
         render_head(&mut head, gateway.rejected(), &table);
-        let report = loadgen::run(&gateway, &spec.loadgen, &pools)?;
+        let workload = loadgen::generate(&spec.loadgen, &pools);
+        emit_trace(args, &workload, &pools)?;
+        let report = loadgen::drive(&gateway, &workload, &pools)?;
         (table, report, gateway.shutdown())
     } else {
         let (mut sim, pools) = SimGateway::from_spec(&spec)?;
         let table = sim.router().table();
         render_head(&mut head, sim.rejected_designs(), &table);
         let workload = loadgen::generate(&spec.loadgen, &pools);
+        emit_trace(args, &workload, &pools)?;
         let report = loadgen::simulate(&mut sim, &workload, &pools)?;
         (table, report, sim.shutdown())
     };
@@ -441,13 +520,34 @@ fn loadgen_demo(args: &Args) -> Result<()> {
     })
 }
 
+/// `--emit-trace FILE`: record the generated workload as a replayable
+/// trace file — loadable back via `--trace FILE` or inlined into a
+/// spec's `{"scenario": {"trace": ...}}`.
+fn emit_trace(
+    args: &Args,
+    workload: &loadgen::Workload,
+    pools: &[loadgen::DatasetPool],
+) -> Result<()> {
+    let path = match args.get("emit-trace") {
+        Some(p) => p,
+        None => return Ok(()),
+    };
+    let trace = ArrivalTrace::from_workload(workload, pools);
+    std::fs::write(path, wire::to_text(&trace))
+        .with_context(|| format!("writing trace {path}"))?;
+    eprintln!("trace ({} events) written to {path}", trace.events.len());
+    Ok(())
+}
+
 /// Re-parse a `repro loadgen --json` artifact with the streaming
 /// `JsonReader` (no tree) and verify its totals reconcile:
 /// `gateway.routed` must equal the sum of the per-design `routed`
 /// counters, and — for admission-era artifacts — `gateway.offered` must
-/// equal `admitted + rejected` as well as the sum of the per-queue
-/// `offered` counters. The CI release leg runs this against both the
-/// steady spec and the overload spec.
+/// equal `served + rejected` (the conservation identity that holds with
+/// and without chaos; every offered request either completes or is
+/// rejected, at admission or by shard loss) as well as the sum of the
+/// per-queue `offered` counters. The CI release leg runs this against
+/// the steady, overload and chaos specs.
 fn checkjson(args: &Args) -> Result<()> {
     check_opts("checkjson", args, &["file"])?;
     let path = args.get("file").ok_or_else(|| anyhow!("--file required\n{}", usage()))?;
@@ -455,7 +555,7 @@ fn checkjson(args: &Args) -> Result<()> {
         std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let mut r = JsonReader::new(&text);
     let mut total: Option<f64> = None;
-    let (mut offered, mut admitted, mut rejected) = (None, None, None);
+    let (mut offered, mut served, mut rejected) = (None, None, None);
     let mut per_design: Vec<f64> = Vec::new();
     let mut queue_offered: Vec<f64> = Vec::new();
     r.expect_object().map_err(|e| anyhow!("{path}: {e}"))?;
@@ -469,7 +569,7 @@ fn checkjson(args: &Args) -> Result<()> {
             match gk.as_str() {
                 "routed" => total = Some(r.num()?),
                 "offered" => offered = Some(r.num()?),
-                "admitted" => admitted = Some(r.num()?),
+                "served" => served = Some(r.num()?),
                 "rejected" => rejected = Some(r.num()?),
                 "designs" => {
                     collect_array_field(&mut r, "routed", &mut per_design)
@@ -495,11 +595,11 @@ fn checkjson(args: &Args) -> Result<()> {
         );
     }
     let mut admission_note = String::new();
-    if let (Some(off), Some(adm), Some(rej)) = (offered, admitted, rejected) {
-        if adm + rej != off {
+    if let (Some(off), Some(srv), Some(rej)) = (offered, served, rejected) {
+        if srv + rej != off {
             bail!(
-                "{path}: admission totals do not reconcile: \
-                 admitted {adm} + rejected {rej} != offered {off}"
+                "{path}: conservation does not reconcile: \
+                 served {srv} + rejected {rej} != offered {off}"
             );
         }
         if !queue_offered.is_empty() {
@@ -512,7 +612,7 @@ fn checkjson(args: &Args) -> Result<()> {
             }
         }
         admission_note =
-            format!(", admitted {adm} + rejected {rej} == offered {off}");
+            format!(", served {srv} + rejected {rej} == offered {off}");
     }
     println!(
         "{path}: ok — routed {total} == Σ routed over {} designs{admission_note}",

@@ -11,7 +11,7 @@
 use std::time::Duration;
 
 use spikebench::coordinator::gateway::{
-    DesignKind, ExecutorSpec, GatewayConfig, RejectReason, SimGateway, SimRequest, Slo,
+    DesignKind, ExecutorSpec, FaultPlan, GatewayConfig, RejectReason, SimGateway, SimRequest, Slo,
 };
 use spikebench::coordinator::loadgen::{
     self, DeploymentSpec, ExecutorEntry, LoadgenConfig, Scenario,
@@ -297,7 +297,9 @@ fn overload_spec(max_batch: usize) -> DeploymentSpec {
             seed: 42,
             slo: Slo::latency(0.05).with_deadline(0.03),
             gap: Duration::from_micros(200),
+            ..Default::default()
         },
+        faults: FaultPlan::default(),
     }
 }
 

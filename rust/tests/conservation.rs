@@ -1,0 +1,703 @@
+//! Conservation-invariant suite for the multi-tenant discrete-event
+//! serving stack: every request offered to the gateway is accounted for
+//! exactly once — served (OK or failed) or rejected (queue-full,
+//! deadline, shard-lost) — per design queue, per SLO class, and in the
+//! whole-gateway totals, with and without chaos injection.
+//!
+//! Alongside the property tests this file pins the PR's acceptance
+//! criteria: the committed golden chaos spec
+//! (`examples/specs/chaos_slo.json`, digest-pinned) replays to
+//! byte-identical `GatewayStats` JSON run to run, a best-effort flood
+//! cannot starve the interactive class past its deadline under the
+//! weighted-fair dequeue, and the loadgen report's rejection/requeue
+//! counters agree with the gateway's queue accounting after mid-flight
+//! shard kills.
+
+use std::time::Duration;
+
+use spikebench::coordinator::gateway::{
+    DesignKind, ExecutorSpec, FaultEvent, FaultPlan, GatewayConfig, GatewayStats, SimGateway,
+    SimRequest, Slo, SloClass,
+};
+use spikebench::coordinator::loadgen::{
+    self, ClassMix, DeploymentSpec, LoadgenConfig, LoadgenReport, Scenario,
+};
+use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::fpga::resources::{MemoryVariant, SnnDesignParams};
+use spikebench::nn::arch::parse_arch;
+use spikebench::nn::conv::ConvWeights;
+use spikebench::nn::dense::DenseWeights;
+use spikebench::nn::network::{LayerWeights, Network};
+use spikebench::nn::tensor::Tensor3;
+use spikebench::prop_assert;
+use spikebench::snn::config::SnnDesign;
+use spikebench::util::quickcheck::{check, Config};
+use spikebench::util::wire::{from_text, to_text};
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+fn tiny_net() -> Network {
+    let arch = parse_arch("2C3-2").unwrap();
+    Network {
+        arch,
+        layers: vec![
+            LayerWeights::Conv(ConvWeights::new(2, 1, 3, vec![0.25; 18], vec![0.0; 2])),
+            LayerWeights::Dense(DenseWeights::new(2, 18, vec![0.1; 36], vec![0.0, 0.5])),
+        ],
+        input_shape: (1, 3, 3),
+    }
+}
+
+fn tiny_design(name: &'static str, p: u32) -> SnnDesign {
+    SnnDesign {
+        name,
+        dataset: "tiny",
+        params: SnnDesignParams {
+            p,
+            d_aeq: 64,
+            w_mem: 8,
+            kernel: 3,
+            d_mem: 256,
+            variant: MemoryVariant::Bram,
+        },
+        published: None,
+        published_zcu102: None,
+    }
+}
+
+fn tiny_spec(name: &'static str, p: u32, shards: usize) -> ExecutorSpec {
+    ExecutorSpec {
+        dataset: "tiny".to_string(),
+        device: PYNQ_Z1,
+        shards,
+        net: tiny_net(),
+        design: DesignKind::Snn {
+            design: tiny_design(name, p),
+            t_steps: 4,
+            v_th: 1.0,
+            representative: Tensor3::from_vec(1, 3, 3, vec![0.9; 9]),
+        },
+    }
+}
+
+fn image() -> Tensor3 {
+    Tensor3::from_vec(1, 3, 3, vec![0.8; 9])
+}
+
+/// FNV-1a-64 over raw bytes — pins the committed golden spec file.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+const CHAOS_SPEC_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs/chaos_slo.json");
+const CHAOS_SPEC_DIGEST: u64 = 0x3c03_b687_5a27_2b3a;
+const CHAOS_SPEC_LEN: usize = 1113;
+
+fn chaos_spec() -> DeploymentSpec {
+    let text = std::fs::read_to_string(CHAOS_SPEC_PATH).expect("reading golden chaos spec");
+    from_text(&text).expect("parsing golden chaos spec")
+}
+
+/// The full conservation ledger over one simulated run, as a property
+/// (so it composes with the quickcheck harness *and* plain tests).
+///
+/// Global: `offered == served + rejected` — the gateway-level `served`
+/// counts completions OK or failed, so the identity holds with and
+/// without chaos.  Per design queue the admission-time split is exact
+/// and everything admitted is either served by that design or lost with
+/// a killed shard.  Per class, `served` counts OK completions only, so
+/// the ISSUE's form `offered == served + failed + rejected` is exact.
+fn conserved(report: &LoadgenReport, stats: &GatewayStats) -> Result<(), String> {
+    prop_assert!(
+        stats.offered == stats.served + stats.rejected,
+        "gateway ledger leaks: {} offered != {} served + {} rejected",
+        stats.offered,
+        stats.served,
+        stats.rejected
+    );
+    prop_assert!(
+        report.offered == stats.offered && report.rejected() == stats.rejected,
+        "report ({} offered, {} rejected) disagrees with gateway ({}, {})",
+        report.offered,
+        report.rejected(),
+        stats.offered,
+        stats.rejected
+    );
+    prop_assert!(
+        report.admitted + report.rejected() == report.offered,
+        "report admission split leaks: {} + {} != {}",
+        report.admitted,
+        report.rejected(),
+        report.offered
+    );
+    prop_assert!(
+        report.served == report.admitted && report.failed <= report.served,
+        "every surviving admitted request must complete: served {} admitted {} failed {}",
+        report.served,
+        report.admitted,
+        report.failed
+    );
+
+    prop_assert!(
+        stats.queues.len() == stats.designs.len(),
+        "queues/designs misaligned: {} vs {}",
+        stats.queues.len(),
+        stats.designs.len()
+    );
+    for (q, d) in stats.queues.iter().zip(&stats.designs) {
+        prop_assert!(q.design == d.name, "queue {} aligned to design {}", q.design, d.name);
+        prop_assert!(
+            q.offered == q.admitted + q.rejected_full + q.rejected_deadline,
+            "queue {} admission split leaks: {} != {} + {} + {}",
+            q.design,
+            q.offered,
+            q.admitted,
+            q.rejected_full,
+            q.rejected_deadline
+        );
+        prop_assert!(
+            q.admitted == d.served + q.rejected_shard_lost,
+            "queue {}: {} admitted != {} served + {} shard-lost",
+            q.design,
+            q.admitted,
+            d.served,
+            q.rejected_shard_lost
+        );
+    }
+    let q_offered: usize = stats.queues.iter().map(|q| q.offered).sum();
+    let q_rejected: usize = stats.queues.iter().map(|q| q.rejected()).sum();
+    prop_assert!(
+        q_offered == stats.offered && q_rejected == stats.rejected,
+        "queue sums ({q_offered}, {q_rejected}) != totals ({}, {})",
+        stats.offered,
+        stats.rejected
+    );
+
+    prop_assert!(stats.classes.len() == 3, "one ClassStats per SLO class");
+    let mut class_offered = 0usize;
+    for c in &stats.classes {
+        prop_assert!(
+            c.offered == c.served + c.failed + c.rejected(),
+            "class {} leaks: {} != {} + {} + {}",
+            c.class.as_str(),
+            c.offered,
+            c.served,
+            c.failed,
+            c.rejected()
+        );
+        prop_assert!(
+            c.admitted == c.served + c.failed + c.rejected_shard_lost,
+            "class {}: {} admitted != {} + {} + {} shard-lost",
+            c.class.as_str(),
+            c.admitted,
+            c.served,
+            c.failed,
+            c.rejected_shard_lost
+        );
+        class_offered += c.offered;
+    }
+    prop_assert!(
+        class_offered == stats.offered,
+        "class offered sum {class_offered} != gateway offered {}",
+        stats.offered
+    );
+    for (cr, cs) in report.classes.iter().zip(&stats.classes) {
+        prop_assert!(
+            cr.class == cs.class
+                && cr.offered == cs.offered
+                && cr.served == cs.served
+                && cr.failed == cs.failed
+                && cr.rejected == cs.rejected(),
+            "class {} report/gateway mismatch: ({}, {}, {}, {}) vs ({}, {}, {}, {})",
+            cs.class.as_str(),
+            cr.offered,
+            cr.served,
+            cr.failed,
+            cr.rejected,
+            cs.offered,
+            cs.served,
+            cs.failed,
+            cs.rejected()
+        );
+        prop_assert!(
+            cr.offered == cr.served + cr.failed + cr.rejected,
+            "class {} report leaks: {} != {} + {} + {}",
+            cr.class.as_str(),
+            cr.offered,
+            cr.served,
+            cr.failed,
+            cr.rejected
+        );
+    }
+
+    // Requeue reconciliation: the report's chaos counters are exactly the
+    // queue-level sums — a re-queued request is counted once per bounce
+    // and still lands in exactly one terminal bucket.
+    let q_requeued: usize = stats.queues.iter().map(|q| q.requeued).sum();
+    let q_shard_lost: usize = stats.queues.iter().map(|q| q.rejected_shard_lost).sum();
+    prop_assert!(
+        report.requeued == q_requeued,
+        "report requeued {} != queue sum {q_requeued}",
+        report.requeued
+    );
+    prop_assert!(
+        report.rejected_shard_lost == q_shard_lost,
+        "report shard-lost {} != queue sum {q_shard_lost}",
+        report.rejected_shard_lost
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Property: conservation over random workloads and fault plans
+// ---------------------------------------------------------------------------
+
+/// Random arrivals (count, spacing, class, explicit deadline) against a
+/// random two-design fleet under a random seeded fault plan: the
+/// per-request outcomes, the per-class ledgers, the per-queue ledgers
+/// and the gateway totals must all reconcile exactly — chaos or not.
+#[test]
+fn conservation_holds_for_random_workloads_and_fault_plans() {
+    check("conservation", Config { cases: 64, seed: 0xC0_25E7 }, |rng| {
+        let mut cfg = GatewayConfig {
+            max_batch: 1 + rng.below(4),
+            queue_cap: 2 + rng.below(24),
+            batch_max_wait_s: 1e-4,
+            ..GatewayConfig::default()
+        };
+        cfg.autoscale.enabled = rng.chance(0.5);
+        let mut sim = SimGateway::new(
+            vec![
+                tiny_spec("tiny-p1", 1, 1 + rng.below(2)),
+                tiny_spec("tiny-p8", 8, 1 + rng.below(2)),
+            ],
+            &cfg,
+        )
+        .unwrap();
+
+        let mut events = Vec::new();
+        if rng.chance(0.7) {
+            for _ in 0..(1 + rng.below(3)) {
+                let t = rng.f64() * 0.01;
+                if rng.chance(0.25) {
+                    events.push(FaultEvent::kill_device(t, "pynq"));
+                    if rng.chance(0.6) {
+                        events.push(FaultEvent::recover_device(t + rng.f64() * 0.005, "pynq"));
+                    }
+                } else {
+                    let design = if rng.chance(0.5) { "tiny-p1" } else { "tiny-p8" };
+                    let shard = rng.below(3);
+                    events.push(FaultEvent::kill(t, design, shard));
+                    if rng.chance(0.6) {
+                        events.push(FaultEvent::recover(t + rng.f64() * 0.005, design, shard));
+                    }
+                }
+            }
+        }
+        let with_chaos = !events.is_empty();
+        sim.set_fault_plan(FaultPlan { events }).unwrap();
+
+        let n = 10 + rng.below(50);
+        let mut t = 0.0f64;
+        for _ in 0..n {
+            t += rng.f64() * 4e-4;
+            let class = SloClass::all()[rng.below(3)];
+            let mut slo = Slo::latency(10.0).for_class(class);
+            if rng.chance(0.3) {
+                slo.deadline_s = Some(1e-4 + rng.f64() * 2e-3);
+            }
+            sim.offer(SimRequest {
+                dataset: "tiny".to_string(),
+                x: image(),
+                slo,
+                arrival_s: t,
+            })
+            .unwrap();
+        }
+        let outcomes = sim.finish();
+        let stats = sim.shutdown();
+        prop_assert!(outcomes.len() == n, "one outcome per offer: {} != {n}", outcomes.len());
+
+        // Re-derive every ledger from the raw outcomes.
+        let (mut served, mut rejected) = (0usize, 0usize);
+        // Per class: offered, served-OK, failed, rejected.
+        let mut by_class = [[0usize; 4]; 3];
+        for o in &outcomes {
+            let b = &mut by_class[o.class.index()];
+            b[0] += 1;
+            if o.admitted {
+                served += 1;
+                if o.ok {
+                    b[1] += 1;
+                } else {
+                    b[2] += 1;
+                }
+            } else {
+                prop_assert!(o.reject.is_some(), "an unadmitted outcome must carry a reason");
+                rejected += 1;
+                b[3] += 1;
+            }
+        }
+        prop_assert!(
+            stats.offered == n && stats.served == served && stats.rejected == rejected,
+            "totals drifted from outcomes: ({}, {}, {}) vs ({n}, {served}, {rejected})",
+            stats.offered,
+            stats.served,
+            stats.rejected
+        );
+        prop_assert!(
+            n == served + rejected,
+            "conservation broke: {n} submitted != {served} served + {rejected} rejected"
+        );
+        for (i, c) in stats.classes.iter().enumerate() {
+            let [offered, ok, failed, rej] = by_class[i];
+            prop_assert!(
+                c.offered == offered && c.served == ok && c.failed == failed,
+                "class {} ledger drifted: ({}, {}, {}) vs ({offered}, {ok}, {failed})",
+                c.class.as_str(),
+                c.offered,
+                c.served,
+                c.failed
+            );
+            prop_assert!(
+                c.rejected() == rej,
+                "class {} rejections drifted: {} vs {rej}",
+                c.class.as_str(),
+                c.rejected()
+            );
+        }
+        for (q, d) in stats.queues.iter().zip(&stats.designs) {
+            prop_assert!(
+                q.offered == q.admitted + q.rejected_full + q.rejected_deadline,
+                "queue {} admission split leaks under chaos={with_chaos}",
+                q.design
+            );
+            prop_assert!(
+                q.admitted == d.served + q.rejected_shard_lost,
+                "queue {} post-admission split leaks under chaos={with_chaos}",
+                q.design
+            );
+        }
+        let requeues: usize = outcomes.iter().map(|o| o.requeues).sum();
+        let q_requeued: usize = stats.queues.iter().map(|q| q.requeued).sum();
+        prop_assert!(
+            requeues == q_requeued,
+            "requeue books disagree: outcomes {requeues} vs queues {q_requeued}"
+        );
+        if !with_chaos {
+            prop_assert!(
+                q_requeued == 0 && stats.faults.is_empty(),
+                "a fault-free run cannot requeue or log faults"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The same ledger through the full spec path (`run_sim`): random
+/// scenarios, class mixes, deadlines and seeded fault plans over the
+/// real MNIST design table.
+#[test]
+fn conservation_holds_for_random_specs_through_run_sim() {
+    check("spec conservation", Config { cases: 10, seed: 0x51_07 }, |rng| {
+        let scenarios = [
+            Scenario::Steady,
+            Scenario::Bursty,
+            Scenario::Ramp,
+            Scenario::Diurnal,
+            Scenario::FlashCrowd,
+        ];
+        let mut slo = Slo::latency(0.05);
+        if rng.chance(0.5) {
+            slo.deadline_s = Some(1e-3 + rng.f64() * 2e-2);
+        }
+        let class_mix = if rng.chance(0.7) {
+            ClassMix {
+                interactive: 1.0 + rng.f64() * 4.0,
+                batch: rng.f64() * 2.0,
+                best_effort: rng.f64() * 2.0,
+            }
+        } else {
+            ClassMix::default()
+        };
+        let mut spec = DeploymentSpec::synthetic(
+            &["mnist"],
+            "pynq",
+            1 + rng.below(2),
+            rng.next_u64(),
+            LoadgenConfig {
+                scenario: scenarios[rng.below(scenarios.len())].clone(),
+                requests: 24 + rng.below(40),
+                seed: rng.next_u64(),
+                slo,
+                gap: Duration::from_micros(50 + rng.below(150) as u64),
+                class_mix,
+            },
+        );
+        spec.gateway.queue_cap = 4 + rng.below(28);
+        spec.gateway.max_batch = 1 + rng.below(8);
+        if rng.chance(0.6) {
+            spec.faults = FaultPlan::seeded(
+                rng.next_u64(),
+                &["CNN4", "SNN8_BRAM"],
+                2,
+                1 + rng.below(3),
+                0.01,
+                rng.chance(0.5),
+            );
+        }
+        let (report, stats) = loadgen::run_sim(&spec).map_err(|e| e.to_string())?;
+        prop_assert!(
+            report.offered == spec.loadgen.requests,
+            "every generated request must reach admission: {} vs {}",
+            report.offered,
+            spec.loadgen.requests
+        );
+        conserved(&report, &stats)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Golden chaos spec: digest pin + byte determinism
+// ---------------------------------------------------------------------------
+
+/// The committed golden spec is the file the CI chaos-smoke job replays;
+/// its bytes are digest-pinned so a drive-by edit cannot silently change
+/// what "the golden chaos run" means, and it round-trips the wire codec.
+#[test]
+fn golden_chaos_spec_digest_is_pinned_and_roundtrips() {
+    let bytes = std::fs::read(CHAOS_SPEC_PATH).expect("reading golden chaos spec");
+    assert_eq!(bytes.len(), CHAOS_SPEC_LEN, "golden spec length changed");
+    assert_eq!(
+        fnv1a64(&bytes),
+        CHAOS_SPEC_DIGEST,
+        "golden spec digest changed — if intentional, re-pin digest + length here"
+    );
+    let spec = chaos_spec();
+    assert_eq!(spec.loadgen.scenario, Scenario::FlashCrowd);
+    assert!(spec.loadgen.class_mix.is_active(), "the golden run exercises the class mix");
+    assert!(!spec.faults.is_empty(), "the golden run injects faults");
+    let back: DeploymentSpec = from_text(&to_text(&spec)).unwrap();
+    assert_eq!(back, spec);
+}
+
+/// Acceptance: the fixed-seed chaos run is byte-deterministic — two
+/// invocations of the golden spec produce identical `GatewayStats` JSON
+/// (faults, requeues, per-class ledgers and all) and identical routing
+/// decisions — and the chaos demonstrably bit (faults applied, requests
+/// rejected) while conservation still holds.
+#[test]
+fn golden_chaos_run_is_byte_deterministic_and_conserved() {
+    let spec = chaos_spec();
+    let (rep1, stats1) = loadgen::run_sim(&spec).unwrap();
+    let (rep2, stats2) = loadgen::run_sim(&spec).unwrap();
+    assert_eq!(rep1.decisions, rep2.decisions);
+    assert_eq!(rep1.classes, rep2.classes);
+    let json1 = to_text(&stats1);
+    let json2 = to_text(&stats2);
+    assert_eq!(json1.as_bytes(), json2.as_bytes(), "chaos GatewayStats JSON must be bit-stable");
+
+    assert!(!stats1.faults.is_empty(), "the fault plan must fire");
+    assert!(stats1.faults.iter().any(|f| f.action == "kill"));
+    assert!(stats1.faults.iter().any(|f| f.action == "recover"));
+    assert!(
+        stats1.rejected > 0,
+        "a device-wide kill during the flash crowd must shed some requests"
+    );
+    conserved(&rep1, &stats1).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Starvation regression: WFQ protects the interactive class
+// ---------------------------------------------------------------------------
+
+/// A best-effort flood (96 requests, all at t = 0) must not starve 24
+/// interactive requests sharing the same single-shard design: under the
+/// 8:4:1 weighted-fair dequeue the interactive class drains at ~8/9 of
+/// the service slots while both classes are backlogged, every
+/// interactive request finishes far inside its deadline, and the
+/// realized share stays within the pinned error bound of the ideal.
+#[test]
+fn best_effort_flood_cannot_starve_interactive_requests() {
+    let mut cfg = GatewayConfig {
+        max_batch: 1, // serialize: one service slot at a time
+        queue_cap: 1000,
+        batch_max_wait_s: 1e-4,
+        ..GatewayConfig::default()
+    };
+    cfg.autoscale.enabled = false; // one shard, no relief: pure WFQ
+    let mut sim = SimGateway::new(vec![tiny_spec("tiny-p8", 8, 1)], &cfg).unwrap();
+    let (lat, _) = sim.router().price(0);
+    let deadline = 200.0 * lat; // admits through the full backlog estimate
+
+    let flood = 96usize;
+    let vips = 24usize;
+    for _ in 0..flood {
+        sim.offer(SimRequest {
+            dataset: "tiny".to_string(),
+            x: image(),
+            slo: Slo::latency(10.0), // best-effort, no deadline
+            arrival_s: 0.0,
+        })
+        .unwrap();
+    }
+    for _ in 0..vips {
+        sim.offer(SimRequest {
+            dataset: "tiny".to_string(),
+            x: image(),
+            slo: Slo::latency(10.0).with_deadline(deadline).for_class(SloClass::Interactive),
+            arrival_s: 0.0,
+        })
+        .unwrap();
+    }
+    let outcomes = sim.finish();
+    let stats = sim.shutdown();
+
+    // Every request of both classes was admitted and served.
+    assert_eq!(stats.offered, flood + vips);
+    assert_eq!(stats.rejected, 0, "the flood fits the queue; nothing may be shed");
+    assert_eq!(stats.served, flood + vips);
+
+    // No interactive request misses its deadline despite the flood.
+    let interactive = &stats.classes[SloClass::Interactive.index()];
+    assert_eq!(interactive.offered, vips);
+    assert_eq!(interactive.served, vips);
+    assert_eq!(interactive.deadline_misses, 0, "the flood must not push VIPs past deadline");
+
+    // Completion order: sort by completion time and find where the
+    // interactive class drains.  Ideal WFQ gives interactive 8 of every
+    // 9 slots while both classes are backlogged, so 24 VIPs drain within
+    // ~27 slots of the 120; pin a small slack for dispatch tie-breaks.
+    let mut order: Vec<(f64, SloClass)> =
+        outcomes.iter().map(|o| (o.arrival_s + o.service_s, o.class)).collect();
+    order.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let last_vip = order
+        .iter()
+        .rposition(|(_, c)| *c == SloClass::Interactive)
+        .expect("interactive completions exist");
+    assert!(
+        last_vip < 32,
+        "starvation: last interactive completion at slot {} of {} (ideal ~27)",
+        last_vip + 1,
+        order.len()
+    );
+    let vip_share = order[..=last_vip]
+        .iter()
+        .filter(|(_, c)| *c == SloClass::Interactive)
+        .count() as f64
+        / (last_vip + 1) as f64;
+    let ideal = 8.0 / 9.0;
+    assert!(
+        (vip_share - ideal).abs() <= 0.1,
+        "WFQ share error too large: realized {vip_share:.3} vs ideal {ideal:.3}"
+    );
+
+    // And the flood still finishes: a weighted share is not a lockout.
+    let p99_vip: f64 = order[..=last_vip]
+        .iter()
+        .filter(|(_, c)| *c == SloClass::Interactive)
+        .map(|(t, _)| *t)
+        .fold(0.0, f64::max);
+    assert!(p99_vip < deadline, "worst interactive completion {p99_vip} vs deadline {deadline}");
+    let best_effort = &stats.classes[SloClass::BestEffort.index()];
+    assert_eq!(best_effort.served, flood);
+}
+
+// ---------------------------------------------------------------------------
+// Requeue reconciliation after a mid-flight kill
+// ---------------------------------------------------------------------------
+
+/// Kill the only shard while a batch is in flight, then recover it: the
+/// in-flight work re-queues (keeping arrival order), is eventually
+/// served, and the requeue counters agree between the outcomes, the
+/// queue stats and the fault log — with the conservation identity
+/// intact the whole way.
+#[test]
+fn mid_flight_kill_requeues_and_the_books_still_balance() {
+    let mut cfg = GatewayConfig {
+        max_batch: 4,
+        queue_cap: 64,
+        batch_max_wait_s: 1e-4,
+        ..GatewayConfig::default()
+    };
+    cfg.autoscale.enabled = false;
+    let mut sim = SimGateway::new(vec![tiny_spec("tiny-p8", 8, 1)], &cfg).unwrap();
+    let (lat, _) = sim.router().price(0);
+    // The first batch of 4 dispatches at t = 0 and completes at 4×lat;
+    // kill inside that window, recover before the backlog drains.
+    sim.set_fault_plan(FaultPlan {
+        events: vec![
+            FaultEvent::kill(2.0 * lat, "tiny-p8", 0),
+            FaultEvent::recover(3.0 * lat, "tiny-p8", 0),
+        ],
+    })
+    .unwrap();
+    for _ in 0..12 {
+        sim.offer(SimRequest {
+            dataset: "tiny".to_string(),
+            x: image(),
+            slo: Slo::latency(10.0),
+            arrival_s: 0.0,
+        })
+        .unwrap();
+    }
+    let outcomes = sim.finish();
+    let stats = sim.shutdown();
+
+    // The kill re-queued the in-flight batch; after recovery everything
+    // is served — nothing lost, nothing double-counted.
+    assert_eq!(stats.offered, 12);
+    assert_eq!(stats.served, 12);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.queues[0].requeued, 4, "the in-flight batch of 4 must re-queue");
+    assert_eq!(stats.queues[0].rejected_shard_lost, 0);
+    let outcome_requeues: usize = outcomes.iter().map(|o| o.requeues).sum();
+    assert_eq!(outcome_requeues, 4);
+    let kill = stats.faults.iter().find(|f| f.action == "kill").expect("kill record");
+    assert_eq!((kill.requeued, kill.lost), (4, 0));
+    assert!(stats.faults.iter().any(|f| f.action == "recover"));
+    assert!(outcomes.iter().all(|o| o.admitted && o.ok));
+}
+
+/// Without a recovery the stranded backlog is shed as `ShardLost` at
+/// drain time, and the revoked admissions move to the rejected side of
+/// the ledger — `submitted == served + rejected` still holds exactly.
+#[test]
+fn unrecovered_kill_sheds_the_backlog_but_conserves_the_ledger() {
+    let mut cfg = GatewayConfig {
+        max_batch: 4,
+        queue_cap: 64,
+        batch_max_wait_s: 1e-4,
+        ..GatewayConfig::default()
+    };
+    cfg.autoscale.enabled = false;
+    let mut sim = SimGateway::new(vec![tiny_spec("tiny-p8", 8, 1)], &cfg).unwrap();
+    let (lat, _) = sim.router().price(0);
+    sim.set_fault_plan(FaultPlan { events: vec![FaultEvent::kill(2.0 * lat, "tiny-p8", 0)] })
+        .unwrap();
+    for _ in 0..12 {
+        sim.offer(SimRequest {
+            dataset: "tiny".to_string(),
+            x: image(),
+            slo: Slo::latency(10.0),
+            arrival_s: 0.0,
+        })
+        .unwrap();
+    }
+    let outcomes = sim.finish();
+    let stats = sim.shutdown();
+    assert_eq!(stats.offered, 12);
+    assert_eq!(stats.offered, stats.served + stats.rejected);
+    assert!(stats.rejected > 0, "a dead fleet must shed its stranded backlog");
+    assert_eq!(stats.queues[0].rejected_shard_lost, stats.rejected);
+    let shed = outcomes.iter().filter(|o| !o.admitted).count();
+    assert_eq!(shed, stats.rejected);
+}

@@ -148,6 +148,7 @@ fn routing_is_deterministic_under_a_fixed_seed() {
             seed: 7,
             slo: Slo::latency(10.0),
             gap: Duration::from_micros(50),
+            ..Default::default()
         };
         let report = loadgen::run(&gw, &cfg, &pools).unwrap();
         let stats = gw.shutdown();
@@ -261,6 +262,7 @@ fn gateway_stats_equal_sum_of_shard_server_stats() {
         seed: 3,
         slo: Slo::latency(10.0),
         gap: Duration::from_micros(50),
+        ..Default::default()
     };
     let report = loadgen::run(&gw, &cfg, &pools).unwrap();
     assert_eq!(report.served, 24);

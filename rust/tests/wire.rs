@@ -10,12 +10,14 @@ use std::fmt::Debug;
 use std::time::Duration;
 
 use spikebench::coordinator::gateway::{
-    AutoscaleConfig, AutoscaleEvent, DesignStats, Gateway, GatewayConfig, GatewayStats,
-    PricedDesign, QueueStats, ShardStats, Slo,
+    AutoscaleConfig, AutoscaleEvent, ClassStats, DesignStats, FaultEvent, FaultPlan,
+    FaultRecord, Gateway, GatewayConfig, GatewayStats, PricedDesign, QueueStats, ShardStats,
+    Slo, SloClass,
 };
 use spikebench::coordinator::serve::ServerStats;
 use spikebench::coordinator::loadgen::{
-    self, DeploymentSpec, ExecutorEntry, LoadgenConfig, LoadgenReport, Scenario,
+    self, ArrivalTrace, ClassMix, ClassReport, DeploymentSpec, ExecutorEntry, LoadgenConfig,
+    LoadgenReport, Scenario, TraceEvent,
 };
 use spikebench::coordinator::sweep::SweepCounters;
 use spikebench::fpga::device::PYNQ_Z1;
@@ -70,9 +72,31 @@ fn stats_types_roundtrip() {
         admitted: 64,
         rejected_full: 12,
         rejected_deadline: 4,
+        rejected_shard_lost: 3,
+        requeued: 2,
         max_depth: 16,
         total_wait_s: 0.0375,
         deadline_misses: 2,
+    });
+    roundtrip(&ClassStats {
+        class: SloClass::Interactive,
+        offered: 40,
+        admitted: 36,
+        served: 30,
+        failed: 1,
+        rejected_full: 2,
+        rejected_deadline: 1,
+        rejected_shard_lost: 1,
+        requeued: 3,
+        deadline_misses: 4,
+    });
+    roundtrip(&FaultRecord {
+        t_s: 0.0025,
+        design: "CNN4".into(),
+        shard: 1,
+        action: "kill".into(),
+        lost: 2,
+        requeued: 3,
     });
     roundtrip(&AutoscaleEvent {
         t_s: 0.0016,
@@ -117,8 +141,22 @@ fn stats_types_roundtrip() {
             admitted: 64,
             rejected_full: 12,
             rejected_deadline: 4,
+            rejected_shard_lost: 0,
+            requeued: 0,
             max_depth: 16,
             total_wait_s: 0.0375,
+            deadline_misses: 2,
+        }],
+        classes: vec![ClassStats {
+            class: SloClass::BestEffort,
+            offered: 80,
+            admitted: 64,
+            served: 63,
+            failed: 1,
+            rejected_full: 12,
+            rejected_deadline: 4,
+            rejected_shard_lost: 0,
+            requeued: 0,
             deadline_misses: 2,
         }],
         autoscale_events: vec![AutoscaleEvent {
@@ -127,6 +165,14 @@ fn stats_types_roundtrip() {
             from_shards: 2,
             to_shards: 1,
             queue_depth: 0,
+        }],
+        faults: vec![FaultRecord {
+            t_s: 0.001,
+            design: "d".into(),
+            shard: 0,
+            action: "kill".into(),
+            lost: 1,
+            requeued: 1,
         }],
     });
     roundtrip(&PricedDesign {
@@ -147,8 +193,13 @@ fn config_types_roundtrip() {
         max_latency_s: 0.001,
         max_energy_j: Some(2.5e-6),
         deadline_s: Some(0.004),
+        class: SloClass::Interactive,
     });
     roundtrip(&Slo::latency(0.01).with_deadline(0.002));
+    for class in SloClass::all() {
+        roundtrip(&class);
+        roundtrip(&Slo::latency(0.05).for_class(class));
+    }
     roundtrip(&AutoscaleConfig::default());
     roundtrip(&AutoscaleConfig {
         enabled: false,
@@ -168,13 +219,42 @@ fn config_types_roundtrip() {
     for s in Scenario::all() {
         roundtrip(&s);
     }
+    roundtrip(&Scenario::Trace(ArrivalTrace {
+        name: "recorded".into(),
+        events: vec![
+            TraceEvent {
+                t_s: 0.0,
+                dataset: "mnist".into(),
+                class: SloClass::Interactive,
+                deadline_s: Some(0.01),
+            },
+            TraceEvent {
+                t_s: 0.002,
+                dataset: String::new(),
+                class: SloClass::BestEffort,
+                deadline_s: None,
+            },
+        ],
+    }));
+    roundtrip(&ClassMix::default());
+    roundtrip(&ClassMix { interactive: 8.0, batch: 0.5, best_effort: 1.5 });
+    roundtrip(&FaultEvent::kill(0.001, "CNN4", 1));
+    roundtrip(&FaultEvent::recover_device(0.002, "pynq"));
+    roundtrip(&FaultPlan::default());
+    roundtrip(&FaultPlan::seeded(11, &["CNN4", "SNN8_BRAM"], 2, 3, 0.01, true));
     roundtrip(&LoadgenConfig::default());
     roundtrip(&LoadgenConfig {
         scenario: Scenario::Ramp,
         requests: 96,
         seed: 1234567890123,
-        slo: Slo { max_latency_s: 0.2, max_energy_j: Some(1e-5), deadline_s: Some(0.01) },
+        slo: Slo {
+            max_latency_s: 0.2,
+            max_energy_j: Some(1e-5),
+            deadline_s: Some(0.01),
+            class: SloClass::Batch,
+        },
         gap: Duration::from_micros(137),
+        class_mix: ClassMix { interactive: 2.0, batch: 1.0, best_effort: 1.0 },
     });
     roundtrip(&ExecutorEntry {
         design: "SNN8_CIFAR".into(),
@@ -189,6 +269,15 @@ fn config_types_roundtrip() {
         99,
         LoadgenConfig { scenario: Scenario::Mixed, ..Default::default() },
     ));
+    let mut chaos_spec = DeploymentSpec::synthetic(
+        &["mnist"],
+        "pynq",
+        2,
+        3,
+        LoadgenConfig { scenario: Scenario::FlashCrowd, ..Default::default() },
+    );
+    chaos_spec.faults = FaultPlan::seeded(3, &["CNN4"], 2, 2, 0.005, false);
+    roundtrip(&chaos_spec);
 }
 
 #[test]
@@ -198,10 +287,12 @@ fn report_types_roundtrip() {
         decisions: vec![("CNN4".into(), false), ("SNN8_BRAM".into(), true)],
         offered: 5,
         admitted: 2,
-        rejected_full: 2,
+        rejected_full: 1,
         rejected_deadline: 1,
+        rejected_shard_lost: 1,
         rejection_rate: 0.6,
         deadline_misses: 1,
+        requeued: 2,
         served: 2,
         failed: 0,
         slo_misses: 1,
@@ -213,6 +304,16 @@ fn report_types_roundtrip() {
         p99_service_ms: 1.9,
         mean_routed_latency_ms: 0.37,
         routed_energy_j: 4.2e-6,
+        classes: vec![ClassReport {
+            class: SloClass::Interactive,
+            offered: 5,
+            served: 2,
+            failed: 0,
+            rejected: 3,
+            deadline_misses: 1,
+            p50_service_ms: 0.41,
+            p99_service_ms: 1.9,
+        }],
     });
     roundtrip(&BenchResult {
         group: "hotpath".into(),
@@ -267,7 +368,9 @@ fn live_gateway_stats_roundtrip() {
             seed: 5,
             slo: Slo::latency(0.05),
             gap: Duration::from_micros(50),
+            ..Default::default()
         },
+        faults: FaultPlan::default(),
     };
     let (gateway, pools) = Gateway::from_spec(&spec).unwrap();
     let table = gateway.router().table();
@@ -306,7 +409,9 @@ fn live_sim_stats_roundtrip() {
             seed: 7,
             slo: Slo::latency(0.05).with_deadline(0.02),
             gap: Duration::from_micros(100),
+            ..Default::default()
         },
+        faults: FaultPlan::default(),
     };
     let (report, stats) = loadgen::run_sim(&spec).unwrap();
     roundtrip(&report);
@@ -328,6 +433,7 @@ fn spec_reproduces_in_code_routing_decisions() {
         seed: 9,
         slo: Slo::latency(0.05),
         gap: Duration::from_micros(50),
+        ..Default::default()
     };
     // In-code path: synthetic_specs + Gateway::start.
     let (specs, pools) = loadgen::synthetic_specs(&["mnist"], PYNQ_Z1, 1, 9).unwrap();
