@@ -900,8 +900,8 @@ pub fn drive(
         throughput_rps: served as f64 / wall.as_secs_f64().max(1e-9),
         sim_duration_s: 0.0,
         sim_throughput_rps: 0.0,
-        p50_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 50.0) },
-        p99_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 99.0) },
+        p50_service_ms: percentile(&service, 50.0).unwrap_or(0.0),
+        p99_service_ms: percentile(&service, 99.0).unwrap_or(0.0),
         mean_routed_latency_ms: routed_latency.mean(),
         routed_energy_j: routed_energy,
         // The threaded path keeps no per-class accounting.
@@ -1006,10 +1006,8 @@ pub fn simulate(
     let classes = by_class
         .into_iter()
         .map(|(mut c, c_service)| {
-            if !c_service.is_empty() {
-                c.p50_service_ms = percentile(&c_service, 50.0);
-                c.p99_service_ms = percentile(&c_service, 99.0);
-            }
+            c.p50_service_ms = percentile(&c_service, 50.0).unwrap_or(0.0);
+            c.p99_service_ms = percentile(&c_service, 99.0).unwrap_or(0.0);
             c
         })
         .collect();
@@ -1033,8 +1031,8 @@ pub fn simulate(
         throughput_rps: served as f64 / wall.as_secs_f64().max(1e-9),
         sim_duration_s: sim_end,
         sim_throughput_rps: if sim_end > 0.0 { served as f64 / sim_end } else { 0.0 },
-        p50_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 50.0) },
-        p99_service_ms: if service.is_empty() { 0.0 } else { percentile(&service, 99.0) },
+        p50_service_ms: percentile(&service, 50.0).unwrap_or(0.0),
+        p99_service_ms: percentile(&service, 99.0).unwrap_or(0.0),
         mean_routed_latency_ms: routed_latency.mean(),
         routed_energy_j: routed_energy,
         classes,

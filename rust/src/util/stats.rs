@@ -56,12 +56,20 @@ impl Summary {
 }
 
 /// Percentile (nearest-rank on a sorted copy).
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty(), "percentile of empty slice");
+///
+/// Returns `None` for an empty slice — an empty sample set has no order
+/// statistics, and silently inventing one (0.0) has bitten report code
+/// before. NaN observations are ordered by IEEE total order (after every
+/// real number), so a slice containing NaN still sorts deterministically
+/// instead of panicking mid-comparison.
+pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-    v[rank.min(v.len() - 1)]
+    Some(v[rank.min(v.len() - 1)])
 }
 
 /// Fixed-bin histogram over [lo, hi] with out-of-range clamping.
@@ -111,8 +119,8 @@ impl Histogram {
         &self.samples
     }
 
-    /// Nearest-rank percentile of the added values.
-    pub fn percentile(&self, p: f64) -> f64 {
+    /// Nearest-rank percentile of the added values (`None` when empty).
+    pub fn percentile(&self, p: f64) -> Option<f64> {
         percentile(&self.samples, p)
     }
 
@@ -167,9 +175,34 @@ mod tests {
     #[test]
     fn percentile_nearest_rank() {
         let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&xs, 0.0), 1.0);
-        assert_eq!(percentile(&xs, 100.0), 100.0);
-        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert_eq!(percentile(&xs, 100.0), Some(100.0));
+        assert!((percentile(&xs, 50.0).unwrap() - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn percentile_of_empty_slice_is_none_not_a_panic() {
+        assert_eq!(percentile(&[], 50.0), None);
+        assert_eq!(percentile(&[], 0.0), None);
+        assert_eq!(Histogram::new(0.0, 1.0, 4).percentile(99.0), None);
+    }
+
+    #[test]
+    fn percentile_of_one_element_is_that_element() {
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], p), Some(7.5));
+        }
+    }
+
+    #[test]
+    fn percentile_with_nan_inputs_does_not_panic() {
+        // IEEE total order puts NaN after every real number, so low
+        // percentiles still see the finite values and p100 reports NaN
+        // (the caller asked for the largest element of a set containing
+        // one) — but no comparison panics.
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), Some(1.0));
+        assert!(percentile(&xs, 100.0).unwrap().is_nan());
     }
 
     #[test]
