@@ -172,6 +172,36 @@ impl Bench {
     }
 }
 
+/// Wrap recorded measurements in the `BENCH_*.json` artifact envelope.
+///
+/// The committed perf trajectory needs provenance to be comparable run
+/// over run: a schema tag, the crate version, the host OS/arch the
+/// numbers were taken on, and free-form notes (toolchain, machine class,
+/// or why a run has no numbers at all). The `results` array holds the
+/// same [`BenchResult`] records [`Bench::results_json`] emits.
+pub fn envelope(results: &[BenchResult], notes: &str) -> Json {
+    Obj::new()
+        .raw("kind", Json::Str("bench".into()))
+        .field("schema", &1usize)
+        .raw("crate_version", Json::Str(env!("CARGO_PKG_VERSION").into()))
+        .raw("host_os", Json::Str(std::env::consts::OS.into()))
+        .raw("host_arch", Json::Str(std::env::consts::ARCH.into()))
+        .field("notes", notes)
+        .raw("results", Json::Arr(results.iter().map(ToJson::to_json).collect()))
+        .build()
+}
+
+/// Decode the `results` array back out of a `BENCH_*.json` envelope
+/// (provenance fields are advisory; a bad `kind` is still an error).
+pub fn from_envelope(v: &Json) -> Result<Vec<BenchResult>, WireError> {
+    let d = De::root(v);
+    let kind: String = d.req("kind")?;
+    if kind != "bench" {
+        return Err(d.err(format!("expected a bench artifact, found kind {kind:?}")));
+    }
+    d.req("results")
+}
+
 /// Human formatting for durations down to nanoseconds.
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos();
@@ -219,6 +249,21 @@ mod tests {
         assert_eq!(rs[1].samples, 2);
         assert!(rs[1].throughput_items_per_s.unwrap() > 0.0);
         assert!(rs[1].min_s <= rs[1].mean_s && rs[1].mean_s <= rs[1].max_s);
+    }
+
+    #[test]
+    fn envelope_roundtrips_and_rejects_foreign_kinds() {
+        let b = Bench::new("grp").warmup(0).samples(2);
+        b.run("noop", || 1 + 1);
+        let env = envelope(&b.results(), "test host");
+        let back = from_envelope(&env).unwrap();
+        assert_eq!(back, b.results());
+        // An empty trajectory is a valid artifact (a run with no numbers
+        // still records its provenance).
+        assert_eq!(from_envelope(&envelope(&[], "no toolchain")).unwrap(), vec![]);
+        let Json::Obj(mut m) = envelope(&[], "x") else { unreachable!() };
+        m.insert("kind".into(), Json::Str("table".into()));
+        assert!(from_envelope(&Json::Obj(m)).is_err());
     }
 
     #[test]

@@ -147,7 +147,7 @@ impl Json {
         out
     }
 
-    fn write(&self, out: &mut String, indent: usize) {
+    pub(crate) fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
@@ -210,7 +210,7 @@ impl Json {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {

@@ -1,13 +1,24 @@
-//! Summary statistics and histograms.
+//! Summary statistics, histograms, and streaming quantile sketches.
 //!
 //! The paper explicitly reports *distributions* (latency / power / energy
 //! histograms over 1,000 input samples, Figs. 7, 9, 12–15) rather than
 //! averages — "we show the full ranges instead".  [`Histogram`] is the
 //! reproduction of that reporting style, including an ASCII rendering used
 //! by the bench targets and examples.
+//!
+//! [`Sketch`] carries the same reporting style to serving scale: an
+//! HDR-style log-bucketed histogram with a **fixed** bucket layout, so
+//! percentiles over 10M requests cost a few KiB instead of a
+//! per-request `Vec<f64>`, merge across shards/classes, and stay
+//! byte-deterministic for a fixed seed.  [`Recorder`] pairs a sketch
+//! with a [`Summary`] — the ledger unit the serving stack folds every
+//! outcome into at retire time.
+
+use super::json::Json;
+use super::wire::{De, FromJson, Obj, ToJson, WireError};
 
 /// Running summary of a sample set (no allocation per observation).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Summary {
     /// Number of observations.
     pub n: usize,
@@ -53,6 +64,44 @@ impl Summary {
         let m = self.mean();
         ((self.sum_sq / self.n as f64 - m * m).max(0.0)).sqrt()
     }
+
+    /// Absorb another summary (the moment-wise merge).
+    pub fn merge(&mut self, other: &Summary) {
+        self.n += other.n;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl ToJson for Summary {
+    fn to_json(&self) -> Json {
+        let o = Obj::new()
+            .field("n", &self.n)
+            .field("sum", &self.sum)
+            .field("sum_sq", &self.sum_sq);
+        // min/max are ±∞ sentinels while empty; JSON has no infinities
+        // (they would serialize as null), so they ride only when real.
+        if self.n > 0 {
+            o.field("min", &self.min).field("max", &self.max).build()
+        } else {
+            o.build()
+        }
+    }
+}
+
+impl FromJson for Summary {
+    fn from_json(v: &Json) -> Result<Summary, WireError> {
+        let d = De::root(v);
+        Ok(Summary {
+            n: d.req("n")?,
+            sum: d.req("sum")?,
+            sum_sq: d.req("sum_sq")?,
+            min: d.opt_or("min", f64::INFINITY)?,
+            max: d.opt_or("max", f64::NEG_INFINITY)?,
+        })
+    }
 }
 
 /// Percentile (nearest-rank on a sorted copy).
@@ -70,6 +119,265 @@ pub fn percentile(xs: &[f64], p: f64) -> Option<f64> {
     v.sort_by(|a, b| a.total_cmp(b));
     let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
     Some(v[rank.min(v.len() - 1)])
+}
+
+// ---------------------------------------------------------------------------
+// Streaming quantile sketch
+// ---------------------------------------------------------------------------
+
+/// Number of linear sub-buckets per power-of-two octave (2^7).
+const SUB_BITS: u32 = 7;
+const SUBS: usize = 1 << SUB_BITS;
+/// Smallest resolvable magnitude: 2^-40 ≈ 9.1e-13.  Everything the stack
+/// records (seconds, joules) sits far above it; smaller values (and 0,
+/// negatives, NaN) clamp into the underflow bucket.
+const MIN_EXP: i32 = -40;
+/// One past the largest resolvable octave: 2^24 ≈ 1.7e7 (≈ 194 days of
+/// simulated time).  Values at or above clamp into the overflow bucket.
+const MAX_EXP: i32 = 24;
+const OCTAVES: usize = (MAX_EXP - MIN_EXP) as usize;
+/// Total bucket count: underflow + OCTAVES×SUBS log-linear + overflow.
+const BUCKETS: usize = 2 + (OCTAVES << SUB_BITS);
+/// 2^MIN_EXP / 2^MAX_EXP as exact f64 powers of two.
+const MIN_VALUE: f64 = 1.0 / (1u64 << -MIN_EXP) as f64;
+const MAX_VALUE: f64 = (1u64 << MAX_EXP) as f64;
+
+/// Exact power of two via bit assembly (exponent range of normals only).
+fn pow2(e: i32) -> f64 {
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// Deterministic mergeable quantile sketch: an HDR-style log-bucketed
+/// histogram with a fixed, compile-time bucket layout.
+///
+/// Each power-of-two octave in `[2^-40, 2^24)` is split into 128 linear
+/// sub-buckets, for 8194 buckets total (plus underflow/overflow), ≈ 64
+/// KiB of counts — **O(1) in the number of observations**.  Buckets are
+/// derived from the raw IEEE-754 bits (exponent + top 7 mantissa bits),
+/// never from `log()`, so the same inputs land in the same buckets on
+/// every platform and a fixed-seed run reports byte-identical
+/// percentiles.
+///
+/// **Error bound.** [`Sketch::quantile`] returns the midpoint of the
+/// bucket holding the requested order statistic, so for values inside
+/// the resolvable range the result is within a relative error of
+/// [`Sketch::RELATIVE_ERROR`] (= 1/256 ≈ 0.4%) of the exact nearest-rank
+/// percentile.  Underflowed values report as 0.0 and overflowed ones as
+/// the range ceiling.
+///
+/// Merging two sketches sums their bucket counts, so `merge` is exact
+/// (associative and commutative — the merged sketch equals the sketch of
+/// the concatenated sample streams).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sketch {
+    counts: Vec<u64>,
+    n: u64,
+}
+
+impl Default for Sketch {
+    fn default() -> Self {
+        Sketch::new()
+    }
+}
+
+impl Sketch {
+    /// Guaranteed relative accuracy of [`Sketch::quantile`] for values in
+    /// the resolvable range: half of one sub-bucket's relative width.
+    pub const RELATIVE_ERROR: f64 = 1.0 / 256.0;
+
+    /// Empty sketch (the one fixed layout).
+    pub fn new() -> Sketch {
+        Sketch { counts: vec![0; BUCKETS], n: 0 }
+    }
+
+    /// Bucket index for a value (pure bit arithmetic, no libm).
+    fn bucket(v: f64) -> usize {
+        // NaN, negatives, zero and underflow all fail this comparison.
+        if !(v > MIN_VALUE) {
+            return 0;
+        }
+        if v >= MAX_VALUE {
+            return BUCKETS - 1;
+        }
+        let bits = v.to_bits();
+        let exp = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        let sub = ((bits >> (52 - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+        1 + (((exp - MIN_EXP) as usize) << SUB_BITS) + sub
+    }
+
+    /// Midpoint of a bucket (what quantile queries report).
+    fn representative(idx: usize) -> f64 {
+        if idx == 0 {
+            return 0.0;
+        }
+        if idx == BUCKETS - 1 {
+            return MAX_VALUE;
+        }
+        let i = idx - 1;
+        let oct = (i >> SUB_BITS) as i32;
+        let sub = i & (SUBS - 1);
+        pow2(MIN_EXP + oct) * (1.0 + (sub as f64 + 0.5) / SUBS as f64)
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, v: f64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.n += 1;
+    }
+
+    /// Record `k` observations of the same value.
+    pub fn record_n(&mut self, v: f64, k: u64) {
+        self.counts[Self::bucket(v)] += k;
+        self.n += k;
+    }
+
+    /// Absorb another sketch (exact: bucket-wise count sum).
+    pub fn merge(&mut self, other: &Sketch) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Approximate `q`-quantile (`q` in `[0, 1]`), `None` when empty.
+    ///
+    /// Uses the same nearest-rank convention as [`percentile`] — the
+    /// target is the order statistic at rank `round(q × (n−1))` — and
+    /// returns the midpoint of the bucket holding it, so results agree
+    /// with the exact percentile to within [`Sketch::RELATIVE_ERROR`].
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.n == 0 {
+            return None;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (self.n - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Some(Self::representative(idx));
+            }
+        }
+        // Unreachable: cum reaches n > rank on the last bucket.
+        None
+    }
+}
+
+impl ToJson for Sketch {
+    /// Sparse encoding: only occupied buckets travel, as `[index, count]`
+    /// pairs, plus the layout constants so a decoder can refuse a sketch
+    /// recorded under a different layout instead of mis-binning it.
+    fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                debug_assert!((c as f64) <= crate::util::json::MAX_SAFE_INTEGER);
+                Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)])
+            })
+            .collect();
+        Obj::new()
+            .raw("sub_bits", Json::Num(SUB_BITS as f64))
+            .raw("min_exp", Json::Num(MIN_EXP as f64))
+            .raw("max_exp", Json::Num(MAX_EXP as f64))
+            .field("n", &(self.n as usize))
+            .raw("buckets", Json::Arr(buckets))
+            .build()
+    }
+}
+
+impl FromJson for Sketch {
+    fn from_json(v: &Json) -> Result<Sketch, WireError> {
+        let d = De::root(v);
+        let (sb, lo, hi): (usize, f64, f64) =
+            (d.req("sub_bits")?, d.req("min_exp")?, d.req("max_exp")?);
+        if sb != SUB_BITS as usize || lo != MIN_EXP as f64 || hi != MAX_EXP as f64 {
+            return Err(d.err(format!(
+                "incompatible sketch layout (sub_bits {sb}, exps [{lo}, {hi}]); \
+                 this build uses ({SUB_BITS}, [{MIN_EXP}, {MAX_EXP}])"
+            )));
+        }
+        let n: usize = d.req("n")?;
+        let mut s = Sketch::new();
+        for pair in d.field("buckets")?.items()? {
+            let pair_v: Vec<usize> = pair.get()?;
+            let &[idx, count] = pair_v.as_slice() else {
+                return Err(pair.err("expected [index, count] pair"));
+            };
+            if idx >= BUCKETS {
+                return Err(pair.err(format!("bucket index {idx} out of range")));
+            }
+            s.counts[idx] += count as u64;
+            s.n += count as u64;
+        }
+        if s.n != n as u64 {
+            return Err(d.err(format!("bucket counts sum to {} but n says {n}", s.n)));
+        }
+        Ok(s)
+    }
+}
+
+/// The serving stack's ledger unit: exact moments ([`Summary`]) plus the
+/// quantile [`Sketch`], fed one observation at a time as outcomes retire.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Recorder {
+    /// Exact running moments (n, mean, min/max, σ).
+    pub summary: Summary,
+    /// Log-bucketed quantile sketch over the same observations.
+    pub sketch: Sketch,
+}
+
+impl Recorder {
+    /// Empty recorder.
+    pub fn new() -> Recorder {
+        Recorder { summary: Summary::new(), sketch: Sketch::new() }
+    }
+
+    /// Record one observation into both halves.
+    pub fn record(&mut self, v: f64) {
+        self.summary.add(v);
+        self.sketch.record(v);
+    }
+
+    /// Absorb another recorder.
+    pub fn merge(&mut self, other: &Recorder) {
+        self.summary.merge(&other.summary);
+        self.sketch.merge(&other.sketch);
+    }
+
+    /// Approximate `q`-quantile (`q` in `[0, 1]`), `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        self.sketch.quantile(q)
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.sketch.count()
+    }
+}
+
+impl ToJson for Recorder {
+    fn to_json(&self) -> Json {
+        Obj::new().field("summary", &self.summary).field("sketch", &self.sketch).build()
+    }
+}
+
+impl FromJson for Recorder {
+    fn from_json(v: &Json) -> Result<Recorder, WireError> {
+        let d = De::root(v);
+        Ok(Recorder { summary: d.req("summary")?, sketch: d.req("sketch")? })
+    }
 }
 
 /// Fixed-bin histogram over [lo, hi] with out-of-range clamping.
@@ -147,6 +455,7 @@ impl Histogram {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
 
     #[test]
     fn summary_moments() {
@@ -203,6 +512,189 @@ mod tests {
         let xs = [2.0, f64::NAN, 1.0];
         assert_eq!(percentile(&xs, 0.0), Some(1.0));
         assert!(percentile(&xs, 100.0).unwrap().is_nan());
+    }
+
+    #[test]
+    fn summary_merge_matches_sequential_adds() {
+        let (a_xs, b_xs) = ([1.0, 5.0, 2.0], [9.0, 0.5]);
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        let mut both = Summary::new();
+        for x in a_xs {
+            a.add(x);
+            both.add(x);
+        }
+        for x in b_xs {
+            b.add(x);
+            both.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+        // Merging an empty summary is a no-op (the ±∞ sentinels must
+        // not leak into min/max).
+        both.merge(&Summary::new());
+        assert_eq!(a, both);
+    }
+
+    #[test]
+    fn summary_roundtrips_the_wire_including_empty() {
+        let mut s = Summary::new();
+        for x in [0.25, 3.0, 17.5] {
+            s.add(x);
+        }
+        let back = Summary::from_json(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+        let empty = Summary::from_json(&Summary::new().to_json()).unwrap();
+        assert_eq!(empty, Summary::new());
+        assert_eq!(empty.min, f64::INFINITY);
+    }
+
+    #[test]
+    fn sketch_buckets_are_monotone_in_value() {
+        // Walk a dense sweep of magnitudes; bucket index must never
+        // decrease as the value grows, and every in-range value must
+        // land strictly between the underflow and overflow buckets.
+        let mut prev = 0;
+        let mut v = 1e-9;
+        while v < 1e6 {
+            let b = Sketch::bucket(v);
+            assert!(b >= prev, "bucket regressed at {v}");
+            assert!(b > 0 && b < BUCKETS - 1, "in-range {v} hit a clamp bucket");
+            prev = b;
+            v *= 1.001;
+        }
+        // The const range bounds are the exact powers of two the bucket
+        // math assumes.
+        assert_eq!(MIN_VALUE, pow2(MIN_EXP));
+        assert_eq!(MAX_VALUE, pow2(MAX_EXP));
+        assert_eq!(Sketch::bucket(0.0), 0);
+        assert_eq!(Sketch::bucket(-3.0), 0);
+        assert_eq!(Sketch::bucket(f64::NAN), 0);
+        assert_eq!(Sketch::bucket(1e-300), 0);
+        assert_eq!(Sketch::bucket(f64::INFINITY), BUCKETS - 1);
+        assert_eq!(Sketch::bucket(1e18), BUCKETS - 1);
+    }
+
+    #[test]
+    fn sketch_representative_lies_inside_its_bucket() {
+        for v in [1e-9, 0.003, 0.5, 1.0, 42.0, 9999.0, 1.23e6] {
+            let b = Sketch::bucket(v);
+            let r = Sketch::representative(b);
+            assert_eq!(Sketch::bucket(r), b, "representative of {v}'s bucket escaped it");
+            assert!((r - v).abs() <= v / 128.0, "representative {r} too far from {v}");
+        }
+    }
+
+    #[test]
+    fn sketch_quantile_is_within_documented_error_of_exact_percentile() {
+        // Seeded log-normal-ish workload spanning several octaves —
+        // shaped like the service-time distributions the stack records.
+        let mut rng = crate::util::rng::Rng::new(0xD15C);
+        let xs: Vec<f64> =
+            (0..10_000).map(|_| (rng.normal() as f64 * 1.3).exp() * 4e-3).collect();
+        let mut sk = Sketch::new();
+        for &x in &xs {
+            sk.record(x);
+        }
+        for q in [0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let exact = percentile(&xs, q * 100.0).unwrap();
+            let approx = sk.quantile(q).unwrap();
+            let rel = (approx - exact).abs() / exact;
+            assert!(
+                rel <= Sketch::RELATIVE_ERROR,
+                "q={q}: sketch {approx} vs exact {exact} (rel err {rel:.5} > 1/256)"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_merge_is_associative_and_commutative() {
+        let cfg = crate::util::quickcheck::Config { cases: 64, seed: 0x5EED_5EED };
+        crate::util::quickcheck::check("sketch_merge_algebra", cfg, |rng| {
+            let mut parts: Vec<Sketch> = (0..3).map(|_| Sketch::new()).collect();
+            for part in parts.iter_mut() {
+                for _ in 0..rng.below(200) {
+                    part.record((rng.normal() as f64).exp() * 0.01);
+                }
+            }
+            let [a, b, c] = &parts[..] else { unreachable!() };
+            // (a ∪ b) ∪ c == a ∪ (b ∪ c)
+            let mut left = a.clone();
+            left.merge(b);
+            left.merge(c);
+            let mut bc = b.clone();
+            bc.merge(c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            prop_assert!(left == right, "merge not associative");
+            // a ∪ b == b ∪ a
+            let mut ab = a.clone();
+            ab.merge(b);
+            let mut ba = b.clone();
+            ba.merge(a);
+            prop_assert!(ab == ba, "merge not commutative");
+            // Merged sketch equals the sketch of the concatenated stream.
+            let mut direct = Sketch::new();
+            for part in [a, b, c] {
+                for (i, &cnt) in part.counts.iter().enumerate() {
+                    if cnt > 0 {
+                        direct.record_n(Sketch::representative(i), cnt);
+                    }
+                }
+            }
+            prop_assert!(direct == left, "merge disagrees with concatenation");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sketch_roundtrips_the_wire_sparsely() {
+        let mut sk = Sketch::new();
+        for &v in &[1e-3, 1e-3, 0.5, 2.0e4, 0.0, f64::INFINITY] {
+            sk.record(v);
+        }
+        let j = sk.to_json();
+        // Sparse: 6 observations over 5 distinct buckets, not 8194 entries.
+        let Json::Obj(ref m) = j else { panic!("sketch must encode as object") };
+        let Some(Json::Arr(buckets)) = m.get("buckets") else { panic!("missing buckets") };
+        assert_eq!(buckets.len(), 5);
+        let back = Sketch::from_json(&j).unwrap();
+        assert_eq!(sk, back);
+        // Empty sketch survives too.
+        assert_eq!(Sketch::from_json(&Sketch::new().to_json()).unwrap(), Sketch::new());
+    }
+
+    #[test]
+    fn sketch_decode_rejects_foreign_layouts_and_bad_counts() {
+        let mut sk = Sketch::new();
+        sk.record(1.0);
+        let Json::Obj(mut m) = sk.to_json() else { unreachable!() };
+        m.insert("sub_bits".into(), Json::Num(5.0));
+        assert!(Sketch::from_json(&Json::Obj(m.clone())).is_err());
+        m.insert("sub_bits".into(), Json::Num(7.0));
+        m.insert("n".into(), Json::Num(99.0));
+        let err = Sketch::from_json(&Json::Obj(m)).unwrap_err();
+        assert!(err.to_string().contains("99"), "error should name the mismatch: {err}");
+    }
+
+    #[test]
+    fn empty_sketch_and_recorder_report_none() {
+        assert_eq!(Sketch::new().quantile(0.5), None);
+        assert_eq!(Recorder::new().quantile(0.99), None);
+        assert!(Sketch::new().is_empty());
+        assert_eq!(Recorder::new().count(), 0);
+    }
+
+    #[test]
+    fn recorder_roundtrips_the_wire() {
+        let mut r = Recorder::new();
+        for v in [0.004, 0.0071, 0.0123, 0.9] {
+            r.record(v);
+        }
+        let back = Recorder::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(back.count(), 4);
+        assert_eq!(back.summary.n, 4);
     }
 
     #[test]

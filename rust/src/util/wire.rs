@@ -67,8 +67,9 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::io;
 
-use super::json::{Json, JsonError, Lexer, MAX_DEPTH, MAX_SAFE_INTEGER};
+use super::json::{write_escaped, Json, JsonError, Lexer, MAX_DEPTH, MAX_SAFE_INTEGER};
 
 // ---------------------------------------------------------------------------
 // Errors
@@ -684,6 +685,222 @@ impl<'a> JsonReader<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming push-writer
+// ---------------------------------------------------------------------------
+
+/// Writer-side container frame. `open` flips when the bracket is actually
+/// emitted — deferred until the first child so empty containers print as
+/// `{}`/`[]`, exactly like [`Json::pretty`].
+enum WFrame {
+    Obj { count: usize, open: bool, have_key: bool },
+    Arr { count: usize, open: bool },
+}
+
+/// Incremental JSON writer — the write-side dual of [`JsonReader`].
+///
+/// Emits a document piece by piece straight to an [`io::Write`] sink, so a
+/// long artifact (e.g. a snapshot stream from a 10M-request run) never
+/// exists as an in-memory `Json` tree.  The byte output is **identical**
+/// to [`Json::pretty`] on the equivalent tree (2-space indent, sorted-key
+/// responsibility stays with the caller, same number/string/escape
+/// formatting, empty containers as `{}`/`[]`), so readers — including our
+/// own [`JsonReader`] and `repro checkjson` — cannot tell which path
+/// produced a file.
+///
+/// Structural misuse (a value where a key is due, unbalanced `end_*`)
+/// panics: that is a programming error, not an I/O condition.  I/O errors
+/// are sticky — the first failure is latched, subsequent writes become
+/// no-ops, and [`JsonWriter::finish`] reports it.
+///
+/// ```
+/// use spikebench::util::wire::JsonWriter;
+/// use spikebench::util::json::Json;
+///
+/// let mut w = JsonWriter::new(Box::new(Vec::new()));
+/// w.begin_object();
+/// w.key("runs");
+/// w.begin_array();
+/// w.value(&Json::Num(1.0));
+/// w.value(&Json::Num(2.0));
+/// w.end_array();
+/// w.end_object();
+/// w.finish().unwrap();
+/// ```
+pub struct JsonWriter {
+    out: Box<dyn io::Write>,
+    stack: Vec<WFrame>,
+    root_done: bool,
+    err: Option<io::Error>,
+}
+
+impl JsonWriter {
+    /// Writer over any byte sink. Wrap files in an `io::BufWriter` — the
+    /// writer emits many small pieces.
+    pub fn new(out: Box<dyn io::Write>) -> JsonWriter {
+        JsonWriter { out, stack: Vec::new(), root_done: false, err: None }
+    }
+
+    fn w(&mut self, s: &str) {
+        if self.err.is_some() {
+            return;
+        }
+        if let Err(e) = self.out.write_all(s.as_bytes()) {
+            self.err = Some(e);
+        }
+    }
+
+    /// Emit the enclosing container's deferred opening bracket.
+    fn materialize(&mut self) {
+        let bracket = match self.stack.last_mut() {
+            Some(WFrame::Obj { open, .. }) if !*open => {
+                *open = true;
+                "{"
+            }
+            Some(WFrame::Arr { open, .. }) if !*open => {
+                *open = true;
+                "["
+            }
+            _ => return,
+        };
+        self.w(bracket);
+    }
+
+    /// Comma/newline/indent before a new child of the current container.
+    fn child_prelude(&mut self, count: usize) {
+        self.w(if count > 0 { ",\n" } else { "\n" });
+        let indent = "  ".repeat(self.stack.len());
+        self.w(&indent);
+    }
+
+    /// Bookkeeping before any *value* (scalar or container start).
+    fn value_position(&mut self) {
+        match self.stack.last_mut() {
+            None => {
+                assert!(!self.root_done, "JsonWriter: document already complete");
+            }
+            Some(WFrame::Obj { have_key, .. }) => {
+                assert!(*have_key, "JsonWriter: value in object without a key");
+                *have_key = false;
+            }
+            Some(WFrame::Arr { .. }) => {
+                self.materialize();
+                let Some(WFrame::Arr { count, .. }) = self.stack.last_mut() else {
+                    unreachable!()
+                };
+                let c = *count;
+                *count += 1;
+                self.child_prelude(c);
+            }
+        }
+    }
+
+    /// Object member key. Must alternate with exactly one value.
+    pub fn key(&mut self, k: &str) {
+        self.materialize();
+        let Some(WFrame::Obj { count, have_key, .. }) = self.stack.last_mut() else {
+            panic!("JsonWriter: key() outside an object");
+        };
+        assert!(!*have_key, "JsonWriter: two keys in a row");
+        *have_key = true;
+        let c = *count;
+        *count += 1;
+        self.child_prelude(c);
+        let mut buf = String::new();
+        write_escaped(&mut buf, k);
+        buf.push_str(": ");
+        self.w(&buf);
+    }
+
+    fn begin(&mut self, f: WFrame) {
+        self.value_position();
+        if self.stack.len() >= MAX_DEPTH && self.err.is_none() {
+            // Produce a document our own reader would reject? Refuse
+            // instead — latched like any other sink failure.
+            self.err =
+                Some(io::Error::new(io::ErrorKind::InvalidData, "nesting too deep"));
+        }
+        // Bracket deferred until the first child (or `{}` / `[]` at end).
+        self.stack.push(f);
+    }
+
+    /// Start an object value.
+    pub fn begin_object(&mut self) {
+        self.begin(WFrame::Obj { count: 0, open: false, have_key: false });
+    }
+
+    /// Start an array value.
+    pub fn begin_array(&mut self) {
+        self.begin(WFrame::Arr { count: 0, open: false });
+    }
+
+    /// Close the current object.
+    pub fn end_object(&mut self) {
+        let Some(WFrame::Obj { open, have_key, .. }) = self.stack.pop() else {
+            panic!("JsonWriter: end_object() without a matching begin_object()");
+        };
+        assert!(!have_key, "JsonWriter: object closed with a dangling key");
+        if open {
+            let tail = format!("\n{}}}", "  ".repeat(self.stack.len()));
+            self.w(&tail);
+        } else {
+            self.w("{}");
+        }
+        if self.stack.is_empty() {
+            self.root_done = true;
+        }
+    }
+
+    /// Close the current array.
+    pub fn end_array(&mut self) {
+        let Some(WFrame::Arr { open, .. }) = self.stack.pop() else {
+            panic!("JsonWriter: end_array() without a matching begin_array()");
+        };
+        if open {
+            let tail = format!("\n{}]", "  ".repeat(self.stack.len()));
+            self.w(&tail);
+        } else {
+            self.w("[]");
+        }
+        if self.stack.is_empty() {
+            self.root_done = true;
+        }
+    }
+
+    /// Write a complete value — a scalar or a whole pre-built subtree
+    /// (small per-item trees are fine; the point is never to hold the
+    /// *stream* in memory).
+    pub fn value(&mut self, v: &Json) {
+        self.value_position();
+        let mut buf = String::new();
+        v.write(&mut buf, self.stack.len());
+        self.w(&buf);
+        if self.stack.is_empty() {
+            self.root_done = true;
+        }
+    }
+
+    /// Shorthand for [`JsonWriter::value`] on anything [`ToJson`].
+    pub fn emit<T: ToJson + ?Sized>(&mut self, v: &T) {
+        self.value(&v.to_json());
+    }
+
+    /// Finish the document: trailing newline (artifact files end with one
+    /// — same contract as `report::write_json`), flush, and report the
+    /// first latched I/O error, if any.
+    pub fn finish(mut self) -> io::Result<()> {
+        assert!(
+            self.stack.is_empty() && self.root_done,
+            "JsonWriter: finish() before the document is complete"
+        );
+        self.w("\n");
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        self.out.flush()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -835,5 +1052,161 @@ mod tests {
         assert_eq!(d.opt_or("absent", 9usize).unwrap(), 9);
         // A malformed present field is an error, never the default.
         assert!(d.opt_or("broken", 0usize).is_err());
+    }
+
+    // -- JsonWriter ---------------------------------------------------------
+
+    /// Byte sink the test keeps a handle to after the writer consumes the
+    /// other clone.
+    #[derive(Clone, Default)]
+    struct Shared(std::rc::Rc<std::cell::RefCell<Vec<u8>>>);
+
+    impl io::Write for Shared {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.0.borrow_mut().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Drive the writer with the event sequence equivalent to a tree.
+    fn stream(w: &mut JsonWriter, v: &Json) {
+        match v {
+            Json::Obj(m) => {
+                w.begin_object();
+                for (k, x) in m {
+                    w.key(k);
+                    stream(w, x);
+                }
+                w.end_object();
+            }
+            Json::Arr(xs) => {
+                w.begin_array();
+                for x in xs {
+                    stream(w, x);
+                }
+                w.end_array();
+            }
+            scalar => w.value(scalar),
+        }
+    }
+
+    fn written(v: &Json) -> String {
+        let sink = Shared::default();
+        let mut w = JsonWriter::new(Box::new(sink.clone()));
+        stream(&mut w, v);
+        w.finish().unwrap();
+        String::from_utf8(sink.0.borrow().clone()).unwrap()
+    }
+
+    #[test]
+    fn writer_output_is_byte_identical_to_pretty() {
+        let docs = [
+            r#"{"a": [1, 2.5, true, null], "b": {"c": "x"}, "empty": {}, "list": []}"#,
+            r#"[[], [[1]], {"k": []}, "s"]"#,
+            r#"{"esc": "q\"w\\e\n\t", "unicode": "é", "neg": -3.25}"#,
+            r#"{"big": 9007199254740991, "tiny": 1e-300, "zero": 0}"#,
+            "42",
+            "\"scalar root\"",
+            "{}",
+            "[]",
+        ];
+        for text in docs {
+            let doc = Json::parse(text).unwrap();
+            assert_eq!(written(&doc), doc.pretty() + "\n", "mismatch for {text}");
+        }
+        // Non-finite numbers degrade to null in both paths.
+        let doc = Json::Arr(vec![Json::Num(f64::NAN), Json::Num(f64::INFINITY)]);
+        assert_eq!(written(&doc), doc.pretty() + "\n");
+    }
+
+    #[test]
+    fn writer_matches_pretty_on_random_documents() {
+        fn gen(rng: &mut crate::util::rng::Rng, depth: usize) -> Json {
+            match if depth >= 4 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.chance(0.5)),
+                2 => Json::Num((rng.f64() * 2000.0 - 1000.0) * 10f64.powi(rng.below(7) as i32 - 3)),
+                3 => Json::Str(format!("s{}\n\"{}", rng.below(100), rng.below(10))),
+                4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.below(4)).map(|i| (format!("k{i}"), gen(rng, depth + 1))).collect(),
+                ),
+            }
+        }
+        crate::util::quickcheck::check(
+            "writer_pretty_parity",
+            crate::util::quickcheck::Config { cases: 128, seed: 0xA11CE },
+            |rng| {
+                let doc = gen(rng, 0);
+                let got = written(&doc);
+                let want = doc.pretty() + "\n";
+                crate::prop_assert!(got == want, "writer {got:?} != pretty {want:?}");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn writer_value_embeds_subtrees_mid_stream() {
+        // The snapshot-stream shape: hand-driven envelope, per-item trees
+        // dropped in via `value`/`emit`.
+        let item = Json::parse(r#"{"t_s": 10, "served": 5}"#).unwrap();
+        let sink = Shared::default();
+        let mut w = JsonWriter::new(Box::new(sink.clone()));
+        w.begin_object();
+        w.key("kind");
+        w.value(&Json::Str("snapshots".into()));
+        w.key("snapshots");
+        w.begin_array();
+        w.value(&item);
+        w.value(&item);
+        w.end_array();
+        w.end_object();
+        w.finish().unwrap();
+        let got = String::from_utf8(sink.0.borrow().clone()).unwrap();
+        let equivalent = Obj::new()
+            .raw("kind", Json::Str("snapshots".into()))
+            .raw("snapshots", Json::Arr(vec![item.clone(), item]))
+            .build();
+        assert_eq!(got, equivalent.pretty() + "\n");
+        // And the streamed bytes parse back cleanly.
+        Json::parse(got.trim_end()).unwrap();
+    }
+
+    #[test]
+    fn writer_io_errors_are_sticky_and_reported_at_finish() {
+        struct FailAfter(usize);
+        impl io::Write for FailAfter {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                if self.0 < buf.len() {
+                    return Err(io::Error::new(io::ErrorKind::Other, "sink full"));
+                }
+                self.0 -= buf.len();
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut w = JsonWriter::new(Box::new(FailAfter(4)));
+        w.begin_object();
+        for i in 0..32 {
+            w.key(&format!("k{i}"));
+            w.value(&Json::Num(i as f64));
+        }
+        w.end_object();
+        let err = w.finish().unwrap_err();
+        assert_eq!(err.to_string(), "sink full");
+    }
+
+    #[test]
+    #[should_panic(expected = "without a key")]
+    fn writer_panics_on_value_without_key() {
+        let mut w = JsonWriter::new(Box::new(Vec::new()));
+        w.begin_object();
+        w.value(&Json::Null);
     }
 }
