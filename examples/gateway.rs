@@ -95,18 +95,35 @@ fn main() -> Result<()> {
         loadgen::synthetic_specs(&["mnist", "svhn", "cifar"], device, 1, seed)?;
     let cfg = GatewayConfig { queue_cap: 16, ..GatewayConfig::default() };
     let mut sim = SimGateway::new(specs, &cfg)?;
-    let wl = loadgen::generate(
-        &LoadgenConfig {
-            scenario: Scenario::Bursty,
-            requests: requests.max(128),
-            seed,
-            slo: Slo::latency(0.05).with_deadline(0.01),
-            gap: Duration::from_micros(100),
-            ..Default::default()
-        },
+    let lg = LoadgenConfig {
+        scenario: Scenario::Bursty,
+        requests: requests.max(128),
+        seed,
+        slo: Slo::latency(0.05).with_deadline(0.01),
+        gap: Duration::from_micros(100),
+        ..Default::default()
+    };
+    // Periodic snapshots stream off the simulated clock — the same
+    // cadence `repro loadgen --snapshot-every` exposes.
+    sim.set_snapshot_every(0.005, |s| {
+        println!(
+            "  snapshot @{:>7.3} ms: {:>4} offered, {:>4} served, {:>3} queued, p99 {:.2} ms",
+            s.t_s * 1e3,
+            s.offered,
+            s.served,
+            s.queued,
+            s.p99_service_ms
+        );
+    })?;
+    // Arrivals stream straight from the generator into the gateway: no
+    // materialized workload, no per-request outcome buffer — the run
+    // would hold the same memory at 10M requests.
+    let report = loadgen::simulate_stream(
+        &mut sim,
+        lg.scenario.clone(),
+        loadgen::ArrivalGen::new(&lg, &pools),
         &pools,
-    );
-    let report = loadgen::simulate(&mut sim, &wl, &pools)?;
+    )?;
     print!("{}", report.render());
     let stats = sim.shutdown();
     println!(

@@ -21,7 +21,7 @@ use spikebench::experiments::ctx::Ctx;
 use spikebench::fpga::device::PYNQ_Z1;
 use spikebench::nn::loader::{load_network, WeightKind};
 use spikebench::util::cli::Args;
-use spikebench::util::stats::Summary;
+use spikebench::util::stats::{Recorder, Summary};
 
 fn main() -> Result<()> {
     let args = Args::from_env(0);
@@ -63,13 +63,13 @@ fn main() -> Result<()> {
         .map(|i| (i, server.classify_async(eval.images[i % eval.len()].clone()).unwrap()))
         .collect();
     let mut correct = 0;
-    let mut svc = Summary::new();
+    let mut svc = Recorder::new();
     let mut accel_lat = Summary::new();
     let mut energy = 0.0;
     for (i, rx) in rxs {
         let r = rx.recv()?;
         correct += (r.predicted == Some(eval.labels[i % eval.len()])) as usize;
-        svc.add(r.service_time.as_secs_f64() * 1e3);
+        svc.record(r.service_time.as_secs_f64() * 1e3);
         accel_lat.add(r.accel_latency_s * 1e3);
         energy += r.accel_energy_j;
     }
@@ -89,7 +89,13 @@ fn main() -> Result<()> {
     );
     println!("throughput      : {:.0} req/s (wall {:.2?})", n_req as f64 / wall.as_secs_f64(), wall);
     println!("accuracy        : {:.1}%", 100.0 * correct as f64 / n_req as f64);
-    println!("service time    : mean {:.2} ms  max {:.2} ms", svc.mean(), svc.max);
+    println!(
+        "service time    : mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms  max {:.2} ms",
+        svc.summary.mean(),
+        svc.quantile(0.5).unwrap_or(0.0),
+        svc.quantile(0.99).unwrap_or(0.0),
+        svc.summary.max
+    );
     println!(
         "simulated FPGA  : mean latency {:.3} ms, total energy {:.2} mJ",
         accel_lat.mean(),

@@ -106,13 +106,74 @@ fn bench_sim_serving(bench: &Bench) {
     );
 }
 
+/// The discrete-event core itself: a wide sharded fleet under a dense
+/// offered load, so every simulated event exercises the heap-indexed
+/// `advance()` (earliest-deadline admission + earliest-free shard)
+/// rather than the retired O(shards) linear scans.  Items = offered
+/// requests, so the reported throughput is sim events/s up to a
+/// constant factor — the "event-core events/sec" trajectory point.
+fn bench_event_core(bench: &Bench) {
+    const REQUESTS: usize = 4_096;
+    let spec = loadgen::DeploymentSpec::synthetic(
+        &["mnist", "cifar"],
+        "zcu102",
+        8,
+        42,
+        LoadgenConfig {
+            scenario: Scenario::Bursty,
+            requests: REQUESTS,
+            seed: 42,
+            slo: Slo::latency(0.05),
+            gap: std::time::Duration::from_micros(20),
+            ..Default::default()
+        },
+    );
+    bench.run_throughput("sim event core (bursty, 8-way shards)", REQUESTS as u64, || {
+        loadgen::run_sim(&spec).unwrap()
+    });
+}
+
+/// One streamed fixed-seed run at scale: arrivals flow straight from
+/// `ArrivalGen` through the gateway into `Recorder` ledgers, so peak
+/// memory is independent of the request count.  Default 1M requests
+/// (the CI scale-smoke size); override with
+/// `SPIKEBENCH_SCALE_REQUESTS`, or set it to 10M for the full
+/// north-star run.  Single sample — this measures wall time, not jitter.
+fn bench_scale_loadgen(results: &mut Vec<spikebench::util::bench::BenchResult>) {
+    let requests: usize = std::env::var("SPIKEBENCH_SCALE_REQUESTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000_000);
+    let spec = loadgen::DeploymentSpec::synthetic(
+        &["mnist"],
+        "pynq",
+        2,
+        42,
+        LoadgenConfig {
+            scenario: Scenario::Steady,
+            requests,
+            seed: 42,
+            slo: Slo::latency(0.05),
+            gap: std::time::Duration::from_micros(50),
+            ..Default::default()
+        },
+    );
+    let bench = Bench::new("scale").warmup(0).samples(1);
+    bench.run_throughput(&format!("sim loadgen streamed ({requests} req)"), requests as u64, || {
+        loadgen::run_sim(&spec).unwrap()
+    });
+    results.extend(bench.results());
+}
+
 /// With `SPIKEBENCH_BENCH_JSON=path` set, write every recorded
-/// measurement as a wire-codec JSON artifact (the `BENCH_*.json`
-/// trajectory — diffable run to run).
+/// measurement as a wire-codec JSON artifact in the `BENCH_*.json`
+/// envelope (kind/schema/host metadata + results — diffable run to
+/// run).  `SPIKEBENCH_BENCH_NOTES` lands in the envelope's notes field.
 fn write_bench_json(results: Vec<spikebench::util::bench::BenchResult>) {
-    use spikebench::util::wire::ToJson;
     if let Ok(path) = std::env::var("SPIKEBENCH_BENCH_JSON") {
-        spikebench::report::write_json(std::path::Path::new(&path), &results.to_json())
+        let notes = std::env::var("SPIKEBENCH_BENCH_NOTES").unwrap_or_default();
+        let doc = spikebench::util::bench::envelope(&results, &notes);
+        spikebench::report::write_json(std::path::Path::new(&path), &doc)
             .expect("writing bench json");
         println!("bench results written to {path}");
     }
@@ -122,7 +183,9 @@ fn main() {
     let bench0 = Bench::new("hotpath").warmup(1).samples(4);
     bench_routing(&bench0);
     bench_sim_serving(&bench0);
+    bench_event_core(&bench0);
     let mut results = bench0.results();
+    bench_scale_loadgen(&mut results);
 
     let mut ctx = match Ctx::load() {
         Ok(c) => c,

@@ -54,7 +54,8 @@
 //! [`GatewayStats`] JSON run to run.  `repro loadgen` drives this stack;
 //! see `ARCHITECTURE.md` for the full request lifecycle.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
@@ -71,6 +72,7 @@ use crate::nn::tensor::Tensor3;
 use crate::snn::accelerator::{CostTrace, SnnAccelerator};
 use crate::snn::config::SnnDesign;
 use crate::util::json::Json;
+use crate::util::stats::{Recorder, Summary};
 use crate::util::wire::{De, FromJson, Obj, ToJson, WireError};
 
 use super::serve::{
@@ -1759,7 +1761,13 @@ pub struct SimRequest {
     pub arrival_s: f64,
 }
 
-/// What happened to one offered request, in submission order.
+/// What happened to one offered request.
+///
+/// Outcomes are no longer accumulated in memory: they stream through the
+/// optional [`SimGateway::set_outcome_sink`] callback in *event* order
+/// (a rejection surfaces at its arrival, a completion at its batch's
+/// retire time).  `seq` recovers submission order — sort by it when the
+/// old `Vec<SimOutcome>` semantics are needed.
 ///
 /// A rejected request has `admitted == false` and a [`RejectReason`]; an
 /// admitted one completes (`service_s` = simulated arrival → completion,
@@ -1769,6 +1777,8 @@ pub struct SimRequest {
 /// either a rejection or a completion, never both, never neither.
 #[derive(Debug, Clone)]
 pub struct SimOutcome {
+    /// Run-wide submission index (0-based offer order).
+    pub seq: usize,
     /// Design the router chose (rejected requests still carry it — the
     /// rejection happened at that design's queue).
     pub design: String,
@@ -1807,14 +1817,26 @@ pub struct SimOutcome {
     pub routed_energy_j: f64,
 }
 
+/// One admitted request waiting in (or dispatched from) a class queue.
+/// Carries everything its eventual [`SimOutcome`] needs inline — there
+/// is no gateway-side outcome list to index into, so queue memory is the
+/// only per-request state and it drains as batches retire.
 struct Queued {
+    /// Run-wide submission index (0-based offer order).
+    seq: usize,
     arrival_s: f64,
     /// Absolute deadline (`arrival + effective deadline`); +∞ when none.
     deadline_abs: f64,
     class: SloClass,
+    /// Routing fell back to the fastest design (no design met the SLO).
+    slo_miss: bool,
+    /// Priced per-classification latency of the routing decision (s).
+    routed_latency_s: f64,
+    /// Priced per-classification energy of the routing decision (J).
+    routed_energy_j: f64,
+    /// Times this request was pulled back from a dying shard.
+    requeues: usize,
     x: Tensor3,
-    /// Index into the gateway's outcome list.
-    outcome: usize,
 }
 
 /// A dispatched batch that has not completed yet on the simulated clock.
@@ -1856,8 +1878,32 @@ impl SimShard {
     }
 }
 
+/// Min-heap key: simulated time with a shard-index tie-break, so heap
+/// order reproduces the old linear scan's "strictly earlier, ties to the
+/// lowest index" selection bit-for-bit.  Times in the event core are
+/// never NaN (validated at config/offer time), so `total_cmp` is a real
+/// total order here.
+#[derive(Clone, Copy, PartialEq)]
+struct TimeKey(f64, usize);
+
+impl Eq for TimeKey {}
+
+impl PartialOrd for TimeKey {
+    fn partial_cmp(&self, other: &TimeKey) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TimeKey {
+    fn cmp(&self, other: &TimeKey) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
 struct SimEntry {
     name: String,
+    /// Position in the router table (stable identity for ledger folds).
+    idx: usize,
     dataset: String,
     device_name: String,
     device: Device,
@@ -1892,6 +1938,14 @@ struct SimEntry {
     /// [`GatewayStats::classes`] at shutdown.
     cstats: [ClassStats; 3],
     slo_misses: usize,
+    /// Earliest-completion index over in-flight batches: `(done_s, si)`
+    /// pushed at dispatch, validated lazily at pop (an entry is stale
+    /// once the shard's batch was retired or torn up by a fault).
+    retire_heap: BinaryHeap<Reverse<TimeKey>>,
+    /// Earliest-free index over shards: `(busy_until, si)` pushed at
+    /// every `busy_until` write (construction, dispatch, revive,
+    /// autoscale growth), validated lazily against the live shard state.
+    free_heap: BinaryHeap<Reverse<TimeKey>>,
 }
 
 impl SimEntry {
@@ -1959,6 +2013,381 @@ impl SimEntry {
         self.vnow = finish;
         self.queues[c].pop_front()
     }
+
+    /// Earliest due batch completion as `(done_s, shard)`, or `None`
+    /// when nothing is in flight.  Stale heap entries — the shard has no
+    /// in-flight batch, or one with a different completion time — are
+    /// popped and dropped here (lazy deletion), so each dispatch costs
+    /// O(log shards) amortized instead of the old O(shards) scan per
+    /// event.
+    fn next_retire(&mut self) -> Option<(f64, usize)> {
+        while let Some(&Reverse(TimeKey(t, si))) = self.retire_heap.peek() {
+            if self.shards[si].in_flight.as_ref().map_or(false, |fl| fl.done_s == t) {
+                return Some((t, si));
+            }
+            self.retire_heap.pop();
+        }
+        None
+    }
+
+    /// Earliest-available alive shard as `(busy_until, shard)`.  An
+    /// entry is valid only while it matches the shard's current
+    /// `busy_until` and the shard is alive; everything else is a stale
+    /// record from before a later dispatch, kill, or revive and is
+    /// dropped lazily.
+    fn next_free(&mut self) -> Option<(f64, usize)> {
+        while let Some(&Reverse(TimeKey(t, si))) = self.free_heap.peek() {
+            let s = &self.shards[si];
+            if s.alive && s.busy_until == t {
+                return Some((t, si));
+            }
+            self.free_heap.pop();
+        }
+        None
+    }
+}
+
+/// Order-sensitive FNV-1a digest of a run's routing decisions.
+///
+/// Replaces the old `Vec<(design, slo_miss)>` decision log: comparing
+/// two runs for identical routing only ever needed equality, and a
+/// 64-bit rolling hash gives that in O(1) memory at any request count.
+/// Folds happen at admission time in offer order, so two runs with the
+/// same digest routed the same requests to the same designs with the
+/// same SLO-fallback flags, in the same order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecisionDigest(u64);
+
+impl Default for DecisionDigest {
+    fn default() -> DecisionDigest {
+        DecisionDigest::new()
+    }
+}
+
+impl DecisionDigest {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    /// The empty digest (FNV-1a offset basis).
+    pub fn new() -> DecisionDigest {
+        DecisionDigest(Self::OFFSET)
+    }
+
+    /// Fold one routing decision into the digest.  The `0xff` terminator
+    /// keeps the encoding prefix-free (design names never contain it in
+    /// UTF-8), so `("ab", miss) + ("c", hit)` cannot collide with
+    /// `("a", miss) + ("bc", hit)`.
+    pub fn fold(&mut self, design: &str, slo_miss: bool) {
+        for b in design.as_bytes() {
+            self.0 = (self.0 ^ u64::from(*b)).wrapping_mul(Self::PRIME);
+        }
+        self.0 = (self.0 ^ u64::from(slo_miss)).wrapping_mul(Self::PRIME);
+        self.0 = (self.0 ^ 0xff).wrapping_mul(Self::PRIME);
+    }
+
+    /// The current 64-bit digest value.
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild a digest from a stored [`DecisionDigest::value`].
+    pub fn from_value(v: u64) -> DecisionDigest {
+        DecisionDigest(v)
+    }
+}
+
+/// A point-in-time view of a running simulation's [`RunLedger`],
+/// emitted every `snapshot_every` simulated seconds when enabled via
+/// [`SimGateway::set_snapshot_every`].
+///
+/// Counter semantics: admission-side counters (`offered`, `admitted`,
+/// `rejected_full`, `rejected_deadline`) are exact at the snapshot time
+/// — `offered == admitted + rejected_full + rejected_deadline` holds in
+/// **every** snapshot.  Completion-side counters (`served`, `failed`,
+/// `deadline_misses`, the service percentiles) reflect batches retired
+/// by the snapshot time and therefore lag in-flight work by a bounded
+/// amount (at most the open batches).  Across a snapshot stream, `t_s`
+/// is strictly increasing and every counter is monotone non-decreasing
+/// (`queued` and the percentiles may move both ways).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsSnapshot {
+    /// Simulated time of the snapshot (seconds).
+    pub t_s: f64,
+    /// Requests offered so far (admission-exact).
+    pub offered: usize,
+    /// Requests admitted so far (admission-exact).
+    pub admitted: usize,
+    /// Admission rejections: queue at capacity.
+    pub rejected_full: usize,
+    /// Admission rejections: deadline already unmeetable.
+    pub rejected_deadline: usize,
+    /// Requests lost to shard faults (admission revoked).
+    pub rejected_shard_lost: usize,
+    /// Requests whose batch has retired (functional success or not).
+    pub served: usize,
+    /// Retired requests whose backend call failed.
+    pub failed: usize,
+    /// Times any request was re-queued off a dying shard.
+    pub requeued: usize,
+    /// Retired requests that completed after their deadline.
+    pub deadline_misses: usize,
+    /// Requests sitting in admission queues right now.
+    pub queued: usize,
+    /// p50 of completed service times (ms); 0 before any completion.
+    pub p50_service_ms: f64,
+    /// p99 of completed service times (ms); 0 before any completion.
+    pub p99_service_ms: f64,
+}
+
+impl ToJson for StatsSnapshot {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("t_s", &self.t_s)
+            .field("offered", &self.offered)
+            .field("admitted", &self.admitted)
+            .field("rejected_full", &self.rejected_full)
+            .field("rejected_deadline", &self.rejected_deadline)
+            .field("rejected_shard_lost", &self.rejected_shard_lost)
+            .field("served", &self.served)
+            .field("failed", &self.failed)
+            .field("requeued", &self.requeued)
+            .field("deadline_misses", &self.deadline_misses)
+            .field("queued", &self.queued)
+            .field("p50_service_ms", &self.p50_service_ms)
+            .field("p99_service_ms", &self.p99_service_ms)
+            .build()
+    }
+}
+
+impl FromJson for StatsSnapshot {
+    fn from_json(v: &Json) -> Result<StatsSnapshot, WireError> {
+        let d = De::root(v);
+        Ok(StatsSnapshot {
+            t_s: d.req("t_s")?,
+            offered: d.req("offered")?,
+            admitted: d.req("admitted")?,
+            rejected_full: d.req("rejected_full")?,
+            rejected_deadline: d.req("rejected_deadline")?,
+            rejected_shard_lost: d.req("rejected_shard_lost")?,
+            served: d.req("served")?,
+            failed: d.req("failed")?,
+            requeued: d.req("requeued")?,
+            deadline_misses: d.req("deadline_misses")?,
+            queued: d.req("queued")?,
+            p50_service_ms: d.req("p50_service_ms")?,
+            p99_service_ms: d.req("p99_service_ms")?,
+        })
+    }
+}
+
+/// Per-[`SloClass`] slice of a [`RunLedger`].
+#[derive(Debug, Clone)]
+pub struct ClassLedger {
+    /// The class this slice covers.
+    pub class: SloClass,
+    /// Terminal outcomes observed for this class (completions + rejects).
+    pub offered: usize,
+    /// Completions whose backend call succeeded.
+    pub served: usize,
+    /// Completions whose backend call failed.
+    pub failed: usize,
+    /// Rejections of any [`RejectReason`].
+    pub rejected: usize,
+    /// Completions after the request's deadline.
+    pub deadline_misses: usize,
+    /// Service-time recorder (seconds) over this class's completions.
+    pub service: Recorder,
+}
+
+impl ClassLedger {
+    fn for_class(class: SloClass) -> ClassLedger {
+        ClassLedger {
+            class,
+            offered: 0,
+            served: 0,
+            failed: 0,
+            rejected: 0,
+            deadline_misses: 0,
+            service: Recorder::new(),
+        }
+    }
+}
+
+/// O(1)-memory aggregation of every [`SimOutcome`] a simulation run
+/// produces — the replacement for the old unbounded `Vec<SimOutcome>`.
+///
+/// Admission-side counters (`offered`, `admitted`, the admission reject
+/// reasons, `requeued`, the decision digest) are charged live at their
+/// events; everything else folds in [`RunLedger::fold`] when an outcome
+/// reaches its terminal state.  Memory is a fixed set of counters plus
+/// bounded [`Recorder`] sketches, independent of the request count — a
+/// fixed-seed 10M-request run fits in the same footprint as a 10-request
+/// one.
+#[derive(Debug, Clone)]
+pub struct RunLedger {
+    /// Requests offered (counted at admission).
+    pub offered: usize,
+    /// Requests admitted (counted at admission).
+    pub admitted: usize,
+    /// Requests whose batch retired (completions, successful or not).
+    pub completed: usize,
+    /// Completions whose backend call failed.
+    pub failed: usize,
+    /// Admission rejections: queue at capacity.
+    pub rejected_full: usize,
+    /// Admission rejections: deadline already unmeetable.
+    pub rejected_deadline: usize,
+    /// Requests lost to shard faults.
+    pub rejected_shard_lost: usize,
+    /// Requeue events off dying shards (counted live, per member).
+    pub requeued: usize,
+    /// Completions after the request's deadline.
+    pub deadline_misses: usize,
+    /// Completions routed via the SLO-fallback path.
+    pub slo_misses: usize,
+    /// Order-sensitive digest of admission-time routing decisions.
+    pub decision_digest: DecisionDigest,
+    /// Completions per design, in router-table order (zeros included).
+    pub per_design: Vec<(String, usize)>,
+    /// Service-time recorder (seconds) over all completions.
+    pub service: Recorder,
+    /// Priced routing latency (seconds) summary over completions.
+    pub routed_latency: Summary,
+    /// Priced routing energy (joules) summed over completions.
+    pub routed_energy_j: f64,
+    /// Per-class slices, in [`SloClass::all`] order.
+    pub classes: [ClassLedger; 3],
+    /// Latest completion time seen (seconds); 0 when nothing completed.
+    pub end_s: f64,
+}
+
+impl RunLedger {
+    fn new(designs: Vec<String>) -> RunLedger {
+        RunLedger {
+            offered: 0,
+            admitted: 0,
+            completed: 0,
+            failed: 0,
+            rejected_full: 0,
+            rejected_deadline: 0,
+            rejected_shard_lost: 0,
+            requeued: 0,
+            deadline_misses: 0,
+            slo_misses: 0,
+            decision_digest: DecisionDigest::new(),
+            per_design: designs.into_iter().map(|d| (d, 0)).collect(),
+            service: Recorder::new(),
+            routed_latency: Summary::new(),
+            routed_energy_j: 0.0,
+            classes: SloClass::all().map(ClassLedger::for_class),
+            end_s: 0.0,
+        }
+    }
+
+    /// Total rejections across all reasons.
+    pub fn rejected(&self) -> usize {
+        self.rejected_full + self.rejected_deadline + self.rejected_shard_lost
+    }
+
+    /// Fold one terminal outcome.  `offered`/`admitted`/`requeued` are
+    /// charged live at their events (not here), so re-queued requests
+    /// and admission bookkeeping are never double-counted.
+    fn fold(&mut self, o: &SimOutcome, design: usize) {
+        let c = &mut self.classes[o.class.index()];
+        c.offered += 1;
+        match &o.reject {
+            Some(r) => {
+                c.rejected += 1;
+                match r {
+                    RejectReason::QueueFull => self.rejected_full += 1,
+                    RejectReason::DeadlineUnmeetable => self.rejected_deadline += 1,
+                    RejectReason::ShardLost => self.rejected_shard_lost += 1,
+                }
+            }
+            None => {
+                self.completed += 1;
+                self.slo_misses += o.slo_miss as usize;
+                self.deadline_misses += o.deadline_miss as usize;
+                c.deadline_misses += o.deadline_miss as usize;
+                if o.ok {
+                    c.served += 1;
+                } else {
+                    self.failed += 1;
+                    c.failed += 1;
+                }
+                self.service.record(o.service_s);
+                c.service.record(o.service_s);
+                self.routed_latency.add(o.routed_latency_s);
+                self.routed_energy_j += o.routed_energy_j;
+                self.per_design[design].1 += 1;
+                self.end_s = self.end_s.max(o.arrival_s + o.service_s);
+            }
+        }
+    }
+}
+
+/// Where every terminal [`SimOutcome`] goes: always into the
+/// [`RunLedger`], optionally through a caller's streaming sink, with
+/// periodic [`StatsSnapshot`] emission on the simulated clock.
+struct OutcomeHub {
+    ledger: RunLedger,
+    sink: Option<Box<dyn FnMut(SimOutcome)>>,
+    snap_sink: Option<Box<dyn FnMut(&StatsSnapshot)>>,
+    /// Snapshot cadence in simulated seconds (`None` disables).
+    snapshot_every: Option<f64>,
+    /// Next snapshot grid time.
+    next_snap_s: f64,
+    /// Time of the last emitted snapshot (guards the final flush).
+    last_snap_s: f64,
+}
+
+impl OutcomeHub {
+    fn new(designs: Vec<String>) -> OutcomeHub {
+        OutcomeHub {
+            ledger: RunLedger::new(designs),
+            sink: None,
+            snap_sink: None,
+            snapshot_every: None,
+            next_snap_s: 0.0,
+            last_snap_s: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fold a terminal outcome into the ledger, then hand it to the
+    /// caller's sink (if any) — the outcome is moved, never stored.
+    fn emit(&mut self, o: SimOutcome, design: usize) {
+        self.ledger.fold(&o, design);
+        if let Some(sink) = &mut self.sink {
+            sink(o);
+        }
+    }
+
+    fn snapshot(&self, t_s: f64, queued: usize) -> StatsSnapshot {
+        let l = &self.ledger;
+        StatsSnapshot {
+            t_s,
+            offered: l.offered,
+            admitted: l.admitted,
+            rejected_full: l.rejected_full,
+            rejected_deadline: l.rejected_deadline,
+            rejected_shard_lost: l.rejected_shard_lost,
+            served: l.completed,
+            failed: l.failed,
+            requeued: l.requeued,
+            deadline_misses: l.deadline_misses,
+            queued,
+            p50_service_ms: l.service.quantile(0.5).map_or(0.0, |s| s * 1e3),
+            p99_service_ms: l.service.quantile(0.99).map_or(0.0, |s| s * 1e3),
+        }
+    }
+
+    fn emit_snapshot(&mut self, t_s: f64, queued: usize) {
+        let snap = self.snapshot(t_s, queued);
+        self.last_snap_s = t_s;
+        if let Some(sink) = &mut self.snap_sink {
+            sink(&snap);
+        }
+    }
 }
 
 /// The discrete-event, simulated-time serving stack: admission queues
@@ -2019,15 +2448,16 @@ impl SimEntry {
 ///     slo: Slo::latency(0.05).with_deadline(0.02),
 ///     arrival_s: 0.0,
 /// }).unwrap();
-/// let outcomes = sim.finish();
+/// let ledger = sim.finish();
 /// let stats = sim.shutdown();
-/// assert_eq!(stats.offered, outcomes.len());
+/// assert_eq!(stats.offered, ledger.offered);
 /// ```
 pub struct SimGateway {
     router: Router,
     cfg: GatewayConfig,
     entries: Vec<SimEntry>,
-    outcomes: Vec<SimOutcome>,
+    /// Streaming outcome/snapshot aggregation (O(1) in request count).
+    hub: OutcomeHub,
     events: Vec<AutoscaleEvent>,
     fault_plan: FaultPlan,
     /// Next unapplied event in `fault_plan` (events are time-sorted).
@@ -2110,6 +2540,7 @@ impl SimGateway {
             }
             entries.push(SimEntry {
                 name: spec.name().to_string(),
+                idx,
                 dataset: spec.dataset.clone(),
                 device_name: spec.device.name.to_string(),
                 device: spec.device,
@@ -2127,13 +2558,17 @@ impl SimGateway {
                 },
                 cstats: SloClass::all().map(ClassStats::for_class),
                 slo_misses: 0,
+                retire_heap: BinaryHeap::new(),
+                // Every initial shard is free at t = 0.
+                free_heap: (0..shards).map(|si| Reverse(TimeKey(0.0, si))).collect(),
             });
         }
+        let designs = entries.iter().map(|e| e.name.clone()).collect();
         Ok(SimGateway {
             router,
             cfg: cfg.clone(),
             entries,
-            outcomes: Vec::new(),
+            hub: OutcomeHub::new(designs),
             events: Vec::new(),
             fault_plan: FaultPlan::default(),
             fault_cursor: 0,
@@ -2150,7 +2585,7 @@ impl SimGateway {
     /// the target — then sorted by time (stable, so equal times keep
     /// their list order).
     pub fn set_fault_plan(&mut self, plan: FaultPlan) -> Result<()> {
-        if self.finished || !self.outcomes.is_empty() {
+        if self.finished || self.hub.ledger.offered > 0 {
             return Err(anyhow!("fault plan must be installed before the first offer"));
         }
         let mut events = plan.events;
@@ -2200,6 +2635,49 @@ impl SimGateway {
         Ok(())
     }
 
+    /// Stream every terminal [`SimOutcome`] through `sink` as it is
+    /// folded into the ledger (event order — sort by
+    /// [`SimOutcome::seq`] to recover submission order).  Must be
+    /// installed before the first offer; outcomes are moved into the
+    /// sink, never retained by the gateway.
+    pub fn set_outcome_sink(&mut self, sink: impl FnMut(SimOutcome) + 'static) -> Result<()> {
+        if self.finished || self.hub.ledger.offered > 0 {
+            return Err(anyhow!("outcome sink must be installed before the first offer"));
+        }
+        self.hub.sink = Some(Box::new(sink));
+        Ok(())
+    }
+
+    /// Emit a [`StatsSnapshot`] into `sink` every `every_s` simulated
+    /// seconds (grid times `every_s`, `2 × every_s`, …; no `t = 0`
+    /// snapshot, plus one final snapshot at the run's end time from
+    /// [`SimGateway::finish`]).  Must be installed before the first
+    /// offer; `every_s` must be a positive finite number.
+    pub fn set_snapshot_every(
+        &mut self,
+        every_s: f64,
+        sink: impl FnMut(&StatsSnapshot) + 'static,
+    ) -> Result<()> {
+        if self.finished || self.hub.ledger.offered > 0 {
+            return Err(anyhow!("snapshot cadence must be installed before the first offer"));
+        }
+        if !(every_s > 0.0) || !every_s.is_finite() {
+            return Err(anyhow!(
+                "snapshot_every must be a positive finite number of seconds (got {every_s})"
+            ));
+        }
+        self.hub.snapshot_every = Some(every_s);
+        self.hub.next_snap_s = every_s;
+        self.hub.snap_sink = Some(Box::new(sink));
+        Ok(())
+    }
+
+    /// The live run ledger (folds happen as the simulation progresses;
+    /// final values come from [`SimGateway::finish`]).
+    pub fn ledger(&self) -> &RunLedger {
+        &self.hub.ledger
+    }
+
     /// The routing half (priced table, unfit rejections, decisions).
     pub fn router(&self) -> &Router {
         &self.router
@@ -2231,7 +2709,11 @@ impl SimGateway {
             "arrivals must be offered in non-decreasing time order"
         );
         self.last_arrival_s = req.arrival_s;
-        // Scheduled faults due by this arrival fire first, each at its
+        // Snapshot grid times due by this arrival fire first, so each
+        // snapshot reflects exactly the events processed before its
+        // grid time on the simulated clock.
+        self.emit_due_snapshots(req.arrival_s);
+        // Scheduled faults due by this arrival fire next, each at its
         // own simulated time, so admission sees the post-fault fleet.
         self.apply_faults(req.arrival_s);
         let decision = self.router.decide(&req.dataset, &req.slo)?;
@@ -2253,7 +2735,7 @@ impl SimGateway {
         let deadline = req.slo.effective_deadline_s();
         // Retire every dispatch scheduled before this arrival, so the
         // admission estimate below sees the queue as it stands at `t`.
-        Self::advance(&mut self.entries[decision.design], max_batch, max_wait, t, &mut self.outcomes);
+        Self::advance(&mut self.entries[decision.design], max_batch, max_wait, t, &mut self.hub);
         // Evaluate the autoscaler on the pre-admission queue state: a
         // deep backlog grows the fleet before this request's deadline
         // estimate is computed (the new shard can save the admission),
@@ -2262,16 +2744,40 @@ impl SimGateway {
         // A scale-up adds an idle shard at `t`: re-run dispatch so queued
         // work that can start right now does so before the queue-full and
         // deadline checks look at the backlog (a no-op otherwise).
-        Self::advance(&mut self.entries[decision.design], max_batch, max_wait, t, &mut self.outcomes);
+        Self::advance(&mut self.entries[decision.design], max_batch, max_wait, t, &mut self.hub);
 
+        let seq = self.hub.ledger.offered;
+        self.hub.ledger.offered += 1;
+        let queue_cap = self.cfg.queue_cap;
         let e = &mut self.entries[decision.design];
         e.qstats.offered += 1;
         e.cstats[class.index()].offered += 1;
-        let mut outcome = SimOutcome {
-            design: e.name.clone(),
+        let queued = e.queued();
+        // Completion estimate, priced by the two-stage cost model: the
+        // earliest any shard frees, plus the queued work ahead spread
+        // across the live shards, plus this request's own service.  An
+        // optimistic estimate, not a strict bound — batch formation can
+        // add delay (late completions are counted in `deadline_misses`)
+        // — but it never charges a request for backlog on shards it
+        // would not wait for.  A dead fleet (every shard fault-killed)
+        // can serve nothing until recovery, so any deadline is
+        // unmeetable right now.
+        let unmeetable = match deadline {
+            Some(_) if e.live == 0 => true,
+            Some(dl) => {
+                let min_backlog =
+                    e.next_free().map_or(f64::INFINITY, |(tf, _)| (tf - t).max(0.0));
+                let queued_work = queued as f64 * e.latency_s;
+                min_backlog + queued_work / e.live as f64 + e.latency_s > dl
+            }
+            None => false,
+        };
+        let mk_outcome = |design: String, reject: RejectReason| SimOutcome {
+            seq,
+            design,
             class,
             admitted: false,
-            reject: None,
+            reject: Some(reject),
             requeues: 0,
             slo_miss: decision.slo_miss,
             ok: false,
@@ -2285,52 +2791,54 @@ impl SimGateway {
             routed_latency_s: decision.latency_s,
             routed_energy_j: decision.energy_j,
         };
-        let queued = e.queued();
-        if queued >= self.cfg.queue_cap {
+        if queued >= queue_cap {
             e.qstats.rejected_full += 1;
             e.cstats[class.index()].rejected_full += 1;
-            outcome.reject = Some(RejectReason::QueueFull);
-            self.outcomes.push(outcome);
-        } else if deadline.map_or(false, |dl| {
-            // Completion estimate, priced by the two-stage cost model:
-            // the earliest any shard frees, plus the queued work ahead
-            // spread across the live shards, plus this request's own
-            // service.  An optimistic estimate, not a strict bound —
-            // batch formation can add delay (late completions are
-            // counted in `deadline_misses`) — but it never charges a
-            // request for backlog on shards it would not wait for.  A
-            // dead fleet (every shard fault-killed) can serve nothing
-            // until recovery, so any deadline is unmeetable right now.
-            if e.live == 0 {
-                return true;
-            }
-            let min_backlog = e
-                .shards
-                .iter()
-                .filter(|s| s.alive)
-                .map(|s| (s.busy_until - t).max(0.0))
-                .fold(f64::INFINITY, f64::min);
-            let queued_work = queued as f64 * e.latency_s;
-            min_backlog + queued_work / e.live as f64 + e.latency_s > dl
-        }) {
+            let o = mk_outcome(e.name.clone(), RejectReason::QueueFull);
+            self.hub.emit(o, decision.design);
+        } else if unmeetable {
             e.qstats.rejected_deadline += 1;
             e.cstats[class.index()].rejected_deadline += 1;
-            outcome.reject = Some(RejectReason::DeadlineUnmeetable);
-            self.outcomes.push(outcome);
+            let o = mk_outcome(e.name.clone(), RejectReason::DeadlineUnmeetable);
+            self.hub.emit(o, decision.design);
         } else {
-            outcome.admitted = true;
             e.qstats.admitted += 1;
             e.cstats[class.index()].admitted += 1;
             if decision.slo_miss {
                 e.slo_misses += 1;
             }
+            self.hub.ledger.admitted += 1;
+            self.hub.ledger.decision_digest.fold(&e.name, decision.slo_miss);
             let deadline_abs = deadline.map_or(f64::INFINITY, |dl| t + dl);
-            let outcome_idx = self.outcomes.len();
-            self.outcomes.push(outcome);
-            e.enqueue(Queued { arrival_s: t, deadline_abs, class, x: req.x, outcome: outcome_idx });
+            e.enqueue(Queued {
+                seq,
+                arrival_s: t,
+                deadline_abs,
+                class,
+                slo_miss: decision.slo_miss,
+                routed_latency_s: decision.latency_s,
+                routed_energy_j: decision.energy_j,
+                requeues: 0,
+                x: req.x,
+            });
             e.qstats.max_depth = e.qstats.max_depth.max(e.queued());
         }
         Ok(())
+    }
+
+    /// Emit every snapshot whose grid time is due by `t` (called on the
+    /// arrival path, so `t` is always finite).  Each snapshot is stamped
+    /// with its grid time, not the arrival that triggered it — the
+    /// stream's `t_s` spacing is exactly `snapshot_every` regardless of
+    /// arrival burstiness.
+    fn emit_due_snapshots(&mut self, t: f64) {
+        let Some(every) = self.hub.snapshot_every else { return };
+        while self.hub.next_snap_s <= t {
+            let at = self.hub.next_snap_s;
+            let queued = self.entries.iter().map(SimEntry::queued).sum();
+            self.hub.emit_snapshot(at, queued);
+            self.hub.next_snap_s = at + every;
+        }
     }
 
     /// Run one entry's event loop up to `now`, in simulated-time order:
@@ -2343,35 +2851,26 @@ impl SimGateway {
     /// `max_batch` while it waits for a shard.  Ties between a retire
     /// and a dispatch resolve retire-first, which guarantees the chosen
     /// dispatch shard is never still holding a batch.
-    fn advance(
-        e: &mut SimEntry,
-        max_batch: usize,
-        max_wait: f64,
-        now: f64,
-        outcomes: &mut [SimOutcome],
-    ) {
+    ///
+    /// Event selection is heap-indexed ([`SimEntry::next_retire`] /
+    /// [`SimEntry::next_free`]): the old per-event O(shards) linear
+    /// scans are now O(log shards) amortized pops, which is what keeps
+    /// wide autoscaled fleets affordable at 10M-request scale.  The
+    /// heaps' `(time, shard)` keys replicate the scans' strictly-earlier
+    /// / lowest-index tie-breaks, so event order — and therefore every
+    /// downstream statistic — is bit-identical to the scan
+    /// implementation.
+    fn advance(e: &mut SimEntry, max_batch: usize, max_wait: f64, now: f64, hub: &mut OutcomeHub) {
         loop {
             // Earliest due completion, ties to the lowest shard index.
-            let mut retire: Option<(f64, usize)> = None;
-            for (i, s) in e.shards.iter().enumerate() {
-                if let Some(fl) = &s.in_flight {
-                    if retire.map_or(true, |(d, _)| fl.done_s < d) {
-                        retire = Some((fl.done_s, i));
-                    }
-                }
-            }
+            let retire = e.next_retire();
             // Next dispatch, if there is queued work and an alive shard
             // to take it (earliest-available, ties to the lowest index).
             let mut fire: Option<(f64, usize)> = None;
             if e.live > 0 {
                 if let Some(oldest) = e.oldest_arrival() {
-                    let (mut si, mut t_shard) = (0usize, f64::INFINITY);
-                    for (i, s) in e.shards.iter().enumerate() {
-                        if s.alive && s.busy_until < t_shard {
-                            t_shard = s.busy_until;
-                            si = i;
-                        }
-                    }
+                    let (t_shard, si) =
+                        e.next_free().expect("a live fleet always has a free-heap entry");
                     let t_wait = oldest + max_wait;
                     let close_at = match e.kth_arrival(max_batch - 1) {
                         Some(filler) => t_wait.min(filler),
@@ -2385,7 +2884,7 @@ impl SimGateway {
                     if d > now {
                         return;
                     }
-                    Self::retire(e, i, outcomes);
+                    Self::retire(e, i, hub);
                 }
                 (_, Some((t, si))) => {
                     if t > now {
@@ -2413,6 +2912,11 @@ impl SimGateway {
         let shard = &mut e.shards[si];
         shard.busy_until = done;
         shard.in_flight = Some(InFlight { fire_s: fire, done_s: done, members });
+        // Index the new completion and the shard's next free time (the
+        // shard frees exactly when the batch retires, so one key serves
+        // both heaps).
+        e.retire_heap.push(Reverse(TimeKey(done, si)));
+        e.free_heap.push(Reverse(TimeKey(done, si)));
     }
 
     /// Complete the in-flight batch on shard `si`: run the backend (one
@@ -2421,16 +2925,41 @@ impl SimGateway {
     /// counters — `dispatched`, batches, backend calls, served, waits —
     /// are charged here, so a batch lost to a fault between dispatch and
     /// completion charges nothing.
-    fn retire(e: &mut SimEntry, si: usize, outcomes: &mut [SimOutcome]) {
+    fn retire(e: &mut SimEntry, si: usize, hub: &mut OutcomeHub) {
         let fl = e.shards[si].in_flight.take().expect("retire without an in-flight batch");
         let b = fl.members.len();
         // Move the tensors out of the batch (no per-request clone on the
-        // simulation hot path); keep the metadata alongside.
+        // simulation hot path); build the members' outcomes alongside
+        // from the metadata each `Queued` carries inline.
         let mut xs = Vec::with_capacity(b);
-        let mut metas = Vec::with_capacity(b);
+        let mut outs = Vec::with_capacity(b);
         for q in fl.members {
+            e.qstats.total_wait_s += fl.fire_s - q.arrival_s;
+            let deadline_miss = fl.done_s > q.deadline_abs;
+            if deadline_miss {
+                e.qstats.deadline_misses += 1;
+                e.cstats[q.class.index()].deadline_misses += 1;
+            }
+            outs.push(SimOutcome {
+                seq: q.seq,
+                design: e.name.clone(),
+                class: q.class,
+                admitted: true,
+                reject: None,
+                requeues: q.requeues,
+                slo_miss: q.slo_miss,
+                ok: false,
+                error: None,
+                predicted: None,
+                batch_size: b,
+                shard: si,
+                arrival_s: q.arrival_s,
+                service_s: fl.done_s - q.arrival_s,
+                deadline_miss,
+                routed_latency_s: q.routed_latency_s,
+                routed_energy_j: q.routed_energy_j,
+            });
             xs.push(q.x);
-            metas.push((q.arrival_s, q.deadline_abs, q.outcome, q.class));
         }
         let results = super::serve::run_batch(e.backend.as_mut(), &xs);
         let shard = &mut e.shards[si];
@@ -2439,32 +2968,20 @@ impl SimGateway {
         shard.stats.backend_calls += 1;
         shard.stats.max_batch_seen = shard.stats.max_batch_seen.max(b);
         shard.stats.served += b;
-        for ((arrival_s, deadline_abs, outcome_idx, class), res) in
-            metas.into_iter().zip(results)
-        {
-            e.qstats.total_wait_s += fl.fire_s - arrival_s;
-            let o = &mut outcomes[outcome_idx];
-            o.batch_size = b;
-            o.shard = si;
-            o.service_s = fl.done_s - arrival_s;
-            if fl.done_s > deadline_abs {
-                o.deadline_miss = true;
-                e.qstats.deadline_misses += 1;
-                e.cstats[class.index()].deadline_misses += 1;
-            }
+        for (mut o, res) in outs.into_iter().zip(results) {
             match res {
                 Ok(logits) => {
                     o.ok = true;
                     o.predicted = Some(argmax(&logits));
-                    e.cstats[class.index()].served += 1;
+                    e.cstats[o.class.index()].served += 1;
                 }
                 Err(err) => {
-                    o.ok = false;
                     o.error = Some(err);
-                    shard.stats.failed += 1;
-                    e.cstats[class.index()].failed += 1;
+                    e.shards[si].stats.failed += 1;
+                    e.cstats[o.class.index()].failed += 1;
                 }
             }
+            hub.emit(o, e.idx);
         }
     }
 
@@ -2477,7 +2994,7 @@ impl SimGateway {
         e: &mut SimEntry,
         si: usize,
         queue_cap: usize,
-        outcomes: &mut [SimOutcome],
+        hub: &mut OutcomeHub,
     ) -> (usize, usize) {
         if !e.shards[si].alive {
             return (0, 0);
@@ -2493,20 +3010,37 @@ impl SimGateway {
         let mut members = fl.members;
         let (mut lost, mut requeued) = (0usize, 0usize);
         for q in members.drain(keep..) {
-            let o = &mut outcomes[q.outcome];
-            o.admitted = false;
-            o.reject = Some(RejectReason::ShardLost);
-            o.shard = si;
             e.qstats.rejected_shard_lost += 1;
             e.cstats[q.class.index()].rejected_shard_lost += 1;
             lost += 1;
+            let o = SimOutcome {
+                seq: q.seq,
+                design: e.name.clone(),
+                class: q.class,
+                admitted: false,
+                reject: Some(RejectReason::ShardLost),
+                requeues: q.requeues,
+                slo_miss: q.slo_miss,
+                ok: false,
+                error: None,
+                predicted: None,
+                batch_size: 0,
+                shard: si,
+                arrival_s: q.arrival_s,
+                service_s: 0.0,
+                deadline_miss: false,
+                routed_latency_s: q.routed_latency_s,
+                routed_energy_j: q.routed_energy_j,
+            };
+            hub.emit(o, e.idx);
         }
         // The kept members were dequeued from their class queues' fronts
         // (so each is older than everything still queued in its class);
         // pushing them back front-first in reverse order restores every
         // class queue's arrival order exactly.
-        for q in members.into_iter().rev() {
-            outcomes[q.outcome].requeues += 1;
+        for mut q in members.into_iter().rev() {
+            q.requeues += 1;
+            hub.ledger.requeued += 1;
             e.qstats.requeued += 1;
             e.cstats[q.class.index()].requeued += 1;
             e.queues[q.class.index()].push_front(q);
@@ -2523,6 +3057,7 @@ impl SimGateway {
                 s.alive = true;
                 s.busy_until = t;
                 e.live += 1;
+                e.free_heap.push(Reverse(TimeKey(t, si)));
             }
         }
     }
@@ -2554,7 +3089,7 @@ impl SimGateway {
                     max_batch,
                     max_wait,
                     ev.t_s,
-                    &mut self.outcomes,
+                    &mut self.hub,
                 );
                 let shard_count = self.entries[idx].shards.len();
                 let targets: Vec<usize> = if ev.device.is_empty() {
@@ -2568,7 +3103,7 @@ impl SimGateway {
                             &mut self.entries[idx],
                             si,
                             self.cfg.queue_cap,
-                            &mut self.outcomes,
+                            &mut self.hub,
                         ),
                         FaultAction::Recover => {
                             Self::revive_shard(&mut self.entries[idx], si, ev.t_s);
@@ -2610,8 +3145,12 @@ impl SimGateway {
                 Some(si) => {
                     e.shards[si].alive = true;
                     e.shards[si].busy_until = t;
+                    e.free_heap.push(Reverse(TimeKey(t, si)));
                 }
-                None => e.shards.push(SimShard { busy_until: t, ..SimShard::idle() }),
+                None => {
+                    e.free_heap.push(Reverse(TimeKey(t, e.shards.len())));
+                    e.shards.push(SimShard { busy_until: t, ..SimShard::idle() });
+                }
             }
             e.live += 1;
             self.events.push(AutoscaleEvent {
@@ -2649,31 +3188,57 @@ impl SimGateway {
 
     /// Run simulated time forward past the last arrival — firing any
     /// still-scheduled faults at their own times — until every queue
-    /// drains, then return the per-request outcomes in submission order.
-    /// A design whose whole fleet ends the run dead (killed with no
-    /// remaining recovery) strands its queue: those stragglers are
-    /// rejected with [`RejectReason::ShardLost`].  Idempotent;
+    /// drains, then return the run's aggregated [`RunLedger`].  A design
+    /// whose whole fleet ends the run dead (killed with no remaining
+    /// recovery) strands its queue: those stragglers are rejected with
+    /// [`RejectReason::ShardLost`].  When a snapshot cadence is set, one
+    /// final [`StatsSnapshot`] is emitted at the run's end time (unless
+    /// a grid snapshot already landed there).  Idempotent in effect;
+    /// the ledger is moved out, so a second call returns an empty one.
     /// [`SimGateway::shutdown`] calls it if needed.
-    pub fn finish(&mut self) -> Vec<SimOutcome> {
+    pub fn finish(&mut self) -> RunLedger {
         self.finished = true;
         self.apply_faults(f64::INFINITY);
         let max_batch = self.cfg.max_batch.max(1);
         let max_wait = self.cfg.batch_max_wait_s;
         for e in &mut self.entries {
-            Self::advance(e, max_batch, max_wait, f64::INFINITY, &mut self.outcomes);
+            Self::advance(e, max_batch, max_wait, f64::INFINITY, &mut self.hub);
             if e.live == 0 {
                 for c in 0..3 {
                     while let Some(q) = e.queues[c].pop_front() {
-                        let o = &mut self.outcomes[q.outcome];
-                        o.admitted = false;
-                        o.reject = Some(RejectReason::ShardLost);
                         e.qstats.rejected_shard_lost += 1;
                         e.cstats[c].rejected_shard_lost += 1;
+                        let o = SimOutcome {
+                            seq: q.seq,
+                            design: e.name.clone(),
+                            class: q.class,
+                            admitted: false,
+                            reject: Some(RejectReason::ShardLost),
+                            requeues: q.requeues,
+                            slo_miss: q.slo_miss,
+                            ok: false,
+                            error: None,
+                            predicted: None,
+                            batch_size: 0,
+                            shard: 0,
+                            arrival_s: q.arrival_s,
+                            service_s: 0.0,
+                            deadline_miss: false,
+                            routed_latency_s: q.routed_latency_s,
+                            routed_energy_j: q.routed_energy_j,
+                        };
+                        self.hub.emit(o, e.idx);
                     }
                 }
             }
         }
-        std::mem::take(&mut self.outcomes)
+        if self.hub.snapshot_every.is_some() {
+            let end = self.hub.ledger.end_s;
+            if end > self.hub.last_snap_s {
+                self.hub.emit_snapshot(end, 0);
+            }
+        }
+        std::mem::replace(&mut self.hub.ledger, RunLedger::new(Vec::new()))
     }
 
     /// Drain (if not already finished) and aggregate statistics.  Every
@@ -2743,12 +3308,24 @@ impl SimGateway {
 
 #[cfg(test)]
 mod tests {
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
     use super::*;
     use crate::fpga::device::PYNQ_Z1;
     use crate::fpga::resources::{MemoryVariant, SnnDesignParams};
     use crate::nn::conv::ConvWeights;
     use crate::nn::dense::DenseWeights;
     use crate::nn::network::LayerWeights;
+
+    /// Collecting outcome sink for tests that want the old
+    /// `Vec<SimOutcome>` view back (sorted into submission order).
+    fn collecting_sink(sim: &mut SimGateway) -> Rc<RefCell<Vec<SimOutcome>>> {
+        let outs: Rc<RefCell<Vec<SimOutcome>>> = Rc::new(RefCell::new(Vec::new()));
+        let sink = Rc::clone(&outs);
+        sim.set_outcome_sink(move |o| sink.borrow_mut().push(o)).unwrap();
+        outs
+    }
 
     fn tiny_net() -> Network {
         let arch = parse_arch("2C3-2").unwrap();
@@ -2886,6 +3463,7 @@ mod tests {
     fn sim_gateway_serves_and_queue_counts_reconcile() {
         let mut sim =
             SimGateway::new(vec![spec("tiny-p8", 8, 1)], &GatewayConfig::default()).unwrap();
+        let outs = collecting_sink(&mut sim);
         for i in 0..6 {
             sim.offer(SimRequest {
                 dataset: "tiny".to_string(),
@@ -2895,9 +3473,20 @@ mod tests {
             })
             .unwrap();
         }
-        let outcomes = sim.finish();
-        assert_eq!(outcomes.len(), 6);
-        assert!(outcomes.iter().all(|o| o.admitted && o.ok && o.service_s > 0.0));
+        let ledger = sim.finish();
+        assert_eq!((ledger.offered, ledger.admitted, ledger.completed), (6, 6, 6));
+        assert_eq!(ledger.rejected(), 0);
+        assert_eq!(ledger.failed, 0);
+        assert_eq!(ledger.service.count(), 6);
+        assert_eq!(ledger.per_design, vec![("tiny-p8".to_string(), 6)]);
+        {
+            let mut outcomes = outs.borrow_mut();
+            outcomes.sort_by_key(|o| o.seq);
+            assert_eq!(outcomes.len(), 6);
+            let seqs: Vec<usize> = outcomes.iter().map(|o| o.seq).collect();
+            assert_eq!(seqs, (0..6).collect::<Vec<_>>());
+            assert!(outcomes.iter().all(|o| o.admitted && o.ok && o.service_s > 0.0));
+        }
         let stats = sim.shutdown();
         assert_eq!((stats.offered, stats.admitted, stats.rejected), (6, 6, 0));
         assert_eq!(stats.served, 6);
@@ -2944,6 +3533,7 @@ mod tests {
     fn sim_rejects_unmeetable_deadline_at_admission() {
         let mut sim =
             SimGateway::new(vec![spec("tiny-p8", 8, 1)], &GatewayConfig::default()).unwrap();
+        let outs = collecting_sink(&mut sim);
         let (lat, _) = sim.router().price(0);
         sim.offer(SimRequest {
             dataset: "tiny".to_string(),
@@ -2954,9 +3544,13 @@ mod tests {
             arrival_s: 0.0,
         })
         .unwrap();
-        let outcomes = sim.finish();
-        assert!(!outcomes[0].admitted);
-        assert_eq!(outcomes[0].reject, Some(RejectReason::DeadlineUnmeetable));
+        let ledger = sim.finish();
+        assert_eq!((ledger.offered, ledger.rejected_deadline, ledger.completed), (1, 1, 0));
+        {
+            let outcomes = outs.borrow();
+            assert!(!outcomes[0].admitted);
+            assert_eq!(outcomes[0].reject, Some(RejectReason::DeadlineUnmeetable));
+        }
         let stats = sim.shutdown();
         assert_eq!(stats.served, 0, "a rejected request must not be served");
         assert_eq!(stats.rejected, 1);
@@ -3038,6 +3632,7 @@ mod tests {
         let mut sim = SimGateway::new(vec![spec("tiny-p8", 8, 1)], &cfg).unwrap();
         sim.set_fault_plan(FaultPlan { events: vec![FaultEvent::kill(2e-4, "tiny-p8", 0)] })
             .unwrap();
+        let outs = collecting_sink(&mut sim);
         for i in 0..6 {
             sim.offer(SimRequest {
                 dataset: "tiny".to_string(),
@@ -3047,10 +3642,16 @@ mod tests {
             })
             .unwrap();
         }
-        let outcomes = sim.finish();
-        assert_eq!(outcomes.len(), 6);
-        for o in &outcomes {
-            assert_eq!(o.admitted, o.reject.is_none(), "completed XOR rejected");
+        let ledger = sim.finish();
+        assert_eq!(ledger.offered, 6);
+        assert_eq!(ledger.offered, ledger.completed + ledger.rejected());
+        {
+            let mut outcomes = outs.borrow_mut();
+            outcomes.sort_by_key(|o| o.seq);
+            assert_eq!(outcomes.len(), 6);
+            for o in outcomes.iter() {
+                assert_eq!(o.admitted, o.reject.is_none(), "completed XOR rejected");
+            }
         }
         let stats = sim.shutdown();
         assert_eq!(stats.offered, 6);
@@ -3063,5 +3664,132 @@ mod tests {
         assert_eq!(stats.faults[0].action, "kill");
         let by_class: usize = stats.classes.iter().map(|c| c.offered).sum();
         assert_eq!(by_class, stats.offered);
+    }
+
+    #[test]
+    fn decision_digest_is_order_sensitive_and_prefix_free() {
+        let mut a = DecisionDigest::new();
+        a.fold("d1", false);
+        a.fold("d2", true);
+        let mut b = DecisionDigest::new();
+        b.fold("d2", true);
+        b.fold("d1", false);
+        assert_ne!(a.value(), b.value(), "digest must be order-sensitive");
+        let mut c = DecisionDigest::new();
+        c.fold("d1", false);
+        c.fold("d2", true);
+        assert_eq!(a, c, "identical decision streams must collide exactly");
+        // Prefix-freedom: re-chunking the same bytes must not collide.
+        let mut p = DecisionDigest::new();
+        p.fold("ab", false);
+        p.fold("c", false);
+        let mut q = DecisionDigest::new();
+        q.fold("a", false);
+        q.fold("bc", false);
+        assert_ne!(p.value(), q.value());
+        assert_eq!(DecisionDigest::from_value(a.value()), a);
+        assert_ne!(DecisionDigest::new().value(), 0, "empty digest is the FNV offset basis");
+    }
+
+    #[test]
+    fn snapshots_stream_on_the_simulated_clock() {
+        let mut sim =
+            SimGateway::new(vec![spec("tiny-p8", 8, 1)], &GatewayConfig::default()).unwrap();
+        let snaps: Rc<RefCell<Vec<StatsSnapshot>>> = Rc::new(RefCell::new(Vec::new()));
+        let sink = Rc::clone(&snaps);
+        sim.set_snapshot_every(1e-4, move |s| sink.borrow_mut().push(s.clone())).unwrap();
+        for i in 0..6 {
+            sim.offer(SimRequest {
+                dataset: "tiny".to_string(),
+                x: Tensor3::from_vec(1, 3, 3, vec![0.8; 9]),
+                slo: Slo::latency(10.0),
+                arrival_s: i as f64 * 1e-4,
+            })
+            .unwrap();
+        }
+        let ledger = sim.finish();
+        assert_eq!(ledger.completed, 6);
+        let snaps = snaps.borrow();
+        // Five grid snapshots (1e-4 … 5e-4) plus the final flush.
+        assert!(snaps.len() >= 2, "expected grid snapshots plus a final flush");
+        for w in snaps.windows(2) {
+            assert!(w[1].t_s > w[0].t_s, "snapshot times must be strictly increasing");
+            assert!(w[1].offered >= w[0].offered, "counters must be monotone");
+            assert!(w[1].served >= w[0].served, "counters must be monotone");
+        }
+        for s in snaps.iter() {
+            assert_eq!(
+                s.offered,
+                s.admitted + s.rejected_full + s.rejected_deadline,
+                "admission counters must reconcile in every snapshot"
+            );
+        }
+        let last = snaps.last().unwrap();
+        assert_eq!(last.served, 6);
+        assert_eq!(last.queued, 0, "the final snapshot sees drained queues");
+        assert!(last.p50_service_ms > 0.0 && last.p99_service_ms >= last.p50_service_ms);
+    }
+
+    #[test]
+    fn sinks_must_install_before_traffic() {
+        let mut sim =
+            SimGateway::new(vec![spec("tiny-p8", 8, 1)], &GatewayConfig::default()).unwrap();
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(
+                sim.set_snapshot_every(bad, |_| {}).is_err(),
+                "snapshot_every = {bad} must be rejected"
+            );
+        }
+        sim.offer(SimRequest {
+            dataset: "tiny".to_string(),
+            x: Tensor3::from_vec(1, 3, 3, vec![0.8; 9]),
+            slo: Slo::latency(10.0),
+            arrival_s: 0.0,
+        })
+        .unwrap();
+        assert!(sim.set_outcome_sink(|_| {}).is_err(), "sink after traffic must fail");
+        assert!(sim.set_snapshot_every(1.0, |_| {}).is_err(), "cadence after traffic must fail");
+    }
+
+    #[test]
+    fn stats_snapshot_roundtrips_the_wire() {
+        let snap = StatsSnapshot {
+            t_s: 1.5,
+            offered: 10,
+            admitted: 8,
+            rejected_full: 1,
+            rejected_deadline: 1,
+            rejected_shard_lost: 0,
+            served: 7,
+            failed: 1,
+            requeued: 2,
+            deadline_misses: 3,
+            queued: 1,
+            p50_service_ms: 4.5,
+            p99_service_ms: 9.25,
+        };
+        let back = StatsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    /// The ledger's second `finish()` returns an empty ledger (the run's
+    /// numbers move out exactly once), mirroring the old
+    /// `std::mem::take` semantics on the outcome vector.
+    #[test]
+    fn finish_moves_the_ledger_out_once() {
+        let mut sim =
+            SimGateway::new(vec![spec("tiny-p8", 8, 1)], &GatewayConfig::default()).unwrap();
+        sim.offer(SimRequest {
+            dataset: "tiny".to_string(),
+            x: Tensor3::from_vec(1, 3, 3, vec![0.8; 9]),
+            slo: Slo::latency(10.0),
+            arrival_s: 0.0,
+        })
+        .unwrap();
+        let first = sim.finish();
+        assert_eq!(first.offered, 1);
+        let second = sim.finish();
+        assert_eq!(second.offered, 0);
+        assert_eq!(second.service.count(), 0);
     }
 }

@@ -61,12 +61,12 @@ use crate::nn::tensor::Tensor3;
 use crate::snn::config as snn_config;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::util::stats::{percentile, Summary};
+use crate::util::stats::{Recorder, Summary};
 use crate::util::wire::{De, FromJson, Obj, ToJson, WireError};
 
 use super::gateway::{
-    DesignKind, ExecutorSpec, FaultPlan, Gateway, GatewayConfig, GatewayStats, RejectReason,
-    Request, SimGateway, SimRequest, Slo, SloClass, Ticket,
+    DecisionDigest, DesignKind, ExecutorSpec, FaultPlan, Gateway, GatewayConfig, GatewayStats,
+    Request, RunLedger, SimGateway, SimRequest, Slo, SloClass, Ticket,
 };
 
 /// Workload shape: a seeded preset, or an explicit replayable trace.
@@ -441,33 +441,92 @@ pub struct Workload {
     pub arrivals: Vec<Arrival>,
 }
 
-/// Generate a deterministic workload over `pools` from `cfg.seed`
-/// (presets) or by replaying `cfg.scenario`'s trace verbatim.
+/// Streaming arrival generator: yields the exact arrival stream
+/// [`generate`] materializes — byte-identical for the same
+/// [`LoadgenConfig`] — one [`Arrival`] at a time, so a 10M-request run
+/// never holds the workload in memory.  Presets draw from one seeded
+/// RNG in a fixed per-arrival order (dataset, image, delay jitter,
+/// class), and traces replay with a rolling previous-time cursor; both
+/// are single-pass, which is what makes the iterator form exact.
 ///
-/// Panics if `pools` is empty, any pool has no images, or a trace is
-/// invalid / names a dataset with no pool ([`resolve_spec`] validates
-/// spec-borne traces up front and errors instead).
-pub fn generate(cfg: &LoadgenConfig, pools: &[DatasetPool]) -> Workload {
-    assert!(!pools.is_empty(), "loadgen needs at least one dataset pool");
-    assert!(
-        pools.iter().all(|p| !p.images.is_empty()),
-        "every dataset pool needs at least one image"
-    );
-    if let Scenario::Trace(trace) = &cfg.scenario {
-        return generate_trace(cfg, trace, pools);
+/// Construction panics if `pools` is empty, any pool has no images, or
+/// a trace is invalid; an unknown trace dataset name panics at that
+/// event, as [`generate`] did ([`resolve_spec`] validates spec-borne
+/// traces up front and errors instead).
+pub struct ArrivalGen<'a> {
+    cfg: &'a LoadgenConfig,
+    pools: &'a [DatasetPool],
+    rng: Rng,
+    /// Next arrival index.
+    i: usize,
+    /// Total arrivals this generator will yield.
+    n: usize,
+    /// Previous absolute trace time (trace replay only).
+    prev_t_s: f64,
+}
+
+impl<'a> ArrivalGen<'a> {
+    pub fn new(cfg: &'a LoadgenConfig, pools: &'a [DatasetPool]) -> ArrivalGen<'a> {
+        assert!(!pools.is_empty(), "loadgen needs at least one dataset pool");
+        assert!(
+            pools.iter().all(|p| !p.images.is_empty()),
+            "every dataset pool needs at least one image"
+        );
+        let n = match &cfg.scenario {
+            Scenario::Trace(trace) => {
+                if let Err(e) = trace.validate() {
+                    panic!("{e}");
+                }
+                trace.events.len()
+            }
+            _ => cfg.requests,
+        };
+        ArrivalGen { cfg, pools, rng: Rng::new(cfg.seed), i: 0, n, prev_t_s: 0.0 }
     }
-    let mut rng = Rng::new(cfg.seed);
-    let base = cfg.gap;
-    let n = cfg.requests;
-    let mut arrivals = Vec::with_capacity(n);
-    for i in 0..n {
+
+    /// Replay one trace event (no RNG on this path: image choice cycles
+    /// the pool, absolute times become inter-arrival delays).
+    fn next_trace(&mut self, trace: &ArrivalTrace, i: usize) -> Arrival {
+        let ev = &trace.events[i];
+        let dataset = if ev.dataset.is_empty() {
+            0
+        } else {
+            self.pools.iter().position(|p| p.name == ev.dataset).unwrap_or_else(|| {
+                panic!(
+                    "trace {:?}: event {i} names dataset {:?} with no pool",
+                    trace.name, ev.dataset
+                )
+            })
+        };
+        let mut slo = self.cfg.slo.for_class(ev.class);
+        if ev.deadline_s.is_some() {
+            slo.deadline_s = ev.deadline_s;
+        }
+        let a = Arrival {
+            dataset,
+            image: i % self.pools[dataset].images.len(),
+            delay: Duration::from_secs_f64(ev.t_s - self.prev_t_s),
+            slo,
+        };
+        self.prev_t_s = ev.t_s;
+        a
+    }
+
+    /// Generate one preset arrival.  The RNG consultation order within
+    /// each arrival (dataset, image, delay jitter, class) is part of the
+    /// determinism contract — reordering it would silently re-seed every
+    /// fixed-seed golden.
+    fn next_preset(&mut self, i: usize) -> Arrival {
+        let cfg = self.cfg;
+        let base = cfg.gap;
+        let n = self.n;
         let dataset = match &cfg.scenario {
             // Mixed interleaves strictly; the others draw a pool at
             // random (seeded, so still deterministic).
-            Scenario::Mixed => i % pools.len(),
-            _ => rng.below(pools.len()),
+            Scenario::Mixed => i % self.pools.len(),
+            _ => self.rng.below(self.pools.len()),
         };
-        let image = rng.below(pools[dataset].images.len());
+        let image = self.rng.below(self.pools[dataset].images.len());
         let delay = match &cfg.scenario {
             Scenario::Steady | Scenario::Mixed => base,
             Scenario::Bursty => {
@@ -488,65 +547,65 @@ pub fn generate(cfg: &LoadgenConfig, pools: &[DatasetPool]) -> Workload {
                 // around base, with ±25% per-arrival jitter.
                 let phase = i as f64 / n.max(1) as f64;
                 let wave = 1.0 + 0.9 * (2.0 * std::f64::consts::PI * phase).sin();
-                let jitter = 0.75 + 0.5 * rng.f64();
+                let jitter = 0.75 + 0.5 * self.rng.f64();
                 Duration::from_secs_f64(base.as_secs_f64() * wave * jitter)
             }
             Scenario::FlashCrowd => {
                 // Jittered steady pacing; the crowd window (middle
                 // ~sixth of the run) arrives 16× faster.
-                let jitter = 0.75 + 0.5 * rng.f64();
+                let jitter = 0.75 + 0.5 * self.rng.f64();
                 let phase = i as f64 / n.max(1) as f64;
                 let gap_s = base.as_secs_f64() * jitter;
                 let crowded = (0.45..0.60).contains(&phase);
                 Duration::from_secs_f64(if crowded { gap_s / 16.0 } else { gap_s })
             }
-            Scenario::Trace(_) => unreachable!("trace workloads replay above"),
+            Scenario::Trace(_) => unreachable!("trace arrivals replay in next_trace"),
         };
         // The class draw comes last so inactive mixes (the default)
         // leave every pre-mix seed's stream untouched.
         let slo = if cfg.class_mix.is_active() {
-            cfg.slo.for_class(cfg.class_mix.draw(&mut rng))
+            cfg.slo.for_class(cfg.class_mix.draw(&mut self.rng))
         } else {
             cfg.slo
         };
-        arrivals.push(Arrival { dataset, image, delay, slo });
+        Arrival { dataset, image, delay, slo }
     }
-    Workload { scenario: cfg.scenario.clone(), arrivals }
 }
 
-/// Replay a validated trace as a workload: absolute times become
-/// inter-arrival delays, dataset names resolve to pool indices, and
-/// image choice cycles each pool (no RNG on this path).
-fn generate_trace(cfg: &LoadgenConfig, trace: &ArrivalTrace, pools: &[DatasetPool]) -> Workload {
-    if let Err(e) = trace.validate() {
-        panic!("{e}");
-    }
-    let mut prev = 0.0f64;
-    let mut arrivals = Vec::with_capacity(trace.events.len());
-    for (i, ev) in trace.events.iter().enumerate() {
-        let dataset = if ev.dataset.is_empty() {
-            0
-        } else {
-            pools.iter().position(|p| p.name == ev.dataset).unwrap_or_else(|| {
-                panic!(
-                    "trace {:?}: event {i} names dataset {:?} with no pool",
-                    trace.name, ev.dataset
-                )
-            })
-        };
-        let mut slo = cfg.slo.for_class(ev.class);
-        if ev.deadline_s.is_some() {
-            slo.deadline_s = ev.deadline_s;
+impl Iterator for ArrivalGen<'_> {
+    type Item = Arrival;
+
+    fn next(&mut self) -> Option<Arrival> {
+        if self.i >= self.n {
+            return None;
         }
-        arrivals.push(Arrival {
-            dataset,
-            image: i % pools[dataset].images.len(),
-            delay: Duration::from_secs_f64(ev.t_s - prev),
-            slo,
-        });
-        prev = ev.t_s;
+        let i = self.i;
+        self.i += 1;
+        // Copying the `&'a LoadgenConfig` out unties the scenario match
+        // from the `&mut self` borrow.
+        let cfg = self.cfg;
+        Some(match &cfg.scenario {
+            Scenario::Trace(trace) => self.next_trace(trace, i),
+            _ => self.next_preset(i),
+        })
     }
-    Workload { scenario: cfg.scenario.clone(), arrivals }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.n - self.i;
+        (left, Some(left))
+    }
+}
+
+/// Generate a deterministic workload over `pools` from `cfg.seed`
+/// (presets) or by replaying `cfg.scenario`'s trace verbatim — the
+/// materialized form of [`ArrivalGen`] (which the streaming
+/// [`simulate_stream`] path uses directly).
+///
+/// Panics if `pools` is empty, any pool has no images, or a trace is
+/// invalid / names a dataset with no pool ([`resolve_spec`] validates
+/// spec-borne traces up front and errors instead).
+pub fn generate(cfg: &LoadgenConfig, pools: &[DatasetPool]) -> Workload {
+    Workload { scenario: cfg.scenario.clone(), arrivals: ArrivalGen::new(cfg, pools).collect() }
 }
 
 /// Report of one driven workload.
@@ -561,13 +620,23 @@ fn generate_trace(cfg: &LoadgenConfig, trace: &ArrivalTrace, pools: &[DatasetPoo
 pub struct LoadgenReport {
     /// Scenario that was driven.
     pub scenario: Scenario,
-    /// (design name, slo_miss) per **admitted** request, in submission
-    /// order — the routing trace the determinism tests compare.
-    pub decisions: Vec<(String, bool)>,
+    /// Order-sensitive FNV-1a-64 digest of the (design, slo_miss)
+    /// routing decisions — the O(1) replacement for the old per-request
+    /// `decisions` list, so a 10M-request report stays bounded.  Equal
+    /// digests mean byte-identical decision streams, which is what the
+    /// determinism tests compare (see
+    /// [`super::gateway::DecisionDigest`]).  Folded at admission time on
+    /// the simulated path and at completion on the threaded path.
+    pub decision_digest: u64,
+    /// Completions per design name: router-table order (zeros included)
+    /// on the simulated path, first-seen order on the threaded path.
+    pub per_design: Vec<(String, usize)>,
     /// Requests offered to the gateway (admitted + rejected).
     pub offered: usize,
-    /// Requests admitted past admission control (== `served`; every
-    /// admitted request completes).
+    /// Requests admitted past admission control, counted at admission.
+    /// Equals `served` on fault-free runs; under chaos it also counts
+    /// admitted requests later lost with a killed shard
+    /// (`admitted == served + rejected_shard_lost`).
     pub admitted: usize,
     /// Rejections because the chosen design's queue was full.
     pub rejected_full: usize,
@@ -684,17 +753,20 @@ impl FromJson for ClassReport {
 
 impl ToJson for LoadgenReport {
     fn to_json(&self) -> Json {
-        let decisions = Json::Arr(
-            self.decisions
+        let per_design = Json::Arr(
+            self.per_design
                 .iter()
-                .map(|(design, slo_miss)| {
-                    Obj::new().field("design", design).field("slo_miss", slo_miss).build()
+                .map(|(design, served)| {
+                    Obj::new().field("design", design).field("served", served).build()
                 })
                 .collect(),
         );
         Obj::new()
             .field("scenario", &self.scenario)
-            .raw("decisions", decisions)
+            // Hex-encoded: u64 digests exceed the f64-backed number
+            // wire's 2^53 exact-integer range.
+            .raw("decision_digest", Json::Str(format!("{:016x}", self.decision_digest)))
+            .raw("per_design", per_design)
             .field("offered", &self.offered)
             .field("admitted", &self.admitted)
             .field("rejected_full", &self.rejected_full)
@@ -722,16 +794,41 @@ impl ToJson for LoadgenReport {
 impl FromJson for LoadgenReport {
     fn from_json(v: &Json) -> Result<LoadgenReport, WireError> {
         let d = De::root(v);
-        let decisions = d
-            .field("decisions")?
-            .items()?
-            .into_iter()
-            .map(|el| Ok((el.req("design")?, el.req("slo_miss")?)))
-            .collect::<Result<Vec<(String, bool)>, WireError>>()?;
+        let (decision_digest, per_design) = match d.opt("decision_digest") {
+            Some(el) => {
+                let hex: String = el.get()?;
+                let digest = u64::from_str_radix(&hex, 16)
+                    .map_err(|_| el.err(format!("invalid decision digest {hex:?}")))?;
+                let per_design = d
+                    .field("per_design")?
+                    .items()?
+                    .into_iter()
+                    .map(|el| Ok((el.req("design")?, el.req("served")?)))
+                    .collect::<Result<Vec<(String, usize)>, WireError>>()?;
+                (digest, per_design)
+            }
+            // Legacy artifacts carried the full per-request decisions
+            // list; it folds to the same digest and counts.
+            None => {
+                let mut digest = DecisionDigest::new();
+                let mut per_design: Vec<(String, usize)> = Vec::new();
+                for el in d.field("decisions")?.items()? {
+                    let design: String = el.req("design")?;
+                    let slo_miss: bool = el.req("slo_miss")?;
+                    digest.fold(&design, slo_miss);
+                    match per_design.iter_mut().find(|(n, _)| *n == design) {
+                        Some((_, c)) => *c += 1,
+                        None => per_design.push((design, 1)),
+                    }
+                }
+                (digest.value(), per_design)
+            }
+        };
         let served: usize = d.req("served")?;
         Ok(LoadgenReport {
             scenario: d.req("scenario")?,
-            decisions,
+            decision_digest,
+            per_design,
             // Admission-era fields decode with defaults so pre-admission
             // artifacts stay loadable (they had no rejections).
             offered: d.opt_or("offered", served)?,
@@ -759,18 +856,6 @@ impl FromJson for LoadgenReport {
 }
 
 impl LoadgenReport {
-    /// Requests routed per design name, in first-seen order.
-    pub fn per_design(&self) -> Vec<(String, usize)> {
-        let mut out: Vec<(String, usize)> = Vec::new();
-        for (name, _) in &self.decisions {
-            match out.iter_mut().find(|(n, _)| n == name) {
-                Some((_, c)) => *c += 1,
-                None => out.push((name.clone(), 1)),
-            }
-        }
-        out
-    }
-
     /// Human-readable summary (the `repro loadgen` output).
     pub fn render(&self) -> String {
         let mut s = String::new();
@@ -832,7 +917,7 @@ impl LoadgenReport {
             self.mean_routed_latency_ms,
             self.routed_energy_j * 1e3
         ));
-        for (name, count) in self.per_design() {
+        for (name, count) in self.per_design.iter().filter(|(_, c)| *c > 0) {
             s.push_str(&format!("routed           : {name:<16} {count}\n"));
         }
         s
@@ -864,15 +949,20 @@ pub fn drive(
             slo: a.slo,
         })?);
     }
-    let mut decisions = Vec::with_capacity(tickets.len());
-    let mut service = Vec::with_capacity(tickets.len());
+    let mut digest = DecisionDigest::new();
+    let mut per_design: Vec<(String, usize)> = Vec::new();
+    let mut service = Recorder::new();
     let mut routed_latency = Summary::new();
     let mut routed_energy = 0.0;
     let (mut served, mut failed, mut slo_misses) = (0usize, 0usize, 0usize);
     for t in tickets {
         let r = t.recv()?;
-        decisions.push((r.design.clone(), r.slo_miss));
-        service.push(r.response.service_time.as_secs_f64() * 1e3);
+        digest.fold(&r.design, r.slo_miss);
+        match per_design.iter_mut().find(|(n, _)| *n == r.design) {
+            Some((_, c)) => *c += 1,
+            None => per_design.push((r.design.clone(), 1)),
+        }
+        service.record(r.response.service_time.as_secs_f64());
         routed_latency.add(r.routed_latency_s * 1e3);
         routed_energy += r.routed_energy_j;
         served += 1;
@@ -882,7 +972,8 @@ pub fn drive(
     let wall = t0.elapsed();
     Ok(LoadgenReport {
         scenario: workload.scenario.clone(),
-        decisions,
+        decision_digest: digest.value(),
+        per_design,
         // The threaded gateway has no admission control: everything
         // offered is admitted.
         offered: served,
@@ -900,8 +991,8 @@ pub fn drive(
         throughput_rps: served as f64 / wall.as_secs_f64().max(1e-9),
         sim_duration_s: 0.0,
         sim_throughput_rps: 0.0,
-        p50_service_ms: percentile(&service, 50.0).unwrap_or(0.0),
-        p99_service_ms: percentile(&service, 99.0).unwrap_or(0.0),
+        p50_service_ms: service.quantile(0.5).map_or(0.0, |s| s * 1e3),
+        p99_service_ms: service.quantile(0.99).map_or(0.0, |s| s * 1e3),
         mean_routed_latency_ms: routed_latency.mean(),
         routed_energy_j: routed_energy,
         // The threaded path keeps no per-class accounting.
@@ -932,9 +1023,23 @@ pub fn simulate(
     workload: &Workload,
     pools: &[DatasetPool],
 ) -> Result<LoadgenReport> {
+    simulate_stream(sim, workload.scenario.clone(), workload.arrivals.iter().copied(), pools)
+}
+
+/// [`simulate`] without the materialized workload: offers `arrivals` one
+/// at a time (delays become cumulative simulated timestamps), so the
+/// whole run — [`ArrivalGen`] in, [`RunLedger`] out — is O(1) in the
+/// request count.  This is what lets the scale-smoke CI job replay 1M
+/// requests under a hard `ulimit -v`.
+pub fn simulate_stream(
+    sim: &mut SimGateway,
+    scenario: Scenario,
+    arrivals: impl Iterator<Item = Arrival>,
+    pools: &[DatasetPool],
+) -> Result<LoadgenReport> {
     let t0 = Instant::now();
     let mut t_s = 0.0f64;
-    for a in &workload.arrivals {
+    for a in arrivals {
         t_s += a.delay.as_secs_f64();
         let pool = &pools[a.dataset];
         sim.offer(SimRequest {
@@ -944,109 +1049,73 @@ pub fn simulate(
             arrival_s: t_s,
         })?;
     }
-    let outcomes = sim.finish();
-    let wall = t0.elapsed();
+    let ledger = sim.finish();
+    Ok(report_from_ledger(scenario, ledger, t0.elapsed()))
+}
 
-    let mut decisions = Vec::new();
-    let mut service = Vec::new();
-    let mut routed_latency = Summary::new();
-    let mut routed_energy = 0.0;
-    let (mut served, mut failed, mut slo_misses) = (0usize, 0usize, 0usize);
-    let (mut rejected_full, mut rejected_deadline) = (0usize, 0usize);
-    let (mut rejected_shard_lost, mut requeued) = (0usize, 0usize);
-    let mut deadline_misses = 0usize;
-    let mut sim_end = 0.0f64;
-    // Per-class buckets, indexed by SloClass::index().
-    let mut by_class: [(ClassReport, Vec<f64>); 3] = SloClass::all().map(|class| {
-        (
-            ClassReport {
-                class,
-                offered: 0,
-                served: 0,
-                failed: 0,
-                rejected: 0,
-                deadline_misses: 0,
-                p50_service_ms: 0.0,
-                p99_service_ms: 0.0,
-            },
-            Vec::new(),
-        )
-    });
-    for o in &outcomes {
-        let (c, c_service) = &mut by_class[o.class.index()];
-        c.offered += 1;
-        requeued += o.requeues;
-        if !o.admitted {
-            match o.reject {
-                Some(RejectReason::QueueFull) => rejected_full += 1,
-                Some(RejectReason::DeadlineUnmeetable) => rejected_deadline += 1,
-                Some(RejectReason::ShardLost) => rejected_shard_lost += 1,
-                None => {}
-            }
-            c.rejected += o.reject.is_some() as usize;
-            continue;
-        }
-        decisions.push((o.design.clone(), o.slo_miss));
-        service.push(o.service_s * 1e3);
-        c_service.push(o.service_s * 1e3);
-        routed_latency.add(o.routed_latency_s * 1e3);
-        routed_energy += o.routed_energy_j;
-        served += 1;
-        failed += (!o.ok) as usize;
-        if o.ok {
-            c.served += 1;
-        } else {
-            c.failed += 1;
-        }
-        slo_misses += o.slo_miss as usize;
-        deadline_misses += o.deadline_miss as usize;
-        c.deadline_misses += o.deadline_miss as usize;
-        sim_end = sim_end.max(o.arrival_s + o.service_s);
-    }
-    let classes = by_class
-        .into_iter()
-        .map(|(mut c, c_service)| {
-            c.p50_service_ms = percentile(&c_service, 50.0).unwrap_or(0.0);
-            c.p99_service_ms = percentile(&c_service, 99.0).unwrap_or(0.0);
-            c
+/// Project a finished run's [`RunLedger`] onto the report shape
+/// (percentiles come off the ledger's quantile sketches, in ms).
+fn report_from_ledger(scenario: Scenario, ledger: RunLedger, wall: Duration) -> LoadgenReport {
+    let classes = ledger
+        .classes
+        .iter()
+        .map(|c| ClassReport {
+            class: c.class,
+            offered: c.offered,
+            served: c.served,
+            failed: c.failed,
+            rejected: c.rejected,
+            deadline_misses: c.deadline_misses,
+            p50_service_ms: c.service.quantile(0.5).map_or(0.0, |s| s * 1e3),
+            p99_service_ms: c.service.quantile(0.99).map_or(0.0, |s| s * 1e3),
         })
         .collect();
-    let offered = outcomes.len();
-    let rejected = rejected_full + rejected_deadline + rejected_shard_lost;
-    Ok(LoadgenReport {
-        scenario: workload.scenario.clone(),
-        decisions,
-        offered,
-        admitted: served,
-        rejected_full,
-        rejected_deadline,
-        rejected_shard_lost,
-        rejection_rate: if offered == 0 { 0.0 } else { rejected as f64 / offered as f64 },
-        deadline_misses,
-        requeued,
+    let served = ledger.completed;
+    LoadgenReport {
+        scenario,
+        decision_digest: ledger.decision_digest.value(),
+        per_design: ledger.per_design,
+        offered: ledger.offered,
+        admitted: ledger.admitted,
+        rejected_full: ledger.rejected_full,
+        rejected_deadline: ledger.rejected_deadline,
+        rejected_shard_lost: ledger.rejected_shard_lost,
+        rejection_rate: if ledger.offered == 0 {
+            0.0
+        } else {
+            (ledger.rejected_full + ledger.rejected_deadline + ledger.rejected_shard_lost) as f64
+                / ledger.offered as f64
+        },
+        deadline_misses: ledger.deadline_misses,
+        requeued: ledger.requeued,
         served,
-        failed,
-        slo_misses,
+        failed: ledger.failed,
+        slo_misses: ledger.slo_misses,
         wall,
         throughput_rps: served as f64 / wall.as_secs_f64().max(1e-9),
-        sim_duration_s: sim_end,
-        sim_throughput_rps: if sim_end > 0.0 { served as f64 / sim_end } else { 0.0 },
-        p50_service_ms: percentile(&service, 50.0).unwrap_or(0.0),
-        p99_service_ms: percentile(&service, 99.0).unwrap_or(0.0),
-        mean_routed_latency_ms: routed_latency.mean(),
-        routed_energy_j: routed_energy,
+        sim_duration_s: ledger.end_s,
+        sim_throughput_rps: if ledger.end_s > 0.0 { served as f64 / ledger.end_s } else { 0.0 },
+        p50_service_ms: ledger.service.quantile(0.5).map_or(0.0, |s| s * 1e3),
+        p99_service_ms: ledger.service.quantile(0.99).map_or(0.0, |s| s * 1e3),
+        mean_routed_latency_ms: ledger.routed_latency.mean() * 1e3,
+        routed_energy_j: ledger.routed_energy_j,
         classes,
-    })
+    }
 }
 
 /// Resolve a [`DeploymentSpec`], build the discrete-event stack (with the
-/// spec's fault plan installed), generate the spec's workload, simulate
-/// it, and aggregate — the one-call form of the `repro loadgen` path.
-/// Returns the report plus the deterministic [`GatewayStats`].
+/// spec's fault plan installed), stream the spec's workload through it,
+/// and aggregate — the one-call form of the `repro loadgen` path, O(1)
+/// in memory end to end.  Returns the report plus the deterministic
+/// [`GatewayStats`].
 pub fn run_sim(spec: &DeploymentSpec) -> Result<(LoadgenReport, GatewayStats)> {
     let (mut sim, pools) = SimGateway::from_spec(spec)?;
-    let workload = generate(&spec.loadgen, &pools);
-    let report = simulate(&mut sim, &workload, &pools)?;
+    let report = simulate_stream(
+        &mut sim,
+        spec.loadgen.scenario.clone(),
+        ArrivalGen::new(&spec.loadgen, &pools),
+        &pools,
+    )?;
     Ok((report, sim.shutdown()))
 }
 
@@ -1547,6 +1616,40 @@ mod tests {
                     .any(|(a, b)| (a.dataset, a.image) != (b.dataset, b.image)),
                 "different seeds must produce different workloads"
             );
+        }
+    }
+
+    /// The streaming generator must yield exactly the workload
+    /// [`generate`] materializes, arrival for arrival, with an exact
+    /// size_hint — including when an active class mix adds a fourth RNG
+    /// draw per arrival.
+    #[test]
+    fn arrival_gen_streams_generate_byte_for_byte() {
+        let pools = vec![
+            DatasetPool { name: "a".into(), images: synthetic_images((1, 3, 3), 8, 1) },
+            DatasetPool { name: "b".into(), images: synthetic_images((1, 3, 3), 8, 2) },
+        ];
+        for scenario in Scenario::all() {
+            let cfg = LoadgenConfig {
+                scenario,
+                requests: 32,
+                class_mix: ClassMix { interactive: 0.25, batch: 0.5, best_effort: 0.25 },
+                ..Default::default()
+            };
+            let w = generate(&cfg, &pools);
+            let mut it = ArrivalGen::new(&cfg, &pools);
+            assert_eq!(it.size_hint(), (32, Some(32)));
+            for (i, a) in w.arrivals.iter().enumerate() {
+                let s = it.next().expect("generator ended early");
+                assert_eq!(
+                    (a.dataset, a.image, a.delay, a.slo),
+                    (s.dataset, s.image, s.delay, s.slo),
+                    "arrival {i} diverged under {:?}",
+                    cfg.scenario
+                );
+            }
+            assert_eq!(it.size_hint(), (0, Some(0)));
+            assert!(it.next().is_none());
         }
     }
 

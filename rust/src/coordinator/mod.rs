@@ -42,10 +42,11 @@ pub mod serve;
 pub mod sweep;
 
 pub use gateway::{
-    AutoscaleConfig, AutoscaleEvent, Gateway, GatewayConfig, GatewayStats, QueueStats,
-    RejectReason, Request, Router, SimGateway, SimOutcome, SimRequest, Slo,
+    AutoscaleConfig, AutoscaleEvent, DecisionDigest, Gateway, GatewayConfig, GatewayStats,
+    QueueStats, RejectReason, Request, Router, RunLedger, SimGateway, SimOutcome, SimRequest, Slo,
+    StatsSnapshot,
 };
-pub use loadgen::{LoadgenConfig, LoadgenReport, Scenario};
+pub use loadgen::{ArrivalGen, LoadgenConfig, LoadgenReport, Scenario};
 pub use sweep::{
     cnn_metrics, snn_sweep, snn_sweep_counted, CnnMetrics, SampleMetrics, SnnSweep, SweepCounters,
 };

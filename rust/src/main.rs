@@ -10,6 +10,7 @@
 //! repro loadgen --scenario steady --requests 64 [--shards 2] [--seed 42]
 //!              [--deadline-ms 5] [--queue-cap 16] [--class-mix 3,1,4]
 //!              [--trace FILE] [--faults FILE] [--emit-trace FILE] [--wall]
+//!              [--snapshot-every MS]
 //! repro loadgen --spec examples/specs/overload_burst.json [--json --out out.json]
 //! repro checkjson --file out.json        # re-parse + reconcile totals
 //! repro validate                         # golden artifact checks
@@ -33,7 +34,10 @@ use spikebench::nn::loader::{load_network, WeightKind};
 use spikebench::report;
 use spikebench::util::cli::Args;
 use spikebench::util::json::Json;
-use spikebench::util::wire::{self, JsonEvent, JsonReader, Obj};
+use spikebench::util::wire::{self, JsonEvent, JsonReader, JsonWriter, Obj};
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 fn main() {
     if let Err(e) = run() {
@@ -52,7 +56,9 @@ fn usage() -> &'static str {
      dynamic batching, shard autoscaling, seeded chaos (--faults FILE) —\n\
      on a simulated clock (--wall uses the threaded gateway instead);\n\
      `--emit-trace FILE` records the generated workload as a replayable\n\
-     trace; `--json [--out FILE]` emits machine-readable artifacts;\n\
+     trace; `--snapshot-every MS` streams periodic gateway stats on the\n\
+     simulated clock; `--json [--out FILE]` emits machine-readable\n\
+     artifacts (streamed incrementally on the simulated path);\n\
      `repro checkjson --file F` re-parses one and reconciles its totals"
 }
 
@@ -284,19 +290,30 @@ fn loadgen_demo(args: &Args) -> Result<()> {
     let known: Vec<&str> = TUNING_OPTS
         .iter()
         .copied()
-        .chain(["spec", "wall", "json", "out", "emit-trace"])
+        .chain(["spec", "wall", "json", "out", "emit-trace", "snapshot-every"])
         .collect();
     check_opts("loadgen", args, &known)?;
     if args.flag("wall") {
-        // The threaded gateway has no admission control and no fault
-        // injection: silently ignoring these would report 0 rejections
-        // for a deadline (or a fault plan) that was never evaluated.
-        for o in ["deadline-ms", "queue-cap", "class-mix", "trace", "faults"] {
+        // The threaded gateway has no admission control, no fault
+        // injection and no simulated clock: silently ignoring these
+        // would report 0 rejections for a deadline (or a fault plan)
+        // that was never evaluated.
+        for o in ["deadline-ms", "queue-cap", "class-mix", "trace", "faults", "snapshot-every"] {
             if args.get(o).is_some() {
                 bail!("--{o} requires the discrete-event stack (drop --wall)");
             }
         }
     }
+    let snapshot_every_s = match args.get("snapshot-every") {
+        Some(s) => {
+            let ms: f64 = s.parse().map_err(|e| anyhow!("bad --snapshot-every: {e}"))?;
+            if !ms.is_finite() || ms <= 0.0 {
+                bail!("--snapshot-every wants a positive number of simulated milliseconds");
+            }
+            Some(ms / 1e3)
+        }
+        None => None,
+    };
     let spec = match args.get("spec") {
         Some(path) => {
             // The spec file is the single source of truth: a tuning
@@ -476,12 +493,59 @@ fn loadgen_demo(args: &Args) -> Result<()> {
         let (mut sim, pools) = SimGateway::from_spec(&spec)?;
         let table = sim.router().table();
         render_head(&mut head, sim.rejected_designs(), &table);
-        let workload = loadgen::generate(&spec.loadgen, &pools);
-        emit_trace(args, &workload, &pools)?;
-        let report = loadgen::simulate(&mut sim, &workload, &pools)?;
+        if args.get("emit-trace").is_some() {
+            // The only simulated path that still materializes the
+            // workload — the trace file needs every arrival anyway.
+            let workload = loadgen::generate(&spec.loadgen, &pools);
+            emit_trace(args, &workload, &pools)?;
+        }
+        let json_requested = args.flag("json") || args.get("json").is_some();
+        if json_requested {
+            // The artifact streams through JsonWriter so snapshots go
+            // out as they fire and a 10M-request run never builds the
+            // JSON tree in memory.
+            return loadgen_json_stream(args, &spec, &head, &table, sim, &pools, snapshot_every_s);
+        }
+        if let Some(every_s) = snapshot_every_s {
+            sim.set_snapshot_every(every_s, |s| {
+                println!(
+                    "snapshot @{:.3}ms: {} offered, {} served, {} queued, p99 {:.2} ms",
+                    s.t_s * 1e3,
+                    s.offered,
+                    s.served,
+                    s.queued,
+                    s.p99_service_ms
+                );
+            })?;
+        }
+        let report = loadgen::simulate_stream(
+            &mut sim,
+            spec.loadgen.scenario.clone(),
+            loadgen::ArrivalGen::new(&spec.loadgen, &pools),
+            &pools,
+        )?;
         (table, report, sim.shutdown())
     };
 
+    let text = loadgen_summary(&head, &report, &stats);
+    emit_text_or_json(args, &text, || {
+        Obj::new()
+            .field("kind", "loadgen")
+            .field("spec", &spec)
+            .field("table", &table)
+            .field("report", &report)
+            .field("gateway", &stats)
+            .build()
+    })
+}
+
+/// The human-readable `repro loadgen` summary (report + executor line +
+/// autoscaler trail).
+fn loadgen_summary(
+    head: &str,
+    report: &spikebench::coordinator::loadgen::LoadgenReport,
+    stats: &spikebench::coordinator::gateway::GatewayStats,
+) -> String {
     let mut text = format!(
         "{head}{}executors: {} batches, {} backend calls, {} cost estimates across {} shards",
         report.render(),
@@ -509,15 +573,83 @@ fn loadgen_demo(args: &Args) -> Result<()> {
         }
         text.push(')');
     }
-    emit_text_or_json(args, &text, || {
-        Obj::new()
-            .field("kind", "loadgen")
-            .field("spec", &spec)
-            .field("table", &table)
-            .field("report", &report)
-            .field("gateway", &stats)
-            .build()
-    })
+    text
+}
+
+/// The simulated-path `--json` emitter: one incremental [`JsonWriter`]
+/// pass over `{kind, spec, table, snapshots?, report, gateway}`.  The
+/// snapshot sink shares the writer through an `Rc<RefCell<..>>` (the
+/// gateway wants a `'static` callback); IO errors latch inside the
+/// writer and surface at `finish()`.
+fn loadgen_json_stream(
+    args: &Args,
+    spec: &DeploymentSpec,
+    head: &str,
+    table: &[spikebench::coordinator::gateway::PricedDesign],
+    mut sim: SimGateway,
+    pools: &[loadgen::DatasetPool],
+    snapshot_every_s: Option<f64>,
+) -> Result<()> {
+    let out_path = args.get("out").or_else(|| args.get("json"));
+    let out: Box<dyn std::io::Write> = match out_path {
+        Some(path) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
+        )),
+        None => Box::new(std::io::stdout()),
+    };
+    let w = Rc::new(RefCell::new(JsonWriter::new(out)));
+    {
+        let mut wb = w.borrow_mut();
+        wb.begin_object();
+        wb.key("kind");
+        wb.emit("loadgen");
+        wb.key("spec");
+        wb.emit(spec);
+        wb.key("table");
+        wb.emit(table);
+        if snapshot_every_s.is_some() {
+            wb.key("snapshots");
+            wb.begin_array();
+        }
+    }
+    if let Some(every_s) = snapshot_every_s {
+        let ws = Rc::clone(&w);
+        sim.set_snapshot_every(every_s, move |s| {
+            ws.borrow_mut().emit(s);
+        })?;
+    }
+    let report = loadgen::simulate_stream(
+        &mut sim,
+        spec.loadgen.scenario.clone(),
+        loadgen::ArrivalGen::new(&spec.loadgen, pools),
+        pools,
+    )?;
+    let stats = sim.shutdown();
+    {
+        let mut wb = w.borrow_mut();
+        if snapshot_every_s.is_some() {
+            wb.end_array();
+        }
+        wb.key("report");
+        wb.emit(&report);
+        wb.key("gateway");
+        wb.emit(&stats);
+        wb.end_object();
+    }
+    // shutdown() dropped the gateway's sink clone, so the writer is ours
+    // alone again.
+    let writer = match Rc::try_unwrap(w) {
+        Ok(cell) => cell.into_inner(),
+        Err(_) => unreachable!("the snapshot sink died with the gateway"),
+    };
+    writer.finish().with_context(|| {
+        format!("writing json artifact{}", out_path.map(|p| format!(" {p}")).unwrap_or_default())
+    })?;
+    eprintln!("{}", loadgen_summary(head, &report, &stats));
+    if let Some(path) = out_path {
+        eprintln!("json artifact written to {path}");
+    }
+    Ok(())
 }
 
 /// `--emit-trace FILE`: record the generated workload as a replayable
@@ -546,8 +678,13 @@ fn emit_trace(
 /// equal `served + rejected` (the conservation identity that holds with
 /// and without chaos; every offered request either completes or is
 /// rejected, at admission or by shard loss) as well as the sum of the
-/// per-queue `offered` counters. The CI release leg runs this against
-/// the steady, overload and chaos specs.
+/// per-queue `offered` counters.  A `snapshots` stream (from
+/// `--snapshot-every`) is checked too: simulated time strictly
+/// increasing, cumulative counters monotone, and the admission identity
+/// `offered == admitted + rejected_full + rejected_deadline` inside
+/// every snapshot.  The CI release leg runs this against the steady,
+/// overload and chaos specs; the scale-smoke leg against a streamed
+/// 1M-request run.
 fn checkjson(args: &Args) -> Result<()> {
     check_opts("checkjson", args, &["file"])?;
     let path = args.get("file").ok_or_else(|| anyhow!("--file required\n{}", usage()))?;
@@ -558,29 +695,35 @@ fn checkjson(args: &Args) -> Result<()> {
     let (mut offered, mut served, mut rejected) = (None, None, None);
     let mut per_design: Vec<f64> = Vec::new();
     let mut queue_offered: Vec<f64> = Vec::new();
+    let mut snapshots = 0usize;
     r.expect_object().map_err(|e| anyhow!("{path}: {e}"))?;
     while let Some(key) = r.next_key()? {
-        if key != "gateway" {
-            r.skip_value()?;
-            continue;
-        }
-        r.expect_object()?;
-        while let Some(gk) = r.next_key()? {
-            match gk.as_str() {
-                "routed" => total = Some(r.num()?),
-                "offered" => offered = Some(r.num()?),
-                "served" => served = Some(r.num()?),
-                "rejected" => rejected = Some(r.num()?),
-                "designs" => {
-                    collect_array_field(&mut r, "routed", &mut per_design)
-                        .map_err(|e| anyhow!("{path}: gateway.designs: {e}"))?;
-                }
-                "queues" => {
-                    collect_array_field(&mut r, "offered", &mut queue_offered)
-                        .map_err(|e| anyhow!("{path}: gateway.queues: {e}"))?;
-                }
-                _ => r.skip_value()?,
+        match key.as_str() {
+            "snapshots" => {
+                snapshots = check_snapshots(&mut r)
+                    .map_err(|e| anyhow!("{path}: snapshots: {e}"))?;
             }
+            "gateway" => {
+                r.expect_object()?;
+                while let Some(gk) = r.next_key()? {
+                    match gk.as_str() {
+                        "routed" => total = Some(r.num()?),
+                        "offered" => offered = Some(r.num()?),
+                        "served" => served = Some(r.num()?),
+                        "rejected" => rejected = Some(r.num()?),
+                        "designs" => {
+                            collect_array_field(&mut r, "routed", &mut per_design)
+                                .map_err(|e| anyhow!("{path}: gateway.designs: {e}"))?;
+                        }
+                        "queues" => {
+                            collect_array_field(&mut r, "offered", &mut queue_offered)
+                                .map_err(|e| anyhow!("{path}: gateway.queues: {e}"))?;
+                        }
+                        _ => r.skip_value()?,
+                    }
+                }
+            }
+            _ => r.skip_value()?,
         }
     }
     r.end().map_err(|e| anyhow!("{path}: {e}"))?;
@@ -614,11 +757,65 @@ fn checkjson(args: &Args) -> Result<()> {
         admission_note =
             format!(", served {srv} + rejected {rej} == offered {off}");
     }
+    let snapshot_note = if snapshots > 0 {
+        format!(", {snapshots} snapshots consistent")
+    } else {
+        String::new()
+    };
     println!(
-        "{path}: ok — routed {total} == Σ routed over {} designs{admission_note}",
+        "{path}: ok — routed {total} == Σ routed over {} designs{admission_note}{snapshot_note}",
         per_design.len()
     );
     Ok(())
+}
+
+/// Stream a `snapshots` array, enforcing per-element admission identity
+/// (`offered == admitted + rejected_full + rejected_deadline`),
+/// strictly-increasing simulated time, and monotone cumulative counters.
+/// Returns the number of snapshots seen.
+fn check_snapshots(r: &mut JsonReader<'_>) -> Result<usize> {
+    r.expect_array()?;
+    let mut n = 0usize;
+    let (mut prev_t, mut prev_offered, mut prev_served) =
+        (f64::NEG_INFINITY, f64::NEG_INFINITY, f64::NEG_INFINITY);
+    loop {
+        match r.next()? {
+            Some(JsonEvent::ObjectStart) => {
+                let mut fields = [None::<f64>; 6];
+                const KEYS: [&str; 6] =
+                    ["t_s", "offered", "admitted", "rejected_full", "rejected_deadline", "served"];
+                while let Some(k) = r.next_key()? {
+                    match KEYS.iter().position(|key| *key == k.as_str()) {
+                        Some(i) => fields[i] = Some(r.num()?),
+                        None => r.skip_value()?,
+                    }
+                }
+                let get = |i: usize| {
+                    fields[i]
+                        .ok_or_else(|| anyhow!("snapshot {n} is missing field {:?}", KEYS[i]))
+                };
+                let (t, off, adm) = (get(0)?, get(1)?, get(2)?);
+                let (rf, rd, srv) = (get(3)?, get(4)?, get(5)?);
+                if t <= prev_t {
+                    bail!("snapshot {n}: t_s {t} does not advance past {prev_t}");
+                }
+                if off < prev_offered || srv < prev_served {
+                    bail!("snapshot {n}: cumulative counters went backwards");
+                }
+                if adm + rf + rd != off {
+                    bail!(
+                        "snapshot {n}: admitted {adm} + rejected {} != offered {off}",
+                        rf + rd
+                    );
+                }
+                (prev_t, prev_offered, prev_served) = (t, off, srv);
+                n += 1;
+            }
+            Some(JsonEvent::ArrayEnd) => break,
+            _ => bail!("expected an array of snapshot objects"),
+        }
+    }
+    Ok(n)
 }
 
 /// Stream an array of objects, collecting the numeric field `field` from

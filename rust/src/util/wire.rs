@@ -229,6 +229,12 @@ impl<T: FromJson> FromJson for Option<T> {
 
 impl<T: ToJson> ToJson for Vec<T> {
     fn to_json(&self) -> Json {
+        self.as_slice().to_json()
+    }
+}
+
+impl<T: ToJson> ToJson for [T] {
+    fn to_json(&self) -> Json {
         Json::Arr(self.iter().map(ToJson::to_json).collect())
     }
 }

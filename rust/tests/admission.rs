@@ -8,10 +8,13 @@
 //! simulated clock — no artifacts, no timing dependence — so every
 //! assertion here is exact.
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::time::Duration;
 
 use spikebench::coordinator::gateway::{
-    DesignKind, ExecutorSpec, FaultPlan, GatewayConfig, RejectReason, SimGateway, SimRequest, Slo,
+    DesignKind, ExecutorSpec, FaultPlan, GatewayConfig, RejectReason, SimGateway, SimOutcome,
+    SimRequest, Slo,
 };
 use spikebench::coordinator::loadgen::{
     self, DeploymentSpec, ExecutorEntry, LoadgenConfig, Scenario,
@@ -83,6 +86,15 @@ fn offer_at(sim: &mut SimGateway, t: f64, slo: Slo) {
         .unwrap();
 }
 
+/// Collect every streamed outcome in event order — outcomes no longer
+/// accumulate in the gateway, they flow through the sink.
+fn collecting_sink(sim: &mut SimGateway) -> Rc<RefCell<Vec<SimOutcome>>> {
+    let outs = Rc::new(RefCell::new(Vec::new()));
+    let sink = Rc::clone(&outs);
+    sim.set_outcome_sink(move |o| sink.borrow_mut().push(o)).unwrap();
+    outs
+}
+
 // ---------------------------------------------------------------------------
 // Deadline-aware admission
 // ---------------------------------------------------------------------------
@@ -99,13 +111,15 @@ fn deadline_expired_requests_are_rejected_not_served() {
         ..GatewayConfig::default()
     };
     let mut sim = SimGateway::new(vec![tiny_spec(None, 1)], &cfg).unwrap();
+    let outs = collecting_sink(&mut sim);
     let (lat, _) = sim.router().price(0);
     // Room for about three service slots before the estimate breaks it.
     let slo = Slo::latency(10.0).with_deadline(3.5 * lat);
     for _ in 0..10 {
         offer_at(&mut sim, 0.0, slo);
     }
-    let outcomes = sim.finish();
+    let ledger = sim.finish();
+    let outcomes = outs.borrow();
     let admitted: Vec<_> = outcomes.iter().filter(|o| o.admitted).collect();
     let rejected: Vec<_> = outcomes.iter().filter(|o| !o.admitted).collect();
     assert!(!admitted.is_empty(), "an idle gateway must admit the first request");
@@ -115,6 +129,9 @@ fn deadline_expired_requests_are_rejected_not_served() {
         .all(|o| o.reject == Some(RejectReason::DeadlineUnmeetable)));
     // Rejected requests are never served: no batch, no service time.
     assert!(rejected.iter().all(|o| o.batch_size == 0 && o.service_s == 0.0 && !o.ok));
+    // The streamed ledger agrees with the raw outcomes.
+    assert_eq!(ledger.completed, admitted.len());
+    assert_eq!(ledger.rejected_deadline, rejected.len());
     let stats = sim.shutdown();
     assert_eq!(stats.served, admitted.len());
     assert_eq!(stats.rejected, rejected.len());
@@ -134,12 +151,15 @@ fn queue_full_backpressure_counts_reconcile() {
         ..GatewayConfig::default()
     };
     let mut sim = SimGateway::new(vec![tiny_spec(None, 1)], &cfg).unwrap();
+    let outs = collecting_sink(&mut sim);
     let slo = Slo::latency(10.0); // no deadline: only the cap rejects
     for _ in 0..32 {
         offer_at(&mut sim, 0.0, slo);
     }
-    let outcomes = sim.finish();
+    let ledger = sim.finish();
+    assert_eq!(ledger.offered, ledger.admitted + ledger.rejected_full);
     let stats = sim.shutdown();
+    let outcomes = outs.borrow();
     assert_eq!(stats.offered, 32);
     assert_eq!(stats.offered, stats.admitted + stats.rejected);
     assert!(stats.rejected > 0, "a 4-deep queue cannot absorb 32 simultaneous arrivals");
@@ -173,12 +193,14 @@ fn batch_closes_on_max_wait() {
         ..GatewayConfig::default()
     };
     let mut sim = SimGateway::new(vec![tiny_spec(None, 1)], &cfg).unwrap();
+    let outs = collecting_sink(&mut sim);
     let (lat, _) = sim.router().price(0);
     offer_at(&mut sim, 0.0, Slo::latency(10.0));
     offer_at(&mut sim, 0.0, Slo::latency(10.0));
-    let outcomes = sim.finish();
+    sim.finish();
+    let outcomes = outs.borrow();
     assert_eq!(outcomes.len(), 2);
-    for o in &outcomes {
+    for o in outcomes.iter() {
         assert_eq!(o.batch_size, 2, "both requests must share one batch");
         assert!(
             (o.service_s - (wait + 2.0 * lat)).abs() < 1e-12,
@@ -205,11 +227,14 @@ fn batch_closes_on_max_size() {
         ..GatewayConfig::default()
     };
     let mut sim = SimGateway::new(vec![tiny_spec(None, 1)], &cfg).unwrap();
+    let outs = collecting_sink(&mut sim);
     let (lat, _) = sim.router().price(0);
     offer_at(&mut sim, 0.0, Slo::latency(10.0));
     offer_at(&mut sim, 0.0, Slo::latency(10.0));
-    let outcomes = sim.finish();
-    for o in &outcomes {
+    sim.finish();
+    let outcomes = outs.borrow();
+    assert_eq!(outcomes.len(), 2);
+    for o in outcomes.iter() {
         assert_eq!(o.batch_size, 2);
         assert!(
             (o.service_s - 2.0 * lat).abs() < 1e-12,
@@ -241,6 +266,7 @@ fn autoscaler_scales_up_under_load_but_never_exceeds_device_fit() {
     cfg.autoscale.up_depth = 1;
     cfg.autoscale.max_shards = 8; // fit, not this bound, must cap growth
     let mut sim = SimGateway::new(vec![tiny_spec(published, 1)], &cfg).unwrap();
+    let outs = collecting_sink(&mut sim);
     for _ in 0..64 {
         offer_at(&mut sim, 0.0, Slo::latency(10.0));
     }
@@ -250,8 +276,8 @@ fn autoscaler_scales_up_under_load_but_never_exceeds_device_fit() {
     // with both shards idle: the fleet shrinks back to one.
     offer_at(&mut sim, 10.0, Slo::latency(10.0));
     assert_eq!(sim.live_shards(0), 1, "idle fleet must shrink back to min_shards");
-    let outcomes = sim.finish();
-    assert!(outcomes.iter().all(|o| o.admitted && o.ok));
+    sim.finish();
+    assert!(outs.borrow().iter().all(|o| o.admitted && o.ok));
     let stats = sim.shutdown();
     let up: Vec<_> =
         stats.autoscale_events.iter().filter(|e| e.to_shards > e.from_shards).collect();
@@ -328,13 +354,51 @@ fn same_seed_runs_emit_byte_identical_gateway_stats_json() {
     let spec = overload_spec(8);
     let (rep1, stats1) = loadgen::run_sim(&spec).unwrap();
     let (rep2, stats2) = loadgen::run_sim(&spec).unwrap();
-    assert_eq!(rep1.decisions, rep2.decisions);
+    assert_eq!(rep1.decision_digest, rep2.decision_digest);
+    assert_eq!(rep1.per_design, rep2.per_design);
     assert_eq!(rep1.p50_service_ms, rep2.p50_service_ms);
     assert_eq!(rep1.p99_service_ms, rep2.p99_service_ms);
     assert_eq!(rep1.rejection_rate, rep2.rejection_rate);
     let json1 = to_text(&stats1);
     let json2 = to_text(&stats2);
     assert_eq!(json1.as_bytes(), json2.as_bytes(), "GatewayStats JSON must be bit-stable");
+}
+
+/// Regression pin for the sketch-backed report percentiles: on a
+/// fixed-seed run they must agree with the exact nearest-rank
+/// percentiles of the raw service times (recovered via the outcome
+/// sink) to within the sketch's documented bucket resolution — the
+/// one-time re-pin from exact to sketch-backed goldens.
+#[test]
+fn report_percentiles_match_exact_within_sketch_resolution() {
+    use spikebench::util::stats::{percentile, Sketch};
+
+    let spec = overload_spec(8);
+    let (mut sim, pools) = SimGateway::from_spec(&spec).unwrap();
+    let outs = collecting_sink(&mut sim);
+    let report = loadgen::simulate_stream(
+        &mut sim,
+        spec.loadgen.scenario.clone(),
+        loadgen::ArrivalGen::new(&spec.loadgen, &pools),
+        &pools,
+    )
+    .unwrap();
+    sim.shutdown();
+
+    let service_ms: Vec<f64> = outs
+        .borrow()
+        .iter()
+        .filter(|o| o.admitted)
+        .map(|o| o.service_s * 1e3)
+        .collect();
+    assert_eq!(service_ms.len(), report.served, "one retired outcome per served request");
+    for (q, got) in [(50.0, report.p50_service_ms), (99.0, report.p99_service_ms)] {
+        let exact = percentile(&service_ms, q).unwrap();
+        assert!(
+            (got - exact).abs() <= exact * Sketch::RELATIVE_ERROR,
+            "p{q} {got} ms drifted beyond the sketch bound from exact {exact} ms"
+        );
+    }
 }
 
 /// The whole-stack invariants on a mixed overload run: queue counts
@@ -353,5 +417,7 @@ fn overload_run_reconciles_end_to_end() {
     assert_eq!(q_offered, stats.offered);
     assert!(report.sim_duration_s > 0.0);
     assert!(report.sim_throughput_rps > 0.0);
-    assert_eq!(report.decisions.len(), report.admitted);
+    // Every admitted request shows up in exactly one design's count.
+    let routed: usize = report.per_design.iter().map(|(_, c)| c).sum();
+    assert_eq!(routed, report.admitted);
 }

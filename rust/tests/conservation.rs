@@ -13,11 +13,13 @@
 //! counters agree with the gateway's queue accounting after mid-flight
 //! shard kills.
 
+use std::cell::RefCell;
+use std::rc::Rc;
 use std::time::Duration;
 
 use spikebench::coordinator::gateway::{
     DesignKind, ExecutorSpec, FaultEvent, FaultPlan, GatewayConfig, GatewayStats, SimGateway,
-    SimRequest, Slo, SloClass,
+    SimOutcome, SimRequest, Slo, SloClass,
 };
 use spikebench::coordinator::loadgen::{
     self, ClassMix, DeploymentSpec, LoadgenConfig, LoadgenReport, Scenario,
@@ -84,6 +86,15 @@ fn tiny_spec(name: &'static str, p: u32, shards: usize) -> ExecutorSpec {
 
 fn image() -> Tensor3 {
     Tensor3::from_vec(1, 3, 3, vec![0.8; 9])
+}
+
+/// Collect every streamed outcome in event order — outcomes no longer
+/// accumulate in the gateway, they flow through the sink.
+fn collecting_sink(sim: &mut SimGateway) -> Rc<RefCell<Vec<SimOutcome>>> {
+    let outs = Rc::new(RefCell::new(Vec::new()));
+    let sink = Rc::clone(&outs);
+    sim.set_outcome_sink(move |o| sink.borrow_mut().push(o)).unwrap();
+    outs
 }
 
 /// FNV-1a-64 over raw bytes — pins the committed golden spec file.
@@ -282,6 +293,7 @@ fn conservation_holds_for_random_workloads_and_fault_plans() {
             &cfg,
         )
         .unwrap();
+        let outs = collecting_sink(&mut sim);
 
         let mut events = Vec::new();
         if rng.chance(0.7) {
@@ -322,15 +334,23 @@ fn conservation_holds_for_random_workloads_and_fault_plans() {
             })
             .unwrap();
         }
-        let outcomes = sim.finish();
+        let ledger = sim.finish();
         let stats = sim.shutdown();
+        let outcomes = outs.borrow();
         prop_assert!(outcomes.len() == n, "one outcome per offer: {} != {n}", outcomes.len());
+        prop_assert!(
+            ledger.offered == n && ledger.completed + ledger.rejected() == n,
+            "streamed ledger leaks: {} offered, {} completed, {} rejected vs {n}",
+            ledger.offered,
+            ledger.completed,
+            ledger.rejected()
+        );
 
         // Re-derive every ledger from the raw outcomes.
         let (mut served, mut rejected) = (0usize, 0usize);
         // Per class: offered, served-OK, failed, rejected.
         let mut by_class = [[0usize; 4]; 3];
-        for o in &outcomes {
+        for o in outcomes.iter() {
             let b = &mut by_class[o.class.index()];
             b[0] += 1;
             if o.admitted {
@@ -499,7 +519,8 @@ fn golden_chaos_run_is_byte_deterministic_and_conserved() {
     let spec = chaos_spec();
     let (rep1, stats1) = loadgen::run_sim(&spec).unwrap();
     let (rep2, stats2) = loadgen::run_sim(&spec).unwrap();
-    assert_eq!(rep1.decisions, rep2.decisions);
+    assert_eq!(rep1.decision_digest, rep2.decision_digest);
+    assert_eq!(rep1.per_design, rep2.per_design);
     assert_eq!(rep1.classes, rep2.classes);
     let json1 = to_text(&stats1);
     let json2 = to_text(&stats2);
@@ -535,6 +556,7 @@ fn best_effort_flood_cannot_starve_interactive_requests() {
     };
     cfg.autoscale.enabled = false; // one shard, no relief: pure WFQ
     let mut sim = SimGateway::new(vec![tiny_spec("tiny-p8", 8, 1)], &cfg).unwrap();
+    let outs = collecting_sink(&mut sim);
     let (lat, _) = sim.router().price(0);
     let deadline = 200.0 * lat; // admits through the full backlog estimate
 
@@ -558,8 +580,9 @@ fn best_effort_flood_cannot_starve_interactive_requests() {
         })
         .unwrap();
     }
-    let outcomes = sim.finish();
+    sim.finish();
     let stats = sim.shutdown();
+    let outcomes = outs.borrow();
 
     // Every request of both classes was admitted and served.
     assert_eq!(stats.offered, flood + vips);
@@ -630,6 +653,7 @@ fn mid_flight_kill_requeues_and_the_books_still_balance() {
     };
     cfg.autoscale.enabled = false;
     let mut sim = SimGateway::new(vec![tiny_spec("tiny-p8", 8, 1)], &cfg).unwrap();
+    let outs = collecting_sink(&mut sim);
     let (lat, _) = sim.router().price(0);
     // The first batch of 4 dispatches at t = 0 and completes at 4×lat;
     // kill inside that window, recover before the backlog drains.
@@ -649,8 +673,10 @@ fn mid_flight_kill_requeues_and_the_books_still_balance() {
         })
         .unwrap();
     }
-    let outcomes = sim.finish();
+    let ledger = sim.finish();
     let stats = sim.shutdown();
+    let outcomes = outs.borrow();
+    assert_eq!(ledger.requeued, 4, "the streamed ledger counts each requeue live");
 
     // The kill re-queued the in-flight batch; after recovery everything
     // is served — nothing lost, nothing double-counted.
@@ -680,6 +706,7 @@ fn unrecovered_kill_sheds_the_backlog_but_conserves_the_ledger() {
     };
     cfg.autoscale.enabled = false;
     let mut sim = SimGateway::new(vec![tiny_spec("tiny-p8", 8, 1)], &cfg).unwrap();
+    let outs = collecting_sink(&mut sim);
     let (lat, _) = sim.router().price(0);
     sim.set_fault_plan(FaultPlan { events: vec![FaultEvent::kill(2.0 * lat, "tiny-p8", 0)] })
         .unwrap();
@@ -692,8 +719,10 @@ fn unrecovered_kill_sheds_the_backlog_but_conserves_the_ledger() {
         })
         .unwrap();
     }
-    let outcomes = sim.finish();
+    let ledger = sim.finish();
     let stats = sim.shutdown();
+    let outcomes = outs.borrow();
+    assert_eq!(ledger.rejected_shard_lost, stats.rejected);
     assert_eq!(stats.offered, 12);
     assert_eq!(stats.offered, stats.served + stats.rejected);
     assert!(stats.rejected > 0, "a dead fleet must shed its stranded backlog");

@@ -152,7 +152,7 @@ fn routing_is_deterministic_under_a_fixed_seed() {
         };
         let report = loadgen::run(&gw, &cfg, &pools).unwrap();
         let stats = gw.shutdown();
-        (report.decisions, stats.routed, stats.slo_misses)
+        ((report.decision_digest, report.per_design), stats.routed, stats.slo_misses)
     };
     let (d1, routed1, misses1) = run_once();
     let (d2, routed2, misses2) = run_once();

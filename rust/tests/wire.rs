@@ -10,9 +10,9 @@ use std::fmt::Debug;
 use std::time::Duration;
 
 use spikebench::coordinator::gateway::{
-    AutoscaleConfig, AutoscaleEvent, ClassStats, DesignStats, FaultEvent, FaultPlan,
-    FaultRecord, Gateway, GatewayConfig, GatewayStats, PricedDesign, QueueStats, ShardStats,
-    Slo, SloClass,
+    AutoscaleConfig, AutoscaleEvent, ClassStats, DecisionDigest, DesignStats, FaultEvent,
+    FaultPlan, FaultRecord, Gateway, GatewayConfig, GatewayStats, PricedDesign, QueueStats,
+    ShardStats, Slo, SloClass, StatsSnapshot,
 };
 use spikebench::coordinator::serve::ServerStats;
 use spikebench::coordinator::loadgen::{
@@ -282,9 +282,13 @@ fn config_types_roundtrip() {
 
 #[test]
 fn report_types_roundtrip() {
+    let mut digest = DecisionDigest::new();
+    digest.fold("CNN4", false);
+    digest.fold("SNN8_BRAM", true);
     roundtrip(&LoadgenReport {
         scenario: Scenario::Bursty,
-        decisions: vec![("CNN4".into(), false), ("SNN8_BRAM".into(), true)],
+        decision_digest: digest.value(),
+        per_design: vec![("CNN4".into(), 1), ("SNN8_BRAM".into(), 1)],
         offered: 5,
         admitted: 2,
         rejected_full: 1,
@@ -450,11 +454,60 @@ fn spec_reproduces_in_code_routing_decisions() {
     gw.shutdown();
 
     assert_eq!(
-        from_spec.decisions, in_code.decisions,
+        from_spec.decision_digest, in_code.decision_digest,
         "spec-driven routing must match the in-code config"
     );
+    assert_eq!(from_spec.per_design, in_code.per_design);
     assert_eq!(from_spec.slo_misses, in_code.slo_misses);
     assert_eq!(from_spec.routed_energy_j, in_code.routed_energy_j);
+}
+
+/// Periodic snapshots round-trip losslessly, and the legacy `decisions`
+/// list still decodes into the digest + per-design counts.
+#[test]
+fn snapshot_and_legacy_report_decode() {
+    roundtrip(&StatsSnapshot {
+        t_s: 1.25,
+        offered: 100,
+        admitted: 90,
+        rejected_full: 7,
+        rejected_deadline: 3,
+        rejected_shard_lost: 1,
+        served: 88,
+        failed: 1,
+        requeued: 2,
+        deadline_misses: 4,
+        queued: 5,
+        p50_service_ms: 0.42,
+        p99_service_ms: 1.87,
+    });
+
+    // A pre-digest artifact carries the full per-request decision list;
+    // decoding folds it into the digest and first-seen counts.
+    let legacy = r#"{
+        "scenario": "steady",
+        "decisions": [
+            {"design": "CNN4", "slo_miss": false},
+            {"design": "SNN8_BRAM", "slo_miss": true},
+            {"design": "CNN4", "slo_miss": false}
+        ],
+        "offered": 3, "admitted": 3,
+        "rejected_full": 0, "rejected_deadline": 0, "rejected_shard_lost": 0,
+        "rejection_rate": 0.0, "deadline_misses": 0, "requeued": 0,
+        "served": 3, "failed": 0, "slo_misses": 1,
+        "wall_ns": 1000000, "throughput_rps": 3000.0,
+        "sim_duration_s": 0.0, "sim_throughput_rps": 0.0,
+        "p50_service_ms": 0.4, "p99_service_ms": 1.0,
+        "mean_routed_latency_ms": 0.3, "routed_energy_j": 1e-6,
+        "classes": []
+    }"#;
+    let report: LoadgenReport = from_text(legacy).unwrap();
+    let mut digest = DecisionDigest::new();
+    digest.fold("CNN4", false);
+    digest.fold("SNN8_BRAM", true);
+    digest.fold("CNN4", false);
+    assert_eq!(report.decision_digest, digest.value());
+    assert_eq!(report.per_design, vec![("CNN4".to_string(), 2), ("SNN8_BRAM".to_string(), 1)]);
 }
 
 // ---------------------------------------------------------------------------
