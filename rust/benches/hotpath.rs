@@ -11,6 +11,9 @@
 //!   pinned in `tests/admission.rs`)
 //! * functional m-TTFS event engine (spike-events/s), fresh-allocation
 //!   vs reusable-scratch variants
+//! * the packed word-parallel IF core vs the retained scalar reference,
+//!   per Table-6 arch (`sim event core packed/scalar (<ds> arch)`) —
+//!   the ISSUE 8 ≥ 2× trajectory labels, enforced in CI
 //! * cycle-model event walk (`trace`) and per-device costing (`cost`)
 //! * the multi-device sweep pattern: D × `replay` (one event walk per
 //!   device) vs `trace` once + D × `cost` — the tentpole speedup
@@ -22,7 +25,9 @@ use spikebench::coordinator::loadgen::{self, LoadgenConfig, Scenario};
 use spikebench::experiments::ctx::Ctx;
 use spikebench::fpga::device::{PYNQ_Z1, ZCU102};
 use spikebench::nn::loader::{load_network, WeightKind};
-use spikebench::nn::snn::{snn_infer, snn_infer_scratch, SimScratch, SnnMode};
+use spikebench::nn::snn::{
+    snn_infer, snn_infer_reference, snn_infer_scratch, SimScratch, SnnMode,
+};
 use spikebench::snn::accelerator::SnnAccelerator;
 use spikebench::snn::config::by_name;
 use spikebench::util::bench::Bench;
@@ -165,6 +170,46 @@ fn bench_scale_loadgen(results: &mut Vec<spikebench::util::bench::BenchResult>) 
     results.extend(bench.results());
 }
 
+/// The packed word-parallel IF core vs the retained scalar reference on
+/// the Table-6 arches (synthetic weights, sparse drive) — the
+/// `sim event core packed/scalar (<ds> arch)` trajectory labels pinned
+/// in EXPERIMENTS.md §Perf targets and enforced (packed ≥ 2× scalar on
+/// the CIFAR arch) by the bench-trajectory CI job.  The drive is kept
+/// sparse (most pixels zeroed) so the run sits in the regime the
+/// paper's architecture targets: few events, threshold scans dominate.
+/// That is exactly where bit-packing pays — the event *scatter* cost is
+/// identical in both cores, so a dense-activity workload would only
+/// measure the shared scatter loop.  Artifact-free: synthetic substrate.
+fn bench_packed_core(bench: &Bench) {
+    const T_STEPS: usize = 8;
+    const V_TH: f32 = 1.0;
+    for ds in ["mnist", "svhn", "cifar"] {
+        let (arch, shape) = loadgen::dataset_arch(ds).unwrap();
+        let net = loadgen::synthetic_network(arch, shape, 42, 0.05);
+        let mut x = loadgen::synthetic_images(shape, 1, 42)[0].clone();
+        // Keep ~1 pixel in 37 bright; zero the rest.
+        for (i, v) in x.data.iter_mut().enumerate() {
+            if i % 37 != 0 {
+                *v = 0.0;
+            }
+        }
+        // One equivalence spot check per arch before timing anything:
+        // a bench of a diverged core would be a lie.
+        let r = snn_infer(&net, &x, T_STEPS, V_TH);
+        let reference = snn_infer_reference(&net, &x, T_STEPS, V_TH, SnnMode::MTtfs);
+        assert_eq!(r.logits, reference.logits, "packed/scalar divergence on {ds}");
+        assert_eq!(r.events.all(), reference.events.all());
+        let events = r.total_spikes().max(1);
+        let mut scratch = SimScratch::for_net(&net);
+        bench.run_throughput(&format!("sim event core packed ({ds} arch)"), events, || {
+            snn_infer_scratch(&net, &x, T_STEPS, V_TH, SnnMode::MTtfs, &mut scratch);
+        });
+        bench.run_throughput(&format!("sim event core scalar ({ds} arch)"), events, || {
+            snn_infer_reference(&net, &x, T_STEPS, V_TH, SnnMode::MTtfs)
+        });
+    }
+}
+
 /// With `SPIKEBENCH_BENCH_JSON=path` set, write every recorded
 /// measurement as a wire-codec JSON artifact in the `BENCH_*.json`
 /// envelope (kind/schema/host metadata + results — diffable run to
@@ -184,6 +229,7 @@ fn main() {
     bench_routing(&bench0);
     bench_sim_serving(&bench0);
     bench_event_core(&bench0);
+    bench_packed_core(&bench0);
     let mut results = bench0.results();
     bench_scale_loadgen(&mut results);
 

@@ -40,6 +40,9 @@
 //! future multi-device router re-prices a cached trace per device for
 //! free, the functional pass reuses one [`SimScratch`] across batches,
 //! and the per-design trace count is observable in [`ServerStats`].
+//! The scratch carries the bit-packed spike planes (ARCHITECTURE.md
+//! §Packed simulator), so the serving hot path inherits the
+//! word-parallel IF core with no API change here.
 //!
 //! The PJRT client is not `Send`, so the backend lives on one dedicated
 //! executor thread that owns it; the batcher feeds it through a channel.

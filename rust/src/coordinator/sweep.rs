@@ -6,7 +6,8 @@
 //!   design-independent (Sommer's P only changes *when* events are
 //!   processed, not *which*), so every design point walks the same event
 //!   stream.  Each worker holds one [`SimScratch`], so repeated passes do
-//!   near-zero allocation.
+//!   near-zero allocation — and inherit the bit-packed word-parallel IF
+//!   core (ARCHITECTURE.md §Packed simulator) transparently.
 //! * **One event walk per (image, design).**  The cycle model's expensive
 //!   half ([`SnnAccelerator::trace`]) is device-independent; a sweep over
 //!   D devices computes one [`crate::snn::accelerator::CostTrace`] per

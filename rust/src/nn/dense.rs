@@ -39,10 +39,23 @@ pub fn dense(x: &[f32], wts: &DenseWeights) -> Vec<f32> {
 
 /// Sparse accumulation used by the SNN path: add column `i` of W into a
 /// running accumulator (one presynaptic spike event on neuron `i`).
+///
+/// Runs once per dense-layer event in the packed simulator's hot loop
+/// (`nn::snn`), which addresses the accumulator by flat unpadded neuron
+/// index — only the spike masks are bit-packed, so this stays a plain
+/// strided column walk.  The index guard is a hard assert: an event
+/// index beyond `n_in` used to read the *wrong neuron's* weight for
+/// every row but the last before finally panicking out of bounds.
+#[inline]
 pub fn dense_accumulate_event(acc: &mut [f32], wts: &DenseWeights, i: usize) {
     assert_eq!(acc.len(), wts.n_out);
-    for (o, a) in acc.iter_mut().enumerate() {
-        *a += wts.w[o * wts.n_in + i];
+    assert!(
+        i < wts.n_in,
+        "dense event index {i} out of range for layer input size {}",
+        wts.n_in
+    );
+    for (a, wv) in acc.iter_mut().zip(wts.w[i..].iter().step_by(wts.n_in)) {
+        *a += wv;
     }
 }
 
@@ -66,5 +79,15 @@ mod tests {
         dense_accumulate_event(&mut acc, &wts, 0);
         dense_accumulate_event(&mut acc, &wts, 2);
         assert_eq!(acc, dense_out);
+    }
+
+    /// Regression: an event index past the layer's input size must fail
+    /// loudly, not smear the wrong column into the accumulator first.
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn event_index_beyond_inputs_is_loud() {
+        let wts = DenseWeights::new(2, 3, vec![0.0; 6], vec![0.0; 2]);
+        let mut acc = vec![0.0; 2];
+        dense_accumulate_event(&mut acc, &wts, 3);
     }
 }

@@ -30,6 +30,26 @@
 //! scratch across inferences ([`snn_infer_scratch`]) performs near-zero
 //! allocation per inference — the hot path behind `repro serve`,
 //! `snn_sweep`, and every figure regenerator.
+//!
+//! ## Packed spike planes (§Perf)
+//!
+//! Spikes are binary, so the spiked-once mask K is stored bit-packed: one
+//! `u64` word covers 64 neurons, and every channel plane is padded to a
+//! whole number of words so a plane scan never straddles channels (see
+//! ARCHITECTURE.md §Packed simulator).  The threshold scans
+//! (`integrate_and_fire_slope` and friends) walk a plane word by word:
+//! the membrane update runs as a branch-free lane loop that builds a
+//! 64-neuron *fired mask*, the mask is combined with the packed K word
+//! (`above & !k`, fired tallies via `count_ones`), and only then are
+//! [`SpikeEvent`]s materialized from the set bits — event construction
+//! (and its `idx / w` division) is entirely off the per-neuron fast path,
+//! and the channel index is hoisted per plane instead of being re-derived
+//! per event via `idx / (h * w)`.  Emitted event order is unchanged:
+//! words are scanned in ascending neuron order and bits are drained
+//! LSB-first, which is exactly the scalar code's ascending-index order.
+//! The scalar code itself is retained as [`snn_infer_reference`], the
+//! equivalence oracle pinned by `tests/packed_sim.rs` and benchmarked
+//! against the packed core in `benches/hotpath.rs`.
 
 use super::dense::dense_accumulate_event;
 use super::network::{argmax, LayerWeights, Network};
@@ -44,6 +64,23 @@ pub struct SpikeEvent {
     pub y: u16,
     /// Column of the spiking neuron.
     pub x: u16,
+}
+
+impl SpikeEvent {
+    /// Build an event from `usize` coordinates, guarding the `u16` wire
+    /// width: a feature map wider than 65 535 along any axis would
+    /// silently alias coordinates under a plain `as u16` cast, corrupting
+    /// the scatter targets downstream.  Construction is off the
+    /// per-neuron fast path (events are rare), so the guard costs nothing
+    /// measurable.
+    #[inline]
+    pub fn at(c: usize, y: usize, x: usize) -> SpikeEvent {
+        assert!(
+            c <= u16::MAX as usize && y <= u16::MAX as usize && x <= u16::MAX as usize,
+            "SpikeEvent coordinate overflow: (c {c}, y {y}, x {x}) exceeds the u16 event format"
+        );
+        SpikeEvent { c: c as u16, y: y as u16, x: x as u16 }
+    }
 }
 
 /// Flat CSR-style spike-event arena.
@@ -76,6 +113,14 @@ impl EventStream {
         self.layers = layers;
     }
 
+    /// Reserve room for `segments` further segment boundaries up front,
+    /// so a T-step run seals its `T * layers` segments without ever
+    /// reallocating the offset table mid-inference (the per-step sealing
+    /// overhead amortizes to a pointer bump).
+    pub fn reserve_segments(&mut self, segments: usize) {
+        self.offsets.reserve(segments);
+    }
+
     /// Append one event to the currently open segment.
     pub fn push(&mut self, ev: SpikeEvent) {
         self.events.push(ev);
@@ -100,15 +145,44 @@ impl EventStream {
         }
     }
 
-    /// Events of the segment (step `t`, layer `l`).
-    pub fn slice(&self, t: usize, l: usize) -> &[SpikeEvent] {
+    /// Index of the sealed segment (step `t`, layer `l`), after bounds
+    /// checks that name the offending coordinate instead of surfacing as
+    /// an opaque slice-index panic deep in the arena.
+    #[inline]
+    fn segment_index(&self, t: usize, l: usize) -> usize {
+        let sealed = self.offsets.len().saturating_sub(1);
+        assert!(
+            l < self.layers,
+            "EventStream layer {l} out of range: stream has {} segment(s) per step",
+            self.layers
+        );
         let seg = t * self.layers + l;
+        assert!(
+            seg < sealed,
+            "EventStream segment (step {t}, layer {l}) out of range: \
+             {sealed} sealed segment(s) = {} complete step(s) of {} layer(s)",
+            self.steps(),
+            self.layers
+        );
+        seg
+    }
+
+    /// Events of the segment (step `t`, layer `l`).
+    ///
+    /// Panics with a descriptive message if `(t, l)` lies outside the
+    /// sealed segments.
+    pub fn slice(&self, t: usize, l: usize) -> &[SpikeEvent] {
+        let seg = self.segment_index(t, l);
         &self.events[self.offsets[seg]..self.offsets[seg + 1]]
     }
 
     /// Number of events in the segment (step `t`, layer `l`).
+    ///
+    /// Panics with a descriptive message if `(t, l)` lies outside the
+    /// sealed segments.
     pub fn segment_len(&self, t: usize, l: usize) -> usize {
-        self.slice(t, l).len()
+        let seg = self.segment_index(t, l);
+        self.offsets[seg + 1] - self.offsets[seg]
     }
 
     /// Flat-arena index range of the most recently sealed segment.
@@ -142,6 +216,8 @@ impl EventStream {
 #[derive(Debug, Clone, Default)]
 pub struct SnnResult {
     /// Output-layer membrane potential after T steps (the logits proxy).
+    /// Empty when the network has no layers at all (an empty `arch`
+    /// produces no output accumulator to read).
     pub logits: Vec<f32>,
     /// Flat event arena: segment (t, l) = spikes emitted by layer `l` at
     /// step `t` (l = 0 is the input-encoding layer, so there are
@@ -165,27 +241,56 @@ impl SnnResult {
 }
 
 /// Layer state for the event-driven simulation.
+///
+/// Membranes (V) and slopes (S) stay flat `f32` planes — the conv scatter
+/// and dense accumulate address them by flat neuron index — but the
+/// spiked-once mask K is bit-packed: one bit per neuron, one `u64` word
+/// per 64 neurons, with every channel plane padded up to a whole number
+/// of words ([`LayerState::words_per_plane`]) so the word-parallel
+/// threshold scans never straddle a channel boundary inside a word.
 struct LayerState {
     /// Membrane potential V.
     v: Vec<f32>,
     /// Slope accumulator S (weighted sum of arrived events).
     s: Vec<f32>,
-    /// Spiked-once mask K.
-    k: Vec<bool>,
+    /// Spiked-once mask K, bit-packed per channel plane (bit `i % 64` of
+    /// word `c * words_per_plane + i / 64` is neuron `i` of channel `c`).
+    k: Vec<u64>,
+    /// `u64` words covering one padded channel plane (`ceil(h*w / 64)`).
+    words_per_plane: usize,
     shape: (usize, usize, usize),
 }
 
 impl LayerState {
     fn new(shape: (usize, usize, usize)) -> Self {
         let n = shape.0 * shape.1 * shape.2;
-        LayerState { v: vec![0.0; n], s: vec![0.0; n], k: vec![false; n], shape }
+        let plane = shape.1 * shape.2;
+        let words_per_plane = plane.div_ceil(64);
+        LayerState {
+            v: vec![0.0; n],
+            s: vec![0.0; n],
+            k: vec![0u64; shape.0 * words_per_plane],
+            words_per_plane,
+            shape,
+        }
     }
 
     /// Zero in place (capacity-preserving reset between inferences).
     fn zero(&mut self) {
         self.v.fill(0.0);
         self.s.fill(0.0);
-        self.k.fill(false);
+        self.k.fill(0);
+    }
+
+    /// Set bit `i` of channel `c`'s packed plane; returns whether it was
+    /// newly set (the spike-OR pool forwarding test).
+    #[inline]
+    fn k_test_and_set(&mut self, c: usize, i: usize) -> bool {
+        let word = c * self.words_per_plane + i / 64;
+        let bit = 1u64 << (i % 64);
+        let newly = self.k[word] & bit == 0;
+        self.k[word] |= bit;
+        newly
     }
 }
 
@@ -290,6 +395,11 @@ pub fn snn_infer_mode(
 /// The returned reference borrows `scratch`; copy out (or consume) what
 /// you need before the next call.  Repeated calls over same-shaped
 /// networks perform near-zero heap allocation.
+///
+/// A network with an empty `arch` is a valid degenerate input: the input
+/// layer still encodes and emits its spike train (one segment per step),
+/// and the result carries **empty logits** since there is no output
+/// accumulator to read.
 pub fn snn_infer_scratch<'a>(
     net: &Network,
     x: &Tensor3,
@@ -304,6 +414,9 @@ pub fn snn_infer_scratch<'a>(
     let stream = &mut result.events;
     let counts = &mut result.spike_counts;
     stream.reset(n_layers + 1);
+    // One up-front reservation covers every segment boundary the T-step
+    // run will seal, so the per-step bookkeeping never reallocates.
+    stream.reserve_segments(t_steps * (n_layers + 1));
     counts.clear();
     counts.resize(n_layers + 1, 0);
 
@@ -323,6 +436,12 @@ pub fn snn_infer_scratch<'a>(
             let prev = stream.last_segment_range();
             match lw {
                 LayerWeights::Conv(cw) => {
+                    // A shape mismatch must be caught *before* the scatter
+                    // writes through the slope buffer with a wrong c_out.
+                    debug_assert_eq!(
+                        states[i].shape.0, cw.c_out,
+                        "conv layer {i}: state channels != weight c_out"
+                    );
                     // Scatter each presynaptic event's KxK weight patch into
                     // the slope/current tensor (the FPGA's per-queue-entry op).
                     let (_, h, w) = states[i].shape;
@@ -330,7 +449,6 @@ pub fn snn_infer_scratch<'a>(
                         let ev = stream.event(j);
                         scatter_conv_event(&mut states[i].s, cw, h, w, &ev);
                     }
-                    debug_assert_eq!(states[i].shape.0, cw.c_out);
                     let bias = BiasView::PerChannel(&cw.b);
                     let fired = match mode {
                         SnnMode::MTtfs => {
@@ -354,18 +472,16 @@ pub fn snn_infer_scratch<'a>(
                         if py >= ho || px >= wo {
                             continue; // floor-division drop strip
                         }
-                        let st = &mut states[i];
-                        let idx = (ev.c as usize * ho + py) * wo + px;
                         let fire = match mode {
                             SnnMode::MTtfs => {
-                                let f = !st.k[idx];
-                                st.k[idx] = true;
-                                f
+                                states[i].k_test_and_set(ev.c as usize, py * wo + px)
                             }
-                            SnnMode::Rate => seen.insert(idx),
+                            SnnMode::Rate => {
+                                seen.insert((ev.c as usize * ho + py) * wo + px)
+                            }
                         };
                         if fire {
-                            stream.push(SpikeEvent { c: ev.c, y: py as u16, x: px as u16 });
+                            stream.push(SpikeEvent::at(ev.c as usize, py, px));
                             fired += 1;
                         }
                     }
@@ -414,7 +530,11 @@ pub fn snn_infer_scratch<'a>(
     }
 
     result.logits.clear();
-    result.logits.extend_from_slice(&states[n_layers - 1].v);
+    // An empty arch has no output accumulator; leave the logits empty
+    // instead of indexing states[-1] (the former out-of-bounds panic).
+    if let Some(last) = states.last() {
+        result.logits.extend_from_slice(&last.v);
+    }
     &*result
 }
 
@@ -426,13 +546,33 @@ enum BiasView<'a> {
     PerUnit(&'a [f32]),
 }
 
+/// Materialize [`SpikeEvent`]s for the set bits of a fired mask.
+///
+/// `i0` is the in-plane neuron index of the word's bit 0.  Bits are
+/// drained LSB-first (`trailing_zeros`), i.e. in ascending neuron order —
+/// the same order the scalar reference emits — and only here, off the
+/// per-neuron fast path, are the `/ w` and `% w` coordinate divisions
+/// paid (once per *event*, not per neuron).
+#[inline]
+fn push_plane_events(out: &mut EventStream, c: usize, w: usize, i0: usize, mut mask: u64) {
+    while mask != 0 {
+        let lane = mask.trailing_zeros() as usize;
+        mask &= mask - 1;
+        let i = i0 + lane;
+        out.push(SpikeEvent::at(c, i / w, i % w));
+    }
+}
+
 /// V += S + b; fire where V > v_th and not yet spiked.  Fired events are
 /// appended to `out`'s open segment; returns how many fired.
 ///
-/// §Perf: iterates plane-by-plane so the per-channel bias is hoisted out
-/// of the inner loop (no per-neuron division) and the V/S/K slices zip
-/// without bounds checks; spike-event construction (rare) stays off the
-/// fast path.
+/// §Perf: word-parallel over the packed K planes.  Each 64-neuron word is
+/// processed in two phases: a branch-free lane loop updates membranes and
+/// builds an "above threshold" mask (no event pushes, no K loads in the
+/// loop — LLVM vectorizes it), then `above & !k` yields the newly-fired
+/// mask, K is updated with one OR, the tally comes from `count_ones`, and
+/// events are materialized from the mask bits ([`push_plane_events`]).
+/// The per-channel bias is hoisted out per plane.
 fn integrate_and_fire_slope(
     st: &mut LayerState,
     bias: BiasView,
@@ -441,22 +581,47 @@ fn integrate_and_fire_slope(
 ) -> usize {
     let (c_n, h, w) = st.shape;
     let plane = h * w;
-    let mut fired = 0;
+    let wpp = st.words_per_plane;
+    let mut fired = 0usize;
     for c in 0..c_n {
-        let b = match &bias {
+        let cb = match &bias {
             BiasView::PerChannel(bs) => bs[c],
             BiasView::PerUnit(_) => 0.0,
         };
-        let vs = &mut st.v[c * plane..(c + 1) * plane];
-        let ss = &st.s[c * plane..(c + 1) * plane];
-        let ks = &mut st.k[c * plane..(c + 1) * plane];
-        for (i, ((v, &s), kflag)) in vs.iter_mut().zip(ss).zip(ks.iter_mut()).enumerate() {
-            let b = if let BiasView::PerUnit(bs) = &bias { bs[c * plane + i] } else { b };
-            *v += s + b;
-            if !*kflag && *v > v_th {
-                *kflag = true;
-                out.push(SpikeEvent { c: c as u16, y: (i / w) as u16, x: (i % w) as u16 });
-                fired += 1;
+        let vp = &mut st.v[c * plane..(c + 1) * plane];
+        let sp = &st.s[c * plane..(c + 1) * plane];
+        let kp = &mut st.k[c * wpp..(c + 1) * wpp];
+        for (wi, kw) in kp.iter_mut().enumerate() {
+            let i0 = wi * 64;
+            let hi = plane.min(i0 + 64);
+            let mut above = 0u64;
+            match &bias {
+                BiasView::PerChannel(_) => {
+                    for (lane, (v, &s)) in
+                        vp[i0..hi].iter_mut().zip(&sp[i0..hi]).enumerate()
+                    {
+                        *v += s + cb;
+                        above |= ((*v > v_th) as u64) << lane;
+                    }
+                }
+                BiasView::PerUnit(bs) => {
+                    let bp = &bs[c * plane..(c + 1) * plane];
+                    for (lane, ((v, &s), &b)) in vp[i0..hi]
+                        .iter_mut()
+                        .zip(&sp[i0..hi])
+                        .zip(&bp[i0..hi])
+                        .enumerate()
+                    {
+                        *v += s + b;
+                        above |= ((*v > v_th) as u64) << lane;
+                    }
+                }
+            }
+            let newly = above & !*kw;
+            if newly != 0 {
+                *kw |= newly;
+                fired += newly.count_ones() as usize;
+                push_plane_events(out, c, w, i0, newly);
             }
         }
     }
@@ -464,45 +629,74 @@ fn integrate_and_fire_slope(
 }
 
 /// Input layer: V += current (per-neuron drive), fire once (m-TTFS).
+/// Word-parallel like [`integrate_and_fire_slope`]; the channel index is
+/// a loop variable, so the scalar path's per-event `idx / (h * w)`
+/// division is gone entirely.
 fn integrate_and_fire(
     st: &mut LayerState,
     drive: &[f32],
     v_th: f32,
     out: &mut EventStream,
 ) -> usize {
-    let (_, h, w) = st.shape;
-    let mut fired = 0;
-    for idx in 0..st.v.len() {
-        st.v[idx] += drive[idx];
-        if !st.k[idx] && st.v[idx] > v_th {
-            st.k[idx] = true;
-            let c = idx / (h * w);
-            let rem = idx % (h * w);
-            out.push(SpikeEvent { c: c as u16, y: (rem / w) as u16, x: (rem % w) as u16 });
-            fired += 1;
+    let (c_n, h, w) = st.shape;
+    let plane = h * w;
+    let wpp = st.words_per_plane;
+    let mut fired = 0usize;
+    for c in 0..c_n {
+        let vp = &mut st.v[c * plane..(c + 1) * plane];
+        let dp = &drive[c * plane..(c + 1) * plane];
+        let kp = &mut st.k[c * wpp..(c + 1) * wpp];
+        for (wi, kw) in kp.iter_mut().enumerate() {
+            let i0 = wi * 64;
+            let hi = plane.min(i0 + 64);
+            let mut above = 0u64;
+            for (lane, (v, &d)) in vp[i0..hi].iter_mut().zip(&dp[i0..hi]).enumerate() {
+                *v += d;
+                above |= ((*v > v_th) as u64) << lane;
+            }
+            let newly = above & !*kw;
+            if newly != 0 {
+                *kw |= newly;
+                fired += newly.count_ones() as usize;
+                push_plane_events(out, c, w, i0, newly);
+            }
         }
     }
     fired
 }
 
 /// Input layer, rate coding: V += drive; fire with subtractive reset
-/// (may fire every step — the rate encodes the magnitude).
+/// (may fire every step — the rate encodes the magnitude).  No K mask is
+/// involved, but the scan is still word-chunked so event construction
+/// stays out of the membrane loop.
 fn integrate_and_fire_reset(
     st: &mut LayerState,
     drive: &[f32],
     v_th: f32,
     out: &mut EventStream,
 ) -> usize {
-    let (_, h, w) = st.shape;
-    let mut fired = 0;
-    for idx in 0..st.v.len() {
-        st.v[idx] += drive[idx];
-        if st.v[idx] > v_th {
-            st.v[idx] -= v_th;
-            let c = idx / (h * w);
-            let rem = idx % (h * w);
-            out.push(SpikeEvent { c: c as u16, y: (rem / w) as u16, x: (rem % w) as u16 });
-            fired += 1;
+    let (c_n, h, w) = st.shape;
+    let plane = h * w;
+    let mut fired = 0usize;
+    for c in 0..c_n {
+        let vp = &mut st.v[c * plane..(c + 1) * plane];
+        let dp = &drive[c * plane..(c + 1) * plane];
+        let mut i0 = 0;
+        while i0 < plane {
+            let hi = plane.min(i0 + 64);
+            let mut m = 0u64;
+            for (lane, (v, &d)) in vp[i0..hi].iter_mut().zip(&dp[i0..hi]).enumerate() {
+                *v += d;
+                if *v > v_th {
+                    *v -= v_th;
+                    m |= 1u64 << lane;
+                }
+            }
+            if m != 0 {
+                fired += m.count_ones() as usize;
+                push_plane_events(out, c, w, i0, m);
+            }
+            i0 = hi;
         }
     }
     fired
@@ -510,7 +704,8 @@ fn integrate_and_fire_reset(
 
 /// Rate-coded weighted layer: the accumulated per-spike currents S are
 /// integrated once and cleared (no slope re-integration), and neurons
-/// reset subtractively on firing (Eq. 1's reset branch).
+/// reset subtractively on firing (Eq. 1's reset branch).  Word-chunked
+/// like [`integrate_and_fire_reset`].
 fn integrate_and_fire_current(
     st: &mut LayerState,
     bias: BiasView,
@@ -519,23 +714,38 @@ fn integrate_and_fire_current(
 ) -> usize {
     let (c_n, h, w) = st.shape;
     let plane = h * w;
-    let mut fired = 0;
+    let mut fired = 0usize;
     for c in 0..c_n {
-        let b = match &bias {
+        let cb = match &bias {
             BiasView::PerChannel(bs) => bs[c],
             BiasView::PerUnit(_) => 0.0,
         };
         let vs = &mut st.v[c * plane..(c + 1) * plane];
         let ss = &mut st.s[c * plane..(c + 1) * plane];
-        for (i, (v, s)) in vs.iter_mut().zip(ss.iter_mut()).enumerate() {
-            let b = if let BiasView::PerUnit(bs) = &bias { bs[c * plane + i] } else { b };
-            *v += *s + b;
-            *s = 0.0;
-            if *v > v_th {
-                *v -= v_th;
-                out.push(SpikeEvent { c: c as u16, y: (i / w) as u16, x: (i % w) as u16 });
-                fired += 1;
+        let mut i0 = 0;
+        while i0 < plane {
+            let hi = plane.min(i0 + 64);
+            let mut m = 0u64;
+            for (lane, (v, s)) in
+                vs[i0..hi].iter_mut().zip(ss[i0..hi].iter_mut()).enumerate()
+            {
+                let b = if let BiasView::PerUnit(bs) = &bias {
+                    bs[c * plane + i0 + lane]
+                } else {
+                    cb
+                };
+                *v += *s + b;
+                *s = 0.0;
+                if *v > v_th {
+                    *v -= v_th;
+                    m |= 1u64 << lane;
+                }
             }
+            if m != 0 {
+                fired += m.count_ones() as usize;
+                push_plane_events(out, c, w, i0, m);
+            }
+            i0 = hi;
         }
     }
     fired
@@ -610,6 +820,227 @@ fn scatter_conv_event(
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference implementation (the equivalence oracle)
+// ---------------------------------------------------------------------------
+
+/// Scalar reference simulation — the pre-packed per-neuron code, kept as
+/// the **equivalence oracle** for the word-parallel core.
+///
+/// This is deliberately the naive formulation: `Vec<bool>` spike masks,
+/// per-neuron branches, and spike events constructed inline in the scan
+/// loop.  `tests/packed_sim.rs` quickchecks that [`snn_infer_mode`]
+/// reproduces its logits, spike counts, and **exact event order** bit for
+/// bit across random architectures, modes, and border-heavy shapes, and
+/// `benches/hotpath.rs` times the two against each other (the
+/// `sim event core packed/scalar` trajectory labels).  It allocates
+/// freshly per call and should never be used on a hot path.
+pub fn snn_infer_reference(
+    net: &Network,
+    x: &Tensor3,
+    t_steps: usize,
+    v_th: f32,
+    mode: SnnMode,
+) -> SnnResult {
+    struct RefState {
+        v: Vec<f32>,
+        s: Vec<f32>,
+        k: Vec<bool>,
+        shape: (usize, usize, usize),
+    }
+    impl RefState {
+        fn new(shape: (usize, usize, usize)) -> Self {
+            let n = shape.0 * shape.1 * shape.2;
+            RefState { v: vec![0.0; n], s: vec![0.0; n], k: vec![false; n], shape }
+        }
+    }
+
+    fn ref_fire_slope(
+        st: &mut RefState,
+        bias: &BiasView,
+        v_th: f32,
+        out: &mut EventStream,
+    ) -> usize {
+        let (c_n, h, w) = st.shape;
+        let plane = h * w;
+        let mut fired = 0;
+        for c in 0..c_n {
+            let cb = match bias {
+                BiasView::PerChannel(bs) => bs[c],
+                BiasView::PerUnit(_) => 0.0,
+            };
+            let vs = &mut st.v[c * plane..(c + 1) * plane];
+            let ss = &st.s[c * plane..(c + 1) * plane];
+            let ks = &mut st.k[c * plane..(c + 1) * plane];
+            for (i, ((v, &s), kflag)) in
+                vs.iter_mut().zip(ss).zip(ks.iter_mut()).enumerate()
+            {
+                let b =
+                    if let BiasView::PerUnit(bs) = bias { bs[c * plane + i] } else { cb };
+                *v += s + b;
+                if !*kflag && *v > v_th {
+                    *kflag = true;
+                    out.push(SpikeEvent::at(c, i / w, i % w));
+                    fired += 1;
+                }
+            }
+        }
+        fired
+    }
+
+    fn ref_fire_current(
+        st: &mut RefState,
+        bias: &BiasView,
+        v_th: f32,
+        out: &mut EventStream,
+    ) -> usize {
+        let (c_n, h, w) = st.shape;
+        let plane = h * w;
+        let mut fired = 0;
+        for c in 0..c_n {
+            let cb = match bias {
+                BiasView::PerChannel(bs) => bs[c],
+                BiasView::PerUnit(_) => 0.0,
+            };
+            let vs = &mut st.v[c * plane..(c + 1) * plane];
+            let ss = &mut st.s[c * plane..(c + 1) * plane];
+            for (i, (v, s)) in vs.iter_mut().zip(ss.iter_mut()).enumerate() {
+                let b =
+                    if let BiasView::PerUnit(bs) = bias { bs[c * plane + i] } else { cb };
+                *v += *s + b;
+                *s = 0.0;
+                if *v > v_th {
+                    *v -= v_th;
+                    out.push(SpikeEvent::at(c, i / w, i % w));
+                    fired += 1;
+                }
+            }
+        }
+        fired
+    }
+
+    let n_layers = net.arch.len();
+    let shapes = super::arch::layer_shapes(&net.arch, net.input_shape);
+    let mut input_state = RefState::new(net.input_shape);
+    let mut states: Vec<RefState> = shapes.into_iter().map(RefState::new).collect();
+    let mut seen = std::collections::HashSet::new();
+    let mut result = SnnResult::default();
+    let stream = &mut result.events;
+    let counts = &mut result.spike_counts;
+    stream.reset(n_layers + 1);
+    counts.resize(n_layers + 1, 0);
+
+    for _t in 0..t_steps {
+        // Input encoding: per-neuron scan with the per-event divisions.
+        let (_, h, w) = input_state.shape;
+        let mut fired = 0u64;
+        for idx in 0..input_state.v.len() {
+            input_state.v[idx] += x.data[idx];
+            let fire = match mode {
+                SnnMode::MTtfs => {
+                    !input_state.k[idx] && input_state.v[idx] > v_th
+                }
+                SnnMode::Rate => input_state.v[idx] > v_th,
+            };
+            if fire {
+                match mode {
+                    SnnMode::MTtfs => input_state.k[idx] = true,
+                    SnnMode::Rate => input_state.v[idx] -= v_th,
+                }
+                let c = idx / (h * w);
+                let rem = idx % (h * w);
+                stream.push(SpikeEvent::at(c, rem / w, rem % w));
+                fired += 1;
+            }
+        }
+        counts[0] += fired;
+        stream.end_segment();
+
+        for (i, lw) in net.layers.iter().enumerate() {
+            let prev = stream.last_segment_range();
+            match lw {
+                LayerWeights::Conv(cw) => {
+                    debug_assert_eq!(states[i].shape.0, cw.c_out);
+                    let (_, h, w) = states[i].shape;
+                    for j in prev {
+                        let ev = stream.event(j);
+                        scatter_conv_event(&mut states[i].s, cw, h, w, &ev);
+                    }
+                    let bias = BiasView::PerChannel(&cw.b);
+                    let fired = match mode {
+                        SnnMode::MTtfs => ref_fire_slope(&mut states[i], &bias, v_th, stream),
+                        SnnMode::Rate => ref_fire_current(&mut states[i], &bias, v_th, stream),
+                    };
+                    counts[i + 1] += fired as u64;
+                    stream.end_segment();
+                }
+                LayerWeights::Pool(win) => {
+                    let (_, ho, wo) = states[i].shape;
+                    seen.clear();
+                    let mut fired = 0u64;
+                    for j in prev {
+                        let ev = stream.event(j);
+                        let (py, px) = (ev.y as usize / win, ev.x as usize / win);
+                        if py >= ho || px >= wo {
+                            continue;
+                        }
+                        let st = &mut states[i];
+                        let idx = (ev.c as usize * ho + py) * wo + px;
+                        let fire = match mode {
+                            SnnMode::MTtfs => {
+                                let f = !st.k[idx];
+                                st.k[idx] = true;
+                                f
+                            }
+                            SnnMode::Rate => seen.insert(idx),
+                        };
+                        if fire {
+                            stream.push(SpikeEvent::at(ev.c as usize, py, px));
+                            fired += 1;
+                        }
+                    }
+                    counts[i + 1] += fired;
+                    stream.end_segment();
+                }
+                LayerWeights::Dense(dw) => {
+                    let prev_shape =
+                        if i == 0 { net.input_shape } else { states[i - 1].shape };
+                    for j in prev {
+                        let ev = stream.event(j);
+                        let flat = (ev.c as usize * prev_shape.1 + ev.y as usize)
+                            * prev_shape.2
+                            + ev.x as usize;
+                        dense_accumulate_event(&mut states[i].s, dw, flat);
+                    }
+                    if i == n_layers - 1 {
+                        let st = &mut states[i];
+                        for j in 0..st.v.len() {
+                            st.v[j] += st.s[j] + dw.b[j];
+                        }
+                        if mode == SnnMode::Rate {
+                            st.s.fill(0.0);
+                        }
+                        stream.end_segment();
+                        continue;
+                    }
+                    let bias = BiasView::PerUnit(&dw.b);
+                    let fired = match mode {
+                        SnnMode::MTtfs => ref_fire_slope(&mut states[i], &bias, v_th, stream),
+                        SnnMode::Rate => ref_fire_current(&mut states[i], &bias, v_th, stream),
+                    };
+                    counts[i + 1] += fired as u64;
+                    stream.end_segment();
+                }
+            }
+        }
+    }
+
+    if let Some(last) = states.last() {
+        result.logits.extend_from_slice(&last.v);
+    }
+    result
 }
 
 #[cfg(test)]
@@ -822,5 +1253,107 @@ mod tests {
         let rb = snn_infer_scratch(&net_b, &xb, 4, 1.0, SnnMode::MTtfs, &mut scratch).clone();
         assert_eq!(ra.logits, snn_infer(&net_a, &xa, 4, 1.0).logits);
         assert_eq!(rb.logits, snn_infer(&net_b, &xb, 4, 1.0).logits);
+    }
+
+    /// The packed K layout: test-and-set sees each (channel, index) bit
+    /// independently, across word boundaries and plane padding.
+    #[test]
+    fn packed_mask_test_and_set() {
+        // 70-neuron plane: 2 words per plane, word 1 holds 6 live lanes.
+        let mut st = LayerState::new((3, 7, 10));
+        assert_eq!(st.words_per_plane, 2);
+        assert_eq!(st.k.len(), 6);
+        for c in 0..3 {
+            for i in [0usize, 1, 63, 64, 69] {
+                assert!(st.k_test_and_set(c, i), "bit (c {c}, i {i}) newly set");
+                assert!(!st.k_test_and_set(c, i), "bit (c {c}, i {i}) already set");
+            }
+        }
+        // Channels are independent planes: channel 1's bits never leak
+        // into channel 0 or 2.
+        assert_eq!(st.k[0].count_ones() + st.k[1].count_ones(), 5);
+        st.zero();
+        assert!(st.k.iter().all(|&w| w == 0));
+    }
+
+    /// Fired-mask materialization drains bits LSB-first: ascending
+    /// neuron order, the scalar reference's emission order.
+    #[test]
+    fn plane_events_ascend() {
+        let mut out = EventStream::default();
+        out.reset(1);
+        // Bits 3, 17, 63 of the word starting at in-plane index 64 of a
+        // width-10 plane.
+        push_plane_events(&mut out, 2, 10, 64, (1u64 << 3) | (1u64 << 17) | (1u64 << 63));
+        out.end_segment();
+        let got = out.all();
+        assert_eq!(
+            got,
+            &[
+                SpikeEvent::at(2, 6, 7),   // i = 67
+                SpikeEvent::at(2, 8, 1),   // i = 81
+                SpikeEvent::at(2, 12, 7),  // i = 127
+            ]
+        );
+    }
+
+    /// Within-module spot equivalence (the broad randomized suite lives
+    /// in tests/packed_sim.rs): packed core == scalar reference on the
+    /// tiny net in both modes, including exact event order.
+    #[test]
+    fn packed_matches_reference_on_tiny_net() {
+        let net = tiny_snn();
+        let x = Tensor3::from_vec(1, 2, 2, vec![0.9, 0.55, 0.31, 0.0]);
+        for mode in [SnnMode::MTtfs, SnnMode::Rate] {
+            let packed = snn_infer_mode(&net, &x, 7, 0.8, mode);
+            let scalar = snn_infer_reference(&net, &x, 7, 0.8, mode);
+            assert_eq!(packed.logits, scalar.logits);
+            assert_eq!(packed.spike_counts, scalar.spike_counts);
+            assert_eq!(packed.events.all(), scalar.events.all());
+        }
+    }
+
+    /// Regression: a network with an empty arch must produce empty
+    /// logits, not index out of bounds (the former states[n_layers - 1]
+    /// panic).
+    #[test]
+    fn empty_network_returns_empty_logits() {
+        let net = Network { arch: vec![], layers: vec![], input_shape: (1, 2, 2) };
+        let x = Tensor3::from_vec(1, 2, 2, vec![0.9, 0.8, 0.7, 0.6]);
+        let r = snn_infer(&net, &x, 3, 1.0);
+        assert!(r.logits.is_empty());
+        assert_eq!(r.events.layers(), 1); // input segment only
+        assert_eq!(r.events.steps(), 3);
+        assert_eq!(r.spike_counts.len(), 1);
+        // The input layer still encodes: every pixel fires exactly once.
+        assert_eq!(r.spike_counts[0], 4);
+        // And the reference agrees on the degenerate case.
+        let s = snn_infer_reference(&net, &x, 3, 1.0, SnnMode::MTtfs);
+        assert_eq!(s.logits, r.logits);
+        assert_eq!(s.events.all(), r.events.all());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn event_stream_slice_names_bad_step() {
+        let net = tiny_snn();
+        let x = Tensor3::from_vec(1, 2, 2, vec![0.9; 4]);
+        let r = snn_infer(&net, &x, 2, 1.0);
+        let _ = r.events.slice(2, 0); // only steps 0..2 are sealed
+    }
+
+    #[test]
+    #[should_panic(expected = "layer 7 out of range")]
+    fn event_stream_slice_names_bad_layer() {
+        let net = tiny_snn();
+        let x = Tensor3::from_vec(1, 2, 2, vec![0.9; 4]);
+        let r = snn_infer(&net, &x, 2, 1.0);
+        let _ = r.events.segment_len(0, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "coordinate overflow")]
+    fn spike_event_guards_u16_overflow() {
+        let _ = SpikeEvent::at(0, 70_000, 0);
     }
 }

@@ -180,7 +180,10 @@ impl<'a> SnnAccelerator<'a> {
     /// stream once, producing cycle counts, memory-access accounting and
     /// AEQ occupancy statistics.  This is the expensive half of the cycle
     /// model; everything in the returned [`CostTrace`] is identical for
-    /// every target device.
+    /// every target device.  The walk reads the stream only through
+    /// `steps()`/`slice()`/`segment_len()` — now bounds-checked with
+    /// coordinate-naming panics — so the producer's bit-packed spike
+    /// planes are invisible here.
     pub fn trace(&self, functional: &SnnResult) -> CostTrace {
         let p = self.design.params.p as u64;
         let k = self.design.params.kernel as u64;

@@ -1,0 +1,190 @@
+//! Packed-simulator equivalence suite (ISSUE 8 tentpole contract).
+//!
+//! The word-parallel core in `nn::snn` must be **bit-identical** to the
+//! retained scalar reference (`snn_infer_reference`): same logits, same
+//! per-layer spike counts, same events in the same order, same segment
+//! structure.  Golden routing tests, sweep counters, and the fixed-seed
+//! `GatewayStats` digests all pin on that stream, so any divergence —
+//! a reordered event, a float summed in a different order — is a
+//! regression even if classification accuracy is unaffected.
+//!
+//! Randomization deliberately leans on border-heavy shapes (h, w in
+//! 3..=10, so most neurons sit within a kernel radius of an edge) and on
+//! plane sizes that are *not* multiples of 64, exercising the padded
+//! final word of every packed channel plane.
+
+use spikebench::coordinator::loadgen::synthetic_network;
+use spikebench::nn::network::Network;
+use spikebench::nn::snn::{
+    snn_infer, snn_infer_mode, snn_infer_reference, snn_infer_scratch, SimScratch,
+    SnnMode, SpikeEvent,
+};
+use spikebench::nn::tensor::Tensor3;
+use spikebench::util::quickcheck::check_default;
+use spikebench::util::rng::Rng;
+
+/// Random arch string: 1–3 conv blocks (1–5 channels, kernel 1/3/5),
+/// optional pool (window 2/3), final dense head of 2–9 units.
+fn random_arch(r: &mut Rng) -> String {
+    let mut parts = Vec::new();
+    for _ in 0..1 + r.below(3) {
+        let ch = 1 + r.below(5);
+        let k = [1, 3, 5][r.below(3)];
+        parts.push(format!("{ch}C{k}"));
+        if r.chance(0.4) {
+            parts.push(format!("P{}", 2 + r.below(2)));
+        }
+    }
+    parts.push(format!("{}", 2 + r.below(8)));
+    parts.join("-")
+}
+
+fn random_input(r: &mut Rng) -> ((usize, usize, usize), Tensor3) {
+    let shape = (1 + r.below(3), 3 + r.below(8), 3 + r.below(8));
+    let (c, h, w) = shape;
+    let data: Vec<f32> = (0..c * h * w)
+        .map(|_| if r.chance(0.25) { 0.0 } else { r.f32() })
+        .collect();
+    (shape, Tensor3::from_vec(c, h, w, data))
+}
+
+/// Assert every observable of the packed run equals the scalar oracle.
+fn assert_equivalent(net: &Network, x: &Tensor3, t: usize, v_th: f32, mode: SnnMode) {
+    let packed = snn_infer_mode(net, x, t, v_th, mode);
+    let scalar = snn_infer_reference(net, x, t, v_th, mode);
+    assert_eq!(packed.logits, scalar.logits, "logits diverge (mode {mode:?})");
+    assert_eq!(
+        packed.spike_counts, scalar.spike_counts,
+        "spike counts diverge (mode {mode:?})"
+    );
+    assert_eq!(
+        packed.events.all(),
+        scalar.events.all(),
+        "event arena diverges (mode {mode:?})"
+    );
+    assert_eq!(packed.events.steps(), scalar.events.steps());
+    assert_eq!(packed.events.layers(), scalar.events.layers());
+    for step in 0..packed.events.steps() {
+        for l in 0..packed.events.layers() {
+            assert_eq!(
+                packed.events.segment_len(step, l),
+                scalar.events.segment_len(step, l),
+                "segment (t {step}, l {l}) length diverges (mode {mode:?})"
+            );
+        }
+    }
+}
+
+/// The tentpole quickcheck: random arch × shape × mode × (t, v_th), the
+/// packed core reproduces the scalar reference bit for bit.
+#[test]
+fn packed_core_matches_scalar_reference() {
+    check_default("packed == scalar reference", |r: &mut Rng| {
+        let (shape, x) = random_input(r);
+        let arch = random_arch(r);
+        let net = synthetic_network(&arch, shape, r.next_u64(), 0.6);
+        let t = 1 + r.below(6);
+        let v_th = r.range_f32(0.5, 1.5);
+        let mode = if r.chance(0.5) { SnnMode::MTtfs } else { SnnMode::Rate };
+        let packed = snn_infer_mode(&net, &x, t, v_th, mode);
+        let scalar = snn_infer_reference(&net, &x, t, v_th, mode);
+        if packed.logits != scalar.logits {
+            return Err(format!("logits diverge on {arch} {shape:?} mode {mode:?}"));
+        }
+        if packed.spike_counts != scalar.spike_counts {
+            return Err(format!("counts diverge on {arch} {shape:?} mode {mode:?}"));
+        }
+        if packed.events.all() != scalar.events.all() {
+            return Err(format!(
+                "event order diverges on {arch} {shape:?} mode {mode:?} \
+                 ({} vs {} events)",
+                packed.events.total(),
+                scalar.events.total()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Same equivalence through the reused-scratch entry point (the
+/// serve/sweep hot path): one scratch across many random cases must not
+/// leak state between inferences.
+#[test]
+fn packed_scratch_reuse_matches_reference_across_cases() {
+    let mut scratch = SimScratch::for_net(&synthetic_network("1C3-2", (1, 3, 3), 1, 0.6));
+    check_default("packed scratch reuse == reference", |r: &mut Rng| {
+        let (shape, x) = random_input(r);
+        let arch = random_arch(r);
+        let net = synthetic_network(&arch, shape, r.next_u64(), 0.6);
+        let t = 1 + r.below(4);
+        let mode = if r.chance(0.5) { SnnMode::MTtfs } else { SnnMode::Rate };
+        let reused = snn_infer_scratch(&net, &x, t, 1.0, mode, &mut scratch);
+        let scalar = snn_infer_reference(&net, &x, t, 1.0, mode);
+        if reused.logits != scalar.logits || reused.events.all() != scalar.events.all() {
+            return Err(format!("scratch reuse diverges on {arch} {shape:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Word-boundary shapes: planes of exactly 63/64/65/128 neurons hit the
+/// all-lanes-live and padded-final-word extremes of the packed scan.
+#[test]
+fn packed_word_boundary_planes() {
+    for (h, w) in [(7, 9), (8, 8), (5, 13), (8, 16), (1, 64), (1, 65)] {
+        for mode in [SnnMode::MTtfs, SnnMode::Rate] {
+            let net = synthetic_network("4C3-P2-3C3-5", (2, h, w), 7, 0.7);
+            let x = &spikebench::coordinator::loadgen::synthetic_images((2, h, w), 1, 11)[0];
+            assert_equivalent(&net, x, 5, 0.9, mode);
+        }
+    }
+}
+
+/// Table-6-shaped net (the bench workload): equivalence holds on a real
+/// multi-stage arch, not just the random small ones.
+#[test]
+fn packed_matches_reference_on_mnist_arch() {
+    let (arch, shape) = spikebench::coordinator::loadgen::dataset_arch("mnist").unwrap();
+    let net = synthetic_network(arch, shape, 42, 0.05);
+    let x = &spikebench::coordinator::loadgen::synthetic_images(shape, 1, 42)[0];
+    for mode in [SnnMode::MTtfs, SnnMode::Rate] {
+        assert_equivalent(&net, x, 4, 1.0, mode);
+    }
+}
+
+/// Regression (ISSUE 8 satellite): an empty arch used to panic at
+/// `states[n_layers - 1]`; it must now return empty logits while still
+/// emitting the input layer's spike train.
+#[test]
+fn empty_arch_infers_without_panicking() {
+    let net = Network { arch: vec![], layers: vec![], input_shape: (2, 3, 3) };
+    let x = Tensor3::from_vec(2, 3, 3, vec![0.8; 18]);
+    for mode in [SnnMode::MTtfs, SnnMode::Rate] {
+        let r = snn_infer_mode(&net, &x, 4, 1.0, mode);
+        assert!(r.logits.is_empty());
+        assert_eq!(r.events.layers(), 1);
+        assert_eq!(r.events.steps(), 4);
+        let s = snn_infer_reference(&net, &x, 4, 1.0, mode);
+        assert_eq!(r.events.all(), s.events.all());
+        assert_eq!(r.spike_counts, s.spike_counts);
+    }
+}
+
+/// The bounds-checked arena names the offending coordinate instead of
+/// surfacing an opaque slice panic.
+#[test]
+#[should_panic(expected = "EventStream segment (step 9, layer 0) out of range")]
+fn event_stream_out_of_range_panic_is_descriptive() {
+    let net = synthetic_network("1C3-2", (1, 3, 3), 3, 0.6);
+    let x = Tensor3::from_vec(1, 3, 3, vec![0.9; 9]);
+    let r = snn_infer(&net, &x, 2, 1.0);
+    let _ = r.events.slice(9, 0);
+}
+
+/// `SpikeEvent` is a u16 wire format; constructing one beyond that from
+/// usize coordinates must be a loud failure, not a silent truncation.
+#[test]
+#[should_panic(expected = "SpikeEvent coordinate overflow")]
+fn spike_event_construction_guards_u16() {
+    let _ = SpikeEvent::at(1, 2, 100_000);
+}
