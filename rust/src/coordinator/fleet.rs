@@ -1,0 +1,1896 @@
+//! Fleet layer: N simulated gateways as boards under one global power
+//! budget, with FPGA partial reconfiguration as a first-class cost.
+//!
+//! The paper's bottom line is joules — SNN and CNN designs only separate
+//! once energy is the objective — and [`crate::fpga::power`] already
+//! prices every design on both boards.  This module turns that price
+//! into a *cluster* constraint: a [`FleetSim`] instantiates one
+//! [`SimGateway`] per [`BoardSpec`] on a shared discrete-event clock,
+//! its balancer admits and dispatches every arrival across boards, and
+//! the shared power ledger sums each board's static + activity-scaled
+//! dynamic watts (the memoized [`super::gateway::Router::draw`] of
+//! every design, times its live shards) fleet-wide — refusing admissions
+//! ([`RejectReason::PowerCap`]) and autoscaler growth (the
+//! [`SimGateway::set_scale_gate`] hook) that would breach the cap.
+//!
+//! # Board lifecycle and partial reconfiguration
+//!
+//! A board starts serving its initial *image* — a (dataset set, design
+//! family) filter over the designs synthesized onto the device.  A
+//! [`ReconfigEvent`] swaps the image: at `t_s` the board goes dark for a
+//! seeded, device-sized duration (bigger fabrics stream a bigger partial
+//! bitstream through the configuration port), realized as a device-wide
+//! kill + recover pair through the PR-6 chaos machinery — in-flight
+//! batches on the board requeue or are lost exactly as under fault
+//! injection, and the reconfiguration itself charges `reconfig_w ×
+//! duration` joules to the fleet ledger.  While a board reconfigures the
+//! balancer either routes around it or *holds* requests for its incoming
+//! image (the re-image-vs-queue tradeoff the scheduler is paying for),
+//! releasing them the instant the board recovers.
+//!
+//! # Power accounting (capacity + reservation envelope)
+//!
+//! The budget charges **capacity, not busyness**: a powered shard burns
+//! its full memoized draw whether or not a batch occupies it, and a
+//! board's accounted draw is the *maximum* of its live active-image draw
+//! and every still-pending reconfiguration reserve (the larger of the
+//! reconfiguration engine's draw and the incoming image's post-recovery
+//! draw).  Accounted draw therefore only ever steps *up* through the
+//! admission/scale gates — which is what makes the cap airtight: no
+//! emitted [`FleetSnapshot`] can exceed `power_cap_w`, by induction, not
+//! by sampling luck.  Masked designs (synthesized but outside the active
+//! image) idle unpowered in this accounting — a modeling simplification
+//! documented in `ARCHITECTURE.md` §Fleet layer.
+//!
+//! Everything is seeded and ordered: fixed-seed [`run_fleet`] runs are
+//! byte-deterministic, pinned by `tests/fleet.rs` and the `fleet-smoke`
+//! CI job.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::fpga::device::Device;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Recorder;
+use crate::util::wire::{De, FromJson, Obj, ToJson, WireError};
+
+use super::gateway::{
+    DecisionDigest, DesignKind, FaultEvent, FaultPlan, GatewayConfig, GatewayStats, PricedDesign,
+    RejectReason, RunLedger, SimGateway, SimOutcome, SimRequest,
+};
+use super::loadgen::{
+    fleet_board_specs, fleet_pools, Arrival, ArrivalGen, DatasetPool, LoadgenConfig,
+};
+
+/// Seed salt for reconfiguration-duration jitter (one RNG walked in plan
+/// order, so the same spec always prices the same downtime).
+const RECONFIG_SEED_SALT: u64 = 0x5EC0_7F16;
+/// Reconfiguration duration per device LUT (seconds).  Scales the
+/// partial-bitstream size with the fabric: ≈10.6 ms on the PYNQ-Z1,
+/// ≈54.8 ms on the ZCU102 — the order of real PCAP full-region loads.
+const RECONFIG_S_PER_LUT: f64 = 2e-7;
+/// Draw of the configuration engine while a board re-images (W per
+/// device LUT): ≈0.27 W on the PYNQ-Z1, ≈1.37 W on the ZCU102.
+const RECONFIG_W_PER_LUT: f64 = 5e-6;
+/// Fractional jitter band of the seeded reconfiguration duration.
+const RECONFIG_JITTER: f64 = 0.2;
+
+/// Which design family a board image exposes to the balancer.
+///
+/// ```
+/// use spikebench::coordinator::fleet::DesignFilter;
+///
+/// assert_eq!(DesignFilter::parse("snn"), Some(DesignFilter::Snn));
+/// assert_eq!(DesignFilter::Mixed.as_str(), "mixed");
+/// assert!(DesignFilter::Cnn.admits(false) && !DesignFilter::Cnn.admits(true));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesignFilter {
+    /// Only spiking designs serve traffic.
+    Snn,
+    /// Only FINN dataflow designs serve traffic.
+    Cnn,
+    /// Every design of the image's datasets serves traffic.
+    Mixed,
+}
+
+impl DesignFilter {
+    /// Stable wire name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DesignFilter::Snn => "snn",
+            DesignFilter::Cnn => "cnn",
+            DesignFilter::Mixed => "mixed",
+        }
+    }
+
+    /// Inverse of [`DesignFilter::as_str`] (case-insensitive).
+    pub fn parse(s: &str) -> Option<DesignFilter> {
+        match s.to_ascii_lowercase().as_str() {
+            "snn" => Some(DesignFilter::Snn),
+            "cnn" => Some(DesignFilter::Cnn),
+            "mixed" => Some(DesignFilter::Mixed),
+            _ => None,
+        }
+    }
+
+    /// Does a design of the given family (`is_snn`) pass the filter?
+    pub fn admits(&self, is_snn: bool) -> bool {
+        match self {
+            DesignFilter::Snn => is_snn,
+            DesignFilter::Cnn => !is_snn,
+            DesignFilter::Mixed => true,
+        }
+    }
+}
+
+impl ToJson for DesignFilter {
+    fn to_json(&self) -> Json {
+        Json::Str(self.as_str().to_string())
+    }
+}
+
+impl FromJson for DesignFilter {
+    fn from_json(v: &Json) -> Result<DesignFilter, WireError> {
+        let s = String::from_json(v)?;
+        DesignFilter::parse(&s)
+            .ok_or_else(|| WireError::new("", format!("unknown design filter {s:?} (snn|cnn|mixed)")))
+    }
+}
+
+/// One board of the fleet: a device hosting every published design of
+/// its dataset list, fronted by its own [`SimGateway`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardSpec {
+    /// Board name (unique within the fleet; the dispatch digest folds it).
+    pub name: String,
+    /// Device name (`"pynq"` / `"zcu102"`, as accepted by
+    /// [`Device::by_name`]).
+    pub device: String,
+    /// Initial shards per design (minimum 1; clamped by the device fit
+    /// check exactly as in a standalone gateway).
+    pub shards: usize,
+    /// Datasets of the board's *initial* image.
+    pub datasets: Vec<String>,
+    /// Design-family filter of the initial image.
+    pub family: DesignFilter,
+}
+
+impl ToJson for BoardSpec {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("name", &self.name)
+            .field("device", &self.device)
+            .field("shards", &self.shards)
+            .field("datasets", &self.datasets)
+            .field("family", &self.family)
+            .build()
+    }
+}
+
+impl FromJson for BoardSpec {
+    fn from_json(v: &Json) -> Result<BoardSpec, WireError> {
+        let d = De::root(v);
+        Ok(BoardSpec {
+            name: d.req("name")?,
+            device: d.opt_or("device", "pynq".to_string())?,
+            shards: d.opt_or("shards", 1)?,
+            datasets: d.req("datasets")?,
+            family: d.opt_or("family", DesignFilter::Mixed)?,
+        })
+    }
+}
+
+/// One scheduled partial reconfiguration: at `t_s`, re-image `board` to
+/// serve `datasets` under `family`.  The downtime and joule cost are
+/// derived from the board's device and the fleet seed, not stored here —
+/// the plan is *intent*, the priced cost lands in [`ReconfigRecord`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReconfigEvent {
+    /// Simulated start time (seconds, must be positive and finite).
+    pub t_s: f64,
+    /// Target board name.
+    pub board: String,
+    /// Dataset set of the incoming image.
+    pub datasets: Vec<String>,
+    /// Design-family filter of the incoming image.
+    pub family: DesignFilter,
+}
+
+impl ToJson for ReconfigEvent {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("t_s", &self.t_s)
+            .field("board", &self.board)
+            .field("datasets", &self.datasets)
+            .field("family", &self.family)
+            .build()
+    }
+}
+
+impl FromJson for ReconfigEvent {
+    fn from_json(v: &Json) -> Result<ReconfigEvent, WireError> {
+        let d = De::root(v);
+        Ok(ReconfigEvent {
+            t_s: d.req("t_s")?,
+            board: d.req("board")?,
+            datasets: d.req("datasets")?,
+            family: d.opt_or("family", DesignFilter::Mixed)?,
+        })
+    }
+}
+
+/// A replayable re-imaging schedule, the fleet analogue of
+/// [`FaultPlan`]: data, not randomness — the same plan plus the same
+/// fleet seed prices the same downtimes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReconfigPlan {
+    /// Scheduled reconfigurations; applied in `t_s` order (ties keep
+    /// list order).
+    pub events: Vec<ReconfigEvent>,
+}
+
+impl ReconfigPlan {
+    /// True when the plan schedules nothing (the default).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl ToJson for ReconfigPlan {
+    fn to_json(&self) -> Json {
+        Obj::new().field("events", &self.events).build()
+    }
+}
+
+impl FromJson for ReconfigPlan {
+    fn from_json(v: &Json) -> Result<ReconfigPlan, WireError> {
+        let d = De::root(v);
+        Ok(ReconfigPlan { events: d.opt_or("events", Vec::new())? })
+    }
+}
+
+/// One *applied* reconfiguration, priced: what [`FleetStats::reconfigs`]
+/// reports for every [`ReconfigEvent`] of the plan.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReconfigRecord {
+    /// Simulated start time (seconds).
+    pub t_s: f64,
+    /// Board that was re-imaged.
+    pub board: String,
+    /// Seeded, device-sized downtime (seconds).
+    pub duration_s: f64,
+    /// Joules charged for the re-image (`reconfig engine draw ×
+    /// duration`), over and above the capacity draw the budget reserves
+    /// across the window.
+    pub energy_j: f64,
+    /// Dataset set of the incoming image.
+    pub datasets: Vec<String>,
+    /// Design-family filter of the incoming image.
+    pub family: DesignFilter,
+    /// In-flight requests pulled back into admission queues when the
+    /// board went dark (the PR-6 requeue machinery).
+    pub requeued: usize,
+    /// In-flight requests lost outright (queues were full at the kill).
+    pub lost: usize,
+}
+
+impl ToJson for ReconfigRecord {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("t_s", &self.t_s)
+            .field("board", &self.board)
+            .field("duration_s", &self.duration_s)
+            .field("energy_j", &self.energy_j)
+            .field("datasets", &self.datasets)
+            .field("family", &self.family)
+            .field("requeued", &self.requeued)
+            .field("lost", &self.lost)
+            .build()
+    }
+}
+
+impl FromJson for ReconfigRecord {
+    fn from_json(v: &Json) -> Result<ReconfigRecord, WireError> {
+        let d = De::root(v);
+        Ok(ReconfigRecord {
+            t_s: d.req("t_s")?,
+            board: d.req("board")?,
+            duration_s: d.req("duration_s")?,
+            energy_j: d.req("energy_j")?,
+            datasets: d.req("datasets")?,
+            family: d.opt_or("family", DesignFilter::Mixed)?,
+            requeued: d.req("requeued")?,
+            lost: d.req("lost")?,
+        })
+    }
+}
+
+/// Spec of a whole fleet run: boards, workload, watt cap, and the
+/// re-imaging schedule.  The fleet analogue of
+/// [`super::loadgen::DeploymentSpec`] — a file round-trips through
+/// [`ToJson`]/[`FromJson`] bit for bit and reproduces the in-code run
+/// exactly ([`run_fleet`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// Substrate seed (synthetic weights, images, reconfig durations).
+    pub seed: u64,
+    /// Global fleet watt cap; `None` = uncapped.
+    pub power_cap_w: Option<f64>,
+    /// Gateway configuration shared by every board.
+    pub gateway: GatewayConfig,
+    /// The fleet's global dataset list: drives arrival generation and
+    /// substrate seeding (a board's datasets must come from this list).
+    pub datasets: Vec<String>,
+    /// The boards.
+    pub boards: Vec<BoardSpec>,
+    /// Workload configuration.
+    pub loadgen: LoadgenConfig,
+    /// Scheduled partial reconfigurations.
+    pub reconfigs: ReconfigPlan,
+}
+
+impl FleetSpec {
+    /// The built-in demo fleet: three boards (two PYNQ-Z1, one ZCU102)
+    /// over all three datasets, a watt cap with real headroom pressure
+    /// (the initial capacity draw sits ~1.5–3.5 W under it, so autoscaler
+    /// growth runs into the gate), and one scheduled re-image of the
+    /// SVHN+CIFAR PYNQ board to CIFAR-only mid-run.  While that board is
+    /// dark, CIFAR traffic has no online host (the ZCU board serves SVHN
+    /// only) and is held for the incoming image — the demo exercises both
+    /// the route-around path (SVHN shifts to the ZCU board) and the hold
+    /// path.  `repro fleet` runs this when no `--spec` is given.
+    pub fn demo() -> FleetSpec {
+        FleetSpec {
+            seed: 42,
+            power_cap_w: Some(14.0),
+            gateway: GatewayConfig::default(),
+            datasets: vec!["mnist".into(), "svhn".into(), "cifar".into()],
+            boards: vec![
+                BoardSpec {
+                    name: "pynq-0".into(),
+                    device: "pynq".into(),
+                    shards: 1,
+                    datasets: vec!["mnist".into()],
+                    family: DesignFilter::Mixed,
+                },
+                BoardSpec {
+                    name: "pynq-1".into(),
+                    device: "pynq".into(),
+                    shards: 1,
+                    datasets: vec!["svhn".into(), "cifar".into()],
+                    family: DesignFilter::Snn,
+                },
+                BoardSpec {
+                    name: "zcu-0".into(),
+                    device: "zcu102".into(),
+                    shards: 1,
+                    datasets: vec!["svhn".into()],
+                    family: DesignFilter::Snn,
+                },
+            ],
+            loadgen: LoadgenConfig::default(),
+            reconfigs: ReconfigPlan {
+                events: vec![ReconfigEvent {
+                    t_s: 0.004,
+                    board: "pynq-1".into(),
+                    datasets: vec!["cifar".into()],
+                    family: DesignFilter::Snn,
+                }],
+            },
+        }
+    }
+}
+
+impl ToJson for FleetSpec {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("seed", &self.seed)
+            .field("power_cap_w", &self.power_cap_w)
+            .field("gateway", &self.gateway)
+            .field("datasets", &self.datasets)
+            .field("boards", &self.boards)
+            .field("loadgen", &self.loadgen)
+            .field("reconfigs", &self.reconfigs)
+            .build()
+    }
+}
+
+impl FromJson for FleetSpec {
+    fn from_json(v: &Json) -> Result<FleetSpec, WireError> {
+        let d = De::root(v);
+        Ok(FleetSpec {
+            seed: d.opt_or("seed", 42)?,
+            power_cap_w: d.opt_or("power_cap_w", None)?,
+            gateway: d.opt_or("gateway", GatewayConfig::default())?,
+            datasets: d.req("datasets")?,
+            boards: d.req("boards")?,
+            loadgen: d.opt_or("loadgen", LoadgenConfig::default())?,
+            reconfigs: d.opt_or("reconfigs", ReconfigPlan::default())?,
+        })
+    }
+}
+
+/// Periodic fleet-wide state, emitted on a fixed simulated-time grid
+/// (plus once at the run's end).  `fleet_power_w` is the accounted
+/// envelope the cap is enforced against, so `fleet_power_w ≤
+/// power_cap_w` holds in **every** snapshot of a capped run — the
+/// invariant the `fleet-smoke` CI job asserts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetSnapshot {
+    /// Simulated grid time (seconds).
+    pub t_s: f64,
+    /// Accounted fleet draw (W): live capacity plus reconfiguration
+    /// reserves, summed over boards.
+    pub fleet_power_w: f64,
+    /// Boards not currently re-imaging.
+    pub boards_online: usize,
+    /// Arrivals seen by the balancer so far.
+    pub offered: usize,
+    /// Arrivals offered to some board's gateway so far.
+    pub dispatched: usize,
+    /// Terminal completions so far (across boards).
+    pub completed: usize,
+    /// Fleet-level watt-cap refusals so far.
+    pub rejected_power_cap: usize,
+    /// Queue-full rejections so far (board admission + hold overflow).
+    pub rejected_full: usize,
+    /// Deadline rejections so far (board admission).
+    pub rejected_deadline: usize,
+    /// Shard-loss rejections so far (reconfiguration kills).
+    pub rejected_shard_lost: usize,
+    /// Requeue events so far (in-flight work pulled off dark boards).
+    pub requeued: usize,
+    /// Requests currently held for a re-imaging board's incoming image.
+    pub held: usize,
+}
+
+impl ToJson for FleetSnapshot {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("t_s", &self.t_s)
+            .field("fleet_power_w", &self.fleet_power_w)
+            .field("boards_online", &self.boards_online)
+            .field("offered", &self.offered)
+            .field("dispatched", &self.dispatched)
+            .field("completed", &self.completed)
+            .field("rejected_power_cap", &self.rejected_power_cap)
+            .field("rejected_full", &self.rejected_full)
+            .field("rejected_deadline", &self.rejected_deadline)
+            .field("rejected_shard_lost", &self.rejected_shard_lost)
+            .field("requeued", &self.requeued)
+            .field("held", &self.held)
+            .build()
+    }
+}
+
+impl FromJson for FleetSnapshot {
+    fn from_json(v: &Json) -> Result<FleetSnapshot, WireError> {
+        let d = De::root(v);
+        Ok(FleetSnapshot {
+            t_s: d.req("t_s")?,
+            fleet_power_w: d.req("fleet_power_w")?,
+            boards_online: d.req("boards_online")?,
+            offered: d.req("offered")?,
+            dispatched: d.req("dispatched")?,
+            completed: d.req("completed")?,
+            rejected_power_cap: d.req("rejected_power_cap")?,
+            rejected_full: d.req("rejected_full")?,
+            rejected_deadline: d.req("rejected_deadline")?,
+            rejected_shard_lost: d.req("rejected_shard_lost")?,
+            requeued: d.req("requeued")?,
+            held: d.req("held")?,
+        })
+    }
+}
+
+/// Per-board slice of a [`FleetStats`] report, reconciled against the
+/// board's own [`RunLedger`] (the counters are that ledger's, verbatim).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BoardStats {
+    /// Board name.
+    pub name: String,
+    /// Device name (`Device::name` form).
+    pub device: String,
+    /// Requests the balancer offered to this board's gateway.
+    pub offered: usize,
+    /// Requests admitted by the board.
+    pub admitted: usize,
+    /// Terminal completions.
+    pub completed: usize,
+    /// Completions whose backend call failed.
+    pub failed: usize,
+    /// Queue-full rejections at board admission.
+    pub rejected_full: usize,
+    /// Deadline rejections at board admission.
+    pub rejected_deadline: usize,
+    /// Requests lost to reconfiguration kills.
+    pub rejected_shard_lost: usize,
+    /// Requeue events off this board's dying shards.
+    pub requeued: usize,
+    /// Completions past their deadline.
+    pub deadline_misses: usize,
+    /// SLO-fallback completions.
+    pub slo_misses: usize,
+    /// Median service time (ms) over this board's completions.
+    pub p50_service_ms: f64,
+    /// 99th-percentile service time (ms).
+    pub p99_service_ms: f64,
+    /// Accounted energy this board drew over the run (J), capacity +
+    /// reservation envelope (reconfiguration joules are reported
+    /// fleet-wide in [`FleetStats::reconfig_energy_j`]).
+    pub energy_j: f64,
+    /// Peak accounted draw of this board (W).
+    pub peak_power_w: f64,
+    /// Total time spent re-imaging (seconds).
+    pub offline_s: f64,
+    /// Reconfigurations applied to this board.
+    pub reconfigs: usize,
+    /// Hex FNV-1a-64 digest of this board's admission-time routing
+    /// decisions (its gateway's [`DecisionDigest`]).
+    pub decision_digest: u64,
+}
+
+impl ToJson for BoardStats {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("name", &self.name)
+            .field("device", &self.device)
+            .field("offered", &self.offered)
+            .field("admitted", &self.admitted)
+            .field("completed", &self.completed)
+            .field("failed", &self.failed)
+            .field("rejected_full", &self.rejected_full)
+            .field("rejected_deadline", &self.rejected_deadline)
+            .field("rejected_shard_lost", &self.rejected_shard_lost)
+            .field("requeued", &self.requeued)
+            .field("deadline_misses", &self.deadline_misses)
+            .field("slo_misses", &self.slo_misses)
+            .field("p50_service_ms", &self.p50_service_ms)
+            .field("p99_service_ms", &self.p99_service_ms)
+            .field("energy_j", &self.energy_j)
+            .field("peak_power_w", &self.peak_power_w)
+            .field("offline_s", &self.offline_s)
+            .field("reconfigs", &self.reconfigs)
+            // Hex-encoded: u64 digests exceed the f64-backed number
+            // wire's 2^53 exact-integer range.
+            .raw("decision_digest", Json::Str(format!("{:016x}", self.decision_digest)))
+            .build()
+    }
+}
+
+impl FromJson for BoardStats {
+    fn from_json(v: &Json) -> Result<BoardStats, WireError> {
+        let d = De::root(v);
+        let el = d.field("decision_digest")?;
+        let hex: String = el.get()?;
+        let decision_digest = u64::from_str_radix(&hex, 16)
+            .map_err(|_| el.err(format!("invalid decision digest {hex:?}")))?;
+        Ok(BoardStats {
+            name: d.req("name")?,
+            device: d.req("device")?,
+            offered: d.req("offered")?,
+            admitted: d.req("admitted")?,
+            completed: d.req("completed")?,
+            failed: d.req("failed")?,
+            rejected_full: d.req("rejected_full")?,
+            rejected_deadline: d.req("rejected_deadline")?,
+            rejected_shard_lost: d.req("rejected_shard_lost")?,
+            requeued: d.req("requeued")?,
+            deadline_misses: d.req("deadline_misses")?,
+            slo_misses: d.req("slo_misses")?,
+            p50_service_ms: d.req("p50_service_ms")?,
+            p99_service_ms: d.req("p99_service_ms")?,
+            energy_j: d.req("energy_j")?,
+            peak_power_w: d.req("peak_power_w")?,
+            offline_s: d.req("offline_s")?,
+            reconfigs: d.req("reconfigs")?,
+            decision_digest,
+        })
+    }
+}
+
+/// The whole fleet run's report: power accounting, reconfiguration
+/// costs, fleet-level conservation counters, and per-board slices.
+/// Byte-deterministic for a fixed [`FleetSpec`] (pinned by
+/// `tests/fleet.rs` and the `fleet-smoke` CI job).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetStats {
+    /// The configured cap (`None` = uncapped run).
+    pub power_cap_w: Option<f64>,
+    /// Highest accounted fleet draw at any evaluation point (W); never
+    /// above the cap on a capped run.
+    pub peak_power_w: f64,
+    /// `energy_j / horizon_s` (0 on an empty run).
+    pub mean_power_w: f64,
+    /// Accounted fleet energy over the run (J), capacity envelope ×
+    /// time, *excluding* reconfiguration engine joules.
+    pub energy_j: f64,
+    /// Joules charged by reconfigurations (`Σ reconfig_w × duration`).
+    pub reconfig_energy_j: f64,
+    /// Run horizon (seconds): last arrival, window end, or completion —
+    /// whichever is latest.
+    pub horizon_s: f64,
+    /// Arrivals the balancer saw.
+    pub offered: usize,
+    /// Arrivals offered to some board (directly or after a hold).
+    pub dispatched: usize,
+    /// Requests admitted across boards.
+    pub admitted: usize,
+    /// Terminal completions across boards.
+    pub completed: usize,
+    /// Completions whose backend call failed.
+    pub failed: usize,
+    /// Fleet-level watt-cap refusals ([`RejectReason::PowerCap`]).
+    pub rejected_power_cap: usize,
+    /// Queue-full rejections (board admission + hold-buffer overflow).
+    pub rejected_full: usize,
+    /// Deadline rejections at board admission.
+    pub rejected_deadline: usize,
+    /// Requests lost to reconfiguration kills.
+    pub rejected_shard_lost: usize,
+    /// Requeue events off dark boards.
+    pub requeued: usize,
+    /// Requests that waited out a reconfiguration in the hold buffer.
+    pub held_total: usize,
+    /// Autoscaler growths vetoed by the watt cap.
+    pub autoscale_denied: usize,
+    /// Completions past their deadline.
+    pub deadline_misses: usize,
+    /// SLO-fallback completions.
+    pub slo_misses: usize,
+    /// Median service time (ms) over all completions.
+    pub p50_service_ms: f64,
+    /// 99th-percentile service time (ms).
+    pub p99_service_ms: f64,
+    /// Order-sensitive FNV-1a-64 digest of the balancer's dispatch
+    /// decisions (board name + held flag, plus cap refusals).
+    pub decision_digest: u64,
+    /// Applied reconfigurations, in plan order, priced.
+    pub reconfigs: Vec<ReconfigRecord>,
+    /// Per-board slices, in spec order.
+    pub boards: Vec<BoardStats>,
+}
+
+impl FleetStats {
+    /// Total rejections, any reason.  `offered == completed +
+    /// rejected()` at the end of every run — the fleet-level
+    /// conservation invariant `tests/fleet.rs` pins.
+    pub fn rejected(&self) -> usize {
+        self.rejected_power_cap
+            + self.rejected_full
+            + self.rejected_deadline
+            + self.rejected_shard_lost
+    }
+}
+
+impl ToJson for FleetStats {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("power_cap_w", &self.power_cap_w)
+            .field("peak_power_w", &self.peak_power_w)
+            .field("mean_power_w", &self.mean_power_w)
+            .field("energy_j", &self.energy_j)
+            .field("reconfig_energy_j", &self.reconfig_energy_j)
+            .field("horizon_s", &self.horizon_s)
+            .field("offered", &self.offered)
+            .field("dispatched", &self.dispatched)
+            .field("admitted", &self.admitted)
+            .field("completed", &self.completed)
+            .field("failed", &self.failed)
+            .field("rejected_power_cap", &self.rejected_power_cap)
+            .field("rejected_full", &self.rejected_full)
+            .field("rejected_deadline", &self.rejected_deadline)
+            .field("rejected_shard_lost", &self.rejected_shard_lost)
+            .field("requeued", &self.requeued)
+            .field("held_total", &self.held_total)
+            .field("autoscale_denied", &self.autoscale_denied)
+            .field("deadline_misses", &self.deadline_misses)
+            .field("slo_misses", &self.slo_misses)
+            .field("p50_service_ms", &self.p50_service_ms)
+            .field("p99_service_ms", &self.p99_service_ms)
+            .raw("decision_digest", Json::Str(format!("{:016x}", self.decision_digest)))
+            .field("reconfigs", &self.reconfigs)
+            .field("boards", &self.boards)
+            .build()
+    }
+}
+
+impl FromJson for FleetStats {
+    fn from_json(v: &Json) -> Result<FleetStats, WireError> {
+        let d = De::root(v);
+        let el = d.field("decision_digest")?;
+        let hex: String = el.get()?;
+        let decision_digest = u64::from_str_radix(&hex, 16)
+            .map_err(|_| el.err(format!("invalid decision digest {hex:?}")))?;
+        Ok(FleetStats {
+            power_cap_w: d.opt_or("power_cap_w", None)?,
+            peak_power_w: d.req("peak_power_w")?,
+            mean_power_w: d.req("mean_power_w")?,
+            energy_j: d.req("energy_j")?,
+            reconfig_energy_j: d.req("reconfig_energy_j")?,
+            horizon_s: d.req("horizon_s")?,
+            offered: d.req("offered")?,
+            dispatched: d.req("dispatched")?,
+            admitted: d.req("admitted")?,
+            completed: d.req("completed")?,
+            failed: d.req("failed")?,
+            rejected_power_cap: d.req("rejected_power_cap")?,
+            rejected_full: d.req("rejected_full")?,
+            rejected_deadline: d.req("rejected_deadline")?,
+            rejected_shard_lost: d.req("rejected_shard_lost")?,
+            requeued: d.req("requeued")?,
+            held_total: d.req("held_total")?,
+            autoscale_denied: d.req("autoscale_denied")?,
+            deadline_misses: d.req("deadline_misses")?,
+            slo_misses: d.req("slo_misses")?,
+            p50_service_ms: d.req("p50_service_ms")?,
+            p99_service_ms: d.req("p99_service_ms")?,
+            decision_digest,
+            reconfigs: d.req("reconfigs")?,
+            boards: d.req("boards")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Power budget internals (shared between the sim loop and per-board hooks).
+// ---------------------------------------------------------------------------
+
+/// Slack added to every cap comparison so float noise in repeated
+/// increments never flips an admission decision.
+const CAP_EPS: f64 = 1e-9;
+
+/// Reservation for one pending reconfiguration window of a board: while
+/// the window is in the future, the budget accounts the *worse* of the
+/// configuration-engine draw and the incoming image powered across every
+/// provisioned slot.
+struct WinReserve {
+    /// Configuration-engine draw across the window (W).
+    reconfig_w: f64,
+    /// Per-entry membership of the *incoming* image (routing-table order).
+    target_active: Vec<bool>,
+}
+
+/// Power-side mirror of one board.  `live`/`slots` shadow the gateway's
+/// per-entry shard counts; the mirror exists because the budget must be
+/// consulted from inside the gateway's autoscale path, where the gateway
+/// itself is mutably borrowed.
+struct BoardPower {
+    /// Per-entry draw of one powered shard (W), memoized from
+    /// [`Router::draw`](super::gateway::Router::draw) at construction.
+    draw: Vec<f64>,
+    /// Live shards per entry.
+    live: Vec<usize>,
+    /// Provisioned slots per entry (live + dead; a device-wide recovery
+    /// revives every slot, so reservations are sized against this).
+    slots: Vec<usize>,
+    /// Per-entry membership of the *current* image.
+    active: Vec<bool>,
+    /// True while the board is dark (re-imaging).
+    in_window: bool,
+    /// Reserves for this board's windows, in time order.
+    windows: Vec<WinReserve>,
+    /// First window not yet completed.
+    cursor: usize,
+}
+
+impl BoardPower {
+    /// The capacity + reservation envelope (module docs): live draw of
+    /// the current image (zero while dark), maxed with, per pending
+    /// window, the worse of the configuration-engine draw and the
+    /// incoming image across all provisioned slots.  `grow` simulates
+    /// entry `grow` gaining one live shard (reviving a dead slot when
+    /// one exists, else adding a slot).
+    fn accounted_with(&self, grow: Option<usize>) -> f64 {
+        let live_at = |e: usize| {
+            if Some(e) == grow {
+                self.live[e] + 1
+            } else {
+                self.live[e]
+            }
+        };
+        let slots_at = |e: usize| {
+            if Some(e) == grow {
+                self.slots[e].max(self.live[e] + 1)
+            } else {
+                self.slots[e]
+            }
+        };
+        let mut acc = 0.0;
+        if !self.in_window {
+            for e in 0..self.draw.len() {
+                if self.active[e] {
+                    acc += live_at(e) as f64 * self.draw[e];
+                }
+            }
+        }
+        for w in &self.windows[self.cursor..] {
+            let mut slots_w = 0.0;
+            for e in 0..self.draw.len() {
+                if w.target_active[e] {
+                    slots_w += slots_at(e) as f64 * self.draw[e];
+                }
+            }
+            acc = acc.max(w.reconfig_w.max(slots_w));
+        }
+        acc
+    }
+
+    /// Current accounted draw (W).
+    fn accounted(&self) -> f64 {
+        self.accounted_with(None)
+    }
+}
+
+/// Fleet-level counters folded from per-board outcome sinks plus the
+/// balancer's own admission decisions.
+struct FleetLedger {
+    offered: usize,
+    dispatched: usize,
+    held_now: usize,
+    held_total: usize,
+    rejected_power_cap: usize,
+    rejected_full: usize,
+    rejected_deadline: usize,
+    rejected_shard_lost: usize,
+    requeued: usize,
+    completed: usize,
+    failed: usize,
+    deadline_misses: usize,
+    slo_misses: usize,
+    service: Recorder,
+    digest: DecisionDigest,
+}
+
+impl FleetLedger {
+    fn new() -> FleetLedger {
+        FleetLedger {
+            offered: 0,
+            dispatched: 0,
+            held_now: 0,
+            held_total: 0,
+            rejected_power_cap: 0,
+            rejected_full: 0,
+            rejected_deadline: 0,
+            rejected_shard_lost: 0,
+            requeued: 0,
+            completed: 0,
+            failed: 0,
+            deadline_misses: 0,
+            slo_misses: 0,
+            service: Recorder::new(),
+            digest: DecisionDigest::new(),
+        }
+    }
+
+    /// Fold one terminal gateway outcome into the fleet counters.
+    fn fold_outcome(&mut self, o: &SimOutcome) {
+        self.requeued += o.requeues;
+        match o.reject {
+            Some(RejectReason::QueueFull) => self.rejected_full += 1,
+            Some(RejectReason::DeadlineUnmeetable) => self.rejected_deadline += 1,
+            Some(RejectReason::ShardLost) => self.rejected_shard_lost += 1,
+            Some(RejectReason::PowerCap) => self.rejected_power_cap += 1,
+            None => {
+                self.completed += 1;
+                if !o.ok {
+                    self.failed += 1;
+                }
+                if o.deadline_miss {
+                    self.deadline_misses += 1;
+                }
+                if o.slo_miss {
+                    self.slo_misses += 1;
+                }
+                self.service.record(o.service_s);
+            }
+        }
+    }
+}
+
+/// State shared between the fleet loop and the closures installed into
+/// each gateway (outcome sinks and autoscale gates), behind one
+/// `Rc<RefCell<_>>`.
+struct Shared {
+    /// Fleet-wide watt cap (`None` = unlimited).
+    cap_w: Option<f64>,
+    /// Per-board power mirrors.
+    boards: Vec<BoardPower>,
+    /// Cached accounted draw per board (W).
+    board_w: Vec<f64>,
+    /// Sum of `board_w` (W).
+    fleet_w: f64,
+    /// Highest accounted fleet draw seen (W).
+    peak_w: f64,
+    /// Highest accounted draw per board (W).
+    board_peak: Vec<f64>,
+    /// Accounted fleet energy so far (J).
+    energy_j: f64,
+    /// Accounted energy per board (J).
+    board_energy: Vec<f64>,
+    /// Simulated time energy is integrated up to (s).
+    t_last: f64,
+    /// Autoscale grow attempts the cap refused.
+    autoscale_denied: usize,
+    /// Fleet-level counters.
+    ledger: FleetLedger,
+}
+
+impl Shared {
+    /// Integrate accounted power into energy up to simulated time `t`.
+    fn integrate_to(&mut self, t: f64) {
+        if t <= self.t_last {
+            return;
+        }
+        let dt = t - self.t_last;
+        for b in 0..self.board_w.len() {
+            self.board_energy[b] += self.board_w[b] * dt;
+        }
+        self.energy_j += self.fleet_w * dt;
+        self.t_last = t;
+    }
+
+    /// Re-cache board `b`'s accounted draw.  Callers integrate energy to
+    /// the current simulated time first — the draw change takes effect
+    /// *from* now.
+    fn refresh_board(&mut self, b: usize) {
+        let w = self.boards[b].accounted();
+        self.fleet_w += w - self.board_w[b];
+        self.board_w[b] = w;
+        self.peak_w = self.peak_w.max(self.fleet_w);
+        self.board_peak[b] = self.board_peak[b].max(w);
+    }
+
+    /// Watts the fleet draw would gain if entry `idx` on board `b` grew
+    /// by one shard.
+    fn grow_inc(&self, b: usize, idx: usize) -> f64 {
+        (self.boards[b].accounted_with(Some(idx)) - self.board_w[b]).max(0.0)
+    }
+
+    /// The autoscale gate: commit the grow iff the cap admits it.  The
+    /// gateway fires this from inside `offer(t)` after integrating its
+    /// own clock to `t`, so `t_last` is already current.
+    fn try_grow(&mut self, b: usize, idx: usize) -> bool {
+        let inc = self.grow_inc(b, idx);
+        if let Some(cap) = self.cap_w {
+            if self.fleet_w + inc > cap + CAP_EPS {
+                self.autoscale_denied += 1;
+                return false;
+            }
+        }
+        let bp = &mut self.boards[b];
+        bp.live[idx] += 1;
+        bp.slots[idx] = bp.slots[idx].max(bp.live[idx]);
+        self.refresh_board(b);
+        true
+    }
+
+    /// Snapshot the fleet state at simulated time `t_s`.
+    fn snapshot(&self, t_s: f64) -> FleetSnapshot {
+        FleetSnapshot {
+            t_s,
+            fleet_power_w: self.fleet_w,
+            boards_online: self.boards.iter().filter(|bp| !bp.in_window).count(),
+            offered: self.ledger.offered,
+            dispatched: self.ledger.dispatched,
+            completed: self.ledger.completed,
+            rejected_power_cap: self.ledger.rejected_power_cap,
+            rejected_full: self.ledger.rejected_full,
+            rejected_deadline: self.ledger.rejected_deadline,
+            rejected_shard_lost: self.ledger.rejected_shard_lost,
+            requeued: self.ledger.requeued,
+            held: self.ledger.held_now,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The fleet simulation.
+// ---------------------------------------------------------------------------
+
+/// One scheduled reconfiguration window of a board, with its seeded
+/// duration already priced.
+struct BoardWindow {
+    /// Window start (the board goes dark).
+    t0: f64,
+    /// Window end (the board comes back with the new image).
+    t1: f64,
+    /// Index into the time-sorted plan (= [`FleetStats::reconfigs`] slot).
+    plan_idx: usize,
+    /// Dataset set of the incoming image.
+    datasets: Vec<String>,
+    /// Family filter of the incoming image.
+    family: DesignFilter,
+    /// Configuration-engine draw across the window (W).
+    reconfig_w: f64,
+}
+
+/// Balancer-side state of one board.
+struct BoardState {
+    name: String,
+    device: Device,
+    /// Datasets of the image currently loaded.
+    cur_datasets: Vec<String>,
+    /// The board gateway's priced routing table (mirror entry order).
+    table: Vec<PricedDesign>,
+    /// Scheduled windows, in time order.
+    windows: Vec<BoardWindow>,
+    /// First window not yet completed.
+    cursor: usize,
+    /// True while the board is dark.
+    in_window: bool,
+    /// Requests held for this board's incoming image (released when the
+    /// window ends).
+    held: VecDeque<SimRequest>,
+    /// Total dark time (s).
+    offline_s: f64,
+}
+
+impl BoardState {
+    /// Routing-table entries serving `ds` (the candidates a dispatch to
+    /// this board would land on).
+    fn serving_entries(&self, ds: &str) -> Vec<usize> {
+        (0..self.table.len()).filter(|&e| self.table[e].dataset == ds).collect()
+    }
+}
+
+/// The multi-gateway cluster: N boards on one discrete-event clock, a
+/// dispatch balancer, and the global power budget.  Construct from a
+/// [`FleetSpec`], optionally attach a snapshot sink, then [`run`] it.
+///
+/// [`run`]: FleetSim::run
+pub struct FleetSim {
+    spec: FleetSpec,
+    sims: Vec<SimGateway>,
+    boards: Vec<BoardState>,
+    shared: Rc<RefCell<Shared>>,
+    snap_every: Option<f64>,
+    snap_sink: Option<Box<dyn FnMut(&FleetSnapshot)>>,
+    /// Next grid time a snapshot is due at.
+    next_snap_s: f64,
+    /// Grid time of the last emitted snapshot (for final-snapshot dedup).
+    last_snap_s: f64,
+}
+
+impl FleetSim {
+    /// Build the fleet: validate the spec, price each board's image (with
+    /// the family filter applied at spec construction), install fault
+    /// plans for every reconfiguration window, wire outcome sinks and
+    /// autoscale gates into the shared budget, and check the initial
+    /// accounted draw fits under the cap.
+    pub fn new(spec: &FleetSpec) -> Result<FleetSim> {
+        if spec.datasets.is_empty() {
+            return Err(anyhow!("fleet spec lists no datasets"));
+        }
+        for (i, ds) in spec.datasets.iter().enumerate() {
+            if spec.datasets[..i].contains(ds) {
+                return Err(anyhow!("duplicate dataset {ds:?} in the fleet dataset list"));
+            }
+        }
+        if spec.boards.is_empty() {
+            return Err(anyhow!("fleet spec lists no boards"));
+        }
+        if let Some(cap) = spec.power_cap_w {
+            if !cap.is_finite() || cap <= 0.0 {
+                return Err(anyhow!("power_cap_w = {cap} is not a positive finite wattage"));
+            }
+        }
+        let mut devices = Vec::with_capacity(spec.boards.len());
+        for (i, bs) in spec.boards.iter().enumerate() {
+            if spec.boards[..i].iter().any(|o| o.name == bs.name) {
+                return Err(anyhow!("duplicate board name {:?}", bs.name));
+            }
+            if bs.shards == 0 {
+                return Err(anyhow!("board {:?} has zero shards", bs.name));
+            }
+            if bs.datasets.is_empty() {
+                return Err(anyhow!("board {:?} hosts no datasets", bs.name));
+            }
+            for (j, ds) in bs.datasets.iter().enumerate() {
+                if !spec.datasets.contains(ds) {
+                    return Err(anyhow!(
+                        "board {:?} hosts dataset {ds:?} which is not in the fleet dataset list",
+                        bs.name
+                    ));
+                }
+                if bs.datasets[..j].contains(ds) {
+                    return Err(anyhow!("board {:?} lists dataset {ds:?} twice", bs.name));
+                }
+            }
+            let device = Device::by_name(&bs.device)
+                .ok_or_else(|| anyhow!("board {:?}: unknown device {:?}", bs.name, bs.device))?;
+            devices.push(device);
+        }
+
+        // Price the reconfiguration plan: validate each event, then walk
+        // one seeded RNG in time order to fix the jittered durations.
+        for ev in &spec.reconfigs.events {
+            if !ev.t_s.is_finite() || ev.t_s <= 0.0 {
+                return Err(anyhow!(
+                    "reconfig t_s = {} is not a positive finite time",
+                    ev.t_s
+                ));
+            }
+            if !spec.boards.iter().any(|b| b.name == ev.board) {
+                return Err(anyhow!("reconfig targets unknown board {:?}", ev.board));
+            }
+            if ev.datasets.is_empty() {
+                return Err(anyhow!(
+                    "reconfig of board {:?} at t = {} s loads an image with no datasets",
+                    ev.board,
+                    ev.t_s
+                ));
+            }
+            for (j, ds) in ev.datasets.iter().enumerate() {
+                if !spec.datasets.contains(ds) {
+                    return Err(anyhow!(
+                        "reconfig of board {:?} loads dataset {ds:?} which is not in the fleet \
+                         dataset list",
+                        ev.board
+                    ));
+                }
+                if ev.datasets[..j].contains(ds) {
+                    return Err(anyhow!(
+                        "reconfig of board {:?} lists dataset {ds:?} twice",
+                        ev.board
+                    ));
+                }
+            }
+        }
+        let mut order: Vec<usize> = (0..spec.reconfigs.events.len()).collect();
+        order.sort_by(|&a, &b| {
+            spec.reconfigs.events[a]
+                .t_s
+                .partial_cmp(&spec.reconfigs.events[b].t_s)
+                .expect("validated finite")
+        });
+        let mut rng = Rng::new(spec.seed ^ RECONFIG_SEED_SALT);
+        let mut board_windows: Vec<Vec<BoardWindow>> = vec![Vec::new(); spec.boards.len()];
+        for (plan_idx, &ei) in order.iter().enumerate() {
+            let ev = &spec.reconfigs.events[ei];
+            let b = spec.boards.iter().position(|x| x.name == ev.board).expect("validated");
+            let device = devices[b];
+            let base = device.luts as f64 * RECONFIG_S_PER_LUT;
+            let duration = base * (1.0 - RECONFIG_JITTER / 2.0 + RECONFIG_JITTER * rng.f64());
+            board_windows[b].push(BoardWindow {
+                t0: ev.t_s,
+                t1: ev.t_s + duration,
+                plan_idx,
+                datasets: ev.datasets.clone(),
+                family: ev.family,
+                reconfig_w: device.luts as f64 * RECONFIG_W_PER_LUT,
+            });
+        }
+        for (b, ws) in board_windows.iter().enumerate() {
+            for pair in ws.windows(2) {
+                if pair[1].t0 < pair[0].t1 {
+                    return Err(anyhow!(
+                        "board {:?}: reconfig at t = {} s starts before the previous window \
+                         ends at t = {:.4} s (durations are seeded and device-sized)",
+                        spec.boards[b].name,
+                        pair[1].t0,
+                        pair[0].t1
+                    ));
+                }
+            }
+        }
+
+        // Coverage: at every instant some board must serve each dataset —
+        // online now, or dark with the dataset in its *incoming* image
+        // (arrivals are then held for the re-imaged board).  The serving
+        // set only changes at window edges, so checking t = 0 and every
+        // edge covers all of time.
+        let mut crit = vec![0.0];
+        for ws in &board_windows {
+            for w in ws {
+                crit.push(w.t0);
+                crit.push(w.t1);
+            }
+        }
+        for &tc in &crit {
+            for ds in &spec.datasets {
+                let served = spec.boards.iter().enumerate().any(|(b, bs)| {
+                    let ws = &board_windows[b];
+                    if let Some(w) = ws.iter().find(|w| w.t0 <= tc && tc < w.t1) {
+                        return w.datasets.iter().any(|d| d == ds);
+                    }
+                    let img: &[String] = ws
+                        .iter()
+                        .rev()
+                        .find(|w| w.t1 <= tc)
+                        .map(|w| w.datasets.as_slice())
+                        .unwrap_or(&bs.datasets);
+                    img.iter().any(|d| d == ds)
+                });
+                if !served {
+                    return Err(anyhow!(
+                        "dataset {ds:?} is served by no board at t = {tc} s (neither online \
+                         nor in a re-imaging board's incoming image); adjust the \
+                         reconfiguration plan"
+                    ));
+                }
+            }
+        }
+
+        let shared = Rc::new(RefCell::new(Shared {
+            cap_w: spec.power_cap_w,
+            boards: Vec::with_capacity(spec.boards.len()),
+            board_w: vec![0.0; spec.boards.len()],
+            fleet_w: 0.0,
+            peak_w: 0.0,
+            board_peak: vec![0.0; spec.boards.len()],
+            energy_j: 0.0,
+            board_energy: vec![0.0; spec.boards.len()],
+            t_last: 0.0,
+            autoscale_denied: 0,
+            ledger: FleetLedger::new(),
+        }));
+
+        let mut sims = Vec::with_capacity(spec.boards.len());
+        let mut boards = Vec::with_capacity(spec.boards.len());
+        for (b, bs) in spec.boards.iter().enumerate() {
+            let windows = std::mem::take(&mut board_windows[b]);
+            // The union image: every dataset the board ever hosts, with
+            // the per-dataset family set unioned across the images that
+            // host it (the family filter is realized here, at spec
+            // construction — the router itself routes by dataset only).
+            let mut allowed: Vec<(String, [bool; 2])> = Vec::new();
+            let mut images: Vec<(&[String], DesignFilter)> =
+                vec![(bs.datasets.as_slice(), bs.family)];
+            for w in &windows {
+                images.push((w.datasets.as_slice(), w.family));
+            }
+            for (dsets, family) in images {
+                for ds in dsets {
+                    let slot = match allowed.iter().position(|(n, _)| n == ds) {
+                        Some(i) => i,
+                        None => {
+                            allowed.push((ds.clone(), [false, false]));
+                            allowed.len() - 1
+                        }
+                    };
+                    allowed[slot].1[0] |= family.admits(true);
+                    allowed[slot].1[1] |= family.admits(false);
+                }
+            }
+            let union: Vec<String> = allowed.iter().map(|(n, _)| n.clone()).collect();
+            let mut specs =
+                fleet_board_specs(&spec.datasets, &union, devices[b], bs.shards, spec.seed)?;
+            specs.retain(|s| {
+                let is_snn = matches!(s.design, DesignKind::Snn { .. });
+                allowed
+                    .iter()
+                    .find(|(n, _)| *n == s.dataset)
+                    .map(|(_, f)| f[if is_snn { 0 } else { 1 }])
+                    .unwrap_or(false)
+            });
+            if specs.is_empty() {
+                return Err(anyhow!(
+                    "board {:?}: no design matches its images (family filter excluded \
+                     everything)",
+                    bs.name
+                ));
+            }
+            let mut sim = SimGateway::new(specs, &spec.gateway)?;
+            let table = sim.router().table();
+            // Every dataset of every image must survive pricing on this
+            // board's device, or traffic routed here would error.
+            for (ds, _) in &allowed {
+                if !table.iter().any(|p| &p.dataset == ds) {
+                    return Err(anyhow!(
+                        "board {:?}: no design serving dataset {ds:?} fits device {}",
+                        bs.name,
+                        devices[b].name
+                    ));
+                }
+            }
+            let draw: Vec<f64> =
+                (0..table.len()).map(|e| sim.router().draw(e).total()).collect();
+            let live: Vec<usize> = (0..table.len()).map(|e| sim.live_shards(e)).collect();
+            let slots: Vec<usize> = (0..table.len()).map(|e| sim.shard_slots(e)).collect();
+            let active: Vec<bool> = table
+                .iter()
+                .map(|p| bs.datasets.iter().any(|d| *d == p.dataset))
+                .collect();
+            let reserves: Vec<WinReserve> = windows
+                .iter()
+                .map(|w| WinReserve {
+                    reconfig_w: w.reconfig_w,
+                    target_active: table
+                        .iter()
+                        .map(|p| w.datasets.iter().any(|d| *d == p.dataset))
+                        .collect(),
+                })
+                .collect();
+            if !windows.is_empty() {
+                let mut events = Vec::with_capacity(windows.len() * 2);
+                for w in &windows {
+                    events.push(FaultEvent::kill_device(w.t0, devices[b].name));
+                    events.push(FaultEvent::recover_device(w.t1, devices[b].name));
+                }
+                sim.set_fault_plan(FaultPlan { events })?;
+            }
+            let sink_shared = Rc::clone(&shared);
+            sim.set_outcome_sink(move |o| sink_shared.borrow_mut().ledger.fold_outcome(&o))?;
+            let gate_shared = Rc::clone(&shared);
+            sim.set_scale_gate(move |idx, _draw| gate_shared.borrow_mut().try_grow(b, idx))?;
+            {
+                let mut sh = shared.borrow_mut();
+                sh.boards.push(BoardPower {
+                    draw,
+                    live,
+                    slots,
+                    active,
+                    in_window: false,
+                    windows: reserves,
+                    cursor: 0,
+                });
+                sh.refresh_board(b);
+            }
+            sims.push(sim);
+            boards.push(BoardState {
+                name: bs.name.clone(),
+                device: devices[b],
+                cur_datasets: bs.datasets.clone(),
+                table,
+                windows,
+                cursor: 0,
+                in_window: false,
+                held: VecDeque::new(),
+                offline_s: 0.0,
+            });
+        }
+
+        {
+            let sh = shared.borrow();
+            if let Some(cap) = sh.cap_w {
+                if sh.fleet_w > cap + CAP_EPS {
+                    return Err(anyhow!(
+                        "initial fleet draw {:.2} W exceeds power_cap_w = {cap} W; raise the \
+                         cap or shrink the fleet",
+                        sh.fleet_w
+                    ));
+                }
+            }
+        }
+
+        Ok(FleetSim {
+            spec: spec.clone(),
+            sims,
+            boards,
+            shared,
+            snap_every: None,
+            snap_sink: None,
+            next_snap_s: 0.0,
+            last_snap_s: -1.0,
+        })
+    }
+
+    /// Emit a [`FleetSnapshot`] into `sink` every `every_s` simulated
+    /// seconds while arrivals and windows are in flight, plus one final
+    /// snapshot at the horizon.  Grid points falling in the post-drain
+    /// tail (after the last arrival and window, where outcomes fold in
+    /// one batch) are skipped — only the final snapshot reports that
+    /// region.  Install before [`run`](FleetSim::run).
+    pub fn set_snapshot_sink(
+        &mut self,
+        every_s: f64,
+        sink: impl FnMut(&FleetSnapshot) + 'static,
+    ) -> Result<()> {
+        if !(every_s > 0.0) || !every_s.is_finite() {
+            return Err(anyhow!("snapshot period {every_s} must be a positive finite time"));
+        }
+        self.snap_every = Some(every_s);
+        self.snap_sink = Some(Box::new(sink));
+        self.next_snap_s = every_s;
+        Ok(())
+    }
+
+    /// Emit the snapshot due at grid time `ts`.
+    fn emit_snapshot_at(&mut self, ts: f64) {
+        let snap = {
+            let mut sh = self.shared.borrow_mut();
+            sh.integrate_to(ts);
+            sh.snapshot(ts)
+        };
+        if let Some(sink) = &mut self.snap_sink {
+            sink(&snap);
+        }
+        self.last_snap_s = ts;
+        self.next_snap_s += self.snap_every.expect("sink installed");
+    }
+
+    /// Re-read board `b`'s live/slot counts from its gateway into the
+    /// power mirror (autoscale-down and queue drains shrink them outside
+    /// the gate's sight; shrinking only ever lowers the accounted draw).
+    fn repoll(&mut self, b: usize) {
+        let mut sh = self.shared.borrow_mut();
+        let bp = &mut sh.boards[b];
+        for e in 0..bp.live.len() {
+            bp.live[e] = self.sims[b].live_shards(e);
+            bp.slots[e] = self.sims[b].shard_slots(e);
+        }
+        sh.refresh_board(b);
+    }
+
+    /// Apply window edges and emit due snapshots up to simulated time
+    /// `t`, in event order (snapshots win ties so they observe the
+    /// pre-edge state).
+    fn process_until(&mut self, t: f64) -> Result<()> {
+        loop {
+            let mut edge: Option<(f64, usize)> = None;
+            for (b, bs) in self.boards.iter().enumerate() {
+                let next = if bs.in_window {
+                    Some(bs.windows[bs.cursor].t1)
+                } else if bs.cursor < bs.windows.len() {
+                    Some(bs.windows[bs.cursor].t0)
+                } else {
+                    None
+                };
+                if let Some(ts) = next {
+                    if ts <= t && edge.map_or(true, |(et, _)| ts < et) {
+                        edge = Some((ts, b));
+                    }
+                }
+            }
+            let snap = match (self.snap_every, &self.snap_sink) {
+                (Some(_), Some(_)) if self.next_snap_s <= t => Some(self.next_snap_s),
+                _ => None,
+            };
+            match (snap, edge) {
+                (Some(ts), Some((et, _))) if ts <= et => self.emit_snapshot_at(ts),
+                (Some(ts), None) => self.emit_snapshot_at(ts),
+                (_, Some((et, b))) => self.apply_edge(b, et)?,
+                (None, None) => return Ok(()),
+            }
+        }
+    }
+
+    /// Apply one window edge of board `b` at time `ts`: `t0` takes the
+    /// board dark (the gateway's own fault plan requeues its in-flight
+    /// work lazily at the next offer); `t1` brings it back with the new
+    /// image and releases held requests.
+    fn apply_edge(&mut self, b: usize, ts: f64) -> Result<()> {
+        self.shared.borrow_mut().integrate_to(ts);
+        if !self.boards[b].in_window {
+            let bs = &mut self.boards[b];
+            bs.in_window = true;
+            bs.offline_s += bs.windows[bs.cursor].t1 - ts;
+            let mut sh = self.shared.borrow_mut();
+            let bp = &mut sh.boards[b];
+            bp.in_window = true;
+            for e in 0..bp.live.len() {
+                bp.live[e] = 0;
+            }
+            sh.refresh_board(b);
+        } else {
+            {
+                let bs = &mut self.boards[b];
+                let w = &bs.windows[bs.cursor];
+                bs.cur_datasets = w.datasets.clone();
+                bs.in_window = false;
+                bs.cursor += 1;
+            }
+            {
+                let mut sh = self.shared.borrow_mut();
+                let bp = &mut sh.boards[b];
+                bp.in_window = false;
+                // A device-wide recovery revives every provisioned slot.
+                for e in 0..bp.live.len() {
+                    bp.live[e] = bp.slots[e];
+                }
+                let ta = bp.windows[bp.cursor].target_active.clone();
+                bp.active.copy_from_slice(&ta);
+                bp.cursor += 1;
+                sh.refresh_board(b);
+            }
+            // Release held requests at the recovery instant.  Their
+            // deadline clock restarts from here — the hold is a
+            // scheduling grace, not a latency pass (module docs).
+            while let Some(mut req) = self.boards[b].held.pop_front() {
+                req.arrival_s = ts;
+                self.shared.borrow_mut().ledger.held_now -= 1;
+                self.shared.borrow_mut().ledger.dispatched += 1;
+                self.sims[b].offer(req)?;
+                self.repoll(b);
+            }
+            self.repoll(b);
+        }
+        Ok(())
+    }
+
+    /// Route one arrival: dispatch to the best online board hosting its
+    /// dataset, hold for a re-imaging board whose incoming image hosts
+    /// it, or refuse under the power cap when every candidate is
+    /// saturated and no affordable capacity growth exists.
+    fn dispatch(&mut self, a: &Arrival, t: f64, pools: &[DatasetPool]) -> Result<()> {
+        {
+            let mut sh = self.shared.borrow_mut();
+            sh.integrate_to(t);
+            sh.ledger.offered += 1;
+        }
+        let ds = pools[a.dataset].name.clone();
+        let online: Vec<usize> = (0..self.boards.len())
+            .filter(|&b| {
+                !self.boards[b].in_window && self.boards[b].cur_datasets.iter().any(|d| *d == ds)
+            })
+            .collect();
+        if online.is_empty() {
+            // Hold for the re-imaging board that comes back soonest with
+            // the dataset in its incoming image.
+            let mut best: Option<(f64, usize)> = None;
+            for (b, bs) in self.boards.iter().enumerate() {
+                if !bs.in_window {
+                    continue;
+                }
+                let w = &bs.windows[bs.cursor];
+                if w.datasets.iter().any(|d| *d == ds)
+                    && best.map_or(true, |(t1, _)| w.t1 < t1)
+                {
+                    best = Some((w.t1, b));
+                }
+            }
+            let Some((_, b)) = best else {
+                return Err(anyhow!(
+                    "no board serves dataset {ds:?} at t = {t} s (coverage validation should \
+                     have caught this)"
+                ));
+            };
+            let mut sh = self.shared.borrow_mut();
+            if self.boards[b].held.len() >= self.spec.gateway.queue_cap {
+                sh.ledger.rejected_full += 1;
+                sh.ledger.digest.fold("!hold_full", false);
+            } else {
+                sh.ledger.held_now += 1;
+                sh.ledger.held_total += 1;
+                sh.ledger.digest.fold(&self.boards[b].name, true);
+                drop(sh);
+                self.boards[b].held.push_back(SimRequest {
+                    dataset: ds,
+                    x: pools[a.dataset].images[a.image].clone(),
+                    slo: a.slo.clone(),
+                    arrival_s: 0.0, // stamped at release
+                });
+            }
+            return Ok(());
+        }
+        // Power-cap refusal: every online candidate is saturated AND the
+        // cheapest capacity growth anywhere would breach the cap — the
+        // request is refused *by the budget*, not by a queue.
+        if let Some(cap) = self.spec.power_cap_w {
+            let queue_cap = self.spec.gateway.queue_cap;
+            let saturated = online.iter().all(|&b| {
+                self.boards[b]
+                    .serving_entries(&ds)
+                    .iter()
+                    .all(|&e| self.sims[b].queued_depth(e) >= queue_cap)
+            });
+            if saturated {
+                let sh = self.shared.borrow();
+                let mut min_inc = f64::INFINITY;
+                for &b in &online {
+                    for e in self.boards[b].serving_entries(&ds) {
+                        min_inc = min_inc.min(sh.grow_inc(b, e));
+                    }
+                }
+                if sh.fleet_w + min_inc > cap + CAP_EPS {
+                    drop(sh);
+                    let mut sh = self.shared.borrow_mut();
+                    sh.ledger.rejected_power_cap += 1;
+                    sh.ledger.digest.fold("!power_cap", false);
+                    return Ok(());
+                }
+            }
+        }
+        // Least-loaded board first (queued per live serving shard), then
+        // cheapest priced energy, then lowest board index.
+        let key = |b: usize| -> (f64, f64) {
+            let ents = self.boards[b].serving_entries(&ds);
+            let queued: usize = ents.iter().map(|&e| self.sims[b].queued_depth(e)).sum();
+            let live: usize = ents.iter().map(|&e| self.sims[b].live_shards(e)).sum();
+            let ratio = queued as f64 / live.max(1) as f64;
+            let energy = ents
+                .iter()
+                .map(|&e| self.boards[b].table[e].energy_j)
+                .fold(f64::INFINITY, f64::min);
+            (ratio, energy)
+        };
+        let mut best = online[0];
+        let mut best_key = key(best);
+        for &b in &online[1..] {
+            let k = key(b);
+            let better = match k.0.total_cmp(&best_key.0) {
+                std::cmp::Ordering::Less => true,
+                std::cmp::Ordering::Greater => false,
+                std::cmp::Ordering::Equal => k.1.total_cmp(&best_key.1).is_lt(),
+            };
+            if better {
+                best = b;
+                best_key = k;
+            }
+        }
+        {
+            let mut sh = self.shared.borrow_mut();
+            sh.ledger.dispatched += 1;
+            sh.ledger.digest.fold(&self.boards[best].name, false);
+        }
+        self.sims[best].offer(SimRequest {
+            dataset: ds,
+            x: pools[a.dataset].images[a.image].clone(),
+            slo: a.slo.clone(),
+            arrival_s: t,
+        })?;
+        self.repoll(best);
+        Ok(())
+    }
+
+    /// Run the fleet to completion and fold everything into
+    /// [`FleetStats`].
+    pub fn run(mut self) -> Result<FleetStats> {
+        let pools = fleet_pools(&self.spec.datasets, self.spec.seed)?;
+        let cfg = self.spec.loadgen.clone();
+        let mut t = 0.0f64;
+        let arrivals: Vec<Arrival> = ArrivalGen::new(&cfg, &pools).collect();
+        for a in &arrivals {
+            t += a.delay.as_secs_f64();
+            self.process_until(t)?;
+            self.dispatch(a, t, &pools)?;
+        }
+        // Windows past the last arrival still complete (held releases
+        // included).
+        let wend = self
+            .boards
+            .iter()
+            .filter_map(|b| b.windows.last().map(|w| w.t1))
+            .fold(t, f64::max);
+        if wend > t {
+            self.process_until(wend)?;
+        }
+        // Drain every board to its end of work.
+        let ledgers: Vec<RunLedger> = self.sims.iter_mut().map(|s| s.finish()).collect();
+        let horizon = ledgers.iter().fold(wend, |h, l| h.max(l.end_s));
+        self.shared.borrow_mut().integrate_to(horizon);
+        if self.snap_sink.is_some() && self.last_snap_s < horizon {
+            let snap = self.shared.borrow().snapshot(horizon);
+            if let Some(sink) = &mut self.snap_sink {
+                sink(&snap);
+            }
+        }
+        let gstats: Vec<GatewayStats> = self.sims.into_iter().map(|s| s.shutdown()).collect();
+
+        // Price the reconfiguration records from the windows plus the
+        // fault records the gateways actually logged at the kill edge.
+        let n_plans = self.spec.reconfigs.events.len();
+        let mut records: Vec<Option<ReconfigRecord>> = (0..n_plans).map(|_| None).collect();
+        for (b, bs) in self.boards.iter().enumerate() {
+            for w in &bs.windows {
+                let (mut lost, mut requeued) = (0, 0);
+                for f in &gstats[b].faults {
+                    if f.action == "kill" && f.t_s == w.t0 {
+                        lost += f.lost;
+                        requeued += f.requeued;
+                    }
+                }
+                records[w.plan_idx] = Some(ReconfigRecord {
+                    t_s: w.t0,
+                    board: bs.name.clone(),
+                    duration_s: w.t1 - w.t0,
+                    energy_j: w.reconfig_w * (w.t1 - w.t0),
+                    datasets: w.datasets.clone(),
+                    family: w.family,
+                    requeued,
+                    lost,
+                });
+            }
+        }
+        let reconfigs: Vec<ReconfigRecord> =
+            records.into_iter().map(|r| r.expect("every plan slot priced")).collect();
+        let reconfig_energy_j: f64 = reconfigs.iter().map(|r| r.energy_j).sum();
+
+        let sh = self.shared.borrow();
+        let boards: Vec<BoardStats> = self
+            .boards
+            .iter()
+            .enumerate()
+            .map(|(b, bs)| {
+                let l = &ledgers[b];
+                BoardStats {
+                    name: bs.name.clone(),
+                    device: bs.device.name.to_string(),
+                    offered: l.offered,
+                    admitted: l.admitted,
+                    completed: l.completed,
+                    failed: l.failed,
+                    rejected_full: l.rejected_full,
+                    rejected_deadline: l.rejected_deadline,
+                    rejected_shard_lost: l.rejected_shard_lost,
+                    requeued: l.requeued,
+                    deadline_misses: l.deadline_misses,
+                    slo_misses: l.slo_misses,
+                    p50_service_ms: l.service.quantile(0.5).map_or(0.0, |s| s * 1e3),
+                    p99_service_ms: l.service.quantile(0.99).map_or(0.0, |s| s * 1e3),
+                    energy_j: sh.board_energy[b],
+                    peak_power_w: sh.board_peak[b],
+                    offline_s: bs.offline_s,
+                    reconfigs: bs.windows.len(),
+                    decision_digest: l.decision_digest.value(),
+                }
+            })
+            .collect();
+        let fl = &sh.ledger;
+        Ok(FleetStats {
+            power_cap_w: sh.cap_w,
+            peak_power_w: sh.peak_w,
+            mean_power_w: if horizon > 0.0 { sh.energy_j / horizon } else { 0.0 },
+            energy_j: sh.energy_j,
+            reconfig_energy_j,
+            horizon_s: horizon,
+            offered: fl.offered,
+            dispatched: fl.dispatched,
+            admitted: ledgers.iter().map(|l| l.admitted).sum(),
+            completed: fl.completed,
+            failed: fl.failed,
+            rejected_power_cap: fl.rejected_power_cap,
+            rejected_full: fl.rejected_full,
+            rejected_deadline: fl.rejected_deadline,
+            rejected_shard_lost: fl.rejected_shard_lost,
+            requeued: fl.requeued,
+            held_total: fl.held_total,
+            autoscale_denied: sh.autoscale_denied,
+            deadline_misses: fl.deadline_misses,
+            slo_misses: fl.slo_misses,
+            p50_service_ms: fl.service.quantile(0.5).map_or(0.0, |s| s * 1e3),
+            p99_service_ms: fl.service.quantile(0.99).map_or(0.0, |s| s * 1e3),
+            decision_digest: fl.digest.value(),
+            reconfigs,
+            boards,
+        })
+    }
+}
+
+/// Build and run the fleet a [`FleetSpec`] describes — the one-call
+/// entrypoint `repro fleet` uses.
+pub fn run_fleet(spec: &FleetSpec) -> Result<FleetStats> {
+    FleetSim::new(spec)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::wire;
+
+    #[test]
+    fn design_filter_parse() {
+        for f in [DesignFilter::Snn, DesignFilter::Cnn, DesignFilter::Mixed] {
+            assert_eq!(DesignFilter::parse(f.as_str()), Some(f));
+        }
+        assert_eq!(DesignFilter::parse("SNN"), Some(DesignFilter::Snn));
+        assert_eq!(DesignFilter::parse("dsp"), None);
+    }
+
+    /// Cheap validation paths: every one of these fails before any board
+    /// is priced.
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let base = FleetSpec::demo();
+
+        let mut s = base.clone();
+        s.datasets.clear();
+        assert!(FleetSim::new(&s).unwrap_err().to_string().contains("no datasets"));
+
+        let mut s = base.clone();
+        s.boards.clear();
+        assert!(FleetSim::new(&s).unwrap_err().to_string().contains("no boards"));
+
+        let mut s = base.clone();
+        s.boards[0].device = "de10-nano".into();
+        assert!(FleetSim::new(&s).unwrap_err().to_string().contains("unknown device"));
+
+        let mut s = base.clone();
+        s.boards[1].name = "pynq-0".into();
+        assert!(FleetSim::new(&s).unwrap_err().to_string().contains("duplicate board"));
+
+        let mut s = base.clone();
+        s.boards[0].datasets = vec!["imagenet".into()];
+        assert!(FleetSim::new(&s)
+            .unwrap_err()
+            .to_string()
+            .contains("not in the fleet dataset list"));
+
+        let mut s = base.clone();
+        s.power_cap_w = Some(0.0);
+        assert!(FleetSim::new(&s).unwrap_err().to_string().contains("positive finite"));
+
+        let mut s = base.clone();
+        s.reconfigs.events[0].board = "pynq-9".into();
+        assert!(FleetSim::new(&s).unwrap_err().to_string().contains("unknown board"));
+
+        // Re-imaging pynq-1 to SVHN-only leaves CIFAR with no server —
+        // neither online nor in any incoming image.
+        let mut s = base.clone();
+        s.reconfigs.events[0].datasets = vec!["svhn".into()];
+        assert!(FleetSim::new(&s).unwrap_err().to_string().contains("served by no board"));
+    }
+
+    /// A cap below the fleet's initial accounted draw is refused at
+    /// construction, not discovered mid-run.
+    #[test]
+    fn infeasible_cap_is_a_construction_error() {
+        let mut s = FleetSpec::demo();
+        s.power_cap_w = Some(1.0);
+        assert!(FleetSim::new(&s).unwrap_err().to_string().contains("exceeds power_cap_w"));
+    }
+
+    /// The demo fleet: request conservation, the cap invariant in every
+    /// snapshot, the hold path, and a priced reconfiguration record.
+    #[test]
+    fn demo_fleet_conserves_and_respects_cap() {
+        let spec = FleetSpec::demo();
+        let cap = spec.power_cap_w.expect("demo has a cap");
+        let mut sim = FleetSim::new(&spec).expect("demo constructs");
+        let snaps = Rc::new(RefCell::new(Vec::new()));
+        let sink = Rc::clone(&snaps);
+        sim.set_snapshot_sink(0.002, move |s| sink.borrow_mut().push(s.clone()))
+            .expect("sink installs");
+        let stats = sim.run().expect("demo runs");
+
+        assert_eq!(stats.offered, 64);
+        assert_eq!(
+            stats.offered,
+            stats.completed + stats.rejected(),
+            "every offered request reaches exactly one terminal outcome"
+        );
+        assert!(stats.held_total > 0, "CIFAR arrivals should hold during the window");
+        assert!(stats.completed > 0);
+        assert!(stats.peak_power_w <= cap + 1e-6);
+        assert!(stats.energy_j > 0.0);
+        assert!((stats.mean_power_w * stats.horizon_s - stats.energy_j).abs() < 1e-9);
+
+        assert_eq!(stats.reconfigs.len(), 1);
+        let r = &stats.reconfigs[0];
+        assert_eq!(r.board, "pynq-1");
+        assert!(r.duration_s > 0.0 && r.energy_j > 0.0);
+        assert!((stats.reconfig_energy_j - r.energy_j).abs() < 1e-12);
+        assert!(stats.horizon_s >= r.t_s + r.duration_s);
+        let pynq1 = stats.boards.iter().find(|b| b.name == "pynq-1").expect("board stats");
+        assert_eq!(pynq1.reconfigs, 1);
+        assert!((pynq1.offline_s - r.duration_s).abs() < 1e-12);
+
+        // Per-board conservation (boards never reject on power — the
+        // budget gates their autoscaler instead).
+        for b in &stats.boards {
+            assert_eq!(
+                b.offered,
+                b.completed + b.rejected_full + b.rejected_deadline + b.rejected_shard_lost,
+                "board {}",
+                b.name
+            );
+        }
+
+        let snaps = snaps.borrow();
+        assert!(!snaps.is_empty());
+        let mut prev = 0.0;
+        for s in snaps.iter() {
+            assert!(s.t_s > prev, "snapshot times strictly increase");
+            prev = s.t_s;
+            assert!(s.fleet_power_w <= cap + 1e-6, "cap breached at t = {} s", s.t_s);
+        }
+        assert!(
+            snaps.iter().any(|s| s.boards_online == 2),
+            "some snapshot should observe the dark board"
+        );
+    }
+
+    /// Same spec, two fresh fleets, byte-identical wire output.
+    #[test]
+    fn demo_fleet_is_byte_deterministic() {
+        let a = wire::to_text(&run_fleet(&FleetSpec::demo()).expect("run 1"));
+        let b = wire::to_text(&run_fleet(&FleetSpec::demo()).expect("run 2"));
+        assert_eq!(a, b);
+    }
+}

@@ -64,6 +64,7 @@ use anyhow::{anyhow, Result};
 
 use crate::cnn_accel::config::CnnDesign;
 use crate::fpga::device::Device;
+use crate::fpga::power::{Activity, DesignDraw, DesignFamily, PowerEstimator};
 use crate::fpga::resources::ResourceUsage;
 use crate::nn::arch::parse_arch;
 use crate::nn::network::{argmax, Network};
@@ -546,6 +547,12 @@ enum Pricing {
 struct RoutedDesign {
     priced: PricedDesign,
     pricing: Pricing,
+    /// Per-shard wall-socket draw on the entry's own device, memoized at
+    /// construction (the fleet power budget reads it on every admission
+    /// and autoscale decision — re-deriving it there would put the
+    /// `PowerEstimator` back on the hot path).  SNNs are priced at
+    /// nominal (always-busy) activity, CNNs at their pipeline duty.
+    draw: DesignDraw,
 }
 
 /// A routing decision: which design serves the request and at what priced
@@ -597,14 +604,14 @@ impl Router {
     fn price_spec(spec: &ExecutorSpec) -> std::result::Result<RoutedDesign, String> {
         match &spec.design {
             DesignKind::Snn { design, t_steps, v_th, representative } => {
-                design
-                    .resources_on(&spec.device)
-                    .check_fits(&spec.device)
-                    .map_err(|e| e.to_string())?;
+                let res = design.resources_on(&spec.device);
+                res.check_fits(&spec.device).map_err(|e| e.to_string())?;
                 let acc = SnnAccelerator::new(design, &spec.net, *t_steps, *v_th);
                 let functional = snn_infer(&spec.net, representative, *t_steps, *v_th);
                 let trace = acc.trace(&functional);
                 let r = acc.cost(&trace, &spec.device);
+                let draw = PowerEstimator::new(spec.device, DesignFamily::Snn)
+                    .shard_draw(&res, Activity::nominal());
                 Ok(RoutedDesign {
                     priced: PricedDesign {
                         name: design.name.to_string(),
@@ -621,6 +628,7 @@ impl Router {
                         v_th: *v_th,
                         trace,
                     },
+                    draw,
                 })
             }
             DesignKind::Cnn { design, arch, input_shape } => {
@@ -630,6 +638,8 @@ impl Router {
                     .map_err(|e| e.to_string())?;
                 parse_arch(arch).map_err(|e| e.to_string())?;
                 let m = cnn_metrics(design, *input_shape, arch, &spec.device);
+                let draw =
+                    DesignDraw { static_w: m.power.static_w(), dynamic_w: m.power.dynamic_w() };
                 Ok(RoutedDesign {
                     priced: PricedDesign {
                         name: design.name.to_string(),
@@ -640,6 +650,7 @@ impl Router {
                         energy_j: m.energy_j,
                     },
                     pricing: Pricing::Cnn,
+                    draw,
                 })
             }
         }
@@ -656,6 +667,15 @@ impl Router {
     pub fn price(&self, idx: usize) -> (f64, f64) {
         let p = &self.designs[idx].priced;
         (p.latency_s, p.energy_j)
+    }
+
+    /// Memoized per-shard wall-socket draw of design `idx` on its own
+    /// device, computed once at construction ([`PowerEstimator`] at
+    /// nominal activity for SNNs, pipeline-duty activity for CNNs).
+    /// Equal to re-deriving through [`PowerEstimator::shard_draw`] —
+    /// pinned by `tests/fleet.rs::memoized_draw_matches_unmemoized`.
+    pub fn draw(&self, idx: usize) -> DesignDraw {
+        self.designs[idx].draw
     }
 
     /// Re-price design `idx` on an arbitrary device via the two-stage
@@ -923,6 +943,7 @@ impl FromJson for DesignStats {
 /// assert_eq!(RejectReason::QueueFull.as_str(), "queue_full");
 /// assert_eq!(RejectReason::DeadlineUnmeetable.as_str(), "deadline");
 /// assert_eq!(RejectReason::ShardLost.as_str(), "shard_lost");
+/// assert_eq!(RejectReason::PowerCap.as_str(), "power_cap");
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RejectReason {
@@ -937,6 +958,13 @@ pub enum RejectReason {
     /// was dead at the end of the run.  Unlike the other two reasons this
     /// one is issued *after* admission.
     ShardLost,
+    /// Fleet-level admission refusal: every board that could serve the
+    /// request was saturated, and growing capacity anywhere would push
+    /// the summed board draw past the cluster watt cap
+    /// ([`crate::coordinator::fleet`]'s power budget).  Issued by the
+    /// fleet balancer *before* any per-board offer, so it never
+    /// subtracts from a board's `admitted`.
+    PowerCap,
 }
 
 impl RejectReason {
@@ -946,6 +974,7 @@ impl RejectReason {
             RejectReason::QueueFull => "queue_full",
             RejectReason::DeadlineUnmeetable => "deadline",
             RejectReason::ShardLost => "shard_lost",
+            RejectReason::PowerCap => "power_cap",
         }
     }
 }
@@ -2239,6 +2268,10 @@ pub struct RunLedger {
     pub rejected_deadline: usize,
     /// Requests lost to shard faults.
     pub rejected_shard_lost: usize,
+    /// Fleet-level refusals: admitting (or growing capacity for) the
+    /// request would breach the cluster watt cap.  Only the fleet
+    /// balancer charges this — a standalone gateway run keeps it 0.
+    pub rejected_power_cap: usize,
     /// Requeue events off dying shards (counted live, per member).
     pub requeued: usize,
     /// Completions after the request's deadline.
@@ -2271,6 +2304,7 @@ impl RunLedger {
             rejected_full: 0,
             rejected_deadline: 0,
             rejected_shard_lost: 0,
+            rejected_power_cap: 0,
             requeued: 0,
             deadline_misses: 0,
             slo_misses: 0,
@@ -2286,7 +2320,10 @@ impl RunLedger {
 
     /// Total rejections across all reasons.
     pub fn rejected(&self) -> usize {
-        self.rejected_full + self.rejected_deadline + self.rejected_shard_lost
+        self.rejected_full
+            + self.rejected_deadline
+            + self.rejected_shard_lost
+            + self.rejected_power_cap
     }
 
     /// Fold one terminal outcome.  `offered`/`admitted`/`requeued` are
@@ -2302,6 +2339,7 @@ impl RunLedger {
                     RejectReason::QueueFull => self.rejected_full += 1,
                     RejectReason::DeadlineUnmeetable => self.rejected_deadline += 1,
                     RejectReason::ShardLost => self.rejected_shard_lost += 1,
+                    RejectReason::PowerCap => self.rejected_power_cap += 1,
                 }
             }
             None => {
@@ -2465,6 +2503,9 @@ pub struct SimGateway {
     fault_log: Vec<FaultRecord>,
     last_arrival_s: f64,
     finished: bool,
+    /// Optional veto consulted before every autoscaler growth — the
+    /// fleet watt cap's hook into per-board scaling decisions.
+    scale_gate: Option<Box<dyn FnMut(usize, DesignDraw) -> bool>>,
 }
 
 impl SimGateway {
@@ -2575,7 +2616,26 @@ impl SimGateway {
             fault_log: Vec::new(),
             last_arrival_s: 0.0,
             finished: false,
+            scale_gate: None,
         })
+    }
+
+    /// Install a capacity gate consulted before every autoscaler growth
+    /// (the fleet watt cap's hook).  `gate(idx, draw)` receives the
+    /// design's router-table index and the memoized per-shard
+    /// [`DesignDraw`] one more shard would add; returning `false` vetoes
+    /// the growth.  Growth is unconditional once the gate approves, so a
+    /// `true` return must be accounted by the gate's own ledger.  Must be
+    /// installed before the first offer, like the sinks.
+    pub fn set_scale_gate(
+        &mut self,
+        gate: impl FnMut(usize, DesignDraw) -> bool + 'static,
+    ) -> Result<()> {
+        if self.finished || self.hub.ledger.offered > 0 {
+            return Err(anyhow!("scale gate must be installed before the first offer"));
+        }
+        self.scale_gate = Some(Box::new(gate));
+        Ok(())
     }
 
     /// Install a chaos schedule.  Must happen before the first offer
@@ -2692,6 +2752,22 @@ impl SimGateway {
     /// Live shard count of design `idx` (router-table order) right now.
     pub fn live_shards(&self, idx: usize) -> usize {
         self.entries[idx].live
+    }
+
+    /// Queued (admitted, not yet dispatched) requests of design `idx`
+    /// right now, summed across SLO classes.  Stale by up to one advance
+    /// step — queues only drain when the entry's clock moves — which is
+    /// fine for the fleet balancer's saturation check.
+    pub fn queued_depth(&self, idx: usize) -> usize {
+        self.entries[idx].queued()
+    }
+
+    /// Total shard slots ever allocated for design `idx` (live + dead).
+    /// A device-wide recover fault revives *every* dead slot, so this is
+    /// the exact post-recovery live count — the fleet power budget
+    /// reserves against it across a reconfiguration window.
+    pub fn shard_slots(&self, idx: usize) -> usize {
+        self.entries[idx].shards.len()
     }
 
     /// Offer one request at its simulated arrival time.  Routing,
@@ -3136,6 +3212,14 @@ impl SimGateway {
         if depth > 0 && depth >= auto.up_depth.max(1) * e.live && e.live < auto.max_shards {
             if e.shard_resources.scaled(e.live + 1).check_fits(&e.device).is_err() {
                 return; // one more shard would not fit the device
+            }
+            // The fleet watt cap gets a veto after the fit check: one
+            // more shard adds its full memoized draw to the board.
+            let draw = self.router.designs[idx].draw;
+            if let Some(gate) = self.scale_gate.as_mut() {
+                if !gate(idx, draw) {
+                    return; // growth would breach the cluster watt cap
+                }
             }
             // Revive the lowest-index killed slot if there is one (this
             // is the recovery path after fault injection — with a dead

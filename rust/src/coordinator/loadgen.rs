@@ -1327,6 +1327,76 @@ pub fn synthetic_specs(
     Ok((specs, pools))
 }
 
+/// Image pools for the fleet's *global* dataset list, in list order.
+///
+/// Substrate seeding depends on a dataset's index in the list it was
+/// built from, so the fleet layer derives everything — pools here, board
+/// executor fleets in [`fleet_board_specs`] — from one global list:
+/// every board serving `"svhn"` then shares bit-identical weights and
+/// images with the load generator, whatever subset of datasets the board
+/// itself hosts.
+pub fn fleet_pools(datasets: &[String], seed: u64) -> Result<Vec<DatasetPool>> {
+    let mut pools = Vec::with_capacity(datasets.len());
+    for (di, ds) in datasets.iter().enumerate() {
+        let sub = dataset_substrate(ds, di, seed)?;
+        pools.push(DatasetPool { name: ds.clone(), images: sub.images });
+    }
+    Ok(pools)
+}
+
+/// Executor specs for one fleet board hosting `subset` of the fleet's
+/// `global` dataset list: every published SNN and CNN design of each
+/// subset dataset on `device`, `shards` shards each.  Substrates are
+/// seeded by each dataset's index in `global` — *not* its index in
+/// `subset` — so two boards hosting the same dataset (or a board and the
+/// [`fleet_pools`] generator) agree bit for bit.  Errors on a subset
+/// dataset missing from `global` or unknown to [`dataset_arch`].
+pub fn fleet_board_specs(
+    global: &[String],
+    subset: &[String],
+    device: Device,
+    shards: usize,
+    seed: u64,
+) -> Result<Vec<ExecutorSpec>> {
+    let mut specs = Vec::new();
+    for ds in subset {
+        let di = global
+            .iter()
+            .position(|g| g == ds)
+            .ok_or_else(|| anyhow::anyhow!("dataset {ds:?} not in the fleet dataset list"))?;
+        let sub = dataset_substrate(ds, di, seed)?;
+        let representative = sub.images[0].clone();
+        for design in snn_config::all_designs().into_iter().filter(|d| d.dataset == *ds) {
+            specs.push(ExecutorSpec {
+                dataset: ds.clone(),
+                device,
+                shards,
+                net: sub.snn_net.clone(),
+                design: DesignKind::Snn {
+                    design,
+                    t_steps: SYNTH_T_STEPS,
+                    v_th: SYNTH_V_TH,
+                    representative: representative.clone(),
+                },
+            });
+        }
+        for design in cnn_config::all_designs().into_iter().filter(|d| d.dataset == *ds) {
+            specs.push(ExecutorSpec {
+                dataset: ds.clone(),
+                device,
+                shards,
+                net: sub.cnn_net.clone(),
+                design: DesignKind::Cnn {
+                    design,
+                    arch: sub.arch.to_string(),
+                    input_shape: sub.input_shape,
+                },
+            });
+        }
+    }
+    Ok(specs)
+}
+
 // ---------------------------------------------------------------------------
 // Deployment specs (file-driven gateway + scenario configuration).
 // ---------------------------------------------------------------------------

@@ -30,16 +30,29 @@
 //!   [`loadgen::DeploymentSpec`] file format that configure whole
 //!   deployments; [`loadgen::simulate`] replays a workload through the
 //!   discrete-event stack, [`loadgen::drive`] through the threaded one.
+//! * [`fleet`] — the multi-gateway cluster: N boards ([`SimGateway`]s)
+//!   on one discrete-event clock behind a dispatch balancer, a global
+//!   watt budget gating admission and shard autoscaling fleet-wide
+//!   ([`RejectReason::PowerCap`]), and FPGA partial reconfiguration as
+//!   a first-class scheduling cost — re-image windows take a board dark
+//!   for a seeded, device-sized duration, charge joules, and requeue
+//!   in-flight work through the fault machinery.
 //!
 //! The request lifecycle (arrival → admission → queue → batch → shard →
 //! stats) and how the two-stage cost model prices every step are
 //! diagrammed in the top-level `ARCHITECTURE.md`.
 
+pub mod fleet;
 pub mod gateway;
 pub mod loadgen;
 pub mod pool;
 pub mod serve;
 pub mod sweep;
+
+pub use fleet::{
+    run_fleet, BoardSpec, BoardStats, DesignFilter, FleetSim, FleetSnapshot, FleetSpec,
+    FleetStats, ReconfigEvent, ReconfigPlan, ReconfigRecord,
+};
 
 pub use gateway::{
     AutoscaleConfig, AutoscaleEvent, DecisionDigest, Gateway, GatewayConfig, GatewayStats,

@@ -24,5 +24,5 @@ pub mod power;
 pub mod resources;
 
 pub use device::{Device, Family};
-pub use power::{PowerBreakdown, PowerEstimator};
+pub use power::{DesignDraw, PowerBreakdown, PowerEstimator};
 pub use resources::ResourceUsage;

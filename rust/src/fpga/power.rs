@@ -69,6 +69,18 @@ impl PowerBreakdown {
         self.signals + self.bram + self.logic + self.clocks
     }
 
+    /// Activity-independent draw (W): the clock tree burns regardless of
+    /// whether the datapath toggles.
+    pub fn static_w(&self) -> f64 {
+        self.clocks
+    }
+
+    /// Activity-scaled draw (W): signals + BRAM + logic, everything that
+    /// moves with `Activity`.
+    pub fn dynamic_w(&self) -> f64 {
+        self.signals + self.bram + self.logic
+    }
+
     /// Scale every category by `k`.
     pub fn scale(&self, k: f64) -> PowerBreakdown {
         PowerBreakdown {
@@ -77,6 +89,26 @@ impl PowerBreakdown {
             logic: self.logic * k,
             clocks: self.clocks * k,
         }
+    }
+}
+
+/// Per-shard wall-socket draw of one design instance, split the way the
+/// fleet power budget accounts it: a static floor (clock tree) plus an
+/// activity-scaled dynamic component.  Board-level draw is
+/// `shards × total()` summed over the designs occupying the device.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DesignDraw {
+    /// Activity-independent watts (clock tree).
+    pub static_w: f64,
+    /// Activity-scaled watts (signals + BRAM + logic) at the design's
+    /// nominal activity.
+    pub dynamic_w: f64,
+}
+
+impl DesignDraw {
+    /// Total watts one shard of this design pulls while powered.
+    pub fn total(&self) -> f64 {
+        self.static_w + self.dynamic_w
     }
 }
 
@@ -125,6 +157,15 @@ impl PowerEstimator {
     /// Vector-less estimate (nominal activity).
     pub fn vectorless(&self, res: &ResourceUsage) -> PowerBreakdown {
         self.estimate(res, Activity::nominal())
+    }
+
+    /// Static/dynamic split of one shard's draw at activity `act` — the
+    /// quantity the fleet power budget memoizes per design at gateway
+    /// construction.  Identical to `estimate` followed by the
+    /// `static_w`/`dynamic_w` projections.
+    pub fn shard_draw(&self, res: &ResourceUsage, act: Activity) -> DesignDraw {
+        let p = self.estimate(res, act);
+        DesignDraw { static_w: p.static_w(), dynamic_w: p.dynamic_w() }
     }
 
     /// Energy for a run of `cycles` at this device's clock (Joules).
@@ -194,6 +235,17 @@ mod tests {
         let hi = est.estimate(&res, Activity { bram_read: 1.0, toggle: 1.0 });
         assert!(lo.bram < hi.bram);
         assert_eq!(lo.clocks, hi.clocks); // clocks don't depend on data activity
+    }
+
+    #[test]
+    fn shard_draw_matches_breakdown_split() {
+        let est = PowerEstimator::new(PYNQ_Z1, DesignFamily::Snn);
+        let res = snn8_resources();
+        let p = est.vectorless(&res);
+        let d = est.shard_draw(&res, Activity::nominal());
+        assert_eq!(d.static_w, p.clocks);
+        assert!((d.dynamic_w - (p.signals + p.bram + p.logic)).abs() < 1e-15);
+        assert!((d.total() - p.total()).abs() < 1e-12);
     }
 
     #[test]

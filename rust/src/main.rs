@@ -12,6 +12,8 @@
 //!              [--trace FILE] [--faults FILE] [--emit-trace FILE] [--wall]
 //!              [--snapshot-every MS]
 //! repro loadgen --spec examples/specs/overload_burst.json [--json --out out.json]
+//! repro fleet  [--spec examples/specs/fleet_powercap.json] [--json [--out FILE]]
+//!              [--snapshot-every MS]
 //! repro checkjson --file out.json        # re-parse + reconcile totals
 //! repro validate                         # golden artifact checks
 //! ```
@@ -23,6 +25,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use spikebench::coordinator::fleet::{FleetSim, FleetSpec};
 use spikebench::coordinator::gateway::{FaultPlan, Gateway, SimGateway, Slo};
 use spikebench::coordinator::loadgen::{
     self, ArrivalTrace, ClassMix, DeploymentSpec, LoadgenConfig, Scenario,
@@ -46,20 +49,109 @@ fn main() {
     }
 }
 
-fn usage() -> &'static str {
-    "usage: repro <list|table|figure|all|ablation|serve|loadgen|checkjson|validate> [--id N] [--samples N] [--out DIR]\n\
-     see `repro list` for experiment ids; `repro loadgen` replays a\n\
-     deterministic scenario (steady|bursty|ramp|mixed|diurnal|flash-crowd),\n\
-     a recorded arrival trace (--trace FILE), or a JSON deployment spec\n\
-     (--spec FILE) through the discrete-event serving stack — admission\n\
-     queues, deadlines (--deadline-ms), SLO classes (--class-mix I,B,E),\n\
-     dynamic batching, shard autoscaling, seeded chaos (--faults FILE) —\n\
-     on a simulated clock (--wall uses the threaded gateway instead);\n\
-     `--emit-trace FILE` records the generated workload as a replayable\n\
-     trace; `--snapshot-every MS` streams periodic gateway stats on the\n\
-     simulated clock; `--json [--out FILE]` emits machine-readable\n\
-     artifacts (streamed incrementally on the simulated path);\n\
-     `repro checkjson --file F` re-parses one and reconciles its totals"
+/// One `repro` subcommand: the dispatch table below is the single
+/// source of truth — the usage string is generated from it, so a new
+/// subcommand cannot be routable yet missing from the help text (or
+/// vice versa).
+struct Subcommand {
+    /// The word after `repro`.
+    name: &'static str,
+    /// Synopsis line shown in the usage text (flags and defaults).
+    synopsis: &'static str,
+    /// Handler; receives the matched name so aliases like
+    /// `table`/`figure` can share one implementation.
+    run: fn(&str, &Args) -> Result<()>,
+}
+
+const COMMANDS: &[Subcommand] = &[
+    Subcommand {
+        name: "list",
+        synopsis: "list                             # available experiments",
+        run: cmd_list,
+    },
+    Subcommand {
+        name: "table",
+        synopsis: "table  --id 2 [--samples 1000] [--json [--out FILE]]",
+        run: cmd_experiment,
+    },
+    Subcommand {
+        name: "figure",
+        synopsis: "figure --id 7 [--samples 1000] [--json [--out FILE]]",
+        run: cmd_experiment,
+    },
+    Subcommand {
+        name: "all",
+        synopsis: "all    [--samples 1000] [--out reports] [--json [--json-out FILE]]",
+        run: cmd_all,
+    },
+    Subcommand {
+        name: "ablation",
+        synopsis: "ablation [--id ID] [--samples 300]",
+        run: cmd_ablation,
+    },
+    Subcommand {
+        name: "serve",
+        synopsis: "serve  --dataset mnist --requests 64 [--batch 8] [--json [--out FILE]]",
+        run: cmd_serve,
+    },
+    Subcommand {
+        name: "loadgen",
+        synopsis: "loadgen [--scenario steady] [--requests 64] [--spec FILE] [--trace FILE]\n\
+                \x20             [--deadline-ms 5] [--queue-cap 16] [--class-mix 3,1,4]\n\
+                \x20             [--faults FILE] [--emit-trace FILE] [--wall]\n\
+                \x20             [--snapshot-every MS] [--json [--out FILE]]",
+        run: cmd_loadgen,
+    },
+    Subcommand {
+        name: "fleet",
+        synopsis: "fleet  [--spec FILE] [--snapshot-every MS] [--json [--out FILE]]",
+        run: cmd_fleet,
+    },
+    Subcommand {
+        name: "checkjson",
+        synopsis: "checkjson --file F               # re-parse + reconcile totals",
+        run: cmd_checkjson,
+    },
+    Subcommand {
+        name: "validate",
+        synopsis: "validate [--samples 64]          # golden artifact checks",
+        run: cmd_validate,
+    },
+];
+
+/// Generated from [`COMMANDS`]: the `<a|b|c>` summary plus one synopsis
+/// line per subcommand, then the prose notes.
+fn usage() -> String {
+    let mut u = String::from("usage: repro <");
+    for (i, c) in COMMANDS.iter().enumerate() {
+        if i > 0 {
+            u.push('|');
+        }
+        u.push_str(c.name);
+    }
+    u.push_str(">\n");
+    for c in COMMANDS {
+        u.push_str("  repro ");
+        u.push_str(c.synopsis);
+        u.push('\n');
+    }
+    u.push_str(
+        "see `repro list` for experiment ids; `repro loadgen` replays a\n\
+         deterministic scenario (steady|bursty|ramp|mixed|diurnal|flash-crowd),\n\
+         a recorded arrival trace (--trace FILE), or a JSON deployment spec\n\
+         (--spec FILE) through the discrete-event serving stack — admission\n\
+         queues, deadlines (--deadline-ms), SLO classes (--class-mix I,B,E),\n\
+         dynamic batching, shard autoscaling, seeded chaos (--faults FILE) —\n\
+         on a simulated clock (--wall uses the threaded gateway instead);\n\
+         `repro fleet` runs a multi-board cluster under a global watt cap\n\
+         with scheduled partial reconfigurations (FleetSpec file via --spec,\n\
+         built-in three-board demo otherwise); `--snapshot-every MS` streams\n\
+         periodic stats on the simulated clock; `--json [--out FILE]` emits\n\
+         machine-readable artifacts (streamed incrementally on the simulated\n\
+         paths); `repro checkjson --file F` re-parses one and reconciles its\n\
+         totals",
+    );
+    u
 }
 
 /// Validate the subcommand's options, erroring with the typo'd name and
@@ -71,88 +163,287 @@ fn check_opts(cmd: &str, args: &Args, known: &[&str]) -> Result<()> {
 fn run() -> Result<()> {
     let cmd = std::env::args().nth(1).unwrap_or_else(|| "help".into());
     let args = Args::from_env(1);
-    match cmd.as_str() {
-        "list" => {
-            check_opts("list", &args, &[])?;
-            println!("{:<10} {}", "id", "title");
-            for e in registry() {
-                println!("{:<10} {}", e.id, e.title);
+    dispatch(&cmd, &args)
+}
+
+/// Route one invocation through [`COMMANDS`].  `help` (the default with
+/// no arguments) prints the usage; an unknown subcommand is an error —
+/// a typo'd command must not exit 0 having done nothing.
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    if matches!(cmd, "help" | "--help" | "-h") {
+        println!("{}", usage());
+        return Ok(());
+    }
+    match COMMANDS.iter().find(|c| c.name == cmd) {
+        Some(c) => (c.run)(cmd, args),
+        None => Err(anyhow!("unknown subcommand {cmd:?}\n{}", usage())),
+    }
+}
+
+fn cmd_list(_cmd: &str, args: &Args) -> Result<()> {
+    check_opts("list", args, &[])?;
+    println!("{:<10} {}", "id", "title");
+    for e in registry() {
+        println!("{:<10} {}", e.id, e.title);
+    }
+    Ok(())
+}
+
+/// `table` and `figure` share this handler; the matched name picks the
+/// experiment-id prefix a bare numeric `--id` expands to.
+fn cmd_experiment(cmd: &str, args: &Args) -> Result<()> {
+    check_opts(cmd, args, &["id", "samples", "json", "out"])?;
+    let id = args
+        .get("id")
+        .map(|s| {
+            if s.chars().all(|c| c.is_ascii_digit()) {
+                format!("{}{}", if cmd == "table" { "table" } else { "fig" }, s)
+            } else {
+                s.to_string()
             }
-            Ok(())
-        }
-        "table" | "figure" => {
-            check_opts(&cmd, &args, &["id", "samples", "json", "out"])?;
-            let id = args
-                .get("id")
-                .map(|s| {
-                    if s.chars().all(|c| c.is_ascii_digit()) {
-                        format!("{}{}", if cmd == "table" { "table" } else { "fig" }, s)
-                    } else {
-                        s.to_string()
-                    }
-                })
-                .ok_or_else(|| anyhow!("--id required\n{}", usage()))?;
-            let n = args.get_usize("samples", 1000);
-            let mut ctx = Ctx::load()?;
-            let out = run_by_id(&id, &mut ctx, n)?;
-            emit_text_or_json(&args, &out, || report::experiment_json(&id, n, &out))
-        }
-        "all" => {
-            check_opts("all", &args, &["samples", "out", "json", "json-out"])?;
-            let n = args.get_usize("samples", 1000);
-            let out_dir = std::path::PathBuf::from(args.get_or("out", "reports"));
-            let json_requested = args.flag("json") || args.get("json").is_some();
-            let mut ctx = Ctx::load()?;
-            let mut artifacts = Vec::new();
-            for e in registry() {
-                eprintln!(">>> {} ({})", e.id, e.title);
-                let out = (e.run)(&mut ctx, n)?;
-                println!("{out}");
-                report::write_report(&out_dir, e.id, &out)?;
-                if json_requested {
-                    artifacts.push(report::experiment_json(e.id, n, &out));
-                }
-            }
-            if json_requested {
-                let body = Obj::new()
-                    .field("kind", "experiment_suite")
-                    .field("samples", &n)
-                    .raw("experiments", Json::Arr(artifacts))
-                    .build();
-                let name = args.get("json-out").or_else(|| args.get("json")).unwrap_or("all.json");
-                let path = out_dir.join(name);
-                report::write_json(&path, &body)?;
-                eprintln!("json artifact written to {}", path.display());
-            }
-            eprintln!("reports written to {}", out_dir.display());
-            Ok(())
-        }
-        "ablation" => {
-            check_opts("ablation", &args, &["id", "samples"])?;
-            let n = args.get_usize("samples", 300);
-            let mut ctx = Ctx::load()?;
-            match args.get("id") {
-                Some(id) => println!("{}", spikebench::experiments::ablations::run(id, &mut ctx, n)?),
-                None => {
-                    for (id, title, _) in spikebench::experiments::ablations::registry() {
-                        println!("{id:<16} {title}");
-                    }
-                }
-            }
-            Ok(())
-        }
-        "serve" => serve_demo(&args),
-        "loadgen" => loadgen_demo(&args),
-        "checkjson" => checkjson(&args),
-        "validate" => {
-            check_opts("validate", &args, &["samples"])?;
-            validate(&args)
-        }
-        _ => {
-            println!("{}", usage());
-            Ok(())
+        })
+        .ok_or_else(|| anyhow!("--id required\n{}", usage()))?;
+    let n = args.get_usize("samples", 1000);
+    let mut ctx = Ctx::load()?;
+    let out = run_by_id(&id, &mut ctx, n)?;
+    emit_text_or_json(args, &out, || report::experiment_json(&id, n, &out))
+}
+
+fn cmd_all(_cmd: &str, args: &Args) -> Result<()> {
+    check_opts("all", args, &["samples", "out", "json", "json-out"])?;
+    let n = args.get_usize("samples", 1000);
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "reports"));
+    let json_requested = args.flag("json") || args.get("json").is_some();
+    let mut ctx = Ctx::load()?;
+    let mut artifacts = Vec::new();
+    for e in registry() {
+        eprintln!(">>> {} ({})", e.id, e.title);
+        let out = (e.run)(&mut ctx, n)?;
+        println!("{out}");
+        report::write_report(&out_dir, e.id, &out)?;
+        if json_requested {
+            artifacts.push(report::experiment_json(e.id, n, &out));
         }
     }
+    if json_requested {
+        let body = Obj::new()
+            .field("kind", "experiment_suite")
+            .field("samples", &n)
+            .raw("experiments", Json::Arr(artifacts))
+            .build();
+        let name = args.get("json-out").or_else(|| args.get("json")).unwrap_or("all.json");
+        let path = out_dir.join(name);
+        report::write_json(&path, &body)?;
+        eprintln!("json artifact written to {}", path.display());
+    }
+    eprintln!("reports written to {}", out_dir.display());
+    Ok(())
+}
+
+fn cmd_ablation(_cmd: &str, args: &Args) -> Result<()> {
+    check_opts("ablation", args, &["id", "samples"])?;
+    let n = args.get_usize("samples", 300);
+    let mut ctx = Ctx::load()?;
+    match args.get("id") {
+        Some(id) => println!("{}", spikebench::experiments::ablations::run(id, &mut ctx, n)?),
+        None => {
+            for (id, title, _) in spikebench::experiments::ablations::registry() {
+                println!("{id:<16} {title}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(_cmd: &str, args: &Args) -> Result<()> {
+    serve_demo(args)
+}
+
+fn cmd_loadgen(_cmd: &str, args: &Args) -> Result<()> {
+    loadgen_demo(args)
+}
+
+fn cmd_checkjson(_cmd: &str, args: &Args) -> Result<()> {
+    checkjson(args)
+}
+
+fn cmd_validate(_cmd: &str, args: &Args) -> Result<()> {
+    check_opts("validate", args, &["samples"])?;
+    validate(args)
+}
+
+/// Fleet demo: N simulated boards behind one dispatch balancer under a
+/// global watt budget, with FPGA partial reconfiguration as a scheduled,
+/// priced event (`coordinator::fleet`).  Spec-driven (`--spec FILE`,
+/// `FleetSpec` wire format) or the built-in three-board demo; fixed-seed
+/// runs are byte-deterministic.
+fn cmd_fleet(_cmd: &str, args: &Args) -> Result<()> {
+    check_opts("fleet", args, &["spec", "snapshot-every", "json", "out"])?;
+    let snapshot_every_s = match args.get("snapshot-every") {
+        Some(s) => {
+            let ms: f64 = s.parse().map_err(|e| anyhow!("bad --snapshot-every: {e}"))?;
+            if !ms.is_finite() || ms <= 0.0 {
+                bail!("--snapshot-every wants a positive number of simulated milliseconds");
+            }
+            Some(ms / 1e3)
+        }
+        None => None,
+    };
+    let spec = match args.get("spec") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading spec {path}"))?;
+            wire::from_text::<FleetSpec>(&text).map_err(|e| anyhow!("{path}: {e}"))?
+        }
+        None => FleetSpec::demo(),
+    };
+    let json_requested = args.flag("json") || args.get("json").is_some();
+    if json_requested {
+        return fleet_json_stream(args, &spec, snapshot_every_s);
+    }
+    let mut sim = FleetSim::new(&spec)?;
+    if let Some(every_s) = snapshot_every_s {
+        let n_boards = spec.boards.len();
+        sim.set_snapshot_sink(every_s, move |s| {
+            println!(
+                "snapshot @{:.3}ms: {:.2} W, {}/{} boards online, {} offered, \
+                 {} completed, {} held",
+                s.t_s * 1e3,
+                s.fleet_power_w,
+                s.boards_online,
+                n_boards,
+                s.offered,
+                s.completed,
+                s.held
+            );
+        })?;
+    }
+    let stats = sim.run()?;
+    println!("{}", fleet_summary(&spec, &stats));
+    Ok(())
+}
+
+/// The human-readable `repro fleet` summary: budget line, conservation
+/// line, per-board table, reconfiguration trail.
+fn fleet_summary(
+    spec: &FleetSpec,
+    stats: &spikebench::coordinator::fleet::FleetStats,
+) -> String {
+    let cap = match stats.power_cap_w {
+        Some(c) => format!("cap {c:.1} W"),
+        None => "no cap".to_string(),
+    };
+    let mut text = format!(
+        "fleet: {} boards, {cap} | peak {:.2} W, mean {:.2} W, {:.4} J \
+         (+{:.4} J reconfig) over {:.1} ms\n\
+         offered {} = completed {} + rejected {} (power_cap {}, full {}, deadline {}, \
+         shard_lost {}); held {}, requeued {}, autoscale denied {}\n\
+         service p50 {:.2} ms p99 {:.2} ms | digest {:016x}",
+        spec.boards.len(),
+        stats.peak_power_w,
+        stats.mean_power_w,
+        stats.energy_j,
+        stats.reconfig_energy_j,
+        stats.horizon_s * 1e3,
+        stats.offered,
+        stats.completed,
+        stats.rejected(),
+        stats.rejected_power_cap,
+        stats.rejected_full,
+        stats.rejected_deadline,
+        stats.rejected_shard_lost,
+        stats.held_total,
+        stats.requeued,
+        stats.autoscale_denied,
+        stats.p50_service_ms,
+        stats.p99_service_ms,
+        stats.decision_digest,
+    );
+    for b in &stats.boards {
+        text.push_str(&format!(
+            "\n  {:<8} {:<8} offered {:>3} completed {:>3} p99 {:>7.2} ms \
+             peak {:>5.2} W energy {:.4} J",
+            b.name, b.device, b.offered, b.completed, b.p99_service_ms, b.peak_power_w,
+            b.energy_j
+        ));
+        if b.reconfigs > 0 {
+            text.push_str(&format!(" ({} reconfig, {:.1} ms dark)", b.reconfigs, b.offline_s * 1e3));
+        }
+    }
+    for r in &stats.reconfigs {
+        text.push_str(&format!(
+            "\nreconfig {} @{:.1}ms: {:.1} ms dark, {:.4} J, {} requeued, {} lost -> [{}] ({})",
+            r.board,
+            r.t_s * 1e3,
+            r.duration_s * 1e3,
+            r.energy_j,
+            r.requeued,
+            r.lost,
+            r.datasets.join(","),
+            r.family.as_str()
+        ));
+    }
+    text
+}
+
+/// The `repro fleet --json` emitter: one incremental [`JsonWriter`] pass
+/// over `{kind, spec, snapshots?, report}`, snapshots streamed as they
+/// fire (same shared-writer pattern as [`loadgen_json_stream`]).
+fn fleet_json_stream(
+    args: &Args,
+    spec: &FleetSpec,
+    snapshot_every_s: Option<f64>,
+) -> Result<()> {
+    let out_path = args.get("out").or_else(|| args.get("json"));
+    let out: Box<dyn std::io::Write> = match out_path {
+        Some(path) => Box::new(std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
+        )),
+        None => Box::new(std::io::stdout()),
+    };
+    let w = Rc::new(RefCell::new(JsonWriter::new(out)));
+    {
+        let mut wb = w.borrow_mut();
+        wb.begin_object();
+        wb.key("kind");
+        wb.emit("fleet");
+        wb.key("spec");
+        wb.emit(spec);
+        if snapshot_every_s.is_some() {
+            wb.key("snapshots");
+            wb.begin_array();
+        }
+    }
+    let mut sim = FleetSim::new(spec)?;
+    if let Some(every_s) = snapshot_every_s {
+        let ws = Rc::clone(&w);
+        sim.set_snapshot_sink(every_s, move |s| {
+            ws.borrow_mut().emit(s);
+        })?;
+    }
+    let stats = sim.run()?;
+    {
+        let mut wb = w.borrow_mut();
+        if snapshot_every_s.is_some() {
+            wb.end_array();
+        }
+        wb.key("report");
+        wb.emit(&stats);
+        wb.end_object();
+    }
+    // run() consumed the sim, dropping the snapshot sink's writer clone.
+    let writer = match Rc::try_unwrap(w) {
+        Ok(cell) => cell.into_inner(),
+        Err(_) => unreachable!("the snapshot sink died with the fleet"),
+    };
+    writer.finish().with_context(|| {
+        format!("writing json artifact{}", out_path.map(|p| format!(" {p}")).unwrap_or_default())
+    })?;
+    eprintln!("{}", fleet_summary(spec, &stats));
+    if let Some(path) = out_path {
+        eprintln!("json artifact written to {path}");
+    }
+    Ok(())
 }
 
 /// Shared `--json [--out FILE]` emission: without `--json` print the
@@ -925,4 +1216,47 @@ fn validate(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The usage text is generated from [`COMMANDS`], so every routable
+    /// subcommand — including `fleet` — appears both in the `<a|b|c>`
+    /// summary and as a synopsis line.
+    #[test]
+    fn usage_lists_every_subcommand() {
+        let u = usage();
+        for c in COMMANDS {
+            assert!(
+                u.contains(&format!("repro {}", c.name)),
+                "usage is missing a synopsis line for {:?}",
+                c.name
+            );
+        }
+        assert!(u.contains("fleet"), "usage must mention the fleet subcommand");
+        let summary = u.lines().next().expect("usage has a summary line");
+        for c in COMMANDS {
+            assert!(summary.contains(c.name), "summary line is missing {:?}", c.name);
+        }
+    }
+
+    /// A typo'd subcommand errors (naming the usage) instead of exiting
+    /// 0 having silently done nothing.
+    #[test]
+    fn unknown_subcommand_errors() {
+        let args = Args::parse(Vec::new());
+        let err = dispatch("flete", &args).unwrap_err().to_string();
+        assert!(err.contains("unknown subcommand"), "got: {err}");
+        assert!(err.contains("\"flete\""), "got: {err}");
+        assert!(err.contains("usage: repro"), "got: {err}");
+    }
+
+    /// `help` stays a successful no-op print.
+    #[test]
+    fn help_is_ok() {
+        let args = Args::parse(Vec::new());
+        assert!(dispatch("help", &args).is_ok());
+    }
 }

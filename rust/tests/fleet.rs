@@ -1,0 +1,162 @@
+//! Fleet-layer integration tests.
+//!
+//! The committed golden fleet spec (`examples/specs/fleet_powercap.json`)
+//! is the file the CI fleet-smoke job replays; these tests pin its bytes,
+//! prove the fixed-seed run is byte-deterministic, check the global power
+//! cap in every emitted snapshot, verify the scheduled partial
+//! reconfiguration is priced into the ledgers, and cross-check the
+//! per-design power draws memoized at gateway construction against a
+//! fresh, unmemoized recomputation.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use spikebench::cnn_accel;
+use spikebench::coordinator::fleet::{run_fleet, FleetSim, FleetSpec};
+use spikebench::coordinator::gateway::{GatewayConfig, SimGateway};
+use spikebench::coordinator::loadgen::{dataset_arch, synthetic_specs};
+use spikebench::coordinator::sweep::cnn_metrics;
+use spikebench::fpga::device::PYNQ_Z1;
+use spikebench::fpga::power::{Activity, DesignFamily, PowerEstimator};
+use spikebench::snn;
+use spikebench::util::wire::{from_text, to_text};
+
+/// FNV-1a-64 over raw bytes — pins the committed golden spec file.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+const FLEET_SPEC_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs/fleet_powercap.json");
+const FLEET_SPEC_DIGEST: u64 = 0x7b54_49a2_a615_2612;
+const FLEET_SPEC_LEN: usize = 622;
+
+fn fleet_spec() -> FleetSpec {
+    let text = std::fs::read_to_string(FLEET_SPEC_PATH).expect("reading golden fleet spec");
+    from_text(&text).expect("parsing golden fleet spec")
+}
+
+/// The golden spec's bytes are digest-pinned so a drive-by edit cannot
+/// silently change what "the golden fleet run" means, and the decoded
+/// spec round-trips the wire codec.
+#[test]
+fn golden_fleet_spec_digest_is_pinned_and_roundtrips() {
+    let bytes = std::fs::read(FLEET_SPEC_PATH).expect("reading golden fleet spec");
+    assert_eq!(bytes.len(), FLEET_SPEC_LEN, "golden fleet spec length changed");
+    assert_eq!(
+        fnv1a64(&bytes),
+        FLEET_SPEC_DIGEST,
+        "golden fleet spec digest changed — if intentional, re-pin digest + length here"
+    );
+    let spec = fleet_spec();
+    assert_eq!(spec.power_cap_w, Some(14.0));
+    assert_eq!(spec.boards.len(), 3, "the golden run mixes PYNQ and ZCU102 boards");
+    assert_eq!(spec.reconfigs.events.len(), 1, "the golden run schedules a reconfiguration");
+    let back: FleetSpec = from_text(&to_text(&spec)).unwrap();
+    assert_eq!(back, spec);
+}
+
+/// Acceptance: two replays of the golden spec produce byte-identical
+/// `FleetStats` JSON — per-board ledgers, quantiles, decision digests,
+/// reconfiguration records and all.
+#[test]
+fn golden_fleet_run_is_byte_deterministic() {
+    let spec = fleet_spec();
+    let a = run_fleet(&spec).expect("first golden fleet run");
+    let b = run_fleet(&spec).expect("second golden fleet run");
+    assert_eq!(to_text(&a), to_text(&b), "fixed-seed fleet replay diverged");
+
+    // The run demonstrably exercised the fleet machinery: conservation
+    // holds, the reconfiguration was priced, and arrivals for the dark
+    // board's incoming image were held rather than rejected.
+    assert_eq!(a.offered, a.completed + a.rejected());
+    assert!(a.completed > 0);
+    assert_eq!(a.reconfigs.len(), 1);
+    assert!(a.reconfigs[0].duration_s > 0.0, "reconfiguration must cost time");
+    assert!(a.reconfigs[0].energy_j > 0.0, "reconfiguration must cost joules");
+    assert!(a.reconfig_energy_j > 0.0);
+    assert!(a.held_total > 0, "the re-image window should hold incoming-image arrivals");
+}
+
+/// The global watt budget is an invariant, not a target: no emitted
+/// snapshot may show fleet draw above the cap, and the reconfiguration
+/// window must actually take a board dark.
+#[test]
+fn golden_fleet_never_breaches_power_cap() {
+    let spec = fleet_spec();
+    let cap = spec.power_cap_w.expect("golden spec is capped");
+    let mut sim = FleetSim::new(&spec).expect("golden spec constructs");
+    let snaps = Rc::new(RefCell::new(Vec::new()));
+    let sink = Rc::clone(&snaps);
+    sim.set_snapshot_sink(0.002, move |s| sink.borrow_mut().push(s.clone()))
+        .expect("sink installs");
+    let stats = sim.run().expect("golden fleet run");
+
+    assert!(stats.peak_power_w <= cap + 1e-6, "peak draw breached the cap");
+    let snaps = snaps.borrow();
+    assert!(!snaps.is_empty());
+    for s in snaps.iter() {
+        assert!(s.fleet_power_w <= cap + 1e-6, "cap breached at t = {} s", s.t_s);
+    }
+    assert!(
+        snaps.iter().any(|s| s.boards_online == 2),
+        "some snapshot should catch the fleet with a board dark"
+    );
+}
+
+/// Satellite: per-design static+dynamic draws are memoized once at
+/// gateway construction. Recompute every table entry's draw from scratch
+/// — SNN via resource estimate + `PowerEstimator::shard_draw`, CNN via
+/// the `cnn_metrics` dataflow schedule — and require exact equality with
+/// the memoized values the router serves.
+#[test]
+fn memoized_draw_matches_unmemoized() {
+    let (specs, _pools) =
+        synthetic_specs(&["mnist"], PYNQ_Z1, 1, 42).expect("synthetic substrate builds");
+    let sim = SimGateway::new(specs, &GatewayConfig::default()).expect("gateway constructs");
+    let table = sim.router().table();
+    assert!(!table.is_empty());
+
+    let (arch, input_shape) = dataset_arch("mnist").expect("mnist is a known dataset");
+    let mut checked_snn = false;
+    let mut checked_cnn = false;
+    for (idx, priced) in table.iter().enumerate() {
+        let memoized = sim.router().draw(idx);
+        let fresh = if priced.is_snn {
+            let design = snn::config::all_designs()
+                .into_iter()
+                .find(|d| d.name == priced.name)
+                .expect("routed SNN design is in the catalog");
+            let res = design.resources_on(&PYNQ_Z1);
+            checked_snn = true;
+            PowerEstimator::new(PYNQ_Z1, DesignFamily::Snn).shard_draw(&res, Activity::nominal())
+        } else {
+            let design = cnn_accel::config::all_designs()
+                .into_iter()
+                .find(|d| d.name == priced.name)
+                .expect("routed CNN design is in the catalog");
+            let m = cnn_metrics(&design, input_shape, arch, &PYNQ_Z1);
+            checked_cnn = true;
+            spikebench::fpga::power::DesignDraw {
+                static_w: m.power.static_w(),
+                dynamic_w: m.power.dynamic_w(),
+            }
+        };
+        assert_eq!(
+            memoized.static_w, fresh.static_w,
+            "static draw drifted for {} (entry {idx})",
+            priced.name
+        );
+        assert_eq!(
+            memoized.dynamic_w, fresh.dynamic_w,
+            "dynamic draw drifted for {} (entry {idx})",
+            priced.name
+        );
+    }
+    assert!(checked_snn && checked_cnn, "the synthetic substrate prices both families");
+}

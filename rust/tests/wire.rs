@@ -667,3 +667,217 @@ fn lossy_integers_are_rejected_loudly() {
             .unwrap_err();
     assert_eq!(err.path, "/served");
 }
+
+// ---------------------------------------------------------------------------
+// Fleet-layer wire compatibility
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_spec_roundtrip_and_defaults() {
+    use spikebench::coordinator::fleet::{
+        BoardSpec, DesignFilter, FleetSpec, ReconfigEvent, ReconfigPlan,
+    };
+
+    // The demo spec survives the full encode/decode cycle.
+    roundtrip(&FleetSpec::demo());
+
+    // An uncapped single-board fleet with no reconfigurations.
+    roundtrip(&FleetSpec {
+        seed: 7,
+        power_cap_w: None,
+        gateway: GatewayConfig::default(),
+        datasets: vec!["mnist".into()],
+        boards: vec![BoardSpec {
+            name: "solo".into(),
+            device: "zcu102".into(),
+            shards: 2,
+            datasets: vec!["mnist".into()],
+            family: DesignFilter::Cnn,
+        }],
+        loadgen: LoadgenConfig::default(),
+        reconfigs: ReconfigPlan::default(),
+    });
+
+    // A minimal file applies the documented defaults: seed 42, no cap,
+    // default gateway/loadgen, pynq single-shard mixed boards, empty plan.
+    let minimal = r#"{
+        "datasets": ["mnist"],
+        "boards": [{"name": "b0", "datasets": ["mnist"]}]
+    }"#;
+    let spec: FleetSpec = from_text(minimal).unwrap();
+    assert_eq!(spec.seed, 42);
+    assert_eq!(spec.power_cap_w, None);
+    assert_eq!(spec.gateway, GatewayConfig::default());
+    assert_eq!(spec.loadgen, LoadgenConfig::default());
+    assert_eq!(spec.boards[0].device, "pynq");
+    assert_eq!(spec.boards[0].shards, 1);
+    assert_eq!(spec.boards[0].family, DesignFilter::Mixed);
+    assert!(spec.reconfigs.is_empty());
+
+    roundtrip(&ReconfigPlan {
+        events: vec![ReconfigEvent {
+            t_s: 0.25,
+            board: "b0".into(),
+            datasets: vec!["svhn".into(), "cifar".into()],
+            family: DesignFilter::Snn,
+        }],
+    });
+}
+
+#[test]
+fn fleet_stats_roundtrip() {
+    use spikebench::coordinator::fleet::{
+        BoardStats, DesignFilter, FleetSnapshot, FleetStats, ReconfigRecord,
+    };
+
+    roundtrip(&FleetSnapshot {
+        t_s: 0.002,
+        fleet_power_w: 11.5,
+        boards_online: 2,
+        offered: 10,
+        dispatched: 8,
+        completed: 5,
+        rejected_power_cap: 1,
+        rejected_full: 1,
+        rejected_deadline: 0,
+        rejected_shard_lost: 0,
+        requeued: 2,
+        held: 1,
+    });
+
+    let stats = FleetStats {
+        power_cap_w: Some(14.0),
+        peak_power_w: 13.2,
+        mean_power_w: 11.8,
+        energy_j: 0.17,
+        reconfig_energy_j: 0.003,
+        horizon_s: 0.0182,
+        offered: 64,
+        dispatched: 60,
+        admitted: 58,
+        completed: 57,
+        failed: 1,
+        rejected_power_cap: 3,
+        rejected_full: 2,
+        rejected_deadline: 1,
+        rejected_shard_lost: 1,
+        requeued: 4,
+        held_total: 12,
+        autoscale_denied: 5,
+        deadline_misses: 2,
+        slo_misses: 3,
+        p50_service_ms: 1.23,
+        p99_service_ms: 4.56,
+        decision_digest: 0x0123_4567_89ab_cdef,
+        reconfigs: vec![ReconfigRecord {
+            t_s: 0.004,
+            board: "pynq-1".into(),
+            duration_s: 0.0106,
+            energy_j: 0.003,
+            datasets: vec!["cifar".into()],
+            family: DesignFilter::Snn,
+            requeued: 2,
+            lost: 0,
+        }],
+        boards: vec![BoardStats {
+            name: "pynq-1".into(),
+            device: "PYNQ-Z1".into(),
+            offered: 20,
+            admitted: 19,
+            completed: 18,
+            failed: 1,
+            rejected_full: 1,
+            rejected_deadline: 1,
+            rejected_shard_lost: 0,
+            requeued: 2,
+            deadline_misses: 1,
+            slo_misses: 1,
+            p50_service_ms: 1.1,
+            p99_service_ms: 3.3,
+            energy_j: 0.05,
+            peak_power_w: 4.3,
+            offline_s: 0.0106,
+            reconfigs: 1,
+            decision_digest: 0xdead_beef_0000_0001,
+        }],
+    };
+    roundtrip(&stats);
+    assert_eq!(stats.rejected(), 7);
+
+    // u64 digests travel as 16-hex-digit strings so 2^53-lossy JSON
+    // number decoding never touches them.
+    let text = to_text(&stats);
+    assert!(text.contains("\"0123456789abcdef\""), "digest not hex in {text}");
+}
+
+#[test]
+fn fleet_decode_errors_carry_json_pointer_paths() {
+    use spikebench::coordinator::fleet::{FleetSpec, FleetStats, ReconfigPlan};
+
+    // Missing required fields name their path.
+    let err = from_text::<FleetSpec>(r#"{"boards": []}"#).unwrap_err();
+    assert_eq!(err.path, "/datasets");
+    let err = from_text::<FleetSpec>(r#"{"datasets": ["mnist"]}"#).unwrap_err();
+    assert_eq!(err.path, "/boards");
+
+    // A bad family deep inside the board list is located exactly.
+    let err = from_text::<FleetSpec>(
+        r#"{"datasets": ["mnist"],
+            "boards": [{"name": "b0", "datasets": ["mnist"], "family": "dsp"}]}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.path, "/boards/0/family");
+    assert!(err.msg.contains("dsp"), "got: {}", err.msg);
+
+    // Same through the reconfiguration plan.
+    let err = from_text::<ReconfigPlan>(
+        r#"{"events": [{"t_s": 0.1, "board": "b0", "datasets": [], "family": 3}]}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.path, "/events/0/family");
+
+    // A malformed optional section errors instead of defaulting.
+    let err = from_text::<FleetSpec>(
+        r#"{"datasets": ["mnist"],
+            "boards": [{"name": "b0", "datasets": ["mnist"]}],
+            "gateway": "8"}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.path, "/gateway");
+
+    // A corrupt digest is rejected, not zeroed.
+    let err = from_text::<FleetStats>(
+        r#"{"power_cap_w": null, "peak_power_w": 0, "mean_power_w": 0,
+            "energy_j": 0, "reconfig_energy_j": 0, "horizon_s": 0,
+            "offered": 0, "dispatched": 0, "admitted": 0, "completed": 0,
+            "failed": 0, "rejected_power_cap": 0, "rejected_full": 0,
+            "rejected_deadline": 0, "rejected_shard_lost": 0, "requeued": 0,
+            "held_total": 0, "autoscale_denied": 0, "deadline_misses": 0,
+            "slo_misses": 0, "p50_service_ms": 0, "p99_service_ms": 0,
+            "decision_digest": "xyzt", "reconfigs": [], "boards": []}"#,
+    )
+    .unwrap_err();
+    assert!(err.msg.contains("digest"), "got: {}", err.msg);
+}
+
+/// The fleet layer must not disturb the existing deployment-spec format:
+/// the checked-in example specs (the CI release leg replays them) still
+/// decode, and a pre-fleet minimal spec still applies its defaults.
+#[test]
+fn legacy_deployment_specs_still_decode() {
+    for name in ["steady_pynq.json", "overload_burst.json", "chaos_slo.json"] {
+        let path = format!(
+            "{}/../examples/specs/{name}",
+            env!("CARGO_MANIFEST_DIR")
+        );
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+        let spec: DeploymentSpec =
+            from_text(&text).unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert!(!spec.executors.is_empty(), "{path}: no executors");
+        roundtrip(&spec);
+    }
+    let legacy: DeploymentSpec =
+        from_text(r#"{"executors": [{"design": "CNN4"}]}"#).unwrap();
+    assert_eq!(legacy.executors.len(), 1);
+    assert_eq!(legacy.gateway, GatewayConfig::default());
+}
