@@ -52,6 +52,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
+use crate::experiments::calibration::CalibrationStats;
 use crate::fpga::device::Device;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -533,11 +534,14 @@ pub struct BoardStats {
     /// Hex FNV-1a-64 digest of this board's admission-time routing
     /// decisions (its gateway's [`DecisionDigest`]).
     pub decision_digest: u64,
+    /// Per-design calibration state of this board's gateway (empty
+    /// unless the shared [`GatewayConfig`] configures the loop).
+    pub calibration: Vec<CalibrationStats>,
 }
 
 impl ToJson for BoardStats {
     fn to_json(&self) -> Json {
-        Obj::new()
+        let o = Obj::new()
             .field("name", &self.name)
             .field("device", &self.device)
             .field("offered", &self.offered)
@@ -558,8 +562,15 @@ impl ToJson for BoardStats {
             .field("reconfigs", &self.reconfigs)
             // Hex-encoded: u64 digests exceed the f64-backed number
             // wire's 2^53 exact-integer range.
-            .raw("decision_digest", Json::Str(format!("{:016x}", self.decision_digest)))
-            .build()
+            .raw("decision_digest", Json::Str(format!("{:016x}", self.decision_digest)));
+        // Emitted only when present so calibration-free fleet reports
+        // stay byte-identical to pre-calibration artifacts.
+        let o = if self.calibration.is_empty() {
+            o
+        } else {
+            o.field("calibration", &self.calibration)
+        };
+        o.build()
     }
 }
 
@@ -590,6 +601,9 @@ impl FromJson for BoardStats {
             offline_s: d.req("offline_s")?,
             reconfigs: d.req("reconfigs")?,
             decision_digest,
+            // Legacy branch: pre-calibration fleet artifacts carry no
+            // `calibration` key.
+            calibration: d.opt_or("calibration", Vec::new())?,
         })
     }
 }
@@ -1719,6 +1733,7 @@ impl FleetSim {
                     offline_s: bs.offline_s,
                     reconfigs: bs.windows.len(),
                     decision_digest: l.decision_digest.value(),
+                    calibration: gstats[b].calibration.clone(),
                 }
             })
             .collect();

@@ -63,6 +63,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::cnn_accel::config::CnnDesign;
+use crate::experiments::calibration::{CalibrationConfig, CalibrationStats, CalibrationTracker};
 use crate::fpga::device::Device;
 use crate::fpga::power::{Activity, DesignDraw, DesignFamily, PowerEstimator};
 use crate::fpga::resources::ResourceUsage;
@@ -445,6 +446,11 @@ pub struct GatewayConfig {
     pub batch_max_wait_s: f64,
     /// Queue-depth-driven shard autoscaling ([`SimGateway`] only).
     pub autoscale: AutoscaleConfig,
+    /// Online measured-vs-priced calibration feedback ([`SimGateway`]
+    /// only).  `None` (the default) keeps the gateway byte-identical to
+    /// pre-calibration builds: no tracker is built, no corrections are
+    /// applied, and no `calibration` key appears in emitted JSON.
+    pub calibration: Option<CalibrationConfig>,
 }
 
 impl Default for GatewayConfig {
@@ -455,6 +461,7 @@ impl Default for GatewayConfig {
             queue_cap: 64,
             batch_max_wait_s: 1e-3,
             autoscale: AutoscaleConfig::default(),
+            calibration: None,
         }
     }
 }
@@ -464,13 +471,18 @@ impl ToJson for GatewayConfig {
         // The wall-clock timeout as integer nanoseconds: exact round-trip
         // (unlike a Duration -> secs-f64 conversion).  batch_max_wait_s is
         // natively f64 and the writer emits round-trip-exact numbers.
-        Obj::new()
+        let mut o = Obj::new()
             .field("max_batch", &self.max_batch)
             .field("batch_timeout_ns", &(self.batch_timeout.as_nanos() as u64))
             .field("queue_cap", &self.queue_cap)
             .field("batch_max_wait_s", &self.batch_max_wait_s)
-            .field("autoscale", &self.autoscale)
-            .build()
+            .field("autoscale", &self.autoscale);
+        // Emitted only when configured so `calibration: None` configs
+        // serialize byte-identically to pre-calibration builds.
+        if let Some(c) = &self.calibration {
+            o = o.field("calibration", c);
+        }
+        o.build()
     }
 }
 
@@ -486,6 +498,7 @@ impl FromJson for GatewayConfig {
             queue_cap: d.opt_or("queue_cap", default.queue_cap)?,
             batch_max_wait_s: d.opt_or("batch_max_wait_s", default.batch_max_wait_s)?,
             autoscale: d.opt_or("autoscale", default.autoscale)?,
+            calibration: d.opt_or("calibration", None)?,
         })
     }
 }
@@ -700,6 +713,21 @@ impl Router {
     /// it, fall back to the fastest design for the dataset with
     /// `slo_miss = true`.  Errors only when no design serves the dataset.
     pub fn decide(&self, dataset: &str, slo: &Slo) -> Result<Decision> {
+        self.decide_with(dataset, slo, |_| (1.0, 1.0))
+    }
+
+    /// [`Router::decide`] with a per-design correction hook: `correct(i)`
+    /// returns `(latency_factor, energy_factor)` multiplied into design
+    /// `i`'s priced numbers before SLO filtering and cheapest-selection.
+    /// The calibration loop passes [`CalibrationTracker::correction`]
+    /// here; unit factors reproduce `decide` exactly (`x * 1.0` is exact
+    /// for every finite `x`, so uncorrected routing stays byte-identical).
+    pub fn decide_with(
+        &self,
+        dataset: &str,
+        slo: &Slo,
+        correct: impl Fn(usize) -> (f64, f64),
+    ) -> Result<Decision> {
         let mut best: Option<(usize, f64, f64)> = None; // (idx, energy, lat)
         let mut fastest: Option<(usize, f64, f64)> = None; // (idx, lat, energy)
         for (i, d) in self.designs.iter().enumerate() {
@@ -707,6 +735,8 @@ impl Router {
                 continue;
             }
             let (lat, energy) = self.price(i);
+            let (cl, ce) = correct(i);
+            let (lat, energy) = (lat * cl, energy * ce);
             if fastest.map_or(true, |(_, fl, _)| lat < fl) {
                 fastest = Some((i, lat, energy));
             }
@@ -1526,11 +1556,14 @@ pub struct GatewayStats {
     /// Applied fault-injection events in simulated-time order (empty
     /// without a [`FaultPlan`]).
     pub faults: Vec<FaultRecord>,
+    /// Per-design calibration state in routing-table order (empty unless
+    /// the calibration loop is configured).
+    pub calibration: Vec<CalibrationStats>,
 }
 
 impl ToJson for GatewayStats {
     fn to_json(&self) -> Json {
-        Obj::new()
+        let mut o = Obj::new()
             .field("served", &self.served)
             .field("failed", &self.failed)
             .field("batches", &self.batches)
@@ -1546,8 +1579,13 @@ impl ToJson for GatewayStats {
             .field("queues", &self.queues)
             .field("classes", &self.classes)
             .field("autoscale_events", &self.autoscale_events)
-            .field("faults", &self.faults)
-            .build()
+            .field("faults", &self.faults);
+        // Emitted only when present so calibration-free runs serialize
+        // byte-identically to pre-calibration artifacts.
+        if !self.calibration.is_empty() {
+            o = o.field("calibration", &self.calibration);
+        }
+        o.build()
     }
 }
 
@@ -1573,6 +1611,9 @@ impl FromJson for GatewayStats {
             classes: d.opt_or("classes", Vec::new())?,
             autoscale_events: d.opt_or("autoscale_events", Vec::new())?,
             faults: d.opt_or("faults", Vec::new())?,
+            // Legacy branch: pre-calibration artifacts have no
+            // `calibration` key and decode to an empty table.
+            calibration: d.opt_or("calibration", Vec::new())?,
         })
     }
 }
@@ -1877,6 +1918,12 @@ struct InFlight {
     fire_s: f64,
     /// Completion time (`fire_s + batch × latency`).
     done_s: f64,
+    /// Priced service span (`batch × priced latency`), stored at dispatch:
+    /// `fl(fire + span) − fire` need not equal `span` in f64, so the
+    /// calibration observation uses the stored spans, not timestamps.
+    svc_priced_s: f64,
+    /// Actual service span (priced span × any injected bias factor).
+    svc_actual_s: f64,
     members: Vec<Queued>,
 }
 
@@ -2166,11 +2213,14 @@ pub struct StatsSnapshot {
     pub p50_service_ms: f64,
     /// p99 of completed service times (ms); 0 before any completion.
     pub p99_service_ms: f64,
+    /// Per-design calibration state at snapshot time (empty unless the
+    /// calibration loop is configured).
+    pub calibration: Vec<CalibrationStats>,
 }
 
 impl ToJson for StatsSnapshot {
     fn to_json(&self) -> Json {
-        Obj::new()
+        let mut o = Obj::new()
             .field("t_s", &self.t_s)
             .field("offered", &self.offered)
             .field("admitted", &self.admitted)
@@ -2183,8 +2233,13 @@ impl ToJson for StatsSnapshot {
             .field("deadline_misses", &self.deadline_misses)
             .field("queued", &self.queued)
             .field("p50_service_ms", &self.p50_service_ms)
-            .field("p99_service_ms", &self.p99_service_ms)
-            .build()
+            .field("p99_service_ms", &self.p99_service_ms);
+        // Emitted only when present: snapshot streams from
+        // calibration-free runs stay byte-identical to older builds.
+        if !self.calibration.is_empty() {
+            o = o.field("calibration", &self.calibration);
+        }
+        o.build()
     }
 }
 
@@ -2205,6 +2260,7 @@ impl FromJson for StatsSnapshot {
             queued: d.req("queued")?,
             p50_service_ms: d.req("p50_service_ms")?,
             p99_service_ms: d.req("p99_service_ms")?,
+            calibration: d.opt_or("calibration", Vec::new())?,
         })
     }
 }
@@ -2377,6 +2433,10 @@ struct OutcomeHub {
     next_snap_s: f64,
     /// Time of the last emitted snapshot (guards the final flush).
     last_snap_s: f64,
+    /// Measured-vs-priced calibration state (`None` unless
+    /// [`GatewayConfig::calibration`] is set).  Lives here because the
+    /// hub sees every batch retire, where the observations are taken.
+    cal: Option<CalibrationTracker>,
 }
 
 impl OutcomeHub {
@@ -2388,6 +2448,7 @@ impl OutcomeHub {
             snapshot_every: None,
             next_snap_s: 0.0,
             last_snap_s: f64::NEG_INFINITY,
+            cal: None,
         }
     }
 
@@ -2416,6 +2477,7 @@ impl OutcomeHub {
             queued,
             p50_service_ms: l.service.quantile(0.5).map_or(0.0, |s| s * 1e3),
             p99_service_ms: l.service.quantile(0.99).map_or(0.0, |s| s * 1e3),
+            calibration: self.cal.as_ref().map_or_else(Vec::new, |c| c.stats()),
         }
     }
 
@@ -2604,12 +2666,19 @@ impl SimGateway {
                 free_heap: (0..shards).map(|si| Reverse(TimeKey(0.0, si))).collect(),
             });
         }
-        let designs = entries.iter().map(|e| e.name.clone()).collect();
+        let designs: Vec<String> = entries.iter().map(|e| e.name.clone()).collect();
+        let mut hub = OutcomeHub::new(designs.clone());
+        if let Some(c) = &cfg.calibration {
+            hub.cal = Some(
+                CalibrationTracker::new(c.clone(), &designs)
+                    .map_err(|e| anyhow!("calibration config: {e}"))?,
+            );
+        }
         Ok(SimGateway {
             router,
             cfg: cfg.clone(),
             entries,
-            hub: OutcomeHub::new(designs),
+            hub,
             events: Vec::new(),
             fault_plan: FaultPlan::default(),
             fault_cursor: 0,
@@ -2792,7 +2861,15 @@ impl SimGateway {
         // Scheduled faults due by this arrival fire next, each at its
         // own simulated time, so admission sees the post-fault fleet.
         self.apply_faults(req.arrival_s);
-        let decision = self.router.decide(&req.dataset, &req.slo)?;
+        // With calibration active the router sees priced numbers scaled by
+        // each design's measured-vs-priced correction; otherwise the plain
+        // `decide` path runs (byte-identical — unit factors are exact).
+        let decision = match self.hub.cal.as_ref() {
+            Some(cal) => {
+                self.router.decide_with(&req.dataset, &req.slo, |i| cal.correction(i))?
+            }
+            None => self.router.decide(&req.dataset, &req.slo)?,
+        };
         let t = req.arrival_s;
         let max_batch = self.cfg.max_batch.max(1);
         let max_wait = self.cfg.batch_max_wait_s;
@@ -2825,6 +2902,12 @@ impl SimGateway {
         let seq = self.hub.ledger.offered;
         self.hub.ledger.offered += 1;
         let queue_cap = self.cfg.queue_cap;
+        // Calibration's latency correction for the chosen design (1.0
+        // when the loop is off or still warming up): the deadline
+        // estimate below prices backlog and service with it, so a design
+        // measured slower than priced rejects sooner.
+        let cal_lat =
+            self.hub.cal.as_ref().map_or(1.0, |c| c.correction(decision.design).0);
         let e = &mut self.entries[decision.design];
         e.qstats.offered += 1;
         e.cstats[class.index()].offered += 1;
@@ -2843,8 +2926,8 @@ impl SimGateway {
             Some(dl) => {
                 let min_backlog =
                     e.next_free().map_or(f64::INFINITY, |(tf, _)| (tf - t).max(0.0));
-                let queued_work = queued as f64 * e.latency_s;
-                min_backlog + queued_work / e.live as f64 + e.latency_s > dl
+                let queued_work = queued as f64 * (e.latency_s * cal_lat);
+                min_backlog + queued_work / e.live as f64 + e.latency_s * cal_lat > dl
             }
             None => false,
         };
@@ -2966,7 +3049,7 @@ impl SimGateway {
                     if t > now {
                         return;
                     }
-                    Self::dispatch(e, si, t, max_batch);
+                    Self::dispatch(e, si, t, max_batch, hub);
                 }
                 (None, None) => return,
             }
@@ -2977,17 +3060,28 @@ impl SimGateway {
     /// up to `max_batch` members across the class queues, then mark the
     /// shard busy until the batch's completion time.  Execution is
     /// deferred to [`SimGateway::retire`].
-    fn dispatch(e: &mut SimEntry, si: usize, fire: f64, max_batch: usize) {
+    fn dispatch(e: &mut SimEntry, si: usize, fire: f64, max_batch: usize, hub: &OutcomeHub) {
         debug_assert!(e.shards[si].alive && e.shards[si].in_flight.is_none());
         let b = e.queued().min(max_batch);
         let mut members = Vec::with_capacity(b);
         for _ in 0..b {
             members.push(e.wfq_pop().expect("dispatch sized to the backlog"));
         }
-        let done = fire + b as f64 * e.latency_s;
+        // The priced span is what the two-stage model charges; the actual
+        // span applies any calibration bias (the seeded stand-in for
+        // reality drifting from the model).  Without calibration both are
+        // the priced span and `done` matches the pre-calibration build
+        // bit-for-bit.
+        let svc_priced_s = b as f64 * e.latency_s;
+        let svc_actual_s = match &hub.cal {
+            Some(c) => svc_priced_s * c.bias(e.idx),
+            None => svc_priced_s,
+        };
+        let done = fire + svc_actual_s;
         let shard = &mut e.shards[si];
         shard.busy_until = done;
-        shard.in_flight = Some(InFlight { fire_s: fire, done_s: done, members });
+        shard.in_flight =
+            Some(InFlight { fire_s: fire, done_s: done, svc_priced_s, svc_actual_s, members });
         // Index the new completion and the shard's next free time (the
         // shard frees exactly when the batch retires, so one key serves
         // both heaps).
@@ -3004,6 +3098,16 @@ impl SimGateway {
     fn retire(e: &mut SimEntry, si: usize, hub: &mut OutcomeHub) {
         let fl = e.shards[si].in_flight.take().expect("retire without an in-flight batch");
         let b = fl.members.len();
+        // Calibration observation: the measured-vs-priced ratio of this
+        // batch's service spans.  In-sim actual energy is busy-time ×
+        // device power, so the energy ratio coincides with the latency
+        // ratio and one observation feeds both EWMAs.
+        if let Some(cal) = hub.cal.as_mut() {
+            if fl.svc_priced_s > 0.0 {
+                let ratio = fl.svc_actual_s / fl.svc_priced_s;
+                cal.observe(e.idx, ratio, ratio);
+            }
+        }
         // Move the tensors out of the batch (no per-request clone on the
         // simulation hot path); build the members' outcomes alongside
         // from the metadata each `Queued` carries inline.
@@ -3332,11 +3436,12 @@ impl SimGateway {
         if !self.finished {
             self.finish();
         }
-        let SimGateway { router, entries, events, fault_log, .. } = self;
+        let SimGateway { router, entries, events, fault_log, hub, .. } = self;
         let mut out = GatewayStats {
             autoscale_events: events,
             faults: fault_log,
             classes: SloClass::all().map(ClassStats::for_class).into_iter().collect(),
+            calibration: hub.cal.as_ref().map_or_else(Vec::new, |c| c.stats()),
             ..GatewayStats::default()
         };
         for (idx, e) in entries.into_iter().enumerate() {
@@ -3851,6 +3956,7 @@ mod tests {
             queued: 1,
             p50_service_ms: 4.5,
             p99_service_ms: 9.25,
+            calibration: vec![],
         };
         let back = StatsSnapshot::from_json(&snap.to_json()).unwrap();
         assert_eq!(back, snap);

@@ -1451,7 +1451,10 @@ impl FromJson for ExecutorEntry {
 pub struct DeploymentSpec {
     /// Base seed of the synthetic substrate (weights + image pools).
     pub seed: u64,
-    /// Shard executor configuration.
+    /// Shard executor configuration, including the optional
+    /// `gateway.calibration` block that turns on measured-vs-priced
+    /// feedback (and, in specs like `examples/specs/calibration_drift.json`,
+    /// injects a pricing bias for it to discover).
     pub gateway: GatewayConfig,
     /// The executor fleet.
     pub executors: Vec<ExecutorEntry>,

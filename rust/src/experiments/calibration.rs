@@ -1,15 +1,29 @@
-//! Calibration verification: the fitted power coefficients must keep
-//! reproducing the paper's anchor rows (DESIGN.md §6).
+//! Calibration: the offline anchor table plus the online control loop.
 //!
-//! If a coefficient in `fpga::device` is edited, these checks quantify
-//! the drift: every anchor row's *total* vector-less power must stay
-//! within tolerance of the published value.  (Per-category residuals are
-//! larger — the fit trades them against each other — so the contract is
-//! on totals, the quantity every downstream energy/FPS-W figure uses.)
+//! **Offline** — the fitted power coefficients must keep reproducing the
+//! paper's anchor rows (DESIGN.md §6).  If a coefficient in
+//! `fpga::device` is edited, these checks quantify the drift: every
+//! anchor row's *total* vector-less power must stay within tolerance of
+//! the published value.  (Per-category residuals are larger — the fit
+//! trades them against each other — so the contract is on totals, the
+//! quantity every downstream energy/FPS-W figure uses.)
+//!
+//! **Online** — [`CalibrationTracker`] closes the measured-vs-priced
+//! loop at serving time (ROADMAP item 5): per-design EWMAs of the
+//! `actual / priced` latency and energy ratios, observed at
+//! batch-retire time in the discrete-event gateway, multiplied through
+//! routing and the admission deadline estimate when feedback is on.
+//! Corrections are clamped to a configurable band and gated behind a
+//! minimum sample count, and the whole loop is off unless
+//! `GatewayConfig.calibration` is set — disabled runs stay
+//! byte-identical to pre-calibration artifacts
+//! (`rust/tests/calibration_loop.rs` pins all of it).
 
 use crate::fpga::device::{Device, PYNQ_Z1, ZCU102};
 use crate::fpga::power::{Activity, DesignFamily, PowerEstimator};
 use crate::fpga::resources::ResourceUsage;
+use crate::util::json::Json;
+use crate::util::wire::{De, FromJson, Obj, ToJson, WireError};
 
 /// One anchor: published resources + published vector-less total power.
 pub struct Anchor {
@@ -71,6 +85,279 @@ pub fn anchor_error(a: &Anchor) -> f64 {
     (total - a.total_w).abs() / a.total_w
 }
 
+// ---------------------------------------------------------------------------
+// Online calibration: measured-vs-priced feedback (ROADMAP item 5)
+// ---------------------------------------------------------------------------
+
+/// Configuration of the online calibration loop, carried by
+/// `GatewayConfig.calibration` (`None` — the default — keeps the loop
+/// entirely off: no observations, no corrections, no new JSON fields).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationConfig {
+    /// EWMA smoothing factor in `(0, 1]`: the weight of the newest
+    /// observation.  Higher reacts faster, lower smooths harder.
+    pub alpha: f64,
+    /// Correction band: applied corrections are clamped to
+    /// `[1 / max_correction, max_correction]` (must be ≥ 1), so a
+    /// runaway observation can never invert the routing table.
+    pub max_correction: f64,
+    /// Observations a design needs before its correction applies —
+    /// below this the correction is exactly `1.0`.
+    pub min_samples: usize,
+    /// `true` — corrections multiply through routing and the admission
+    /// deadline estimate.  `false` — *shadow mode*: drift is observed
+    /// and reported in `CalibrationStats`, but decisions are untouched
+    /// (the CI drift job's "uncorrected" arm).
+    pub feedback: bool,
+    /// Injected `actual / priced` service-time bias per design name —
+    /// the drift-injection hook the golden spec and the property suite
+    /// use to mis-price a design on purpose.  Names that match no
+    /// design in the routing table are inert (fleet boards share one
+    /// `GatewayConfig`, and not every board carries every design).
+    pub bias: Vec<(String, f64)>,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        CalibrationConfig {
+            alpha: 0.2,
+            max_correction: 4.0,
+            min_samples: 8,
+            feedback: true,
+            bias: Vec::new(),
+        }
+    }
+}
+
+impl CalibrationConfig {
+    /// Reject non-finite or out-of-band parameters (`!(a > 0)` style
+    /// comparisons also catch NaN).
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if !(self.alpha > 0.0) || !(self.alpha <= 1.0) {
+            return Err(format!("calibration alpha must be in (0, 1], got {}", self.alpha));
+        }
+        if !self.max_correction.is_finite() || !(self.max_correction >= 1.0) {
+            return Err(format!(
+                "calibration max_correction must be a finite number >= 1, got {}",
+                self.max_correction
+            ));
+        }
+        for (name, f) in &self.bias {
+            if !f.is_finite() || !(*f > 0.0) {
+                return Err(format!(
+                    "calibration bias for {name:?} must be finite and > 0, got {f}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl ToJson for CalibrationConfig {
+    fn to_json(&self) -> Json {
+        let bias = Json::Arr(
+            self.bias
+                .iter()
+                .map(|(design, factor)| {
+                    Obj::new().field("design", design).field("factor", factor).build()
+                })
+                .collect(),
+        );
+        Obj::new()
+            .field("alpha", &self.alpha)
+            .field("max_correction", &self.max_correction)
+            .field("min_samples", &self.min_samples)
+            .field("feedback", &self.feedback)
+            .raw("bias", bias)
+            .build()
+    }
+}
+
+impl FromJson for CalibrationConfig {
+    fn from_json(v: &Json) -> std::result::Result<CalibrationConfig, WireError> {
+        let d = De::root(v);
+        if !matches!(v, Json::Obj(_)) {
+            return Err(d.err("expected object"));
+        }
+        let default = CalibrationConfig::default();
+        let bias = match d.opt("bias") {
+            Some(b) => b
+                .items()?
+                .iter()
+                .map(|el| Ok((el.req("design")?, el.req("factor")?)))
+                .collect::<std::result::Result<Vec<_>, WireError>>()?,
+            None => Vec::new(),
+        };
+        Ok(CalibrationConfig {
+            alpha: d.opt_or("alpha", default.alpha)?,
+            max_correction: d.opt_or("max_correction", default.max_correction)?,
+            min_samples: d.opt_or("min_samples", default.min_samples)?,
+            feedback: d.opt_or("feedback", default.feedback)?,
+            bias,
+        })
+    }
+}
+
+/// Per-design snapshot of the calibration loop's state, surfaced through
+/// `GatewayStats.calibration`, `StatsSnapshot.calibration`, and the
+/// fleet's per-board stats.  Emitted only when the loop is configured,
+/// so calibration-off artifacts are byte-identical to pre-loop ones.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibrationStats {
+    /// Design name (router-table identity).
+    pub design: String,
+    /// EWMA of the observed `actual / priced` latency ratio
+    /// (`1.0` = the cost model is exact for this design).
+    pub latency_ratio: f64,
+    /// EWMA of the observed `actual / priced` energy ratio.
+    pub energy_ratio: f64,
+    /// Batch-retire observations folded so far.
+    pub samples: usize,
+    /// Largest `|ratio − 1|` the EWMAs ever reached (worst drift seen,
+    /// across both ratios).
+    pub max_drift: f64,
+}
+
+impl ToJson for CalibrationStats {
+    fn to_json(&self) -> Json {
+        Obj::new()
+            .field("design", &self.design)
+            .field("latency_ratio", &self.latency_ratio)
+            .field("energy_ratio", &self.energy_ratio)
+            .field("samples", &self.samples)
+            .field("max_drift", &self.max_drift)
+            .build()
+    }
+}
+
+impl FromJson for CalibrationStats {
+    fn from_json(v: &Json) -> std::result::Result<CalibrationStats, WireError> {
+        let d = De::root(v);
+        Ok(CalibrationStats {
+            design: d.req("design")?,
+            latency_ratio: d.req("latency_ratio")?,
+            energy_ratio: d.req("energy_ratio")?,
+            samples: d.req("samples")?,
+            max_drift: d.req("max_drift")?,
+        })
+    }
+}
+
+/// Per-design EWMA state inside the tracker.
+#[derive(Debug, Clone)]
+struct CalState {
+    name: String,
+    /// Injected `actual / priced` service-time factor (1.0 = honest).
+    bias: f64,
+    latency_ratio: f64,
+    energy_ratio: f64,
+    samples: usize,
+    max_drift: f64,
+}
+
+/// The online control loop: per-design EWMAs of `actual / priced`
+/// ratios, updated once per retired batch, read by the router's
+/// cheapest-design scan and the admission deadline estimate.
+///
+/// Determinism: the "measurements" are themselves seeded simulation
+/// outputs, so a fixed-seed run updates the EWMAs through the identical
+/// float sequence every replay.  When an observation equals the current
+/// EWMA the update is skipped outright — the EWMA fixed point is exact
+/// by construction rather than by rounding luck, which is what keeps a
+/// bias-free calibrated run byte-identical to an uncalibrated one for
+/// *any* `alpha` (`fl((1−α)·r + α·r)` need not equal `r` in general).
+#[derive(Debug, Clone)]
+pub struct CalibrationTracker {
+    cfg: CalibrationConfig,
+    /// One state per router-table entry, in table order.
+    states: Vec<CalState>,
+}
+
+impl CalibrationTracker {
+    /// Build a tracker over the routing table's design names (table
+    /// order).  Errors on an invalid [`CalibrationConfig`].
+    pub fn new(
+        cfg: CalibrationConfig,
+        designs: &[String],
+    ) -> std::result::Result<CalibrationTracker, String> {
+        cfg.validate()?;
+        let states = designs
+            .iter()
+            .map(|name| CalState {
+                name: name.clone(),
+                bias: cfg
+                    .bias
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map_or(1.0, |(_, f)| *f),
+                latency_ratio: 1.0,
+                energy_ratio: 1.0,
+                samples: 0,
+                max_drift: 0.0,
+            })
+            .collect();
+        Ok(CalibrationTracker { cfg, states })
+    }
+
+    /// The injected `actual / priced` service-time factor for design
+    /// `idx` (`1.0` when the config names no bias for it).
+    pub fn bias(&self, idx: usize) -> f64 {
+        self.states[idx].bias
+    }
+
+    /// Whether corrections are allowed to act (shadow mode observes
+    /// only).
+    pub fn feedback(&self) -> bool {
+        self.cfg.feedback
+    }
+
+    /// Fold one batch-retire observation for design `idx`.  An
+    /// observation equal to the current EWMA skips the arithmetic (the
+    /// fixed point is exact; see the type docs).
+    pub fn observe(&mut self, idx: usize, latency_ratio: f64, energy_ratio: f64) {
+        let a = self.cfg.alpha;
+        let s = &mut self.states[idx];
+        if latency_ratio != s.latency_ratio {
+            s.latency_ratio = (1.0 - a) * s.latency_ratio + a * latency_ratio;
+        }
+        if energy_ratio != s.energy_ratio {
+            s.energy_ratio = (1.0 - a) * s.energy_ratio + a * energy_ratio;
+        }
+        s.samples += 1;
+        let drift = (s.latency_ratio - 1.0).abs().max((s.energy_ratio - 1.0).abs());
+        if drift > s.max_drift {
+            s.max_drift = drift;
+        }
+    }
+
+    /// Multiplicative `(latency, energy)` correction for design `idx`:
+    /// exactly `(1.0, 1.0)` in shadow mode or before `min_samples`
+    /// observations, otherwise the EWMAs clamped to the configured band.
+    pub fn correction(&self, idx: usize) -> (f64, f64) {
+        let s = &self.states[idx];
+        if !self.cfg.feedback || s.samples < self.cfg.min_samples {
+            return (1.0, 1.0);
+        }
+        let lo = 1.0 / self.cfg.max_correction;
+        let hi = self.cfg.max_correction;
+        (s.latency_ratio.clamp(lo, hi), s.energy_ratio.clamp(lo, hi))
+    }
+
+    /// Per-design snapshots, in router-table order.
+    pub fn stats(&self) -> Vec<CalibrationStats> {
+        self.states
+            .iter()
+            .map(|s| CalibrationStats {
+                design: s.name.clone(),
+                latency_ratio: s.latency_ratio,
+                energy_ratio: s.energy_ratio,
+                samples: s.samples,
+                max_drift: s.max_drift,
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +389,130 @@ mod tests {
         assert!(all.iter().any(|a| a.device.name == "ZCU102" && matches!(a.family, DesignFamily::Snn)));
         assert!(all.iter().any(|a| a.device.name == "PYNQ-Z1" && matches!(a.family, DesignFamily::Cnn)));
         assert!(all.iter().any(|a| a.device.name == "ZCU102" && matches!(a.family, DesignFamily::Cnn)));
+    }
+
+    fn names(n: &[&str]) -> Vec<String> {
+        n.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Under a stationary observation stream the EWMA error contracts
+    /// geometrically: after n samples `|r_n − target| =
+    /// (1−α)^n · |r_0 − target|` up to rounding.
+    #[test]
+    fn ewma_contracts_toward_a_stationary_target() {
+        let cfg = CalibrationConfig { alpha: 0.2, ..CalibrationConfig::default() };
+        let mut t = CalibrationTracker::new(cfg, &names(&["d"])).unwrap();
+        let target = 2.0;
+        let mut prev = (1.0f64 - target).abs();
+        for n in 1..=32 {
+            t.observe(0, target, target);
+            let s = &t.stats()[0];
+            let err = (s.latency_ratio - target).abs();
+            assert!(err <= prev + 1e-12, "error grew at n={n}: {err} > {prev}");
+            let expect = 0.8f64.powi(n) * 1.0;
+            assert!(
+                (err - expect).abs() < 1e-9,
+                "n={n}: err {err} vs geometric {expect}"
+            );
+            prev = err;
+        }
+        assert_eq!(t.stats()[0].samples, 32);
+        assert!(t.stats()[0].max_drift > 0.9);
+    }
+
+    /// Observations equal to the current EWMA skip the update, so a
+    /// bias-free stream keeps the ratio at exactly 1.0 for *any* alpha —
+    /// the property the byte-identity contract stands on.
+    #[test]
+    fn unit_observations_keep_the_ratio_exactly_one() {
+        for alpha in [0.1, 0.2, 0.3, 0.7, 1.0] {
+            let cfg = CalibrationConfig { alpha, ..CalibrationConfig::default() };
+            let mut t = CalibrationTracker::new(cfg, &names(&["d"])).unwrap();
+            for _ in 0..1000 {
+                t.observe(0, 1.0, 1.0);
+            }
+            let s = &t.stats()[0];
+            assert_eq!(s.latency_ratio.to_bits(), 1.0f64.to_bits(), "alpha {alpha}");
+            assert_eq!(s.energy_ratio.to_bits(), 1.0f64.to_bits(), "alpha {alpha}");
+            assert_eq!(s.max_drift, 0.0);
+            assert_eq!(t.correction(0), (1.0, 1.0));
+        }
+    }
+
+    /// Corrections stay at exactly 1.0 until `min_samples`, in shadow
+    /// mode forever, and clamp to the configured band once live.
+    #[test]
+    fn correction_gating_and_clamp() {
+        let cfg = CalibrationConfig {
+            min_samples: 4,
+            max_correction: 1.5,
+            ..CalibrationConfig::default()
+        };
+        let mut t = CalibrationTracker::new(cfg, &names(&["d"])).unwrap();
+        for n in 0..3 {
+            t.observe(0, 100.0, 0.0001);
+            assert_eq!(t.correction(0), (1.0, 1.0), "gated at n={}", n + 1);
+        }
+        t.observe(0, 100.0, 0.0001);
+        let (cl, ce) = t.correction(0);
+        assert_eq!(cl, 1.5, "latency correction must clamp to max_correction");
+        assert!((ce - 1.0 / 1.5).abs() < 1e-12, "energy clamps to 1/max_correction");
+
+        let shadow = CalibrationConfig {
+            feedback: false,
+            min_samples: 0,
+            ..CalibrationConfig::default()
+        };
+        let mut t = CalibrationTracker::new(shadow, &names(&["d"])).unwrap();
+        t.observe(0, 3.0, 3.0);
+        assert_eq!(t.correction(0), (1.0, 1.0), "shadow mode never corrects");
+        assert!(t.stats()[0].latency_ratio > 1.0, "shadow mode still observes");
+    }
+
+    /// Bias factors resolve by design name; unknown names are inert.
+    #[test]
+    fn bias_resolution() {
+        let cfg = CalibrationConfig {
+            bias: vec![("b".to_string(), 2.0), ("ghost".to_string(), 3.0)],
+            ..CalibrationConfig::default()
+        };
+        let t = CalibrationTracker::new(cfg, &names(&["a", "b"])).unwrap();
+        assert_eq!(t.bias(0), 1.0);
+        assert_eq!(t.bias(1), 2.0);
+    }
+
+    /// Malformed configs are rejected before any tracker exists.
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let designs = names(&["d"]);
+        for (patch, what) in [
+            (CalibrationConfig { alpha: 0.0, ..Default::default() }, "alpha 0"),
+            (CalibrationConfig { alpha: 1.5, ..Default::default() }, "alpha > 1"),
+            (CalibrationConfig { alpha: f64::NAN, ..Default::default() }, "alpha NaN"),
+            (CalibrationConfig { max_correction: 0.5, ..Default::default() }, "band < 1"),
+            (
+                CalibrationConfig { max_correction: f64::INFINITY, ..Default::default() },
+                "band inf",
+            ),
+            (
+                CalibrationConfig {
+                    bias: vec![("d".to_string(), -1.0)],
+                    ..Default::default()
+                },
+                "negative bias",
+            ),
+            (
+                CalibrationConfig {
+                    bias: vec![("d".to_string(), f64::NAN)],
+                    ..Default::default()
+                },
+                "NaN bias",
+            ),
+        ] {
+            assert!(
+                CalibrationTracker::new(patch, &designs).is_err(),
+                "{what} must be rejected"
+            );
+        }
     }
 }

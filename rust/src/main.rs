@@ -10,7 +10,7 @@
 //! repro loadgen --scenario steady --requests 64 [--shards 2] [--seed 42]
 //!              [--deadline-ms 5] [--queue-cap 16] [--class-mix 3,1,4]
 //!              [--trace FILE] [--faults FILE] [--emit-trace FILE] [--wall]
-//!              [--snapshot-every MS]
+//!              [--snapshot-every MS] [--calibrate]
 //! repro loadgen --spec examples/specs/overload_burst.json [--json --out out.json]
 //! repro fleet  [--spec examples/specs/fleet_powercap.json] [--json [--out FILE]]
 //!              [--snapshot-every MS]
@@ -31,6 +31,7 @@ use spikebench::coordinator::loadgen::{
     self, ArrivalTrace, ClassMix, DeploymentSpec, LoadgenConfig, Scenario,
 };
 use spikebench::coordinator::serve::{select_backend, ServeConfig, Server, SnnCostConfig};
+use spikebench::experiments::calibration::CalibrationConfig;
 use spikebench::experiments::{ctx::Ctx, registry, run_by_id};
 use spikebench::fpga::device::PYNQ_Z1;
 use spikebench::nn::loader::{load_network, WeightKind};
@@ -98,7 +99,7 @@ const COMMANDS: &[Subcommand] = &[
         name: "loadgen",
         synopsis: "loadgen [--scenario steady] [--requests 64] [--spec FILE] [--trace FILE]\n\
                 \x20             [--deadline-ms 5] [--queue-cap 16] [--class-mix 3,1,4]\n\
-                \x20             [--faults FILE] [--emit-trace FILE] [--wall]\n\
+                \x20             [--faults FILE] [--emit-trace FILE] [--wall] [--calibrate]\n\
                 \x20             [--snapshot-every MS] [--json [--out FILE]]",
         run: cmd_loadgen,
     },
@@ -141,8 +142,10 @@ fn usage() -> String {
          a recorded arrival trace (--trace FILE), or a JSON deployment spec\n\
          (--spec FILE) through the discrete-event serving stack — admission\n\
          queues, deadlines (--deadline-ms), SLO classes (--class-mix I,B,E),\n\
-         dynamic batching, shard autoscaling, seeded chaos (--faults FILE) —\n\
-         on a simulated clock (--wall uses the threaded gateway instead);\n\
+         dynamic batching, shard autoscaling, seeded chaos (--faults FILE),\n\
+         measured-vs-priced calibration feedback (--calibrate, or a\n\
+         gateway.calibration spec block) — on a simulated clock (--wall uses\n\
+         the threaded gateway instead);\n\
          `repro fleet` runs a multi-board cluster under a global watt cap\n\
          with scheduled partial reconfigurations (FleetSpec file via --spec,\n\
          built-in three-board demo otherwise); `--snapshot-every MS` streams\n\
@@ -576,7 +579,7 @@ fn loadgen_demo(args: &Args) -> Result<()> {
     // and silently out-voted by the file.
     const TUNING_OPTS: &[&str] = &[
         "scenario", "requests", "shards", "seed", "slo-ms", "deadline-ms", "queue-cap",
-        "device", "dataset", "class-mix", "trace", "faults",
+        "device", "dataset", "class-mix", "trace", "faults", "calibrate",
     ];
     let known: Vec<&str> = TUNING_OPTS
         .iter()
@@ -589,8 +592,16 @@ fn loadgen_demo(args: &Args) -> Result<()> {
         // injection and no simulated clock: silently ignoring these
         // would report 0 rejections for a deadline (or a fault plan)
         // that was never evaluated.
-        for o in ["deadline-ms", "queue-cap", "class-mix", "trace", "faults", "snapshot-every"] {
-            if args.get(o).is_some() {
+        for o in [
+            "deadline-ms",
+            "queue-cap",
+            "class-mix",
+            "trace",
+            "faults",
+            "snapshot-every",
+            "calibrate",
+        ] {
+            if args.get(o).is_some() || args.flag(o) {
                 bail!("--{o} requires the discrete-event stack (drop --wall)");
             }
         }
@@ -704,6 +715,11 @@ fn loadgen_demo(args: &Args) -> Result<()> {
             );
             if args.get("queue-cap").is_some() {
                 spec.gateway.queue_cap = args.get_usize("queue-cap", spec.gateway.queue_cap);
+            }
+            if args.flag("calibrate") {
+                // Default EWMA/band knobs; spec files configure more
+                // (bias injection, shadow mode) via gateway.calibration.
+                spec.gateway.calibration = Some(CalibrationConfig::default());
             }
             if let Some(path) = args.get("faults") {
                 let text = std::fs::read_to_string(path)
@@ -1062,13 +1078,18 @@ fn checkjson(args: &Args) -> Result<()> {
 
 /// Stream a `snapshots` array, enforcing per-element admission identity
 /// (`offered == admitted + rejected_full + rejected_deadline`),
-/// strictly-increasing simulated time, and monotone cumulative counters.
+/// strictly-increasing simulated time, monotone cumulative counters, and
+/// — when calibration blocks are present — finite positive EWMA ratios
+/// with per-design sample counts that never go backwards.
 /// Returns the number of snapshots seen.
 fn check_snapshots(r: &mut JsonReader<'_>) -> Result<usize> {
     r.expect_array()?;
     let mut n = 0usize;
     let (mut prev_t, mut prev_offered, mut prev_served) =
         (f64::NEG_INFINITY, f64::NEG_INFINITY, f64::NEG_INFINITY);
+    // Per-design calibration sample floor, carried across snapshots
+    // (small tables: a linear scan beats a map here).
+    let mut cal_samples: Vec<(String, f64)> = Vec::new();
     loop {
         match r.next()? {
             Some(JsonEvent::ObjectStart) => {
@@ -1078,6 +1099,9 @@ fn check_snapshots(r: &mut JsonReader<'_>) -> Result<usize> {
                 while let Some(k) = r.next_key()? {
                     match KEYS.iter().position(|key| *key == k.as_str()) {
                         Some(i) => fields[i] = Some(r.num()?),
+                        None if k == "calibration" => {
+                            check_calibration_block(r, n, &mut cal_samples)?;
+                        }
                         None => r.skip_value()?,
                     }
                 }
@@ -1107,6 +1131,70 @@ fn check_snapshots(r: &mut JsonReader<'_>) -> Result<usize> {
         }
     }
     Ok(n)
+}
+
+/// Stream one snapshot's `calibration` array: every EWMA ratio must be a
+/// finite positive number, `max_drift` finite and non-negative, and each
+/// design's cumulative `samples` must never go backwards across the
+/// snapshot stream (`floors` carries the per-design floor between calls).
+fn check_calibration_block(
+    r: &mut JsonReader<'_>,
+    snap: usize,
+    floors: &mut Vec<(String, f64)>,
+) -> Result<()> {
+    r.expect_array()?;
+    loop {
+        match r.next()? {
+            Some(JsonEvent::ObjectStart) => {
+                let mut design = None::<String>;
+                let mut samples = None::<f64>;
+                while let Some(k) = r.next_key()? {
+                    match k.as_str() {
+                        "design" => design = Some(r.str_value()?),
+                        "samples" => samples = Some(r.num()?),
+                        "latency_ratio" | "energy_ratio" => {
+                            let v = r.num()?;
+                            if !v.is_finite() || v <= 0.0 {
+                                bail!(
+                                    "snapshot {snap}: calibration {k} {v} is not a \
+                                     finite positive ratio"
+                                );
+                            }
+                        }
+                        "max_drift" => {
+                            let v = r.num()?;
+                            if !v.is_finite() || v < 0.0 {
+                                bail!(
+                                    "snapshot {snap}: calibration max_drift {v} is not \
+                                     finite and non-negative"
+                                );
+                            }
+                        }
+                        _ => r.skip_value()?,
+                    }
+                }
+                let design = design
+                    .ok_or_else(|| anyhow!("snapshot {snap}: calibration entry has no design"))?;
+                let samples = samples
+                    .ok_or_else(|| anyhow!("snapshot {snap}: calibration entry has no samples"))?;
+                match floors.iter_mut().find(|(d, _)| *d == design) {
+                    Some((_, floor)) => {
+                        if samples < *floor {
+                            bail!(
+                                "snapshot {snap}: calibration samples for {design} went \
+                                 backwards ({samples} < {floor})"
+                            );
+                        }
+                        *floor = samples;
+                    }
+                    None => floors.push((design, samples)),
+                }
+            }
+            Some(JsonEvent::ArrayEnd) => break,
+            _ => bail!("expected an array of calibration objects"),
+        }
+    }
+    Ok(())
 }
 
 /// Stream an array of objects, collecting the numeric field `field` from

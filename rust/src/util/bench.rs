@@ -266,6 +266,35 @@ mod tests {
         assert!(from_envelope(&Json::Obj(m)).is_err());
     }
 
+    /// The committed perf trajectory must stay loadable and non-empty:
+    /// CI shell scripts police `BENCH_hotpath.json`, but nothing in
+    /// `cargo test` did — a malformed or emptied commit would only
+    /// surface in CI.  This decodes the committed bytes through the wire
+    /// codec and rejects an empty trajectory or non-finite statistics.
+    #[test]
+    fn committed_bench_trajectory_decodes_and_is_sane() {
+        let text = include_str!("../../../BENCH_hotpath.json");
+        let v = Json::parse(text).expect("committed BENCH_hotpath.json parses");
+        let results = from_envelope(&v).expect("bench envelope decodes");
+        assert!(!results.is_empty(), "committed bench trajectory is empty");
+        for r in &results {
+            assert!(
+                r.mean_s.is_finite() && r.mean_s > 0.0,
+                "{}/{}: mean_s {} is not a finite positive duration",
+                r.group,
+                r.label,
+                r.mean_s
+            );
+            assert!(
+                r.min_s.is_finite() && r.max_s.is_finite() && r.sigma_s.is_finite(),
+                "{}/{}: non-finite spread statistics",
+                r.group,
+                r.label
+            );
+            assert!(r.samples > 0, "{}/{}: zero samples", r.group, r.label);
+        }
+    }
+
     #[test]
     fn bench_results_roundtrip_the_wire() {
         let b = Bench::new("grp").warmup(0).samples(2);

@@ -1,0 +1,404 @@
+//! Calibration-loop integration tests: convergence + determinism.
+//!
+//! The committed golden drift spec (`examples/specs/calibration_drift.json`)
+//! prices CNN1 2× optimistic and lets the online measured-vs-priced loop
+//! discover it.  These tests pin its bytes, prove the fixed-seed corrected
+//! run is byte-deterministic, show the corrected router flips to the truly
+//! cheaper design while a shadow-mode (feedback off) run never does,
+//! property-check the EWMA's monotone contraction, prove that a
+//! calibration block without bias is byte-identical to `calibration: None`
+//! (the no-op guarantee that keeps every pre-loop golden artifact valid),
+//! and check that corrections never break the admission conservation
+//! identity or the fleet power-cap invariant.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Duration;
+
+use spikebench::coordinator::fleet::{FleetSim, FleetSpec};
+use spikebench::coordinator::gateway::{GatewayStats, Slo, SloClass};
+use spikebench::coordinator::loadgen::{run_sim, DeploymentSpec, LoadgenConfig, Scenario};
+use spikebench::experiments::calibration::{CalibrationConfig, CalibrationStats, CalibrationTracker};
+use spikebench::prop_assert;
+use spikebench::util::quickcheck::{check, Config};
+use spikebench::util::wire::{from_text, to_text};
+
+/// FNV-1a-64 over raw bytes — pins the committed golden spec file.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+const DRIFT_SPEC_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/specs/calibration_drift.json");
+const DRIFT_SPEC_DIGEST: u64 = 0xa070_54cf_0022_e5ea;
+const DRIFT_SPEC_LEN: usize = 850;
+
+fn drift_spec() -> DeploymentSpec {
+    let text = std::fs::read_to_string(DRIFT_SPEC_PATH).expect("reading golden drift spec");
+    from_text(&text).expect("parsing golden drift spec")
+}
+
+/// The per-design calibration snapshot for `design`, or a panic naming
+/// what was actually emitted.
+fn cal_for<'a>(stats: &'a GatewayStats, design: &str) -> &'a CalibrationStats {
+    stats
+        .calibration
+        .iter()
+        .find(|c| c.design == design)
+        .unwrap_or_else(|| panic!("no calibration entry for {design} in {:?}", stats.calibration))
+}
+
+fn served_on(report_per_design: &[(String, usize)], design: &str) -> usize {
+    report_per_design
+        .iter()
+        .find(|(d, _)| d == design)
+        .map_or(0, |(_, n)| *n)
+}
+
+/// The golden drift spec's bytes are digest-pinned so a drive-by edit
+/// cannot silently change what "the calibration drift run" means, and
+/// the decoded spec round-trips the wire codec with its bias intact.
+#[test]
+fn golden_drift_spec_digest_is_pinned_and_roundtrips() {
+    let bytes = std::fs::read(DRIFT_SPEC_PATH).expect("reading golden drift spec");
+    assert_eq!(bytes.len(), DRIFT_SPEC_LEN, "golden drift spec length changed");
+    assert_eq!(
+        fnv1a64(&bytes),
+        DRIFT_SPEC_DIGEST,
+        "golden drift spec digest changed — if intentional, re-pin digest + length here"
+    );
+    let spec = drift_spec();
+    let cal = spec.gateway.calibration.as_ref().expect("drift spec configures calibration");
+    assert!(cal.feedback, "the golden drift run is the corrected arm");
+    assert_eq!(cal.min_samples, 8);
+    assert_eq!(cal.bias, vec![("CNN1".to_string(), 2.0)], "CNN1 is priced 2× optimistic");
+    assert_eq!(spec.executors.len(), 2, "the drift run races CNN1 against CNN3");
+    let back: DeploymentSpec = from_text(&to_text(&spec)).unwrap();
+    assert_eq!(back, spec);
+}
+
+/// Acceptance: two replays of the drift spec produce byte-identical
+/// reports and gateway stats (wall-clock fields zeroed — they are the
+/// only nondeterministic outputs of a simulated run).  The EWMA float
+/// sequence, the mid-run routing flip, and the emitted calibration
+/// block all replay exactly.
+#[test]
+fn drift_replay_is_byte_deterministic() {
+    let spec = drift_spec();
+    let (mut ra, sa) = run_sim(&spec).expect("first drift run");
+    let (mut rb, sb) = run_sim(&spec).expect("second drift run");
+    ra.wall = Duration::ZERO;
+    ra.throughput_rps = 0.0;
+    rb.wall = Duration::ZERO;
+    rb.throughput_rps = 0.0;
+    assert_eq!(to_text(&ra), to_text(&rb), "fixed-seed drift replay diverged (report)");
+    assert_eq!(to_text(&sa), to_text(&sb), "fixed-seed drift replay diverged (stats)");
+    assert!(
+        to_text(&sa).contains("\"calibration\""),
+        "a configured run must emit its calibration block"
+    );
+}
+
+/// The headline behaviour: with the bias discovered online, the
+/// corrected router abandons the mis-priced CNN1 for the truly cheaper
+/// CNN3 within `min_samples` observations and stops missing deadlines;
+/// the shadow arm (same bias, `feedback: false`) observes the same
+/// ratios but never flips and misses every deadline.
+#[test]
+fn corrected_router_flips_while_shadow_never_does() {
+    let corrected = drift_spec();
+    let mut shadow = corrected.clone();
+    shadow.gateway.calibration.as_mut().expect("spec has calibration").feedback = false;
+
+    let (cr, cs) = run_sim(&corrected).expect("corrected drift run");
+    let (sr, ss) = run_sim(&shadow).expect("shadow drift run");
+
+    // Both arms admit everything: the gap (1.5 ms) exceeds even the
+    // biased CNN1 service time, so queues never build.
+    for r in [&cr, &sr] {
+        assert_eq!(r.offered, 64);
+        assert_eq!(r.offered, r.admitted + r.rejected(), "admission conservation");
+        assert_eq!(r.rejected(), 0, "the drift run should reject nothing");
+        assert_eq!(r.served, 64);
+    }
+
+    // Shadow: every request stays on the 2×-underpriced CNN1 and lands
+    // at ~1066 µs, past the 800 µs deadline — all 64 miss.
+    assert_eq!(served_on(&sr.per_design, "CNN3"), 0, "shadow must never flip");
+    assert_eq!(served_on(&sr.per_design, "CNN1"), 64);
+    assert_eq!(sr.deadline_misses, 64, "uncorrected, every request misses its deadline");
+
+    // Corrected: the loop needs min_samples (8) retires before it may
+    // act, so a handful of early requests still miss; after the flip
+    // CNN3 serves at ~303 µs and nothing misses again.
+    assert!(served_on(&cr.per_design, "CNN3") > 0, "corrected router never flipped to CNN3");
+    assert!(
+        cr.deadline_misses < sr.deadline_misses,
+        "correction did not reduce deadline misses ({} vs {})",
+        cr.deadline_misses,
+        sr.deadline_misses
+    );
+    assert!(
+        cr.deadline_misses >= corrected.gateway.calibration.as_ref().unwrap().min_samples,
+        "the loop cannot act before min_samples observations"
+    );
+
+    // The shadow arm's EWMA still learned the truth: after 64
+    // observations of a constant 2× ratio it sits essentially at 2.
+    let sc = cal_for(&ss, "CNN1");
+    assert_eq!(sc.samples, 64);
+    assert!(
+        (sc.latency_ratio - 2.0).abs() < 0.05,
+        "shadow EWMA should converge to the injected bias, got {}",
+        sc.latency_ratio
+    );
+    // The corrected arm stopped feeding CNN1 after the flip, so its
+    // EWMA froze part-way up — past the SLO-flipping threshold but
+    // short of full convergence.
+    let cc = cal_for(&cs, "CNN1");
+    assert!(cc.samples >= 8 && cc.samples < 64, "corrected CNN1 sample count: {}", cc.samples);
+    assert!(cc.latency_ratio > 1.5, "corrected EWMA under-learned: {}", cc.latency_ratio);
+    assert!(cal_for(&cs, "CNN3").samples > 0, "CNN3 retires must feed the loop too");
+}
+
+/// Satellite (a): under stationary observations the EWMA error contracts
+/// monotonically to the target for any alpha, and the resulting
+/// correction stays inside the configured clamp band.
+#[test]
+fn ewma_error_contracts_monotonically_under_stationary_observations() {
+    check("ewma-contraction", Config { cases: 64, seed: 0x5eed }, |rng| {
+        let alpha = rng.range_f32(0.05, 1.0) as f64;
+        let target = rng.range_f32(0.3, 3.5) as f64;
+        let cfg = CalibrationConfig {
+            alpha,
+            max_correction: 4.0,
+            min_samples: 1,
+            feedback: true,
+            bias: Vec::new(),
+        };
+        let names = vec!["d0".to_string(), "d1".to_string()];
+        let mut tr = CalibrationTracker::new(cfg, &names).map_err(|e| e.to_string())?;
+        let mut prev_err = (1.0f64 - target).abs();
+        for step in 0..256 {
+            tr.observe(0, target, target);
+            let stats = tr.stats();
+            let s = &stats[0];
+            let err = (s.latency_ratio - target).abs();
+            prop_assert!(
+                err <= prev_err + 1e-12,
+                "EWMA error grew at step {step}: {err} > {prev_err} (alpha {alpha}, target {target})"
+            );
+            prop_assert!(
+                s.max_drift <= (target - 1.0).abs() + 1e-9,
+                "max_drift {} overshot the stationary drift {}",
+                s.max_drift,
+                (target - 1.0).abs()
+            );
+            prev_err = err;
+        }
+        let stats = tr.stats();
+        let s = &stats[0];
+        prop_assert!(s.samples == 256, "sample count {} != 256", s.samples);
+        prop_assert!(
+            (s.latency_ratio - target).abs() < 1e-3,
+            "EWMA did not converge: {} vs target {} (alpha {})",
+            s.latency_ratio,
+            target,
+            alpha
+        );
+        let (cl, ce) = tr.correction(0);
+        prop_assert!(
+            (0.25..=4.0).contains(&cl) && (0.25..=4.0).contains(&ce),
+            "correction ({cl}, {ce}) escaped the clamp band"
+        );
+        // The untouched design never moves.
+        let other = &stats[1];
+        prop_assert!(
+            other.latency_ratio == 1.0 && other.samples == 0,
+            "unobserved design drifted: {other:?}"
+        );
+        Ok(())
+    });
+}
+
+/// Satellite (c): with no injected bias, a calibration-enabled run —
+/// feedback on or off — is byte-identical to a `calibration: None` run
+/// apart from the calibration block itself.  This is the guarantee that
+/// every pre-loop golden artifact stays valid: honest pricing observes
+/// ratios of exactly 1.0, the EWMA fixed point is exact, and ×1.0
+/// corrections are bit-exact no-ops.
+#[test]
+fn unbiased_calibration_is_byte_identical_to_none() {
+    check("calibration-noop", Config { cases: 4, seed: 0xca11 }, |rng| {
+        let lg = LoadgenConfig {
+            scenario: Scenario::Steady,
+            requests: 16 + rng.below(32),
+            seed: rng.next_u64() & 0xffff,
+            slo: Slo::latency(0.05).with_deadline(0.02),
+            gap: Duration::from_micros(150),
+            ..Default::default()
+        };
+        let seed = rng.next_u64() & 0xffff;
+        let mut arms = Vec::new();
+        for cal in [
+            None,
+            Some(CalibrationConfig { feedback: false, ..Default::default() }),
+            Some(CalibrationConfig { feedback: true, ..Default::default() }),
+        ] {
+            let mut spec = DeploymentSpec::synthetic(&["mnist"], "pynq", 2, seed, lg.clone());
+            spec.gateway.calibration = cal;
+            let (mut report, mut stats) = run_sim(&spec).map_err(|e| e.to_string())?;
+            report.wall = Duration::ZERO;
+            report.throughput_rps = 0.0;
+            if spec.gateway.calibration.is_none() {
+                prop_assert!(
+                    stats.calibration.is_empty(),
+                    "a calibration-free run must not carry calibration stats"
+                );
+                prop_assert!(
+                    !to_text(&stats).contains("calibration"),
+                    "a calibration-free artifact must not mention calibration"
+                );
+            } else {
+                prop_assert!(
+                    !stats.calibration.is_empty(),
+                    "a configured run must surface per-design calibration state"
+                );
+                for c in &stats.calibration {
+                    prop_assert!(
+                        c.latency_ratio == 1.0 && c.energy_ratio == 1.0 && c.max_drift == 0.0,
+                        "honest pricing must observe exactly-1 ratios, got {c:?}"
+                    );
+                }
+                stats.calibration.clear();
+            }
+            arms.push((to_text(&report), to_text(&stats)));
+        }
+        prop_assert!(
+            arms[0] == arms[1] && arms[1] == arms[2],
+            "unbiased arms diverged from calibration: None"
+        );
+        Ok(())
+    });
+}
+
+/// Satellite (d), gateway half: whatever bias the loop is fed and
+/// however hard it corrects, the admission identity
+/// `offered == admitted + rejected` and the fault-free
+/// `admitted == served` identity survive.
+#[test]
+fn corrections_preserve_admission_conservation() {
+    check("calibration-conservation", Config { cases: 6, seed: 0xc0de }, |rng| {
+        // Powers of two keep observed ratios exact, but the invariant
+        // must hold regardless — mix in an odd factor too.
+        let factors = [0.25, 0.5, 2.0, 4.0, 1.7];
+        let factor = factors[rng.below(factors.len())];
+        let mut spec = DeploymentSpec::synthetic(
+            &["mnist"],
+            "pynq",
+            1,
+            rng.next_u64() & 0xffff,
+            LoadgenConfig {
+                scenario: Scenario::Bursty,
+                requests: 32 + rng.below(64),
+                seed: rng.next_u64() & 0xffff,
+                // Tight deadline + short gap: force real rejection and
+                // deadline-miss traffic through the corrected estimator.
+                slo: Slo::latency(0.01).with_deadline(0.002).for_class(SloClass::BestEffort),
+                gap: Duration::from_micros(100 + rng.below(300) as u64),
+                ..Default::default()
+            },
+        );
+        spec.gateway.queue_cap = 8;
+        spec.gateway.calibration = Some(CalibrationConfig {
+            min_samples: 2,
+            bias: vec![("CNN1".to_string(), factor), ("CNN3".to_string(), 2.0)],
+            ..Default::default()
+        });
+        let (report, stats) = run_sim(&spec).map_err(|e| e.to_string())?;
+        prop_assert!(
+            report.offered == report.admitted + report.rejected(),
+            "admission conservation broke: {} != {} + {}",
+            report.offered,
+            report.admitted,
+            report.rejected()
+        );
+        prop_assert!(report.offered == spec.loadgen.requests, "arrivals went missing");
+        prop_assert!(
+            report.admitted == report.served,
+            "fault-free run lost admitted requests: {} != {}",
+            report.admitted,
+            report.served
+        );
+        prop_assert!(report.deadline_misses <= report.served, "misses exceed completions");
+        for c in &stats.calibration {
+            prop_assert!(
+                c.latency_ratio.is_finite() && c.latency_ratio > 0.0,
+                "non-finite EWMA for {}: {}",
+                c.design,
+                c.latency_ratio
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Satellite (d), fleet half: turning the loop on fleet-wide (shared
+/// `GatewayConfig`, bias on a design only some boards host — unknown
+/// names are inert per board) never lets the accounted draw over the
+/// global watt cap, in the final stats or in any emitted snapshot.
+#[test]
+fn fleet_power_cap_holds_with_calibration_enabled() {
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/specs/fleet_powercap.json"
+    ))
+    .expect("reading golden fleet spec");
+    let mut spec: FleetSpec = from_text(&text).expect("parsing golden fleet spec");
+    spec.gateway.calibration = Some(CalibrationConfig {
+        min_samples: 2,
+        bias: vec![("CNN1".to_string(), 2.0)],
+        ..Default::default()
+    });
+    let cap = spec.power_cap_w.expect("golden fleet spec is capped");
+
+    let mut sim = FleetSim::new(&spec).expect("building calibrated fleet");
+    let snaps = Rc::new(RefCell::new(Vec::new()));
+    let sink = Rc::clone(&snaps);
+    sim.set_snapshot_sink(0.002, move |s| sink.borrow_mut().push(s.clone()))
+        .expect("installing snapshot sink");
+    let stats = sim.run().expect("calibrated fleet run");
+
+    assert!(stats.peak_power_w <= cap + 1e-6, "peak {} breached cap {cap}", stats.peak_power_w);
+    assert_eq!(stats.offered, stats.completed + stats.rejected(), "fleet conservation");
+    for s in snaps.borrow().iter() {
+        assert!(
+            s.fleet_power_w <= cap + 1e-6,
+            "snapshot at t={} breached cap: {} > {cap}",
+            s.t_s,
+            s.fleet_power_w
+        );
+    }
+    // Every board shares the one GatewayConfig, so every board surfaces
+    // its per-design loop state (bias names it does not host are inert).
+    for b in &stats.boards {
+        assert!(
+            !b.calibration.is_empty(),
+            "board {} emitted no calibration state despite the shared config",
+            b.name
+        );
+        for c in &b.calibration {
+            assert!(c.latency_ratio.is_finite() && c.latency_ratio > 0.0);
+        }
+    }
+    // And the whole calibrated FleetStats value still round-trips the
+    // wire codec (the fleet-smoke artifact path).
+    let back: spikebench::coordinator::fleet::FleetStats =
+        from_text(&to_text(&stats)).expect("calibrated FleetStats roundtrip");
+    assert_eq!(to_text(&back), to_text(&stats));
+}

@@ -20,6 +20,7 @@ use spikebench::coordinator::loadgen::{
     LoadgenReport, Scenario, TraceEvent,
 };
 use spikebench::coordinator::sweep::SweepCounters;
+use spikebench::experiments::calibration::{CalibrationConfig, CalibrationStats};
 use spikebench::fpga::device::PYNQ_Z1;
 use spikebench::util::bench::BenchResult;
 use spikebench::util::json::{Json, MAX_DEPTH};
@@ -174,6 +175,13 @@ fn stats_types_roundtrip() {
             lost: 1,
             requeued: 1,
         }],
+        calibration: vec![CalibrationStats {
+            design: "d".into(),
+            latency_ratio: 1.832,
+            energy_ratio: 1.832,
+            samples: 8,
+            max_drift: 0.832,
+        }],
     });
     roundtrip(&PricedDesign {
         name: "CNN3".into(),
@@ -215,6 +223,28 @@ fn config_types_roundtrip() {
         queue_cap: 9,
         batch_max_wait_s: 2.5e-4,
         autoscale: AutoscaleConfig { max_shards: 3, ..AutoscaleConfig::default() },
+        calibration: Some(CalibrationConfig {
+            alpha: 0.25,
+            max_correction: 2.5,
+            min_samples: 4,
+            feedback: false,
+            bias: vec![("CNN1".into(), 2.0), ("SNN8_BRAM".into(), 0.5)],
+        }),
+    });
+    roundtrip(&CalibrationConfig::default());
+    roundtrip(&CalibrationConfig {
+        alpha: 1.0,
+        max_correction: 1.0,
+        min_samples: 0,
+        feedback: true,
+        bias: vec![("CNN3".into(), 1.5)],
+    });
+    roundtrip(&CalibrationStats {
+        design: "CNN1".into(),
+        latency_ratio: 2.0,
+        energy_ratio: 0.75,
+        samples: 17,
+        max_drift: 1.0,
     });
     for s in Scenario::all() {
         roundtrip(&s);
@@ -480,6 +510,13 @@ fn snapshot_and_legacy_report_decode() {
         queued: 5,
         p50_service_ms: 0.42,
         p99_service_ms: 1.87,
+        calibration: vec![CalibrationStats {
+            design: "CNN4".into(),
+            latency_ratio: 1.25,
+            energy_ratio: 1.25,
+            samples: 3,
+            max_drift: 0.25,
+        }],
     });
 
     // A pre-digest artifact carries the full per-request decision list;
@@ -669,6 +706,57 @@ fn lossy_integers_are_rejected_loudly() {
 }
 
 // ---------------------------------------------------------------------------
+// Calibration-loop wire compatibility
+// ---------------------------------------------------------------------------
+
+/// Calibration decode errors locate the failing field with a JSON
+/// pointer, including inside the bias table.
+#[test]
+fn calibration_decode_errors_carry_json_pointer_paths() {
+    let err = from_text::<CalibrationConfig>(
+        r#"{"bias": [{"design": "CNN1", "factor": 2.0}, {"design": "CNN3"}]}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.path, "/bias/1/factor");
+    let err =
+        from_text::<CalibrationConfig>(r#"{"bias": [{"factor": 2.0}]}"#).unwrap_err();
+    assert_eq!(err.path, "/bias/0/design");
+    let err = from_text::<CalibrationConfig>(r#"{"alpha": "fast"}"#).unwrap_err();
+    assert_eq!(err.path, "/alpha");
+    // All-optional struct: a non-object must not decode to defaults.
+    assert!(from_text::<CalibrationConfig>(r#"[0.2]"#).is_err());
+    // And the same through the enclosing gateway config.
+    let err = from_text::<GatewayConfig>(r#"{"calibration": [0.2]}"#).unwrap_err();
+    assert_eq!(err.path, "/calibration");
+    let err = from_text::<CalibrationStats>(r#"{"design": "CNN1"}"#).unwrap_err();
+    assert_eq!(err.path, "/latency_ratio");
+}
+
+/// Pre-calibration artifacts (no `calibration` key anywhere) must still
+/// decode, and calibration-free values must encode without the key —
+/// the byte-compatibility contract in both directions.
+#[test]
+fn legacy_artifacts_without_calibration_still_decode() {
+    // A legacy GatewayStats body, as PR-7-era runs emitted it.
+    let legacy = r#"{"served": 1, "failed": 0, "batches": 1, "backend_calls": 1,
+        "routed": 1, "slo_misses": 0, "routed_energy_j": 0.1,
+        "offered": 1, "admitted": 1, "rejected": 0,
+        "designs": [], "shards": []}"#;
+    let stats: GatewayStats = from_text(legacy).expect("legacy artifact decodes");
+    assert!(stats.calibration.is_empty());
+    // Re-encoding a calibration-free value emits no calibration key.
+    assert!(!to_text(&stats).contains("calibration"));
+    assert!(!to_text(&GatewayConfig::default()).contains("calibration"));
+    let legacy_snap = r#"{"t_s": 0.5, "offered": 2, "admitted": 2,
+        "rejected_full": 0, "rejected_deadline": 0, "rejected_shard_lost": 0,
+        "served": 2, "failed": 0, "requeued": 0, "deadline_misses": 0,
+        "queued": 0, "p50_service_ms": 0.5, "p99_service_ms": 0.9}"#;
+    let snap: StatsSnapshot = from_text(legacy_snap).expect("legacy snapshot decodes");
+    assert!(snap.calibration.is_empty());
+    assert!(!to_text(&snap).contains("calibration"));
+}
+
+// ---------------------------------------------------------------------------
 // Fleet-layer wire compatibility
 // ---------------------------------------------------------------------------
 
@@ -799,6 +887,13 @@ fn fleet_stats_roundtrip() {
             offline_s: 0.0106,
             reconfigs: 1,
             decision_digest: 0xdead_beef_0000_0001,
+            calibration: vec![CalibrationStats {
+                design: "CNN4".into(),
+                latency_ratio: 0.9,
+                energy_ratio: 1.1,
+                samples: 5,
+                max_drift: 0.1,
+            }],
         }],
     };
     roundtrip(&stats);
